@@ -1,0 +1,128 @@
+//! END-TO-END driver: all three layers composed on a real workload.
+//!
+//! Boots the full stack — AOT artifacts (JAX/Pallas-lowered, compiled via
+//! PJRT) + simulated AIMC chip + serving coordinator + TCP server — then
+//! replays the held-out test set of the trained Performer as batched TCP
+//! requests on both the FP-32 and on-chip-attention paths, and reports
+//! accuracy, latency percentiles, throughput, and modelled energy.
+//!
+//! Requires `make artifacts` (trained model + HLO artifacts).
+//!
+//! Run: cargo run --release --example e2e_serve [-- --requests N]
+
+use std::sync::mpsc;
+
+use imka::cli::Args;
+use imka::config::json::{arr, num, obj, s, Json};
+use imka::config::Config;
+use imka::coordinator::{Client, Engine, Server};
+use imka::datasets::lra;
+use imka::util::stats::Summary;
+use imka::util::{Rng, Timer};
+
+fn main() -> imka::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // examples receive flags directly; give Args the subcommand it expects
+    argv.insert(0, "e2e".to_string());
+    let args = Args::parse(argv)?;
+    let n_requests = args.usize_or("requests", 256)?;
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = args.str_or("artifacts", "artifacts").to_string();
+    cfg.serve.max_wait_us = 1500;
+    cfg.serve.max_batch = 32;
+    cfg.serve.bind = "127.0.0.1:0".into();
+
+    println!("== booting engine (L3 coordinator + PJRT runtime + chip sim)");
+    let engine = Engine::start(&cfg)?;
+    let seq_len = engine
+        .seq_len()
+        .expect("run `make artifacts` first (no trained model found)");
+    println!(
+        "   chip cores programmed: {}, model loaded: {} (seq_len {seq_len})",
+        engine.cores_used(),
+        engine.has_model()
+    );
+    let server = Server::start(engine, &cfg.serve.bind)?;
+    println!("== server listening on {}", server.addr);
+
+    // workload: fresh LRA-lite `pattern` sequences (same generator family
+    // as the held-out set; labels known for accuracy accounting)
+    let mut rng = Rng::new(99);
+    let batch = lra::gen_pattern(&mut rng, n_requests, seq_len);
+
+    for mode in ["fp32", "hw_attn"] {
+        println!("\n== replaying {n_requests} requests, mode={mode} (4 concurrent clients)");
+        let timer = Timer::start();
+        let (tx, rx) = mpsc::channel::<(usize, Json)>();
+        std::thread::scope(|scope| {
+            let n_clients = 4;
+            for c in 0..n_clients {
+                let tx = tx.clone();
+                let addr = server.addr;
+                let batch = &batch;
+                scope.spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let mut i = c;
+                    while i < n_requests {
+                        let req = obj(vec![
+                            ("type", s("performer")),
+                            ("mode", s(mode)),
+                            (
+                                "tokens",
+                                arr(batch.row(i).iter().map(|&t| num(t as f64))),
+                            ),
+                        ]);
+                        let resp = client.call(&req).expect("call");
+                        tx.send((i, resp)).unwrap();
+                        i += n_clients;
+                    }
+                });
+            }
+            drop(tx);
+            let mut correct = 0usize;
+            let mut lat = Summary::new();
+            let mut energy_uj = 0.0;
+            let mut batch_sizes = Summary::new();
+            for (i, resp) in rx {
+                assert_eq!(
+                    resp.get("ok"),
+                    Some(&Json::Bool(true)),
+                    "request failed: {resp:?}"
+                );
+                let label = resp.get("label").unwrap().as_usize().unwrap();
+                if label == batch.labels[i] {
+                    correct += 1;
+                }
+                lat.push(resp.get("latency_us").unwrap().as_f64().unwrap());
+                energy_uj += resp.get("energy_uj").unwrap().as_f64().unwrap();
+                batch_sizes.push(resp.get("batch").unwrap().as_f64().unwrap());
+            }
+            let wall = timer.elapsed_secs();
+            println!("   accuracy:        {:.4}", correct as f64 / n_requests as f64);
+            println!(
+                "   latency (us):    p50 {:.0}  p95 {:.0}  p99 {:.0}",
+                lat.p50(),
+                lat.p95(),
+                lat.p99()
+            );
+            println!("   throughput:      {:.1} req/s", n_requests as f64 / wall);
+            println!("   mean batch size: {:.1}", batch_sizes.mean());
+            println!(
+                "   modelled AIMC energy: {:.2} uJ total ({:.3} uJ/req)",
+                energy_uj,
+                energy_uj / n_requests as f64
+            );
+        });
+    }
+
+    println!("\n== telemetry snapshot");
+    for snap in server.engine().telemetry().snapshot() {
+        println!(
+            "   {:?}: {} reqs, p50 {:.0}us, mean batch {:.1}, {} errors",
+            snap.lane, snap.requests, snap.p50_us, snap.mean_batch, snap.errors
+        );
+    }
+    server.shutdown();
+    println!("== done");
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Ridge-classification serving: the paper's Fig. 2 pipeline through the
+//! *serving* stack instead of the experiment harness.
+//!
+//! 1. fit a ridge classifier offline on FP-32 feature maps (the paper's
+//!    training protocol),
+//! 2. boot the coordinator; feature requests stream through the dynamic
+//!    batcher to either the fused digital XLA artifact or the simulated
+//!    chip + post-processing artifact,
+//! 3. the classifier read-out itself runs as the `ridge_predict` XLA
+//!    artifact (scores = z @ W on the PJRT client),
+//! 4. compare digital vs analog end-to-end accuracy and report telemetry.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example ridge_serve
+
+use imka::config::Config;
+use imka::coordinator::{Engine, PathKind, RequestBody, ResponseBody};
+use imka::datasets::{load_uci, UciName};
+use imka::kernels::Kernel;
+use imka::linalg::Mat;
+use imka::ridge::RidgeClassifier;
+use imka::runtime::{Input, Registry};
+use imka::util::Timer;
+
+fn main() -> imka::Result<()> {
+    // the serving feature lane is rbf/d=16/m=256 (see the manifest);
+    // letter is the paper's d=16 benchmark
+    let mut ds = load_uci(UciName::Letter, 0, 0.04);
+    let scale = 1.0 / (ds.d() as f32).sqrt(); // bandwidth (DESIGN.md)
+    ds.train_x.scale(scale);
+    ds.test_x.scale(scale);
+    println!(
+        "dataset: {} ({} train / {} test, d={}, {} classes)",
+        ds.name, ds.train_x.rows, ds.test_x.rows, ds.d(), ds.classes
+    );
+
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.serve.max_wait_us = 1000;
+    println!("booting engine...");
+    let engine = Engine::start(&cfg)?;
+    let sub = engine.submitter();
+    let registry = Registry::open(std::path::Path::new("artifacts"))?;
+
+    // The engine programmed its own Omega for the rbf lane; recover the
+    // exact FP-32 twin by requesting digital features for the train set
+    // (classifier must be fit on the SAME mapping the server applies).
+    println!("fitting ridge on served FP-32 feature maps...");
+    let t = Timer::start();
+    let ztr = serve_features(&sub, &ds.train_x, PathKind::Digital)?;
+    let clf = RidgeClassifier::fit(&ztr, &ds.train_y, ds.classes, 0.5)?;
+    println!("  fit in {:.1} s (D = {})", t.elapsed_secs(), ztr.cols);
+
+    // classifier read-out as an XLA artifact: scores = z @ W (D=512, C=26)
+    let predict = registry.load("ridge_predict_b64_D512_c26")?;
+    let n_eval = 256.min(ds.test_x.rows);
+    for path in [PathKind::Digital, PathKind::Analog] {
+        let t = Timer::start();
+        let idx: Vec<usize> = (0..n_eval).collect();
+        let xte = ds.test_x.select_rows(&idx);
+        let z = serve_features(&sub, &xte, path)?;
+        let mut correct = 0;
+        let mut i0 = 0;
+        while i0 < n_eval {
+            let i1 = (i0 + 64).min(n_eval);
+            let mut zb = Mat::zeros(64, z.cols);
+            for r in i0..i1 {
+                zb.row_mut(r - i0).copy_from_slice(z.row(r));
+            }
+            let scores = predict.run_mat(
+                &[Input::from_mat(&zb), Input::from_mat(&clf.w)],
+                64,
+                ds.classes,
+            )?;
+            for r in i0..i1 {
+                let row = scores.row(r - i0);
+                let mut best = 0;
+                for j in 1..row.len() {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                if best == ds.test_y[r] {
+                    correct += 1;
+                }
+            }
+            i0 = i1;
+        }
+        println!(
+            "{:<8} path: accuracy {:.4} over {n_eval} samples ({:.2} s incl. serving)",
+            path.as_str(),
+            correct as f64 / n_eval as f64,
+            t.elapsed_secs()
+        );
+    }
+
+    println!("\ntelemetry:");
+    for snap in engine.telemetry().snapshot() {
+        println!(
+            "  {:?}: {} reqs, p50 {:.0} us, mean batch {:.1}, energy {:.2} uJ",
+            snap.lane, snap.requests, snap.p50_us, snap.mean_batch, snap.energy_uj
+        );
+    }
+    engine.shutdown();
+    Ok(())
+}
+
+/// Stream every row of `x` through the coordinator's feature lane.
+fn serve_features(
+    sub: &imka::coordinator::Submitter,
+    x: &Mat,
+    path: PathKind,
+) -> imka::Result<Mat> {
+    let mut rxs = Vec::with_capacity(x.rows);
+    for i in 0..x.rows {
+        rxs.push(sub.submit(RequestBody::Features {
+            kernel: Kernel::Rbf,
+            path,
+            x: x.row(i).to_vec(),
+        })?);
+    }
+    let mut out: Option<Mat> = None;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .map_err(|_| imka::Error::Coordinator("reply dropped".into()))?;
+        match resp.result? {
+            ResponseBody::Features(z) => {
+                let o = out.get_or_insert_with(|| Mat::zeros(x.rows, z.len()));
+                o.row_mut(i).copy_from_slice(&z);
+            }
+            _ => return Err(imka::Error::Coordinator("wrong body".into())),
+        }
+    }
+    Ok(out.expect("non-empty input"))
+}

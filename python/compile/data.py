@@ -1,0 +1,127 @@
+"""Synthetic long-sequence tasks (LRA-lite) for the Performer experiments.
+
+The real Long Range Arena needs datasets and training budgets unavailable
+here (see DESIGN.md §Substitutions); these two tasks preserve the property
+the paper's Table I experiment depends on — labels are decidable only via
+long-range token interactions, so a Performer must use its (possibly
+AIMC-noised) attention path to solve them.
+
+- `pattern`  (2 classes): a long-range *retrieval* task — a sequence of
+  random filler tokens contains one marker token at a uniformly random
+  position in the last two thirds of the sequence, followed by a payload
+  token; label = parity of the payload. The classifier reads a mean-pooled
+  representation, so the model must locate the marker through attention;
+  no local shortcut exists.
+- `listops-lite` (10 classes): prefix-notation expressions over digits with
+  operators MAX/MIN/MED/SM (sum mod 10), depth <= 3; label = evaluated
+  result. A shrunken ListOps.
+
+Token ids: 0 PAD, 1..V-1 task alphabet. Mirrored by rust/src/datasets/lra.rs
+(same generator logic, independent RNG) for serving-time request replay.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+PATTERN_VOCAB = 16     # 0 pad, 1 marker_a, 2 marker_b, 3..9 payload, 10..15 filler
+LISTOPS_VOCAB = 18     # 0 pad, 1..10 digits 0-9, 11..14 ops, 15 '(', 16 ')', 17 unused
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    name: str
+    vocab: int
+    classes: int
+    seq_len: int
+
+
+def task_spec(name: str, seq_len: int = 128) -> TaskSpec:
+    if name == "pattern":
+        return TaskSpec("pattern", PATTERN_VOCAB, 2, seq_len)
+    if name == "listops":
+        return TaskSpec("listops", LISTOPS_VOCAB, 10, seq_len)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# pattern task
+# ---------------------------------------------------------------------------
+
+def gen_pattern(rng: np.random.Generator, n: int, seq_len: int):
+    """Long-range retrieval. Returns (tokens (n,L) int32, labels)."""
+    toks = rng.integers(10, PATTERN_VOCAB, size=(n, seq_len)).astype(np.int32)
+    third = seq_len // 3
+    pos = rng.integers(third, seq_len - 1, size=n)
+    payload = rng.integers(3, 10, size=n)
+    rows = np.arange(n)
+    toks[rows, pos] = 1
+    toks[rows, pos + 1] = payload
+    labels = ((payload - 3) % 2).astype(np.int32)
+    return toks, labels
+
+
+# ---------------------------------------------------------------------------
+# listops-lite task
+# ---------------------------------------------------------------------------
+
+_OPS = ["MAX", "MIN", "MED", "SM"]
+_OP_TOK = {op: 11 + i for i, op in enumerate(_OPS)}
+_LPAR, _RPAR = 15, 16
+
+
+def _gen_expr(rng, depth: int, max_args: int):
+    """Returns (token_list, value)."""
+    if depth == 0 or rng.random() < 0.35:
+        v = int(rng.integers(0, 10))
+        return [1 + v], v
+    op = _OPS[int(rng.integers(0, len(_OPS)))]
+    n_args = int(rng.integers(2, max_args + 1))
+    toks = [_LPAR, _OP_TOK[op]]
+    vals = []
+    for _ in range(n_args):
+        t, v = _gen_expr(rng, depth - 1, max_args)
+        toks.extend(t)
+        vals.append(v)
+    toks.append(_RPAR)
+    if op == "MAX":
+        val = max(vals)
+    elif op == "MIN":
+        val = min(vals)
+    elif op == "MED":
+        val = sorted(vals)[len(vals) // 2]
+    else:  # SM
+        val = sum(vals) % 10
+    return toks, val
+
+
+def gen_listops(rng: np.random.Generator, n: int, seq_len: int,
+                depth: int = 3, max_args: int = 4):
+    toks = np.zeros((n, seq_len), dtype=np.int32)
+    labels = np.zeros(n, dtype=np.int32)
+    i = 0
+    while i < n:
+        t, v = _gen_expr(rng, depth, max_args)
+        if len(t) > seq_len:
+            continue
+        toks[i, : len(t)] = t
+        labels[i] = v
+        i += 1
+    return toks, labels
+
+
+def gen_task(name: str, seed: int, n: int, seq_len: int):
+    rng = np.random.default_rng(seed)
+    if name == "pattern":
+        return gen_pattern(rng, n, seq_len)
+    if name == "listops":
+        return gen_listops(rng, n, seq_len)
+    raise ValueError(name)
+
+
+def train_test(name: str, seed: int, n_train: int, n_test: int, seq_len: int):
+    xtr, ytr = gen_task(name, seed, n_train, seq_len)
+    xte, yte = gen_task(name, seed + 10_000, n_test, seq_len)
+    return (xtr, ytr), (xte, yte)

@@ -1,0 +1,114 @@
+"""AIMC noise model (L1/L2 build-time mirror of `rust/src/aimc/`).
+
+Two entry points:
+
+- `aimc_matmul(x, w, key, cfg)` — jnp noise model used for hardware-aware
+  (HWA) training and for the `performer_hw_*` artifact variants. The noise
+  mechanisms and default magnitudes mirror the Rust chip simulator
+  (`rust/src/aimc/emulator.rs`); a statistical parity test pins the two
+  together (`rust/tests/parity.rs` + `python/tests/test_aimc_noise.py`).
+- `aimc_matmul_pallas(x, w_noisy, out_noise, in_scale)` — the deployable
+  Pallas kernel: INT8 input quantization, the MVM, and additive output
+  noise fused in one VMEM-resident tile pass. RNG cannot run inside an
+  interpret-mode Pallas kernel, so programming noise is baked into
+  `w_noisy` (by the Rust chip simulator at deployment) and read noise is
+  passed as a pre-sampled `out_noise` array.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .feature_map import pick_tile
+
+INTERPRET = True
+
+
+@dataclass(frozen=True)
+class AimcConfig:
+    """Noise magnitudes; defaults calibrated to the IBM HERMES chip papers
+    (~2.2% weight error after program-and-verify, ~1% read noise)."""
+
+    sigma_prog: float = 0.022   # programming error, fraction of max|w|
+    sigma_read: float = 0.010   # read noise, fraction of max|y|
+    input_bits: int = 8         # DAC resolution
+    adc_clip_sigma: float = 0.0 # 0 disables ADC saturation modelling
+
+
+DEFAULT = AimcConfig()
+
+
+def quantize_sym(x, scale, bits: int = 8):
+    """Symmetric fixed-scale quantization (DAC model)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
+
+
+def aimc_matmul(x, w, key, cfg: AimcConfig = DEFAULT, in_scale=None):
+    """Noisy analog MVM, differentiable (for HWA training the noise acts
+    as a regularizer; gradients flow through the straight-through
+    quantizer)."""
+    kw, ko = jax.random.split(key)
+    qmax = float(2 ** (cfg.input_bits - 1) - 1)
+    s = (
+        in_scale
+        if in_scale is not None
+        else jnp.maximum(jnp.max(jnp.abs(x)), 1e-9) / qmax
+    )
+    # straight-through estimator for the DAC
+    xq = x + jax.lax.stop_gradient(quantize_sym(x, s, cfg.input_bits) - x)
+    w_hat = w + cfg.sigma_prog * jnp.max(jnp.abs(w)) * jax.random.normal(
+        kw, w.shape, w.dtype
+    )
+    y = xq @ w_hat
+    y = y + cfg.sigma_read * jnp.maximum(
+        jnp.max(jnp.abs(jax.lax.stop_gradient(y))), 1e-9
+    ) * jax.random.normal(ko, y.shape, y.dtype)
+    if cfg.adc_clip_sigma > 0.0:
+        clip = cfg.adc_clip_sigma * jnp.std(jax.lax.stop_gradient(y))
+        y = jnp.clip(y, -clip, clip)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Pallas deployable kernel
+# ---------------------------------------------------------------------------
+
+def _aimc_mvm_kernel(x_ref, w_ref, n_ref, s_ref, o_ref, *, bits: int):
+    qmax = float(2 ** (bits - 1) - 1)
+    s = s_ref[0, 0]
+    xq = jnp.clip(jnp.round(x_ref[...] / s), -qmax, qmax) * s
+    y = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y + n_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_b", "block_m"))
+def aimc_matmul_pallas(x, w_noisy, out_noise, in_scale,
+                       bits: int = 8, block_b: int = 64, block_m: int = 128):
+    """Fused DAC-quantize -> MVM -> +read-noise tile kernel.
+
+    x: (B,d); w_noisy: (d,m) programming-noise-injected weights;
+    out_noise: (B,m) pre-sampled read noise (absolute units);
+    in_scale: scalar (1,1) DAC scale. Returns (B,m).
+    """
+    b, d = x.shape
+    m = w_noisy.shape[1]
+    tb, tm = pick_tile(b, block_b), pick_tile(m, block_m)
+    return pl.pallas_call(
+        functools.partial(_aimc_mvm_kernel, bits=bits),
+        grid=(b // tb, m // tm),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, tm), lambda i, j: (0, j)),
+            pl.BlockSpec((tb, tm), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w_noisy, out_noise, in_scale.reshape(1, 1))

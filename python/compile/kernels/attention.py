@@ -1,0 +1,90 @@
+"""L1 Pallas kernels: FAVOR+ linear attention (non-causal).
+
+Performer re-associates `softmax(QK^T)V` into `D^-1 (Q' ((K')^T V))`.
+The CUDA formulations chunk the sequence across threadblocks; the TPU
+adaptation here splits the computation into two Pallas kernels whose
+VMEM-resident state plays the role of the CUDA accumulators:
+
+1. `kv_reduce`  — grid over L-tiles of K'/V; accumulates the (Df, dv)
+   state S = K'^T V and the (1, Df) normalizer z = sum_l K'_l in outputs
+   whose index_map is constant, i.e. they stay resident across grid steps
+   (the canonical Pallas accumulation pattern).
+2. `qs_map`     — grid over L-tiles of Q'; each step computes
+   out = (Q' S) / (Q' z) with S and z fully VMEM-resident.
+
+Total HBM traffic is O(L*(Df+dv)), not O(L^2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .feature_map import pick_tile
+
+INTERPRET = True
+
+
+def _kv_reduce_kernel(kp_ref, v_ref, s_ref, z_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    kp = kp_ref[...]
+    s_ref[...] += jnp.dot(kp.T, v_ref[...], preferred_element_type=jnp.float32)
+    z_ref[...] += jnp.sum(kp, axis=0, keepdims=True)
+
+
+def _qs_map_kernel(qp_ref, s_ref, z_ref, o_ref, *, eps: float):
+    qp = qp_ref[...]
+    num = jnp.dot(qp, s_ref[...], preferred_element_type=jnp.float32)
+    den = jnp.dot(qp, z_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = num / jnp.maximum(den, eps)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l",))
+def linear_attention(qp, kp, v, block_l: int = 128, eps: float = 1e-9):
+    """FAVOR+ linear attention from pre-computed features.
+
+    qp, kp: (L, Df) feature-mapped queries/keys (Df = 2m for FAVOR+),
+    v: (L, dv). Returns (L, dv). Matches `ref.favor_attention` when fed
+    `ref.softmax_features_positive(q * d**-0.25, omega)` etc.
+    """
+    l, df = qp.shape
+    dv = v.shape[1]
+    tl = pick_tile(l, block_l)
+
+    s, z = pl.pallas_call(
+        _kv_reduce_kernel,
+        grid=(l // tl,),
+        in_specs=[
+            pl.BlockSpec((tl, df), lambda i: (i, 0)),
+            pl.BlockSpec((tl, dv), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((df, dv), lambda i: (0, 0)),
+            pl.BlockSpec((1, df), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((df, dv), jnp.float32),
+            jax.ShapeDtypeStruct((1, df), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(kp, v)
+
+    return pl.pallas_call(
+        functools.partial(_qs_map_kernel, eps=eps),
+        grid=(l // tl,),
+        in_specs=[
+            pl.BlockSpec((tl, df), lambda i: (i, 0)),
+            pl.BlockSpec((df, dv), lambda i: (0, 0)),
+            pl.BlockSpec((1, df), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tl, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, dv), jnp.float32),
+        interpret=INTERPRET,
+    )(qp, s, z)

@@ -1,0 +1,219 @@
+"""L1 Pallas kernels: fused random-feature projection maps.
+
+The compute hot-spot of in-memory kernel approximation is the projection
+`u = x @ Omega` followed by an element-wise nonlinearity. On the paper's
+hardware the projection runs on a PCM crossbar and the nonlinearity in a
+digital unit; on a TPU-class target both fuse into a single kernel whose
+HBM<->VMEM schedule is expressed with BlockSpecs:
+
+- grid = (B/TB, M/TM); each step keeps one (TB, d) input tile and one
+  (d, TM) weight tile resident in VMEM (the scratchpad role CUDA
+  formulations give to shared memory),
+- a single f32 `jnp.dot` per step feeds the MXU,
+- the nonlinearity (cos/sin, exp+-, heaviside, relu) is applied to the
+  accumulator tile before write-back, so each feature tile makes exactly
+  one HBM round trip.
+
+All kernels run with `interpret=True` (CPU correctness path; real-TPU
+lowering would emit Mosaic custom-calls the CPU PJRT plugin cannot run).
+Correctness oracle: `ref.py`; tests: `python/tests/test_kernels.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU correctness path; see module docstring.
+
+
+def pick_tile(n: int, target: int) -> int:
+    """Largest divisor of `n` that is <= target (>=1)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Fused projection + nonlinearity kernels
+# ---------------------------------------------------------------------------
+
+def _proj_kernel_two(x_ref, w_ref, f1_ref, f2_ref, *, kind: str):
+    """One grid step: u = x_tile @ w_tile, then two nonlinear outputs."""
+    u = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    if kind == "rbf":
+        f1_ref[...] = jnp.cos(u)
+        f2_ref[...] = jnp.sin(u)
+    elif kind == "softmax":
+        # h(x) = exp(-||x||^2/2) folded into the tile while x is resident.
+        sq = 0.5 * jnp.sum(x_ref[...] * x_ref[...], axis=-1, keepdims=True)
+        f1_ref[...] = jnp.exp(u - sq)
+        f2_ref[...] = jnp.exp(-u - sq)
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(kind)
+
+
+def _proj_kernel_one(x_ref, w_ref, f_ref, *, kind: str):
+    u = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    if kind == "arccos0":
+        f_ref[...] = (u > 0.0).astype(f_ref.dtype)
+    elif kind == "relu":
+        f_ref[...] = jnp.maximum(u, 0.0)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+
+
+def _grid_specs(b: int, d: int, m: int, tb: int, tm: int):
+    grid = (b // tb, m // tm)
+    in_specs = [
+        pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((d, tm), lambda i, j: (0, j)),
+    ]
+    out_spec = pl.BlockSpec((tb, tm), lambda i, j: (i, j))
+    return grid, in_specs, out_spec
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m"))
+def rbf_features(x, omega, block_b: int = 64, block_m: int = 128):
+    """Pallas RFF map for the RBF kernel: (B,d) x (d,m) -> (B, 2m)."""
+    b, d = x.shape
+    m = omega.shape[1]
+    tb, tm = pick_tile(b, block_b), pick_tile(m, block_m)
+    grid, in_specs, out_spec = _grid_specs(b, d, m, tb, tm)
+    cos, sin = pl.pallas_call(
+        functools.partial(_proj_kernel_two, kind="rbf"),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(out_spec, out_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+        ),
+        interpret=INTERPRET,
+    )(x, omega)
+    return jnp.concatenate([cos, sin], axis=-1) / math.sqrt(m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m"))
+def softmax_features_positive(x, omega, block_b: int = 64, block_m: int = 128):
+    """Pallas FAVOR+ positive feature map: (B,d) x (d,m) -> (B, 2m)."""
+    b, d = x.shape
+    m = omega.shape[1]
+    tb, tm = pick_tile(b, block_b), pick_tile(m, block_m)
+    grid, in_specs, out_spec = _grid_specs(b, d, m, tb, tm)
+    pos, neg = pl.pallas_call(
+        functools.partial(_proj_kernel_two, kind="softmax"),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(out_spec, out_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+        ),
+        interpret=INTERPRET,
+    )(x, omega)
+    return jnp.concatenate([pos, neg], axis=-1) / math.sqrt(2.0 * m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m"))
+def arccos0_features(x, omega, block_b: int = 64, block_m: int = 128):
+    """Pallas ArcCos0 feature map: (B,d) x (d,m) -> (B, m)."""
+    b, d = x.shape
+    m = omega.shape[1]
+    tb, tm = pick_tile(b, block_b), pick_tile(m, block_m)
+    grid, in_specs, out_spec = _grid_specs(b, d, m, tb, tm)
+    f = pl.pallas_call(
+        functools.partial(_proj_kernel_one, kind="arccos0"),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, m), x.dtype),
+        interpret=INTERPRET,
+    )(x, omega)
+    return math.sqrt(2.0 / m) * f
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m"))
+def relu_features(x, omega, block_b: int = 64, block_m: int = 128):
+    """Pallas ReLU feature map (simplified-attention variant)."""
+    b, d = x.shape
+    m = omega.shape[1]
+    tb, tm = pick_tile(b, block_b), pick_tile(m, block_m)
+    grid, in_specs, out_spec = _grid_specs(b, d, m, tb, tm)
+    return pl.pallas_call(
+        functools.partial(_proj_kernel_one, kind="relu"),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, m), x.dtype),
+        interpret=INTERPRET,
+    )(x, omega)
+
+
+# ---------------------------------------------------------------------------
+# Post-processing-only kernels (digital half of the analog pipeline)
+# ---------------------------------------------------------------------------
+# On the AIMC path the projection u = x @ Omega comes back from the chip;
+# only the element-wise nonlinearity runs digitally. These kernels are the
+# digital half, lowered to their own artifacts for the Rust hot path.
+
+def _post_kernel(u_ref, sq_ref, f1_ref, f2_ref, *, kind: str):
+    u = u_ref[...]
+    if kind == "rbf":
+        f1_ref[...] = jnp.cos(u)
+        f2_ref[...] = jnp.sin(u)
+    elif kind == "softmax":
+        sq = sq_ref[...]
+        f1_ref[...] = jnp.exp(u - sq)
+        f2_ref[...] = jnp.exp(-u - sq)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m"))
+def rbf_postprocess(u, block_b: int = 64, block_m: int = 128):
+    """cos/sin post-processing of an (analog) projection u: (B,m)->(B,2m)."""
+    b, m = u.shape
+    tb, tm = pick_tile(b, block_b), pick_tile(m, block_m)
+    grid = (b // tb, m // tm)
+    spec = pl.BlockSpec((tb, tm), lambda i, j: (i, j))
+    sq_spec = pl.BlockSpec((tb, 1), lambda i, j: (i, 0))
+    cos, sin = pl.pallas_call(
+        functools.partial(_post_kernel, kind="rbf"),
+        grid=grid,
+        in_specs=[spec, sq_spec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, m), u.dtype),
+            jax.ShapeDtypeStruct((b, m), u.dtype),
+        ),
+        interpret=INTERPRET,
+    )(u, jnp.zeros((b, 1), u.dtype))
+    return jnp.concatenate([cos, sin], axis=-1) / math.sqrt(m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m"))
+def softmax_postprocess(u, sq, block_b: int = 64, block_m: int = 128):
+    """exp(+-u - ||x||^2/2) post-processing. u: (B,m), sq: (B,1)->(B,2m)."""
+    b, m = u.shape
+    tb, tm = pick_tile(b, block_b), pick_tile(m, block_m)
+    grid = (b // tb, m // tm)
+    spec = pl.BlockSpec((tb, tm), lambda i, j: (i, j))
+    sq_spec = pl.BlockSpec((tb, 1), lambda i, j: (i, 0))
+    pos, neg = pl.pallas_call(
+        functools.partial(_post_kernel, kind="softmax"),
+        grid=grid,
+        in_specs=[spec, sq_spec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, m), u.dtype),
+            jax.ShapeDtypeStruct((b, m), u.dtype),
+        ),
+        interpret=INTERPRET,
+    )(u, sq)
+    return jnp.concatenate([pos, neg], axis=-1) / math.sqrt(2.0 * m)

@@ -1,0 +1,210 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+asserts the Pallas kernels (interpret mode) match these to tight
+tolerances, and the Rust test-suite cross-checks its native
+implementations against values exported from here.
+
+Feature-map conventions follow Supplementary Table I of the paper:
+
+    z(x) = h(x)/sqrt(m) * [f_1(w_1^T x), ..., f_l(w_m^T x)]
+
+- RBF   (Gaussian, k(x,y)=exp(-||x-y||^2/2)):  f = (cos, sin), h = 1
+- ArcCos0 (k(x,y)=1-theta/pi):                 f = (heaviside,), h = sqrt(2)
+- Softmax (k(x,y)=exp(x^T y)) positive:        f = (exp, exp(-)), h = exp(-||x||^2/2)
+- Softmax trigonometric:                       f = (sin, cos),  h = exp(+||x||^2/2)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Exact kernels
+# ---------------------------------------------------------------------------
+
+def rbf_kernel(x, y, gamma: float = 0.5):
+    """Exact Gaussian kernel matrix K[i,j] = exp(-gamma * ||x_i - y_j||^2).
+
+    The paper's definition uses gamma = 1/2 (unit bandwidth).
+    """
+    sq = (
+        jnp.sum(x * x, axis=-1)[:, None]
+        + jnp.sum(y * y, axis=-1)[None, :]
+        - 2.0 * x @ y.T
+    )
+    return jnp.exp(-gamma * jnp.maximum(sq, 0.0))
+
+
+def arccos0_kernel(x, y):
+    """Exact zeroth-order arc-cosine kernel: 1 - theta(x,y)/pi."""
+    nx = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    ny = jnp.linalg.norm(y, axis=-1, keepdims=True)
+    c = (x @ y.T) / jnp.maximum(nx * ny.T, 1e-12)
+    theta = jnp.arccos(jnp.clip(c, -1.0, 1.0))
+    return 1.0 - theta / jnp.pi
+
+
+def softmax_kernel(x, y):
+    """Exact (un-normalized) softmax kernel: exp(x^T y)."""
+    return jnp.exp(x @ y.T)
+
+
+# ---------------------------------------------------------------------------
+# Random-feature maps (reference implementations)
+# ---------------------------------------------------------------------------
+
+def rbf_features(x, omega):
+    """RFF map for the RBF kernel. x: (B,d), omega: (d,m) -> (B, 2m).
+
+    z = 1/sqrt(m) [cos(x W), sin(x W)];  E[z(x) z(y)^T] = exp(-||x-y||^2/2)
+    when omega ~ N(0, I).
+    """
+    m = omega.shape[1]
+    u = x @ omega
+    return jnp.concatenate([jnp.cos(u), jnp.sin(u)], axis=-1) / jnp.sqrt(m)
+
+
+def arccos0_features(x, omega):
+    """ArcCos0 map. z = sqrt(2/m) * heaviside(x W) -> (B, m)."""
+    m = omega.shape[1]
+    u = x @ omega
+    return jnp.sqrt(2.0 / m) * (u > 0.0).astype(x.dtype)
+
+
+def softmax_features_positive(x, omega, stabilize: bool = False):
+    """FAVOR+ positive (hyperbolic) features for exp(x^T y). -> (B, 2m).
+
+    z = exp(-||x||^2/2)/sqrt(2m) [exp(xW), exp(-xW)]
+    E[z(x) z(y)^T] = exp(x^T y) for omega ~ N(0, I).
+
+    `stabilize` subtracts a *global* max|u| inside the exponentials
+    (Performer's numerically-stable variant); it rescales z by one shared
+    constant that cancels in normalized attention but NOT in raw kernel
+    estimates. The offset must be shared across rows: a per-row offset
+    would scale each key's feature vector differently and bias the
+    normalized attention matrix.
+    """
+    m = omega.shape[1]
+    u = x @ omega
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    if stabilize:
+        mx = jnp.max(jnp.abs(u))
+        pos = jnp.exp(u - mx - sq)
+        neg = jnp.exp(-u - mx - sq)
+    else:
+        pos = jnp.exp(u - sq)
+        neg = jnp.exp(-u - sq)
+    return jnp.concatenate([pos, neg], axis=-1) / jnp.sqrt(2.0 * m)
+
+
+def softmax_features_trig(x, omega):
+    """FAVOR trigonometric features for exp(x^T y). -> (B, 2m).
+
+    z = exp(+||x||^2/2)/sqrt(m) [cos(xW), sin(xW)] — the numerically
+    unstable variant replicated in Supp. Fig. 21.
+    """
+    m = omega.shape[1]
+    u = x @ omega
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    scale = jnp.exp(sq) / jnp.sqrt(m)
+    return jnp.concatenate([jnp.cos(u), jnp.sin(u)], axis=-1) * scale
+
+
+def relu_features(x, omega):
+    """Simplified-attention map from the paper's Discussion: ReLU(x W)."""
+    return jnp.maximum(x @ omega, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def exact_attention(q, k, v):
+    """Vanilla softmax attention for one head. q,k: (L,d), v: (L,dv)."""
+    d = q.shape[-1]
+    s = q @ k.T / jnp.sqrt(d)
+    a = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    return a @ v
+
+
+def exact_attention_matrix(q, k):
+    """Row-normalized softmax attention matrix (for approximation-error
+    experiments, Fig. 3b)."""
+    d = q.shape[-1]
+    s = q @ k.T / jnp.sqrt(d)
+    a = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    return a / jnp.sum(a, axis=-1, keepdims=True)
+
+
+def favor_attention(q, k, v, omega, stabilize: bool = True):
+    """FAVOR+ linear attention for one head (non-causal).
+
+    q,k: (L,d), v: (L,dv), omega: (d,m). Queries/keys are scaled by
+    d^{-1/4} so that q'/k' features estimate exp(q k^T / sqrt(d)).
+    """
+    d = q.shape[-1]
+    scale = d ** -0.25
+    qp = softmax_features_positive(q * scale, omega, stabilize=stabilize)
+    kp = softmax_features_positive(k * scale, omega, stabilize=stabilize)
+    kv = kp.T @ v                      # (2m, dv)
+    ks = jnp.sum(kp, axis=0)           # (2m,)
+    num = qp @ kv                      # (L, dv)
+    den = qp @ ks                      # (L,)
+    return num / jnp.maximum(den, 1e-9)[:, None]
+
+
+def favor_attention_matrix(q, k, omega, stabilize: bool = True):
+    """The implicit row-normalized attention matrix under FAVOR+."""
+    d = q.shape[-1]
+    scale = d ** -0.25
+    qp = softmax_features_positive(q * scale, omega, stabilize=stabilize)
+    kp = softmax_features_positive(k * scale, omega, stabilize=stabilize)
+    a = qp @ kp.T
+    return a / jnp.maximum(jnp.sum(a, axis=-1, keepdims=True), 1e-9)
+
+
+def relu_attention(q, k, v, omega):
+    """Simplified attention variant from the Discussion section:
+    Attn = D^-1 Q'(K')^T V with Q' = ReLU(Q Omega), K' = ReLU(K Omega)."""
+    qp = relu_features(q, omega)
+    kp = relu_features(k, omega)
+    kv = kp.T @ v
+    ks = jnp.sum(kp, axis=0)
+    num = qp @ kv
+    den = qp @ ks
+    return num / jnp.maximum(den, 1e-9)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# AIMC noise model (reference; mirrored by rust/src/aimc/emulator.rs)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x, scale):
+    """Symmetric INT8 quantization with a fixed per-tensor scale."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -127.0, 127.0) * scale
+
+
+def aimc_matmul_ref(x, w, key, sigma_prog=0.022, sigma_read=0.01,
+                    in_scale=None, adc_clip=None):
+    """Reference noisy analog MVM: y = Q8(x) @ (w + prog-noise) + read-noise.
+
+    - input DAC: symmetric INT8 with per-tensor scale (max|x|/127 if None)
+    - programming noise: additive Gaussian, sigma_prog * max|w|
+    - read noise: additive Gaussian on the output, sigma_read * max|y| per
+      call (models column-current read fluctuation at the ADC)
+    - adc_clip: optional saturation of the output at +-adc_clip
+    """
+    import jax
+    kw, ko = jax.random.split(key)
+    s = in_scale if in_scale is not None else jnp.maximum(jnp.max(jnp.abs(x)), 1e-9) / 127.0
+    xq = quantize_int8(x, s)
+    w_hat = w + sigma_prog * jnp.max(jnp.abs(w)) * jax.random.normal(kw, w.shape, w.dtype)
+    y = xq @ w_hat
+    y = y + sigma_read * jnp.maximum(jnp.max(jnp.abs(y)), 1e-9) * jax.random.normal(ko, y.shape, y.dtype)
+    if adc_clip is not None:
+        y = jnp.clip(y, -adc_clip, adc_clip)
+    return y

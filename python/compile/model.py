@@ -1,0 +1,269 @@
+"""L2: Performer encoder (FAVOR+ kernelized attention) and ridge-pipeline
+compute graphs, in pure-functional JAX.
+
+The same `forward` serves three artifact variants (paper Table I rows):
+
+- mode="fp32"     — everything in float32 (Performer^Vanilla).
+- mode="hw_attn"  — only the FAVOR+ feature projection u = x @ Omega runs
+  through the AIMC noise model (on-chip attention mapping). Omega is an
+  input, so the Rust chip simulator can pass programming-noise-injected
+  weights; the artifact adds DAC quantization + read noise driven by a
+  `seed` input.
+- mode="hw_full"  — every static-weight MVM (QKVO projections, FFN,
+  classifier head) additionally runs through the AIMC noise model
+  (full on-chip deployment).
+
+Training (`train.py`) uses the fast jnp reference attention; AOT lowering
+(`aot.py`) can switch the attention inner loop to the Pallas kernels with
+`use_pallas=True` — both paths are pinned together by tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import attention as pattn
+from .kernels import feature_map as pfmap
+from .kernels.aimc_noise import AimcConfig, aimc_matmul
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 16
+    seq_len: int = 128
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 128
+    m_features: int = 32          # FAVOR+ sampled features per head dim
+    classes: int = 2
+    classifier_hidden: int = 128
+    act: str = "gelu"
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Deterministic name -> shape map; the artifact manifest and the Rust
+    runtime rely on this exact ordering (sorted names)."""
+    spec = {
+        "embed.tok": (cfg.vocab, cfg.d_model),
+        "embed.pos": (cfg.seq_len, cfg.d_model),
+        "head.ln.scale": (cfg.d_model,),
+        "head.ln.bias": (cfg.d_model,),
+        "head.w1": (cfg.d_model, cfg.classifier_hidden),
+        "head.b1": (cfg.classifier_hidden,),
+        "head.w2": (cfg.classifier_hidden, cfg.classes),
+        "head.b2": (cfg.classes,),
+    }
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec[p + "ln1.scale"] = (cfg.d_model,)
+        spec[p + "ln1.bias"] = (cfg.d_model,)
+        spec[p + "ln2.scale"] = (cfg.d_model,)
+        spec[p + "ln2.bias"] = (cfg.d_model,)
+        spec[p + "attn.wq"] = (cfg.d_model, cfg.d_model)
+        spec[p + "attn.wk"] = (cfg.d_model, cfg.d_model)
+        spec[p + "attn.wv"] = (cfg.d_model, cfg.d_model)
+        spec[p + "attn.wo"] = (cfg.d_model, cfg.d_model)
+        spec[p + "ffn.w1"] = (cfg.d_model, cfg.d_ff)
+        spec[p + "ffn.b1"] = (cfg.d_ff,)
+        spec[p + "ffn.w2"] = (cfg.d_ff, cfg.d_model)
+        spec[p + "ffn.b2"] = (cfg.d_model,)
+    return dict(sorted(spec.items()))
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Standard Transformer init; embedding ~ N(0, d^-0.5) (the Supp. Note 2
+    insight — N(0,1) embeddings stall convergence on under-parameterized
+    models)."""
+    params = {}
+    for name, shape in param_spec(cfg).items():
+        key, k = jax.random.split(key)
+        if name.endswith(".bias") or name.startswith("head.b") or ".b1" in name or ".b2" in name:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(".scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed.tok" or name == "embed.pos":
+            params[name] = cfg.d_model ** -0.5 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = fan_in ** -0.5 * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for s in param_spec(cfg).values())
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, scale, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _matmul(x, w, *, mode, analog, key, cfg_aimc):
+    """Static-weight MVM; routed to the AIMC noise model when deployed
+    on-chip in the current mode."""
+    if analog:
+        return aimc_matmul(x, w, key, cfg_aimc)
+    del key
+    return x @ w
+
+
+def _favor_heads(x_q, x_k, x_v, omega, cfg, *, mode, key, cfg_aimc, use_pallas):
+    """Multi-head FAVOR+ attention over (B, L, D) projections."""
+    b, l, _ = x_q.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = x_q.reshape(b, l, h, dh).transpose(0, 2, 1, 3)  # (B,h,L,dh)
+    k = x_k.reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+    v = x_v.reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+    scale = dh ** -0.25
+    qs, ks = q * scale, k * scale
+
+    analog_map = mode in ("hw_attn", "hw_full")
+    flat_q = qs.reshape(b * h * l, dh)
+    flat_k = ks.reshape(b * h * l, dh)
+    if analog_map:
+        kq, kk = jax.random.split(key)
+        uq = aimc_matmul(flat_q, omega, kq, cfg_aimc)
+        uk = aimc_matmul(flat_k, omega, kk, cfg_aimc)
+        sq_q = 0.5 * jnp.sum(flat_q * flat_q, axis=-1, keepdims=True)
+        sq_k = 0.5 * jnp.sum(flat_k * flat_k, axis=-1, keepdims=True)
+        m = omega.shape[1]
+        qp = jnp.concatenate(
+            [jnp.exp(uq - sq_q), jnp.exp(-uq - sq_q)], axis=-1
+        ) / jnp.sqrt(2.0 * m)
+        kp = jnp.concatenate(
+            [jnp.exp(uk - sq_k), jnp.exp(-uk - sq_k)], axis=-1
+        ) / jnp.sqrt(2.0 * m)
+    elif use_pallas:
+        qp = pfmap.softmax_features_positive(flat_q, omega)
+        kp = pfmap.softmax_features_positive(flat_k, omega)
+    else:
+        qp = ref.softmax_features_positive(flat_q, omega)
+        kp = ref.softmax_features_positive(flat_k, omega)
+
+    df = qp.shape[-1]
+    qp = qp.reshape(b * h, l, df)
+    kp = kp.reshape(b * h, l, df)
+    vf = v.reshape(b * h, l, dh)
+
+    if use_pallas:
+        out = jax.vmap(lambda a, c, d_: pattn.linear_attention(a, c, d_))(qp, kp, vf)
+    else:
+        kv = jnp.einsum("blf,bld->bfd", kp, vf)
+        kz = jnp.sum(kp, axis=1)
+        num = jnp.einsum("blf,bfd->bld", qp, kv)
+        den = jnp.einsum("blf,bf->bl", qp, kz)
+        out = num / jnp.maximum(den, 1e-9)[..., None]
+
+    return out.reshape(b, h, l, dh).transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def forward(params, tokens, omega, cfg: ModelConfig, *,
+            mode: str = "fp32", seed=0,
+            cfg_aimc: AimcConfig = AimcConfig(),
+            use_pallas: bool = False):
+    """Performer encoder forward. tokens: (B, L) int32; omega: (d_head, m);
+    seed: scalar int32 driving the AIMC noise RNG. Returns logits (B, C)."""
+    assert mode in ("fp32", "hw_attn", "hw_full")
+    b, l = tokens.shape
+    key = jax.random.PRNGKey(seed)
+    analog_w = mode == "hw_full"
+
+    x = params["embed.tok"][tokens] + params["embed.pos"][None, :l, :]
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        key, k_attn, kq, kk, kv, ko, k1, k2 = jax.random.split(key, 8)
+        h_in = _layernorm(x, params[p + "ln1.scale"], params[p + "ln1.bias"])
+        flat = h_in.reshape(b * l, cfg.d_model)
+        xq = _matmul(flat, params[p + "attn.wq"], mode=mode, analog=analog_w,
+                     key=kq, cfg_aimc=cfg_aimc).reshape(b, l, cfg.d_model)
+        xk = _matmul(flat, params[p + "attn.wk"], mode=mode, analog=analog_w,
+                     key=kk, cfg_aimc=cfg_aimc).reshape(b, l, cfg.d_model)
+        xv = _matmul(flat, params[p + "attn.wv"], mode=mode, analog=analog_w,
+                     key=kv, cfg_aimc=cfg_aimc).reshape(b, l, cfg.d_model)
+        attn = _favor_heads(xq, xk, xv, omega, cfg, mode=mode, key=k_attn,
+                            cfg_aimc=cfg_aimc, use_pallas=use_pallas)
+        attn = _matmul(attn.reshape(b * l, cfg.d_model), params[p + "attn.wo"],
+                       mode=mode, analog=analog_w, key=ko,
+                       cfg_aimc=cfg_aimc).reshape(b, l, cfg.d_model)
+        x = x + attn
+
+        h_in = _layernorm(x, params[p + "ln2.scale"], params[p + "ln2.bias"])
+        flat = h_in.reshape(b * l, cfg.d_model)
+        ff = _matmul(flat, params[p + "ffn.w1"], mode=mode, analog=analog_w,
+                     key=k1, cfg_aimc=cfg_aimc) + params[p + "ffn.b1"]
+        ff = _act(cfg, ff)
+        ff = _matmul(ff, params[p + "ffn.w2"], mode=mode, analog=analog_w,
+                     key=k2, cfg_aimc=cfg_aimc) + params[p + "ffn.b2"]
+        x = x + ff.reshape(b, l, cfg.d_model)
+
+    x = _layernorm(x, params["head.ln.scale"], params["head.ln.bias"])
+    pooled = jnp.mean(x, axis=1)  # (B, D)
+    key, k1, k2 = jax.random.split(key, 3)
+    hcls = _matmul(pooled, params["head.w1"], mode=mode, analog=analog_w,
+                   key=k1, cfg_aimc=cfg_aimc) + params["head.b1"]
+    hcls = _act(cfg, hcls)
+    logits = _matmul(hcls, params["head.w2"], mode=mode, analog=analog_w,
+                     key=k2, cfg_aimc=cfg_aimc) + params["head.b2"]
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Ridge-pipeline graphs (lowered as standalone artifacts)
+# ---------------------------------------------------------------------------
+
+def ridge_predict(z, w):
+    """Linear read-out on feature-mapped inputs: scores = z @ w."""
+    return z @ w
+
+
+def feature_map_graph(kind: str, use_pallas: bool = True):
+    """Returns fn(x, omega) -> z for AOT lowering of the digital path."""
+    mod = pfmap if use_pallas else ref
+    if kind == "rbf":
+        return mod.rbf_features
+    if kind == "arccos0":
+        return mod.arccos0_features
+    if kind == "softmax":
+        return lambda x, o: mod.softmax_features_positive(x, o)
+    raise ValueError(kind)
+
+
+def postprocess_graph(kind: str):
+    """Returns the digital post-processing fn for the analog path
+    (projection u arrives from the chip). All variants take (u, sq) so the
+    artifact signature is uniform; rbf keeps a no-op dependence on sq to
+    prevent argument pruning during stablehlo->XLA conversion."""
+    if kind == "rbf":
+        return lambda u, sq: pfmap.rbf_postprocess(u) + 0.0 * sq
+    if kind == "softmax":
+        return pfmap.softmax_postprocess
+    raise ValueError(kind)

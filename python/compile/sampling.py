@@ -1,0 +1,108 @@
+"""Random-feature samplers: RFF / ORF / SORF (build-time mirror of
+`rust/src/features/`).
+
+All samplers return Omega with shape (d, m) — columns are the sampled
+feature vectors, matching the paper's crossbar layout (one omega per
+crossbar column). Gaussians are truncated at 3 sigma, as in Supp. Table I
+("to avoid outliers of Omega, which would map to high conductance
+states").
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, trunc: float = 3.0):
+    return jax.random.truncated_normal(key, -trunc, trunc, shape, jnp.float32)
+
+
+def gaussian_omega(key, d: int, m: int, trunc: float = 3.0):
+    """Plain RFF sampling: omega_ij ~ N(0,1) truncated at `trunc` sigma."""
+    return truncated_normal(key, (d, m), trunc)
+
+
+def orf_omega(key, d: int, m: int):
+    """Orthogonal Random Features (Yu et al., 2016).
+
+    Stacks ceil(m/d) independent d x d random orthogonal matrices (QR of a
+    Gaussian), each row-scaled by chi(d)-distributed norms so marginals
+    match the unstructured Gaussian.
+    """
+    blocks = []
+    n_blocks = (m + d - 1) // d
+    for i in range(n_blocks):
+        kg, kn, key = jax.random.split(jax.random.fold_in(key, i), 3)
+        g = jax.random.normal(kg, (d, d), jnp.float32)
+        q, r = jnp.linalg.qr(g)
+        # sign-correct so Q is Haar-distributed
+        q = q * jnp.sign(jnp.diag(r))[None, :]
+        norms = jnp.sqrt(
+            jnp.sum(jax.random.normal(kn, (d, d), jnp.float32) ** 2, axis=1)
+        )
+        blocks.append(q * norms[None, :])  # scale columns
+    return jnp.concatenate(blocks, axis=1)[:, :m]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _fwht(x):
+    """Fast Walsh-Hadamard transform along axis 0 (power-of-2 length)."""
+    n = x.shape[0]
+    h = 1
+    while h < n:
+        x = x.reshape(n // (2 * h), 2, h, -1)
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(n, -1)
+        h *= 2
+    return x
+
+
+def sorf_omega(key, d: int, m: int):
+    """Structured Orthogonal Random Features: sqrt(p) * H D1 H D2 H D3
+    per d x d block, with p the padded power-of-2 dimension.
+
+    The FWHT makes generation O(m log d) (the 'cheaper generation' the
+    paper cites); statistically it approximates ORF.
+    """
+    p = _next_pow2(d)
+    n_blocks = (m + p - 1) // p
+    cols = []
+    for i in range(n_blocks):
+        kk = jax.random.fold_in(key, i)
+        block = jnp.eye(p, dtype=jnp.float32)
+        for j in range(3):
+            kd = jax.random.fold_in(kk, j)
+            dsign = jax.random.rademacher(kd, (p,), jnp.float32)
+            block = _fwht(block * dsign[:, None]) / math.sqrt(p)
+        cols.append(math.sqrt(p) * block[:d, :])
+    return jnp.concatenate(cols, axis=1)[:, :m]
+
+
+def sample_omega(kind: str, key, d: int, m: int):
+    if kind == "rff":
+        return gaussian_omega(key, d, m)
+    if kind == "orf":
+        return orf_omega(key, d, m)
+    if kind == "sorf":
+        return sorf_omega(key, d, m)
+    raise ValueError(f"unknown sampler {kind!r}")
+
+
+def poisson_omega(key, d: int, m: int, lam: float = 1.0):
+    """Wrong-distribution Omega for the Supp. Fig. 19 sanity check."""
+    return jax.random.poisson(key, lam, (d, m)).astype(jnp.float32)
+
+
+def export_numpy(omega) -> np.ndarray:
+    return np.asarray(omega, dtype=np.float32)

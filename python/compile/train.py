@@ -1,0 +1,183 @@
+"""Performer training driver (build-time only).
+
+Trains the small Performer of `model.py` on an LRA-lite task and exports:
+
+- `weights_<tag>.npz` — parameter arrays (names = `model.param_spec`) used
+  by the Rust runtime to feed the lowered artifacts,
+- `<out>.json` — metrics log: loss curve, validation accuracy (training
+  Omega), test accuracy (fresh Omega), and optionally test accuracy under
+  a wrong-distribution (Poisson) Omega — the Supp. Fig. 19 sanity check.
+
+Key experimental knobs reproduce the paper's training findings:
+
+- `--redraw N`   — re-sample the FAVOR+ mapping matrix every N steps.
+  N=0 disables redraw and reproduces the overfitting-to-Omega pathology
+  (large val/test gap) of Supp. Note 2.
+- `--hwa`        — hardware-aware training: every static-weight MVM runs
+  through the AIMC noise model; weights are clipped to 2 sigma each step
+  (paper Methods: eta_train weight noise, eta_out output noise, alpha=2
+  clipping).
+
+Usage: python -m compile.train --task pattern --steps 400 --out metrics.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import sampling
+from .kernels.aimc_noise import AimcConfig
+from .model import ModelConfig, forward, init_params, n_params
+
+# HWA noise magnitudes (see DESIGN.md §Noise-model calibration): scaled to
+# this model family so that training-time noise upper-bounds deploy-time
+# noise (paper uses eta_train=0.12 / eta_out=0.1 on its own normalization).
+HWA_CFG = AimcConfig(sigma_prog=0.05, sigma_read=0.02)
+HWA_CLIP_SIGMA = 2.0
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_step(cfg: ModelConfig, hwa: bool, lr: float):
+    mode = "hw_full" if hwa else "fp32"
+    cfg_aimc = HWA_CFG
+
+    def loss_fn(params, tokens, labels, omega, seed):
+        logits = forward(params, tokens, omega, cfg, mode=mode, seed=seed,
+                         cfg_aimc=cfg_aimc)
+        return cross_entropy(logits, labels)
+
+    @jax.jit
+    def step(params, opt, tokens, labels, omega, seed, lr_t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels, omega, seed)
+        m, v, t = opt
+        t = t + 1
+        b1, b2, eps = 0.9, 0.98, 1e-9
+        new_m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+        new_v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+        def upd(p, mm, vv):
+            mhat = mm / (1 - b1 ** t)
+            vhat = vv / (1 - b2 ** t)
+            return p - lr_t * mhat / (jnp.sqrt(vhat) + eps)
+        new_p = jax.tree_util.tree_map(upd, params, new_m, new_v)
+        if hwa:
+            def clip(p):
+                s = jnp.std(p)
+                return jnp.clip(p, -HWA_CLIP_SIGMA * s, HWA_CLIP_SIGMA * s)
+            new_p = {k: (clip(p) if p.ndim == 2 else p) for k, p in new_p.items()}
+        return new_p, (new_m, new_v, t), loss
+
+    return step
+
+
+def accuracy(params, tokens, labels, omega, cfg, batch: int = 64) -> float:
+    fwd = jax.jit(lambda p, t, o: forward(p, t, o, cfg, mode="fp32"))
+    correct = 0
+    for i in range(0, len(tokens), batch):
+        t = tokens[i : i + batch]
+        lg = fwd(params, jnp.asarray(t), omega)
+        correct += int(jnp.sum(jnp.argmax(lg, -1) == jnp.asarray(labels[i : i + batch])))
+    return correct / len(tokens)
+
+
+def train(task: str = "pattern", steps: int = 400, seq_len: int = 128,
+          batch: int = 32, lr: float = 1e-3, redraw: int = 50, hwa: bool = False,
+          seed: int = 0, n_train: int = 4096, n_test: int = 1024,
+          eval_every: int = 50, poisson_eval: bool = False,
+          warmup: int = 50, m_features: int = 32):
+    spec = data_mod.task_spec(task, seq_len)
+    cfg = ModelConfig(vocab=spec.vocab, seq_len=seq_len, classes=spec.classes,
+                      m_features=m_features)
+    (xtr, ytr), (xte, yte) = data_mod.train_test(task, seed, n_train, n_test, seq_len)
+
+    key = jax.random.PRNGKey(seed)
+    key, kp, ko = jax.random.split(key, 3)
+    params = init_params(kp, cfg)
+    omega = sampling.orf_omega(ko, cfg.d_head, cfg.m_features)
+    opt = (
+        jax.tree_util.tree_map(jnp.zeros_like, params),
+        jax.tree_util.tree_map(jnp.zeros_like, params),
+        jnp.zeros((), jnp.int32),
+    )
+    step_fn = make_step(cfg, hwa, lr)
+
+    rng = np.random.default_rng(seed + 1)
+    log = {"task": task, "steps": steps, "redraw": redraw, "hwa": hwa,
+           "n_params": int(n_params(cfg)), "loss": [], "val_acc": [],
+           "test_acc": [], "eval_steps": []}
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, n_train, size=batch)
+        if redraw > 0 and s > 0 and s % redraw == 0:
+            key, ko = jax.random.split(key)
+            omega = sampling.orf_omega(ko, cfg.d_head, cfg.m_features)
+        lr_t = lr * min(1.0, (s + 1) / max(warmup, 1))
+        params, opt, loss = step_fn(params, opt, jnp.asarray(xtr[idx]),
+                                    jnp.asarray(ytr[idx]), omega, s, lr_t)
+        log["loss"].append(float(loss))
+        if (s + 1) % eval_every == 0 or s == steps - 1:
+            # validation = training Omega; test = freshly drawn Omega
+            val = accuracy(params, xtr[:512], ytr[:512], omega, cfg)
+            key, kf = jax.random.split(key)
+            omega_fresh = sampling.orf_omega(kf, cfg.d_head, cfg.m_features)
+            test = accuracy(params, xte, yte, omega_fresh, cfg)
+            log["eval_steps"].append(s + 1)
+            log["val_acc"].append(val)
+            log["test_acc"].append(test)
+            print(f"step {s+1:5d} loss {float(loss):.4f} val {val:.3f} test {test:.3f}")
+
+    log["train_seconds"] = time.time() - t0
+    if poisson_eval:
+        key, kq = jax.random.split(key)
+        omega_bad = sampling.poisson_omega(kq, cfg.d_head, cfg.m_features)
+        log["test_acc_poisson"] = accuracy(params, xte, yte, omega_bad, cfg)
+        print(f"poisson-omega test acc {log['test_acc_poisson']:.3f}")
+    return params, omega, cfg, log, (xte, yte)
+
+
+def save_weights(path: Path, params, omega):
+    arrays = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    arrays["__omega__"] = np.asarray(omega, np.float32)
+    np.savez(path, **arrays)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="pattern", choices=["pattern", "listops"])
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--redraw", type=int, default=50)
+    ap.add_argument("--hwa", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--poisson-eval", action="store_true")
+    ap.add_argument("--m-features", type=int, default=32)
+    ap.add_argument("--out", default=None, help="metrics json path")
+    ap.add_argument("--save-weights", default=None, help="npz path")
+    args = ap.parse_args(argv)
+
+    params, omega, cfg, log, _ = train(
+        task=args.task, steps=args.steps, seq_len=args.seq_len,
+        redraw=args.redraw, hwa=args.hwa, seed=args.seed,
+        poisson_eval=args.poisson_eval, m_features=args.m_features,
+    )
+    if args.out:
+        Path(args.out).write_text(json.dumps(log, indent=1))
+        print(f"wrote {args.out}")
+    if args.save_weights:
+        save_weights(Path(args.save_weights), params, omega)
+        print(f"wrote {args.save_weights}")
+
+
+if __name__ == "__main__":
+    main()

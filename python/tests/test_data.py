@@ -1,0 +1,87 @@
+"""Synthetic LRA-lite dataset generators."""
+
+import numpy as np
+import pytest
+
+from compile import data as d
+
+
+def test_pattern_structure():
+    rng = np.random.default_rng(0)
+    toks, labels = d.gen_pattern(rng, 256, 64)
+    assert toks.shape == (256, 64) and labels.shape == (256,)
+    assert toks.min() >= 1 and toks.max() < d.PATTERN_VOCAB
+    for i in range(256):
+        (pos,) = np.where(toks[i] == 1)
+        assert len(pos) >= 1
+        p = pos[0]
+        payload = toks[i, p + 1]
+        assert 3 <= payload <= 9
+        assert labels[i] == (payload - 3) % 2
+        assert p >= 64 // 3  # long-range placement
+
+
+def test_pattern_label_balance():
+    rng = np.random.default_rng(1)
+    _, labels = d.gen_pattern(rng, 4096, 128)
+    frac = labels.mean()
+    assert 0.4 < frac < 0.62  # 7 payload values -> slight imbalance ok
+
+
+def test_listops_labels_match_eval():
+    rng = np.random.default_rng(2)
+    toks, labels = d.gen_listops(rng, 64, 128)
+    assert toks.shape == (64, 128)
+    assert labels.min() >= 0 and labels.max() <= 9
+    # decode and re-evaluate one expression by hand
+    inv_op = {v: k for k, v in d._OP_TOK.items()}
+
+    def eval_tokens(ts):
+        pos = 0
+
+        def parse():
+            nonlocal pos
+            t = ts[pos]
+            if 1 <= t <= 10:
+                pos += 1
+                return int(t - 1)
+            assert t == d._LPAR
+            pos += 1
+            op = inv_op[ts[pos]]
+            pos += 1
+            vals = []
+            while ts[pos] != d._RPAR:
+                vals.append(parse())
+            pos += 1
+            if op == "MAX":
+                return max(vals)
+            if op == "MIN":
+                return min(vals)
+            if op == "MED":
+                return sorted(vals)[len(vals) // 2]
+            return sum(vals) % 10
+
+        return parse()
+
+    for i in range(64):
+        ts = toks[i][toks[i] != 0]
+        assert eval_tokens(list(ts)) == labels[i]
+
+
+def test_generators_deterministic():
+    a1 = d.gen_task("pattern", 7, 32, 64)
+    a2 = d.gen_task("pattern", 7, 32, 64)
+    np.testing.assert_array_equal(a1[0], a2[0])
+    np.testing.assert_array_equal(a1[1], a2[1])
+
+
+def test_train_test_disjoint_seeds():
+    (xtr, _), (xte, _) = d.train_test("pattern", 0, 64, 64, 64)
+    assert not np.array_equal(xtr, xte)
+
+
+def test_task_spec():
+    s = d.task_spec("listops", 256)
+    assert s.classes == 10 and s.vocab == d.LISTOPS_VOCAB and s.seq_len == 256
+    with pytest.raises(ValueError):
+        d.task_spec("nope")

@@ -1,0 +1,305 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes/scales; every kernel must match its
+oracle to float32 tolerances regardless of tiling (interpret mode).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import sampling
+from compile.kernels import attention as pattn
+from compile.kernels import feature_map as fm
+from compile.kernels import ref
+from compile.kernels.aimc_noise import (
+    AimcConfig,
+    aimc_matmul,
+    aimc_matmul_pallas,
+    quantize_sym,
+)
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def _data(seed, b, d, m, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    kx, ko = jax.random.split(key)
+    x = scale * jax.random.normal(kx, (b, d), jnp.float32)
+    omega = sampling.gaussian_omega(ko, d, m)
+    return x, omega
+
+
+# ---------------------------------------------------------------------------
+# pallas vs oracle, shape sweeps
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 3, 8, 16]),
+    d=st.sampled_from([4, 10, 16]),
+    m=st.sampled_from([8, 32, 96]),
+    seed=st.integers(0, 2**16),
+)
+def test_rbf_features_matches_ref(b, d, m, seed):
+    x, omega = _data(seed, b, d, m)
+    got = fm.rbf_features(x, omega)
+    want = ref.rbf_features(x, omega)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 5, 16]),
+    d=st.sampled_from([3, 8, 16]),
+    m=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_arccos0_features_matches_ref(b, d, m, seed):
+    x, omega = _data(seed, b, d, m)
+    got = fm.arccos0_features(x, omega)
+    want = ref.arccos0_features(x, omega)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([2, 8, 16]),
+    d=st.sampled_from([4, 8, 16]),
+    m=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([0.1, 0.3, 0.7]),
+)
+def test_softmax_features_matches_ref(b, d, m, seed, scale):
+    x, omega = _data(seed, b, d, m, scale)
+    got = fm.softmax_features_positive(x, omega)
+    want = ref.softmax_features_positive(x, omega)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 8]),
+    d=st.sampled_from([4, 16]),
+    m=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_relu_features_matches_ref(b, d, m, seed):
+    x, omega = _data(seed, b, d, m)
+    np.testing.assert_allclose(
+        fm.relu_features(x, omega), ref.relu_features(x, omega),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_tile_boundaries_exercised():
+    """Force multi-tile grids and odd tile divisors."""
+    x, omega = _data(0, 48, 12, 192)
+    got = fm.rbf_features(x, omega, block_b=16, block_m=64)
+    want = ref.rbf_features(x, omega)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # prime-ish dims: pick_tile falls back to small divisors
+    x, omega = _data(1, 7, 5, 13)
+    got = fm.rbf_features(x, omega)
+    want = ref.rbf_features(x, omega)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_pick_tile_divides():
+    for n in [1, 2, 7, 12, 128, 130]:
+        for t in [1, 8, 64, 128]:
+            tile = fm.pick_tile(n, t)
+            assert n % tile == 0 and 1 <= tile <= max(1, min(n, t))
+
+
+# ---------------------------------------------------------------------------
+# post-processing kernels (digital half of the analog path)
+# ---------------------------------------------------------------------------
+
+def test_rbf_postprocess_matches_full_map():
+    x, omega = _data(3, 16, 8, 64)
+    u = x @ omega
+    got = fm.rbf_postprocess(u)
+    want = ref.rbf_features(x, omega)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_postprocess_matches_full_map():
+    x, omega = _data(4, 16, 8, 64, scale=0.3)
+    u = x @ omega
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    got = fm.softmax_postprocess(u, sq)
+    want = ref.softmax_features_positive(x, omega)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness: z(x)^T z(y) -> k(x,y) as m grows
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["rbf", "arccos0", "softmax"])
+def test_feature_maps_are_unbiased(kind):
+    key = jax.random.PRNGKey(11)
+    kx, ko = jax.random.split(key)
+    x = 0.4 * jax.random.normal(kx, (10, 12), jnp.float32)
+    omega = sampling.gaussian_omega(ko, 12, 8192)
+    if kind == "rbf":
+        z, k = ref.rbf_features(x, omega), ref.rbf_kernel(x, x)
+    elif kind == "arccos0":
+        z, k = ref.arccos0_features(x, omega), ref.arccos0_kernel(x, x)
+    else:
+        # positive softmax features are exp(Gaussian): heavier-tailed
+        # estimator, so evaluate at smaller input norms + looser bound
+        x = 0.5 * x
+        z, k = ref.softmax_features_positive(x, omega), ref.softmax_kernel(x, x)
+    err = np.linalg.norm(z @ z.T - k) / np.linalg.norm(k)
+    bound = 0.12 if kind == "softmax" else 0.06
+    assert err < bound, f"{kind}: {err}"
+
+
+def test_error_decreases_with_m():
+    """Fig. 2b mechanism: approximation error shrinks as D grows."""
+    key = jax.random.PRNGKey(5)
+    x = 0.5 * jax.random.normal(key, (16, 8), jnp.float32)
+    k = ref.rbf_kernel(x, x)
+    errs = []
+    for m in [16, 64, 256, 1024]:
+        e = []
+        for s in range(5):
+            om = sampling.gaussian_omega(jax.random.fold_in(key, 100 + 7 * s + m), 8, m)
+            z = ref.rbf_features(x, om)
+            e.append(np.linalg.norm(z @ z.T - k) / np.linalg.norm(k))
+        errs.append(np.mean(e))
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+def test_orf_beats_rff_at_small_m():
+    """ORF's variance reduction (Supp. Fig. 20 shape)."""
+    key = jax.random.PRNGKey(9)
+    x = 0.5 * jax.random.normal(key, (24, 16), jnp.float32)
+    k = ref.rbf_kernel(x, x)
+
+    def mean_err(sampler):
+        es = []
+        for s in range(12):
+            om = sampling.sample_omega(sampler, jax.random.fold_in(key, s), 16, 32)
+            z = ref.rbf_features(x, om)
+            es.append(np.linalg.norm(z @ z.T - k) / np.linalg.norm(k))
+        return np.mean(es)
+
+    assert mean_err("orf") < mean_err("rff")
+
+
+# ---------------------------------------------------------------------------
+# linear attention kernel
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    l=st.sampled_from([8, 32, 64]),
+    dh=st.sampled_from([4, 8]),
+    m=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_attention_matches_ref(l, dh, m, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    q = 0.5 * jax.random.normal(kq, (l, dh), jnp.float32)
+    k = 0.5 * jax.random.normal(kk, (l, dh), jnp.float32)
+    v = jax.random.normal(kv, (l, dh), jnp.float32)
+    omega = sampling.gaussian_omega(ko, dh, m)
+    sc = dh ** -0.25
+    qp = ref.softmax_features_positive(q * sc, omega)
+    kp = ref.softmax_features_positive(k * sc, omega)
+    got = pattn.linear_attention(qp, kp, v)
+    want = ref.favor_attention(q, k, v, omega, stabilize=False)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_favor_approximates_exact_attention():
+    """Fig. 3b mechanism: attention-matrix error shrinks with m."""
+    key = jax.random.PRNGKey(3)
+    kq, kk = jax.random.split(key)
+    q = 0.5 * jax.random.normal(kq, (48, 8), jnp.float32)
+    k = 0.5 * jax.random.normal(kk, (48, 8), jnp.float32)
+    exact = ref.exact_attention_matrix(q, k)
+
+    def err(m, s):
+        om = sampling.orf_omega(jax.random.fold_in(key, s * 1000 + m), 8, m)
+        approx = ref.favor_attention_matrix(q, k, om)
+        return np.linalg.norm(approx - exact) / np.linalg.norm(exact)
+
+    e_small = np.mean([err(16, s) for s in range(6)])
+    e_big = np.mean([err(256, s) for s in range(6)])
+    assert e_big < e_small
+
+
+# ---------------------------------------------------------------------------
+# AIMC noise-model kernels
+# ---------------------------------------------------------------------------
+
+def test_quantize_sym_exact_on_grid():
+    s = 0.1
+    x = jnp.array([-12.7, -0.1, 0.0, 0.1, 5.0, 100.0])
+    q = quantize_sym(x, s, bits=8)
+    np.testing.assert_allclose(q, [-12.7, -0.1, 0.0, 0.1, 5.0, 12.7], atol=1e-6)
+
+
+def test_aimc_pallas_matches_quantized_matmul():
+    x, omega = _data(6, 16, 12, 64)
+    w = 0.1 * omega
+    s = jnp.max(jnp.abs(x)) / 127.0
+    noise = jnp.zeros((16, 64), jnp.float32)
+    got = aimc_matmul_pallas(x, w, noise, s)
+    want = quantize_sym(x, s, 8) @ w
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_aimc_pallas_adds_noise_exactly():
+    x, omega = _data(7, 8, 8, 32)
+    w = 0.1 * omega
+    s = jnp.max(jnp.abs(x)) / 127.0
+    noise = 0.01 * jax.random.normal(jax.random.PRNGKey(0), (8, 32), jnp.float32)
+    got = aimc_matmul_pallas(x, w, noise, s)
+    want = quantize_sym(x, s, 8) @ w + noise
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_aimc_matmul_noise_magnitude():
+    """Noisy MVM error should scale with configured sigmas."""
+    key = jax.random.PRNGKey(1)
+    x, omega = _data(8, 64, 16, 128)
+    w = 0.1 * omega
+    exact = x @ w
+    lo = aimc_matmul(x, w, key, AimcConfig(sigma_prog=0.005, sigma_read=0.002))
+    hi = aimc_matmul(x, w, key, AimcConfig(sigma_prog=0.1, sigma_read=0.05))
+    err_lo = np.linalg.norm(lo - exact) / np.linalg.norm(exact)
+    err_hi = np.linalg.norm(hi - exact) / np.linalg.norm(exact)
+    assert err_lo < err_hi
+    assert err_lo < 0.05
+    assert 0.01 < err_hi < 1.0
+
+
+def test_aimc_matmul_zero_noise_is_quantization_only():
+    x, omega = _data(9, 16, 8, 32)
+    w = 0.1 * omega
+    key = jax.random.PRNGKey(2)
+    got = aimc_matmul(x, w, key, AimcConfig(sigma_prog=0.0, sigma_read=0.0))
+    s = jnp.max(jnp.abs(x)) / 127.0
+    want = quantize_sym(x, s, 8) @ w
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_aimc_matmul_is_differentiable():
+    x, omega = _data(10, 4, 8, 16)
+    w = 0.1 * omega
+
+    def loss(w_):
+        y = aimc_matmul(x, w_, jax.random.PRNGKey(0))
+        return jnp.sum(y * y)
+
+    g = jax.grad(loss)(w)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.linalg.norm(np.asarray(g)) > 0

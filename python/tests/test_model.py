@@ -1,0 +1,101 @@
+"""L2 model tests: shapes, variant parity, noise-mode behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import sampling
+from compile.kernels.aimc_noise import AimcConfig
+from compile.model import ModelConfig, forward, init_params, n_params, param_spec
+
+CFG = ModelConfig(vocab=16, seq_len=32, classes=2, m_features=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, CFG)
+    omega = sampling.orf_omega(jax.random.fold_in(key, 1), CFG.d_head, CFG.m_features)
+    tokens = jax.random.randint(jax.random.fold_in(key, 2), (4, CFG.seq_len), 1, CFG.vocab)
+    return params, omega, tokens
+
+
+def test_param_spec_sorted_and_complete():
+    spec = param_spec(CFG)
+    names = list(spec.keys())
+    assert names == sorted(names)
+    assert "embed.tok" in spec and "layer1.ffn.w2" in spec
+    assert spec["embed.tok"] == (CFG.vocab, CFG.d_model)
+
+
+def test_n_params_small():
+    # paper: LRA models are <= 200k trainable parameters
+    assert 10_000 < n_params(CFG) < 200_000
+
+
+def test_forward_shapes(setup):
+    params, omega, tokens = setup
+    logits = forward(params, tokens, omega, CFG)
+    assert logits.shape == (4, CFG.classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_pallas_path_matches_jnp_path(setup):
+    params, omega, tokens = setup
+    a = forward(params, tokens, omega, CFG, use_pallas=False)
+    b = forward(params, tokens, omega, CFG, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-4)
+
+
+def test_hw_attn_close_to_fp32_at_low_noise(setup):
+    params, omega, tokens = setup
+    fp = forward(params, tokens, omega, CFG)
+    hw = forward(params, tokens, omega, CFG, mode="hw_attn", seed=3,
+                 cfg_aimc=AimcConfig(sigma_prog=0.0, sigma_read=0.001))
+    fp, hw = np.asarray(fp), np.asarray(hw)
+    rel = np.linalg.norm(fp - hw) / np.linalg.norm(fp)
+    assert 0 < rel < 0.2
+
+
+def test_hw_full_noisier_than_hw_attn(setup):
+    params, omega, tokens = setup
+    cfg_n = AimcConfig(sigma_prog=0.02, sigma_read=0.01)
+    fp = np.asarray(forward(params, tokens, omega, CFG))
+
+    def dev(mode):
+        outs = [
+            np.asarray(forward(params, tokens, omega, CFG, mode=mode, seed=s,
+                               cfg_aimc=cfg_n))
+            for s in range(5)
+        ]
+        return np.mean([np.linalg.norm(o - fp) for o in outs])
+
+    assert dev("hw_full") > dev("hw_attn") > 0
+
+
+def test_hw_mode_deterministic_given_seed(setup):
+    params, omega, tokens = setup
+    a = forward(params, tokens, omega, CFG, mode="hw_attn", seed=7)
+    b = forward(params, tokens, omega, CFG, mode="hw_attn", seed=7)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = forward(params, tokens, omega, CFG, mode="hw_attn", seed=8)
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+
+
+def test_omega_resampling_changes_logits_boundedly(setup):
+    """Different Omega draws should perturb, not destroy, the outputs
+    (the redraw-robustness mechanism)."""
+    params, omega, tokens = setup
+    base = np.asarray(forward(params, tokens, omega, CFG))
+    om2 = sampling.orf_omega(jax.random.PRNGKey(99), CFG.d_head, CFG.m_features)
+    alt = np.asarray(forward(params, tokens, om2, CFG))
+    assert not np.allclose(base, alt)
+    assert np.all(np.isfinite(alt))
+
+
+def test_silu_activation_variant(setup):
+    params, omega, tokens = setup
+    cfg = ModelConfig(vocab=16, seq_len=32, classes=2, m_features=16, act="silu")
+    logits = forward(params, tokens, omega, cfg)
+    assert np.all(np.isfinite(np.asarray(logits)))

@@ -1,0 +1,70 @@
+"""Sampler properties: ORF orthogonality, SORF structure, truncation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import sampling
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(d=st.sampled_from([4, 8, 16]), m=st.sampled_from([4, 12, 40]),
+       seed=st.integers(0, 2**16))
+def test_shapes(d, m, seed):
+    key = jax.random.PRNGKey(seed)
+    for kind in ["rff", "orf", "sorf"]:
+        om = sampling.sample_omega(kind, key, d, m)
+        assert om.shape == (d, m)
+        assert np.all(np.isfinite(np.asarray(om)))
+
+
+def test_gaussian_truncated_at_3_sigma():
+    om = sampling.gaussian_omega(jax.random.PRNGKey(0), 64, 512)
+    assert float(jnp.max(jnp.abs(om))) <= 3.0 + 1e-5
+
+
+def test_orf_block_directions_orthogonal():
+    d = 16
+    om = sampling.orf_omega(jax.random.PRNGKey(1), d, d)
+    # normalize columns -> should be exactly orthonormal directions
+    q = om / jnp.linalg.norm(om, axis=0, keepdims=True)
+    gram = np.asarray(q.T @ q)
+    np.testing.assert_allclose(gram, np.eye(d), atol=1e-4)
+
+
+def test_orf_column_norms_chi_distributed():
+    """Column norms should match chi(d): mean ~= sqrt(d - 1/2)."""
+    d = 32
+    om = sampling.orf_omega(jax.random.PRNGKey(2), d, 256)
+    norms = np.linalg.norm(np.asarray(om), axis=0)
+    assert abs(np.mean(norms) - np.sqrt(d - 0.5)) < 0.5
+
+
+def test_sorf_block_orthogonal_pow2():
+    d = 16  # power of two: HD blocks are exactly orthogonal
+    om = sampling.sorf_omega(jax.random.PRNGKey(3), d, d)
+    gram = np.asarray(om.T @ om)
+    np.testing.assert_allclose(gram, d * np.eye(d), atol=1e-3)
+
+
+def test_sorf_marginals_near_gaussian():
+    om = np.asarray(sampling.sorf_omega(jax.random.PRNGKey(4), 32, 512))
+    assert abs(np.mean(om)) < 0.05
+    assert abs(np.std(om) - 1.0) < 0.1
+
+
+def test_poisson_omega_distribution():
+    om = np.asarray(sampling.poisson_omega(jax.random.PRNGKey(5), 16, 256))
+    assert np.all(om >= 0)
+    assert abs(np.mean(om) - 1.0) < 0.1  # lambda = 1
+
+
+def test_fwht_is_hadamard():
+    n = 8
+    h = np.asarray(sampling._fwht(jnp.eye(n)))
+    # rows of the Hadamard matrix are mutually orthogonal with norm sqrt(n)
+    np.testing.assert_allclose(h @ h.T, n * np.eye(n), atol=1e-5)
+    assert set(np.unique(h)) == {-1.0, 1.0}

@@ -1,0 +1,48 @@
+//! Bench: feature maps + Ω samplers (the digital half of the pipeline).
+//! Run: cargo bench --bench bench_features
+
+use imka::features::maps::feature_map;
+use imka::features::sampler::{sample_omega, Sampler, ALL_SAMPLERS};
+use imka::kernels::Kernel;
+use imka::linalg::Mat;
+use imka::util::stats::Summary;
+use imka::util::timer::bench;
+use imka::util::Rng;
+
+fn main() {
+    println!("== feature maps z(x) (batch 256) ==");
+    for (kernel, d, m) in [
+        (Kernel::Rbf, 16usize, 256usize),
+        (Kernel::ArcCos0, 16, 512),
+        (Kernel::Softmax, 32, 128),
+        (Kernel::Rbf, 64, 1024),
+    ] {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(256, d, &mut rng);
+        let omega = Mat::randn(d, m, &mut rng);
+        let times = bench(3, 20, || {
+            std::hint::black_box(feature_map(kernel, &x, &omega));
+        });
+        let s = Summary::from_slice(&times);
+        let ops = 2.0 * 256.0 * d as f64 * m as f64;
+        println!(
+            "{:<10} d={d:<4} m={m:<5} p50 {:>8.3} ms  ({:.2} GFLOP/s projection)",
+            kernel.as_str(),
+            s.p50() * 1e3,
+            ops / s.p50() / 1e9
+        );
+    }
+
+    println!("\n== Ω samplers (d=64) ==");
+    for m in [256usize, 1024, 4096] {
+        for sampler in ALL_SAMPLERS {
+            let times = bench(2, 10, || {
+                let mut rng = Rng::new(7);
+                std::hint::black_box(sample_omega(sampler, 64, m, &mut rng));
+            });
+            let s = Summary::from_slice(&times);
+            println!("{:<5} m={m:<5} p50 {:>8.3} ms", sampler.as_str(), s.p50() * 1e3);
+        }
+    }
+    println!("\n(SORF's FWHT generation should scale best with m — the paper's 'cheaper generation' claim.)");
+}

@@ -1,0 +1,55 @@
+//! Bench: one Fig. 2a cell end-to-end (dataset -> Ω -> FP32 ridge ->
+//! analog evaluation), the unit of the paper's biggest experiment grid.
+//! Run: cargo bench --bench bench_fig2
+
+use imka::cli::Args;
+use imka::config::ChipConfig;
+use imka::datasets::{load_uci, UciName};
+use imka::experiments::fig2::{error_curve, fig2a_cell};
+use imka::features::sampler::Sampler;
+use imka::kernels::Kernel;
+use imka::util::stats::Summary;
+use imka::util::timer::bench;
+
+fn main() {
+    let chip = ChipConfig::default();
+    println!("== fig2a cell (train ridge + dual-path eval) ==");
+    for name in [UciName::Skin, UciName::Magic04, UciName::Letter] {
+        let ds = load_uci(name, 0, 0.02);
+        let times = bench(1, 5, || {
+            std::hint::black_box(
+                fig2a_cell(&ds, Kernel::Rbf, Sampler::Orf, 0, 5, &chip).unwrap(),
+            );
+        });
+        let s = Summary::from_slice(&times);
+        println!(
+            "{:<8} (d={:>2}, {} train): p50 {:>8.1} ms",
+            name.as_str(),
+            ds.d(),
+            ds.train_x.rows,
+            s.p50() * 1e3
+        );
+    }
+
+    println!("\n== fig2b error curve (6 ratios, both paths) ==");
+    let ds = load_uci(UciName::CodRna, 0, 0.01);
+    let times = bench(1, 3, || {
+        std::hint::black_box(
+            error_curve(&ds, Kernel::Rbf, Sampler::Orf, &[1, 2, 3, 4, 5, 6], 2, 192, &chip)
+                .unwrap(),
+        );
+    });
+    let s = Summary::from_slice(&times);
+    println!("cod-rna curve: p50 {:.1} ms", s.p50() * 1e3);
+
+    println!("\n== full fig2a run (reduced) ==");
+    let t = std::time::Instant::now();
+    let args = Args::parse(
+        "experiment fig2a --seeds 1 --scale 0.01"
+            .split_whitespace()
+            .map(String::from),
+    )
+    .unwrap();
+    imka::experiments::fig2::run_fig2a(&args).unwrap();
+    println!("full reduced grid: {:.1} s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,56 @@
+//! Bench: kernelized attention — linear (FAVOR+) vs exact scaling in L,
+//! the complexity claim behind Fig. 3 / the Performer.
+//! Run: cargo bench --bench bench_fig3
+
+use imka::features::favor::{
+    exact_attention, favor_attention, positive_features,
+};
+use imka::features::sampler::{sample_omega, Sampler};
+use imka::linalg::Mat;
+use imka::util::stats::Summary;
+use imka::util::timer::bench;
+use imka::util::Rng;
+
+fn main() {
+    let d = 32;
+    let m = 128;
+    println!("== attention scaling in sequence length (d_head={d}, m={m}) ==");
+    println!(
+        "{:>6} {:>16} {:>16} {:>9}",
+        "L", "exact (ms)", "FAVOR+ (ms)", "speedup"
+    );
+    for l in [128usize, 256, 512, 1024, 2048] {
+        let mut rng = Rng::new(0);
+        let mut q = Mat::randn(l, d, &mut rng);
+        q.scale(0.5);
+        let mut k = Mat::randn(l, d, &mut rng);
+        k.scale(0.5);
+        let v = Mat::randn(l, d, &mut rng);
+        let omega = sample_omega(Sampler::Orf, d, m, &mut rng);
+
+        let te = Summary::from_slice(&bench(2, 8, || {
+            std::hint::black_box(exact_attention(&q, &k, &v));
+        }));
+        let tf = Summary::from_slice(&bench(2, 8, || {
+            std::hint::black_box(favor_attention(&q, &k, &v, &omega));
+        }));
+        println!(
+            "{l:>6} {:>16.3} {:>16.3} {:>8.2}x",
+            te.p50() * 1e3,
+            tf.p50() * 1e3,
+            te.p50() / tf.p50()
+        );
+    }
+    println!("(expected: exact grows ~O(L^2), FAVOR+ ~O(L) -> speedup grows with L)");
+
+    println!("\n== feature mapping cost inside attention (the on-chip portion) ==");
+    let l = 1024;
+    let mut rng = Rng::new(1);
+    let mut q = Mat::randn(l, d, &mut rng);
+    q.scale(0.5);
+    let omega = sample_omega(Sampler::Orf, d, m, &mut rng);
+    let t = Summary::from_slice(&bench(2, 10, || {
+        std::hint::black_box(positive_features(&q, &omega));
+    }));
+    println!("positive_features L={l}: p50 {:.3} ms (this is what moves to the crossbar)", t.p50() * 1e3);
+}

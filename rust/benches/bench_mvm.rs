@@ -1,0 +1,67 @@
+//! Bench: the analog-MVM hot path (chip sim vs emulator vs pure matmul).
+//!
+//! The pure matmul is the roofline for the simulator — the noise model is
+//! the only extra work the analog paths do. Run: cargo bench --bench bench_mvm
+
+use imka::aimc::{Chip, Emulator};
+use imka::config::ChipConfig;
+use imka::linalg::{matmul, Mat};
+use imka::util::stats::Summary;
+use imka::util::timer::bench;
+use imka::util::Rng;
+
+fn report(label: &str, times: &[f64], ops: f64) {
+    let s = Summary::from_slice(times);
+    println!(
+        "{label:<38} p50 {:>9.3} ms   p95 {:>9.3} ms   {:>8.2} GFLOP/s",
+        s.p50() * 1e3,
+        s.p95() * 1e3,
+        ops / s.p50() / 1e9
+    );
+}
+
+fn main() {
+    println!("== analog MVM hot path (batch x d @ d x m) ==");
+    for (batch, d, m) in [(64usize, 64usize, 256usize), (64, 256, 256), (256, 256, 1024)] {
+        let ops = 2.0 * batch as f64 * d as f64 * m as f64;
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(d, m, &mut rng);
+        let x = Mat::randn(batch, d, &mut rng);
+        let x_cal = Mat::randn(64, d, &mut rng);
+        println!("\n[{batch} x {d} @ {d} x {m}]  ({:.1} MFLOP)", ops / 1e6);
+
+        let mut out = Mat::zeros(batch, m);
+        let times = bench(3, 15, || {
+            imka::linalg::matmul_into(&x, &w, &mut out);
+            std::hint::black_box(&out);
+        });
+        report("pure matmul (roofline)", &times, ops);
+
+        let mut em = Emulator::program(&w, &ChipConfig::default(), &mut rng);
+        let times = bench(3, 15, || {
+            std::hint::black_box(em.forward(&x));
+        });
+        report("emulator (quant + read noise)", &times, ops);
+
+        let mut chip = Chip::new(ChipConfig::default(), 1);
+        let h = chip.program_matrix("w", &w, &x_cal, 1).unwrap();
+        let times = bench(3, 15, || {
+            std::hint::black_box(chip.matmul(&h, &x).unwrap());
+        });
+        report("device-level chip (DAC/ADC path)", &times, ops);
+    }
+
+    println!("\n== program-and-verify (GDP) cost ==");
+    for (d, m) in [(64usize, 256usize), (256, 256)] {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(d, m, &mut rng);
+        let x_cal = Mat::randn(64, d, &mut rng);
+        let times = bench(1, 5, || {
+            let mut chip = Chip::new(ChipConfig::default(), 3);
+            std::hint::black_box(chip.program_matrix("w", &w, &x_cal, 1).unwrap());
+        });
+        let s = Summary::from_slice(&times);
+        println!("program {d}x{m}: p50 {:.1} ms", s.p50() * 1e3);
+    }
+    let _ = matmul; // silence potential unused warnings in cfg variations
+}

@@ -1,0 +1,83 @@
+//! Bench: PJRT runtime — artifact compile time and execution latency of
+//! the XLA (Pallas-lowered) feature maps vs the native Rust path; plus
+//! coordinator end-to-end overhead. Run: cargo bench --bench bench_runtime
+
+use imka::config::Config;
+use imka::coordinator::{Engine, PathKind, RequestBody};
+use imka::features::maps::feature_map;
+use imka::kernels::Kernel;
+use imka::linalg::Mat;
+use imka::runtime::{Input, Registry};
+use imka::util::stats::Summary;
+use imka::util::timer::bench;
+use imka::util::{Rng, Timer};
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let registry = Registry::open(&dir).unwrap();
+
+    println!("== artifact compile times ==");
+    for name in [
+        "feature_rbf_b64_d16_m256",
+        "performer_pattern_fp32_b32",
+        "performer_pattern_hw_full_b32",
+    ] {
+        let t = Timer::start();
+        let _ = registry.load(name).unwrap();
+        println!("compile {name}: {:.0} ms", t.elapsed_ms());
+    }
+
+    println!("\n== XLA vs native feature map (b=64, d=16, m=256) ==");
+    let mut rng = Rng::new(0);
+    let x = Mat::randn(64, 16, &mut rng);
+    let omega = Mat::randn(16, 256, &mut rng);
+    let exe = registry.load("feature_rbf_b64_d16_m256").unwrap();
+    let t_xla = Summary::from_slice(&bench(5, 30, || {
+        std::hint::black_box(
+            exe.run_mat(&[Input::from_mat(&x), Input::from_mat(&omega)], 64, 512)
+                .unwrap(),
+        );
+    }));
+    let t_native = Summary::from_slice(&bench(5, 30, || {
+        std::hint::black_box(feature_map(Kernel::Rbf, &x, &omega));
+    }));
+    println!("XLA artifact : p50 {:.3} ms", t_xla.p50() * 1e3);
+    println!("native rust  : p50 {:.3} ms", t_native.p50() * 1e3);
+
+    println!("\n== coordinator end-to-end overhead (digital feature lane) ==");
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.serve.max_wait_us = 200;
+    let engine = Engine::start(&cfg).unwrap();
+    let sub = engine.submitter();
+    // warm
+    for _ in 0..4 {
+        let _ = sub
+            .call(RequestBody::Features {
+                kernel: Kernel::Rbf,
+                path: PathKind::Digital,
+                x: x.row(0).to_vec(),
+            })
+            .unwrap();
+    }
+    let t_e2e = Summary::from_slice(&bench(2, 30, || {
+        let r = sub
+            .call(RequestBody::Features {
+                kernel: Kernel::Rbf,
+                path: PathKind::Digital,
+                x: x.row(0).to_vec(),
+            })
+            .unwrap();
+        std::hint::black_box(r.result.unwrap());
+    }));
+    println!(
+        "single request through batcher+worker+XLA: p50 {:.3} ms (vs raw XLA exec {:.3} ms)",
+        t_e2e.p50() * 1e3,
+        t_xla.p50() * 1e3
+    );
+    engine.shutdown();
+}

@@ -1,0 +1,39 @@
+//! Bench: Supp. Table VIII — the analytical device comparison plus the
+//! *measured* simulator wall-clock for the same workloads (the simulator
+//! is CPU software; the analytical column is what the paper reports).
+//! Run: cargo bench --bench bench_supp8
+
+use imka::aimc::Emulator;
+use imka::config::ChipConfig;
+use imka::energy::{latency_energy, mapping_ops, ALL_DEVICES};
+use imka::linalg::Mat;
+use imka::util::stats::Summary;
+use imka::util::timer::bench;
+use imka::util::Rng;
+
+fn main() {
+    println!("== Supp. Table VIII (analytical, paper method) ==");
+    for (l, d, m) in [(1024usize, 512usize, 1024usize), (1024, 1024, 2048)] {
+        let ops = mapping_ops(l, d, m);
+        println!("\nworkload L={l} d={d} m={m} ({:.2} GFLOP)", ops / 1e9);
+        for dev in ALL_DEVICES {
+            let (lat, en) = latency_energy(ops, &dev.spec());
+            println!("  {:<9} latency {:>8.4} ms   energy {:>9.4} mJ", dev.spec().name, lat, en);
+        }
+        // measured: the emulator executing the same mapping on this host
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(d, m, &mut rng);
+        let x = Mat::randn(l, d, &mut rng);
+        let mut em = Emulator::program(&w, &ChipConfig::default(), &mut rng);
+        let times = bench(1, 5, || {
+            std::hint::black_box(em.forward(&x));
+        });
+        let s = Summary::from_slice(&times);
+        println!(
+            "  {:<9} latency {:>8.4} ms   (simulator wall-clock on this host, {:.1} GFLOP/s)",
+            "sim(host)",
+            s.p50() * 1e3,
+            ops / s.p50() / 1e9
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: Performer serving throughput per deployment mode (the Table I
+//! workload through the runtime). Run: cargo bench --bench bench_table1
+
+use imka::config::ChipConfig;
+use imka::experiments::table1::{eval_variant, Variant};
+use imka::runtime::{ModelBundle, Registry};
+use imka::util::Timer;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let registry = Registry::open(&dir).unwrap();
+    let bundle = ModelBundle::load(&dir, "weights_pattern.npz", "testset_pattern.npz").unwrap();
+    let chip = ChipConfig::default();
+    let n = 128usize;
+
+    println!("== performer inference through PJRT artifacts ({n} samples, batch 32) ==");
+    for variant in [Variant::Fp32, Variant::HwAttn, Variant::HwFull] {
+        // warm (compile)
+        let _ = eval_variant(&registry, &bundle, "pattern", variant, 32, 1, &chip).unwrap();
+        let t = Timer::start();
+        let acc = eval_variant(&registry, &bundle, "pattern", variant, n, 1, &chip).unwrap();
+        let secs = t.elapsed_secs();
+        println!(
+            "{variant:?}: {:.1} samples/s (acc {:.3}, {:.1} ms/batch-of-32)",
+            n as f64 / secs,
+            acc.mean(),
+            secs / (n as f64 / 32.0) * 1e3
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Post-compilation calibration (paper §Deployment step 3).
+//!
+//! Using a sample of training inputs and the weights destined for a
+//! crossbar, determine:
+//!
+//! - the DAC input scale (max |x| over the calibration set),
+//! - per-column weight normalization (largest |w| per column maps to the
+//!   top conductance, maximizing SNR),
+//! - per-column ADC full-scale current (max column current over the
+//!   calibration set with a safety margin, so reads don't saturate),
+//! - the per-column digital affine correction that undoes the
+//!   normalization after the ADC.
+
+use crate::config::ChipConfig;
+use crate::linalg::{matmul, Mat};
+
+/// Calibration output for one crossbar block.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// DAC scale source: max |x| over calibration inputs
+    pub input_max_abs: f32,
+    /// per-column weight scale s_j = max |w[:, j]| (w_norm = w / s_j)
+    pub col_scale: Vec<f32>,
+    /// per-column ADC full-scale current (normalized units)
+    pub adc_full_scale: Vec<f32>,
+}
+
+/// Safety margin on the ADC full-scale (the chip picks the maximum
+/// conductance per column such that the ADC never saturates).
+pub const ADC_MARGIN: f32 = 1.2;
+
+/// Calibrate a block for weights `w` (rows x cols) with calibration
+/// inputs `x_cal` (n x rows).
+pub fn calibrate(w: &Mat, x_cal: &Mat, cfg: &ChipConfig) -> Calibration {
+    assert_eq!(x_cal.cols, w.rows, "calibration input dim mismatch");
+    let input_max_abs = x_cal.max_abs().max(1e-9);
+
+    let mut col_scale = vec![0.0f32; w.cols];
+    for j in 0..w.cols {
+        let mut m = 0.0f32;
+        for i in 0..w.rows {
+            m = m.max(w.at(i, j).abs());
+        }
+        col_scale[j] = m.max(1e-9);
+    }
+
+    // quantize calibration inputs on the DAC grid, push through the
+    // normalized weights, take per-column max |current|
+    let qmax = ((1u32 << (cfg.input_bits - 1)) - 1) as f32;
+    let scale = input_max_abs / qmax;
+    let mut xq = x_cal.clone();
+    xq.map_inplace(|v| (v / scale).round().clamp(-qmax, qmax) * scale);
+    let w_norm = normalized_weights(w, &col_scale);
+    let y = matmul(&xq, &w_norm);
+    let mut adc_full_scale = vec![1e-9f32; w.cols];
+    for r in 0..y.rows {
+        for (j, v) in y.row(r).iter().enumerate() {
+            adc_full_scale[j] = adc_full_scale[j].max(v.abs());
+        }
+    }
+    for v in &mut adc_full_scale {
+        *v *= ADC_MARGIN;
+    }
+    Calibration { input_max_abs, col_scale, adc_full_scale }
+}
+
+/// w / col_scale (entries end up in [-1, 1]).
+pub fn normalized_weights(w: &Mat, col_scale: &[f32]) -> Mat {
+    let mut out = w.clone();
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        for (v, &s) in row.iter_mut().zip(col_scale) {
+            *v /= s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn normalized_weights_in_unit_range() {
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(16, 8, &mut rng);
+        let x = Mat::randn(32, 16, &mut rng);
+        let cal = calibrate(&w, &x, &ChipConfig::default());
+        let wn = normalized_weights(&w, &cal.col_scale);
+        assert!(wn.max_abs() <= 1.0 + 1e-5);
+        // each column hits the rail at least once
+        for j in 0..8 {
+            let m = (0..16).map(|i| wn.at(i, j).abs()).fold(0.0f32, f32::max);
+            assert!((m - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn adc_full_scale_covers_calibration_currents() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(12, 5, &mut rng);
+        let x = Mat::randn(64, 12, &mut rng);
+        let cfg = ChipConfig::default();
+        let cal = calibrate(&w, &x, &cfg);
+        let wn = normalized_weights(&w, &cal.col_scale);
+        let y = matmul(&x, &wn);
+        for r in 0..y.rows {
+            for (j, v) in y.row(r).iter().enumerate() {
+                // margin means calibration currents sit below full scale
+                assert!(v.abs() <= cal.adc_full_scale[j] + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn input_max_abs_tracks_data() {
+        let x = Mat::from_vec(2, 2, vec![0.5, -3.0, 1.0, 2.0]);
+        let w = Mat::from_vec(2, 1, vec![1.0, 1.0]);
+        let cal = calibrate(&w, &x, &ChipConfig::default());
+        assert!((cal.input_max_abs - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,332 @@
+//! The full chip: 64 cores, matrix placement, replication, and the analog
+//! matmul entry point the coordinator routes requests to.
+//!
+//! Placement: a weight matrix W (d x m) is tiled into row blocks of <= 256
+//! (input lines) and column blocks of <= 256 (output lines). Each tile is
+//! calibrated (DESIGN step 3), programmed with GDP, and assigned one core.
+//! Partial results of row blocks are summed digitally; column blocks are
+//! concatenated. `replication > 1` programs independent copies of the
+//! whole placement on spare cores and round-robins reads across them —
+//! the paper's throughput-scaling strategy ("one can simply replicate the
+//! mapping matrix across different cores").
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::calibration::{calibrate, normalized_weights};
+use super::core::Core;
+use super::programming::{program_gdp, ProgramStats};
+use crate::config::ChipConfig;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// One tile of a placed matrix.
+struct Tile {
+    core: Core,
+    row0: usize,
+    row1: usize,
+    col0: usize,
+    col1: usize,
+}
+
+/// A placed (possibly replicated) matrix.
+struct Placement {
+    rows: usize,
+    cols: usize,
+    /// replicas[r] = tiles of copy r
+    replicas: Vec<Vec<Tile>>,
+    next_replica: AtomicUsize,
+    pub stats: Vec<ProgramStats>,
+}
+
+/// Handle returned by [`Chip::program_matrix`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MatrixHandle(pub String);
+
+/// Simulated HERMES-class chip.
+pub struct Chip {
+    pub cfg: ChipConfig,
+    placements: BTreeMap<String, Placement>,
+    cores_used: usize,
+    rng: Rng,
+}
+
+impl Chip {
+    pub fn new(cfg: ChipConfig, seed: u64) -> Chip {
+        Chip { cfg, placements: BTreeMap::new(), cores_used: 0, rng: Rng::new(seed) }
+    }
+
+    /// Cores still unprogrammed.
+    pub fn cores_free(&self) -> usize {
+        self.cfg.cores - self.cores_used
+    }
+
+    pub fn cores_used(&self) -> usize {
+        self.cores_used
+    }
+
+    /// Tiles (cores) needed for one copy of a d x m matrix.
+    pub fn tiles_needed(&self, d: usize, m: usize) -> usize {
+        d.div_ceil(self.cfg.rows) * m.div_ceil(self.cfg.cols)
+    }
+
+    /// Program `w` (d x m) under `name`, calibrating with `x_cal`
+    /// (n x d sample of real inputs), creating `replication` copies.
+    pub fn program_matrix(
+        &mut self,
+        name: &str,
+        w: &Mat,
+        x_cal: &Mat,
+        replication: usize,
+    ) -> Result<MatrixHandle> {
+        if self.placements.contains_key(name) {
+            return Err(Error::Chip(format!("matrix '{name}' already programmed")));
+        }
+        if x_cal.cols != w.rows {
+            return Err(Error::Shape(format!(
+                "calibration inputs are {}-d but matrix has {} rows",
+                x_cal.cols, w.rows
+            )));
+        }
+        let replication = replication.max(1);
+        let need = self.tiles_needed(w.rows, w.cols) * replication;
+        if need > self.cores_free() {
+            return Err(Error::Chip(format!(
+                "not enough cores: need {need}, free {}",
+                self.cores_free()
+            )));
+        }
+
+        let mut replicas = Vec::with_capacity(replication);
+        let mut stats = Vec::new();
+        for rep in 0..replication {
+            let mut tiles = Vec::new();
+            let mut row0 = 0;
+            while row0 < w.rows {
+                let row1 = (row0 + self.cfg.rows).min(w.rows);
+                // slice calibration inputs to this row block
+                let x_block = slice_cols(x_cal, row0, row1);
+                let mut col0 = 0;
+                while col0 < w.cols {
+                    let col1 = (col0 + self.cfg.cols).min(w.cols);
+                    let w_block = slice_block(w, row0, row1, col0, col1);
+                    let cal = calibrate(&w_block, &x_block, &self.cfg);
+                    let w_norm = normalized_weights(&w_block, &cal.col_scale);
+                    let mut rng = self.rng.fork((rep * 1000 + row0 * 7 + col0) as u64);
+                    let (xbar, st) =
+                        program_gdp(&w_norm, cal.col_scale.clone(), &self.cfg, &mut rng);
+                    stats.push(st);
+                    let core = Core::from_parts(xbar, &cal, &self.cfg, &mut rng);
+                    tiles.push(Tile { core, row0, row1, col0, col1 });
+                    self.cores_used += 1;
+                    col0 = col1;
+                }
+                row0 = row1;
+            }
+            replicas.push(tiles);
+        }
+        self.placements.insert(
+            name.to_string(),
+            Placement {
+                rows: w.rows,
+                cols: w.cols,
+                replicas,
+                next_replica: AtomicUsize::new(0),
+                stats,
+            },
+        );
+        Ok(MatrixHandle(name.to_string()))
+    }
+
+    /// Analog MVM: x (n x d) @ W (d x m) on the programmed tiles.
+    pub fn matmul(&mut self, handle: &MatrixHandle, x: &Mat) -> Result<Mat> {
+        let p = self
+            .placements
+            .get_mut(&handle.0)
+            .ok_or_else(|| Error::Chip(format!("unknown matrix '{}'", handle.0)))?;
+        if x.cols != p.rows {
+            return Err(Error::Shape(format!(
+                "input is {}-d, matrix '{}' has {} rows",
+                x.cols, handle.0, p.rows
+            )));
+        }
+        let r = p.next_replica.fetch_add(1, Ordering::Relaxed) % p.replicas.len();
+        let cols = p.cols;
+        let tiles = &mut p.replicas[r];
+        let mut out = Mat::zeros(x.rows, cols);
+        for tile in tiles.iter_mut() {
+            let x_block = slice_cols(x, tile.row0, tile.row1);
+            let y = tile.core.forward_batch(&x_block);
+            // digital accumulation across row blocks
+            for i in 0..out.rows {
+                let dst = &mut out.row_mut(i)[tile.col0..tile.col1];
+                for (d, s) in dst.iter_mut().zip(y.row(i)) {
+                    *d += *s;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Programming statistics of a placed matrix.
+    pub fn program_stats(&self, handle: &MatrixHandle) -> Option<&[ProgramStats]> {
+        self.placements.get(&handle.0).map(|p| p.stats.as_slice())
+    }
+
+    /// Number of replicas a matrix was programmed with.
+    pub fn replication(&self, handle: &MatrixHandle) -> usize {
+        self.placements
+            .get(&handle.0)
+            .map(|p| p.replicas.len())
+            .unwrap_or(0)
+    }
+
+    /// Chip-level utilization in [0,1].
+    pub fn utilization(&self) -> f64 {
+        self.cores_used as f64 / self.cfg.cores as f64
+    }
+}
+
+fn slice_cols(x: &Mat, c0: usize, c1: usize) -> Mat {
+    let mut out = Mat::zeros(x.rows, c1 - c0);
+    for i in 0..x.rows {
+        out.row_mut(i).copy_from_slice(&x.row(i)[c0..c1]);
+    }
+    out
+}
+
+fn slice_block(w: &Mat, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+    let mut out = Mat::zeros(r1 - r0, c1 - c0);
+    for i in r0..r1 {
+        out.row_mut(i - r0).copy_from_slice(&w.row(i)[c0..c1]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_fro_error;
+
+    fn chip(cfg: ChipConfig) -> Chip {
+        Chip::new(cfg, 42)
+    }
+
+    #[test]
+    fn program_and_matmul_small() {
+        let mut c = chip(ChipConfig::default());
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(16, 32, &mut rng);
+        let x = Mat::randn(24, 16, &mut rng);
+        let h = c.program_matrix("omega", &w, &x, 1).unwrap();
+        assert_eq!(c.cores_used(), 1);
+        let y = c.matmul(&h, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &w);
+        let rel = rel_fro_error(&y.data, &want.data);
+        assert!(rel > 0.001 && rel < 0.12, "rel {rel}");
+    }
+
+    #[test]
+    fn multi_tile_row_and_col_split() {
+        let mut cfg = ChipConfig::default();
+        cfg.rows = 8;
+        cfg.cols = 8;
+        cfg.cores = 16;
+        let mut c = chip(cfg);
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(20, 12, &mut rng); // 3 row blocks x 2 col blocks
+        let x = Mat::randn(16, 20, &mut rng);
+        assert_eq!(c.tiles_needed(20, 12), 6);
+        let h = c.program_matrix("w", &w, &x, 1).unwrap();
+        assert_eq!(c.cores_used(), 6);
+        let y = c.matmul(&h, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &w);
+        let rel = rel_fro_error(&y.data, &want.data);
+        assert!(rel < 0.15, "rel {rel}");
+    }
+
+    #[test]
+    fn ideal_chip_multi_tile_is_tight() {
+        let mut cfg = ChipConfig::ideal();
+        cfg.rows = 16;
+        cfg.cols = 16;
+        let mut c = chip(cfg);
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(32, 24, &mut rng);
+        let x = Mat::randn(8, 32, &mut rng);
+        let h = c.program_matrix("w", &w, &x, 1).unwrap();
+        let y = c.matmul(&h, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &w);
+        let rel = rel_fro_error(&y.data, &want.data);
+        assert!(rel < 0.03, "quantization-only error, got {rel}");
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut cfg = ChipConfig::default();
+        cfg.cores = 2;
+        cfg.rows = 8;
+        cfg.cols = 8;
+        let mut c = chip(cfg);
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(32, 8, &mut rng); // needs 4 tiles
+        let x = Mat::randn(4, 32, &mut rng);
+        let err = c.program_matrix("too-big", &w, &x, 1).unwrap_err();
+        assert!(err.to_string().contains("not enough cores"));
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut c = chip(ChipConfig::default());
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(8, 8, &mut rng);
+        let x = Mat::randn(4, 8, &mut rng);
+        c.program_matrix("w", &w, &x, 1).unwrap();
+        assert!(c.program_matrix("w", &w, &x, 1).is_err());
+    }
+
+    #[test]
+    fn replication_round_robins_and_uses_cores() {
+        let mut c = chip(ChipConfig::default());
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(16, 16, &mut rng);
+        let x = Mat::randn(4, 16, &mut rng);
+        let h = c.program_matrix("w", &w, &x, 3).unwrap();
+        assert_eq!(c.cores_used(), 3);
+        assert_eq!(c.replication(&h), 3);
+        // three consecutive reads hit three different replicas (different
+        // programming noise -> different outputs)
+        let y1 = c.matmul(&h, &x).unwrap();
+        let y2 = c.matmul(&h, &x).unwrap();
+        let y3 = c.matmul(&h, &x).unwrap();
+        assert_ne!(y1.data, y2.data);
+        assert_ne!(y2.data, y3.data);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let mut c = chip(ChipConfig::default());
+        let mut rng = Rng::new(6);
+        let w = Mat::randn(8, 8, &mut rng);
+        let x = Mat::randn(4, 8, &mut rng);
+        let h = c.program_matrix("w", &w, &x, 1).unwrap();
+        let bad = Mat::randn(4, 9, &mut rng);
+        assert!(c.matmul(&h, &bad).is_err());
+        assert!(c
+            .matmul(&MatrixHandle("missing".into()), &x)
+            .is_err());
+    }
+
+    #[test]
+    fn gdp_stats_recorded() {
+        let mut c = chip(ChipConfig::default());
+        let mut rng = Rng::new(7);
+        let w = Mat::randn(16, 8, &mut rng);
+        let x = Mat::randn(8, 16, &mut rng);
+        let h = c.program_matrix("w", &w, &x, 1).unwrap();
+        let stats = c.program_stats(&h).unwrap();
+        assert_eq!(stats.len(), 1);
+        assert!(stats[0].rms_final <= stats[0].rms_initial);
+    }
+}

@@ -1,0 +1,128 @@
+//! Data converters at the crossbar boundary.
+//!
+//! - **DAC** (per row): INT8 input quantization with a fixed per-crossbar
+//!   symmetric scale (the chip encodes the digital value as a pulse width,
+//!   so the quantization grid is exactly the INT8 lattice).
+//! - **ADC** (per column): current-controlled-oscillator counts — modelled
+//!   as saturation at a calibrated full-scale current followed by uniform
+//!   quantization to `adc_bits`, then a per-column digital affine
+//!   correction (the chip's local digital processing unit).
+
+use crate::config::ChipConfig;
+
+/// INT8-style symmetric quantizer (DAC model).
+#[derive(Clone, Copy, Debug)]
+pub struct Dac {
+    pub scale: f32,
+    pub qmax: f32,
+}
+
+impl Dac {
+    /// Build from the calibration-set max-abs input value.
+    pub fn from_max_abs(max_abs: f32, bits: u32) -> Dac {
+        let qmax = ((1u32 << (bits - 1)) - 1) as f32;
+        Dac { scale: (max_abs.max(1e-9)) / qmax, qmax }
+    }
+
+    /// Quantize one value onto the DAC grid (returns the dequantized f32,
+    /// i.e. the analog pulse magnitude actually applied).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        (x / self.scale).round().clamp(-self.qmax, self.qmax) * self.scale
+    }
+
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+}
+
+/// CCO ADC with saturation + per-column affine correction.
+#[derive(Clone, Debug)]
+pub struct Adc {
+    /// full-scale current per column (saturation point)
+    pub full_scale: f32,
+    /// quantization step = full_scale / (2^(bits-1) - 1)
+    pub step: f32,
+    /// per-column affine correction (scale, offset) applied digitally
+    pub corr_scale: f32,
+    pub corr_offset: f32,
+}
+
+impl Adc {
+    pub fn new(full_scale: f32, cfg: &ChipConfig) -> Adc {
+        let qmax = ((1u32 << (cfg.adc_bits - 1)) - 1) as f32;
+        Adc {
+            full_scale: full_scale.max(1e-9),
+            step: full_scale.max(1e-9) / qmax,
+            corr_scale: 1.0,
+            corr_offset: 0.0,
+        }
+    }
+
+    /// Convert a column current to the corrected digital value.
+    #[inline]
+    pub fn convert(&self, current: f32) -> f32 {
+        let clipped = current.clamp(-self.full_scale, self.full_scale);
+        let counts = (clipped / self.step).round();
+        counts * self.step * self.corr_scale + self.corr_offset
+    }
+
+    /// Whether a current would saturate this ADC.
+    #[inline]
+    pub fn saturates(&self, current: f32) -> bool {
+        current.abs() > self.full_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dac_grid_and_clamp() {
+        let dac = Dac::from_max_abs(12.7, 8);
+        assert!((dac.scale - 0.1).abs() < 1e-6);
+        assert!((dac.quantize(0.14) - 0.1).abs() < 1e-6);
+        assert!((dac.quantize(1000.0) - 12.7).abs() < 1e-5);
+        assert!((dac.quantize(-1000.0) + 12.7).abs() < 1e-5);
+        assert_eq!(dac.quantize(0.0), 0.0);
+    }
+
+    #[test]
+    fn dac_error_bounded_by_half_step() {
+        let dac = Dac::from_max_abs(1.0, 8);
+        for i in 0..100 {
+            let x = -1.0 + 0.02 * i as f32;
+            assert!((dac.quantize(x) - x).abs() <= dac.scale / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn adc_saturates_and_quantizes() {
+        let cfg = ChipConfig::default();
+        let adc = Adc::new(10.0, &cfg);
+        assert!((adc.convert(20.0) - 10.0).abs() < adc.step);
+        assert!((adc.convert(-20.0) + 10.0).abs() < adc.step);
+        assert!(adc.saturates(10.5));
+        assert!(!adc.saturates(9.5));
+        // quantization error bounded by half a step inside range
+        for i in 0..50 {
+            let x = -9.0 + 0.37 * i as f32;
+            if x.abs() < 10.0 {
+                assert!((adc.convert(x) - x).abs() <= adc.step / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn adc_affine_correction_applies() {
+        let cfg = ChipConfig::default();
+        let mut adc = Adc::new(10.0, &cfg);
+        adc.corr_scale = 2.0;
+        adc.corr_offset = 1.0;
+        let base = Adc::new(10.0, &cfg).convert(3.0);
+        assert!((adc.convert(3.0) - (base * 2.0 + 1.0)).abs() < 1e-6);
+    }
+}

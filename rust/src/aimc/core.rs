@@ -1,0 +1,122 @@
+//! One AIMC core: 256 DACs → crossbar → 256 ADCs → local digital affine.
+//!
+//! `forward_batch` is the request-path analog MVM: quantize inputs on the
+//! DAC grid, accumulate column currents on the crossbar (with read noise),
+//! convert through the saturating ADCs, then apply the per-column affine
+//! correction that folds the calibration's weight de-normalization back in.
+
+use super::calibration::Calibration;
+use super::converters::{Adc, Dac};
+use super::crossbar::Crossbar;
+use crate::config::ChipConfig;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// A programmed core (crossbar + converters + correction).
+pub struct Core {
+    pub xbar: Crossbar,
+    pub dac: Dac,
+    pub adcs: Vec<Adc>,
+    /// RNG stream for this core's read noise
+    rng: Rng,
+}
+
+impl Core {
+    /// Program `w_norm` (normalized weights) using `cal` (one-shot write;
+    /// the chip-level path programs with GDP and uses [`Core::from_parts`]).
+    pub fn program(w_norm: &Mat, cal: &Calibration, cfg: &ChipConfig, rng: &mut Rng) -> Core {
+        let xbar = Crossbar::program(w_norm, cal.col_scale.clone(), cfg, rng);
+        Core::from_parts(xbar, cal, cfg, rng)
+    }
+
+    /// Assemble a core around an already-programmed crossbar.
+    pub fn from_parts(xbar: Crossbar, cal: &Calibration, cfg: &ChipConfig, rng: &mut Rng) -> Core {
+        let dac = Dac::from_max_abs(cal.input_max_abs, cfg.input_bits);
+        let adcs: Vec<Adc> = (0..xbar.cols)
+            .map(|j| {
+                let mut adc = Adc::new(cal.adc_full_scale[j], cfg);
+                // de-normalize the column weights digitally
+                adc.corr_scale = cal.col_scale[j];
+                adc
+            })
+            .collect();
+        Core { xbar, dac, adcs, rng: rng.fork(0xC0DE) }
+    }
+
+    /// Analog MVM for a batch (n x rows) -> (n x cols), original units.
+    pub fn forward_batch(&mut self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.xbar.rows);
+        let mut xq = x.clone();
+        for i in 0..xq.rows {
+            self.dac.quantize_slice(xq.row_mut(i));
+        }
+        let full_scale: Vec<f32> = self.adcs.iter().map(|a| a.full_scale).collect();
+        let mut y = self.xbar.mvm(&xq, &full_scale, &mut self.rng);
+        for r in 0..y.rows {
+            let row = y.row_mut(r);
+            for (v, adc) in row.iter_mut().zip(&self.adcs) {
+                *v = adc.convert(*v);
+            }
+        }
+        y
+    }
+
+    pub fn rows(&self) -> usize {
+        self.xbar.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.xbar.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aimc::calibration::{calibrate, normalized_weights};
+
+    fn setup(cfg: &ChipConfig, seed: u64) -> (Mat, Mat, Core) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::randn(16, 8, &mut rng);
+        let x = Mat::randn(32, 16, &mut rng);
+        let cal = calibrate(&w, &x, cfg);
+        let wn = normalized_weights(&w, &cal.col_scale);
+        let core = Core::program(&wn, &cal, cfg, &mut rng);
+        (w, x, core)
+    }
+
+    #[test]
+    fn ideal_core_matches_matmul_to_quantization() {
+        let cfg = ChipConfig::ideal();
+        let (w, x, mut core) = setup(&cfg, 0);
+        let y = core.forward_batch(&x);
+        let want = crate::linalg::matmul(&x, &w);
+        let rel = crate::util::stats::rel_fro_error(&y.data, &want.data);
+        // only DAC/ADC quantization remains: ~1% at 8 bits
+        assert!(rel < 0.02, "rel err {rel}");
+        assert!(rel > 0.0);
+    }
+
+    #[test]
+    fn noisy_core_error_in_expected_band() {
+        let cfg = ChipConfig::default();
+        let (w, x, mut core) = setup(&cfg, 1);
+        let y = core.forward_batch(&x);
+        let want = crate::linalg::matmul(&x, &w);
+        let rel = crate::util::stats::rel_fro_error(&y.data, &want.data);
+        // HERMES-class: a few percent MVM error
+        assert!(rel > 0.005 && rel < 0.12, "rel err {rel}");
+    }
+
+    #[test]
+    fn repeated_reads_differ_by_read_noise() {
+        let mut cfg = ChipConfig::ideal();
+        cfg.sigma_read = 0.01;
+        let (_, x, mut core) = setup(&cfg, 2);
+        let y1 = core.forward_batch(&x);
+        let y2 = core.forward_batch(&x);
+        assert_ne!(y1.data, y2.data);
+        let rel = crate::util::stats::rel_fro_error(&y1.data, &y2.data);
+        assert!(rel < 0.1);
+    }
+}

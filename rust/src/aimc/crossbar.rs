@@ -1,0 +1,259 @@
+//! One memristive crossbar array: rows × cols differential PCM unit cells.
+//!
+//! Weights are programmed column-normalized (calibration picks a per-column
+//! scale so the largest weight maps near g_max — paper §Deployment step 3);
+//! the MVM produces column currents from the *drifted* effective
+//! conductances plus aggregated read noise (per-column Gaussian; the
+//! central-limit aggregate of 256 per-device fluctuations).
+
+use super::pcm::mean_drift_factor;
+use super::unitcell::UnitCell;
+use crate::config::ChipConfig;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// A programmed crossbar block.
+#[derive(Clone)]
+pub struct Crossbar {
+    pub rows: usize,
+    pub cols: usize,
+    cells: Vec<UnitCell>,
+    /// per-column weight normalization (digital de-normalization happens
+    /// in the core's affine correction)
+    pub col_scale: Vec<f32>,
+    /// cached effective (drifted, compensated) weights, rows x cols
+    w_eff: Mat,
+    cfg: ChipConfig,
+}
+
+impl Crossbar {
+    /// Program normalized weights `w_norm` (entries in [-1,1], rows x cols)
+    /// with the given per-column scales. One shot (no verify); GDP wraps
+    /// this with iterative refinement.
+    pub fn program(
+        w_norm: &Mat,
+        col_scale: Vec<f32>,
+        cfg: &ChipConfig,
+        rng: &mut Rng,
+    ) -> Crossbar {
+        assert!(w_norm.rows <= cfg.rows && w_norm.cols <= cfg.cols);
+        assert_eq!(col_scale.len(), w_norm.cols);
+        let mut cells = vec![UnitCell::default(); w_norm.rows * w_norm.cols];
+        for i in 0..w_norm.rows {
+            for j in 0..w_norm.cols {
+                cells[i * w_norm.cols + j] =
+                    UnitCell::program(w_norm.at(i, j) as f64, cfg.g_max, cfg, rng);
+            }
+        }
+        let mut xb = Crossbar {
+            rows: w_norm.rows,
+            cols: w_norm.cols,
+            cells,
+            col_scale,
+            w_eff: Mat::zeros(w_norm.rows, w_norm.cols),
+            cfg: cfg.clone(),
+        };
+        xb.refresh_effective();
+        xb
+    }
+
+    /// Re-program a subset of cells toward corrected targets (GDP step).
+    pub fn reprogram(&mut self, w_norm: &Mat, rng: &mut Rng) {
+        assert_eq!((w_norm.rows, w_norm.cols), (self.rows, self.cols));
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                self.cells[i * self.cols + j] =
+                    UnitCell::program(w_norm.at(i, j) as f64, self.cfg.g_max, &self.cfg, rng);
+            }
+        }
+        self.refresh_effective();
+    }
+
+    /// Recompute the cached effective weight matrix at the configured
+    /// drift evaluation time, applying global drift compensation if on.
+    pub fn refresh_effective(&mut self) {
+        let t = self.cfg.drift_t_seconds;
+        let comp = if self.cfg.drift_compensation {
+            1.0 / mean_drift_factor(&self.cfg)
+        } else {
+            1.0
+        };
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let w = self.cells[i * self.cols + j].weight_at(t, self.cfg.g_max);
+                *self.w_eff.at_mut(i, j) = (w * comp) as f32;
+            }
+        }
+    }
+
+    /// Corrective programming pulses (GDP step): move every device toward
+    /// the weight that cancels `lr * err`, with fine-pulse noise
+    /// `fine_frac * σ_P`. Operates on post-programming conductances
+    /// (verify happens right after writing, before drift).
+    /// Cells whose measured error is inside `deadband` are left untouched
+    /// (the verify loop's tolerance band — prevents measurement noise from
+    /// being written back into already-converged devices).
+    pub fn nudge(&mut self, err: &Mat, lr: f64, fine_frac: f64, deadband: f64, rng: &mut Rng) {
+        assert_eq!((err.rows, err.cols), (self.rows, self.cols));
+        let g_scale = self.cfg.g_max;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if (err.at(i, j) as f64).abs() <= deadband {
+                    continue;
+                }
+                let cell = &mut self.cells[i * self.cols + j];
+                let cur = (cell.plus.g_prog - cell.minus.g_prog) / g_scale;
+                let desired = (cur - lr * err.at(i, j) as f64).clamp(-1.0, 1.0);
+                let (gp_t, gm_t) = if desired >= 0.0 {
+                    (desired * g_scale, 0.0)
+                } else {
+                    (0.0, -desired * g_scale)
+                };
+                let sp = fine_frac * super::pcm::programming_sigma(gp_t, &self.cfg);
+                let sm = fine_frac * super::pcm::programming_sigma(gm_t, &self.cfg);
+                cell.plus.g_prog = (gp_t + sp * rng.gaussian()).clamp(0.0, g_scale);
+                cell.minus.g_prog = (gm_t + sm * rng.gaussian()).clamp(0.0, g_scale);
+            }
+        }
+        self.refresh_effective();
+    }
+
+    /// Normalized effective weights (for verify reads in GDP). A verify
+    /// read is itself noisy: `read_sigma` adds measurement noise.
+    pub fn read_weights(&self, read_sigma: f64, rng: &mut Rng) -> Mat {
+        let mut m = self.w_eff.clone();
+        if read_sigma > 0.0 {
+            for v in &mut m.data {
+                *v += (read_sigma * rng.gaussian()) as f32;
+            }
+        }
+        m
+    }
+
+    /// Ideal (noise-free wiring) currents for quantized inputs xq
+    /// (batch x rows): currents = xq @ W_eff, in normalized units.
+    /// Read noise is added per column per read, scaled by the column's
+    /// calibrated full-scale current `full_scale[j]`.
+    pub fn mvm(&self, xq: &Mat, full_scale: &[f32], rng: &mut Rng) -> Mat {
+        assert_eq!(xq.cols, self.rows);
+        assert_eq!(full_scale.len(), self.cols);
+        let mut y = crate::linalg::matmul(xq, &self.w_eff);
+        if self.cfg.sigma_read > 0.0 {
+            let s = self.cfg.sigma_read as f32;
+            let mut noise = vec![0.0f32; y.cols];
+            for r in 0..y.rows {
+                rng.fill_gaussian(&mut noise);
+                let row = y.row_mut(r);
+                for ((v, &fs), &nz) in row.iter_mut().zip(full_scale).zip(&noise) {
+                    *v += s * fs * nz;
+                }
+            }
+        }
+        y
+    }
+
+    /// Effective weights (testing / emulated mode).
+    pub fn effective(&self) -> &Mat {
+        &self.w_eff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(cfg: &ChipConfig, seed: u64) -> (Mat, Crossbar) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::from_fn(8, 6, |i, j| ((i * 6 + j) as f32 / 48.0) * 2.0 - 1.0);
+        let xb = Crossbar::program(&w, vec![1.0; 6], cfg, &mut rng);
+        (w, xb)
+    }
+
+    #[test]
+    fn ideal_program_is_exact() {
+        let cfg = ChipConfig::ideal();
+        let (w, xb) = small(&cfg, 0);
+        for (a, b) in xb.effective().data.iter().zip(w.data.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn noisy_program_is_close() {
+        let cfg = ChipConfig::default();
+        let (w, xb) = small(&cfg, 1);
+        let err: f32 = xb
+            .effective()
+            .data
+            .iter()
+            .zip(w.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / w.data.len() as f32;
+        assert!(err > 0.0 && err < 0.15, "mean |err| = {err}");
+    }
+
+    #[test]
+    fn mvm_matches_effective_weights_when_noiseless() {
+        let mut cfg = ChipConfig::default();
+        cfg.sigma_read = 0.0;
+        let (_, xb) = small(&cfg, 2);
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(4, 8, &mut rng);
+        let y = xb.mvm(&x, &vec![1.0; 6], &mut rng);
+        let want = crate::linalg::matmul(&x, xb.effective());
+        for (a, b) in y.data.iter().zip(want.data.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn read_noise_scales_with_full_scale() {
+        let mut cfg = ChipConfig::ideal();
+        cfg.sigma_read = 0.05;
+        let (_, xb) = small(&cfg, 4);
+        let mut rng = Rng::new(5);
+        let x = Mat::zeros(64, 8);
+        let y_small = xb.mvm(&x, &vec![1.0; 6], &mut rng);
+        let y_big = xb.mvm(&x, &vec![10.0; 6], &mut rng);
+        let s_small = y_small.fro_norm();
+        let s_big = y_big.fro_norm();
+        assert!(s_big > 5.0 * s_small);
+    }
+
+    #[test]
+    fn drift_compensation_keeps_mean_weight() {
+        let mut cfg = ChipConfig::default();
+        cfg.sigma_prog = 0.0;
+        cfg.sigma_read = 0.0;
+        cfg.drift_nu_std = 0.0; // all devices drift identically
+        cfg.drift_compensation = true;
+        let (w, xb) = small(&cfg, 6);
+        for (a, b) in xb.effective().data.iter().zip(w.data.iter()) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "compensated drift should restore weights: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn uncompensated_drift_shrinks_weights() {
+        let mut cfg = ChipConfig::default();
+        cfg.sigma_prog = 0.0;
+        cfg.sigma_read = 0.0;
+        cfg.drift_nu_std = 0.0;
+        cfg.drift_compensation = false;
+        let (w, xb) = small(&cfg, 7);
+        let ratio: f64 = xb
+            .effective()
+            .data
+            .iter()
+            .zip(w.data.iter())
+            .filter(|(_, b)| b.abs() > 0.1)
+            .map(|(a, b)| (a / b) as f64)
+            .sum::<f64>()
+            / w.data.iter().filter(|b| b.abs() > 0.1).count() as f64;
+        assert!(ratio < 0.95, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Fast "emulated mode" (the paper's software twin of the chip): a
+//! vectorized statistical noise model used by the large experiment sweeps,
+//! exactly mirroring `python/compile/kernels/aimc_noise.py::aimc_matmul`
+//! so the two layers stay pinned together by the parity test
+//! (`rust/tests/parity.rs` + `python/tests/test_kernels.py`).
+//!
+//! Model: `y = Q8(x) @ (w + σ_prog·max|w|·N) + σ_read·max|y|·N`.
+
+use crate::config::ChipConfig;
+use crate::linalg::{matmul, Mat};
+use crate::util::Rng;
+
+/// Emulated analog matrix: programming noise baked at construction,
+/// quantization + read noise per call.
+pub struct Emulator {
+    /// noisy programmed weights
+    pub w_hat: Mat,
+    /// exact weights (for error reporting)
+    w_true: Mat,
+    cfg: ChipConfig,
+    /// fixed DAC scale; None = per-call max|x|/qmax (python-ref behaviour)
+    pub in_scale: Option<f32>,
+    rng: Rng,
+    /// scratch for bulk read-noise generation (no per-call alloc)
+    noise_buf: Vec<f32>,
+}
+
+impl Emulator {
+    /// "Program" the matrix: bake programming error into `w_hat`.
+    pub fn program(w: &Mat, cfg: &ChipConfig, rng: &mut Rng) -> Emulator {
+        let mut w_hat = w.clone();
+        let sigma = cfg.sigma_prog as f32 * w.max_abs();
+        if sigma > 0.0 {
+            for v in &mut w_hat.data {
+                *v += sigma * rng.gaussian_f32();
+            }
+        }
+        Emulator {
+            w_hat,
+            w_true: w.clone(),
+            cfg: cfg.clone(),
+            in_scale: None,
+            rng: rng.fork(0xE0),
+            noise_buf: Vec::new(),
+        }
+    }
+
+    /// Noisy analog MVM (batch x d) -> (batch x m).
+    pub fn forward(&mut self, x: &Mat) -> Mat {
+        let qmax = ((1u32 << (self.cfg.input_bits - 1)) - 1) as f32;
+        let s = self
+            .in_scale
+            .unwrap_or_else(|| x.max_abs().max(1e-9) / qmax);
+        let mut xq = x.clone();
+        xq.map_inplace(|v| (v / s).round().clamp(-qmax, qmax) * s);
+        let mut y = matmul(&xq, &self.w_hat);
+        if self.cfg.sigma_read > 0.0 {
+            let sigma = self.cfg.sigma_read as f32 * y.max_abs().max(1e-9);
+            // bulk-generate the read noise, then one fused axpy pass
+            self.noise_buf.resize(y.data.len(), 0.0);
+            self.rng.fill_gaussian(&mut self.noise_buf);
+            for (v, nz) in y.data.iter_mut().zip(&self.noise_buf) {
+                *v += sigma * nz;
+            }
+        }
+        y
+    }
+
+    /// RMS programming error relative to the weight range.
+    pub fn programming_error(&self) -> f64 {
+        let n = self.w_true.data.len().max(1);
+        let rms = (self
+            .w_hat
+            .data
+            .iter()
+            .zip(self.w_true.data.iter())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / n as f64)
+            .sqrt();
+        rms / self.w_true.max_abs().max(1e-9) as f64
+    }
+}
+
+/// One-shot noisy projection (sweep helper): programs + forwards in one go.
+pub fn noisy_project(x: &Mat, w: &Mat, cfg: &ChipConfig, rng: &mut Rng) -> Mat {
+    Emulator::program(w, cfg, rng).forward(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_fro_error;
+
+    #[test]
+    fn ideal_emulator_is_quantization_only() {
+        let cfg = ChipConfig::ideal();
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(16, 32, &mut rng);
+        let x = Mat::randn(8, 16, &mut rng);
+        let y = noisy_project(&x, &w, &cfg, &mut rng);
+        let want = matmul(&x, &w);
+        let rel = rel_fro_error(&y.data, &want.data);
+        assert!(rel < 0.01, "rel {rel}");
+    }
+
+    #[test]
+    fn noise_scales_with_sigmas() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(32, 64, &mut rng);
+        let x = Mat::randn(64, 32, &mut rng);
+        let want = matmul(&x, &w);
+
+        let err_at = |sp: f64, sr: f64, seed: u64| {
+            let mut cfg = ChipConfig::default();
+            cfg.sigma_prog = sp;
+            cfg.sigma_read = sr;
+            let mut r = Rng::new(seed);
+            let y = noisy_project(&x, &w, &cfg, &mut r);
+            rel_fro_error(&y.data, &want.data)
+        };
+        let lo = err_at(0.005, 0.002, 2);
+        let hi = err_at(0.08, 0.04, 3);
+        assert!(lo < hi, "{lo} vs {hi}");
+        assert!(lo < 0.05);
+        assert!(hi > 0.03);
+    }
+
+    #[test]
+    fn programming_error_matches_sigma() {
+        let mut cfg = ChipConfig::default();
+        cfg.sigma_prog = 0.03;
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(64, 64, &mut rng);
+        let em = Emulator::program(&w, &cfg, &mut rng);
+        let pe = em.programming_error();
+        assert!((pe - 0.03).abs() < 0.01, "pe {pe}");
+    }
+
+    #[test]
+    fn fixed_in_scale_respected() {
+        let cfg = ChipConfig::ideal();
+        let mut rng = Rng::new(5);
+        let w = Mat::eye(4);
+        let x = Mat::from_vec(1, 4, vec![0.05, -0.05, 0.2, 0.0]);
+        let mut em = Emulator::program(&w, &cfg, &mut rng);
+        em.in_scale = Some(0.1);
+        let y = em.forward(&x);
+        // grid is multiples of 0.1 -> 0.05 rounds to 0.0 or 0.1 (ties to even: 0.0... round(0.5)=1 in rust? 0.05/0.1=0.5 -> rounds to 1 -> 0.1)
+        assert!((y.at(0, 2) - 0.2).abs() < 1e-6);
+        assert_eq!(y.at(0, 3), 0.0);
+    }
+
+    #[test]
+    fn repeated_forwards_differ_only_by_read_noise() {
+        let mut cfg = ChipConfig::default();
+        cfg.sigma_read = 0.01;
+        let mut rng = Rng::new(6);
+        let w = Mat::randn(16, 16, &mut rng);
+        let x = Mat::randn(8, 16, &mut rng);
+        let mut em = Emulator::program(&w, &cfg, &mut rng);
+        let y1 = em.forward(&x);
+        let y2 = em.forward(&x);
+        assert_ne!(y1.data, y2.data);
+        // two independent 1% read-noise draws, scaled by max|y| (a few x
+        // the rms entry), stay well under 20% relative difference
+        assert!(rel_fro_error(&y1.data, &y2.data) < 0.2);
+    }
+}

@@ -1,0 +1,27 @@
+//! Simulated IBM HERMES-class PCM AIMC chip (the paper's hardware
+//! substrate, rebuilt as a behavioural simulator — DESIGN.md
+//! §Substitutions).
+//!
+//! Two fidelity levels:
+//!
+//! - [`chip::Chip`] — the *device-level* path: differential PCM unit cells
+//!   with state-dependent programming noise, drift, GDP program-and-verify,
+//!   per-column calibration, saturating ADCs. Used by the serving
+//!   coordinator and the hardware-faithful experiments.
+//! - [`emulator::Emulator`] — the *emulated mode* (the paper's own
+//!   terminology for its software twin): a vectorized statistical model
+//!   pinned to the Python-side noise model for large sweeps.
+
+pub mod calibration;
+pub mod chip;
+pub mod converters;
+pub mod core;
+pub mod crossbar;
+pub mod emulator;
+pub mod pcm;
+pub mod programming;
+pub mod unitcell;
+
+pub use chip::{Chip, MatrixHandle};
+pub use emulator::{noisy_project, Emulator};
+pub use programming::ProgramStats;

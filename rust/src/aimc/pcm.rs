@@ -1,0 +1,131 @@
+//! Phase-change-memory device model.
+//!
+//! Mechanisms (magnitudes per DESIGN.md §Noise-model calibration, taken
+//! from the HERMES chip papers and the paper's Methods):
+//!
+//! - **programming noise** — writing a target conductance lands on
+//!   `g + σ_P(g)·N(0,1)`, with state-dependent σ_P (mid-range states are
+//!   noisiest for PCM; we use a linear-in-g profile).
+//! - **conductance drift** — `g(t) = g(t₀)·(t/t₀)^-ν` with device-to-device
+//!   variation in ν; optionally compensated by a global scale factor (the
+//!   chip's affine correction).
+//! - **read noise** — zero-mean fluctuation per read, σ ∝ g_max; at the
+//!   crossbar level the 256 per-device contributions of a column aggregate
+//!   into one Gaussian on the column current (central limit), which is how
+//!   [`crate::aimc::crossbar`] applies it.
+
+use crate::config::ChipConfig;
+use crate::util::Rng;
+
+/// Reference time after programming where drift is measured from (s).
+pub const DRIFT_T0: f64 = 25.0;
+
+/// One PCM device: programmed conductance + drift exponent.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PcmDevice {
+    /// conductance right after programming, microsiemens
+    pub g_prog: f64,
+    /// drift exponent ν of this device
+    pub nu: f64,
+}
+
+impl PcmDevice {
+    /// Program the device toward `target` (µS, clamped to [0, g_max]).
+    pub fn program(target: f64, cfg: &ChipConfig, rng: &mut Rng) -> PcmDevice {
+        let t = target.clamp(0.0, cfg.g_max);
+        let sigma = programming_sigma(t, cfg);
+        let g = (t + sigma * rng.gaussian()).clamp(0.0, cfg.g_max);
+        let nu = (cfg.drift_nu_mean + cfg.drift_nu_std * rng.gaussian()).max(0.0);
+        PcmDevice { g_prog: g, nu }
+    }
+
+    /// Conductance at `t` seconds after programming (t >= t0).
+    pub fn conductance_at(&self, t_seconds: f64) -> f64 {
+        if self.nu == 0.0 || t_seconds <= DRIFT_T0 {
+            return self.g_prog;
+        }
+        self.g_prog * (t_seconds / DRIFT_T0).powf(-self.nu)
+    }
+}
+
+/// State-dependent programming σ: devices near the extremes are more
+/// controllable; σ peaks toward full-SET. σ_base = sigma_prog · g_max.
+pub fn programming_sigma(g_target: f64, cfg: &ChipConfig) -> f64 {
+    let base = cfg.sigma_prog * cfg.g_max;
+    base * (0.4 + 0.6 * (g_target / cfg.g_max))
+}
+
+/// Mean drift factor (t/t0)^-ν̄ — the global compensation the chip's
+/// digital affine correction applies when `drift_compensation` is on.
+pub fn mean_drift_factor(cfg: &ChipConfig) -> f64 {
+    if cfg.drift_nu_mean == 0.0 || cfg.drift_t_seconds <= DRIFT_T0 {
+        return 1.0;
+    }
+    (cfg.drift_t_seconds / DRIFT_T0).powf(-cfg.drift_nu_mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn programming_lands_near_target() {
+        let cfg = cfg();
+        let mut rng = Rng::new(0);
+        let target = 12.0;
+        let n = 5000;
+        let mean: f64 = (0..n)
+            .map(|_| PcmDevice::program(target, &cfg, &mut rng).g_prog)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - target).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn programming_noise_is_state_dependent() {
+        let cfg = cfg();
+        assert!(programming_sigma(cfg.g_max, &cfg) > programming_sigma(0.0, &cfg));
+        assert!(programming_sigma(0.0, &cfg) > 0.0);
+    }
+
+    #[test]
+    fn conductance_clamped() {
+        let cfg = cfg();
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let d = PcmDevice::program(cfg.g_max, &cfg, &mut rng);
+            assert!(d.g_prog <= cfg.g_max && d.g_prog >= 0.0);
+        }
+    }
+
+    #[test]
+    fn drift_decays_monotonically() {
+        let d = PcmDevice { g_prog: 10.0, nu: 0.05 };
+        let g1 = d.conductance_at(100.0);
+        let g2 = d.conductance_at(10_000.0);
+        assert!(g1 < d.g_prog);
+        assert!(g2 < g1);
+        assert!(g2 > 0.5 * d.g_prog); // mild at these timescales
+    }
+
+    #[test]
+    fn no_drift_before_t0() {
+        let d = PcmDevice { g_prog: 10.0, nu: 0.05 };
+        assert_eq!(d.conductance_at(1.0), 10.0);
+    }
+
+    #[test]
+    fn mean_drift_factor_compensates() {
+        let cfg = cfg();
+        let f = mean_drift_factor(&cfg);
+        assert!(f < 1.0 && f > 0.5);
+        // a device with ν = ν̄ is perfectly compensated
+        let d = PcmDevice { g_prog: 10.0, nu: cfg.drift_nu_mean };
+        let g = d.conductance_at(cfg.drift_t_seconds);
+        assert!((g / f - 10.0).abs() < 1e-9);
+    }
+}

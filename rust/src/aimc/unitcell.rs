@@ -1,0 +1,90 @@
+//! Differential unit cell: weight → conductance mapping.
+//!
+//! The HERMES chip represents one synaptic weight with four PCM devices —
+//! two in parallel per polarity. We model each polarity as one effective
+//! device with the parallel pair's summed conductance range; positive
+//! weights program the `+` branch, negative the `-` branch, and the
+//! realized weight is `(g⁺ - g⁻) / g_scale`.
+
+use super::pcm::PcmDevice;
+use crate::config::ChipConfig;
+use crate::util::Rng;
+
+/// One unit cell (differential PCM pair).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UnitCell {
+    pub plus: PcmDevice,
+    pub minus: PcmDevice,
+}
+
+impl UnitCell {
+    /// Program a normalized weight w ∈ [-1, 1] at conductance scale
+    /// `g_scale` (µS per unit weight; chosen per-column by calibration).
+    pub fn program(w: f64, g_scale: f64, cfg: &ChipConfig, rng: &mut Rng) -> UnitCell {
+        let w = w.clamp(-1.0, 1.0);
+        let (gp, gm) = if w >= 0.0 {
+            (w * g_scale, 0.0)
+        } else {
+            (0.0, -w * g_scale)
+        };
+        UnitCell {
+            plus: PcmDevice::program(gp, cfg, rng),
+            minus: PcmDevice::program(gm, cfg, rng),
+        }
+    }
+
+    /// Effective weight realized at time t (µS difference / g_scale).
+    pub fn weight_at(&self, t_seconds: f64, g_scale: f64) -> f64 {
+        (self.plus.conductance_at(t_seconds) - self.minus.conductance_at(t_seconds)) / g_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mean_error_small() {
+        let cfg = ChipConfig::default();
+        let mut rng = Rng::new(0);
+        let g_scale = cfg.g_max;
+        for &w in &[-1.0, -0.5, 0.0, 0.3, 0.9] {
+            let n = 3000;
+            let mean: f64 = (0..n)
+                .map(|_| UnitCell::program(w, g_scale, &cfg, &mut rng).weight_at(0.0, g_scale))
+                .sum::<f64>()
+                / n as f64;
+            assert!((mean - w).abs() < 0.02, "w={w} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn polarity_uses_one_branch() {
+        let cfg = ChipConfig::ideal();
+        let mut rng = Rng::new(1);
+        let c = UnitCell::program(0.7, cfg.g_max, &cfg, &mut rng);
+        assert!(c.plus.g_prog > 0.0);
+        assert_eq!(c.minus.g_prog, 0.0);
+        let c = UnitCell::program(-0.7, cfg.g_max, &cfg, &mut rng);
+        assert!(c.minus.g_prog > 0.0);
+        assert_eq!(c.plus.g_prog, 0.0);
+    }
+
+    #[test]
+    fn ideal_roundtrip_exact() {
+        let cfg = ChipConfig::ideal();
+        let mut rng = Rng::new(2);
+        for &w in &[-0.8, 0.0, 0.33, 1.0] {
+            let c = UnitCell::program(w, cfg.g_max, &cfg, &mut rng);
+            assert!((c.weight_at(0.0, cfg.g_max) - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn out_of_range_weight_clamped() {
+        let cfg = ChipConfig::ideal();
+        let mut rng = Rng::new(3);
+        let c = UnitCell::program(1.7, cfg.g_max, &cfg, &mut rng);
+        assert!((c.weight_at(0.0, cfg.g_max) - 1.0).abs() < 1e-12);
+    }
+}

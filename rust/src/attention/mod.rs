@@ -1,0 +1,170 @@
+//! Kernelized attention measurement machinery (Fig. 3b / Table I inputs).
+//!
+//! The attention math itself lives in [`crate::features::favor`]; this
+//! module adds the analog-vs-digital comparison harness: projecting Q/K
+//! through the chip simulator (or emulator) instead of a digital matmul
+//! and quantifying the induced attention-matrix error — exactly the
+//! isolated-error experiment of Fig. 3b.
+
+use crate::aimc::Emulator;
+use crate::config::ChipConfig;
+use crate::error::Result;
+use crate::features::favor::{
+    attention_matrix_from_features, exact_attention_matrix, positive_features,
+};
+use crate::features::maps::postprocess;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+pub use crate::features::favor::{
+    exact_attention, favor_attention, linear_attention_from_features,
+};
+
+/// Where the feature projection u = x·Ω runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Projection {
+    /// FP-32 digital matmul
+    Fp32,
+    /// simulated AIMC chip (emulated mode)
+    Analog,
+}
+
+/// Attention-matrix approximation error of FAVOR+ with the projection on
+/// the chosen path, vs the exact softmax attention matrix.
+///
+/// q, k: (L x d_head) extracted head projections. Returns the relative
+/// Frobenius error (the Fig. 3b metric).
+pub fn attention_matrix_error(
+    q: &Mat,
+    k: &Mat,
+    omega: &Mat,
+    proj: Projection,
+    chip_cfg: &ChipConfig,
+    rng: &mut Rng,
+) -> Result<f64> {
+    let exact = exact_attention_matrix(q, k);
+    let scale = (q.cols as f32).powf(-0.25);
+    let mut qs = q.clone();
+    qs.scale(scale);
+    let mut ks = k.clone();
+    ks.scale(scale);
+
+    let (qp, kp) = match proj {
+        Projection::Fp32 => (positive_features(&qs, omega), positive_features(&ks, omega)),
+        Projection::Analog => {
+            // program Ω once; both Q and K reads go through the same
+            // noisy weights (as on the real chip)
+            let mut em = Emulator::program(omega, chip_cfg, rng);
+            let uq = em.forward(&qs);
+            let uk = em.forward(&ks);
+            (
+                postprocess(Kernel::Softmax, &uq, Some(&qs)),
+                postprocess(Kernel::Softmax, &uk, Some(&ks)),
+            )
+        }
+    };
+    let approx = attention_matrix_from_features(&qp, &kp);
+    Ok(crate::util::stats::rel_fro_error(&approx.data, &exact.data))
+}
+
+/// Attention *output* error (D⁻¹Q'(K')ᵀV vs exact), same protocol.
+pub fn attention_output_error(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    omega: &Mat,
+    proj: Projection,
+    chip_cfg: &ChipConfig,
+    rng: &mut Rng,
+) -> Result<f64> {
+    let exact = exact_attention(q, k, v);
+    let scale = (q.cols as f32).powf(-0.25);
+    let mut qs = q.clone();
+    qs.scale(scale);
+    let mut ks = k.clone();
+    ks.scale(scale);
+    let (qp, kp) = match proj {
+        Projection::Fp32 => (positive_features(&qs, omega), positive_features(&ks, omega)),
+        Projection::Analog => {
+            let mut em = Emulator::program(omega, chip_cfg, rng);
+            let uq = em.forward(&qs);
+            let uk = em.forward(&ks);
+            (
+                postprocess(Kernel::Softmax, &uq, Some(&qs)),
+                postprocess(Kernel::Softmax, &uk, Some(&ks)),
+            )
+        }
+    };
+    let approx = linear_attention_from_features(&qp, &kp, v);
+    Ok(crate::util::stats::rel_fro_error(&approx.data, &exact.data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{sample_omega, Sampler};
+
+    fn qkv(seed: u64, l: usize, d: usize) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut q = Mat::randn(l, d, &mut rng);
+        q.scale(0.5);
+        let mut k = Mat::randn(l, d, &mut rng);
+        k.scale(0.5);
+        let v = Mat::randn(l, d, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn analog_error_slightly_above_fp32() {
+        // the Fig. 3b claim: analog noise raises the error, but the gap
+        // stays bounded
+        let (q, k, _) = qkv(0, 48, 8);
+        let cfg = ChipConfig::default();
+        let mut e_fp = 0.0;
+        let mut e_hw = 0.0;
+        for s in 0..8u64 {
+            let mut rng = Rng::new(100 + s);
+            let omega = sample_omega(Sampler::Orf, 8, 128, &mut rng);
+            e_fp += attention_matrix_error(&q, &k, &omega, Projection::Fp32, &cfg, &mut rng)
+                .unwrap();
+            e_hw += attention_matrix_error(&q, &k, &omega, Projection::Analog, &cfg, &mut rng)
+                .unwrap();
+        }
+        e_fp /= 8.0;
+        e_hw /= 8.0;
+        assert!(e_hw > e_fp, "hw {e_hw} fp {e_fp}");
+        assert!(e_hw < e_fp + 0.2, "gap too large: hw {e_hw} fp {e_fp}");
+    }
+
+    #[test]
+    fn error_decreases_with_m_both_paths() {
+        let (q, k, _) = qkv(1, 32, 8);
+        let cfg = ChipConfig::default();
+        for proj in [Projection::Fp32, Projection::Analog] {
+            let err_at = |m: usize| {
+                let mut acc = 0.0;
+                for s in 0..5u64 {
+                    let mut rng = Rng::new(200 + s);
+                    let omega = sample_omega(Sampler::Orf, 8, m, &mut rng);
+                    acc += attention_matrix_error(&q, &k, &omega, proj, &cfg, &mut rng).unwrap();
+                }
+                acc / 5.0
+            };
+            let e_small = err_at(16);
+            let e_big = err_at(256);
+            assert!(e_big < e_small, "{proj:?}: {e_big} vs {e_small}");
+        }
+    }
+
+    #[test]
+    fn output_error_finite_and_small_at_high_m() {
+        let (q, k, v) = qkv(2, 24, 8);
+        let cfg = ChipConfig::default();
+        let mut rng = Rng::new(3);
+        let omega = sample_omega(Sampler::Orf, 8, 512, &mut rng);
+        let e = attention_output_error(&q, &k, &v, &omega, Projection::Analog, &cfg, &mut rng)
+            .unwrap();
+        assert!(e.is_finite() && e < 0.6, "e {e}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Minimal CLI argument parser (offline substitute for clap).
+//!
+//! Grammar: `imka <subcommand> [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(sub) = it.next() {
+            if sub.starts_with('-') {
+                return Err(Error::Parse(format!("expected subcommand, got '{sub}'")));
+            }
+            out.subcommand = sub;
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err(Error::Parse("bare '--' not supported".into()));
+                }
+                // --key=value or --key value or boolean --key
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("experiment fig2a --seeds 5 --scale=0.1 --verbose");
+        assert_eq!(a.subcommand, "experiment");
+        assert_eq!(a.positional, vec!["fig2a"]);
+        assert_eq!(a.usize_or("seeds", 1).unwrap(), 5);
+        assert!((a.f64_or("scale", 1.0).unwrap() - 0.1).abs() < 1e-12);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("x --lr -0.5");
+        assert!((a.f64_or("lr", 0.0).unwrap() + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(Args::parse(vec!["--flag".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration system: minimal TOML + JSON parsers (offline substitutes
+//! for serde/toml/serde_json) and typed config structs with
+//! HERMES-calibrated defaults.
+
+pub mod json;
+pub mod settings;
+pub mod toml;
+
+pub use json::Json;
+pub use settings::{ChipConfig, Config, ServeConfig};
+pub use toml::{TomlDoc, TomlValue};

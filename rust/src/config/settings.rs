@@ -1,0 +1,260 @@
+//! Typed configuration: chip noise model, serving parameters, experiment
+//! defaults. Loaded from a TOML file with env-var overrides
+//! (`IMKA_<SECTION>_<KEY>`), falling back to HERMES-calibrated defaults
+//! (DESIGN.md §Noise-model calibration).
+
+use std::path::Path;
+
+use super::toml::TomlDoc;
+use crate::error::Result;
+
+/// AIMC chip simulator configuration (HERMES-class defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipConfig {
+    /// number of crossbar cores on the chip
+    pub cores: usize,
+    /// crossbar rows per core (input lines / DACs)
+    pub rows: usize,
+    /// crossbar columns per core (output lines / ADCs)
+    pub cols: usize,
+    /// DAC input resolution in bits
+    pub input_bits: u32,
+    /// ADC output resolution in bits
+    pub adc_bits: u32,
+    /// programming error after program-and-verify, fraction of weight range
+    pub sigma_prog: f64,
+    /// per-read output noise, fraction of column dynamic range
+    pub sigma_read: f64,
+    /// conductance drift exponent mean (g(t) = g0 (t/t0)^-nu)
+    pub drift_nu_mean: f64,
+    /// drift exponent device-to-device std
+    pub drift_nu_std: f64,
+    /// evaluation time after programming, seconds (t0 = 25s a la PCM lit.)
+    pub drift_t_seconds: f64,
+    /// apply global drift compensation (paper's affine correction)
+    pub drift_compensation: bool,
+    /// maximum device conductance in microsiemens (normalization anchor)
+    pub g_max: f64,
+    /// program-and-verify iterations (GDP)
+    pub program_iters: usize,
+    /// GDP learning rate
+    pub program_lr: f64,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            cores: 64,
+            rows: 256,
+            cols: 256,
+            input_bits: 8,
+            adc_bits: 8,
+            sigma_prog: 0.022,
+            sigma_read: 0.010,
+            drift_nu_mean: 0.05,
+            drift_nu_std: 0.015,
+            drift_t_seconds: 3600.0,
+            drift_compensation: true,
+            g_max: 25.0,
+            program_iters: 15,
+            program_lr: 0.3,
+        }
+    }
+}
+
+impl ChipConfig {
+    /// An ideal (noise-free) chip — for isolating quantization effects.
+    pub fn ideal() -> Self {
+        ChipConfig {
+            sigma_prog: 0.0,
+            sigma_read: 0.0,
+            drift_nu_mean: 0.0,
+            drift_nu_std: 0.0,
+            ..ChipConfig::default()
+        }
+    }
+
+    /// Weight capacity of the whole chip.
+    pub fn capacity(&self) -> usize {
+        self.cores * self.rows * self.cols
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Self {
+        let d = ChipConfig::default();
+        ChipConfig {
+            cores: doc.usize_or("chip.cores", d.cores),
+            rows: doc.usize_or("chip.rows", d.rows),
+            cols: doc.usize_or("chip.cols", d.cols),
+            input_bits: doc.usize_or("chip.input_bits", d.input_bits as usize) as u32,
+            adc_bits: doc.usize_or("chip.adc_bits", d.adc_bits as usize) as u32,
+            sigma_prog: doc.f64_or("chip.sigma_prog", d.sigma_prog),
+            sigma_read: doc.f64_or("chip.sigma_read", d.sigma_read),
+            drift_nu_mean: doc.f64_or("chip.drift_nu_mean", d.drift_nu_mean),
+            drift_nu_std: doc.f64_or("chip.drift_nu_std", d.drift_nu_std),
+            drift_t_seconds: doc.f64_or("chip.drift_t_seconds", d.drift_t_seconds),
+            drift_compensation: doc.bool_or("chip.drift_compensation", d.drift_compensation),
+            g_max: doc.f64_or("chip.g_max", d.g_max),
+            program_iters: doc.usize_or("chip.program_iters", d.program_iters),
+            program_lr: doc.f64_or("chip.program_lr", d.program_lr),
+        }
+    }
+}
+
+/// Coordinator / serving configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// max requests aggregated into one batch
+    pub max_batch: usize,
+    /// max time a request waits for batchmates, microseconds
+    pub max_wait_us: u64,
+    /// worker threads draining the batch queue
+    pub workers: usize,
+    /// TCP bind address for the line-protocol server
+    pub bind: String,
+    /// replicate analog mapping matrices across idle cores
+    pub replication: usize,
+    /// bound on the request queue before backpressure kicks in
+    pub queue_cap: usize,
+    /// eagerly compile request-path artifacts at engine start
+    pub warm: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 64,
+            max_wait_us: 2000,
+            workers: 4,
+            bind: "127.0.0.1:7473".to_string(),
+            replication: 1,
+            queue_cap: 4096,
+            warm: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn from_doc(doc: &TomlDoc) -> Self {
+        let d = ServeConfig::default();
+        ServeConfig {
+            max_batch: doc.usize_or("serve.max_batch", d.max_batch),
+            max_wait_us: doc.usize_or("serve.max_wait_us", d.max_wait_us as usize) as u64,
+            workers: doc.usize_or("serve.workers", d.workers),
+            bind: doc.str_or("serve.bind", &d.bind).to_string(),
+            replication: doc.usize_or("serve.replication", d.replication),
+            queue_cap: doc.usize_or("serve.queue_cap", d.queue_cap),
+            warm: doc.bool_or("serve.warm", d.warm),
+        }
+    }
+}
+
+/// Top-level configuration bundle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub chip: ChipConfig,
+    pub serve: ServeConfig,
+    /// artifacts directory (manifest.json, *.hlo.txt, weights)
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            chip: ChipConfig::default(),
+            serve: ServeConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    pub fn from_toml_str(src: &str) -> Result<Config> {
+        let doc = TomlDoc::parse(src)?;
+        let mut cfg = Config {
+            chip: ChipConfig::from_doc(&doc),
+            serve: ServeConfig::from_doc(&doc),
+            artifacts_dir: doc.str_or("paths.artifacts", "artifacts").to_string(),
+        };
+        cfg.apply_env();
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let src = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&src)
+    }
+
+    /// Load from path if it exists, else defaults (+env overrides).
+    pub fn load_or_default(path: Option<&Path>) -> Result<Config> {
+        match path {
+            Some(p) => Self::load(p),
+            None => {
+                let mut cfg = Config::default();
+                cfg.apply_env();
+                Ok(cfg)
+            }
+        }
+    }
+
+    /// Env overrides, e.g. IMKA_CHIP_SIGMA_PROG=0.03, IMKA_SERVE_WORKERS=8.
+    fn apply_env(&mut self) {
+        if let Ok(v) = std::env::var("IMKA_CHIP_SIGMA_PROG") {
+            if let Ok(f) = v.parse() {
+                self.chip.sigma_prog = f;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_CHIP_SIGMA_READ") {
+            if let Ok(f) = v.parse() {
+                self.chip.sigma_read = f;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_SERVE_WORKERS") {
+            if let Ok(n) = v.parse() {
+                self.serve.workers = n;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_ARTIFACTS_DIR") {
+            self.artifacts_dir = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_hermes_shaped() {
+        let c = ChipConfig::default();
+        assert_eq!(c.cores, 64);
+        assert_eq!(c.rows * c.cols, 65_536);
+        assert_eq!(c.capacity(), 4_194_304); // paper: 4,194,304 weights
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = Config::from_toml_str(
+            "[chip]\nsigma_prog = 0.05\ncores = 8\n[serve]\nmax_batch = 16\n[paths]\nartifacts = \"art\"\n",
+        )
+        .unwrap();
+        assert!((cfg.chip.sigma_prog - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.chip.cores, 8);
+        assert_eq!(cfg.serve.max_batch, 16);
+        assert_eq!(cfg.artifacts_dir, "art");
+        // untouched fields keep defaults
+        assert_eq!(cfg.chip.rows, 256);
+    }
+
+    #[test]
+    fn default_config_points_at_artifacts() {
+        assert_eq!(Config::default().artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn ideal_chip_noise_free() {
+        let c = ChipConfig::ideal();
+        assert_eq!(c.sigma_prog, 0.0);
+        assert_eq!(c.sigma_read, 0.0);
+        assert_eq!(c.cores, 64);
+    }
+}

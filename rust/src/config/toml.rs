@@ -1,0 +1,260 @@
+//! Minimal TOML-subset parser for configuration files (offline substitute
+//! for the `toml` crate). Supports: `[section]` and `[section.sub]`
+//! headers, `key = value` with string/float/int/bool/array values, `#`
+//! comments. Keys are exposed flattened as `section.sub.key`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// TOML scalar/array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed TOML document: flattened `section.key -> value` map.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Parse(format!("line {}: bad section", lineno + 1)))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(Error::Parse(format!("line {}: empty section", lineno + 1)));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| Error::Parse(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(Error::Parse(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| Error::Parse(format!("line {}: {e}", lineno + 1)))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, value);
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(src: &str) -> std::result::Result<TomlValue, String> {
+    let src = src.trim();
+    if src.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = src.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if src == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if src == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = src.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if src.contains('.') || src.contains('e') || src.contains('E') {
+        if let Ok(f) = src.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = src.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = src.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{src}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if depth == 0 && !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# chip config
+top = 1
+[chip]
+cores = 64             # cores per chip
+rows = 256
+sigma_prog = 0.022
+name = "hermes"
+enabled = true
+sizes = [1, 8, 64]
+[chip.adc]
+bits = 8
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top").unwrap().as_i64(), Some(1));
+        assert_eq!(doc.usize_or("chip.cores", 0), 64);
+        assert!((doc.f64_or("chip.sigma_prog", 0.0) - 0.022).abs() < 1e-12);
+        assert_eq!(doc.str_or("chip.name", ""), "hermes");
+        assert!(doc.bool_or("chip.enabled", false));
+        assert_eq!(doc.usize_or("chip.adc.bits", 0), 8);
+        match doc.get("chip.sizes").unwrap() {
+            TomlValue::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("missing", 7), 7);
+        assert_eq!(doc.f64_or("missing", 1.5), 1.5);
+        assert_eq!(doc.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("k = \"a#b\" # real comment").unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("= 3").is_err());
+        assert!(TomlDoc::parse("x = @?").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = TomlDoc::parse("a = -3\nb = -2.5\nc = 1e-3").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(-3));
+        assert!((doc.f64_or("b", 0.0) + 2.5).abs() < 1e-12);
+        assert!((doc.f64_or("c", 0.0) - 1e-3).abs() < 1e-15);
+    }
+}

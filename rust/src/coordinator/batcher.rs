@@ -1,0 +1,208 @@
+//! Dynamic batcher: aggregates same-lane requests until `max_batch` or
+//! `max_wait_us`, whichever comes first (the standard serving trade-off —
+//! vLLM-style continuous batching specialized to lane-homogeneous
+//! requests).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use super::request::{Lane, Request};
+use crate::config::ServeConfig;
+
+/// A formed batch handed to the worker pool.
+pub struct Batch {
+    pub lane: Lane,
+    pub requests: Vec<Request>,
+}
+
+/// Runs the batching loop until the ingress channel closes or `stop` is
+/// raised (live Submitter clones keep the channel open, so shutdown is
+/// signalled explicitly). Formed batches go out on `out`.
+pub fn run_batcher(
+    ingress: mpsc::Receiver<Request>,
+    out: mpsc::SyncSender<Batch>,
+    cfg: &ServeConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let max_wait = Duration::from_micros(cfg.max_wait_us);
+    let mut lanes: BTreeMap<Lane, Vec<Request>> = BTreeMap::new();
+    let mut lane_oldest: BTreeMap<Lane, Instant> = BTreeMap::new();
+
+    'outer: loop {
+        // Block briefly for the next request so an idle batcher doesn't
+        // spin; the timeout bounds flush latency for waiting lanes.
+        if stop.load(Ordering::Relaxed) {
+            break 'outer;
+        }
+        let first = match ingress.recv_timeout(max_wait.max(Duration::from_micros(100))) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+        };
+        if let Some(r) = first {
+            push(&mut lanes, &mut lane_oldest, r);
+            // opportunistically drain whatever else already arrived
+            while let Ok(r) = ingress.try_recv() {
+                push(&mut lanes, &mut lane_oldest, r);
+                if lanes.values().map(|v| v.len()).sum::<usize>() >= cfg.max_batch * 4 {
+                    break;
+                }
+            }
+        }
+        // flush lanes that are full or stale
+        let now = Instant::now();
+        let keys: Vec<Lane> = lanes.keys().copied().collect();
+        for lane in keys {
+            let full = lanes[&lane].len() >= cfg.max_batch;
+            let stale = lane_oldest
+                .get(&lane)
+                .map(|t| now.duration_since(*t) >= max_wait)
+                .unwrap_or(false);
+            if full || stale {
+                let mut reqs = lanes.remove(&lane).unwrap_or_default();
+                lane_oldest.remove(&lane);
+                while !reqs.is_empty() {
+                    let take = reqs.len().min(cfg.max_batch);
+                    let batch: Vec<Request> = reqs.drain(..take).collect();
+                    if out.send(Batch { lane, requests: batch }).is_err() {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+    // drain remaining on shutdown
+    for (lane, reqs) in lanes {
+        if !reqs.is_empty() {
+            let _ = out.send(Batch { lane, requests: reqs });
+        }
+    }
+}
+
+fn push(
+    lanes: &mut BTreeMap<Lane, Vec<Request>>,
+    oldest: &mut BTreeMap<Lane, Instant>,
+    r: Request,
+) {
+    let lane = r.body.lane();
+    oldest.entry(lane).or_insert_with(Instant::now);
+    lanes.entry(lane).or_default().push(r);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{PathKind, RequestBody, Response};
+    use crate::kernels::Kernel;
+
+    fn mk_request(kernel: Kernel) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        (
+            Request {
+                body: RequestBody::Features {
+                    kernel,
+                    path: PathKind::Digital,
+                    x: vec![0.0; 4],
+                },
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn spin_batcher(cfg: ServeConfig) -> (mpsc::Sender<Request>, mpsc::Receiver<Batch>) {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        std::thread::spawn(move || {
+            run_batcher(in_rx, out_tx, &cfg, Arc::new(AtomicBool::new(false)))
+        });
+        (in_tx, out_rx)
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let cfg = ServeConfig { max_batch: 4, max_wait_us: 1_000_000, ..Default::default() };
+        let (tx, rx) = spin_batcher(cfg);
+        let mut replies = Vec::new();
+        for _ in 0..4 {
+            let (r, rep) = mk_request(Kernel::Rbf);
+            replies.push(rep);
+            tx.send(r).unwrap();
+        }
+        let batch = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.requests.len(), 4);
+    }
+
+    #[test]
+    fn stale_batch_flushes_after_wait() {
+        let cfg = ServeConfig { max_batch: 100, max_wait_us: 2_000, ..Default::default() };
+        let (tx, rx) = spin_batcher(cfg);
+        let (r, _rep) = mk_request(Kernel::Rbf);
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_micros(1_500));
+    }
+
+    #[test]
+    fn lanes_not_mixed() {
+        let cfg = ServeConfig { max_batch: 8, max_wait_us: 2_000, ..Default::default() };
+        let (tx, rx) = spin_batcher(cfg);
+        let mut reps = Vec::new();
+        for i in 0..6 {
+            let (r, rep) = mk_request(if i % 2 == 0 { Kernel::Rbf } else { Kernel::ArcCos0 });
+            reps.push(rep);
+            tx.send(r).unwrap();
+        }
+        let b1 = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        let b2 = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(b1.requests.len() + b2.requests.len(), 6);
+        assert_ne!(b1.lane, b2.lane);
+        for b in [&b1, &b2] {
+            let lane = b.lane;
+            assert!(b.requests.iter().all(|r| r.body.lane() == lane));
+        }
+    }
+
+    #[test]
+    fn oversized_lane_splits_into_max_batches() {
+        let cfg = ServeConfig { max_batch: 4, max_wait_us: 1_000, ..Default::default() };
+        let (tx, rx) = spin_batcher(cfg);
+        let mut reps = Vec::new();
+        for _ in 0..10 {
+            let (r, rep) = mk_request(Kernel::Rbf);
+            reps.push(rep);
+            tx.send(r).unwrap();
+        }
+        let mut total = 0;
+        let mut max_seen = 0;
+        while total < 10 {
+            let b = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            max_seen = max_seen.max(b.requests.len());
+            total += b.requests.len();
+        }
+        assert_eq!(total, 10);
+        assert!(max_seen <= 4);
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let cfg = ServeConfig { max_batch: 100, max_wait_us: 10_000_000, ..Default::default() };
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let h = std::thread::spawn(move || {
+            run_batcher(in_rx, out_tx, &cfg, Arc::new(AtomicBool::new(false)))
+        });
+        let (r, _rep) = mk_request(Kernel::Rbf);
+        in_tx.send(r).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        drop(in_tx); // close ingress -> batcher exits and drains
+        let b = out_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        h.join().unwrap();
+    }
+}

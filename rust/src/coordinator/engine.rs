@@ -1,0 +1,670 @@
+//! The serving engine: ingress queue → dynamic batcher → worker pool →
+//! (analog chip | XLA artifacts) → replies. The leader (`Engine::start`)
+//! programs the chip, compiles artifacts, and spawns the threads; workers
+//! never touch Python — the request path is Rust + PJRT only.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use super::batcher::{run_batcher, Batch};
+use super::request::{
+    KernelLane, Lane, ModeLane, PathLane, PerfMode, Request, RequestBody, Response, ResponseBody,
+};
+use super::telemetry::Telemetry;
+use super::tilepool::{lane_omega, TilePool};
+use crate::aimc::Emulator;
+use crate::config::Config;
+use crate::energy::{latency_energy, mapping_ops, Device};
+use crate::error::{Error, Result};
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::runtime::{Input, ModelBundle, Registry};
+use crate::util::Rng;
+
+/// Feature-lane geometry, read from the artifact manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneGeometry {
+    pub d: usize,
+    pub m: usize,
+    pub out_dim: usize,
+}
+
+struct Shared {
+    registry: Registry,
+    bundle: Option<ModelBundle>,
+    pool: TilePool,
+    geometries: BTreeMap<KernelLane, LaneGeometry>,
+    /// emulator-programmed noisy Ω for the performer hw paths
+    noisy_omega: Option<Mat>,
+    /// emulator-programmed noisy 2-D params (hw_full)
+    noisy_params: BTreeMap<String, Mat>,
+    telemetry: Telemetry,
+    seed_ctr: AtomicI32,
+    classes: usize,
+}
+
+/// Handle for submitting requests (clone freely across threads).
+#[derive(Clone)]
+pub struct Submitter {
+    tx: mpsc::Sender<Request>,
+}
+
+impl Submitter {
+    /// Submit and wait for the reply (simple blocking client).
+    pub fn call(&self, body: RequestBody) -> Result<Response> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request { body, reply, enqueued: Instant::now() })
+            .map_err(|_| Error::Coordinator("engine is shut down".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("engine dropped the request".into()))
+    }
+
+    /// Fire-and-forget with caller-held reply channel (for load drivers).
+    pub fn submit(&self, body: RequestBody) -> Result<mpsc::Receiver<Response>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request { body, reply, enqueued: Instant::now() })
+            .map_err(|_| Error::Coordinator("engine is shut down".into()))?;
+        Ok(rx)
+    }
+}
+
+/// Running engine: threads + shared state.
+pub struct Engine {
+    shared: Arc<Shared>,
+    ingress: mpsc::Sender<Request>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Boot the coordinator: open artifacts, load the trained model (if
+    /// present), program the chip, spawn batcher + workers.
+    pub fn start(cfg: &Config) -> Result<Engine> {
+        let registry = Registry::open(std::path::Path::new(&cfg.artifacts_dir))?;
+
+        // trained performer bundle (optional — feature serving works
+        // without it)
+        let bundle = {
+            let weights = registry
+                .manifest
+                .get("weights")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string());
+            let testset = registry
+                .manifest
+                .get("testset")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string());
+            match (weights, testset) {
+                (Some(w), Some(t)) => {
+                    ModelBundle::load(std::path::Path::new(&cfg.artifacts_dir), &w, &t).ok()
+                }
+                _ => None,
+            }
+        };
+
+        // program one Ω per feature lane present in the manifest
+        let mut pool = TilePool::new(cfg.chip.clone(), 0xC41B);
+        let mut geometries = BTreeMap::new();
+        let mut rng = Rng::new(0xCA11);
+        for spec in registry.of_kind("feature_map") {
+            let kernel = spec
+                .meta
+                .get("kernel")
+                .and_then(|k| k.as_str())
+                .and_then(Kernel::parse)
+                .ok_or_else(|| Error::Artifact(format!("{}: bad kernel", spec.name)))?;
+            let lane: KernelLane = kernel.into();
+            if geometries.contains_key(&lane) {
+                continue;
+            }
+            let d = spec.meta.req_usize("d")?;
+            let m = spec.meta.req_usize("m")?;
+            let out_dim = spec.out_dim().unwrap_or(kernel.l() * m);
+            let omega = lane_omega(lane, d, m, 7);
+            // calibration inputs: normalized data is ~N(0,1)
+            let x_cal = Mat::randn(256, d, &mut rng);
+            pool.program_lane(lane, omega, &x_cal, cfg.serve.replication)?;
+            geometries.insert(lane, LaneGeometry { d, m, out_dim });
+        }
+
+        // emulator-programmed noisy weights for the performer hw modes
+        let (noisy_omega, noisy_params) = if let Some(b) = &bundle {
+            let mut rng = Rng::new(0x5EED);
+            let om = Emulator::program(&b.omega, &cfg.chip, &mut rng).w_hat;
+            let mut params = BTreeMap::new();
+            for name in b.matrix_param_names() {
+                let w = b.param_mat(&name)?;
+                params.insert(name.clone(), Emulator::program(&w, &cfg.chip, &mut rng).w_hat);
+            }
+            (Some(om), params)
+        } else {
+            (None, BTreeMap::new())
+        };
+
+        let classes = registry
+            .model_config()
+            .and_then(|m| m.get("classes"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(2);
+
+        let shared = Arc::new(Shared {
+            registry,
+            bundle,
+            pool,
+            geometries,
+            noisy_omega,
+            noisy_params,
+            telemetry: Telemetry::default(),
+            seed_ctr: AtomicI32::new(1),
+            classes,
+        });
+
+        // threads: 1 batcher + N workers
+        let (ingress_tx, ingress_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(cfg.serve.queue_cap.max(16));
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let mut threads = Vec::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let serve_cfg = cfg.serve.clone();
+        let stop_b = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            run_batcher(ingress_rx, batch_tx, &serve_cfg, stop_b)
+        }));
+        for _ in 0..cfg.serve.workers.max(1) {
+            let shared = shared.clone();
+            let rx = batch_rx.clone();
+            threads.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match batch {
+                    Ok(b) => execute_batch(&shared, b),
+                    Err(_) => break,
+                }
+            }));
+        }
+
+        let engine = Engine { shared, ingress: ingress_tx, stop, threads };
+        if cfg.serve.warm {
+            engine.warm();
+        }
+        Ok(engine)
+    }
+
+    /// Eagerly compile the artifacts the request path will hit, so first
+    /// requests don't pay XLA compile latency (§Perf: p95/p99 of the e2e
+    /// driver dropped from seconds to the steady-state batch time).
+    fn warm(&self) {
+        let primary_task = self
+            .shared
+            .registry
+            .manifest
+            .get("task")
+            .and_then(|v| v.as_str())
+            .unwrap_or("pattern")
+            .to_string();
+        let names: Vec<String> = self
+            .shared
+            .registry
+            .specs
+            .values()
+            .filter(|s| match s.kind.as_str() {
+                "feature_map" | "postprocess" => true,
+                "performer" => {
+                    s.meta.get("task").and_then(|t| t.as_str()) == Some(primary_task.as_str())
+                }
+                _ => false,
+            })
+            .map(|s| s.name.clone())
+            .collect();
+        for name in names {
+            if let Err(e) = self.shared.registry.load(&name) {
+                eprintln!("warm-compile of {name} failed: {e}");
+            }
+        }
+    }
+
+    pub fn submitter(&self) -> Submitter {
+        Submitter { tx: self.ingress.clone() }
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.shared.telemetry
+    }
+
+    pub fn cores_used(&self) -> usize {
+        self.shared.pool.cores_used()
+    }
+
+    pub fn has_model(&self) -> bool {
+        self.shared.bundle.is_some()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.shared.classes
+    }
+
+    pub fn seq_len(&self) -> Option<usize> {
+        self.shared.bundle.as_ref().map(|b| b.seq_len)
+    }
+
+    /// Graceful shutdown: raise the stop flag (live Submitter clones may
+    /// still hold ingress senders), close our sender, join all threads.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.ingress);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batch execution
+// ---------------------------------------------------------------------------
+
+fn execute_batch(shared: &Shared, batch: Batch) {
+    let n = batch.requests.len();
+    let result = match batch.lane {
+        Lane::Feature(kernel, path) => run_feature_batch(shared, kernel, path, &batch),
+        Lane::Performer(mode) => run_performer_batch(shared, mode, &batch),
+    };
+    match result {
+        Ok((bodies, energy_uj)) => {
+            debug_assert_eq!(bodies.len(), n);
+            for (req, body) in batch.requests.into_iter().zip(bodies) {
+                let latency_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+                shared.telemetry.record(
+                    batch.lane,
+                    latency_us,
+                    n,
+                    energy_uj / n as f64,
+                    false,
+                );
+                let _ = req.reply.send(Response {
+                    result: Ok(body),
+                    latency_us,
+                    energy_uj: energy_uj / n as f64,
+                    batch_size: n,
+                });
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for req in batch.requests {
+                let latency_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+                shared.telemetry.record(batch.lane, latency_us, n, 0.0, true);
+                let _ = req.reply.send(Response {
+                    result: Err(Error::Coordinator(msg.clone())),
+                    latency_us,
+                    energy_uj: 0.0,
+                    batch_size: n,
+                });
+            }
+        }
+    }
+}
+
+/// Feature lane: digital = one fused XLA artifact; analog = chip MVM +
+/// digital post-processing (XLA for rbf/softmax, native for arccos0's
+/// trivial heaviside).
+fn run_feature_batch(
+    shared: &Shared,
+    lane: KernelLane,
+    path: PathLane,
+    batch: &Batch,
+) -> Result<(Vec<ResponseBody>, f64)> {
+    let kernel = lane.kernel();
+    let geo = shared
+        .geometries
+        .get(&lane)
+        .ok_or_else(|| Error::Coordinator(format!("no geometry for {lane:?}")))?;
+    let n = batch.requests.len();
+
+    // gather + validate
+    let mut x = Mat::zeros(n, geo.d);
+    for (i, req) in batch.requests.iter().enumerate() {
+        match &req.body {
+            RequestBody::Features { x: row, .. } => {
+                if row.len() != geo.d {
+                    return Err(Error::Shape(format!(
+                        "feature request has {} dims, lane expects {}",
+                        row.len(),
+                        geo.d
+                    )));
+                }
+                x.row_mut(i).copy_from_slice(row);
+            }
+            _ => return Err(Error::Coordinator("mixed lane".into())),
+        }
+    }
+
+    let mapping = shared.pool.mapping(lane)?;
+    let (z, energy_uj) = match path {
+        PathLane::Digital => {
+            let spec = shared
+                .registry
+                .best_batch("feature_map", n, |s| {
+                    s.meta.get("kernel").and_then(|k| k.as_str()) == Some(kernel.as_str())
+                })
+                .ok_or_else(|| Error::Artifact(format!("no feature artifact for {kernel:?}")))?;
+            let b = spec.batch();
+            let xp = pad_rows(&x, b);
+            let exe = shared.registry.load(&spec.name)?;
+            let z = exe.run_mat(
+                &[Input::from_mat(&xp), Input::from_mat(&mapping.omega)],
+                b,
+                geo.out_dim,
+            )?;
+            (z, 0.0)
+        }
+        PathLane::Analog => {
+            // chip MVM (whole batch at once), then the digital half
+            let u = shared.pool.project(lane, &x)?;
+            let z = match kernel {
+                Kernel::ArcCos0 => {
+                    crate::features::postprocess(kernel, &u, None)
+                }
+                Kernel::Rbf => {
+                    let spec = shared
+                        .registry
+                        .best_batch("postprocess", n, |s| {
+                            s.meta.get("kernel").and_then(|k| k.as_str()) == Some("rbf")
+                        })
+                        .ok_or_else(|| Error::Artifact("no rbf postproc artifact".into()))?;
+                    let b = spec.batch();
+                    let up = pad_rows(&u, b);
+                    let sq = Mat::zeros(b, 1); // unused by rbf postproc
+                    let exe = shared.registry.load(&spec.name)?;
+                    exe.run_mat(&[Input::from_mat(&up), Input::from_mat(&sq)], b, geo.out_dim)?
+                }
+                Kernel::Softmax => {
+                    let spec = shared
+                        .registry
+                        .best_batch("postprocess", n, |s| {
+                            s.meta.get("kernel").and_then(|k| k.as_str()) == Some("softmax")
+                        })
+                        .ok_or_else(|| Error::Artifact("no softmax postproc artifact".into()))?;
+                    let b = spec.batch();
+                    let up = pad_rows(&u, b);
+                    let mut sq = Mat::zeros(b, 1);
+                    for i in 0..n {
+                        sq.data[i] =
+                            x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
+                    }
+                    let exe = shared.registry.load(&spec.name)?;
+                    exe.run_mat(&[Input::from_mat(&up), Input::from_mat(&sq)], b, geo.out_dim)?
+                }
+            };
+            // modelled AIMC energy of the mapping (Supp. Table VIII method)
+            let ops = mapping_ops(n, geo.d, geo.m);
+            let (_, e_mj) = latency_energy(ops, &Device::Aimc.spec());
+            (z, e_mj * 1e3)
+        }
+    };
+
+    let bodies = (0..n)
+        .map(|i| ResponseBody::Features(z.row(i).to_vec()))
+        .collect();
+    Ok((bodies, energy_uj))
+}
+
+/// Performer lane: pick the artifact variant for the mode, marshal noisy
+/// weights for hw paths, run, argmax.
+fn run_performer_batch(
+    shared: &Shared,
+    mode: ModeLane,
+    batch: &Batch,
+) -> Result<(Vec<ResponseBody>, f64)> {
+    let bundle = shared
+        .bundle
+        .as_ref()
+        .ok_or_else(|| Error::Coordinator("no trained model in artifacts".into()))?;
+    let mode = mode.mode();
+    let n = batch.requests.len();
+    let seq_len = bundle.seq_len;
+
+    // serve the manifest's primary task (other tasks are evaluated via
+    // the experiment harness, not the serving engine)
+    let task = shared
+        .registry
+        .manifest
+        .get("task")
+        .and_then(|v| v.as_str())
+        .unwrap_or("pattern")
+        .to_string();
+    let spec = shared
+        .registry
+        .best_batch("performer", n, |s| {
+            s.meta.get("mode").and_then(|m| m.as_str()) == Some(mode.as_str())
+                && s.meta.get("task").and_then(|t| t.as_str()) == Some(task.as_str())
+        })
+        .ok_or_else(|| Error::Artifact(format!("no performer artifact for {mode:?}")))?;
+    let b = spec.batch();
+
+    let mut tokens = vec![0i32; b * seq_len];
+    for (i, req) in batch.requests.iter().enumerate() {
+        match &req.body {
+            RequestBody::Performer { tokens: t, .. } => {
+                if t.len() != seq_len {
+                    return Err(Error::Shape(format!(
+                        "performer request has {} tokens, model expects {seq_len}",
+                        t.len()
+                    )));
+                }
+                tokens[i * seq_len..(i + 1) * seq_len].copy_from_slice(t);
+            }
+            _ => return Err(Error::Coordinator("mixed lane".into())),
+        }
+    }
+    // pad with copies of the first row (keeps token ids in-vocab)
+    for i in n..b {
+        let (head, tail) = tokens.split_at_mut(i * seq_len);
+        tail[..seq_len].copy_from_slice(&head[..seq_len]);
+    }
+
+    let seed = shared.seed_ctr.fetch_add(1, Ordering::Relaxed);
+    let (omega_override, param_override) = match mode {
+        PerfMode::Fp32 => (None, None),
+        PerfMode::HwAttn => (shared.noisy_omega.as_ref(), None),
+        PerfMode::HwFull => (shared.noisy_omega.as_ref(), Some(&shared.noisy_params)),
+    };
+    let inputs = bundle.performer_inputs(spec, &tokens, seed, omega_override, param_override)?;
+    let exe = shared.registry.load(&spec.name)?;
+    let logits = exe.run_mat(&inputs, b, shared.classes)?;
+
+    // modelled analog energy: the FAVOR+ mapping (hw modes) runs on-chip
+    let energy_uj = if mode == PerfMode::Fp32 {
+        0.0
+    } else {
+        let (d_head, m) = (bundle.omega.rows, bundle.omega.cols);
+        let layers = shared
+            .registry
+            .model_config()
+            .and_then(|c| c.get("n_layers"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(2);
+        let heads = shared
+            .registry
+            .model_config()
+            .and_then(|c| c.get("n_heads"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(2);
+        // Q and K mappings, per layer, per head
+        let ops = 2.0 * layers as f64 * heads as f64 * mapping_ops(n * seq_len, d_head, m);
+        let (_, e_mj) = latency_energy(ops, &Device::Aimc.spec());
+        e_mj * 1e3
+    };
+
+    let bodies = (0..n)
+        .map(|i| {
+            let row = logits.row(i);
+            let mut best = 0;
+            for j in 1..row.len() {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            ResponseBody::Class { label: best, logits: row.to_vec() }
+        })
+        .collect();
+    Ok((bodies, energy_uj))
+}
+
+fn pad_rows(x: &Mat, to: usize) -> Mat {
+    if x.rows == to {
+        return x.clone();
+    }
+    assert!(x.rows <= to, "batch larger than artifact capacity");
+    let mut out = Mat::zeros(to, x.cols);
+    for i in 0..x.rows {
+        out.row_mut(i).copy_from_slice(x.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::PathKind;
+
+    fn config() -> Config {
+        let mut cfg = Config::default();
+        cfg.artifacts_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .to_string_lossy()
+            .to_string();
+        cfg.serve.max_wait_us = 500;
+        cfg.serve.workers = 2;
+        cfg.serve.warm = false; // tests compile lazily to stay fast
+        cfg
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn engine_serves_feature_requests_both_paths() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::start(&config()).unwrap();
+        let sub = engine.submitter();
+        let mut rng = Rng::new(0);
+        for path in [PathKind::Digital, PathKind::Analog] {
+            let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+            let resp = sub
+                .call(RequestBody::Features { kernel: Kernel::Rbf, path, x })
+                .unwrap();
+            let body = resp.result.unwrap();
+            match body {
+                ResponseBody::Features(z) => {
+                    assert_eq!(z.len(), 512);
+                    assert!(z.iter().all(|v| v.is_finite()));
+                }
+                _ => panic!("wrong body"),
+            }
+            if path == PathKind::Analog {
+                assert!(resp.energy_uj > 0.0);
+            }
+        }
+        assert!(engine.telemetry().total_requests() >= 2);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn analog_and_digital_features_agree_statistically() {
+        if !have_artifacts() {
+            return;
+        }
+        let engine = Engine::start(&config()).unwrap();
+        let sub = engine.submitter();
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+        let get = |path| {
+            let resp = sub
+                .call(RequestBody::Features { kernel: Kernel::Rbf, path, x: x.clone() })
+                .unwrap();
+            match resp.result.unwrap() {
+                ResponseBody::Features(z) => z,
+                _ => panic!(),
+            }
+        };
+        let zd = get(PathKind::Digital);
+        let za = get(PathKind::Analog);
+        let rel = crate::util::stats::rel_fro_error(&za, &zd);
+        assert!(rel > 0.0 && rel < 0.5, "analog-vs-digital rel {rel}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn engine_serves_performer_all_modes() {
+        if !have_artifacts() {
+            return;
+        }
+        let engine = Engine::start(&config()).unwrap();
+        assert!(engine.has_model());
+        let sub = engine.submitter();
+        let seq_len = engine.seq_len().unwrap();
+        let mut rng = Rng::new(2);
+        let batch = crate::datasets::lra::gen_pattern(&mut rng, 8, seq_len);
+        // HwFull is exercised by the table1 experiment test + benches; its
+        // artifact compile (~30s) is too heavy for this unit test
+        for mode in [PerfMode::Fp32, PerfMode::HwAttn] {
+            let mut correct = 0;
+            let rxs: Vec<_> = (0..8)
+                .map(|i| {
+                    sub.submit(RequestBody::Performer {
+                        mode,
+                        tokens: batch.row(i).to_vec(),
+                    })
+                    .unwrap()
+                })
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().unwrap();
+                match resp.result.unwrap() {
+                    ResponseBody::Class { label, logits } => {
+                        assert_eq!(logits.len(), 2);
+                        if label == batch.labels[i] {
+                            correct += 1;
+                        }
+                    }
+                    _ => panic!(),
+                }
+            }
+            // trained to ~100%; noise paths must stay near
+            assert!(correct >= 6, "{mode:?}: {correct}/8");
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn invalid_dim_is_per_request_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let engine = Engine::start(&config()).unwrap();
+        let sub = engine.submitter();
+        let resp = sub
+            .call(RequestBody::Features {
+                kernel: Kernel::Rbf,
+                path: PathKind::Digital,
+                x: vec![0.0; 3], // wrong d
+            })
+            .unwrap();
+        assert!(resp.result.is_err());
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 serving coordinator — the system contribution: an inference server
+//! that routes kernel-approximation workloads between the simulated AIMC
+//! chip (analog path) and AOT-compiled XLA artifacts (digital path), with
+//! dynamic batching, a tile pool, telemetry, and a TCP line protocol.
+//!
+//! Data flow:
+//!
+//! ```text
+//! clients -> Submitter -> ingress queue -> batcher (per-lane, max_batch /
+//!   max_wait) -> worker pool -> { TilePool (chip MVM) + postproc artifact
+//!                               | fused digital artifact
+//!                               | performer artifact (+ noisy weights) }
+//!          -> replies (+ latency/energy telemetry)
+//! ```
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod server;
+pub mod telemetry;
+pub mod tilepool;
+
+pub use engine::{Engine, Submitter};
+pub use request::{PathKind, PerfMode, Request, RequestBody, Response, ResponseBody};
+pub use server::{Client, Server};
+pub use telemetry::Telemetry;
+pub use tilepool::TilePool;

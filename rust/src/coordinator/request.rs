@@ -1,0 +1,225 @@
+//! Request/response types of the serving coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::kernels::Kernel;
+
+/// Where the feature projection runs (the router's core decision).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PathKind {
+    /// FP-32 XLA artifact
+    Digital,
+    /// simulated AIMC chip + digital post-processing artifact
+    Analog,
+}
+
+impl PathKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PathKind::Digital => "digital",
+            PathKind::Analog => "analog",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PathKind> {
+        match s {
+            "digital" | "fp32" => Some(PathKind::Digital),
+            "analog" | "hw" => Some(PathKind::Analog),
+            _ => None,
+        }
+    }
+}
+
+/// Performer deployment variant (Table I rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PerfMode {
+    Fp32,
+    HwAttn,
+    HwFull,
+}
+
+impl PerfMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PerfMode::Fp32 => "fp32",
+            PerfMode::HwAttn => "hw_attn",
+            PerfMode::HwFull => "hw_full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PerfMode> {
+        match s {
+            "fp32" => Some(PerfMode::Fp32),
+            "hw_attn" => Some(PerfMode::HwAttn),
+            "hw_full" => Some(PerfMode::HwFull),
+            _ => None,
+        }
+    }
+}
+
+/// Batching lane: requests in one lane share an executable + path and can
+/// be batched together.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Lane {
+    Feature(KernelLane, PathLane),
+    Performer(ModeLane),
+}
+
+// ordered newtype-ish mirrors (Kernel/PathKind don't derive Ord)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelLane {
+    Rbf,
+    ArcCos0,
+    Softmax,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PathLane {
+    Digital,
+    Analog,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModeLane {
+    Fp32,
+    HwAttn,
+    HwFull,
+}
+
+impl From<Kernel> for KernelLane {
+    fn from(k: Kernel) -> Self {
+        match k {
+            Kernel::Rbf => KernelLane::Rbf,
+            Kernel::ArcCos0 => KernelLane::ArcCos0,
+            Kernel::Softmax => KernelLane::Softmax,
+        }
+    }
+}
+
+impl KernelLane {
+    pub fn kernel(&self) -> Kernel {
+        match self {
+            KernelLane::Rbf => Kernel::Rbf,
+            KernelLane::ArcCos0 => Kernel::ArcCos0,
+            KernelLane::Softmax => Kernel::Softmax,
+        }
+    }
+}
+
+impl From<PathKind> for PathLane {
+    fn from(p: PathKind) -> Self {
+        match p {
+            PathKind::Digital => PathLane::Digital,
+            PathKind::Analog => PathLane::Analog,
+        }
+    }
+}
+
+impl From<PerfMode> for ModeLane {
+    fn from(m: PerfMode) -> Self {
+        match m {
+            PerfMode::Fp32 => ModeLane::Fp32,
+            PerfMode::HwAttn => ModeLane::HwAttn,
+            PerfMode::HwFull => ModeLane::HwFull,
+        }
+    }
+}
+
+impl ModeLane {
+    pub fn mode(&self) -> PerfMode {
+        match self {
+            ModeLane::Fp32 => PerfMode::Fp32,
+            ModeLane::HwAttn => PerfMode::HwAttn,
+            ModeLane::HwFull => PerfMode::HwFull,
+        }
+    }
+}
+
+/// Request payload.
+#[derive(Clone, Debug)]
+pub enum RequestBody {
+    /// map one sample x (len d) to its feature vector z
+    Features {
+        kernel: Kernel,
+        path: PathKind,
+        x: Vec<f32>,
+    },
+    /// classify one token sequence with the Performer
+    Performer { mode: PerfMode, tokens: Vec<i32> },
+}
+
+impl RequestBody {
+    pub fn lane(&self) -> Lane {
+        match self {
+            RequestBody::Features { kernel, path, .. } => {
+                Lane::Feature((*kernel).into(), (*path).into())
+            }
+            RequestBody::Performer { mode, .. } => Lane::Performer((*mode).into()),
+        }
+    }
+}
+
+/// Response payload.
+#[derive(Clone, Debug)]
+pub enum ResponseBody {
+    Features(Vec<f32>),
+    Class { label: usize, logits: Vec<f32> },
+}
+
+/// Full response with telemetry.
+#[derive(Debug)]
+pub struct Response {
+    pub result: Result<ResponseBody>,
+    /// end-to-end latency (enqueue -> reply), microseconds
+    pub latency_us: f64,
+    /// modelled AIMC energy of the analog portion, microjoules
+    pub energy_uj: f64,
+    /// batch this request was served in
+    pub batch_size: usize,
+}
+
+/// An in-flight request.
+pub struct Request {
+    pub body: RequestBody,
+    pub reply: mpsc::SyncSender<Response>,
+    pub enqueued: Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_partition_requests() {
+        let a = RequestBody::Features {
+            kernel: Kernel::Rbf,
+            path: PathKind::Analog,
+            x: vec![0.0],
+        };
+        let b = RequestBody::Features {
+            kernel: Kernel::Rbf,
+            path: PathKind::Digital,
+            x: vec![0.0],
+        };
+        let c = RequestBody::Performer { mode: PerfMode::Fp32, tokens: vec![] };
+        assert_ne!(a.lane(), b.lane());
+        assert_ne!(a.lane(), c.lane());
+        assert_eq!(
+            a.lane(),
+            Lane::Feature(KernelLane::Rbf, PathLane::Analog)
+        );
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        for p in [PathKind::Digital, PathKind::Analog] {
+            assert_eq!(PathKind::parse(p.as_str()), Some(p));
+        }
+        for m in [PerfMode::Fp32, PerfMode::HwAttn, PerfMode::HwFull] {
+            assert_eq!(PerfMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(PathKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,278 @@
+//! TCP line-protocol server: newline-delimited JSON requests/responses.
+//!
+//! Request lines:
+//!   {"type":"features","kernel":"rbf","path":"analog","x":[...]}
+//!   {"type":"performer","mode":"hw_attn","tokens":[...]}
+//!   {"type":"stats"}
+//!   {"type":"ping"}
+//! Responses: {"ok":true, ...} | {"ok":false,"error":"..."}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::engine::{Engine, Submitter};
+use super::request::{PathKind, PerfMode, RequestBody, ResponseBody};
+use crate::config::json::{arr, num, obj, s, Json};
+use crate::error::{Error, Result};
+use crate::kernels::Kernel;
+
+/// Running server (owns the engine).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    engine: Option<Engine>,
+}
+
+impl Server {
+    /// Bind + serve in background threads.
+    pub fn start(engine: Engine, bind: &str) -> Result<Server> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| Error::Coordinator(format!("bind {bind}: {e}")))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let submitter = engine.submitter();
+        let accept_thread = std::thread::spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let sub = submitter.clone();
+                        let stop_c = stop2.clone();
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, sub, stop_c);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            // handlers poll the stop flag via their read timeout, so this
+            // join completes within one timeout interval even with
+            // clients still connected
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread), engine: Some(engine) })
+    }
+
+    pub fn submitter(&self) -> Submitter {
+        self.engine.as_ref().unwrap().submitter()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine.as_ref().unwrap()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(e) = self.engine.take() {
+            e.shutdown();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    sub: Submitter,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    // periodic read timeout lets the handler notice server shutdown even
+    // while a client holds the connection open without sending
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF: client closed
+            Ok(_) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let reply = handle_line(&line, &sub);
+                writer.write_all(reply.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Parse one request line, dispatch, serialize the reply.
+pub fn handle_line(line: &str, sub: &Submitter) -> Json {
+    match parse_and_dispatch(line, sub) {
+        Ok(j) => j,
+        Err(e) => obj(vec![("ok", Json::Bool(false)), ("error", s(&e.to_string()))]),
+    }
+}
+
+fn parse_and_dispatch(line: &str, sub: &Submitter) -> Result<Json> {
+    let req = Json::parse(line)?;
+    let ty = req.req_str("type")?;
+    match ty {
+        "ping" => Ok(obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+        "features" => {
+            let kernel = Kernel::parse(req.req_str("kernel")?)
+                .ok_or_else(|| Error::Parse("bad kernel".into()))?;
+            let path = PathKind::parse(req.str_or("path", "digital"))
+                .ok_or_else(|| Error::Parse("bad path".into()))?;
+            let x: Vec<f32> = req
+                .req("x")?
+                .as_arr()
+                .ok_or_else(|| Error::Parse("x must be an array".into()))?
+                .iter()
+                .filter_map(|v| v.as_f64().map(|f| f as f32))
+                .collect();
+            let resp = sub.call(RequestBody::Features { kernel, path, x })?;
+            let body = resp.result?;
+            match body {
+                ResponseBody::Features(z) => Ok(obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("z", arr(z.iter().map(|&v| num(v as f64)))),
+                    ("latency_us", num(resp.latency_us)),
+                    ("energy_uj", num(resp.energy_uj)),
+                    ("batch", num(resp.batch_size as f64)),
+                ])),
+                _ => Err(Error::Coordinator("unexpected body".into())),
+            }
+        }
+        "performer" => {
+            let mode = PerfMode::parse(req.str_or("mode", "fp32"))
+                .ok_or_else(|| Error::Parse("bad mode".into()))?;
+            let tokens: Vec<i32> = req
+                .req("tokens")?
+                .as_arr()
+                .ok_or_else(|| Error::Parse("tokens must be an array".into()))?
+                .iter()
+                .filter_map(|v| v.as_f64().map(|f| f as i32))
+                .collect();
+            let resp = sub.call(RequestBody::Performer { mode, tokens })?;
+            let body = resp.result?;
+            match body {
+                ResponseBody::Class { label, logits } => Ok(obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("label", num(label as f64)),
+                    ("logits", arr(logits.iter().map(|&v| num(v as f64)))),
+                    ("latency_us", num(resp.latency_us)),
+                    ("energy_uj", num(resp.energy_uj)),
+                    ("batch", num(resp.batch_size as f64)),
+                ])),
+                _ => Err(Error::Coordinator("unexpected body".into())),
+            }
+        }
+        other => Err(Error::Parse(format!("unknown request type '{other}'"))),
+    }
+}
+
+/// Minimal blocking TCP client for the line protocol (examples + tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Coordinator(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn call(&mut self, request: &Json) -> Result<Json> {
+        self.writer.write_all(request.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn config() -> Config {
+        let mut cfg = Config::default();
+        cfg.artifacts_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .to_string_lossy()
+            .to_string();
+        cfg.serve.max_wait_us = 500;
+        cfg.serve.bind = "127.0.0.1:0".into();
+        cfg.serve.warm = false;
+        cfg
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn tcp_roundtrip_ping_features_performer() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let cfg = config();
+        let engine = Engine::start(&cfg).unwrap();
+        let seq_len = engine.seq_len().unwrap();
+        let server = Server::start(engine, &cfg.serve.bind).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+
+        let pong = client.call(&Json::parse(r#"{"type":"ping"}"#).unwrap()).unwrap();
+        assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+        let x: Vec<String> = (0..16).map(|i| format!("{}", (i as f64) / 16.0)).collect();
+        let req = format!(
+            r#"{{"type":"features","kernel":"rbf","path":"analog","x":[{}]}}"#,
+            x.join(",")
+        );
+        let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("z").unwrap().as_arr().unwrap().len(), 512);
+
+        let mut rng = crate::util::Rng::new(0);
+        let batch = crate::datasets::lra::gen_pattern(&mut rng, 1, seq_len);
+        let toks: Vec<String> = batch.row(0).iter().map(|t| t.to_string()).collect();
+        let req = format!(
+            r#"{{"type":"performer","mode":"fp32","tokens":[{}]}}"#,
+            toks.join(",")
+        );
+        let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let label = resp.get("label").unwrap().as_usize().unwrap();
+        assert_eq!(label, batch.labels[0]);
+
+        // unknown type -> clean error
+        let resp = client.call(&Json::parse(r#"{"type":"wat"}"#).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+
+        server.shutdown();
+    }
+}

@@ -1,0 +1,95 @@
+//! Serving telemetry: per-lane latency percentiles, batch-size stats,
+//! modelled energy totals.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::request::Lane;
+use crate::util::Summary;
+
+#[derive(Default)]
+struct LaneStats {
+    latency_us: Summary,
+    batch_sizes: Summary,
+    requests: u64,
+    errors: u64,
+    energy_uj: f64,
+}
+
+/// Thread-safe telemetry sink.
+#[derive(Default)]
+pub struct Telemetry {
+    inner: Mutex<BTreeMap<Lane, LaneStats>>,
+}
+
+/// Snapshot for one lane.
+#[derive(Clone, Debug)]
+pub struct LaneSnapshot {
+    pub lane: Lane,
+    pub requests: u64,
+    pub errors: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_batch: f64,
+    pub energy_uj: f64,
+}
+
+impl Telemetry {
+    pub fn record(&self, lane: Lane, latency_us: f64, batch: usize, energy_uj: f64, err: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let s = inner.entry(lane).or_default();
+        s.latency_us.push(latency_us);
+        s.batch_sizes.push(batch as f64);
+        s.requests += 1;
+        if err {
+            s.errors += 1;
+        }
+        s.energy_uj += energy_uj;
+    }
+
+    pub fn snapshot(&self) -> Vec<LaneSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .iter()
+            .map(|(lane, s)| LaneSnapshot {
+                lane: *lane,
+                requests: s.requests,
+                errors: s.errors,
+                p50_us: s.latency_us.p50(),
+                p95_us: s.latency_us.p95(),
+                p99_us: s.latency_us.p99(),
+                mean_batch: s.batch_sizes.mean(),
+                energy_uj: s.energy_uj,
+            })
+            .collect()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.inner.lock().unwrap().values().map(|s| s.requests).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{KernelLane, PathLane};
+
+    #[test]
+    fn records_and_snapshots() {
+        let t = Telemetry::default();
+        let lane = Lane::Feature(KernelLane::Rbf, PathLane::Analog);
+        for i in 0..10 {
+            t.record(lane, 100.0 + i as f64, 4, 0.5, i == 9);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 1);
+        let s = &snap[0];
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.errors, 1);
+        assert!((s.mean_batch - 4.0).abs() < 1e-9);
+        assert!(s.p50_us >= 100.0 && s.p99_us <= 109.0 + 1e-9);
+        assert!((s.energy_uj - 5.0).abs() < 1e-9);
+        assert_eq!(t.total_requests(), 10);
+    }
+}

@@ -1,0 +1,136 @@
+//! Tile pool: owns the simulated chip, programs the mapping matrices of
+//! each feature lane (with optional replication across spare cores), and
+//! serializes analog MVMs.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::request::KernelLane;
+use crate::aimc::{Chip, MatrixHandle};
+use crate::config::ChipConfig;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// One programmed feature-mapping matrix.
+pub struct LaneMapping {
+    pub handle: MatrixHandle,
+    /// the FP-32 Ω (digital-path twin of the programmed weights)
+    pub omega: Mat,
+    pub d: usize,
+    pub m: usize,
+}
+
+/// The chip + its programmed lanes.
+pub struct TilePool {
+    chip: Mutex<Chip>,
+    lanes: BTreeMap<KernelLane, LaneMapping>,
+}
+
+impl TilePool {
+    pub fn new(cfg: ChipConfig, seed: u64) -> TilePool {
+        TilePool { chip: Mutex::new(Chip::new(cfg, seed)), lanes: BTreeMap::new() }
+    }
+
+    /// Program Ω for a feature lane. `x_cal` is a sample of (normalized)
+    /// inputs used for DAC/ADC calibration; `replication` spreads copies
+    /// over spare cores for throughput.
+    pub fn program_lane(
+        &mut self,
+        lane: KernelLane,
+        omega: Mat,
+        x_cal: &Mat,
+        replication: usize,
+    ) -> Result<()> {
+        if self.lanes.contains_key(&lane) {
+            return Err(Error::Coordinator(format!("lane {lane:?} already programmed")));
+        }
+        let name = format!("omega_{}", lane.kernel().as_str());
+        let mut chip = self.chip.lock().unwrap();
+        let handle = chip.program_matrix(&name, &omega, x_cal, replication)?;
+        drop(chip);
+        let (d, m) = (omega.rows, omega.cols);
+        self.lanes.insert(lane, LaneMapping { handle, omega, d, m });
+        Ok(())
+    }
+
+    pub fn mapping(&self, lane: KernelLane) -> Result<&LaneMapping> {
+        self.lanes
+            .get(&lane)
+            .ok_or_else(|| Error::Coordinator(format!("lane {lane:?} not programmed")))
+    }
+
+    /// Analog projection u = x·Ω on the chip.
+    pub fn project(&self, lane: KernelLane, x: &Mat) -> Result<Mat> {
+        let mapping = self.mapping(lane)?;
+        let mut chip = self.chip.lock().unwrap();
+        chip.matmul(&mapping.handle, x)
+    }
+
+    pub fn cores_used(&self) -> usize {
+        self.chip.lock().unwrap().cores_used()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.chip.lock().unwrap().utilization()
+    }
+
+    /// Mean GDP programming error across a lane's tiles.
+    pub fn programming_rms(&self, lane: KernelLane) -> Result<f64> {
+        let mapping = self.mapping(lane)?;
+        let chip = self.chip.lock().unwrap();
+        let stats = chip
+            .program_stats(&mapping.handle)
+            .ok_or_else(|| Error::Coordinator("no stats".into()))?;
+        Ok(stats.iter().map(|s| s.rms_final).sum::<f64>() / stats.len().max(1) as f64)
+    }
+}
+
+/// Deterministic Ω generator for serving lanes.
+pub fn lane_omega(lane: KernelLane, d: usize, m: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed ^ 0x0_4E6A ^ lane as u64);
+    crate::features::sample_omega(crate::features::Sampler::Orf, d, m, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_fro_error;
+
+    #[test]
+    fn program_and_project() {
+        let mut pool = TilePool::new(ChipConfig::default(), 1);
+        let mut rng = Rng::new(0);
+        let omega = Mat::randn(16, 64, &mut rng);
+        let x_cal = Mat::randn(32, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1)
+            .unwrap();
+        assert_eq!(pool.cores_used(), 1);
+        let x = Mat::randn(8, 16, &mut rng);
+        let u = pool.project(KernelLane::Rbf, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &omega);
+        let rel = rel_fro_error(&u.data, &want.data);
+        assert!(rel > 0.0 && rel < 0.12, "rel {rel}");
+        assert!(pool.programming_rms(KernelLane::Rbf).unwrap() < 0.05);
+    }
+
+    #[test]
+    fn double_program_rejected() {
+        let mut pool = TilePool::new(ChipConfig::default(), 2);
+        let mut rng = Rng::new(1);
+        let omega = Mat::randn(8, 8, &mut rng);
+        let x = Mat::randn(8, 8, &mut rng);
+        pool.program_lane(KernelLane::Softmax, omega.clone(), &x, 1)
+            .unwrap();
+        assert!(pool
+            .program_lane(KernelLane::Softmax, omega, &x, 1)
+            .is_err());
+    }
+
+    #[test]
+    fn unprogrammed_lane_errors() {
+        let pool = TilePool::new(ChipConfig::default(), 3);
+        let x = Mat::zeros(1, 4);
+        assert!(pool.project(KernelLane::ArcCos0, &x).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Optional CSV loader: if real benchmark data is placed under `data/`
+//! (e.g. `data/eeg.csv` with the label in the last column), it is used in
+//! place of the synthetic generator.
+
+use std::path::Path;
+
+use super::synth::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// Parse a headerless CSV of floats, label (integer) in the last column.
+pub fn parse_csv(src: &str) -> Result<(Mat, Vec<usize>)> {
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels = Vec::new();
+    let mut width = None;
+    for (lineno, line) in src.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() < 2 {
+            return Err(Error::Parse(format!("csv line {}: too few fields", lineno + 1)));
+        }
+        match width {
+            None => width = Some(fields.len()),
+            Some(w) if w != fields.len() => {
+                return Err(Error::Parse(format!(
+                    "csv line {}: ragged row ({} vs {})",
+                    lineno + 1,
+                    fields.len(),
+                    w
+                )))
+            }
+            _ => {}
+        }
+        let mut row = Vec::with_capacity(fields.len() - 1);
+        for f in &fields[..fields.len() - 1] {
+            row.push(
+                f.trim()
+                    .parse::<f32>()
+                    .map_err(|_| Error::Parse(format!("csv line {}: bad float '{f}'", lineno + 1)))?,
+            );
+        }
+        let label: f64 = fields[fields.len() - 1]
+            .trim()
+            .parse()
+            .map_err(|_| Error::Parse(format!("csv line {}: bad label", lineno + 1)))?;
+        labels.push(label as i64);
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        return Err(Error::Parse("csv: empty".into()));
+    }
+    // map labels to 0..k (handles -1/+1 and 1..k conventions)
+    let mut uniq: Vec<i64> = labels.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let y: Vec<usize> = labels
+        .iter()
+        .map(|l| uniq.binary_search(l).unwrap())
+        .collect();
+    let d = rows[0].len();
+    let mut x = Mat::zeros(rows.len(), d);
+    for (i, row) in rows.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(row);
+    }
+    Ok((x, y))
+}
+
+/// Load `data/<name>.csv` if present, split 50/50, normalize.
+pub fn try_load_csv(name: &str, data_dir: &Path, seed: u64) -> Result<Option<Dataset>> {
+    let path = data_dir.join(format!("{name}.csv"));
+    if !path.exists() {
+        return Ok(None);
+    }
+    let src = std::fs::read_to_string(&path)?;
+    let (x, y) = parse_csv(&src)?;
+    let classes = y.iter().max().map(|m| m + 1).unwrap_or(2);
+    let n_train = x.rows / 2;
+    let mut rng = Rng::new(seed);
+    Ok(Some(super::synth::split_dataset(name, x, y, classes, n_train, &mut rng)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_csv() {
+        let (x, y) = parse_csv("1.0,2.0,0\n3.5,-1.0,1\n0.0,0.0,0\n1,1,1\n").unwrap();
+        assert_eq!((x.rows, x.cols), (4, 2));
+        assert_eq!(y, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn maps_pm1_labels() {
+        let (_, y) = parse_csv("0,-1\n0,1\n0,-1\n").unwrap();
+        assert_eq!(y, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(parse_csv("1,2,0\n1,0\n").is_err());
+        assert!(parse_csv("").is_err());
+        assert!(parse_csv("a,b,0\n").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_none() {
+        let r = try_load_csv("definitely-missing", Path::new("/nonexistent"), 0).unwrap();
+        assert!(r.is_none());
+    }
+}

@@ -1,0 +1,180 @@
+//! LRA-lite long-sequence tasks, mirroring `python/compile/data.py` for
+//! serving-time request replay and load generation. The Rust generators
+//! use the same construction but an independent RNG: the coordinator
+//! normally replays the exact held-out set exported by the Python side
+//! (`testset_<task>.npz`); these generators feed load tests and ablations.
+
+use crate::util::Rng;
+
+pub const PATTERN_VOCAB: usize = 16;
+pub const LISTOPS_VOCAB: usize = 18;
+
+/// A batch of token sequences with labels.
+#[derive(Clone, Debug)]
+pub struct SeqBatch {
+    pub tokens: Vec<i32>, // n x seq_len row-major
+    pub labels: Vec<usize>,
+    pub n: usize,
+    pub seq_len: usize,
+}
+
+impl SeqBatch {
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+}
+
+/// Long-range retrieval task (`pattern`): one marker token (id 1) in the
+/// last two thirds, followed by a payload in [3, 9]; label = payload
+/// parity.
+pub fn gen_pattern(rng: &mut Rng, n: usize, seq_len: usize) -> SeqBatch {
+    assert!(seq_len >= 8);
+    let mut tokens = vec![0i32; n * seq_len];
+    let mut labels = Vec::with_capacity(n);
+    let third = seq_len / 3;
+    for i in 0..n {
+        let row = &mut tokens[i * seq_len..(i + 1) * seq_len];
+        for t in row.iter_mut() {
+            *t = (10 + rng.below(PATTERN_VOCAB - 10)) as i32;
+        }
+        let pos = third + rng.below(seq_len - 1 - third);
+        let payload = 3 + rng.below(7);
+        row[pos] = 1;
+        row[pos + 1] = payload as i32;
+        labels.push((payload - 3) % 2);
+    }
+    SeqBatch { tokens, labels, n, seq_len }
+}
+
+const OP_MAX: i32 = 11;
+const OP_MIN: i32 = 12;
+const OP_MED: i32 = 13;
+const OP_SM: i32 = 14;
+const LPAR: i32 = 15;
+const RPAR: i32 = 16;
+
+fn gen_expr(rng: &mut Rng, depth: usize, max_args: usize, out: &mut Vec<i32>) -> usize {
+    if depth == 0 || rng.f64() < 0.35 {
+        let v = rng.below(10);
+        out.push(1 + v as i32);
+        return v;
+    }
+    let op = [OP_MAX, OP_MIN, OP_MED, OP_SM][rng.below(4)];
+    let n_args = 2 + rng.below(max_args - 1);
+    out.push(LPAR);
+    out.push(op);
+    let mut vals = Vec::with_capacity(n_args);
+    for _ in 0..n_args {
+        vals.push(gen_expr(rng, depth - 1, max_args, out));
+    }
+    out.push(RPAR);
+    match op {
+        OP_MAX => *vals.iter().max().unwrap(),
+        OP_MIN => *vals.iter().min().unwrap(),
+        OP_MED => {
+            let mut s = vals.clone();
+            s.sort_unstable();
+            s[s.len() / 2]
+        }
+        _ => vals.iter().sum::<usize>() % 10,
+    }
+}
+
+/// ListOps-lite: prefix-notation expressions, label = evaluated digit.
+pub fn gen_listops(rng: &mut Rng, n: usize, seq_len: usize) -> SeqBatch {
+    let mut tokens = vec![0i32; n * seq_len];
+    let mut labels = Vec::with_capacity(n);
+    let mut i = 0;
+    let mut expr = Vec::new();
+    while i < n {
+        expr.clear();
+        let v = gen_expr(rng, 3, 4, &mut expr);
+        if expr.len() > seq_len {
+            continue;
+        }
+        let row = &mut tokens[i * seq_len..(i + 1) * seq_len];
+        row[..expr.len()].copy_from_slice(&expr);
+        labels.push(v);
+        i += 1;
+    }
+    SeqBatch { tokens, labels, n, seq_len }
+}
+
+/// Evaluate a listops token sequence (oracle used by tests).
+pub fn eval_listops(tokens: &[i32]) -> Option<usize> {
+    let toks: Vec<i32> = tokens.iter().copied().filter(|&t| t != 0).collect();
+    let mut pos = 0usize;
+    fn parse(toks: &[i32], pos: &mut usize) -> Option<usize> {
+        let t = *toks.get(*pos)?;
+        if (1..=10).contains(&t) {
+            *pos += 1;
+            return Some((t - 1) as usize);
+        }
+        if t != LPAR {
+            return None;
+        }
+        *pos += 1;
+        let op = *toks.get(*pos)?;
+        *pos += 1;
+        let mut vals = Vec::new();
+        while *toks.get(*pos)? != RPAR {
+            vals.push(parse(toks, pos)?);
+        }
+        *pos += 1;
+        Some(match op {
+            OP_MAX => *vals.iter().max()?,
+            OP_MIN => *vals.iter().min()?,
+            OP_MED => {
+                let mut s = vals.clone();
+                s.sort_unstable();
+                s[s.len() / 2]
+            }
+            OP_SM => vals.iter().sum::<usize>() % 10,
+            _ => return None,
+        })
+    }
+    parse(&toks, &mut pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_structure() {
+        let mut rng = Rng::new(0);
+        let b = gen_pattern(&mut rng, 128, 64);
+        for i in 0..b.n {
+            let row = b.row(i);
+            let pos = row.iter().position(|&t| t == 1).unwrap();
+            assert!(pos >= 64 / 3);
+            let payload = row[pos + 1] as usize;
+            assert!((3..=9).contains(&payload));
+            assert_eq!(b.labels[i], (payload - 3) % 2);
+        }
+    }
+
+    #[test]
+    fn listops_labels_match_oracle() {
+        let mut rng = Rng::new(1);
+        let b = gen_listops(&mut rng, 64, 128);
+        for i in 0..b.n {
+            assert_eq!(eval_listops(b.row(i)), Some(b.labels[i]), "row {i}");
+        }
+    }
+
+    #[test]
+    fn listops_labels_in_range() {
+        let mut rng = Rng::new(2);
+        let b = gen_listops(&mut rng, 64, 96);
+        assert!(b.labels.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = gen_pattern(&mut Rng::new(5), 16, 32);
+        let b = gen_pattern(&mut Rng::new(5), 16, 32);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.labels, b.labels);
+    }
+}

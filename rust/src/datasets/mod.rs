@@ -1,0 +1,16 @@
+//! Datasets: synthetic substitutes for the paper's benchmarks.
+//!
+//! No network access exists in the build environment, so the six UCI
+//! benchmarks of Fig. 2 are replaced by generators matched to each
+//! dataset's published statistics (dimension, class count, sample counts —
+//! Supp. Table III), with nonlinear class structure so that kernel methods
+//! outperform linear ones (DESIGN.md §Substitutions). If real CSVs are
+//! placed under `data/`, `loader` will use them instead.
+
+pub mod loader;
+pub mod lra;
+pub mod synth;
+pub mod uci;
+
+pub use synth::Dataset;
+pub use uci::{load_uci, UciName, ALL_UCI};

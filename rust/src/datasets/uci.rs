@@ -1,0 +1,151 @@
+//! UCI-shaped synthetic benchmarks (Fig. 2 substitutes).
+//!
+//! Each generator matches the published statistics of its namesake
+//! (dimension d, class count, train/test sizes from Supp. Table III —
+//! scaled down by `scale` to keep sweeps tractable) and picks a nonlinear
+//! structure qualitatively matched to the original domain. The Fig. 2
+//! experiments measure the FP32-vs-AIMC *delta* of kernel approximation,
+//! which depends on the (d, N, nonlinearity) regime, not on the actual UCI
+//! bits (DESIGN.md §Substitutions).
+
+use super::synth::{gaussian_mixture, ring, split_dataset, xor, Dataset};
+use crate::util::Rng;
+
+/// The six benchmarks of the paper's Fig. 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UciName {
+    Ijcnn,
+    Eeg,
+    CodRna,
+    Magic04,
+    Letter,
+    Skin,
+}
+
+pub const ALL_UCI: [UciName; 6] = [
+    UciName::Ijcnn,
+    UciName::Eeg,
+    UciName::CodRna,
+    UciName::Magic04,
+    UciName::Letter,
+    UciName::Skin,
+];
+
+impl UciName {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            UciName::Ijcnn => "ijcnn01",
+            UciName::Eeg => "eeg",
+            UciName::CodRna => "cod-rna",
+            UciName::Magic04 => "magic04",
+            UciName::Letter => "letter",
+            UciName::Skin => "skin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<UciName> {
+        ALL_UCI.iter().copied().find(|n| n.as_str() == s)
+    }
+
+    /// (d, classes) from Supp. Table III.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            UciName::Ijcnn => (22, 2),
+            UciName::Eeg => (14, 2),
+            UciName::CodRna => (8, 2),
+            UciName::Magic04 => (10, 2),
+            UciName::Letter => (16, 26),
+            UciName::Skin => (3, 2),
+        }
+    }
+
+    /// Reference (train, test) sizes from Supp. Table III.
+    pub fn full_sizes(&self) -> (usize, usize) {
+        match self {
+            UciName::Ijcnn => (49_990, 91_701),
+            UciName::Eeg => (7_490, 7_490),
+            UciName::CodRna => (59_535, 157_413),
+            UciName::Magic04 => (9_510, 9_510),
+            UciName::Letter => (12_000, 6_000),
+            UciName::Skin => (122_529, 122_529),
+        }
+    }
+}
+
+/// Generate a benchmark at `scale` (1.0 = paper-size; experiments default
+/// to ~0.05 so the full Fig. 2 grid stays tractable on one machine).
+pub fn load_uci(name: UciName, seed: u64, scale: f64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xD1CE_0000 ^ name.as_str().len() as u64);
+    let (d, classes) = name.dims();
+    let (ftr, fte) = name.full_sizes();
+    let n_train = ((ftr as f64 * scale) as usize).clamp(200, 20_000);
+    let n_test = ((fte as f64 * scale) as usize).clamp(200, 20_000);
+    let n = n_train + n_test;
+    let (x, y) = match name {
+        // continuous EEG traces: multimodal mixtures
+        UciName::Eeg => gaussian_mixture(&mut rng, d, classes, n, 4, 0.8),
+        // particle shower shapes: shell structure (signal/background energy)
+        UciName::Magic04 => ring(&mut rng, d, n, 0.25),
+        // RNA secondary structure: XOR-like interaction of few features
+        UciName::CodRna => xor(&mut rng, d, n, 3, 0.15),
+        // skin RGB: low-d, two warped blobs
+        UciName::Skin => gaussian_mixture(&mut rng, d, classes, n, 2, 0.45),
+        // letter: 26-class mixture
+        UciName::Letter => gaussian_mixture(&mut rng, d, classes, n, 2, 0.55),
+        // ijcnn: engine misfire windows — mixture + shell composite
+        UciName::Ijcnn => {
+            let (mut xa, mut ya) = gaussian_mixture(&mut rng, d, 2, n / 2, 3, 0.6);
+            let (xb, yb) = ring(&mut rng, d, n - n / 2, 0.3);
+            xa = crate::linalg::Mat::vstack(&[&xa, &xb]);
+            ya.extend(yb);
+            (xa, ya)
+        }
+    };
+    split_dataset(name.as_str(), x, y, classes, n_train, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_benchmarks_generate() {
+        for name in ALL_UCI {
+            let ds = load_uci(name, 0, 0.02);
+            let (d, classes) = name.dims();
+            assert_eq!(ds.d(), d, "{name:?}");
+            assert_eq!(ds.classes, classes);
+            assert!(ds.train_x.rows >= 200);
+            assert!(ds.test_x.rows >= 200);
+            assert!(ds.train_y.iter().all(|&c| c < classes));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = load_uci(UciName::Eeg, 7, 0.02);
+        let b = load_uci(UciName::Eeg, 7, 0.02);
+        assert_eq!(a.train_x.data, b.train_x.data);
+        assert_eq!(a.train_y, b.train_y);
+        let c = load_uci(UciName::Eeg, 8, 0.02);
+        assert_ne!(a.train_x.data, c.train_x.data);
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for n in ALL_UCI {
+            assert_eq!(UciName::parse(n.as_str()), Some(n));
+        }
+        assert_eq!(UciName::parse("nope"), None);
+    }
+
+    #[test]
+    fn letter_is_multiclass() {
+        let ds = load_uci(UciName::Letter, 1, 0.02);
+        let mut seen = vec![false; 26];
+        for &c in &ds.train_y {
+            seen[c] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 20);
+    }
+}

@@ -1,0 +1,90 @@
+//! Device constants from Supp. Note 4.
+
+/// Throughput/power spec of one compute device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// peak tera-operations per second
+    pub tops: f64,
+    /// power at peak, watts
+    pub power_w: f64,
+    /// die area, mm² (Discussion: 144 vs 826)
+    pub area_mm2: f64,
+}
+
+/// The compared devices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Device {
+    /// IBM HERMES Project Chip (the simulated substrate)
+    Aimc,
+    /// NVIDIA A100, INT8 tensor cores
+    GpuInt8,
+    /// NVIDIA A100, FP16 tensor cores
+    GpuFp16,
+    /// Intel i9-14900KF
+    Cpu,
+}
+
+pub const ALL_DEVICES: [Device; 4] =
+    [Device::Aimc, Device::GpuInt8, Device::GpuFp16, Device::Cpu];
+
+impl Device {
+    pub fn spec(&self) -> DeviceSpec {
+        match self {
+            Device::Aimc => DeviceSpec {
+                name: "AIMC",
+                tops: 63.1,
+                power_w: 6.5,
+                area_mm2: 144.0,
+            },
+            Device::GpuInt8 => DeviceSpec {
+                name: "GPU INT8",
+                tops: 624.0,
+                power_w: 400.0,
+                area_mm2: 826.0,
+            },
+            Device::GpuFp16 => DeviceSpec {
+                name: "GPU FP16",
+                tops: 312.0,
+                power_w: 400.0,
+                area_mm2: 826.0,
+            },
+            Device::Cpu => DeviceSpec {
+                name: "CPU",
+                tops: 1.2288,
+                power_w: 253.0,
+                area_mm2: 257.0,
+            },
+        }
+    }
+
+    /// TOPS per watt (paper: AIMC 9.76).
+    pub fn tops_per_watt(&self) -> f64 {
+        let s = self.spec();
+        s.tops / s.power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aimc_efficiency_matches_paper() {
+        // paper: "energy efficiency of 9.76 TOPS per Watt"
+        assert!((Device::Aimc.tops_per_watt() - 9.707).abs() < 0.1);
+    }
+
+    #[test]
+    fn gpu_throughput_ratio() {
+        // paper: GPU MVM throughput ~9.9x the HERMES chip (INT8)
+        let r = Device::GpuInt8.spec().tops / Device::Aimc.spec().tops;
+        assert!((r - 9.9).abs() < 0.15, "ratio {r}");
+    }
+
+    #[test]
+    fn footprint_ratio() {
+        let r = Device::GpuInt8.spec().area_mm2 / Device::Aimc.spec().area_mm2;
+        assert!(r > 5.0, "paper: 826 vs 144 mm²");
+    }
+}

@@ -1,0 +1,115 @@
+//! FLOP accounting (Supp. Table II and the Results-section counts).
+
+/// Operations of the mapping x (L x d) @ Ω (d x m): 2·L·d·m
+/// (the paper's Supp. Table VIII counts multiply+add as 2 ops).
+pub fn mapping_ops(l: usize, d: usize, m: usize) -> f64 {
+    2.0 * l as f64 * d as f64 * m as f64
+}
+
+/// Inference-FLOPs per sample for each technique of Supp. Table II.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InferenceCost {
+    /// explicit high-dimensional mapping φ(x)ᵀφ(y): 4·H·d + 2·H
+    HighDimMapping { h: usize, d: usize },
+    /// kernel methods k(x, ·) against N training samples: 2·d·N
+    KernelMethod { d: usize, n: usize },
+    /// digital kernel approximation z(x)ᵀw: 4·m·d + 2·D
+    KernelApprox { m: usize, d: usize, cap_d: usize },
+    /// AIMC deployment: mapping in-memory, only 2·D digital
+    AimcDeployment { cap_d: usize },
+}
+
+impl InferenceCost {
+    pub fn flops(&self) -> f64 {
+        match *self {
+            InferenceCost::HighDimMapping { h, d } => 4.0 * h as f64 * d as f64 + 2.0 * h as f64,
+            InferenceCost::KernelMethod { d, n } => 2.0 * d as f64 * n as f64,
+            InferenceCost::KernelApprox { m, d, cap_d } => {
+                4.0 * m as f64 * d as f64 + 2.0 * cap_d as f64
+            }
+            InferenceCost::AimcDeployment { cap_d } => 2.0 * cap_d as f64,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            InferenceCost::HighDimMapping { .. } => "High-dimensional Mappings",
+            InferenceCost::KernelMethod { .. } => "Kernel Methods",
+            InferenceCost::KernelApprox { .. } => "Kernel Approximations",
+            InferenceCost::AimcDeployment { .. } => "AIMC Deployment",
+        }
+    }
+}
+
+/// Digital-FLOP reduction of in-memory kernel approximation (Results §A):
+/// from 8·a·d² + 4·l·a·d down to 4·l·a·d.
+pub fn digital_flops_reduction(a: usize, d: usize, l: usize) -> (f64, f64) {
+    let before = 8.0 * a as f64 * (d * d) as f64 + 4.0 * (l * a * d) as f64;
+    let after = 4.0 * (l * a * d) as f64;
+    (before, after)
+}
+
+/// Fraction of multi-head-attention FLOPs offloadable to AIMC under
+/// FAVOR+ (Results §C: "if D = 2m, the mapping accounts for roughly one
+/// third of the total FLOPs").
+///
+/// Linear attention per head: mapping 2·L·d·m (on-chip), digital
+/// post-processing + Q'(K'V) re-association ≈ 2·L·D·d·2 with D = l·m.
+pub fn attention_offload_fraction(l_seq: usize, d_head: usize, m: usize, l_fns: usize) -> f64 {
+    let cap_d = l_fns * m;
+    // two mappings (Q and K)
+    let on_chip = 2.0 * mapping_ops(l_seq, d_head, m);
+    // digital: K'ᵀV (2·L·D·dv) + Q'(K'ᵀV) (2·L·D·dv) + normalizer (≈2·L·D)
+    let digital = 2.0 * 2.0 * l_seq as f64 * cap_d as f64 * d_head as f64
+        + 2.0 * l_seq as f64 * cap_d as f64;
+    on_chip / (on_chip + digital)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ii_ordering_holds() {
+        // the table is ordered by decreasing cost for representative sizes
+        let d = 16;
+        let n = 50_000;
+        let h = 100_000; // Hilbert-space dim >> others
+        let m = 512;
+        let cap_d = 1024;
+        let costs = [
+            InferenceCost::HighDimMapping { h, d }.flops(),
+            InferenceCost::KernelMethod { d, n }.flops(),
+            InferenceCost::KernelApprox { m, d, cap_d }.flops(),
+            InferenceCost::AimcDeployment { cap_d }.flops(),
+        ];
+        assert!(costs[0] > costs[1]);
+        assert!(costs[1] > costs[2]);
+        assert!(costs[2] > costs[3]);
+    }
+
+    #[test]
+    fn aimc_cost_is_2d() {
+        assert_eq!(InferenceCost::AimcDeployment { cap_d: 512 }.flops(), 1024.0);
+    }
+
+    #[test]
+    fn digital_reduction_large() {
+        // a=16, d=64, l=2: 8·16·4096 + 4·2·16·64 vs 4·2·16·64
+        let (before, after) = digital_flops_reduction(16, 64, 2);
+        assert!(before / after > 50.0);
+        assert_eq!(after, 8192.0);
+    }
+
+    #[test]
+    fn attention_offload_between_third_and_half() {
+        // paper: "between half and one third of the FLOPs"
+        let f = attention_offload_fraction(1024, 32, 4 * 32, 2);
+        assert!(f > 0.15 && f < 0.55, "fraction {f}");
+    }
+
+    #[test]
+    fn mapping_ops_formula() {
+        assert_eq!(mapping_ops(1024, 512, 1024), 2.0 * 1024.0 * 512.0 * 1024.0);
+    }
+}

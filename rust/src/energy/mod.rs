@@ -1,0 +1,81 @@
+//! Analytical energy/latency model (Supp. Note 4 / Supp. Tables II & VIII)
+//! plus FLOP accounting for the pipeline stages.
+
+pub mod device;
+pub mod flops;
+
+pub use device::{Device, DeviceSpec, ALL_DEVICES};
+pub use flops::{mapping_ops, InferenceCost};
+
+/// Latency (ms) and energy (mJ) of a workload of `ops` operations on a
+/// device at peak throughput — the paper's own assumption for Supp.
+/// Table VIII ("we omit post-processing and focus solely on the mapping").
+pub fn latency_energy(ops: f64, dev: &DeviceSpec) -> (f64, f64) {
+    let latency_s = ops / dev.tops / 1e12;
+    let energy_j = latency_s * dev.power_w;
+    (latency_s * 1e3, energy_j * 1e3)
+}
+
+/// Effective AIMC throughput when only `cores_used` of `cores_total`
+/// crossbars hold the mapping (the under-utilization discussion of Supp.
+/// Note 4); replication multiplies the utilized cores.
+pub fn aimc_effective_tops(peak_tops: f64, cores_used: usize, cores_total: usize) -> f64 {
+    peak_tops * (cores_used.min(cores_total) as f64) / cores_total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use device::Device;
+    use flops::mapping_ops;
+
+    #[test]
+    fn supp_table_viii_row1_reproduced() {
+        // L = 1024, d = 512, m = 1024 -> paper: AIMC 0.0170 ms / 0.1100 mJ,
+        // GPU INT8 0.0017 ms / 0.6883 mJ, CPU 0.8738 ms / 221.0748 mJ
+        let ops = mapping_ops(1024, 512, 1024);
+        let (l, e) = latency_energy(ops, &Device::Aimc.spec());
+        assert!((l - 0.0170).abs() < 0.0005, "aimc latency {l}");
+        assert!((e - 0.1100).abs() < 0.005, "aimc energy {e}");
+        let (l, e) = latency_energy(ops, &Device::GpuInt8.spec());
+        assert!((l - 0.0017).abs() < 0.0002, "gpu8 latency {l}");
+        assert!((e - 0.6883).abs() < 0.02, "gpu8 energy {e}");
+        let (l, e) = latency_energy(ops, &Device::Cpu.spec());
+        assert!((l - 0.8738).abs() < 0.01, "cpu latency {l}");
+        assert!((e - 221.0748).abs() < 2.0, "cpu energy {e}");
+    }
+
+    #[test]
+    fn supp_table_viii_row2_reproduced() {
+        // L = 1024, d = 1024, m = 2048 -> AIMC 0.0681 ms / 0.4401 mJ,
+        // GPU FP16 0.0138 ms / 5.5064 mJ
+        let ops = mapping_ops(1024, 1024, 2048);
+        let (l, e) = latency_energy(ops, &Device::Aimc.spec());
+        assert!((l - 0.0681).abs() < 0.001, "aimc latency {l}");
+        assert!((e - 0.4401).abs() < 0.01, "aimc energy {e}");
+        let (l, e) = latency_energy(ops, &Device::GpuFp16.spec());
+        assert!((l - 0.0138).abs() < 0.0005, "gpu16 latency {l}");
+        assert!((e - 5.5064).abs() < 0.1, "gpu16 energy {e}");
+    }
+
+    #[test]
+    fn aimc_energy_advantage_6_to_12x() {
+        // the paper's headline: 6.2x-12.4x vs the A100
+        let ops = mapping_ops(1024, 512, 1024);
+        let (_, e_aimc) = latency_energy(ops, &Device::Aimc.spec());
+        let (_, e_gpu8) = latency_energy(ops, &Device::GpuInt8.spec());
+        let (_, e_gpu16) = latency_energy(ops, &Device::GpuFp16.spec());
+        let r8 = e_gpu8 / e_aimc;
+        let r16 = e_gpu16 / e_aimc;
+        assert!(r8 > 6.0 && r8 < 6.6, "int8 ratio {r8}");
+        assert!(r16 > 12.0 && r16 < 13.0, "fp16 ratio {r16}");
+    }
+
+    #[test]
+    fn under_utilization_scales_tops() {
+        let t = aimc_effective_tops(63.1, 8, 64);
+        assert!((t - 7.8875).abs() < 1e-3); // paper: 8 cores -> 7.8875 TOPS
+        assert!((aimc_effective_tops(63.1, 64, 64) - 63.1).abs() < 1e-9);
+        assert!((aimc_effective_tops(63.1, 200, 64) - 63.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error for the library layers.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("chip error: {0}")]
+    Chip(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    pub fn msg<S: Into<String>>(s: S) -> Self {
+        Error::Msg(s.into())
+    }
+}

@@ -1,0 +1,142 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md
+//! §Experiment index). Every experiment prints the same rows/series the
+//! paper reports and returns them as structured data for the benches.
+//!
+//! | id           | paper artifact      | module     |
+//! |--------------|---------------------|------------|
+//! | fig2a        | Fig. 2a             | `fig2`     |
+//! | fig2b        | Fig. 2b (+Supp 1–6) | `fig2`     |
+//! | fig3b        | Fig. 3b             | `fig3`     |
+//! | table1       | Table I             | `table1`   |
+//! | supp20       | Supp. Fig. 20       | `supp`     |
+//! | supp21       | Supp. Fig. 21       | `supp`     |
+//! | supp8        | Supp. Table VIII    | `supp`     |
+//! | supp-table2  | Supp. Table II      | `supp`     |
+//! | redraw       | Supp. Fig. 19       | `ablate`   |
+//! | ablate-*     | Discussion ablations| `ablate`   |
+
+pub mod ablate;
+pub mod fig2;
+pub mod fig3;
+pub mod supp;
+pub mod table1;
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+
+/// Dispatch an `imka experiment <id>` invocation.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig2a" => fig2::run_fig2a(args),
+        "fig2b" => fig2::run_fig2b(args),
+        "fig3b" => fig3::run_fig3b(args),
+        "table1" => table1::run_table1(args),
+        "supp20" => supp::run_supp20(args),
+        "supp21" => supp::run_supp21(args),
+        "supp8" => supp::run_supp8(args),
+        "supp-table2" => supp::run_supp_table2(args),
+        "redraw" => ablate::run_redraw(args),
+        "ablate-relu" => ablate::run_relu(args),
+        "ablate-replication" => ablate::run_replication(args),
+        "ablate-noise" => ablate::run_noise(args),
+        "all" => {
+            for id in [
+                "supp-table2", "supp8", "fig2b", "fig2a", "fig3b", "supp20", "supp21",
+                "ablate-noise", "ablate-relu", "ablate-replication", "table1",
+            ] {
+                println!("\n##### experiment {id} #####");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => Err(Error::Msg(format!(
+            "unknown experiment '{other}' (see `imka help`)"
+        ))),
+    }
+}
+
+/// Plain-text aligned table writer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{:<width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Tab-separated dump (for plotting scripts / EXPERIMENTS.md).
+    pub fn tsv(&self) -> String {
+        let mut s = self.headers.join("\t");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join("\t"));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Format "mean ± std".
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.3}±{std:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_and_tsv() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let tsv = t.tsv();
+        assert!(tsv.starts_with("a\tbb\n"));
+        assert!(tsv.contains("333\t4"));
+        t.print(); // shouldn't panic
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let args = Args::default();
+        assert!(run("nope", &args).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! E5–E8 — supplementary reproductions:
+//!
+//! - `supp20` — Supp. Fig. 20: replication of Liu et al.'s survey curves
+//!   (approx error + downstream accuracy vs ratio on ijcnn01, per
+//!   technique, FP-32 only).
+//! - `supp21` — Supp. Fig. 21: FAVOR+ softmax-kernel MSE, IID vs
+//!   orthogonal features (trig) and trig vs positive.
+//! - `supp8`  — Supp. Table VIII: latency/energy on AIMC / GPU / CPU.
+//! - `supp-table2` — Supp. Table II: inference-FLOPs evolution.
+
+use super::Table;
+use crate::cli::Args;
+use crate::datasets::{load_uci, UciName};
+use crate::energy::{latency_energy, mapping_ops, Device, InferenceCost, ALL_DEVICES};
+use crate::error::Result;
+use crate::features::favor::{
+    attention_matrix_from_features, exact_attention_matrix, positive_features, trig_features,
+};
+use crate::features::maps::feature_map;
+use crate::features::sampler::{sample_omega, Sampler, ALL_SAMPLERS};
+use crate::kernels::gram::{approx_error, gram, gram_features};
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::ridge::RidgeClassifier;
+use crate::util::stats::{mse, Summary};
+use crate::util::Rng;
+
+pub fn run_supp20(args: &Args) -> Result<()> {
+    let seeds = args.usize_or("seeds", 5)? as u64;
+    let scale = args.f64_or("scale", 0.03)?;
+    let n_eval = args.usize_or("n-eval", 256)?;
+    let ds = load_uci(UciName::Ijcnn, 0, scale);
+    let d = ds.d();
+
+    println!("Supp. Fig. 20 — replication of Liu et al. on ijcnn01-like data ({seeds} seeds)");
+    for kernel in [Kernel::Rbf, Kernel::ArcCos0] {
+        let mut t = Table::new(&["log2(m/d)", "technique", "approx err", "accuracy"]);
+        for r in 1..=5u32 {
+            let m = (1usize << r) * d;
+            for sampler in ALL_SAMPLERS {
+                let mut errs = Summary::new();
+                let mut accs = Summary::new();
+                for seed in 0..seeds {
+                    let mut rng = Rng::new(seed * 101 + r as u64);
+                    let omega = sample_omega(sampler, d, m, &mut rng);
+                    let idx: Vec<usize> = (0..n_eval.min(ds.test_x.rows)).collect();
+                    let xtr = super::fig2::bandwidth_scaled(&ds.train_x);
+                    let xte = super::fig2::bandwidth_scaled(&ds.test_x);
+                    let xe = xte.select_rows(&idx);
+                    let z = feature_map(kernel, &xe, &omega);
+                    errs.push(approx_error(&gram(kernel, &xe), &gram_features(&z)));
+                    let ztr = feature_map(kernel, &xtr, &omega);
+                    let clf = RidgeClassifier::fit(&ztr, &ds.train_y, ds.classes, 0.5)?;
+                    let zte = feature_map(kernel, &xte, &omega);
+                    accs.push(clf.accuracy(&zte, &ds.test_y));
+                }
+                t.row(vec![
+                    r.to_string(),
+                    sampler.as_str().to_string(),
+                    format!("{:.4}±{:.4}", errs.mean(), errs.std()),
+                    format!("{:.4}±{:.4}", accs.mean(), accs.std()),
+                ]);
+            }
+        }
+        println!("\nkernel = {}", kernel.as_str());
+        t.print();
+    }
+    println!("expected shape (survey): ORF/SORF beat RFF at low ratios; curves converge as m grows.");
+    Ok(())
+}
+
+pub fn run_supp21(args: &Args) -> Result<()> {
+    let seeds = args.usize_or("seeds", 10)? as u64;
+    let l = args.usize_or("seq", 256)?;
+    let d = args.usize_or("d", 16)?;
+
+    // the paper's protocol: Q, K ~ N(0,1); compare the MSE of the
+    // *approximation output* — the row-normalized attention matrix —
+    // against exact softmax attention (the normalization is where the
+    // positive features' stability pays off; on raw kernel values the
+    // comparison flips for large entries)
+    let mut rng = Rng::new(0);
+    let mut q = Mat::randn(l, d, &mut rng);
+    let mut k = Mat::randn(l, d, &mut rng);
+    let exact = exact_attention_matrix(&q, &k);
+    let scale = (d as f32).powf(-0.25);
+    q.scale(scale);
+    k.scale(scale);
+
+    println!("Supp. Fig. 21 — FAVOR+ attention-approximation MSE (L={l}, d={d}, {seeds} seeds)");
+    let mut t = Table::new(&[
+        "m",
+        "trig IID",
+        "trig ORT",
+        "positive IID",
+        "positive ORT",
+    ]);
+    for m in [d / 2, d, 2 * d, 4 * d, 8 * d] {
+        let m = m.max(2);
+        let mut cells = Vec::new();
+        for (feat, samp) in [
+            ("trig", Sampler::Rff),
+            ("trig", Sampler::Orf),
+            ("pos", Sampler::Rff),
+            ("pos", Sampler::Orf),
+        ] {
+            let mut s = Summary::new();
+            for seed in 0..seeds {
+                let mut r2 = Rng::new(10 + seed * 13 + m as u64);
+                let omega = sample_omega(samp, d, m, &mut r2);
+                let (zq, zk) = if feat == "trig" {
+                    (trig_features(&q, &omega), trig_features(&k, &omega))
+                } else {
+                    (positive_features(&q, &omega), positive_features(&k, &omega))
+                };
+                let approx = attention_matrix_from_features(&zq, &zk);
+                s.push(mse(&approx.data, &exact.data));
+            }
+            cells.push(format!("{:.4e}", s.mean()));
+        }
+        t.row(vec![
+            m.to_string(),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+            cells[3].clone(),
+        ]);
+    }
+    t.print();
+    println!("expected shape (Performer Fig. 4): orthogonal < IID; positive < trig, with the gap growing in m.");
+    Ok(())
+}
+
+pub fn run_supp8(args: &Args) -> Result<()> {
+    let _ = args;
+    println!("Supp. Table VIII — kernel-approximation mapping latency/energy (peak-throughput model)");
+    let mut t = Table::new(&["workload", "device", "latency (ms)", "energy (mJ)"]);
+    for (l, d, m) in [(1024usize, 512usize, 1024usize), (1024, 1024, 2048)] {
+        let ops = mapping_ops(l, d, m);
+        for dev in ALL_DEVICES {
+            let (lat, en) = latency_energy(ops, &dev.spec());
+            t.row(vec![
+                format!("L={l} d={d} m={m}"),
+                dev.spec().name.to_string(),
+                format!("{lat:.4}"),
+                format!("{en:.4}"),
+            ]);
+        }
+    }
+    t.print();
+    let ops = mapping_ops(1024, 512, 1024);
+    let (_, e_aimc) = latency_energy(ops, &Device::Aimc.spec());
+    let (_, e8) = latency_energy(ops, &Device::GpuInt8.spec());
+    let (_, e16) = latency_energy(ops, &Device::GpuFp16.spec());
+    println!(
+        "AIMC energy advantage: {:.1}x vs GPU INT8, {:.1}x vs GPU FP16 (paper: 6.2x-12.4x)",
+        e8 / e_aimc,
+        e16 / e_aimc
+    );
+    Ok(())
+}
+
+pub fn run_supp_table2(args: &Args) -> Result<()> {
+    let d = args.usize_or("d", 16)?;
+    let n = args.usize_or("n", 50_000)?;
+    let m = args.usize_or("m", 512)?;
+    let cap_d = 2 * m;
+    let h = args.usize_or("h", 100_000)?;
+
+    println!("Supp. Table II — inference FLOPs per sample (d={d}, N={n}, m={m}, D={cap_d}, H={h})");
+    let mut t = Table::new(&["technique", "formula", "FLOPs"]);
+    let rows = [
+        (InferenceCost::HighDimMapping { h, d }, "4·H·d + 2·H"),
+        (InferenceCost::KernelMethod { d, n }, "2·d·N"),
+        (InferenceCost::KernelApprox { m, d, cap_d }, "4·m·d + 2·D"),
+        (InferenceCost::AimcDeployment { cap_d }, "2·D"),
+    ];
+    for (c, f) in rows {
+        t.row(vec![c.label().to_string(), f.to_string(), format!("{:.0}", c.flops())]);
+    }
+    t.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::softmax_kernel;
+    use crate::linalg::matmul_a_bt;
+
+    #[test]
+    fn supp21_positive_beats_trig_in_mse_at_scale() {
+        // the run_supp21 protocol, small version (attention-matrix MSE)
+        let (l, d, m) = (64usize, 16usize, 64usize);
+        let mut rng = Rng::new(0);
+        let mut q = Mat::randn(l, d, &mut rng);
+        let mut k = Mat::randn(l, d, &mut rng);
+        let exact = exact_attention_matrix(&q, &k);
+        let scale = (d as f32).powf(-0.25);
+        q.scale(scale);
+        k.scale(scale);
+        let mut m_trig = 0.0;
+        let mut m_pos = 0.0;
+        for s in 0..8u64 {
+            let mut r2 = Rng::new(10 + s);
+            let omega = sample_omega(Sampler::Orf, d, m, &mut r2);
+            m_trig += mse(
+                &attention_matrix_from_features(
+                    &trig_features(&q, &omega),
+                    &trig_features(&k, &omega),
+                )
+                .data,
+                &exact.data,
+            );
+            m_pos += mse(
+                &attention_matrix_from_features(
+                    &positive_features(&q, &omega),
+                    &positive_features(&k, &omega),
+                )
+                .data,
+                &exact.data,
+            );
+        }
+        assert!(m_pos < m_trig, "pos {m_pos} trig {m_trig}");
+    }
+
+    #[test]
+    fn supp21_orthogonal_beats_iid_for_trig() {
+        let (l, d, m) = (64usize, 16usize, 32usize);
+        let mut rng = Rng::new(1);
+        let mut q = Mat::randn(l, d, &mut rng);
+        let mut k = Mat::randn(l, d, &mut rng);
+        let scale = (d as f32).powf(-0.25);
+        q.scale(scale);
+        k.scale(scale);
+        let exact = softmax_kernel(&q, &k);
+        let mean_mse = |samp: Sampler| {
+            let mut acc = 0.0;
+            for s in 0..12u64 {
+                let mut r2 = Rng::new(100 + s);
+                let omega = sample_omega(samp, d, m, &mut r2);
+                acc += mse(
+                    &matmul_a_bt(&trig_features(&q, &omega), &trig_features(&k, &omega)).data,
+                    &exact.data,
+                );
+            }
+            acc / 12.0
+        };
+        // raw-kernel metric is fine here: the claim is about Omega
+        // orthogonality, not the feature family
+        assert!(mean_mse(Sampler::Orf) < mean_mse(Sampler::Rff));
+    }
+}

@@ -1,0 +1,257 @@
+//! FAVOR+ softmax-kernel features (Choromanski et al., 2020) and the
+//! re-associated linear attention they enable — the digital reference for
+//! the kernelized-attention experiments (Fig. 3, Supp. Fig. 21).
+
+use crate::linalg::{matmul, matmul_at_b, Mat};
+
+/// Positive (hyperbolic) features: z = exp(-‖x‖²/2)/√(2m) [exp(u), exp(-u)].
+/// Unbiased for exp(xᵀy); always non-negative (the property that makes
+/// linear attention stable).
+pub fn positive_features(x: &Mat, omega: &Mat) -> Mat {
+    let u = matmul(x, omega);
+    let m = omega.cols;
+    let s = 1.0 / (2.0 * m as f32).sqrt();
+    let mut z = Mat::zeros(x.rows, 2 * m);
+    for i in 0..x.rows {
+        let sq: f32 = x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
+        let src = u.row(i);
+        let dst = z.row_mut(i);
+        for j in 0..m {
+            dst[j] = (src[j] - sq).exp() * s;
+            dst[m + j] = (-src[j] - sq).exp() * s;
+        }
+    }
+    z
+}
+
+/// Trigonometric features: z = exp(+‖x‖²/2)/√m [cos u, sin u] — unbiased
+/// but sign-indefinite and exponentially mis-scaled (the unstable variant
+/// Supp. Fig. 21 replicates).
+pub fn trig_features(x: &Mat, omega: &Mat) -> Mat {
+    let u = matmul(x, omega);
+    let m = omega.cols;
+    let mut z = Mat::zeros(x.rows, 2 * m);
+    for i in 0..x.rows {
+        let sq: f32 = x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
+        let scale = sq.exp() / (m as f32).sqrt();
+        let src = u.row(i);
+        let dst = z.row_mut(i);
+        for j in 0..m {
+            dst[j] = src[j].cos() * scale;
+            dst[m + j] = src[j].sin() * scale;
+        }
+    }
+    z
+}
+
+/// ReLU features for the simplified attention of the Discussion section.
+pub fn relu_features(x: &Mat, omega: &Mat) -> Mat {
+    let mut u = matmul(x, omega);
+    u.map_inplace(|v| v.max(0.0));
+    u
+}
+
+/// Linear attention from pre-mapped features: D⁻¹ Q'((K')ᵀ V).
+/// q', k': (L x Df), v: (L x dv).
+pub fn linear_attention_from_features(qp: &Mat, kp: &Mat, v: &Mat) -> Mat {
+    assert_eq!(qp.cols, kp.cols);
+    assert_eq!(kp.rows, v.rows);
+    let kv = matmul_at_b(kp, v); // (Df x dv)
+    let mut ks = vec![0.0f32; kp.cols]; // Σ_l k'_l
+    for i in 0..kp.rows {
+        for (s, &val) in ks.iter_mut().zip(kp.row(i)) {
+            *s += val;
+        }
+    }
+    let num = matmul(qp, &kv); // (L x dv)
+    let mut out = num;
+    for i in 0..qp.rows {
+        let den: f32 = qp.row(i).iter().zip(&ks).map(|(a, b)| a * b).sum();
+        let den = den.max(1e-9);
+        for v in out.row_mut(i) {
+            *v /= den;
+        }
+    }
+    out
+}
+
+/// FAVOR+ attention for one head: queries/keys scaled by d^-1/4, positive
+/// features with shared Ω. Matches `ref.favor_attention(stabilize=False)`.
+pub fn favor_attention(q: &Mat, k: &Mat, v: &Mat, omega: &Mat) -> Mat {
+    let scale = (q.cols as f32).powf(-0.25);
+    let mut qs = q.clone();
+    qs.scale(scale);
+    let mut ks = k.clone();
+    ks.scale(scale);
+    let qp = positive_features(&qs, omega);
+    let kp = positive_features(&ks, omega);
+    linear_attention_from_features(&qp, &kp, v)
+}
+
+/// The implicit row-normalized attention matrix under features z.
+pub fn attention_matrix_from_features(qp: &Mat, kp: &Mat) -> Mat {
+    let mut a = crate::linalg::matmul_a_bt(qp, kp);
+    for i in 0..a.rows {
+        let s: f32 = a.row(i).iter().sum::<f32>().max(1e-9);
+        for v in a.row_mut(i) {
+            *v /= s;
+        }
+    }
+    a
+}
+
+/// Exact row-normalized softmax attention matrix (Fig. 3b ground truth).
+pub fn exact_attention_matrix(q: &Mat, k: &Mat) -> Mat {
+    let d = q.cols as f32;
+    let mut a = crate::linalg::matmul_a_bt(q, k);
+    a.scale(1.0 / d.sqrt());
+    for i in 0..a.rows {
+        let row = a.row_mut(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+    a
+}
+
+/// Exact softmax attention output (L x dv).
+pub fn exact_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    matmul(&exact_attention_matrix(q, k), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::sampler::{sample_omega, Sampler};
+    use crate::util::stats::rel_fro_error;
+    use crate::util::Rng;
+
+    fn qkv(seed: u64, l: usize, d: usize) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut q = Mat::randn(l, d, &mut rng);
+        q.scale(0.5);
+        let mut k = Mat::randn(l, d, &mut rng);
+        k.scale(0.5);
+        let v = Mat::randn(l, d, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn positive_features_nonnegative() {
+        let (q, _, _) = qkv(0, 16, 8);
+        let mut rng = Rng::new(1);
+        let omega = sample_omega(Sampler::Rff, 8, 32, &mut rng);
+        let z = positive_features(&q, &omega);
+        assert!(z.data.iter().all(|&v| v >= 0.0));
+        assert_eq!(z.cols, 64);
+    }
+
+    #[test]
+    fn attention_rows_sum_to_one() {
+        let (q, k, _) = qkv(2, 12, 8);
+        let a = exact_attention_matrix(&q, &k);
+        for i in 0..12 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(a.row(i).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn favor_approaches_exact_with_m() {
+        let (q, k, _) = qkv(3, 32, 8);
+        let exact = exact_attention_matrix(&q, &k);
+        let scale = 8f32.powf(-0.25);
+        let mut qs = q.clone();
+        qs.scale(scale);
+        let mut ks = k.clone();
+        ks.scale(scale);
+
+        let err_at = |m: usize| {
+            let mut acc = 0.0;
+            for s in 0..6u64 {
+                let mut rng = Rng::new(10 + s);
+                let omega = sample_omega(Sampler::Orf, 8, m, &mut rng);
+                let qp = positive_features(&qs, &omega);
+                let kp = positive_features(&ks, &omega);
+                let approx = attention_matrix_from_features(&qp, &kp);
+                acc += rel_fro_error(&approx.data, &exact.data);
+            }
+            acc / 6.0
+        };
+        let e16 = err_at(16);
+        let e256 = err_at(256);
+        assert!(e256 < e16, "{e256} vs {e16}");
+        assert!(e256 < 0.25);
+    }
+
+    #[test]
+    fn favor_attention_output_approximates_exact() {
+        let (q, k, v) = qkv(4, 24, 8);
+        let exact = exact_attention(&q, &k, &v);
+        let mut acc = 0.0;
+        for s in 0..6u64 {
+            let mut rng = Rng::new(20 + s);
+            let omega = sample_omega(Sampler::Orf, 8, 512, &mut rng);
+            let approx = favor_attention(&q, &k, &v, &omega);
+            acc += rel_fro_error(&approx.data, &exact.data);
+        }
+        assert!(acc / 6.0 < 0.35, "mean err {}", acc / 6.0);
+    }
+
+    #[test]
+    fn positive_beats_trig_for_attention() {
+        // the Supp. Fig. 21 (right) phenomenon. At Performer-realistic
+        // input scales (q,k ~ N(0,1), d=16) the trig estimator's variance
+        // explodes through its exp(+||x||^2/2) prefactor while the
+        // positive estimator stays bounded.
+        let d = 16;
+        let mut rng0 = Rng::new(5);
+        let q = Mat::randn(32, d, &mut rng0);
+        let k = Mat::randn(32, d, &mut rng0);
+        let exact = exact_attention_matrix(&q, &k);
+        let scale = (d as f32).powf(-0.25);
+        let mut qs = q.clone();
+        qs.scale(scale);
+        let mut ks = k.clone();
+        ks.scale(scale);
+        let mut e_pos = 0.0;
+        let mut e_trig = 0.0;
+        for s in 0..8u64 {
+            let mut rng = Rng::new(30 + s);
+            let omega = sample_omega(Sampler::Orf, d, 64, &mut rng);
+            let ap = attention_matrix_from_features(
+                &positive_features(&qs, &omega),
+                &positive_features(&ks, &omega),
+            );
+            let at = attention_matrix_from_features(
+                &trig_features(&qs, &omega),
+                &trig_features(&ks, &omega),
+            );
+            e_pos += rel_fro_error(&ap.data, &exact.data);
+            e_trig += rel_fro_error(&at.data, &exact.data);
+        }
+        assert!(
+            e_pos < 0.5 * e_trig,
+            "pos {e_pos} should be well below trig {e_trig}"
+        );
+    }
+
+    #[test]
+    fn relu_attention_runs() {
+        let (q, k, v) = qkv(6, 16, 8);
+        let mut rng = Rng::new(7);
+        let omega = sample_omega(Sampler::Orf, 8, 32, &mut rng);
+        let qp = relu_features(&q, &omega);
+        let kp = relu_features(&k, &omega);
+        let out = linear_attention_from_features(&qp, &kp, &v);
+        assert_eq!((out.rows, out.cols), (16, 8));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,186 @@
+//! Feature maps z(x) (Supp. Table I): the digital full path
+//! (`feature_map`) and the split analog path (`postprocess`, which
+//! consumes a projection u = x·Ω computed on the chip).
+
+use crate::kernels::Kernel;
+use crate::linalg::{matmul, Mat};
+
+/// Which projection path produced u.
+#[derive(Clone, Copy, Debug)]
+pub enum FeatureMap {
+    Digital,
+    Analog,
+}
+
+/// Full digital feature map: z = post(x·Ω).
+pub fn feature_map(kernel: Kernel, x: &Mat, omega: &Mat) -> Mat {
+    let u = matmul(x, omega);
+    postprocess(kernel, &u, Some(x))
+}
+
+/// Element-wise post-processing of a projection u (B x m) into z (B x l·m).
+/// `x` is needed only by the softmax kernel (for h(x) = exp(-‖x‖²/2)).
+pub fn postprocess(kernel: Kernel, u: &Mat, x: Option<&Mat>) -> Mat {
+    let (b, m) = (u.rows, u.cols);
+    match kernel {
+        Kernel::Rbf => {
+            // z = [cos u, sin u] / sqrt(m)
+            let s = 1.0 / (m as f32).sqrt();
+            let mut z = Mat::zeros(b, 2 * m);
+            for i in 0..b {
+                let src = u.row(i);
+                let dst = z.row_mut(i);
+                for j in 0..m {
+                    dst[j] = src[j].cos() * s;
+                    dst[m + j] = src[j].sin() * s;
+                }
+            }
+            z
+        }
+        Kernel::ArcCos0 => {
+            // z = sqrt(2/m) · Θ(u)
+            let s = (2.0 / m as f32).sqrt();
+            let mut z = Mat::zeros(b, m);
+            for i in 0..b {
+                let src = u.row(i);
+                let dst = z.row_mut(i);
+                for j in 0..m {
+                    dst[j] = if src[j] > 0.0 { s } else { 0.0 };
+                }
+            }
+            z
+        }
+        Kernel::Softmax => {
+            // z = exp(-‖x‖²/2)/sqrt(2m) · [exp(u), exp(-u)]
+            let x = x.expect("softmax postprocess needs x for h(x)");
+            assert_eq!(x.rows, b);
+            let s = 1.0 / (2.0 * m as f32).sqrt();
+            let mut z = Mat::zeros(b, 2 * m);
+            for i in 0..b {
+                let sq: f32 = x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
+                let src = u.row(i);
+                let dst = z.row_mut(i);
+                for j in 0..m {
+                    dst[j] = (src[j] - sq).exp() * s;
+                    dst[m + j] = (-src[j] - sq).exp() * s;
+                }
+            }
+            z
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::sampler::{sample_omega, Sampler};
+    use crate::kernels::gram::{approx_error, gram, gram_features};
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    fn data(seed: u64, n: usize, d: usize, scale: f32) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::randn(n, d, &mut rng);
+        x.scale(scale);
+        x
+    }
+
+    #[test]
+    fn rbf_features_unbiased_large_m() {
+        let x = data(0, 16, 8, 0.5);
+        let mut rng = Rng::new(1);
+        let omega = sample_omega(Sampler::Rff, 8, 8192, &mut rng);
+        let z = feature_map(Kernel::Rbf, &x, &omega);
+        let err = approx_error(&gram(Kernel::Rbf, &x), &gram_features(&z));
+        assert!(err < 0.06, "err {err}");
+    }
+
+    #[test]
+    fn arccos0_features_unbiased_large_m() {
+        let x = data(2, 16, 8, 1.0);
+        let mut rng = Rng::new(3);
+        let omega = sample_omega(Sampler::Rff, 8, 8192, &mut rng);
+        let z = feature_map(Kernel::ArcCos0, &x, &omega);
+        let err = approx_error(&gram(Kernel::ArcCos0, &x), &gram_features(&z));
+        assert!(err < 0.06, "err {err}");
+    }
+
+    #[test]
+    fn softmax_features_unbiased_large_m() {
+        let x = data(4, 12, 8, 0.25);
+        let mut rng = Rng::new(5);
+        let omega = sample_omega(Sampler::Rff, 8, 8192, &mut rng);
+        let z = feature_map(Kernel::Softmax, &x, &omega);
+        let err = approx_error(&gram(Kernel::Softmax, &x), &gram_features(&z));
+        assert!(err < 0.15, "err {err}");
+    }
+
+    #[test]
+    fn error_decreases_with_m() {
+        let x = data(6, 20, 8, 0.5);
+        let k = gram(Kernel::Rbf, &x);
+        let mut errs = Vec::new();
+        for &m in &[16usize, 128, 1024] {
+            let mut acc = 0.0;
+            for s in 0..5u64 {
+                let mut rng = Rng::new(100 + s);
+                let omega = sample_omega(Sampler::Rff, 8, m, &mut rng);
+                let z = feature_map(Kernel::Rbf, &x, &omega);
+                acc += approx_error(&k, &gram_features(&z));
+            }
+            errs.push(acc / 5.0);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn orf_beats_rff_small_m() {
+        let x = data(7, 24, 16, 0.5);
+        let k = gram(Kernel::Rbf, &x);
+        let mean_err = |s: Sampler| {
+            let mut acc = 0.0;
+            for seed in 0..12u64 {
+                let mut rng = Rng::new(1000 + seed);
+                let omega = sample_omega(s, 16, 32, &mut rng);
+                let z = feature_map(Kernel::Rbf, &x, &omega);
+                acc += approx_error(&k, &gram_features(&z));
+            }
+            acc / 12.0
+        };
+        assert!(mean_err(Sampler::Orf) < mean_err(Sampler::Rff));
+    }
+
+    #[test]
+    fn split_path_equals_full_path() {
+        check("postprocess==featuremap", 10, |g| {
+            let d = g.int(2, 12);
+            let m = g.int(4, 40);
+            let x = Mat::randn(5, d, g.rng());
+            let omega = Mat::randn(d, m, g.rng());
+            for kernel in [Kernel::Rbf, Kernel::ArcCos0, Kernel::Softmax] {
+                let full = feature_map(kernel, &x, &omega);
+                let u = matmul(&x, &omega);
+                let split = postprocess(kernel, &u, Some(&x));
+                if full
+                    .data
+                    .iter()
+                    .zip(split.data.iter())
+                    .any(|(a, b)| (a - b).abs() > 1e-6)
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn feature_dims_follow_l() {
+        let x = data(8, 3, 4, 1.0);
+        let mut rng = Rng::new(9);
+        let omega = sample_omega(Sampler::Rff, 4, 10, &mut rng);
+        assert_eq!(feature_map(Kernel::Rbf, &x, &omega).cols, 20);
+        assert_eq!(feature_map(Kernel::ArcCos0, &x, &omega).cols, 10);
+        assert_eq!(feature_map(Kernel::Softmax, &x, &omega).cols, 20);
+    }
+}

@@ -1,0 +1,16 @@
+//! Random-feature machinery: Ω samplers (RFF / ORF / SORF), feature maps
+//! z(x) for each kernel, and the FAVOR+ softmax features used by
+//! kernelized attention.
+//!
+//! The Rust implementations mirror `python/compile/sampling.py` and
+//! `python/compile/kernels/ref.py`; the oracle test
+//! (`rust/tests/oracle.rs`) pins them to vectors exported by the Python
+//! side.
+
+pub mod favor;
+pub mod maps;
+pub mod sampler;
+
+pub use favor::{favor_attention, positive_features, trig_features};
+pub use maps::{feature_map, postprocess, FeatureMap};
+pub use sampler::{sample_omega, Sampler};

@@ -1,0 +1,220 @@
+//! Ω samplers. Columns of Ω (d x m) are the random feature vectors — the
+//! paper programs one per crossbar column. Gaussians are truncated at 3σ
+//! (Supp. Table I note: avoids outliers mapping to high conductances).
+
+use crate::linalg::{fwht_inplace, next_pow2, qr_q, Mat};
+use crate::util::Rng;
+
+/// Feature-vector sampling strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Sampler {
+    /// unstructured random Fourier features (Rahimi & Recht)
+    Rff,
+    /// orthogonal random features (Yu et al., 2016)
+    Orf,
+    /// structured orthogonal random features (H D H D H D)
+    Sorf,
+}
+
+pub const ALL_SAMPLERS: [Sampler; 3] = [Sampler::Rff, Sampler::Orf, Sampler::Sorf];
+
+impl Sampler {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Sampler::Rff => "rff",
+            Sampler::Orf => "orf",
+            Sampler::Sorf => "sorf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Sampler> {
+        match s {
+            "rff" => Some(Sampler::Rff),
+            "orf" => Some(Sampler::Orf),
+            "sorf" => Some(Sampler::Sorf),
+            _ => None,
+        }
+    }
+}
+
+/// Sample Ω (d x m) with the chosen strategy.
+pub fn sample_omega(sampler: Sampler, d: usize, m: usize, rng: &mut Rng) -> Mat {
+    match sampler {
+        Sampler::Rff => Mat::randn_truncated(d, m, 3.0, rng),
+        Sampler::Orf => orf_omega(d, m, rng),
+        Sampler::Sorf => sorf_omega(d, m, rng),
+    }
+}
+
+/// ORF: stacked d x d Haar-orthogonal blocks, columns rescaled by chi(d)
+/// norms so marginals match the unstructured Gaussian.
+pub fn orf_omega(d: usize, m: usize, rng: &mut Rng) -> Mat {
+    let n_blocks = m.div_ceil(d);
+    let mut blocks: Vec<Mat> = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        let g = Mat::randn(d, d, rng);
+        let q = qr_q(&g);
+        // chi(d)-distributed column norms
+        let mut block = q;
+        for j in 0..d {
+            let norm = {
+                let mut s = 0.0f32;
+                for _ in 0..d {
+                    let g = rng.gaussian_f32();
+                    s += g * g;
+                }
+                s.sqrt()
+            };
+            for i in 0..d {
+                *block.at_mut(i, j) *= norm;
+            }
+        }
+        blocks.push(block);
+    }
+    let refs: Vec<&Mat> = blocks.iter().collect();
+    Mat::hstack(&refs).take_cols(m)
+}
+
+/// SORF: per padded-power-of-two block, √p · H D₁ H D₂ H D₃ (FWHT-based,
+/// O(m log d) generation), truncated to the first d rows.
+pub fn sorf_omega(d: usize, m: usize, rng: &mut Rng) -> Mat {
+    let p = next_pow2(d);
+    let n_blocks = m.div_ceil(p);
+    let mut cols: Vec<Mat> = Vec::with_capacity(n_blocks);
+    let scale = 1.0 / (p as f32).sqrt();
+    for _ in 0..n_blocks {
+        // block = I, then 3 rounds of (diag(D) then FWHT)/√p
+        let mut block = Mat::eye(p);
+        for _ in 0..3 {
+            let signs: Vec<f32> = (0..p).map(|_| rng.rademacher()).collect();
+            // scale rows by signs, then FWHT each column
+            for i in 0..p {
+                let s = signs[i];
+                for j in 0..p {
+                    *block.at_mut(i, j) *= s;
+                }
+            }
+            // FWHT over rows for every column: transpose trick — operate
+            // column-wise directly
+            let mut colbuf = vec![0.0f32; p];
+            for j in 0..p {
+                for i in 0..p {
+                    colbuf[i] = block.at(i, j);
+                }
+                fwht_inplace(&mut colbuf);
+                for i in 0..p {
+                    *block.at_mut(i, j) = colbuf[i] * scale;
+                }
+            }
+        }
+        block.scale((p as f32).sqrt());
+        cols.push(block.take_cols(p));
+    }
+    let refs: Vec<&Mat> = cols.iter().collect();
+    let full = Mat::hstack(&refs);
+    // first d rows, first m cols
+    let mut out = Mat::zeros(d, m);
+    for i in 0..d {
+        out.row_mut(i).copy_from_slice(&full.row(i)[..m]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_at_b;
+
+    #[test]
+    fn shapes_for_all_samplers() {
+        let mut rng = Rng::new(0);
+        for s in ALL_SAMPLERS {
+            for (d, m) in [(4, 4), (6, 13), (16, 48), (10, 7)] {
+                let om = sample_omega(s, d, m, &mut rng);
+                assert_eq!((om.rows, om.cols), (d, m), "{s:?} {d}x{m}");
+                assert!(om.data.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn rff_truncated_and_standardized() {
+        let mut rng = Rng::new(1);
+        let om = sample_omega(Sampler::Rff, 32, 256, &mut rng);
+        assert!(om.max_abs() <= 3.0);
+        let mean: f64 = om.data.iter().map(|&v| v as f64).sum::<f64>() / om.data.len() as f64;
+        let var: f64 =
+            om.data.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / om.data.len() as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 1.0).abs() < 0.15); // truncation shrinks var slightly
+    }
+
+    #[test]
+    fn orf_block_directions_orthogonal() {
+        let mut rng = Rng::new(2);
+        let d = 12;
+        let om = orf_omega(d, d, &mut rng);
+        // normalize columns -> orthonormal
+        let mut q = om.clone();
+        for j in 0..d {
+            let n: f32 = (0..d).map(|i| q.at(i, j) * q.at(i, j)).sum::<f32>().sqrt();
+            for i in 0..d {
+                *q.at_mut(i, j) /= n;
+            }
+        }
+        let g = matmul_at_b(&q, &q);
+        for i in 0..d {
+            for j in 0..d {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-3, "{i},{j}: {}", g.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn orf_column_norms_chi() {
+        let mut rng = Rng::new(3);
+        let d = 24;
+        let om = orf_omega(d, 240, &mut rng);
+        let mut mean = 0.0f64;
+        for j in 0..240 {
+            let n: f32 = (0..d).map(|i| om.at(i, j) * om.at(i, j)).sum::<f32>().sqrt();
+            mean += n as f64;
+        }
+        mean /= 240.0;
+        assert!((mean - (d as f64 - 0.5).sqrt()).abs() < 0.4, "mean {mean}");
+    }
+
+    #[test]
+    fn sorf_pow2_block_is_orthogonal() {
+        let mut rng = Rng::new(4);
+        let d = 16; // power of two
+        let om = sorf_omega(d, d, &mut rng);
+        let g = matmul_at_b(&om, &om);
+        for i in 0..d {
+            for j in 0..d {
+                let want = if i == j { d as f32 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-2, "{i},{j}: {}", g.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn sorf_marginals_near_standard() {
+        let mut rng = Rng::new(5);
+        let om = sorf_omega(32, 512, &mut rng);
+        let mean: f64 = om.data.iter().map(|&v| v as f64).sum::<f64>() / om.data.len() as f64;
+        let var: f64 =
+            om.data.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / om.data.len() as f64;
+        assert!(mean.abs() < 0.08, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn sampler_parse_roundtrip() {
+        for s in ALL_SAMPLERS {
+            assert_eq!(Sampler::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(Sampler::parse("x"), None);
+    }
+}

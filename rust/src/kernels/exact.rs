@@ -1,0 +1,185 @@
+//! Exact kernel functions (Supp. Table I definitions).
+
+use crate::linalg::{matmul_a_bt, Mat};
+
+/// The kernels studied in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    /// Gaussian k(x,y) = exp(-||x-y||²/2)
+    Rbf,
+    /// zeroth-order arc-cosine k(x,y) = 1 - θ(x,y)/π
+    ArcCos0,
+    /// softmax k(x,y) = exp(xᵀy)
+    Softmax,
+}
+
+impl Kernel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kernel::Rbf => "rbf",
+            Kernel::ArcCos0 => "arccos0",
+            Kernel::Softmax => "softmax",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "rbf" => Some(Kernel::Rbf),
+            "arccos0" => Some(Kernel::ArcCos0),
+            "softmax" => Some(Kernel::Softmax),
+            _ => None,
+        }
+    }
+
+    /// Number of post-processing functions l (feature dim D = l·m).
+    pub fn l(&self) -> usize {
+        match self {
+            Kernel::Rbf | Kernel::Softmax => 2,
+            Kernel::ArcCos0 => 1,
+        }
+    }
+
+    /// Exact Gram matrix K[i,j] = k(x_i, y_j).
+    pub fn gram(&self, x: &Mat, y: &Mat) -> Mat {
+        match self {
+            Kernel::Rbf => rbf_kernel(x, y, 0.5),
+            Kernel::ArcCos0 => arccos0_kernel(x, y),
+            Kernel::Softmax => softmax_kernel(x, y),
+        }
+    }
+}
+
+/// Exact Gaussian kernel, K[i,j] = exp(-gamma ||x_i - y_j||²).
+pub fn rbf_kernel(x: &Mat, y: &Mat, gamma: f32) -> Mat {
+    assert_eq!(x.cols, y.cols);
+    let xy = matmul_a_bt(x, y);
+    let xn: Vec<f32> = x.row_norms().iter().map(|n| n * n).collect();
+    let yn: Vec<f32> = y.row_norms().iter().map(|n| n * n).collect();
+    let mut k = Mat::zeros(x.rows, y.rows);
+    for i in 0..x.rows {
+        for j in 0..y.rows {
+            let sq = (xn[i] + yn[j] - 2.0 * xy.at(i, j)).max(0.0);
+            *k.at_mut(i, j) = (-gamma * sq).exp();
+        }
+    }
+    k
+}
+
+/// Exact zeroth-order arc-cosine kernel.
+pub fn arccos0_kernel(x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.cols, y.cols);
+    let xy = matmul_a_bt(x, y);
+    let xn = x.row_norms();
+    let yn = y.row_norms();
+    let mut k = Mat::zeros(x.rows, y.rows);
+    for i in 0..x.rows {
+        for j in 0..y.rows {
+            let c = (xy.at(i, j) / (xn[i] * yn[j]).max(1e-12)).clamp(-1.0, 1.0);
+            *k.at_mut(i, j) = 1.0 - c.acos() / std::f32::consts::PI;
+        }
+    }
+    k
+}
+
+/// Exact (un-normalized) softmax kernel exp(xᵀy).
+pub fn softmax_kernel(x: &Mat, y: &Mat) -> Mat {
+    let mut k = matmul_a_bt(x, y);
+    k.map_inplace(f32::exp);
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn rbf_diagonal_is_one_and_bounded() {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(12, 6, &mut rng);
+        let k = rbf_kernel(&x, &x, 0.5);
+        for i in 0..12 {
+            assert!((k.at(i, i) - 1.0).abs() < 1e-5);
+            for j in 0..12 {
+                assert!(k.at(i, j) > 0.0 && k.at(i, j) <= 1.0 + 1e-6);
+                assert!((k.at(i, j) - k.at(j, i)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_shift_invariant() {
+        check("rbf-shift-invariant", 10, |g| {
+            let d = g.int(2, 8);
+            let x = Mat::randn(4, d, g.rng());
+            let shift = g.gaussian_vec(d);
+            let mut xs = x.clone();
+            for i in 0..xs.rows {
+                for (v, s) in xs.row_mut(i).iter_mut().zip(&shift) {
+                    *v += s;
+                }
+            }
+            let k1 = rbf_kernel(&x, &x, 0.5);
+            let k2 = rbf_kernel(&xs, &xs, 0.5);
+            k1.data
+                .iter()
+                .zip(k2.data.iter())
+                .all(|(a, b)| (a - b).abs() < 1e-3)
+        });
+    }
+
+    #[test]
+    fn arccos0_range_and_self_similarity() {
+        let mut rng = Rng::new(1);
+        let x = Mat::randn(10, 5, &mut rng);
+        let k = arccos0_kernel(&x, &x);
+        for i in 0..10 {
+            // f32 acos near cos=1 is very sensitive; 1e-3 is the practical
+            // self-similarity tolerance
+            assert!((k.at(i, i) - 1.0).abs() < 1e-3); // θ(x,x)=0
+            for j in 0..10 {
+                assert!((0.0..=1.0 + 1e-6).contains(&k.at(i, j)));
+            }
+        }
+    }
+
+    #[test]
+    fn arccos0_orthogonal_is_half() {
+        let x = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let k = arccos0_kernel(&x, &x);
+        assert!((k.at(0, 1) - 0.5).abs() < 1e-6); // θ=π/2
+    }
+
+    #[test]
+    fn arccos0_scale_invariant() {
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(6, 4, &mut rng);
+        let mut xs = x.clone();
+        xs.scale(3.7);
+        let k1 = arccos0_kernel(&x, &x);
+        let k2 = arccos0_kernel(&xs, &xs);
+        for (a, b) in k1.data.iter().zip(k2.data.iter()) {
+            assert!((a - b).abs() < 1e-3); // f32 acos sensitivity near ±1
+        }
+    }
+
+    #[test]
+    fn softmax_kernel_values() {
+        let x = Mat::from_vec(1, 2, vec![1.0, 0.0]);
+        let y = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let k = softmax_kernel(&x, &y);
+        assert!((k.at(0, 0) - std::f32::consts::E).abs() < 1e-5);
+        assert!((k.at(0, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kernel_enum_roundtrip() {
+        for k in [Kernel::Rbf, Kernel::ArcCos0, Kernel::Softmax] {
+            assert_eq!(Kernel::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(Kernel::parse("bogus"), None);
+        assert_eq!(Kernel::Rbf.l(), 2);
+        assert_eq!(Kernel::ArcCos0.l(), 1);
+    }
+}

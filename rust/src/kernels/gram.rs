@@ -1,0 +1,60 @@
+//! Gram matrices and the paper's approximation-error metric
+//! ‖G − Ĝ‖_F / ‖G‖_F.
+
+use super::exact::Kernel;
+use crate::linalg::{matmul_a_bt, Mat};
+
+/// Exact Gram matrix of one sample set.
+pub fn gram(kernel: Kernel, x: &Mat) -> Mat {
+    kernel.gram(x, x)
+}
+
+/// Approximated Gram matrix from feature-mapped samples: Ĝ = Z Zᵀ.
+pub fn gram_features(z: &Mat) -> Mat {
+    matmul_a_bt(z, z)
+}
+
+/// ‖G − Ĝ‖_F / ‖G‖_F (Results §B).
+pub fn approx_error(exact: &Mat, approx: &Mat) -> f64 {
+    assert_eq!((exact.rows, exact.cols), (approx.rows, approx.cols));
+    crate::util::stats::rel_fro_error(&approx.data, &exact.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(10, 4, &mut rng);
+        let g = gram(Kernel::Rbf, &x);
+        for i in 0..10 {
+            assert!((g.at(i, i) - 1.0).abs() < 1e-5);
+            for j in 0..10 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn feature_gram_matches_dots() {
+        let z = Mat::from_vec(2, 2, vec![1.0, 0.0, 1.0, 1.0]);
+        let g = gram_features(&z);
+        assert_eq!(g.at(0, 0), 1.0);
+        assert_eq!(g.at(0, 1), 1.0);
+        assert_eq!(g.at(1, 1), 2.0);
+    }
+
+    #[test]
+    fn error_zero_iff_equal() {
+        let mut rng = Rng::new(1);
+        let x = Mat::randn(8, 3, &mut rng);
+        let g = gram(Kernel::ArcCos0, &x);
+        assert!(approx_error(&g, &g) < 1e-12);
+        let mut g2 = g.clone();
+        *g2.at_mut(0, 1) += 0.5;
+        assert!(approx_error(&g, &g2) > 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Exact kernel functions and Gram-matrix machinery (the ground truth the
+//! random-feature approximations are measured against).
+
+pub mod exact;
+pub mod gram;
+
+pub use exact::{arccos0_kernel, rbf_kernel, softmax_kernel, Kernel};
+pub use gram::{approx_error, gram, gram_features};

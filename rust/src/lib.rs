@@ -1,0 +1,42 @@
+//! # imka — In-Memory Kernel Approximation
+//!
+//! Reproduction of *"Kernel Approximation using Analog In-Memory Computing"*
+//! (Büchel, Camposampiero et al., 2024) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **Layer 1 (Pallas, build time)** — fused random-feature projection
+//!   kernels (RFF / ArcCos0 / FAVOR+ softmax features) in
+//!   `python/compile/kernels/`, validated against pure-`jnp` oracles.
+//! - **Layer 2 (JAX, build time)** — Performer encoder and kernel-ridge
+//!   feature pipelines in `python/compile/model.py`, AOT-lowered to HLO text
+//!   artifacts consumed by the Rust runtime.
+//! - **Layer 3 (Rust, request path)** — this crate: a serving coordinator
+//!   (dynamic batcher, analog/digital router, tile pool) on top of a
+//!   simulated IBM HERMES-class PCM AIMC chip ([`aimc`]) and a PJRT runtime
+//!   ([`runtime`]) that executes the AOT artifacts. Python never runs on the
+//!   request path.
+//!
+//! The paper's hardware (the IBM HERMES Project Chip) is not available, so
+//! [`aimc`] implements a behavioural simulator of it: 64 cores of 256×256
+//! PCM crossbars with differential unit cells, INT8 pulse-width DACs,
+//! current-controlled-oscillator ADCs with saturation, programming noise,
+//! read noise, and conductance drift. See `DESIGN.md` §Substitutions.
+
+pub mod aimc;
+pub mod attention;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod energy;
+pub mod error;
+pub mod experiments;
+pub mod features;
+pub mod kernels;
+pub mod linalg;
+pub mod npy;
+pub mod ridge;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,153 @@
+//! Cholesky factorization and SPD solves (f64 accumulation) — the ridge
+//! classifier's closed-form solve (X^T X + λI) w = X^T y bottoms out here.
+
+use super::mat::Mat;
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct Cholesky {
+    /// L stored dense lower-triangular (row-major), f64 for stability.
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix (f32 input, f64 factorization).
+    pub fn factor(a: &Mat) -> Result<Self> {
+        if a.rows != a.cols {
+            return Err(Error::Shape(format!("cholesky needs square, got {}x{}", a.rows, a.cols)));
+        }
+        let n = a.rows;
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a.at(i, j) as f64;
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(Error::Numerical(format!(
+                            "cholesky: non-positive pivot {sum} at {i}"
+                        )));
+                    }
+                    l[i * n + i] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Ok(Cholesky { l, n })
+    }
+
+    /// Solve A x = b for one right-hand side.
+    pub fn solve_vec(&self, b: &[f32]) -> Vec<f32> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        // forward: L y = b
+        let mut y = vec![0.0f64; n];
+        for i in 0..n {
+            let mut sum = b[i] as f64;
+            for k in 0..i {
+                sum -= self.l[i * n + k] * y[k];
+            }
+            y[i] = sum / self.l[i * n + i];
+        }
+        // backward: L^T x = y
+        let mut x = vec![0.0f64; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l[k * n + i] * x[k];
+            }
+            x[i] = sum / self.l[i * n + i];
+        }
+        x.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Solve A X = B column-wise.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.n);
+        let mut out = Mat::zeros(self.n, b.cols);
+        for j in 0..b.cols {
+            let col: Vec<f32> = b.col(j);
+            let x = self.solve_vec(&col);
+            for i in 0..self.n {
+                *out.at_mut(i, j) = x[i];
+            }
+        }
+        out
+    }
+}
+
+/// Convenience: solve (A) X = B for SPD A.
+pub fn cholesky_solve(a: &Mat, b: &Mat) -> Result<Mat> {
+    Ok(Cholesky::factor(a)?.solve_mat(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, matmul_at_b};
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    fn spd(n: usize, rng: &mut Rng) -> Mat {
+        let g = Mat::randn(n + 5, n, rng);
+        let mut a = matmul_at_b(&g, &g);
+        for i in 0..n {
+            *a.at_mut(i, i) += 0.5;
+        }
+        a
+    }
+
+    #[test]
+    fn solve_recovers_solution_prop() {
+        check("cholesky-solve", 20, |g| {
+            let n = g.int(1, 40);
+            let a = spd(n, g.rng());
+            let x_true: Vec<f32> = g.gaussian_vec(n);
+            let xm = Mat::from_vec(n, 1, x_true.clone());
+            let b = matmul(&a, &xm);
+            let chol = Cholesky::factor(&a).unwrap();
+            let x = chol.solve_vec(&b.col(0));
+            x.iter()
+                .zip(&x_true)
+                .all(|(a, b)| (a - b).abs() < 1e-2 * (1.0 + b.abs()))
+        });
+    }
+
+    #[test]
+    fn factor_rejects_non_square() {
+        let m = Mat::zeros(2, 3);
+        assert!(Cholesky::factor(&m).is_err());
+    }
+
+    #[test]
+    fn factor_rejects_indefinite() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalue -1
+        assert!(Cholesky::factor(&m).is_err());
+    }
+
+    #[test]
+    fn solve_mat_multiple_rhs() {
+        let mut rng = Rng::new(8);
+        let a = spd(12, &mut rng);
+        let x_true = Mat::randn(12, 3, &mut rng);
+        let b = matmul(&a, &x_true);
+        let x = cholesky_solve(&a, &b).unwrap();
+        for (got, want) in x.data.iter().zip(x_true.data.iter()) {
+            assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn identity_solve_is_identity() {
+        let chol = Cholesky::factor(&Mat::eye(5)).unwrap();
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let x = chol.solve_vec(&b);
+        for (a, b) in x.iter().zip(&b) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Fast Walsh–Hadamard transform — the structured mixing primitive of
+//! SORF (H D1 H D2 H D3), O(n log n) per column.
+
+/// In-place FWHT of a length-2^k vector (unnormalized: H H x = n x).
+pub fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT needs power-of-two length, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Next power of two >= n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn involution_up_to_n() {
+        check("fwht-involution", 20, |g| {
+            let k = g.int(0, 8);
+            let n = 1usize << k;
+            let orig = g.gaussian_vec(n);
+            let mut x = orig.clone();
+            fwht_inplace(&mut x);
+            fwht_inplace(&mut x);
+            x.iter()
+                .zip(&orig)
+                .all(|(a, b)| (a / n as f32 - b).abs() < 1e-3)
+        });
+    }
+
+    #[test]
+    fn matches_hadamard_matrix_n4() {
+        // H4 rows: ++++, +-+-, ++--, +--+
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        fwht_inplace(&mut x);
+        assert_eq!(x, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn preserves_energy_scaled() {
+        let mut x = vec![1.0, -1.0, 0.5, 2.0, 0.0, 0.0, 1.5, -0.5];
+        let e0: f32 = x.iter().map(|v| v * v).sum();
+        fwht_inplace(&mut x);
+        let e1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((e1 - 8.0 * e0).abs() < 1e-3); // Parseval with unnormalized H
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_pow2() {
+        let mut x = vec![0.0; 3];
+        fwht_inplace(&mut x);
+    }
+}

@@ -1,0 +1,304 @@
+//! Row-major f32 matrix with the handful of dense ops the system needs.
+
+use crate::util::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data);
+        m
+    }
+
+    /// ±trunc-truncated standard-normal entries (paper's Ω sampling).
+    pub fn randn_truncated(rows: usize, cols: usize, trunc: f64, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_truncated_gaussian(&mut m.data, trunc);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Select a subset of rows (dataset slicing).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Vertical stack.
+    pub fn vstack(mats: &[&Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let cols = mats[0].cols;
+        assert!(mats.iter().all(|m| m.cols == cols));
+        let rows = mats.iter().map(|m| m.rows).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut r = 0;
+        for m in mats {
+            out.data[r * cols..(r + m.rows) * cols].copy_from_slice(&m.data);
+            r += m.rows;
+        }
+        out
+    }
+
+    /// Horizontal stack.
+    pub fn hstack(mats: &[&Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let rows = mats[0].rows;
+        assert!(mats.iter().all(|m| m.rows == rows));
+        let cols: usize = mats.iter().map(|m| m.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            let mut c = 0;
+            for m in mats {
+                out.row_mut(i)[c..c + m.cols].copy_from_slice(m.row(i));
+                c += m.cols;
+            }
+        }
+        out
+    }
+
+    /// Take the first `n` columns.
+    pub fn take_cols(&self, n: usize) -> Mat {
+        assert!(n <= self.cols);
+        let mut out = Mat::zeros(self.rows, n);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..n]);
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += *b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Apply f element-wise in place.
+    pub fn map_inplace<F: Fn(f32) -> f32>(&mut self, f: F) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    /// Per-row L2 norms.
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|&x| x * x).sum::<f32>().sqrt())
+            .collect()
+    }
+
+    /// Column means.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut mu = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (m, &x) in mu.iter_mut().zip(self.row(i)) {
+                *m += x;
+            }
+        }
+        let n = self.rows.max(1) as f32;
+        for m in &mut mu {
+            *m /= n;
+        }
+        mu
+    }
+
+    /// Column standard deviations given means (population).
+    pub fn col_stds(&self, means: &[f32]) -> Vec<f32> {
+        let mut var = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for ((v, &mu), &x) in var.iter_mut().zip(means).zip(self.row(i)) {
+                let d = x - mu;
+                *v += d * d;
+            }
+        }
+        let n = self.rows.max(1) as f32;
+        var.iter().map(|v| (v / n).sqrt()).collect()
+    }
+
+    /// Normalize columns to zero mean / unit variance in place (the
+    /// paper's dataset preprocessing); returns (means, stds).
+    pub fn normalize_columns(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let mu = self.col_means();
+        let sd = self.col_stds(&mu);
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            for ((x, &m), &s) in row.iter_mut().zip(&mu).zip(&sd) {
+                *x = (*x - m) / s.max(1e-8);
+            }
+        }
+        (mu, sd)
+    }
+
+    /// Apply an existing normalization (test-set transform).
+    pub fn apply_normalization(&mut self, mu: &[f32], sd: &[f32]) {
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            for ((x, &m), &s) in row.iter_mut().zip(mu).zip(sd) {
+                *x = (*x - m) / s.max(1e-8);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let m = Mat::randn(7, 5, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn stack_ops() {
+        let a = Mat::from_vec(1, 2, vec![1., 2.]);
+        let b = Mat::from_vec(1, 2, vec![3., 4.]);
+        let v = Mat::vstack(&[&a, &b]);
+        assert_eq!(v.rows, 2);
+        assert_eq!(v.row(1), &[3., 4.]);
+        let h = Mat::hstack(&[&a, &b]);
+        assert_eq!(h.cols, 4);
+        assert_eq!(h.row(0), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn normalize_columns_zero_mean_unit_var() {
+        let mut rng = Rng::new(1);
+        let mut m = Mat::randn(500, 4, &mut rng);
+        m.map_inplace(|x| 3.0 * x + 7.0);
+        m.normalize_columns();
+        let mu = m.col_means();
+        let sd = m.col_stds(&mu);
+        for j in 0..4 {
+            assert!(mu[j].abs() < 1e-4, "mean {}", mu[j]);
+            assert!((sd[j] - 1.0).abs() < 1e-3, "std {}", sd[j]);
+        }
+    }
+
+    #[test]
+    fn select_rows_picks() {
+        let m = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f32);
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.row(0), m.row(2));
+        assert_eq!(s.row(1), m.row(0));
+    }
+
+    #[test]
+    fn truncated_randn_bounded() {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn_truncated(50, 50, 3.0, &mut rng);
+        assert!(m.max_abs() <= 3.0);
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let m = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,220 @@
+//! Blocked, threaded f32 matmul kernels.
+//!
+//! The hot path of the whole Rust layer: the chip emulator, Gram matrices,
+//! feature maps and the ridge solver all bottom out here. The kernel is a
+//! cache-blocked i-k-j loop with 4-wide accumulation the compiler
+//! auto-vectorizes, parallelized over row blocks of the output.
+
+use super::mat::Mat;
+use crate::util::threads::parallel_chunks;
+
+/// k-panel size: keeps one row panel of A and (KB x cols) panel of B hot
+/// in cache.
+const KB: usize = 256;
+
+/// Row-block size for threading: small enough that every worker thread
+/// gets work even for modest outputs, large enough to amortize dispatch.
+fn row_block(rows: usize) -> usize {
+    let threads = crate::util::threads::default_threads();
+    (rows.div_ceil(2 * threads)).clamp(4, 64)
+}
+
+/// Below this many FLOPs, spawning worker threads costs more than the
+/// multiply itself — run single-threaded (one chunk).
+const PARALLEL_THRESHOLD_OPS: usize = 1_500_000;
+
+fn chunk_for(rows: usize, cols: usize, k: usize) -> usize {
+    if 2 * rows * cols * k < PARALLEL_THRESHOLD_OPS {
+        rows * cols // one chunk -> serial fast path
+    } else {
+        row_block(rows) * cols
+    }
+}
+
+/// C = A @ B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B into a pre-allocated output (hot-loop variant, no alloc).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let n = b.cols;
+    let k_dim = a.cols;
+    c.data.fill(0.0);
+    parallel_chunks(&mut c.data, chunk_for(a.rows, n, k_dim), |_, start, chunk| {
+        let row0 = start / n;
+        for k0 in (0..k_dim).step_by(KB) {
+            let k1 = (k0 + KB).min(k_dim);
+            for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+                let i = row0 + ri;
+                let a_row = a.row(i);
+                for (k, &aik) in a_row.iter().enumerate().take(k1).skip(k0) {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b.data[k * n..(k + 1) * n];
+                    // bounds-check-free axpy; LLVM vectorizes this into
+                    // SIMD fma with target-cpu=native
+                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// C = A^T @ B (A: k x m, B: k x n -> C: m x n) without materializing A^T.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let (m, n, k_dim) = (a.cols, b.cols, a.rows);
+    let mut c = Mat::zeros(m, n);
+    // Accumulate row-wise over k: C += a_k^T outer b_k. Parallelize over
+    // output row blocks; each thread re-scans A/B but owns its C rows.
+    parallel_chunks(&mut c.data, chunk_for(m, n, k_dim), |_, start, chunk| {
+        let row0 = start / n;
+        for k in 0..k_dim {
+            let a_row = a.row(k);
+            let b_row = b.row(k);
+            for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+                let aik = a_row[row0 + ri];
+                if aik == 0.0 {
+                    continue;
+                }
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += aik * bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = A @ B^T (A: m x k, B: n x k -> C: m x n); row-major friendly since
+/// both operands stream row-wise.
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "inner dims");
+    let (m, n, k_dim) = (a.rows, b.rows, a.cols);
+    let mut c = Mat::zeros(m, n);
+    parallel_chunks(&mut c.data, chunk_for(m, n, k_dim), |_, start, chunk| {
+        let row0 = start / n;
+        for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+            let a_row = a.row(row0 + ri);
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let b_row = b.row(j);
+                // 8-lane split accumulators let LLVM keep a full SIMD
+                // register of partial sums despite f32 non-associativity
+                let mut acc = [0.0f32; 8];
+                let chunks = k_dim / 8;
+                for c8 in 0..chunks {
+                    let a8 = &a_row[c8 * 8..c8 * 8 + 8];
+                    let b8 = &b_row[c8 * 8..c8 * 8 + 8];
+                    for l in 0..8 {
+                        acc[l] += a8[l] * b8[l];
+                    }
+                }
+                let mut total: f32 = acc.iter().sum();
+                for k in chunks * 8..k_dim {
+                    total += a_row[k] * b_row[k];
+                }
+                *o = total;
+            }
+        }
+    });
+    c
+}
+
+/// y = A @ x for a vector x.
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows)
+        .map(|i| a.row(i).iter().zip(x).map(|(&av, &xv)| av * xv).sum())
+        .collect()
+}
+
+/// Naive reference matmul for testing the blocked kernels.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    Mat::from_fn(a.rows, b.cols, |i, j| {
+        (0..a.cols).map(|k| a.at(i, k) * b.at(k, j)).sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_prop() {
+        check("matmul==naive", 25, |g| {
+            let (m, k, n) = (g.int(1, 70), g.int(1, 50), g.int(1, 70));
+            let a = Mat::randn(m, k, g.rng());
+            let b = Mat::randn(k, n, g.rng());
+            let fast = matmul(&a, &b);
+            let slow = matmul_naive(&a, &b);
+            fast.data
+                .iter()
+                .zip(slow.data.iter())
+                .all(|(x, y)| (x - y).abs() <= 1e-4 * (1.0 + y.abs()))
+        });
+    }
+
+    #[test]
+    fn matmul_large_blocked_path() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(130, 300, &mut rng);
+        let b = Mat::randn(300, 90, &mut rng);
+        assert_close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-3);
+    }
+
+    #[test]
+    fn at_b_matches_transpose() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(80, 33, &mut rng);
+        let b = Mat::randn(80, 21, &mut rng);
+        assert_close(&matmul_at_b(&a, &b), &matmul(&a.transpose(), &b), 1e-4);
+    }
+
+    #[test]
+    fn a_bt_matches_transpose() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(40, 17, &mut rng);
+        let b = Mat::randn(29, 17, &mut rng);
+        assert_close(&matmul_a_bt(&a, &b), &matmul(&a, &b.transpose()), 1e-4);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(13, 7, &mut rng);
+        let x: Vec<f32> = (0..7).map(|i| i as f32 - 3.0).collect();
+        let y = matvec(&a, &x);
+        let xm = Mat::from_vec(7, 1, x);
+        let ym = matmul(&a, &xm);
+        for i in 0..13 {
+            assert!((y[i] - ym.at(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(9, 9, &mut rng);
+        assert_close(&matmul(&a, &Mat::eye(9)), &a, 1e-6);
+        assert_close(&matmul(&Mat::eye(9), &a), &a, 1e-6);
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense linear algebra substrate (f32 row-major), built from scratch for
+//! the offline environment: matrix type, blocked/threaded matmul, Cholesky
+//! solve (ridge), Householder QR (ORF), and the fast Walsh–Hadamard
+//! transform (SORF).
+
+pub mod cholesky;
+pub mod hadamard;
+pub mod mat;
+pub mod matmul;
+pub mod qr;
+
+pub use cholesky::{cholesky_solve, Cholesky};
+pub use hadamard::{fwht_inplace, next_pow2};
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_a_bt, matmul_at_b, matmul_into, matvec};
+pub use qr::qr_q;

@@ -1,0 +1,129 @@
+//! Householder QR — used by the ORF sampler to orthogonalize Gaussian
+//! blocks (Yu et al., 2016).
+
+use super::mat::Mat;
+
+/// Thin QR of a square (or tall) matrix; returns Q with the same shape as
+/// the input's column space (n x n for square input), sign-corrected so
+/// that R's diagonal is non-negative (Haar-distributed Q for Gaussian
+/// input).
+pub fn qr_q(a: &Mat) -> Mat {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_q expects tall/square input");
+    // Work in f64 for orthogonality quality.
+    let mut r: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut q: Vec<f64> = vec![0.0; m * m];
+    for i in 0..m {
+        q[i * m + i] = 1.0;
+    }
+    let mut v = vec![0.0f64; m];
+    for k in 0..n.min(m - 1) {
+        // Householder vector for column k below the diagonal
+        let mut norm = 0.0;
+        for i in k..m {
+            let x = r[i * n + k];
+            norm += x * x;
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if r[k * n + k] >= 0.0 { -norm } else { norm };
+        let mut vnorm2 = 0.0;
+        for i in k..m {
+            v[i] = r[i * n + k];
+            if i == k {
+                v[i] -= alpha;
+            }
+            vnorm2 += v[i] * v[i];
+        }
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        // R = (I - 2 v v^T / v^T v) R
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * r[i * n + j];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[i * n + j] -= c * v[i];
+            }
+        }
+        // Q = Q (I - 2 v v^T / v^T v)
+        for i in 0..m {
+            let mut dot = 0.0;
+            for l in k..m {
+                dot += q[i * m + l] * v[l];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for l in k..m {
+                q[i * m + l] -= c * v[l];
+            }
+        }
+    }
+    // Thin Q: first n columns, sign-corrected by diag(R)
+    let mut out = Mat::zeros(m, n);
+    for j in 0..n {
+        let sign = if r[j * n + j] >= 0.0 { 1.0 } else { -1.0 };
+        for i in 0..m {
+            out.data[i * n + j] = (q[i * m + j] * sign) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul_at_b;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn q_is_orthonormal_prop() {
+        check("qr-orthonormal", 15, |g| {
+            let n = g.int(2, 32);
+            let a = Mat::randn(n, n, g.rng());
+            let q = qr_q(&a);
+            let gram = matmul_at_b(&q, &q);
+            (0..n).all(|i| {
+                (0..n).all(|j| {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    (gram.at(i, j) - want).abs() < 1e-3
+                })
+            })
+        });
+    }
+
+    #[test]
+    fn tall_input_thin_q() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(10, 4, &mut rng);
+        let q = qr_q(&a);
+        assert_eq!((q.rows, q.cols), (10, 4));
+        let gram = matmul_at_b(&q, &q);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((gram.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn q_spans_input_columns() {
+        // Q Q^T a == a for square nonsingular input
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(8, 8, &mut rng);
+        let q = qr_q(&a);
+        let qqt = crate::linalg::matmul::matmul_a_bt(&q, &q);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qqt.at(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! `imka` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   serve                 start the coordinator + TCP server
+//!   experiment <id>       regenerate a paper table/figure (see `help`)
+//!   program-demo          program a matrix on the simulated chip, report
+//!                         GDP convergence + MVM error
+//!   info                  artifact registry + chip + model summary
+//!   help
+
+use imka::cli::Args;
+use imka::config::Config;
+use imka::coordinator::{Engine, Server};
+use imka::error::Result;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let config_path = args.get("config").map(std::path::Path::new);
+    let mut cfg = Config::load_or_default(config_path)?;
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        "serve" => serve(args, &cfg),
+        "experiment" => {
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            imka::experiments::run(id, args)
+        }
+        "program-demo" => program_demo(args, &cfg),
+        "info" => info(&cfg),
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        r#"imka — In-Memory Kernel Approximation (paper reproduction)
+
+USAGE: imka <subcommand> [options]
+
+SUBCOMMANDS
+  serve                        boot the coordinator and TCP server
+      --bind ADDR              (default 127.0.0.1:7473)
+      --workers N --max-batch N --max-wait-us N --replication N
+  experiment <id>              regenerate a paper table/figure:
+      fig2a fig2b fig3b table1 supp20 supp21 supp8 supp-table2
+      redraw ablate-relu ablate-replication ablate-noise all
+      common flags: --seeds N --scale F --n-eval N --per-dataset
+  program-demo                 GDP program-and-verify walkthrough
+      --rows N --cols N
+  info                         artifacts + chip + model summary
+
+GLOBAL
+  --artifacts DIR              (default ./artifacts; or IMKA_ARTIFACTS_DIR)
+  --config FILE                TOML config (chip noise, serving)
+"#
+    );
+}
+
+fn serve(args: &Args, cfg: &Config) -> Result<()> {
+    let mut cfg = cfg.clone();
+    if let Some(bind) = args.get("bind") {
+        cfg.serve.bind = bind.to_string();
+    }
+    cfg.serve.workers = args.usize_or("workers", cfg.serve.workers)?;
+    cfg.serve.max_batch = args.usize_or("max-batch", cfg.serve.max_batch)?;
+    cfg.serve.max_wait_us = args.usize_or("max-wait-us", cfg.serve.max_wait_us as usize)? as u64;
+    cfg.serve.replication = args.usize_or("replication", cfg.serve.replication)?;
+
+    println!("booting engine (artifacts: {})...", cfg.artifacts_dir);
+    let engine = Engine::start(&cfg)?;
+    println!(
+        "engine up: {} chip cores programmed, model loaded: {}",
+        engine.cores_used(),
+        engine.has_model()
+    );
+    let server = Server::start(engine, &cfg.serve.bind)?;
+    println!(
+        "listening on {} (newline-delimited JSON; Ctrl-C to stop)",
+        server.addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn program_demo(args: &Args, cfg: &Config) -> Result<()> {
+    use imka::aimc::Chip;
+    use imka::linalg::Mat;
+    use imka::util::Rng;
+
+    let rows = args.usize_or("rows", 64)?;
+    let cols = args.usize_or("cols", 128)?;
+    let mut rng = Rng::new(42);
+    let w = Mat::randn(rows, cols, &mut rng);
+    let x_cal = Mat::randn(128, rows, &mut rng);
+
+    println!(
+        "programming a {rows}x{cols} matrix onto the simulated chip \
+         ({} GDP iterations, sigma_prog {:.3})",
+        cfg.chip.program_iters, cfg.chip.sigma_prog
+    );
+    let mut chip = Chip::new(cfg.chip.clone(), 7);
+    let h = chip.program_matrix("demo", &w, &x_cal, 1)?;
+    for (i, s) in chip.program_stats(&h).unwrap().iter().enumerate() {
+        println!(
+            "  tile {i}: rms weight error {:.4} -> {:.4} ({} iters)",
+            s.rms_initial, s.rms_final, s.iters
+        );
+    }
+    let x = Mat::randn(32, rows, &mut rng);
+    let y = chip.matmul(&h, &x)?;
+    let want = imka::linalg::matmul(&x, &w);
+    println!(
+        "  analog MVM relative error: {:.4} (32x{rows} batch)",
+        imka::util::stats::rel_fro_error(&y.data, &want.data)
+    );
+    println!("  chip utilization: {:.1}%", 100.0 * chip.utilization());
+    Ok(())
+}
+
+fn info(cfg: &Config) -> Result<()> {
+    use imka::runtime::Registry;
+    println!(
+        "chip: {} cores x {}x{} ({} weights capacity)",
+        cfg.chip.cores,
+        cfg.chip.rows,
+        cfg.chip.cols,
+        cfg.chip.capacity()
+    );
+    println!(
+        "noise: sigma_prog {:.3}, sigma_read {:.3}, drift nu {:.3}±{:.3} @ t={}s (comp: {})",
+        cfg.chip.sigma_prog,
+        cfg.chip.sigma_read,
+        cfg.chip.drift_nu_mean,
+        cfg.chip.drift_nu_std,
+        cfg.chip.drift_t_seconds,
+        cfg.chip.drift_compensation
+    );
+    match Registry::open(std::path::Path::new(&cfg.artifacts_dir)) {
+        Ok(reg) => {
+            println!("artifacts ({}):", reg.specs.len());
+            let mut counts = std::collections::BTreeMap::new();
+            for s in reg.specs.values() {
+                *counts.entry(s.kind.clone()).or_insert(0usize) += 1;
+            }
+            for (kind, count) in counts {
+                println!("  {kind}: {count}");
+            }
+            if let Some(mc) = reg.model_config() {
+                println!("model config: {}", mc.to_string());
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

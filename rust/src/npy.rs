@@ -1,0 +1,328 @@
+//! Minimal `.npy` / `.npz` reader-writer (little-endian f32/i32/i64,
+//! C-order) — the weight/testset/oracle interchange with the Python build
+//! path. Built on the vendored `zip` crate; no numpy at runtime.
+
+use std::collections::BTreeMap;
+use std::io::{Cursor, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A loaded numpy array: shape + flat data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl NpyArray {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray { shape, data: NpyData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray { shape, data: NpyData::I32(data) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Ok(v),
+            other => Err(Error::Parse(format!("expected f32 npy, got {other:?}"))),
+        }
+    }
+
+    /// Integer view (i32 or i64 widened).
+    pub fn as_i64_vec(&self) -> Result<Vec<i64>> {
+        match &self.data {
+            NpyData::I32(v) => Ok(v.iter().map(|&x| x as i64).collect()),
+            NpyData::I64(v) => Ok(v.clone()),
+            other => Err(Error::Parse(format!("expected int npy, got {other:?}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// .npy format
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+fn parse_header(header: &str) -> Result<(String, bool, Vec<usize>)> {
+    // header is a python dict literal: {'descr': '<f4', 'fortran_order': False, 'shape': (8, 16), }
+    let descr = extract_quoted(header, "descr")
+        .ok_or_else(|| Error::Parse("npy: no descr".into()))?;
+    let fortran = header
+        .split("fortran_order")
+        .nth(1)
+        .map(|s| s.trim_start_matches([':', ' ', '\'']).starts_with("True"))
+        .unwrap_or(false);
+    let shape_part = header
+        .split("shape")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .ok_or_else(|| Error::Parse("npy: no shape".into()))?;
+    let mut shape = Vec::new();
+    for tok in shape_part.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        shape.push(
+            tok.parse::<usize>()
+                .map_err(|_| Error::Parse(format!("npy: bad shape token '{tok}'")))?,
+        );
+    }
+    Ok((descr, fortran, shape))
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let idx = header.find(key)?;
+    let rest = &header[idx + key.len()..];
+    let start = rest.find('\'')? + 1;
+    // skip the quote closing the key if present: find value after ':'
+    let after_colon = rest.find(':')?;
+    let rest = &rest[after_colon..];
+    let q1 = rest.find('\'')? + 1;
+    let q2 = rest[q1..].find('\'')? + q1;
+    let _ = start;
+    Some(rest[q1..q2].to_string())
+}
+
+/// Read one `.npy` blob.
+pub fn read_npy(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        return Err(Error::Parse("npy: bad magic".into()));
+    }
+    let major = bytes[6];
+    let header_len: usize;
+    let header_start: usize;
+    if major == 1 {
+        header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        header_start = 10;
+    } else {
+        header_len = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        header_start = 12;
+    }
+    let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])
+        .map_err(|_| Error::Parse("npy: bad header utf8".into()))?;
+    let (descr, fortran, shape) = parse_header(header)?;
+    if fortran {
+        return Err(Error::Parse("npy: fortran order unsupported".into()));
+    }
+    let n: usize = shape.iter().product();
+    let body = &bytes[header_start + header_len..];
+    let data = match descr.as_str() {
+        "<f4" => {
+            if body.len() < n * 4 {
+                return Err(Error::Parse("npy: truncated f4 body".into()));
+            }
+            let mut v = Vec::with_capacity(n);
+            for c in body[..n * 4].chunks_exact(4) {
+                v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            NpyData::F32(v)
+        }
+        "<i4" => {
+            if body.len() < n * 4 {
+                return Err(Error::Parse("npy: truncated i4 body".into()));
+            }
+            let mut v = Vec::with_capacity(n);
+            for c in body[..n * 4].chunks_exact(4) {
+                v.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            NpyData::I32(v)
+        }
+        "<i8" => {
+            if body.len() < n * 8 {
+                return Err(Error::Parse("npy: truncated i8 body".into()));
+            }
+            let mut v = Vec::with_capacity(n);
+            for c in body[..n * 8].chunks_exact(8) {
+                v.push(i64::from_le_bytes([
+                    c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                ]));
+            }
+            NpyData::I64(v)
+        }
+        other => {
+            return Err(Error::Parse(format!("npy: unsupported dtype '{other}'")));
+        }
+    };
+    Ok(NpyArray { shape, data })
+}
+
+/// Serialize one array as `.npy` (version 1.0).
+pub fn write_npy(arr: &NpyArray) -> Vec<u8> {
+    let descr = match arr.data {
+        NpyData::F32(_) => "<f4",
+        NpyData::I32(_) => "<i4",
+        NpyData::I64(_) => "<i8",
+    };
+    let shape_str = match arr.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!(
+            "({})",
+            arr.shape
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic+version+len+header is a multiple of 64, newline-terminated
+    let base = MAGIC.len() + 2 + 2;
+    let total = (base + header.len() + 1).div_ceil(64) * 64;
+    while base + header.len() + 1 < total {
+        header.push(' ');
+    }
+    header.push('\n');
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.push(1);
+    out.push(0);
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    match &arr.data {
+        NpyData::F32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        NpyData::I32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        NpyData::I64(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// .npz (zip of .npy)
+// ---------------------------------------------------------------------------
+
+/// Load every array of an `.npz` file, keyed by entry name (sans `.npy`).
+pub fn read_npz(path: &Path) -> Result<BTreeMap<String, NpyArray>> {
+    let file = std::fs::File::open(path)?;
+    let mut zip = zip::ZipArchive::new(file)
+        .map_err(|e| Error::Parse(format!("npz: {e}")))?;
+    let mut out = BTreeMap::new();
+    for i in 0..zip.len() {
+        let mut entry = zip
+            .by_index(i)
+            .map_err(|e| Error::Parse(format!("npz entry: {e}")))?;
+        let name = entry.name().trim_end_matches(".npy").to_string();
+        let mut bytes = Vec::new();
+        entry.read_to_end(&mut bytes)?;
+        out.insert(name, read_npy(&bytes)?);
+    }
+    Ok(out)
+}
+
+/// Write arrays to an `.npz` file.
+pub fn write_npz(path: &Path, arrays: &BTreeMap<String, NpyArray>) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut zip = zip::ZipWriter::new(file);
+    let opts = zip::write::FileOptions::default()
+        .compression_method(zip::CompressionMethod::Deflated);
+    for (name, arr) in arrays {
+        zip.start_file(format!("{name}.npy"), opts)
+            .map_err(|e| Error::Parse(format!("npz write: {e}")))?;
+        zip.write_all(&write_npy(arr))?;
+    }
+    zip.finish()
+        .map_err(|e| Error::Parse(format!("npz finish: {e}")))?;
+    Ok(())
+}
+
+/// In-memory npz roundtrip helpers for tests.
+pub fn read_npz_bytes(bytes: &[u8]) -> Result<BTreeMap<String, NpyArray>> {
+    let mut zip = zip::ZipArchive::new(Cursor::new(bytes))
+        .map_err(|e| Error::Parse(format!("npz: {e}")))?;
+    let mut out = BTreeMap::new();
+    for i in 0..zip.len() {
+        let mut entry = zip
+            .by_index(i)
+            .map_err(|e| Error::Parse(format!("npz entry: {e}")))?;
+        let name = entry.name().trim_end_matches(".npy").to_string();
+        let mut b = Vec::new();
+        entry.read_to_end(&mut b)?;
+        out.insert(name, read_npy(&b)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npy_roundtrip_f32() {
+        let arr = NpyArray::f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, 9.0]);
+        let bytes = write_npy(&arr);
+        let back = read_npy(&bytes).unwrap();
+        assert_eq!(back, arr);
+    }
+
+    #[test]
+    fn npy_roundtrip_i32_scalar_and_1d() {
+        let arr = NpyArray::i32(vec![4], vec![1, -2, 3, 4]);
+        assert_eq!(read_npy(&write_npy(&arr)).unwrap(), arr);
+        let scalar = NpyArray::i32(vec![], vec![7]);
+        assert_eq!(read_npy(&write_npy(&scalar)).unwrap(), scalar);
+    }
+
+    #[test]
+    fn npz_roundtrip(){
+        let mut arrays = BTreeMap::new();
+        arrays.insert("a".to_string(), NpyArray::f32(vec![2, 2], vec![1., 2., 3., 4.]));
+        arrays.insert("b".to_string(), NpyArray::i32(vec![3], vec![7, 8, 9]));
+        let tmp = std::env::temp_dir().join(format!("imka_npz_test_{}.npz", std::process::id()));
+        write_npz(&tmp, &arrays).unwrap();
+        let back = read_npz(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(back, arrays);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_npy(b"not an npy").is_err());
+        assert!(read_npy(&[]).is_err());
+    }
+
+    #[test]
+    fn header_alignment_multiple_of_64() {
+        let arr = NpyArray::f32(vec![1], vec![1.0]);
+        let bytes = write_npy(&arr);
+        // data starts at a 64-byte boundary
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+    }
+}

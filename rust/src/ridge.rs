@@ -1,0 +1,250 @@
+//! Kernel ridge classification on explicit feature maps (Results §B).
+//!
+//! Closed-form ridge: w = (ZᵀZ + λI)⁻¹ Zᵀ Y, solved with Cholesky. For
+//! multi-class problems, one-vs-rest with ±1 targets (exactly the paper's
+//! setup: a linear classifier fit on FP-32 feature maps, later evaluated
+//! on feature maps computed on-chip).
+
+use crate::error::Result;
+use crate::linalg::{cholesky_solve, matmul, matmul_at_b, Mat};
+
+/// Trained ridge classifier read-out.
+#[derive(Clone, Debug)]
+pub struct RidgeClassifier {
+    /// (D x C) read-out weights
+    pub w: Mat,
+    pub classes: usize,
+    pub lambda: f32,
+}
+
+impl RidgeClassifier {
+    /// Fit on feature-mapped inputs z (N x D) and labels (0..classes).
+    /// λ defaults to the paper's 0.5.
+    pub fn fit(z: &Mat, labels: &[usize], classes: usize, lambda: f32) -> Result<RidgeClassifier> {
+        assert_eq!(z.rows, labels.len());
+        assert!(classes >= 2);
+        // Y: N x C with ±1 one-vs-rest targets
+        let mut y = Mat::zeros(z.rows, classes);
+        for (i, &c) in labels.iter().enumerate() {
+            for j in 0..classes {
+                *y.at_mut(i, j) = if j == c { 1.0 } else { -1.0 };
+            }
+        }
+        let mut gram = matmul_at_b(z, z); // D x D
+        for i in 0..gram.rows {
+            *gram.at_mut(i, i) += lambda;
+        }
+        let zty = matmul_at_b(z, &y); // D x C
+        let w = cholesky_solve(&gram, &zty)?;
+        Ok(RidgeClassifier { w, classes, lambda })
+    }
+
+    /// Raw scores (N x C).
+    pub fn scores(&self, z: &Mat) -> Mat {
+        matmul(z, &self.w)
+    }
+
+    /// Argmax class predictions.
+    pub fn predict(&self, z: &Mat) -> Vec<usize> {
+        let s = self.scores(z);
+        (0..s.rows)
+            .map(|i| {
+                let row = s.row(i);
+                let mut best = 0;
+                for j in 1..row.len() {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Accuracy against ground-truth labels.
+    pub fn accuracy(&self, z: &Mat, labels: &[usize]) -> f64 {
+        crate::util::stats::accuracy(&self.predict(z), labels)
+    }
+}
+
+/// Exact (dual-form) kernel ridge — the "Kernel Methods" baseline of
+/// Supp. Table II: α = (G + λI)⁻¹ Y, predict via Σᵢ αᵢ k(x, xᵢ).
+/// O(N²) memory / O(N³) fit; the cost profile the approximation methods
+/// exist to avoid.
+#[derive(Clone, Debug)]
+pub struct DualKernelRidge {
+    /// (N x C) dual coefficients
+    pub alpha: Mat,
+    /// retained training samples
+    pub train_x: Mat,
+    pub kernel: crate::kernels::Kernel,
+    pub classes: usize,
+}
+
+impl DualKernelRidge {
+    pub fn fit(
+        kernel: crate::kernels::Kernel,
+        x: &Mat,
+        labels: &[usize],
+        classes: usize,
+        lambda: f32,
+    ) -> Result<DualKernelRidge> {
+        assert_eq!(x.rows, labels.len());
+        let mut g = kernel.gram(x, x);
+        for i in 0..g.rows {
+            *g.at_mut(i, i) += lambda;
+        }
+        let mut y = Mat::zeros(x.rows, classes);
+        for (i, &c) in labels.iter().enumerate() {
+            for j in 0..classes {
+                *y.at_mut(i, j) = if j == c { 1.0 } else { -1.0 };
+            }
+        }
+        let alpha = cholesky_solve(&g, &y)?;
+        Ok(DualKernelRidge { alpha, train_x: x.clone(), kernel, classes })
+    }
+
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        let k = self.kernel.gram(x, &self.train_x); // (n x N)
+        let s = matmul(&k, &self.alpha);
+        (0..s.rows)
+            .map(|i| {
+                let row = s.row(i);
+                let mut best = 0;
+                for j in 1..row.len() {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    pub fn accuracy(&self, x: &Mat, labels: &[usize]) -> f64 {
+        crate::util::stats::accuracy(&self.predict(x), labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::{gaussian_mixture, ring, split_dataset, xor};
+    use crate::features::{feature_map, sample_omega, Sampler};
+    use crate::kernels::Kernel;
+    use crate::util::Rng;
+
+    #[test]
+    fn separates_linearly_separable() {
+        let mut rng = Rng::new(0);
+        // two well-separated blobs, identity features
+        let mut z = Mat::zeros(200, 2);
+        let mut y = Vec::new();
+        for i in 0..200 {
+            let c = i % 2;
+            let center = if c == 0 { -3.0 } else { 3.0 };
+            z.row_mut(i)[0] = center + rng.gaussian_f32() * 0.5;
+            z.row_mut(i)[1] = rng.gaussian_f32();
+            y.push(c);
+        }
+        let clf = RidgeClassifier::fit(&z, &y, 2, 0.5).unwrap();
+        assert!(clf.accuracy(&z, &y) > 0.98);
+    }
+
+    #[test]
+    fn rbf_features_solve_ring() {
+        // linearly inseparable; RBF features make it separable
+        let mut rng = Rng::new(1);
+        let (x, y) = ring(&mut rng, 6, 600, 0.1);
+        let ds = split_dataset("ring", x, y, 2, 400, &mut rng);
+        let omega = sample_omega(Sampler::Orf, 6, 192, &mut rng);
+        let ztr = feature_map(Kernel::Rbf, &ds.train_x, &omega);
+        let zte = feature_map(Kernel::Rbf, &ds.test_x, &omega);
+        let clf = RidgeClassifier::fit(&ztr, &ds.train_y, 2, 0.5).unwrap();
+        let kernel_acc = clf.accuracy(&zte, &ds.test_y);
+        // linear baseline on raw features
+        let lin = RidgeClassifier::fit(&ds.train_x, &ds.train_y, 2, 0.5).unwrap();
+        let lin_acc = lin.accuracy(&ds.test_x, &ds.test_y);
+        assert!(
+            kernel_acc > 0.85 && kernel_acc > lin_acc + 0.2,
+            "kernel {kernel_acc} vs linear {lin_acc}"
+        );
+    }
+
+    #[test]
+    fn rbf_features_beat_linear_on_xor() {
+        let mut rng = Rng::new(2);
+        let (x, y) = xor(&mut rng, 6, 800, 2, 0.05);
+        let ds = split_dataset("xor", x, y, 2, 500, &mut rng);
+        let omega = sample_omega(Sampler::Orf, 6, 512, &mut rng);
+        let ztr = feature_map(Kernel::Rbf, &ds.train_x, &omega);
+        let zte = feature_map(Kernel::Rbf, &ds.test_x, &omega);
+        let clf = RidgeClassifier::fit(&ztr, &ds.train_y, 2, 0.5).unwrap();
+        let lin = RidgeClassifier::fit(&ds.train_x, &ds.train_y, 2, 0.5).unwrap();
+        assert!(clf.accuracy(&zte, &ds.test_y) > 0.75);
+        assert!(lin.accuracy(&ds.test_x, &ds.test_y) < 0.65);
+    }
+
+    #[test]
+    fn arccos_features_track_exact_arccos_kernel() {
+        // The approximation property (what Fig. 2 measures): feature-map
+        // ridge should match the *exact* ArcCos0 dual kernel ridge within
+        // a few points. (ArcCos0 is angle-only, so tasks like XOR where
+        // antipodal points share a class are out of its RKHS — by design.)
+        let mut rng = Rng::new(3);
+        let (x, y) = gaussian_mixture(&mut rng, 8, 3, 700, 3, 1.0);
+        let ds = split_dataset("mix", x, y, 3, 450, &mut rng);
+        let exact = DualKernelRidge::fit(Kernel::ArcCos0, &ds.train_x, &ds.train_y, 3, 0.5)
+            .unwrap()
+            .accuracy(&ds.test_x, &ds.test_y);
+        let omega = sample_omega(Sampler::Orf, 8, 512, &mut rng);
+        let ztr = feature_map(Kernel::ArcCos0, &ds.train_x, &omega);
+        let zte = feature_map(Kernel::ArcCos0, &ds.test_x, &omega);
+        let approx = RidgeClassifier::fit(&ztr, &ds.train_y, 3, 0.5)
+            .unwrap()
+            .accuracy(&zte, &ds.test_y);
+        assert!(
+            approx > exact - 0.06,
+            "approx {approx} should track exact {exact}"
+        );
+        assert!(exact > 0.5, "exact kernel should beat chance, got {exact}");
+    }
+
+    #[test]
+    fn dual_ridge_rbf_solves_ring() {
+        let mut rng = Rng::new(5);
+        let (x, y) = ring(&mut rng, 6, 400, 0.1);
+        let ds = split_dataset("ring", x, y, 2, 250, &mut rng);
+        let clf = DualKernelRidge::fit(Kernel::Rbf, &ds.train_x, &ds.train_y, 2, 0.5).unwrap();
+        assert!(clf.accuracy(&ds.test_x, &ds.test_y) > 0.9);
+    }
+
+    #[test]
+    fn multiclass_one_vs_rest() {
+        let mut rng = Rng::new(3);
+        // 4 well-separated blobs in 2d
+        let mut z = Mat::zeros(400, 2);
+        let mut y = Vec::new();
+        let centers = [(-4.0, -4.0), (4.0, -4.0), (-4.0, 4.0), (4.0, 4.0)];
+        for i in 0..400 {
+            let c = i % 4;
+            z.row_mut(i)[0] = centers[c].0 + rng.gaussian_f32() * 0.6;
+            z.row_mut(i)[1] = centers[c].1 + rng.gaussian_f32() * 0.6;
+            y.push(c);
+        }
+        let clf = RidgeClassifier::fit(&z, &y, 4, 0.5).unwrap();
+        assert!(clf.accuracy(&z, &y) > 0.97);
+        assert_eq!(clf.w.cols, 4);
+    }
+
+    #[test]
+    fn lambda_regularizes() {
+        // with huge lambda, weights shrink toward zero
+        let mut rng = Rng::new(4);
+        let z = Mat::randn(50, 10, &mut rng);
+        let y: Vec<usize> = (0..50).map(|i| i % 2).collect();
+        let w_small = RidgeClassifier::fit(&z, &y, 2, 0.1).unwrap().w;
+        let w_big = RidgeClassifier::fit(&z, &y, 2, 1000.0).unwrap().w;
+        assert!(w_big.fro_norm() < 0.2 * w_small.fro_norm());
+    }
+}

@@ -1,0 +1,200 @@
+//! Artifact registry: parses `artifacts/manifest.json`, compiles HLO-text
+//! artifacts lazily, and caches executables by name.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::client::{Executable, XlaRuntime};
+use crate::config::Json;
+use crate::error::{Error, Result};
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// full manifest entry (kind-specific fields: batch, d, m, mode, ...)
+    pub meta: Json,
+    /// flattened input (shape, dtype) list in parameter order
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    pub fn batch(&self) -> usize {
+        self.meta.get("batch").and_then(|v| v.as_usize()).unwrap_or(1)
+    }
+
+    pub fn out_dim(&self) -> Option<usize> {
+        self.meta.get("out_dim").and_then(|v| v.as_usize())
+    }
+}
+
+/// Registry over one artifacts directory.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub specs: BTreeMap<String, ArtifactSpec>,
+    pub manifest: Json,
+    runtime: Arc<XlaRuntime>,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+impl Registry {
+    /// Open `dir/manifest.json` and index its artifacts.
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Json::parse(&src)?;
+        let mut specs = BTreeMap::new();
+        for a in manifest
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("manifest.artifacts not an array".into()))?
+        {
+            let name = a.req_str("name")?.to_string();
+            let input_shapes = a
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|i| {
+                    i.get("shape").and_then(|s| s.as_arr()).map(|dims| {
+                        dims.iter().filter_map(|d| d.as_usize()).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            specs.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    file: a.req_str("file")?.to_string(),
+                    kind: a.req_str("kind")?.to_string(),
+                    meta: a.clone(),
+                    input_shapes,
+                },
+            );
+        }
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            specs,
+            manifest,
+            runtime: Arc::new(XlaRuntime::cpu()?),
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact '{name}'")))
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.spec(name)?;
+        let exe = Arc::new(
+            self.runtime
+                .compile_file(&self.dir.join(&spec.file), name)?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Artifacts of a kind, e.g. all `performer` variants.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.specs.values().filter(|s| s.kind == kind).collect()
+    }
+
+    /// Find the smallest-batch variant of a (kind, filter) that fits `n`
+    /// rows; falls back to the largest if n exceeds every batch size.
+    pub fn best_batch<'a>(
+        &'a self,
+        kind: &str,
+        n: usize,
+        pred: impl Fn(&ArtifactSpec) -> bool,
+    ) -> Option<&'a ArtifactSpec> {
+        let mut candidates: Vec<&ArtifactSpec> =
+            self.of_kind(kind).into_iter().filter(|s| pred(s)).collect();
+        candidates.sort_by_key(|s| s.batch());
+        candidates
+            .iter()
+            .find(|s| s.batch() >= n)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    pub fn model_config(&self) -> Option<&Json> {
+        self.manifest.get("model_config")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn open_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = Registry::open(&dir).unwrap();
+        assert!(reg.specs.len() >= 10);
+        assert!(!reg.of_kind("feature_map").is_empty());
+        assert!(!reg.of_kind("performer").is_empty());
+        // every referenced file exists
+        for spec in reg.specs.values() {
+            assert!(dir.join(&spec.file).exists(), "{} missing", spec.file);
+        }
+    }
+
+    #[test]
+    fn best_batch_picks_smallest_fit() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let reg = Registry::open(&dir).unwrap();
+        let pick = |n: usize| {
+            reg.best_batch("feature_map", n, |s| {
+                s.meta.get("kernel").and_then(|k| k.as_str()) == Some("rbf")
+            })
+            .map(|s| s.batch())
+        };
+        assert_eq!(pick(1), Some(1));
+        assert_eq!(pick(2), Some(8));
+        assert_eq!(pick(8), Some(8));
+        assert_eq!(pick(9), Some(64));
+        assert_eq!(pick(1000), Some(64)); // falls back to largest
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = match Registry::open(Path::new("/nonexistent")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

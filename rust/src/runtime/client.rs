@@ -1,0 +1,172 @@
+//! Thin typed wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO *text* (see /opt/xla-example/README.md): jax >= 0.5
+//! emits HloModuleProto with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Typed inputs for an executable.
+#[derive(Clone, Debug)]
+pub enum Input {
+    /// f32 tensor with shape
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 tensor with shape
+    I32(Vec<i32>, Vec<usize>),
+    /// i32 scalar
+    ScalarI32(i32),
+}
+
+impl Input {
+    pub fn from_mat(m: &Mat) -> Input {
+        Input::F32(m.data.clone(), vec![m.rows, m.cols])
+    }
+
+    pub fn vec_f32(v: Vec<f32>) -> Input {
+        let n = v.len();
+        Input::F32(v, vec![n])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Input::F32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Input::I32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Input::ScalarI32(v) => xla::Literal::from(*v),
+        })
+    }
+}
+
+/// All PJRT objects share non-atomically-refcounted internals (`Rc`), so
+/// every PJRT call in the process is serialized through this one lock.
+/// XLA's CPU backend parallelizes *inside* an execution with its own
+/// thread pool, so the coordinator still gets intra-op parallelism.
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+// SAFETY: all PJRT access (compile + execute) is serialized through
+// PJRT_LOCK, so the non-Send internals are never touched concurrently.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Run with typed inputs; returns the single (tuple-unwrapped) f32
+    /// output as a flat vector plus its element count.
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<f32>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<_>>()?;
+        // poison-tolerant: a panic in another thread (e.g. a failing test)
+        // must not wedge every subsequent PJRT call in the process
+        let guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        drop(guard);
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Run and reshape the output into a matrix of the given shape.
+    pub fn run_mat(&self, inputs: &[Input], rows: usize, cols: usize) -> Result<Mat> {
+        let v = self.run_f32(inputs)?;
+        if v.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "{}: output has {} elems, expected {rows}x{cols}",
+                self.name,
+                v.len()
+            )));
+        }
+        Ok(Mat::from_vec(rows, cols, v))
+    }
+}
+
+/// The PJRT CPU runtime: client + compiler.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: all use of the client goes through PJRT_LOCK (see compile_file).
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<XlaRuntime> {
+        Ok(XlaRuntime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_file(&self, path: &Path, name: &str) -> Result<Executable> {
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "artifact file missing: {} (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        let guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        drop(guard);
+        Ok(Executable { exe, name: name.to_string() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn compile_and_run_feature_artifact() {
+        let dir = artifacts_dir();
+        let path = dir.join("feature_rbf_b8_d16_m256.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = XlaRuntime::cpu().unwrap();
+        let exe = rt.compile_file(&path, "feature_rbf").unwrap();
+        let mut rng = crate::util::Rng::new(0);
+        let x = Mat::randn(8, 16, &mut rng);
+        let omega = Mat::randn(16, 256, &mut rng);
+        let z = exe
+            .run_mat(&[Input::from_mat(&x), Input::from_mat(&omega)], 8, 512)
+            .unwrap();
+        // must match the rust-native RBF feature map
+        let want = crate::features::feature_map(crate::kernels::Kernel::Rbf, &x, &omega);
+        let rel = crate::util::stats::rel_fro_error(&z.data, &want.data);
+        assert!(rel < 1e-4, "xla vs native rel err {rel}");
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let err = match rt.compile_file(Path::new("/nonexistent/x.hlo.txt"), "x") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("artifact file missing"));
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! executes them from the request path. Python is never invoked here.
+
+pub mod artifact;
+pub mod client;
+pub mod weights;
+
+pub use artifact::{ArtifactSpec, Registry};
+pub use client::{Executable, Input, XlaRuntime};
+pub use weights::ModelBundle;

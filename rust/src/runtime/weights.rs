@@ -1,0 +1,168 @@
+//! Trained-model bundle: weights npz + test set npz + the input-marshalling
+//! logic that feeds Performer artifacts (tokens, params in sorted name
+//! order, Ω, seed — the exact flattening order `aot.py` lowered with).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::artifact::ArtifactSpec;
+use super::client::Input;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::npy::{read_npz, NpyArray};
+
+/// Loaded model weights + held-out evaluation data.
+pub struct ModelBundle {
+    /// parameter name -> array
+    pub params: BTreeMap<String, NpyArray>,
+    /// FAVOR+ mapping matrix exported at training time (d_head x m)
+    pub omega: Mat,
+    /// held-out tokens (n x seq_len)
+    pub test_tokens: Vec<i32>,
+    pub test_labels: Vec<usize>,
+    pub n_test: usize,
+    pub seq_len: usize,
+}
+
+impl ModelBundle {
+    /// Load `weights_<task>.npz` + `testset_<task>.npz` from `dir`.
+    pub fn load(dir: &Path, weights_file: &str, testset_file: &str) -> Result<ModelBundle> {
+        let mut params = read_npz(&dir.join(weights_file))?;
+        let omega_arr = params
+            .remove("__omega__")
+            .ok_or_else(|| Error::Artifact("weights npz missing __omega__".into()))?;
+        let omega = to_mat(&omega_arr)?;
+
+        let test = read_npz(&dir.join(testset_file))?;
+        let tokens_arr = test
+            .get("tokens")
+            .ok_or_else(|| Error::Artifact("testset npz missing tokens".into()))?;
+        let labels_arr = test
+            .get("labels")
+            .ok_or_else(|| Error::Artifact("testset npz missing labels".into()))?;
+        let (n_test, seq_len) = match tokens_arr.shape.as_slice() {
+            [n, l] => (*n, *l),
+            s => return Err(Error::Shape(format!("tokens shape {s:?}"))),
+        };
+        let test_tokens: Vec<i32> = tokens_arr
+            .as_i64_vec()?
+            .into_iter()
+            .map(|v| v as i32)
+            .collect();
+        let test_labels: Vec<usize> = labels_arr
+            .as_i64_vec()?
+            .into_iter()
+            .map(|v| v as usize)
+            .collect();
+        Ok(ModelBundle { params, omega, test_tokens, test_labels, n_test, seq_len })
+    }
+
+    /// Rows [i0, i1) of the test set as a token batch.
+    pub fn token_batch(&self, i0: usize, i1: usize) -> Vec<i32> {
+        self.test_tokens[i0 * self.seq_len..i1 * self.seq_len].to_vec()
+    }
+
+    /// Marshal inputs for a performer artifact: (tokens, params sorted by
+    /// name, omega, seed). `omega_override` substitutes a (possibly
+    /// chip-programmed noisy) mapping matrix; `param_override` substitutes
+    /// individual parameter tensors (full on-chip deployment).
+    pub fn performer_inputs(
+        &self,
+        spec: &ArtifactSpec,
+        tokens: &[i32],
+        seed: i32,
+        omega_override: Option<&Mat>,
+        param_override: Option<&BTreeMap<String, Mat>>,
+    ) -> Result<Vec<Input>> {
+        let batch = spec.batch();
+        let expected = batch * self.seq_len;
+        if tokens.len() != expected {
+            return Err(Error::Shape(format!(
+                "{}: got {} tokens, expected {batch}x{}",
+                spec.name,
+                tokens.len(),
+                self.seq_len
+            )));
+        }
+        let names: Vec<String> = spec
+            .meta
+            .req("param_names")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("param_names not an array".into()))?
+            .iter()
+            .filter_map(|v| v.as_str().map(|s| s.to_string()))
+            .collect();
+
+        let mut inputs = Vec::with_capacity(names.len() + 3);
+        inputs.push(Input::I32(tokens.to_vec(), vec![batch, self.seq_len]));
+        for name in &names {
+            if let Some(over) = param_override.and_then(|m| m.get(name)) {
+                let arr = self.params.get(name).ok_or_else(|| {
+                    Error::Artifact(format!("weights npz missing param '{name}'"))
+                })?;
+                inputs.push(Input::F32(over.data.clone(), arr.shape.clone()));
+            } else {
+                let arr = self.params.get(name).ok_or_else(|| {
+                    Error::Artifact(format!("weights npz missing param '{name}'"))
+                })?;
+                inputs.push(Input::F32(arr.as_f32()?.to_vec(), arr.shape.clone()));
+            }
+        }
+        let om = omega_override.unwrap_or(&self.omega);
+        inputs.push(Input::F32(om.data.clone(), vec![om.rows, om.cols]));
+        inputs.push(Input::ScalarI32(seed));
+        Ok(inputs)
+    }
+
+    /// Parameter tensor as a 2-D matrix (errors on other ranks).
+    pub fn param_mat(&self, name: &str) -> Result<Mat> {
+        let arr = self
+            .params
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("missing param '{name}'")))?;
+        to_mat(arr)
+    }
+
+    /// Names of all 2-D parameters (the MVM weights that go on-chip in
+    /// the full-deployment mode).
+    pub fn matrix_param_names(&self) -> Vec<String> {
+        self.params
+            .iter()
+            .filter(|(_, a)| a.shape.len() == 2)
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+}
+
+fn to_mat(arr: &NpyArray) -> Result<Mat> {
+    match arr.shape.as_slice() {
+        [r, c] => Ok(Mat::from_vec(*r, *c, arr.as_f32()?.to_vec())),
+        s => Err(Error::Shape(format!("expected 2-d array, got {s:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_real_bundle() {
+        let dir = artifacts_dir();
+        if !dir.join("weights_pattern.npz").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let b = ModelBundle::load(&dir, "weights_pattern.npz", "testset_pattern.npz").unwrap();
+        assert!(b.params.len() > 20);
+        assert!(b.params.contains_key("embed.tok"));
+        assert_eq!(b.omega.rows, 32); // d_head
+        assert_eq!(b.test_tokens.len(), b.n_test * b.seq_len);
+        assert!(b.test_labels.iter().all(|&l| l < 2));
+        assert!(!b.matrix_param_names().is_empty());
+    }
+}

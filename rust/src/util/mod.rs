@@ -1,0 +1,16 @@
+//! Small shared substrates: deterministic PRNG, statistics, timing,
+//! lightweight property-testing, and a scoped thread helper.
+//!
+//! The build environment resolves no external `rand`/`criterion`/`proptest`
+//! crates (see DESIGN.md §Toolchain substitutions), so these are built from
+//! scratch and unit-tested here.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

@@ -1,0 +1,133 @@
+//! Lightweight property-testing driver (offline substitute for proptest;
+//! see DESIGN.md §Toolchain substitutions).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on the
+//! first failure it re-runs the generator to confirm determinism and panics
+//! with the failing case's seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use imka::util::prop::{check, Gen};
+//! check("sum is commutative", 100, |g| {
+//!     let a = g.int(0, 1000) as i64;
+//!     let b = g.int(0, 1000) as i64;
+//!     a + b == b + a
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// seed of this case, reported on failure
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// One of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    /// Vector of standard normals of length n.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_gaussian(&mut v);
+        v
+    }
+
+    /// Vector of uniforms in [lo, hi).
+    pub fn vec_in(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Access the underlying rng (e.g. to seed library objects).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` random inputs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Gen) -> bool>(name: &str, cases: u64, mut prop: F) {
+    // Deterministic base seed derived from the property name so suites are
+    // reproducible run-to-run, plus an env override to replay one case.
+    let base = fnv1a(name.as_bytes());
+    if let Ok(seed) = std::env::var("IMKA_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("IMKA_PROP_SEED must be u64");
+        let mut g = Gen::new(seed);
+        assert!(prop(&mut g), "property '{name}' failed (replay seed {seed})");
+        return;
+    }
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if !prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with IMKA_PROP_SEED={seed})"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 64, |g| {
+            let a = g.int(0, 100) as i64;
+            let b = g.int(0, 100) as i64;
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_reports_seed() {
+        check("always-false", 4, |_| false);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.int(3, 7);
+            assert!((3..=7).contains(&v));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let xs = [10, 20, 30];
+        for _ in 0..100 {
+            assert!(xs.contains(g.choose(&xs)));
+        }
+    }
+}

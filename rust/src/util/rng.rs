@@ -1,0 +1,310 @@
+//! Deterministic PRNG: xoshiro256++ seeded via SplitMix64, with Gaussian
+//! (Box–Muller), truncated Gaussian (the paper truncates Ω at 3σ to avoid
+//! outliers mapping to high conductance states), and a few distribution
+//! helpers used by the chip simulator.
+
+/// xoshiro256++ — fast, high-quality, reproducible across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box–Muller variate
+    spare: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed deterministically; any u64 is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent stream (used to hand one RNG per worker/tile).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // take the top 53 bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our purposes (n << 2^64)
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = std::f64::consts::TAU * u2;
+            self.spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    #[inline]
+    pub fn gaussian_f32(&mut self) -> f32 {
+        self.gaussian() as f32
+    }
+
+    /// Gaussian truncated at ±`trunc` standard deviations (rejection).
+    pub fn truncated_gaussian(&mut self, trunc: f64) -> f64 {
+        loop {
+            let g = self.gaussian();
+            if g.abs() <= trunc {
+                return g;
+            }
+        }
+    }
+
+    /// Fill a slice with standard normals. Pairwise Box–Muller in f32
+    /// with `sin_cos`, ~2.5x faster than the scalar path (the chip
+    /// simulator's per-read noise generation is a hot loop).
+    pub fn fill_gaussian(&mut self, out: &mut [f32]) {
+        let mut i = 0;
+        let n = out.len();
+        while i + 2 <= n {
+            let (a, b) = self.gaussian_pair_f32();
+            out[i] = a;
+            out[i + 1] = b;
+            i += 2;
+        }
+        if i < n {
+            out[i] = self.gaussian_f32();
+        }
+    }
+
+    /// One Box–Muller draw producing two independent normals (f32 path).
+    #[inline]
+    pub fn gaussian_pair_f32(&mut self) -> (f32, f32) {
+        loop {
+            let u1 = self.f32();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f32();
+            let r = (-2.0f32 * u1.ln()).sqrt();
+            let (s, c) = (std::f32::consts::TAU * u2).sin_cos();
+            return (r * c, r * s);
+        }
+    }
+
+    /// Fill with ±3σ-truncated normals (paper's Ω sampling).
+    pub fn fill_truncated_gaussian(&mut self, out: &mut [f32], trunc: f64) {
+        for v in out.iter_mut() {
+            *v = self.truncated_gaussian(trunc) as f32;
+        }
+    }
+
+    /// Rademacher ±1.
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Poisson(λ) via Knuth (λ small) — used for the wrong-distribution
+    /// Ω sanity check of Supp. Fig. 19.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let (mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gaussian();
+            s1 += g;
+            s2 += g * g;
+            s3 += g * g * g;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let skew = s3 / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!(skew.abs() < 0.05, "skew {skew}");
+    }
+
+    #[test]
+    fn truncated_gaussian_bounded() {
+        let mut r = Rng::new(9);
+        for _ in 0..50_000 {
+            assert!(r.truncated_gaussian(3.0).abs() <= 3.0);
+        }
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let sum: u64 = (0..n).map(|_| r.poisson(1.0)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut base = Rng::new(1);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<usize> = (0..64).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(17);
+        let idx = r.sample_indices(100, 20);
+        assert_eq!(idx.len(), 20);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+    }
+}

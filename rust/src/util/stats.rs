@@ -1,0 +1,173 @@
+//! Summary statistics and error metrics shared by experiments, telemetry
+//! and the bench harness.
+
+/// Running summary of a sample (mean/std/min/max/percentiles).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { values: Vec::new() }
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        Summary { values: xs.to_vec() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.values.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn std(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via linear interpolation on the sorted sample; q in [0,100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = q / 100.0 * (v.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            let w = rank - lo as f64;
+            v[lo] * (1.0 - w) + v[hi] * w
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Relative Frobenius error ||a - b||_F / ||b||_F — the paper's kernel
+/// approximation-error metric.
+pub fn rel_fro_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = (*x - *y) as f64;
+        num += d * d;
+        den += (*y as f64) * (*y as f64);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Classification accuracy of predictions vs labels.
+pub fn accuracy(pred: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return f64::NAN;
+    }
+    let correct = pred.iter().zip(labels.iter()).filter(|(p, l)| p == l).count();
+    correct as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = Summary::from_slice(&[0.0, 10.0]);
+        assert!((s.p50() - 5.0).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 0.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_order_invariant() {
+        let s = Summary::from_slice(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert!((s.p50() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_fro_zero_for_identical() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert!(rel_fro_error(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn rel_fro_scales() {
+        let a = [2.0f32, 0.0];
+        let b = [1.0f32, 0.0];
+        assert!((rel_fro_error(&a, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert!((mse(&[1.0, 3.0], &[0.0, 1.0]) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_basic() {
+        assert!((accuracy(&[1, 2, 3], &[1, 0, 3]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,117 @@
+//! Scoped data-parallel helpers over std::thread (no rayon offline).
+//!
+//! `parallel_chunks` splits a mutable output slice into contiguous chunks
+//! and processes them on up to `num_threads` OS threads. Used by the
+//! blocked matmul, Gram computation and the chip emulator's batch path.
+
+/// Number of worker threads to use by default (physical parallelism with a
+/// small cap to avoid oversubscription alongside PJRT's own pool).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Process disjoint chunks of `out` in parallel. `f(chunk_index, start, chunk)`
+/// receives the chunk's offset in the original slice.
+pub fn parallel_chunks<T: Send, F>(out: &mut [T], chunk_size: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert!(chunk_size > 0);
+    let n_chunks = out.len().div_ceil(chunk_size);
+    if n_chunks <= 1 || default_threads() == 1 {
+        for (i, (start, chunk)) in chunks_with_offsets(out, chunk_size).into_iter().enumerate() {
+            f(i, start, chunk);
+        }
+        return;
+    }
+    let chunks = chunks_with_offsets(out, chunk_size);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut handles = Vec::new();
+        // Launch at most default_threads() threads; each thread strides
+        // through its share of chunks.
+        let n_threads = default_threads().min(chunks.len());
+        let mut buckets: Vec<Vec<(usize, usize, &mut [T])>> =
+            (0..n_threads).map(|_| Vec::new()).collect();
+        for (i, (start, chunk)) in chunks.into_iter().enumerate() {
+            buckets[i % n_threads].push((i, start, chunk));
+        }
+        for bucket in buckets {
+            handles.push(scope.spawn(move || {
+                for (i, start, chunk) in bucket {
+                    f(i, start, chunk);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker thread panicked");
+        }
+    });
+}
+
+fn chunks_with_offsets<T>(out: &mut [T], chunk_size: usize) -> Vec<(usize, &mut [T])> {
+    let mut res = Vec::new();
+    let mut start = 0;
+    let mut rest = out;
+    while !rest.is_empty() {
+        let take = chunk_size.min(rest.len());
+        let (head, tail) = rest.split_at_mut(take);
+        res.push((start, head));
+        start += take;
+        rest = tail;
+    }
+    res
+}
+
+/// Run `n` independent jobs in parallel, collecting results in order.
+pub fn parallel_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    parallel_chunks(&mut out, 1, |i, _, chunk| {
+        chunk[0] = Some(f(i));
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_slice() {
+        let mut v = vec![0usize; 103];
+        parallel_chunks(&mut v, 10, |_, start, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = start + k;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(50, |i| i * i);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn single_chunk_path() {
+        let mut v = vec![1u32; 5];
+        parallel_chunks(&mut v, 100, |i, start, chunk| {
+            assert_eq!((i, start), (0, 0));
+            for x in chunk.iter_mut() {
+                *x = 2;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 2));
+    }
+}

@@ -1,0 +1,64 @@
+//! Wall-clock timing helpers for telemetry and the bench harness.
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_secs() * 1e6
+    }
+}
+
+/// Benchmark loop: warm up, then time `iters` runs, returning per-iteration
+/// seconds. Used by the custom `harness = false` benches (no criterion in
+/// the offline environment — see DESIGN.md §Toolchain substitutions).
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_secs_f64());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+        assert!(t.elapsed_us() > t.elapsed_ms());
+    }
+
+    #[test]
+    fn bench_returns_iters() {
+        let times = bench(1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(times.len(), 5);
+        assert!(times.iter().all(|&t| t >= 0.0));
+    }
+}

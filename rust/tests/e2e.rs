@@ -1,0 +1,127 @@
+//! Full-stack integration: AOT artifacts + chip simulator + coordinator,
+//! exercised the way a deployment would (requires `make artifacts`).
+
+use std::path::PathBuf;
+
+use imka::config::Config;
+use imka::coordinator::{Engine, PathKind, PerfMode, RequestBody, ResponseBody};
+use imka::datasets::lra;
+use imka::kernels::Kernel;
+use imka::util::Rng;
+
+fn config() -> Option<Config> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping e2e: run `make artifacts`");
+        return None;
+    }
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = dir.to_string_lossy().to_string();
+    cfg.serve.max_wait_us = 800;
+    cfg.serve.workers = 2;
+    cfg.serve.warm = false; // lazy compile keeps the test suite fast
+    Some(cfg)
+}
+
+#[test]
+fn performer_serving_accuracy_matches_training_log() {
+    let Some(cfg) = config() else { return };
+    let engine = Engine::start(&cfg).unwrap();
+    let seq_len = engine.seq_len().unwrap();
+    let sub = engine.submitter();
+
+    // replay fresh task samples; trained model reaches ~1.0 on pattern
+    let mut rng = Rng::new(5);
+    let batch = lra::gen_pattern(&mut rng, 32, seq_len);
+    let mut correct = 0;
+    let rxs: Vec<_> = (0..32)
+        .map(|i| {
+            sub.submit(RequestBody::Performer {
+                mode: PerfMode::Fp32,
+                tokens: batch.row(i).to_vec(),
+            })
+            .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        if let ResponseBody::Class { label, .. } = resp.result.unwrap() {
+            if label == batch.labels[i] {
+                correct += 1;
+            }
+        }
+    }
+    assert!(correct >= 29, "fp32 serving accuracy {correct}/32");
+    engine.shutdown();
+}
+
+#[test]
+fn concurrent_mixed_lanes_all_complete() {
+    let Some(cfg) = config() else { return };
+    let engine = Engine::start(&cfg).unwrap();
+    let seq_len = engine.seq_len().unwrap();
+    let sub = engine.submitter();
+    let mut rng = Rng::new(6);
+    let batch = lra::gen_pattern(&mut rng, 8, seq_len);
+
+    let mut rxs = Vec::new();
+    for i in 0..24 {
+        let body = match i % 3 {
+            0 => RequestBody::Features {
+                kernel: Kernel::Rbf,
+                path: PathKind::Digital,
+                x: (0..16).map(|_| rng.gaussian_f32()).collect(),
+            },
+            1 => RequestBody::Features {
+                kernel: Kernel::ArcCos0,
+                path: PathKind::Analog,
+                x: (0..16).map(|_| rng.gaussian_f32()).collect(),
+            },
+            _ => RequestBody::Performer {
+                mode: PerfMode::Fp32,
+                tokens: batch.row(i % 8).to_vec(),
+            },
+        };
+        rxs.push(sub.submit(body).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.result.is_ok(), "{:?}", resp.result.err());
+        assert!(resp.latency_us > 0.0);
+    }
+    // telemetry saw all three lanes
+    assert!(engine.telemetry().snapshot().len() >= 3);
+    engine.shutdown();
+}
+
+#[test]
+fn analog_feature_path_statistically_sound() {
+    let Some(cfg) = config() else { return };
+    let engine = Engine::start(&cfg).unwrap();
+    let sub = engine.submitter();
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+
+    let get = |path| {
+        let resp = sub
+            .call(RequestBody::Features { kernel: Kernel::Rbf, path, x: x.clone() })
+            .unwrap();
+        match resp.result.unwrap() {
+            ResponseBody::Features(z) => z,
+            _ => panic!(),
+        }
+    };
+    let zd = get(PathKind::Digital);
+    let za = get(PathKind::Analog);
+    assert_eq!(zd.len(), 512);
+    assert_eq!(za.len(), 512);
+    // both are unit-ish RFF vectors: ||z||^2 = 1 exactly in FP-32, close
+    // to 1 on the analog path
+    let n_d: f32 = zd.iter().map(|v| v * v).sum();
+    let n_a: f32 = za.iter().map(|v| v * v).sum();
+    assert!((n_d - 1.0).abs() < 1e-3, "digital norm {n_d}");
+    assert!((n_a - 1.0).abs() < 0.2, "analog norm {n_a}");
+    let rel = imka::util::stats::rel_fro_error(&za, &zd);
+    assert!(rel > 0.0 && rel < 0.5, "analog-vs-digital rel {rel}");
+    engine.shutdown();
+}

@@ -1,0 +1,86 @@
+//! Cross-language pinning: Rust native implementations vs the jnp oracle
+//! vectors exported by `python/compile/aot.py::emit_oracle`. This is the
+//! contract that keeps L1/L2 (Python) and L3 (Rust) numerically aligned.
+
+use std::path::PathBuf;
+
+use imka::features::favor;
+use imka::features::maps::feature_map;
+use imka::kernels::Kernel;
+use imka::linalg::Mat;
+use imka::npy::{read_npz, NpyArray};
+use imka::util::stats::rel_fro_error;
+
+fn artifacts() -> Option<std::collections::BTreeMap<String, NpyArray>> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/oracle.npz");
+    if !path.exists() {
+        eprintln!("skipping oracle tests: run `make artifacts`");
+        return None;
+    }
+    Some(read_npz(&path).unwrap())
+}
+
+fn mat(arrs: &std::collections::BTreeMap<String, NpyArray>, name: &str) -> Mat {
+    let a = &arrs[name];
+    assert_eq!(a.shape.len(), 2, "{name}");
+    Mat::from_vec(a.shape[0], a.shape[1], a.as_f32().unwrap().to_vec())
+}
+
+#[test]
+fn exact_kernels_match_jnp() {
+    let Some(arrs) = artifacts() else { return };
+    let x = mat(&arrs, "x");
+    let y = mat(&arrs, "y");
+    for (kernel, key, tol) in [
+        (Kernel::Rbf, "gram_rbf", 1e-4),
+        (Kernel::ArcCos0, "gram_arccos0", 1e-3),
+        (Kernel::Softmax, "gram_softmax", 1e-3),
+    ] {
+        let got = kernel.gram(&x, &y);
+        let want = mat(&arrs, key);
+        let rel = rel_fro_error(&got.data, &want.data);
+        assert!(rel < tol, "{key}: rel {rel}");
+    }
+}
+
+#[test]
+fn feature_maps_match_jnp() {
+    let Some(arrs) = artifacts() else { return };
+    let x = mat(&arrs, "x");
+    let omega = mat(&arrs, "omega");
+    for (kernel, key) in [
+        (Kernel::Rbf, "z_rbf"),
+        (Kernel::ArcCos0, "z_arccos0"),
+        (Kernel::Softmax, "z_softmax"),
+    ] {
+        let got = feature_map(kernel, &x, &omega);
+        let want = mat(&arrs, key);
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{key}");
+        let rel = rel_fro_error(&got.data, &want.data);
+        assert!(rel < 1e-4, "{key}: rel {rel}");
+    }
+}
+
+#[test]
+fn attention_matches_jnp() {
+    let Some(arrs) = artifacts() else { return };
+    let q = mat(&arrs, "q");
+    let k = mat(&arrs, "k");
+    let v = mat(&arrs, "v");
+    let omega = mat(&arrs, "omega_attn");
+
+    let got = favor::exact_attention(&q, &k, &v);
+    let want = mat(&arrs, "attn_exact");
+    assert!(rel_fro_error(&got.data, &want.data) < 1e-4);
+
+    let got = favor::favor_attention(&q, &k, &v, &omega);
+    let want = mat(&arrs, "attn_favor");
+    assert!(
+        rel_fro_error(&got.data, &want.data) < 1e-3,
+        "favor attention drifted from the jnp reference"
+    );
+
+    let got = favor::exact_attention_matrix(&q, &k);
+    let want = mat(&arrs, "attn_matrix_exact");
+    assert!(rel_fro_error(&got.data, &want.data) < 1e-4);
+}

@@ -1,0 +1,79 @@
+//! Statistical parity: the Rust chip emulator and the Python AIMC noise
+//! model (`compile/kernels/aimc_noise.py`) implement the same mechanism
+//! with independent RNGs. These tests pin the *statistics* (error
+//! magnitudes as a function of the configured sigmas) so the layers can't
+//! silently drift apart. The Python side asserts the analogous bounds in
+//! `python/tests/test_kernels.py::test_aimc_matmul_noise_magnitude`.
+
+use imka::aimc::{noisy_project, Emulator};
+use imka::config::ChipConfig;
+use imka::linalg::{matmul, Mat};
+use imka::util::stats::rel_fro_error;
+use imka::util::Rng;
+
+fn mvm_rel_error(sigma_prog: f64, sigma_read: f64, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let w = Mat::randn(64, 128, &mut rng);
+    let x = Mat::randn(128, 64, &mut rng);
+    let want = matmul(&x, &w);
+    let cfg = ChipConfig {
+        sigma_prog,
+        sigma_read,
+        ..ChipConfig::default()
+    };
+    let y = noisy_project(&x, &w, &cfg, &mut rng);
+    rel_fro_error(&y.data, &want.data)
+}
+
+#[test]
+fn low_noise_band_matches_python_model() {
+    // python asserts: err(0.005, 0.002) < 0.05
+    let e = mvm_rel_error(0.005, 0.002, 0);
+    assert!(e < 0.05, "low-noise error {e}");
+    assert!(e > 0.0005, "quantization floor should be visible: {e}");
+}
+
+#[test]
+fn high_noise_band_matches_python_model() {
+    // python asserts: 0.01 < err(0.1, 0.05) < 1.0
+    let e = mvm_rel_error(0.1, 0.05, 1);
+    assert!(e > 0.01 && e < 1.0, "high-noise error {e}");
+}
+
+#[test]
+fn error_monotone_in_sigma() {
+    let lo = mvm_rel_error(0.005, 0.002, 2);
+    let mid = mvm_rel_error(0.022, 0.01, 2);
+    let hi = mvm_rel_error(0.1, 0.05, 2);
+    assert!(lo < mid && mid < hi, "{lo} {mid} {hi}");
+}
+
+#[test]
+fn programming_error_tracks_sigma_prog() {
+    // mirrors python's Emulator/aimc_matmul construction: rms programming
+    // error relative to max|w| should approximate sigma_prog
+    for sigma in [0.01f64, 0.022, 0.05] {
+        let cfg = ChipConfig { sigma_prog: sigma, ..ChipConfig::default() };
+        let mut rng = Rng::new(7);
+        let w = Mat::randn(128, 128, &mut rng);
+        let em = Emulator::program(&w, &cfg, &mut rng);
+        let pe = em.programming_error();
+        assert!(
+            (pe - sigma).abs() < 0.35 * sigma,
+            "sigma {sigma}: measured {pe}"
+        );
+    }
+}
+
+#[test]
+fn default_config_is_hermes_band() {
+    // the DESIGN.md calibration: a few percent end-to-end MVM error
+    let e = mvm_rel_error(
+        ChipConfig::default().sigma_prog,
+        ChipConfig::default().sigma_read,
+        3,
+    );
+    // read noise scales with max|y| (a few x the rms entry), so the
+    // relative-Frobenius band for the default config tops out near ~0.11
+    assert!(e > 0.005 && e < 0.12, "default-config MVM error {e}");
+}
