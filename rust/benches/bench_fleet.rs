@@ -1,0 +1,111 @@
+//! Bench: analog-path serving throughput vs fleet size.
+//!
+//! Replicates one RBF feature lane across `n_chips ∈ {1, 2, 4, 8}` chips
+//! and drives concurrent projections through the fleet router. With one
+//! chip every MVM serializes behind that chip's lock (the seed's
+//! behaviour); with N chips the router spreads replicas and the same
+//! workload runs concurrently. Kernel quality (Gram relative Frobenius
+//! error) is reported alongside throughput to show scaling does not cost
+//! approximation accuracy.
+//!
+//! Emits one human-readable line and one JSON row per fleet size.
+//! Run: cargo bench --bench bench_fleet
+
+use imka::config::json::{num, obj, s, Json};
+use imka::config::{ChipConfig, FleetConfig};
+use imka::coordinator::request::KernelLane;
+use imka::features::postprocess;
+use imka::features::sampler::{sample_omega, Sampler};
+use imka::fleet::{FleetPool, PlacementPolicy, RouterPolicy};
+use imka::kernels::{approx_error, gram, gram_features, Kernel};
+use imka::linalg::Mat;
+use imka::util::threads::parallel_map;
+use imka::util::{Rng, Timer};
+
+const D: usize = 64;
+const M: usize = 256;
+const BATCH: usize = 32;
+const THREADS: usize = 8;
+const REPS: usize = 25;
+
+fn build_pool(n_chips: usize) -> FleetPool {
+    let fleet = FleetConfig {
+        n_chips,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::P2c,
+        replication: n_chips, // one replica per chip
+        recal_interval_s: 0.0,
+        drift_err_budget: 0.1,
+    };
+    let mut pool = FleetPool::new(ChipConfig::default(), fleet, 1);
+    let mut rng = Rng::new(7);
+    let omega = sample_omega(Sampler::Orf, D, M, &mut rng);
+    let x_cal = Mat::randn(128, D, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+    pool
+}
+
+fn gram_err(pool: &FleetPool) -> f64 {
+    let mut rng = Rng::new(11);
+    let mut x = Mat::randn(64, D, &mut rng);
+    x.scale(0.5);
+    let u = pool.project(KernelLane::Rbf, &x).unwrap();
+    let z = postprocess(Kernel::Rbf, &u, Some(&x));
+    approx_error(&gram(Kernel::Rbf, &x), &gram_features(&z))
+}
+
+fn main() {
+    println!(
+        "== fleet analog-path throughput ({THREADS} threads x {REPS} reps, \
+         batch {BATCH}, lane {D}x{M} rbf) =="
+    );
+    let mut base = 0.0_f64;
+    for n_chips in [1usize, 2, 4, 8] {
+        let pool = build_pool(n_chips);
+        let mut rng = Rng::new(3);
+        let mut x = Mat::randn(BATCH, D, &mut rng);
+        x.scale(0.5);
+
+        // warm every replica's locks/caches
+        for _ in 0..2 * n_chips {
+            pool.project(KernelLane::Rbf, &x).unwrap();
+        }
+
+        let pool_ref = &pool;
+        let x_ref = &x;
+        let t = Timer::start();
+        parallel_map(THREADS, |_| {
+            for _ in 0..REPS {
+                pool_ref.project(KernelLane::Rbf, x_ref).unwrap();
+            }
+        });
+        let secs = t.elapsed_secs();
+        let mvms = (THREADS * REPS) as f64;
+        let mvms_per_s = mvms / secs;
+        let samples_per_s = mvms * BATCH as f64 / secs;
+        if n_chips == 1 {
+            base = mvms_per_s;
+        }
+        let speedup = mvms_per_s / base.max(1e-12);
+        let err = gram_err(&pool);
+
+        println!(
+            "n_chips {n_chips:>2}: {mvms_per_s:>8.1} MVM/s  \
+             {samples_per_s:>9.0} samples/s  speedup x{speedup:<5.2} \
+             gram rel err {err:.4}"
+        );
+        let row = obj(vec![
+            ("bench", s("fleet")),
+            ("n_chips", num(n_chips as f64)),
+            ("threads", num(THREADS as f64)),
+            ("batch", num(BATCH as f64)),
+            ("reps", num(REPS as f64)),
+            ("mvms_per_s", num(mvms_per_s)),
+            ("samples_per_s", num(samples_per_s)),
+            ("speedup_vs_1", num(speedup)),
+            ("gram_rel_err", num(err)),
+            ("ok", Json::Bool(true)),
+        ]);
+        println!("{}", row.to_string());
+    }
+}

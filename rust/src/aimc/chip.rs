@@ -106,7 +106,7 @@ impl Chip {
             while row0 < w.rows {
                 let row1 = (row0 + self.cfg.rows).min(w.rows);
                 // slice calibration inputs to this row block
-                let x_block = slice_cols(x_cal, row0, row1);
+                let x_block = x_cal.slice_cols(row0, row1);
                 let mut col0 = 0;
                 while col0 < w.cols {
                     let col1 = (col0 + self.cfg.cols).min(w.cols);
@@ -156,7 +156,7 @@ impl Chip {
         let tiles = &mut p.replicas[r];
         let mut out = Mat::zeros(x.rows, cols);
         for tile in tiles.iter_mut() {
-            let x_block = slice_cols(x, tile.row0, tile.row1);
+            let x_block = x.slice_cols(tile.row0, tile.row1);
             let y = tile.core.forward_batch(&x_block);
             // digital accumulation across row blocks
             for i in 0..out.rows {
@@ -167,6 +167,55 @@ impl Chip {
             }
         }
         Ok(out)
+    }
+
+    /// Cores currently held by a placed matrix (all replicas), if any.
+    pub fn placement_tiles(&self, name: &str) -> Option<usize> {
+        self.placements
+            .get(name)
+            .map(|p| p.replicas.iter().map(|r| r.len()).sum())
+    }
+
+    /// Remove a placed matrix and free its cores. Returns `true` if the
+    /// matrix was programmed. (Physically: the tiles' devices are RESET
+    /// and the cores returned to the allocator.)
+    pub fn unprogram(&mut self, name: &str) -> bool {
+        match self.placements.remove(name) {
+            Some(p) => {
+                let tiles: usize = p.replicas.iter().map(|r| r.len()).sum();
+                self.cores_used -= tiles;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Idempotently (re)program `w` under `name`: frees any existing
+    /// placement first, then runs the full calibrate + GDP flow on fresh
+    /// cores. This is the fleet recalibration primitive — reprogramming
+    /// writes new conductances, so the devices' drift clocks restart.
+    pub fn reprogram_matrix(
+        &mut self,
+        name: &str,
+        w: &Mat,
+        x_cal: &Mat,
+        replication: usize,
+    ) -> Result<MatrixHandle> {
+        self.unprogram(name);
+        self.program_matrix(name, w, x_cal, replication)
+    }
+
+    /// Move every programmed crossbar's drift evaluation clock to
+    /// `t_seconds` after its (re)programming and refresh effective
+    /// weights. The fleet layer calls this with the chip's age.
+    pub fn set_drift_time(&mut self, t_seconds: f64) {
+        for p in self.placements.values_mut() {
+            for tiles in &mut p.replicas {
+                for tile in tiles.iter_mut() {
+                    tile.core.xbar.set_drift_time(t_seconds);
+                }
+            }
+        }
     }
 
     /// Programming statistics of a placed matrix.
@@ -186,14 +235,6 @@ impl Chip {
     pub fn utilization(&self) -> f64 {
         self.cores_used as f64 / self.cfg.cores as f64
     }
-}
-
-fn slice_cols(x: &Mat, c0: usize, c1: usize) -> Mat {
-    let mut out = Mat::zeros(x.rows, c1 - c0);
-    for i in 0..x.rows {
-        out.row_mut(i).copy_from_slice(&x.row(i)[c0..c1]);
-    }
-    out
 }
 
 fn slice_block(w: &Mat, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
@@ -316,6 +357,49 @@ mod tests {
         assert!(c
             .matmul(&MatrixHandle("missing".into()), &x)
             .is_err());
+    }
+
+    #[test]
+    fn unprogram_frees_cores_and_allows_reprogram() {
+        let mut c = chip(ChipConfig::default());
+        let mut rng = Rng::new(8);
+        let w = Mat::randn(16, 16, &mut rng);
+        let x = Mat::randn(8, 16, &mut rng);
+        let h = c.program_matrix("w", &w, &x, 2).unwrap();
+        assert_eq!(c.cores_used(), 2);
+        assert!(c.unprogram("w"));
+        assert!(!c.unprogram("w"));
+        assert_eq!(c.cores_used(), 0);
+        assert!(c.matmul(&h, &x).is_err());
+        // reprogram_matrix is idempotent whether or not the name exists
+        let h = c.reprogram_matrix("w", &w, &x, 1).unwrap();
+        let h2 = c.reprogram_matrix("w", &w, &x, 1).unwrap();
+        assert_eq!(h, h2);
+        assert_eq!(c.cores_used(), 1);
+        assert!(c.matmul(&h2, &x).is_ok());
+    }
+
+    #[test]
+    fn drift_clock_ages_and_reprogram_restores() {
+        let mut cfg = ChipConfig::default();
+        cfg.drift_compensation = false; // age shows up as mean decay
+        cfg.drift_nu_std = 0.0;
+        cfg.drift_t_seconds = crate::aimc::pcm::DRIFT_T0; // fresh at program time
+        let mut c = chip(cfg);
+        let mut rng = Rng::new(9);
+        let w = Mat::randn(16, 16, &mut rng);
+        let x = Mat::randn(16, 16, &mut rng);
+        let h = c.program_matrix("w", &w, &x, 1).unwrap();
+        let want = crate::linalg::matmul(&x, &w);
+
+        let fresh = rel_fro_error(&c.matmul(&h, &x).unwrap().data, &want.data);
+        c.set_drift_time(1e7); // ~4 months of conductance decay
+        let aged = rel_fro_error(&c.matmul(&h, &x).unwrap().data, &want.data);
+        assert!(aged > 2.0 * fresh, "aged {aged} vs fresh {fresh}");
+
+        let h = c.reprogram_matrix("w", &w, &x, 1).unwrap();
+        let recal = rel_fro_error(&c.matmul(&h, &x).unwrap().data, &want.data);
+        assert!(recal < 0.5 * aged, "recal {recal} vs aged {aged}");
     }
 
     #[test]

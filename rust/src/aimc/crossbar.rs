@@ -69,6 +69,21 @@ impl Crossbar {
         self.refresh_effective();
     }
 
+    /// Move the drift evaluation clock of this crossbar to `t_seconds`
+    /// after programming and refresh the cached effective weights. The
+    /// fleet recalibration scheduler drives this per chip as serving time
+    /// accumulates; `t_seconds <= DRIFT_T0` evaluates freshly-programmed
+    /// conductances.
+    pub fn set_drift_time(&mut self, t_seconds: f64) {
+        self.cfg.drift_t_seconds = t_seconds;
+        self.refresh_effective();
+    }
+
+    /// Drift evaluation time this crossbar currently models, seconds.
+    pub fn drift_time(&self) -> f64 {
+        self.cfg.drift_t_seconds
+    }
+
     /// Recompute the cached effective weight matrix at the configured
     /// drift evaluation time, applying global drift compensation if on.
     pub fn refresh_effective(&mut self) {

@@ -1,12 +1,15 @@
-//! Typed configuration: chip noise model, serving parameters, experiment
-//! defaults. Loaded from a TOML file with env-var overrides
-//! (`IMKA_<SECTION>_<KEY>`), falling back to HERMES-calibrated defaults
-//! (DESIGN.md §Noise-model calibration).
+//! Typed configuration: chip noise model, fleet topology, serving
+//! parameters, experiment defaults. Loaded from a TOML (or JSON) file
+//! with env-var overrides (`IMKA_<SECTION>_<KEY>`), falling back to
+//! HERMES-calibrated defaults (DESIGN.md §Noise-model calibration).
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
-use super::toml::TomlDoc;
-use crate::error::Result;
+use super::json::Json;
+use super::toml::{TomlDoc, TomlValue};
+use crate::error::{Error, Result};
+use crate::fleet::{PlacementPolicy, RouterPolicy};
 
 /// AIMC chip simulator configuration (HERMES-class defaults).
 #[derive(Clone, Debug, PartialEq)]
@@ -100,6 +103,63 @@ impl ChipConfig {
     }
 }
 
+/// Fleet topology and recalibration policy (`[fleet]` section).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// number of emulated chips in the pool
+    pub n_chips: usize,
+    /// how lanes are spread over chips (`packed` | `sharded`)
+    pub placement: PlacementPolicy,
+    /// replica selection (`round_robin` | `least_loaded` | `p2c`)
+    pub router: RouterPolicy,
+    /// chip-level replicas per lane shard (distinct chips)
+    pub replication: usize,
+    /// seconds between recalibration scheduler passes; 0 disables the
+    /// background thread (recal can still be driven explicitly)
+    pub recal_interval_s: f64,
+    /// estimated relative drift error that triggers reprogramming a chip
+    pub drift_err_budget: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_chips: 1,
+            placement: PlacementPolicy::Packed,
+            router: RouterPolicy::P2c,
+            replication: 1,
+            recal_interval_s: 0.0,
+            drift_err_budget: 0.1,
+        }
+    }
+}
+
+impl FleetConfig {
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = FleetConfig::default();
+        let placement = match doc.get("fleet.placement").and_then(|v| v.as_str()) {
+            None => d.placement,
+            Some(s) => PlacementPolicy::parse(s).ok_or_else(|| {
+                Error::Config(format!("fleet.placement: unknown policy '{s}'"))
+            })?,
+        };
+        let router = match doc.get("fleet.router").and_then(|v| v.as_str()) {
+            None => d.router,
+            Some(s) => RouterPolicy::parse(s).ok_or_else(|| {
+                Error::Config(format!("fleet.router: unknown policy '{s}'"))
+            })?,
+        };
+        Ok(FleetConfig {
+            n_chips: doc.usize_or("fleet.n_chips", d.n_chips).max(1),
+            placement,
+            router,
+            replication: doc.usize_or("fleet.replication", d.replication).max(1),
+            recal_interval_s: doc.f64_or("fleet.recal_interval_s", d.recal_interval_s),
+            drift_err_budget: doc.f64_or("fleet.drift_err_budget", d.drift_err_budget),
+        })
+    }
+}
+
 /// Coordinator / serving configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -152,6 +212,7 @@ impl ServeConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct Config {
     pub chip: ChipConfig,
+    pub fleet: FleetConfig,
     pub serve: ServeConfig,
     /// artifacts directory (manifest.json, *.hlo.txt, weights)
     pub artifacts_dir: String,
@@ -161,27 +222,78 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             chip: ChipConfig::default(),
+            fleet: FleetConfig::default(),
             serve: ServeConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
 }
 
+/// Flatten a parsed JSON config into the dotted-key map the TOML loader
+/// produces, so both formats share one typed-config path. Numbers with no
+/// fractional part become integers (usize-typed keys reject floats).
+fn flatten_json(prefix: &str, j: &Json, out: &mut BTreeMap<String, TomlValue>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let key = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten_json(&key, v, out);
+            }
+        }
+        Json::Num(n) => {
+            let v = if n.fract() == 0.0 && n.abs() < i64::MAX as f64 {
+                TomlValue::Int(*n as i64)
+            } else {
+                TomlValue::Float(*n)
+            };
+            out.insert(prefix.to_string(), v);
+        }
+        Json::Str(s) => {
+            out.insert(prefix.to_string(), TomlValue::Str(s.clone()));
+        }
+        Json::Bool(b) => {
+            out.insert(prefix.to_string(), TomlValue::Bool(*b));
+        }
+        Json::Null | Json::Arr(_) => {}
+    }
+}
+
 impl Config {
-    pub fn from_toml_str(src: &str) -> Result<Config> {
-        let doc = TomlDoc::parse(src)?;
+    fn from_doc(doc: &TomlDoc) -> Result<Config> {
         let mut cfg = Config {
-            chip: ChipConfig::from_doc(&doc),
-            serve: ServeConfig::from_doc(&doc),
+            chip: ChipConfig::from_doc(doc),
+            fleet: FleetConfig::from_doc(doc)?,
+            serve: ServeConfig::from_doc(doc),
             artifacts_dir: doc.str_or("paths.artifacts", "artifacts").to_string(),
         };
         cfg.apply_env();
         Ok(cfg)
     }
 
+    pub fn from_toml_str(src: &str) -> Result<Config> {
+        Self::from_doc(&TomlDoc::parse(src)?)
+    }
+
+    /// Same schema as the TOML form, as a JSON document:
+    /// `{"chip": {...}, "fleet": {...}, "serve": {...}, "paths": {...}}`.
+    pub fn from_json_str(src: &str) -> Result<Config> {
+        let j = Json::parse(src)?;
+        let mut entries = BTreeMap::new();
+        flatten_json("", &j, &mut entries);
+        Self::from_doc(&TomlDoc { entries })
+    }
+
     pub fn load(path: &Path) -> Result<Config> {
         let src = std::fs::read_to_string(path)?;
-        Self::from_toml_str(&src)
+        if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            Self::from_json_str(&src)
+        } else {
+            Self::from_toml_str(&src)
+        }
     }
 
     /// Load from path if it exists, else defaults (+env overrides).
@@ -211,6 +323,21 @@ impl Config {
         if let Ok(v) = std::env::var("IMKA_SERVE_WORKERS") {
             if let Ok(n) = v.parse() {
                 self.serve.workers = n;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_FLEET_N_CHIPS") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.fleet.n_chips = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_FLEET_ROUTER") {
+            if let Some(r) = RouterPolicy::parse(&v) {
+                self.fleet.router = r;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_FLEET_RECAL_INTERVAL_S") {
+            if let Ok(f) = v.parse() {
+                self.fleet.recal_interval_s = f;
             }
         }
         if let Ok(v) = std::env::var("IMKA_ARTIFACTS_DIR") {
@@ -248,6 +375,58 @@ mod tests {
     #[test]
     fn default_config_points_at_artifacts() {
         assert_eq!(Config::default().artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn fleet_defaults_are_single_chip() {
+        let f = FleetConfig::default();
+        assert_eq!(f.n_chips, 1);
+        assert_eq!(f.placement, PlacementPolicy::Packed);
+        assert_eq!(f.router, RouterPolicy::P2c);
+        assert_eq!(f.replication, 1);
+        assert_eq!(f.recal_interval_s, 0.0);
+    }
+
+    #[test]
+    fn fleet_section_parses_from_toml() {
+        let cfg = Config::from_toml_str(
+            "[fleet]\nn_chips = 4\nplacement = \"sharded\"\nrouter = \"least_loaded\"\n\
+             replication = 2\nrecal_interval_s = 30.0\ndrift_err_budget = 0.05\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fleet.n_chips, 4);
+        assert_eq!(cfg.fleet.placement, PlacementPolicy::Sharded);
+        assert_eq!(cfg.fleet.router, RouterPolicy::LeastLoaded);
+        assert_eq!(cfg.fleet.replication, 2);
+        assert!((cfg.fleet.recal_interval_s - 30.0).abs() < 1e-12);
+        assert!((cfg.fleet.drift_err_budget - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_fleet_policy_is_config_error() {
+        let err = Config::from_toml_str("[fleet]\nrouter = \"wat\"\n").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        let err = Config::from_toml_str("[fleet]\nplacement = \"wat\"\n").unwrap_err();
+        assert!(err.to_string().contains("placement"));
+    }
+
+    #[test]
+    fn json_config_matches_toml() {
+        let toml = Config::from_toml_str(
+            "[chip]\nsigma_prog = 0.03\n[fleet]\nn_chips = 2\nrouter = \"rr\"\n\
+             [serve]\nmax_batch = 8\n[paths]\nartifacts = \"art\"\n",
+        )
+        .unwrap();
+        let json = Config::from_json_str(
+            r#"{"chip":{"sigma_prog":0.03},"fleet":{"n_chips":2,"router":"rr"},
+                "serve":{"max_batch":8},"paths":{"artifacts":"art"}}"#,
+        )
+        .unwrap();
+        assert_eq!(toml, json);
+        assert_eq!(json.fleet.n_chips, 2);
+        assert_eq!(json.fleet.router, RouterPolicy::RoundRobin);
+        assert_eq!(json.serve.max_batch, 8);
+        assert_eq!(json.artifacts_dir, "art");
     }
 
     #[test]

@@ -6,18 +6,19 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::batcher::{run_batcher, Batch};
 use super::request::{
     KernelLane, Lane, ModeLane, PathLane, PerfMode, Request, RequestBody, Response, ResponseBody,
 };
-use super::telemetry::Telemetry;
-use super::tilepool::{lane_omega, TilePool};
+use super::telemetry::{ChipSnapshot, LaneSnapshot, Telemetry};
+use super::tilepool::lane_omega;
 use crate::aimc::Emulator;
 use crate::config::Config;
 use crate::energy::{latency_energy, mapping_ops, Device};
 use crate::error::{Error, Result};
+use crate::fleet::{FleetPool, RecalScheduler};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::runtime::{Input, ModelBundle, Registry};
@@ -34,7 +35,7 @@ pub struct LaneGeometry {
 struct Shared {
     registry: Registry,
     bundle: Option<ModelBundle>,
-    pool: TilePool,
+    pool: FleetPool,
     geometries: BTreeMap<KernelLane, LaneGeometry>,
     /// emulator-programmed noisy Ω for the performer hw paths
     noisy_omega: Option<Mat>,
@@ -107,8 +108,9 @@ impl Engine {
             }
         };
 
-        // program one Ω per feature lane present in the manifest
-        let mut pool = TilePool::new(cfg.chip.clone(), 0xC41B);
+        // program one Ω per feature lane present in the manifest, placed
+        // across the configured fleet of chips
+        let mut pool = FleetPool::new(cfg.chip.clone(), cfg.fleet.clone(), 0xC41B);
         let mut geometries = BTreeMap::new();
         let mut rng = Rng::new(0xCA11);
         for spec in registry.of_kind("feature_map") {
@@ -191,6 +193,37 @@ impl Engine {
             }));
         }
 
+        // background drift-aware recalibration: advance the fleet clock in
+        // wall time and reprogram chips whose estimated drift error has
+        // crossed the budget. One chip is rewritten at a time, so replicas
+        // keep serving.
+        if cfg.fleet.recal_interval_s > 0.0 {
+            let shared = shared.clone();
+            let stop_r = stop.clone();
+            let interval = cfg.fleet.recal_interval_s;
+            let scheduler = RecalScheduler::new(cfg.fleet.drift_err_budget);
+            threads.push(std::thread::spawn(move || {
+                let mut last = Instant::now();
+                while !stop_r.load(Ordering::Relaxed) {
+                    // short sleeps keep shutdown latency bounded
+                    std::thread::sleep(Duration::from_millis(50));
+                    let dt = last.elapsed().as_secs_f64();
+                    if dt < interval {
+                        continue;
+                    }
+                    last = Instant::now();
+                    shared.pool.advance_clock(dt);
+                    match scheduler.tick(&shared.pool) {
+                        Ok(chips) if !chips.is_empty() => {
+                            eprintln!("recalibrated drifted chips: {chips:?}");
+                        }
+                        Ok(_) => {}
+                        Err(e) => eprintln!("recalibration tick failed: {e}"),
+                    }
+                }
+            }));
+        }
+
         let engine = Engine { shared, ingress: ingress_tx, stop, threads };
         if cfg.serve.warm {
             engine.warm();
@@ -239,8 +272,22 @@ impl Engine {
         &self.shared.telemetry
     }
 
+    /// Cloneable, thread-safe view over serving + fleet statistics (the
+    /// TCP server hands one to every connection for `stats` requests).
+    pub fn stats_handle(&self) -> StatsHandle {
+        StatsHandle { shared: self.shared.clone() }
+    }
+
     pub fn cores_used(&self) -> usize {
         self.shared.pool.cores_used()
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.shared.pool.n_chips()
+    }
+
+    pub fn fleet_utilization(&self) -> f64 {
+        self.shared.pool.utilization()
     }
 
     pub fn has_model(&self) -> bool {
@@ -263,6 +310,38 @@ impl Engine {
         for t in self.threads {
             let _ = t.join();
         }
+    }
+}
+
+/// Read-only statistics view shared with server connection handlers.
+#[derive(Clone)]
+pub struct StatsHandle {
+    shared: Arc<Shared>,
+}
+
+impl StatsHandle {
+    pub fn lanes(&self) -> Vec<LaneSnapshot> {
+        self.shared.telemetry.snapshot()
+    }
+
+    pub fn chips(&self) -> Vec<ChipSnapshot> {
+        self.shared.pool.chip_snapshots()
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.shared.pool.n_chips()
+    }
+
+    pub fn cores_used(&self) -> usize {
+        self.shared.pool.cores_used()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.shared.pool.utilization()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.shared.telemetry.total_requests()
     }
 }
 

@@ -1,17 +1,30 @@
 //! L3 serving coordinator — the system contribution: an inference server
-//! that routes kernel-approximation workloads between the simulated AIMC
-//! chip (analog path) and AOT-compiled XLA artifacts (digital path), with
-//! dynamic batching, a tile pool, telemetry, and a TCP line protocol.
+//! that routes kernel-approximation workloads between a fleet of
+//! simulated AIMC chips (analog path) and AOT-compiled XLA artifacts
+//! (digital path), with dynamic batching, sharded lane placement, replica
+//! routing, drift-aware recalibration, telemetry, and a TCP line
+//! protocol.
 //!
 //! Data flow:
 //!
 //! ```text
 //! clients -> Submitter -> ingress queue -> batcher (per-lane, max_batch /
-//!   max_wait) -> worker pool -> { TilePool (chip MVM) + postproc artifact
-//!                               | fused digital artifact
+//!   max_wait) -> worker pool -> { FleetPool: router picks a replica per
+//!                                 Ω shard -> per-chip MVM queues -> concat
+//!                                 + postproc artifact        (analog)
+//!                               | fused digital artifact     (digital)
 //!                               | performer artifact (+ noisy weights) }
 //!          -> replies (+ latency/energy telemetry)
+//!
+//! background: recal thread -> fleet clock -> drift estimate per chip
+//!          -> reprogram chips past the drift budget (one at a time)
+//! stats   : TCP `{"type":"stats"}` -> per-lane latency percentiles +
+//!           per-chip utilization / queue depth / recal counters
 //! ```
+//!
+//! The single-chip [`TilePool`] remains as the minimal embedding of the
+//! chip (examples, experiments); the serving engine itself runs on
+//! [`crate::fleet::FleetPool`].
 
 pub mod batcher;
 pub mod engine;
@@ -20,8 +33,8 @@ pub mod server;
 pub mod telemetry;
 pub mod tilepool;
 
-pub use engine::{Engine, Submitter};
+pub use engine::{Engine, StatsHandle, Submitter};
 pub use request::{PathKind, PerfMode, Request, RequestBody, Response, ResponseBody};
 pub use server::{Client, Server};
-pub use telemetry::Telemetry;
+pub use telemetry::{ChipSnapshot, LaneSnapshot, Telemetry};
 pub use tilepool::TilePool;

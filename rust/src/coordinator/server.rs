@@ -3,7 +3,7 @@
 //! Request lines:
 //!   {"type":"features","kernel":"rbf","path":"analog","x":[...]}
 //!   {"type":"performer","mode":"hw_attn","tokens":[...]}
-//!   {"type":"stats"}
+//!   {"type":"stats"}   -> per-lane latency/energy + per-chip fleet stats
 //!   {"type":"ping"}
 //! Responses: {"ok":true, ...} | {"ok":false,"error":"..."}
 
@@ -12,8 +12,8 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use super::engine::{Engine, Submitter};
-use super::request::{PathKind, PerfMode, RequestBody, ResponseBody};
+use super::engine::{Engine, StatsHandle, Submitter};
+use super::request::{KernelLane, Lane, PathKind, PathLane, PerfMode, RequestBody, ResponseBody};
 use crate::config::json::{arr, num, obj, s, Json};
 use crate::error::{Error, Result};
 use crate::kernels::Kernel;
@@ -36,15 +36,17 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let submitter = engine.submitter();
+        let stats = engine.stats_handle();
         let accept_thread = std::thread::spawn(move || {
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let sub = submitter.clone();
+                        let stats_c = stats.clone();
                         let stop_c = stop2.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, sub, stop_c);
+                            let _ = handle_conn(stream, sub, stats_c, stop_c);
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -85,6 +87,7 @@ impl Server {
 fn handle_conn(
     stream: TcpStream,
     sub: Submitter,
+    stats: StatsHandle,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
@@ -105,7 +108,7 @@ fn handle_conn(
                 if line.trim().is_empty() {
                     continue;
                 }
-                let reply = handle_line(&line, &sub);
+                let reply = handle_line(&line, &sub, &stats);
                 writer.write_all(reply.to_string().as_bytes())?;
                 writer.write_all(b"\n")?;
             }
@@ -121,18 +124,72 @@ fn handle_conn(
 }
 
 /// Parse one request line, dispatch, serialize the reply.
-pub fn handle_line(line: &str, sub: &Submitter) -> Json {
-    match parse_and_dispatch(line, sub) {
+pub fn handle_line(line: &str, sub: &Submitter, stats: &StatsHandle) -> Json {
+    match parse_and_dispatch(line, sub, stats) {
         Ok(j) => j,
         Err(e) => obj(vec![("ok", Json::Bool(false)), ("error", s(&e.to_string()))]),
     }
 }
 
-fn parse_and_dispatch(line: &str, sub: &Submitter) -> Result<Json> {
+/// Human/debug label for a batching lane.
+fn lane_label(lane: Lane) -> String {
+    let kernel = |k: KernelLane| k.kernel().as_str();
+    match lane {
+        Lane::Feature(k, PathLane::Digital) => format!("feature_{}_digital", kernel(k)),
+        Lane::Feature(k, PathLane::Analog) => format!("feature_{}_analog", kernel(k)),
+        Lane::Performer(m) => format!("performer_{}", m.mode().as_str()),
+    }
+}
+
+/// The `stats` response: per-lane serving telemetry plus per-chip fleet
+/// utilization, queue depth and recalibration counters.
+fn stats_json(stats: &StatsHandle) -> Json {
+    let lanes = stats.lanes().into_iter().map(|l| {
+        obj(vec![
+            ("lane", s(&lane_label(l.lane))),
+            ("requests", num(l.requests as f64)),
+            ("errors", num(l.errors as f64)),
+            ("p50_us", num(l.p50_us)),
+            ("p95_us", num(l.p95_us)),
+            ("p99_us", num(l.p99_us)),
+            ("mean_batch", num(l.mean_batch)),
+            ("energy_uj", num(l.energy_uj)),
+        ])
+    });
+    let chips = stats.chips().into_iter().map(|c| {
+        obj(vec![
+            ("chip", num(c.chip as f64)),
+            ("cores_used", num(c.cores_used as f64)),
+            ("utilization", num(c.utilization)),
+            ("queue_depth", num(c.queue_depth as f64)),
+            ("served", num(c.served as f64)),
+            ("recals", num(c.recals as f64)),
+            ("age_s", num(c.age_s)),
+            ("drift_err_estimate", num(c.drift_err_estimate)),
+        ])
+    });
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("total_requests", num(stats.total_requests() as f64)),
+        (
+            "fleet",
+            obj(vec![
+                ("n_chips", num(stats.n_chips() as f64)),
+                ("cores_used", num(stats.cores_used() as f64)),
+                ("utilization", num(stats.utilization())),
+            ]),
+        ),
+        ("lanes", arr(lanes)),
+        ("chips", arr(chips)),
+    ])
+}
+
+fn parse_and_dispatch(line: &str, sub: &Submitter, stats: &StatsHandle) -> Result<Json> {
     let req = Json::parse(line)?;
     let ty = req.req_str("type")?;
     match ty {
         "ping" => Ok(obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+        "stats" => Ok(stats_json(stats)),
         "features" => {
             let kernel = Kernel::parse(req.req_str("kernel")?)
                 .ok_or_else(|| Error::Parse("bad kernel".into()))?;
@@ -268,6 +325,15 @@ mod tests {
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
         let label = resp.get("label").unwrap().as_usize().unwrap();
         assert_eq!(label, batch.labels[0]);
+
+        // stats surfaces lanes + per-chip fleet counters
+        let resp = client.call(&Json::parse(r#"{"type":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert!(resp.get("total_requests").unwrap().as_usize().unwrap() >= 2);
+        let chips = resp.get("chips").unwrap().as_arr().unwrap();
+        assert!(!chips.is_empty());
+        assert!(chips[0].get("served").unwrap().as_usize().unwrap() >= 1);
+        assert!(!resp.get("lanes").unwrap().as_arr().unwrap().is_empty());
 
         // unknown type -> clean error
         let resp = client.call(&Json::parse(r#"{"type":"wat"}"#).unwrap()).unwrap();

@@ -22,6 +22,28 @@ pub struct Telemetry {
     inner: Mutex<BTreeMap<Lane, LaneStats>>,
 }
 
+/// Per-chip fleet counters surfaced in the server's `stats` response
+/// (produced by `fleet::FleetPool::chip_snapshots`).
+#[derive(Clone, Debug)]
+pub struct ChipSnapshot {
+    /// fleet chip index
+    pub chip: usize,
+    /// crossbar cores programmed on this chip
+    pub cores_used: usize,
+    /// cores_used / cores, in [0,1]
+    pub utilization: f64,
+    /// analog MVMs queued on or executing against this chip right now
+    pub queue_depth: usize,
+    /// analog MVMs completed by this chip
+    pub served: u64,
+    /// recalibrations (full reprogram cycles) this chip has undergone
+    pub recals: u64,
+    /// seconds of fleet-clock time since the last (re)programming
+    pub age_s: f64,
+    /// analytic drift-error estimate at the current age
+    pub drift_err_estimate: f64,
+}
+
 /// Snapshot for one lane.
 #[derive(Clone, Debug)]
 pub struct LaneSnapshot {

@@ -35,6 +35,12 @@ impl TilePool {
     /// Program Ω for a feature lane. `x_cal` is a sample of (normalized)
     /// inputs used for DAC/ADC calibration; `replication` spreads copies
     /// over spare cores for throughput.
+    ///
+    /// Programming the same lane twice is a caller bug and returns a typed
+    /// [`Error::Coordinator`] *before* touching the chip (the chip-level
+    /// duplicate-name check never fires, so no cores are leaked to a
+    /// half-programmed placement). Use [`TilePool::reprogram_lane`] when
+    /// rewriting an existing lane is intended (recalibration).
     pub fn program_lane(
         &mut self,
         lane: KernelLane,
@@ -43,9 +49,60 @@ impl TilePool {
         replication: usize,
     ) -> Result<()> {
         if self.lanes.contains_key(&lane) {
-            return Err(Error::Coordinator(format!("lane {lane:?} already programmed")));
+            return Err(Error::Coordinator(format!(
+                "lane {lane:?} already programmed (use reprogram_lane to rewrite it)"
+            )));
         }
-        let name = format!("omega_{}", lane.kernel().as_str());
+        self.write_lane(lane, omega, x_cal, replication)
+    }
+
+    /// Idempotently (re)program Ω for a lane: frees any existing placement
+    /// and runs the full calibrate + GDP flow again. Reprogramming writes
+    /// fresh conductances, so the lane's drift clock restarts — this is
+    /// the primitive the drift-aware recalibration scheduler
+    /// (`fleet::recal`) relies on.
+    pub fn reprogram_lane(
+        &mut self,
+        lane: KernelLane,
+        omega: Mat,
+        x_cal: &Mat,
+        replication: usize,
+    ) -> Result<()> {
+        let name = lane_matrix_name(lane);
+        // validate the rewrite before tearing down the serving placement,
+        // so a rejected reprogram leaves the old lane intact
+        {
+            let chip = self.chip.lock().unwrap();
+            if x_cal.cols != omega.rows {
+                return Err(Error::Shape(format!(
+                    "calibration inputs are {}-d but Ω has {} rows",
+                    x_cal.cols, omega.rows
+                )));
+            }
+            let freed = chip.placement_tiles(&name).unwrap_or(0);
+            let need = chip.tiles_needed(omega.rows, omega.cols) * replication.max(1);
+            if need > chip.cores_free() + freed {
+                return Err(Error::Chip(format!(
+                    "not enough cores to reprogram lane {lane:?}: need {need}, \
+                     free {} after reclaiming the old placement",
+                    chip.cores_free() + freed
+                )));
+            }
+        }
+        if self.lanes.remove(&lane).is_some() {
+            self.chip.lock().unwrap().unprogram(&name);
+        }
+        self.write_lane(lane, omega, x_cal, replication)
+    }
+
+    fn write_lane(
+        &mut self,
+        lane: KernelLane,
+        omega: Mat,
+        x_cal: &Mat,
+        replication: usize,
+    ) -> Result<()> {
+        let name = lane_matrix_name(lane);
         let mut chip = self.chip.lock().unwrap();
         let handle = chip.program_matrix(&name, &omega, x_cal, replication)?;
         drop(chip);
@@ -86,6 +143,11 @@ impl TilePool {
     }
 }
 
+/// Chip-level matrix name of a lane's Ω placement.
+pub fn lane_matrix_name(lane: KernelLane) -> String {
+    format!("omega_{}", lane.kernel().as_str())
+}
+
 /// Deterministic Ω generator for serving lanes.
 pub fn lane_omega(lane: KernelLane, d: usize, m: usize, seed: u64) -> Mat {
     let mut rng = Rng::new(seed ^ 0x0_4E6A ^ lane as u64);
@@ -115,16 +177,72 @@ mod tests {
     }
 
     #[test]
-    fn double_program_rejected() {
+    fn double_program_rejected_with_typed_error() {
         let mut pool = TilePool::new(ChipConfig::default(), 2);
         let mut rng = Rng::new(1);
         let omega = Mat::randn(8, 8, &mut rng);
         let x = Mat::randn(8, 8, &mut rng);
         pool.program_lane(KernelLane::Softmax, omega.clone(), &x, 1)
             .unwrap();
-        assert!(pool
+        let err = pool
             .program_lane(KernelLane::Softmax, omega, &x, 1)
-            .is_err());
+            .unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err:?}");
+        assert!(err.to_string().contains("already programmed"));
+        // the rejected call must not have leaked cores
+        assert_eq!(pool.cores_used(), 1);
+    }
+
+    #[test]
+    fn reprogram_lane_is_idempotent_and_frees_cores() {
+        let mut pool = TilePool::new(ChipConfig::default(), 4);
+        let mut rng = Rng::new(5);
+        let omega = Mat::randn(16, 32, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        // works on an unprogrammed lane
+        pool.reprogram_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1)
+            .unwrap();
+        assert_eq!(pool.cores_used(), 1);
+        // and on an already-programmed lane, without accumulating cores
+        for _ in 0..3 {
+            pool.reprogram_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1)
+                .unwrap();
+            assert_eq!(pool.cores_used(), 1);
+        }
+        let x = Mat::randn(4, 16, &mut rng);
+        let u = pool.project(KernelLane::Rbf, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &omega);
+        assert!(rel_fro_error(&u.data, &want.data) < 0.12);
+        // a different Ω geometry can replace the lane entirely
+        let omega2 = Mat::randn(8, 16, &mut rng);
+        let x_cal2 = Mat::randn(16, 8, &mut rng);
+        pool.reprogram_lane(KernelLane::Rbf, omega2, &x_cal2, 1)
+            .unwrap();
+        assert_eq!(pool.mapping(KernelLane::Rbf).unwrap().d, 8);
+        assert_eq!(pool.cores_used(), 1);
+    }
+
+    #[test]
+    fn failed_reprogram_keeps_old_lane() {
+        let mut cfg = ChipConfig::default();
+        cfg.cores = 2;
+        cfg.rows = 8;
+        cfg.cols = 8;
+        let mut pool = TilePool::new(cfg, 6);
+        let mut rng = Rng::new(9);
+        let omega = Mat::randn(8, 8, &mut rng);
+        let x_cal = Mat::randn(8, 8, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        // 8x32 needs 4 tiles; only 2 exist even after reclaiming 1
+        let too_wide = Mat::randn(8, 32, &mut rng);
+        let err = pool
+            .reprogram_lane(KernelLane::Rbf, too_wide, &x_cal, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("not enough cores"), "{err:?}");
+        // old lane is intact and still serves
+        assert_eq!(pool.mapping(KernelLane::Rbf).unwrap().m, 8);
+        let x = Mat::randn(2, 8, &mut rng);
+        assert!(pool.project(KernelLane::Rbf, &x).is_ok());
     }
 
     #[test]

@@ -1,50 +1,81 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled: the offline build resolves no
+//! `thiserror`, see DESIGN.md §Toolchain substitutions).
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Unified error for the library layers.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape error: {0}")]
     Shape(String),
-
-    #[error("numerical error: {0}")]
     Numerical(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("parse error: {0}")]
     Parse(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("chip error: {0}")]
     Chip(String),
-
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
-
-    #[error("{0}")]
     Msg(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(s) => write!(f, "shape error: {s}"),
+            Error::Numerical(s) => write!(f, "numerical error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Parse(s) => write!(f, "parse error: {s}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s}"),
+            Error::Chip(s) => write!(f, "chip error: {s}"),
+            Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(s) => write!(f, "xla error: {s}"),
+            Error::Msg(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 impl Error {
     pub fn msg<S: Into<String>>(s: S) -> Self {
         Error::Msg(s.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_layer_prefixes() {
+        assert_eq!(Error::Chip("boom".into()).to_string(), "chip error: boom");
+        assert_eq!(
+            Error::Coordinator("x".into()).to_string(),
+            "coordinator error: x"
+        );
+        assert_eq!(Error::msg("plain").to_string(), "plain");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -1,0 +1,48 @@
+//! Multi-chip fleet scheduling: sharded lane placement, replica routing,
+//! and drift-aware recalibration over a pool of emulated HERMES chips.
+//!
+//! The paper demonstrates kernel approximation on *one* 64-core PCM chip;
+//! its energy/throughput story only pays off at serving scale, where a
+//! deployment runs many chips and must cope with PCM conductance drift
+//! over hours-to-months of uptime. This subsystem generalizes the
+//! single-chip `coordinator::TilePool` into that deployment shape:
+//!
+//! ```text
+//!                      FleetPool (fleet clock ⏱)
+//!                            │
+//!        ┌────────────── placement ──────────────┐
+//!        │   Ω(d×m) → column shards → replicas   │
+//!        ▼                                       ▼
+//!   chip 0 [Mutex<Chip>]  chip 1  …  chip N-1 [Mutex<Chip>]
+//!        ▲                                       ▲
+//!        └── router (rr / least-loaded / p2c) ───┘
+//!                            ▲
+//!              recal scheduler (drift budget)
+//! ```
+//!
+//! - [`placement`] — deterministic planning: which chips hold which
+//!   column shards of each lane's Ω, splitting matrices that exceed one
+//!   chip's crossbar budget, with configurable replication per lane.
+//! - [`router`] — per-request replica selection (round-robin /
+//!   least-loaded / power-of-two-choices) over per-chip work queues; each
+//!   chip serializes behind its own lock, so the fleet executes analog
+//!   MVMs concurrently (the seed's single `Mutex<Chip>` serialized the
+//!   whole process).
+//! - [`recal`] — a drift-aware recalibration scheduler: tracks per-chip
+//!   programming age on the fleet clock, estimates accumulated drift
+//!   error analytically from the PCM model, and reprograms chips past the
+//!   error budget one at a time so replicas keep serving.
+//! - [`pool`] — [`FleetPool`], the serving-facing façade wired into
+//!   `coordinator::Engine` (config section `[fleet]`, CLI flags
+//!   `--n-chips/--placement/--router/...`, and the server's `stats`
+//!   response).
+
+pub mod placement;
+pub mod pool;
+pub mod recal;
+pub mod router;
+
+pub use placement::{LanePlan, PlacementPolicy, Planner, ShardPlan};
+pub use pool::{FleetPool, LaneMapping};
+pub use recal::{age_at_budget, estimated_drift_error, RecalScheduler};
+pub use router::{Router, RouterPolicy};

@@ -1,0 +1,328 @@
+//! Sharded lane placement: decides which chips of the fleet hold which
+//! column shards of each feature lane's Ω, with configurable replication.
+//!
+//! An Ω (d × m) that exceeds one chip's crossbar budget is split along
+//! columns into shards aligned to crossbar column blocks; an analog MVM
+//! then runs each shard on its chip and concatenates the column ranges
+//! (splitting columns — rather than rows — keeps the per-shard result a
+//! disjoint slice of the output, so recombination is a copy, not a sum,
+//! and per-shard error matches the whole-matrix error).
+//!
+//! Planning is purely arithmetic (no RNG): the same lane geometry, fleet
+//! size and policy always yield the same plan, which keeps every chip of
+//! a restarted fleet bit-compatible with its predecessor's layout.
+
+use std::collections::BTreeMap;
+
+use crate::config::ChipConfig;
+use crate::coordinator::request::KernelLane;
+use crate::error::{Error, Result};
+
+/// How lanes are spread over the fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Keep each Ω whole when it fits on a single chip; split only when a
+    /// lane exceeds one chip's core budget. Minimizes cross-chip traffic
+    /// per request.
+    Packed,
+    /// Split every Ω into up to `n_chips` column shards so a single
+    /// request's MVM runs on several chips. Minimizes per-request latency
+    /// for very wide lanes.
+    Sharded,
+}
+
+impl PlacementPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Packed => "packed",
+            PlacementPolicy::Sharded => "sharded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "packed" => Some(PlacementPolicy::Packed),
+            "sharded" | "shard" => Some(PlacementPolicy::Sharded),
+            _ => None,
+        }
+    }
+}
+
+/// One column shard of a lane's Ω and the chips holding its replicas.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// first Ω column of this shard (inclusive)
+    pub col0: usize,
+    /// last Ω column of this shard (exclusive)
+    pub col1: usize,
+    /// fleet chip index of each replica (distinct chips)
+    pub chips: Vec<usize>,
+}
+
+/// Placement of one lane across the fleet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LanePlan {
+    pub d: usize,
+    pub m: usize,
+    pub shards: Vec<ShardPlan>,
+}
+
+impl LanePlan {
+    /// Replication actually achieved (minimum over shards).
+    pub fn replication(&self) -> usize {
+        self.shards.iter().map(|s| s.chips.len()).min().unwrap_or(0)
+    }
+}
+
+/// Whole-fleet placement state: plans lanes one at a time against the
+/// running per-chip core budget (the serving engine programs lanes in
+/// manifest order, which is deterministic).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Planner {
+    policy: PlacementPolicy,
+    n_chips: usize,
+    cores: usize,
+    rows: usize,
+    cols: usize,
+    /// cores already committed per chip
+    used: Vec<usize>,
+    /// plans accepted so far (for introspection / determinism checks)
+    pub lanes: BTreeMap<KernelLane, LanePlan>,
+}
+
+impl Planner {
+    pub fn new(policy: PlacementPolicy, n_chips: usize, chip: &ChipConfig) -> Planner {
+        let n_chips = n_chips.max(1);
+        Planner {
+            policy,
+            n_chips,
+            cores: chip.cores,
+            rows: chip.rows,
+            cols: chip.cols,
+            used: vec![0; n_chips],
+            lanes: BTreeMap::new(),
+        }
+    }
+
+    /// Cores committed on each chip so far.
+    pub fn used(&self) -> &[usize] {
+        &self.used
+    }
+
+    /// Plan one lane: split Ω (d × m) into column shards per the policy,
+    /// then place `replication` replicas of every shard on distinct,
+    /// least-loaded chips. `core_replication` is the *within-chip* copy
+    /// count each replica will be programmed with (it scales the core
+    /// cost). Replication is clamped to the number of distinct chips with
+    /// room; at least one replica per shard must fit or the lane is
+    /// rejected with a typed error.
+    pub fn plan_lane(
+        &mut self,
+        lane: KernelLane,
+        d: usize,
+        m: usize,
+        replication: usize,
+        core_replication: usize,
+    ) -> Result<LanePlan> {
+        if self.lanes.contains_key(&lane) {
+            return Err(Error::Coordinator(format!(
+                "lane {lane:?} already placed"
+            )));
+        }
+        if d == 0 || m == 0 {
+            return Err(Error::Shape(format!("lane {lane:?}: empty Ω ({d}x{m})")));
+        }
+        let core_replication = core_replication.max(1);
+        let replication = replication.max(1);
+        let row_blocks = d.div_ceil(self.rows);
+        let col_blocks = m.div_ceil(self.cols);
+        // column blocks one chip can hold for this lane
+        let chip_col_budget = self.cores / (row_blocks * core_replication);
+        if chip_col_budget == 0 {
+            return Err(Error::Coordinator(format!(
+                "lane {lane:?}: {row_blocks} row blocks x {core_replication} \
+                 core copies exceed one chip ({} cores)",
+                self.cores
+            )));
+        }
+        let n_shards = match self.policy {
+            PlacementPolicy::Packed => col_blocks.div_ceil(chip_col_budget),
+            PlacementPolicy::Sharded => self
+                .n_chips
+                .min(col_blocks)
+                .max(col_blocks.div_ceil(chip_col_budget)),
+        };
+
+        let mut shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            // spread column blocks near-evenly over shards
+            let b0 = s * col_blocks / n_shards;
+            let b1 = (s + 1) * col_blocks / n_shards;
+            let col0 = b0 * self.cols;
+            let col1 = (b1 * self.cols).min(m);
+            let tiles = row_blocks * (b1 - b0) * core_replication;
+            let mut chips = Vec::new();
+            for _ in 0..replication {
+                // least-loaded distinct chip with room; ties -> lowest index
+                let pick = (0..self.n_chips)
+                    .filter(|c| !chips.contains(c) && self.used[*c] + tiles <= self.cores)
+                    .min_by_key(|c| (self.used[*c], *c));
+                match pick {
+                    Some(c) => {
+                        self.used[c] += tiles;
+                        chips.push(c);
+                    }
+                    None => break, // clamp: fewer replicas than asked
+                }
+            }
+            if chips.is_empty() {
+                // roll back everything committed for this lane
+                for sh in &shards {
+                    let blocks = (sh.col1 - sh.col0).div_ceil(self.cols);
+                    for &c in &sh.chips {
+                        self.used[c] -= row_blocks * blocks * core_replication;
+                    }
+                }
+                return Err(Error::Coordinator(format!(
+                    "fleet capacity exhausted placing lane {lane:?} \
+                     (shard {s}/{n_shards} needs {tiles} cores; \
+                     per-chip usage {:?}/{})",
+                    self.used, self.cores
+                )));
+            }
+            shards.push(ShardPlan { col0, col1, chips });
+        }
+        let plan = LanePlan { d, m, shards };
+        self.lanes.insert(lane, plan.clone());
+        Ok(plan)
+    }
+
+    /// Forget a lane's placement and release its planned cores (used by
+    /// idempotent reprogramming).
+    pub fn unplan_lane(&mut self, lane: KernelLane, core_replication: usize) {
+        if let Some(plan) = self.lanes.remove(&lane) {
+            let row_blocks = plan.d.div_ceil(self.rows);
+            for sh in &plan.shards {
+                let blocks = (sh.col1 - sh.col0).div_ceil(self.cols);
+                for &c in &sh.chips {
+                    self.used[c] -= row_blocks * blocks * core_replication.max(1);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_chip() -> ChipConfig {
+        ChipConfig {
+            cores: 4,
+            rows: 16,
+            cols: 16,
+            ..ChipConfig::default()
+        }
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let chip = small_chip();
+        let build = || {
+            let mut p = Planner::new(PlacementPolicy::Sharded, 3, &chip);
+            p.plan_lane(KernelLane::Rbf, 16, 48, 2, 1).unwrap();
+            p.plan_lane(KernelLane::Softmax, 16, 16, 1, 1).unwrap();
+            p
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a, b);
+        assert_eq!(a.lanes[&KernelLane::Rbf].shards.len(), 3);
+    }
+
+    #[test]
+    fn packed_keeps_fitting_lane_whole() {
+        let mut p = Planner::new(PlacementPolicy::Packed, 4, &small_chip());
+        // 16x64 = 4 column blocks = exactly one chip
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 64, 1, 1).unwrap();
+        assert_eq!(plan.shards.len(), 1);
+        assert_eq!((plan.shards[0].col0, plan.shards[0].col1), (0, 64));
+        assert_eq!(p.used(), &[4, 0, 0, 0]);
+    }
+
+    #[test]
+    fn packed_splits_oversized_lane() {
+        let mut p = Planner::new(PlacementPolicy::Packed, 3, &small_chip());
+        // 6 column blocks > 4-core chip -> 2 shards
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 96, 1, 1).unwrap();
+        assert_eq!(plan.shards.len(), 2);
+        assert_eq!(plan.shards[0].col1, plan.shards[1].col0);
+        assert_eq!(plan.shards[1].col1, 96);
+        // shards land on different chips (first fills, second spills)
+        assert_ne!(plan.shards[0].chips, plan.shards[1].chips);
+    }
+
+    #[test]
+    fn sharded_spreads_over_fleet_with_replication() {
+        let mut p = Planner::new(PlacementPolicy::Sharded, 4, &small_chip());
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 64, 2, 1).unwrap();
+        assert_eq!(plan.shards.len(), 4);
+        assert_eq!(plan.replication(), 2);
+        for sh in &plan.shards {
+            assert_eq!(sh.chips.len(), 2);
+            // replicas are on distinct chips
+            assert_ne!(sh.chips[0], sh.chips[1]);
+        }
+        // ragged tail: last shard ends at m
+        assert_eq!(plan.shards.last().unwrap().col1, 64);
+    }
+
+    #[test]
+    fn replication_clamps_to_fleet_size() {
+        let mut p = Planner::new(PlacementPolicy::Sharded, 2, &small_chip());
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 32, 5, 1).unwrap();
+        assert_eq!(plan.replication(), 2); // only 2 distinct chips exist
+    }
+
+    #[test]
+    fn capacity_exhaustion_is_typed_and_rolls_back() {
+        let mut p = Planner::new(PlacementPolicy::Packed, 1, &small_chip());
+        p.plan_lane(KernelLane::Rbf, 16, 48, 1, 1).unwrap(); // 3 of 4 cores
+        let err = p
+            .plan_lane(KernelLane::Softmax, 16, 48, 1, 1)
+            .unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err:?}");
+        // failed plan must not leave cores committed
+        assert_eq!(p.used(), &[3]);
+        // and a fitting lane still goes through
+        p.plan_lane(KernelLane::ArcCos0, 16, 16, 1, 1).unwrap();
+        assert_eq!(p.used(), &[4]);
+    }
+
+    #[test]
+    fn unplan_releases_cores() {
+        let mut p = Planner::new(PlacementPolicy::Sharded, 2, &small_chip());
+        p.plan_lane(KernelLane::Rbf, 16, 64, 2, 1).unwrap();
+        let committed: usize = p.used().iter().sum();
+        assert!(committed > 0);
+        p.unplan_lane(KernelLane::Rbf, 1);
+        assert_eq!(p.used(), &[0, 0]);
+    }
+
+    #[test]
+    fn core_replication_scales_cost() {
+        let chip = ChipConfig { cores: 8, rows: 16, cols: 16, ..ChipConfig::default() };
+        let mut p = Planner::new(PlacementPolicy::Packed, 1, &chip);
+        p.plan_lane(KernelLane::Rbf, 16, 32, 1, 3).unwrap();
+        assert_eq!(p.used(), &[6]); // 2 col blocks x 3 core copies
+    }
+
+    #[test]
+    fn oversized_row_footprint_rejected() {
+        let chip = ChipConfig { cores: 2, rows: 8, cols: 8, ..ChipConfig::default() };
+        let mut p = Planner::new(PlacementPolicy::Packed, 4, &chip);
+        // 3 row blocks can never fit a 2-core chip, under any column split
+        let err = p.plan_lane(KernelLane::Rbf, 24, 8, 1, 1).unwrap_err();
+        assert!(err.to_string().contains("row blocks"));
+    }
+}

@@ -1,0 +1,604 @@
+//! `FleetPool` — the multi-chip generalization of the single-chip
+//! `coordinator::TilePool`.
+//!
+//! Each emulated chip sits behind its own lock with its own in-flight
+//! counter, so analog MVMs on different chips execute concurrently; the
+//! seed's `Mutex<Chip>` serialized every projection in the process. A
+//! request's projection walks the lane's column shards, asks the
+//! [`Router`] for a replica of each, and concatenates the per-shard
+//! results into the full feature projection.
+//!
+//! The pool also owns the *fleet clock*: a virtual time stream (advanced
+//! by the engine's recalibration thread in wall time, or directly by
+//! tests) from which per-chip programming age — and therefore PCM
+//! conductance drift — is derived.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::placement::{LanePlan, Planner};
+use super::recal::estimated_drift_error;
+use super::router::Router;
+use crate::aimc::pcm::DRIFT_T0;
+use crate::aimc::{Chip, MatrixHandle};
+use crate::config::{ChipConfig, FleetConfig};
+use crate::coordinator::request::KernelLane;
+use crate::coordinator::telemetry::ChipSnapshot;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// One programmed feature lane, fleet-wide.
+pub struct LaneMapping {
+    /// the FP-32 Ω (digital-path twin of the programmed weights)
+    pub omega: Mat,
+    /// calibration inputs retained so recalibration can re-run the full
+    /// calibrate + GDP flow
+    pub x_cal: Mat,
+    pub d: usize,
+    pub m: usize,
+    pub plan: LanePlan,
+    pub core_replication: usize,
+}
+
+/// One chip plus its serving/recalibration counters.
+struct ChipSlot {
+    chip: Mutex<Chip>,
+    /// mirror of `chip.cores_used()` maintained at every (un)programming
+    /// so the stats surface never has to take a chip lock (and therefore
+    /// never blocks behind an in-flight MVM or a multi-second GDP rewrite)
+    cores: AtomicUsize,
+    /// analog MVMs queued on or executing against this chip
+    inflight: AtomicUsize,
+    /// completed analog MVMs
+    served: AtomicU64,
+    /// completed recalibrations
+    recals: AtomicU64,
+    /// fleet-clock time this chip's lanes were last (re)programmed
+    programmed_at_s: Mutex<f64>,
+    /// age last written into the chip's drift model via `set_drift_time`
+    synced_age_s: Mutex<f64>,
+}
+
+/// The fleet: chips, placement plan, router, clock.
+pub struct FleetPool {
+    chip_cfg: ChipConfig,
+    fleet_cfg: FleetConfig,
+    slots: Vec<ChipSlot>,
+    planner: Planner,
+    router: Router,
+    lanes: BTreeMap<KernelLane, LaneMapping>,
+    clock_s: Mutex<f64>,
+}
+
+/// Chip-level matrix name of one shard of a lane's Ω.
+fn shard_name(lane: KernelLane, shard: usize) -> String {
+    format!("omega_{}_s{}", lane.kernel().as_str(), shard)
+}
+
+impl FleetPool {
+    /// Drift evaluation time of a chip `age` seconds after its last
+    /// (re)programming. `chip.drift_t_seconds` keeps its single-chip
+    /// meaning of a *baseline scenario age* (matching the performer hw
+    /// paths, which model the same config); the fleet clock accumulates
+    /// on top of it, and recalibration restores a chip to the baseline.
+    fn drift_eval_time(&self, age_s: f64) -> f64 {
+        self.chip_cfg.drift_t_seconds.max(DRIFT_T0) + age_s.max(0.0)
+    }
+
+    pub fn new(chip_cfg: ChipConfig, fleet_cfg: FleetConfig, seed: u64) -> FleetPool {
+        let n = fleet_cfg.n_chips.max(1);
+        let slots = (0..n)
+            .map(|i| ChipSlot {
+                chip: Mutex::new(Chip::new(
+                    chip_cfg.clone(),
+                    seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                )),
+                cores: AtomicUsize::new(0),
+                inflight: AtomicUsize::new(0),
+                served: AtomicU64::new(0),
+                recals: AtomicU64::new(0),
+                programmed_at_s: Mutex::new(0.0),
+                synced_age_s: Mutex::new(0.0),
+            })
+            .collect();
+        let planner = Planner::new(fleet_cfg.placement, n, &chip_cfg);
+        let router = Router::new(fleet_cfg.router, seed);
+        FleetPool {
+            chip_cfg,
+            fleet_cfg,
+            slots,
+            planner,
+            router,
+            lanes: BTreeMap::new(),
+            clock_s: Mutex::new(0.0),
+        }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn chip_config(&self) -> &ChipConfig {
+        &self.chip_cfg
+    }
+
+    pub fn fleet_config(&self) -> &FleetConfig {
+        &self.fleet_cfg
+    }
+
+    /// Program Ω for a feature lane across the fleet. Duplicate lanes are
+    /// a caller bug → typed [`Error::Coordinator`]; use
+    /// [`FleetPool::reprogram_lane`] to rewrite an existing lane.
+    pub fn program_lane(
+        &mut self,
+        lane: KernelLane,
+        omega: Mat,
+        x_cal: &Mat,
+        core_replication: usize,
+    ) -> Result<()> {
+        if self.lanes.contains_key(&lane) {
+            return Err(Error::Coordinator(format!(
+                "lane {lane:?} already programmed (use reprogram_lane to rewrite it)"
+            )));
+        }
+        if x_cal.cols != omega.rows {
+            return Err(Error::Shape(format!(
+                "calibration inputs are {}-d but Ω has {} rows",
+                x_cal.cols, omega.rows
+            )));
+        }
+        let plan = self.planner.plan_lane(
+            lane,
+            omega.rows,
+            omega.cols,
+            self.fleet_cfg.replication,
+            core_replication,
+        )?;
+        for (s, shard) in plan.shards.iter().enumerate() {
+            let w = omega.slice_cols(shard.col0, shard.col1);
+            for &c in &shard.chips {
+                let t = self.drift_eval_time(self.chip_age(c));
+                let mut chip = self.slots[c].chip.lock().unwrap();
+                chip.program_matrix(&shard_name(lane, s), &w, x_cal, core_replication)?;
+                chip.set_drift_time(t);
+                self.slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
+            }
+        }
+        let (d, m) = (omega.rows, omega.cols);
+        self.lanes.insert(
+            lane,
+            LaneMapping { omega, x_cal: x_cal.clone(), d, m, plan, core_replication },
+        );
+        // a chip whose entire contents were just written holds only fresh
+        // conductances — restart its drift clock. Chips also holding
+        // older lanes keep their age (conservative: the scheduler's next
+        // recalibration rewrites such chips wholesale).
+        let mapping = &self.lanes[&lane];
+        let mut chips: Vec<usize> = mapping
+            .plan
+            .shards
+            .iter()
+            .flat_map(|sh| sh.chips.iter().copied())
+            .collect();
+        chips.sort_unstable();
+        chips.dedup();
+        for c in chips {
+            let lane_shards = mapping
+                .plan
+                .shards
+                .iter()
+                .filter(|sh| sh.chips.contains(&c))
+                .count();
+            if self.chip_shard_count(c) == lane_shards {
+                self.reset_chip_clock(c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Idempotently (re)program a lane: frees any existing placement on
+    /// every chip, then programs fresh (possibly different) Ω. The new
+    /// placement is validated on a trial planner *before* the serving
+    /// placement is torn down, so a rejected rewrite (capacity, shape)
+    /// returns the error with the old lane still live.
+    pub fn reprogram_lane(
+        &mut self,
+        lane: KernelLane,
+        omega: Mat,
+        x_cal: &Mat,
+        core_replication: usize,
+    ) -> Result<()> {
+        if x_cal.cols != omega.rows {
+            return Err(Error::Shape(format!(
+                "calibration inputs are {}-d but Ω has {} rows",
+                x_cal.cols, omega.rows
+            )));
+        }
+        if let Some(old) = self.lanes.get(&lane) {
+            let mut trial = self.planner.clone();
+            trial.unplan_lane(lane, old.core_replication);
+            trial.plan_lane(
+                lane,
+                omega.rows,
+                omega.cols,
+                self.fleet_cfg.replication,
+                core_replication,
+            )?;
+        }
+        if let Some(old) = self.lanes.remove(&lane) {
+            for (s, shard) in old.plan.shards.iter().enumerate() {
+                for &c in &shard.chips {
+                    let mut chip = self.slots[c].chip.lock().unwrap();
+                    chip.unprogram(&shard_name(lane, s));
+                    self.slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
+                }
+            }
+            self.planner.unplan_lane(lane, old.core_replication);
+        }
+        self.program_lane(lane, omega, x_cal, core_replication)
+    }
+
+    pub fn mapping(&self, lane: KernelLane) -> Result<&LaneMapping> {
+        self.lanes
+            .get(&lane)
+            .ok_or_else(|| Error::Coordinator(format!("lane {lane:?} not programmed")))
+    }
+
+    /// Analog projection u = x·Ω: route every shard to a replica, run the
+    /// per-chip MVMs, concatenate the column ranges. Chips are locked one
+    /// at a time, so concurrent callers projecting through different
+    /// replicas proceed in parallel.
+    pub fn project(&self, lane: KernelLane, x: &Mat) -> Result<Mat> {
+        let mapping = self.mapping(lane)?;
+        if x.cols != mapping.d {
+            return Err(Error::Shape(format!(
+                "input is {}-d, lane {lane:?} expects {}",
+                x.cols, mapping.d
+            )));
+        }
+        let mut out = Mat::zeros(x.rows, mapping.m);
+        for (s, shard) in mapping.plan.shards.iter().enumerate() {
+            let k = self.router.pick(shard.chips.len(), |i| {
+                self.slots[shard.chips[i]].inflight.load(Ordering::Relaxed)
+            });
+            let c = shard.chips[k];
+            let slot = &self.slots[c];
+            slot.inflight.fetch_add(1, Ordering::Relaxed);
+            let res = {
+                let mut chip = slot.chip.lock().unwrap();
+                chip.matmul(&MatrixHandle(shard_name(lane, s)), x)
+            };
+            slot.inflight.fetch_sub(1, Ordering::Relaxed);
+            let y = res?;
+            slot.served.fetch_add(1, Ordering::Relaxed);
+            for i in 0..out.rows {
+                out.row_mut(i)[shard.col0..shard.col1].copy_from_slice(y.row(i));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mean GDP programming error across a lane's shards and replicas.
+    pub fn programming_rms(&self, lane: KernelLane) -> Result<f64> {
+        let mapping = self.mapping(lane)?;
+        let (mut sum, mut n) = (0.0, 0usize);
+        for (s, shard) in mapping.plan.shards.iter().enumerate() {
+            let handle = MatrixHandle(shard_name(lane, s));
+            for &c in &shard.chips {
+                let chip = self.slots[c].chip.lock().unwrap();
+                let stats = chip
+                    .program_stats(&handle)
+                    .ok_or_else(|| Error::Coordinator("no stats".into()))?;
+                sum += stats.iter().map(|st| st.rms_final).sum::<f64>();
+                n += stats.len();
+            }
+        }
+        Ok(sum / n.max(1) as f64)
+    }
+
+    /// Cores programmed across the whole fleet (lock-free: reads the
+    /// per-chip mirrors, so monitoring never waits on serving or recal).
+    pub fn cores_used(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| s.cores.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Fleet-wide utilization in [0,1].
+    pub fn utilization(&self) -> f64 {
+        self.cores_used() as f64 / (self.slots.len() * self.chip_cfg.cores).max(1) as f64
+    }
+
+    // -- fleet clock & drift ------------------------------------------------
+
+    /// Current fleet-clock time, seconds.
+    pub fn clock_s(&self) -> f64 {
+        *self.clock_s.lock().unwrap()
+    }
+
+    /// Advance the fleet clock (wall time in serving; arbitrary jumps in
+    /// tests). Drift is applied lazily by [`FleetPool::sync_drift`].
+    pub fn advance_clock(&self, dt_s: f64) {
+        *self.clock_s.lock().unwrap() += dt_s.max(0.0);
+    }
+
+    /// Seconds since chip `i`'s lanes were last (re)programmed.
+    pub fn chip_age(&self, i: usize) -> f64 {
+        (self.clock_s() - *self.slots[i].programmed_at_s.lock().unwrap()).max(0.0)
+    }
+
+    /// Restart chip `c`'s drift clock: fleet-clock "now" becomes its
+    /// programming instant and its crossbars evaluate at the baseline.
+    fn reset_chip_clock(&self, c: usize) {
+        let baseline = self.drift_eval_time(0.0);
+        self.slots[c].chip.lock().unwrap().set_drift_time(baseline);
+        *self.slots[c].programmed_at_s.lock().unwrap() = self.clock_s();
+        *self.slots[c].synced_age_s.lock().unwrap() = 0.0;
+    }
+
+    /// Push each chip's current age into its PCM drift model (refreshing
+    /// effective conductances). Refreshes only when the *modeled error*
+    /// moved appreciably since the last sync — drift grows
+    /// logarithmically, so resyncs become exponentially rarer with age
+    /// and a full fleet-wide device re-evaluation is not paid on every
+    /// scheduler pass.
+    pub fn sync_drift(&self) {
+        for (i, slot) in self.slots.iter().enumerate() {
+            let age = self.chip_age(i);
+            let synced = *slot.synced_age_s.lock().unwrap();
+            let moved = (estimated_drift_error(&self.chip_cfg, age)
+                - estimated_drift_error(&self.chip_cfg, synced))
+                .abs();
+            if moved > 1e-3 || age < synced {
+                let t = self.drift_eval_time(age);
+                slot.chip.lock().unwrap().set_drift_time(t);
+                *slot.synced_age_s.lock().unwrap() = age;
+            }
+        }
+    }
+
+    /// Number of lane shards placed on chip `i`.
+    pub fn chip_shard_count(&self, i: usize) -> usize {
+        self.lanes
+            .values()
+            .flat_map(|m| m.plan.shards.iter())
+            .filter(|sh| sh.chips.contains(&i))
+            .count()
+    }
+
+    /// Reprogram every lane shard placed on chip `i` (full calibrate +
+    /// GDP on fresh conductances) and reset its drift clock. Only chip
+    /// `i`'s lock is held, so replicas on other chips keep serving —
+    /// the recalibration scheduler walks chips one at a time for exactly
+    /// that reason. Returns the number of shards rewritten.
+    pub fn recalibrate_chip(&self, i: usize) -> Result<usize> {
+        let baseline = self.drift_eval_time(0.0);
+        let mut rewritten = 0;
+        {
+            let mut chip = self.slots[i].chip.lock().unwrap();
+            for (lane, mapping) in &self.lanes {
+                for (s, shard) in mapping.plan.shards.iter().enumerate() {
+                    if shard.chips.contains(&i) {
+                        let w = mapping.omega.slice_cols(shard.col0, shard.col1);
+                        chip.reprogram_matrix(
+                            &shard_name(*lane, s),
+                            &w,
+                            &mapping.x_cal,
+                            mapping.core_replication,
+                        )?;
+                        rewritten += 1;
+                    }
+                }
+            }
+            chip.set_drift_time(baseline);
+            self.slots[i].cores.store(chip.cores_used(), Ordering::Relaxed);
+        }
+        // an empty chip has nothing to rewrite: reset its clock so the
+        // scheduler doesn't retrigger, but don't count a recalibration
+        *self.slots[i].programmed_at_s.lock().unwrap() = self.clock_s();
+        *self.slots[i].synced_age_s.lock().unwrap() = 0.0;
+        if rewritten > 0 {
+            self.slots[i].recals.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(rewritten)
+    }
+
+    /// Per-chip serving/recalibration counters for the stats surface.
+    /// Lock-free with respect to the chip mutexes: safe to call while
+    /// chips are mid-MVM or mid-recalibration.
+    pub fn chip_snapshots(&self) -> Vec<ChipSnapshot> {
+        (0..self.slots.len())
+            .map(|i| {
+                let slot = &self.slots[i];
+                let cores_used = slot.cores.load(Ordering::Relaxed);
+                let age_s = self.chip_age(i);
+                ChipSnapshot {
+                    chip: i,
+                    cores_used,
+                    utilization: cores_used as f64 / self.chip_cfg.cores.max(1) as f64,
+                    queue_depth: slot.inflight.load(Ordering::Relaxed),
+                    served: slot.served.load(Ordering::Relaxed),
+                    recals: slot.recals.load(Ordering::Relaxed),
+                    age_s,
+                    drift_err_estimate: estimated_drift_error(&self.chip_cfg, age_s),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::placement::PlacementPolicy;
+    use crate::fleet::router::RouterPolicy;
+    use crate::util::stats::rel_fro_error;
+    use crate::util::Rng;
+
+    fn fleet_cfg(n: usize, replication: usize) -> FleetConfig {
+        FleetConfig {
+            n_chips: n,
+            placement: PlacementPolicy::Sharded,
+            router: RouterPolicy::LeastLoaded,
+            replication,
+            ..FleetConfig::default()
+        }
+    }
+
+    fn small_chip() -> ChipConfig {
+        ChipConfig { cores: 4, rows: 16, cols: 16, ..ChipConfig::default() }
+    }
+
+    #[test]
+    fn split_project_round_trips_whole_matmul() {
+        // ideal chip isolates the split/concat logic from noise: the
+        // sharded result must match the whole-matrix product to DAC/ADC
+        // quantization only
+        let chip = ChipConfig { cores: 4, rows: 16, cols: 16, ..ChipConfig::ideal() };
+        let mut pool = FleetPool::new(chip, fleet_cfg(3, 1), 1);
+        let mut rng = Rng::new(0);
+        let omega = Mat::randn(16, 48, &mut rng); // 3 column shards
+        let x_cal = Mat::randn(32, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        assert_eq!(pool.mapping(KernelLane::Rbf).unwrap().plan.shards.len(), 3);
+
+        let x = Mat::randn(8, 16, &mut rng);
+        let u = pool.project(KernelLane::Rbf, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &omega);
+        let rel = rel_fro_error(&u.data, &want.data);
+        assert!(rel < 0.03, "split-vs-whole rel {rel}");
+    }
+
+    #[test]
+    fn noisy_split_matches_single_chip_error_band() {
+        let mut pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 2);
+        let mut rng = Rng::new(1);
+        let omega = Mat::randn(16, 32, &mut rng);
+        let x_cal = Mat::randn(32, 16, &mut rng);
+        pool.program_lane(KernelLane::Softmax, omega.clone(), &x_cal, 1).unwrap();
+        let x = Mat::randn(16, 16, &mut rng);
+        let u = pool.project(KernelLane::Softmax, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &omega);
+        let rel = rel_fro_error(&u.data, &want.data);
+        assert!(rel > 0.0 && rel < 0.12, "rel {rel}");
+        assert!(pool.programming_rms(KernelLane::Softmax).unwrap() < 0.05);
+    }
+
+    #[test]
+    fn duplicate_lane_is_typed_error_and_reprogram_is_idempotent() {
+        let mut pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 3);
+        let mut rng = Rng::new(2);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        let err = pool
+            .program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1)
+            .unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err:?}");
+        let before = pool.cores_used();
+        for _ in 0..3 {
+            pool.reprogram_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+            assert_eq!(pool.cores_used(), before);
+        }
+    }
+
+    #[test]
+    fn replicas_spread_served_work_across_chips() {
+        // round-robin guarantees a deterministic split even from a single
+        // sequential caller (least-loaded would see every chip idle and
+        // keep picking the lowest index)
+        let mut cfg = fleet_cfg(2, 2);
+        cfg.router = RouterPolicy::RoundRobin;
+        let mut pool = FleetPool::new(small_chip(), cfg, 4);
+        let mut rng = Rng::new(3);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::ArcCos0, omega, &x_cal, 1).unwrap();
+        let x = Mat::randn(4, 16, &mut rng);
+        for _ in 0..10 {
+            pool.project(KernelLane::ArcCos0, &x).unwrap();
+        }
+        let snaps = pool.chip_snapshots();
+        let served: Vec<u64> = snaps.iter().map(|s| s.served).collect();
+        assert_eq!(served.iter().sum::<u64>(), 10);
+        // least-loaded over idle chips alternates rather than pinning one
+        assert!(served.iter().all(|&s| s >= 2), "{served:?}");
+        assert!(snaps.iter().all(|s| s.queue_depth == 0));
+    }
+
+    #[test]
+    fn unprogrammed_lane_and_bad_shape_error() {
+        let mut pool = FleetPool::new(small_chip(), fleet_cfg(1, 1), 5);
+        let x = Mat::zeros(1, 16);
+        assert!(pool.project(KernelLane::Rbf, &x).is_err());
+        let mut rng = Rng::new(4);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+        let bad = Mat::zeros(1, 7);
+        assert!(matches!(
+            pool.project(KernelLane::Rbf, &bad),
+            Err(Error::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn failed_reprogram_keeps_old_lane_serving() {
+        // 1 chip x 4 cores: a 16x32 lane fits (2 cores), a 16x128 rewrite
+        // needs 8 and must be rejected *without* tearing the old lane down
+        let mut pool = FleetPool::new(small_chip(), fleet_cfg(1, 1), 11);
+        let mut rng = Rng::new(8);
+        let omega = Mat::randn(16, 32, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        assert_eq!(pool.cores_used(), 2);
+
+        let too_wide = Mat::randn(16, 128, &mut rng);
+        let err = pool
+            .reprogram_lane(KernelLane::Rbf, too_wide, &x_cal, 1)
+            .unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err:?}");
+        // old placement is untouched and still serves
+        assert_eq!(pool.cores_used(), 2);
+        let x = Mat::randn(4, 16, &mut rng);
+        let u = pool.project(KernelLane::Rbf, &x).unwrap();
+        assert_eq!((u.rows, u.cols), (4, 32));
+    }
+
+    #[test]
+    fn reprogram_on_aged_fleet_restarts_chip_clocks() {
+        let mut pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 9);
+        let mut rng = Rng::new(7);
+        let omega = Mat::randn(16, 32, &mut rng); // sharded over both chips
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        pool.advance_clock(1000.0);
+        assert_eq!(pool.chip_age(0), 1000.0);
+        // fresh conductances must not inherit the stale chip age — the
+        // chips hold only this lane, so their drift clocks restart
+        pool.reprogram_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+        assert_eq!(pool.chip_age(0), 0.0);
+        assert_eq!(pool.chip_age(1), 0.0);
+    }
+
+    #[test]
+    fn clock_and_recal_counters() {
+        let mut pool = FleetPool::new(small_chip(), fleet_cfg(2, 2), 6);
+        let mut rng = Rng::new(5);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+        assert_eq!(pool.clock_s(), 0.0);
+        pool.advance_clock(100.0);
+        assert_eq!(pool.chip_age(0), 100.0);
+        let rewritten = pool.recalibrate_chip(0).unwrap();
+        assert_eq!(rewritten, 1);
+        assert_eq!(pool.chip_age(0), 0.0);
+        assert_eq!(pool.chip_age(1), 100.0);
+        let snaps = pool.chip_snapshots();
+        assert_eq!(snaps[0].recals, 1);
+        assert_eq!(snaps[1].recals, 0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Drift-aware recalibration: decide *when* an aged chip's accumulated
+//! PCM conductance drift warrants reprogramming, and do it without
+//! stalling the serve path.
+//!
+//! The PCM model (`aimc::pcm`) drifts every device as
+//! `g(t) = g(t₀)·(t/t₀)^−ν` with ν ~ N(ν̄, σ_ν). The scheduler inverts
+//! that model analytically instead of measuring: to first order in the
+//! exponent spread,
+//!
+//! - with global drift compensation on, the ν̄ component cancels and the
+//!   residual relative weight error is the device-to-device spread
+//!   `σ_ν·ln(t/t₀)`;
+//! - without compensation, the mean decay `1 − (t/t₀)^−ν̄` adds in
+//!   quadrature.
+//!
+//! When the estimate for a chip's age crosses `drift_err_budget`, every
+//! lane shard on that chip is reprogrammed (full calibrate + GDP on fresh
+//! conductances), which restarts its drift clock. Chips are walked one at
+//! a time, so with replication ≥ 2 (or ≥ 2 chips) the other replicas keep
+//! serving during a recalibration.
+
+use super::pool::FleetPool;
+use crate::aimc::pcm::DRIFT_T0;
+use crate::config::ChipConfig;
+use crate::error::Result;
+
+/// Analytic estimate of the relative weight error accrued by `age_s`
+/// seconds of conductance drift *beyond* the chip's baseline scenario
+/// age (`drift_t_seconds`, floored at t₀). Reprogramming restores a
+/// chip to the baseline, so this is exactly the error recalibration can
+/// recover — the baseline's own residual is a property of the configured
+/// scenario, not something recal can fix. 0 for a fresh chip.
+pub fn estimated_drift_error(cfg: &ChipConfig, age_s: f64) -> f64 {
+    if age_s <= 0.0 {
+        return 0.0;
+    }
+    let base = cfg.drift_t_seconds.max(DRIFT_T0);
+    let growth = ((base + age_s) / base).ln();
+    let spread = cfg.drift_nu_std * growth;
+    if cfg.drift_compensation {
+        // the global affine correction tracks the mean at any age; only
+        // the device-to-device exponent spread accumulates
+        spread
+    } else {
+        let mean_decay = 1.0 - ((base + age_s) / base).powf(-cfg.drift_nu_mean);
+        (mean_decay * mean_decay + spread * spread).sqrt()
+    }
+}
+
+/// Age at which the drift estimate first exceeds `budget` (for status
+/// surfaces: "chip 3 recalibrates in ~2.1 h"). `None` when drift can
+/// never exceed the budget (e.g. a noise-free chip).
+pub fn age_at_budget(cfg: &ChipConfig, budget: f64) -> Option<f64> {
+    // exponential search then bisection on the monotone estimate
+    let mut hi = DRIFT_T0 * 2.0;
+    for _ in 0..200 {
+        if estimated_drift_error(cfg, hi) > budget {
+            let mut lo = hi / 2.0;
+            for _ in 0..64 {
+                let mid = 0.5 * (lo + hi);
+                if estimated_drift_error(cfg, mid) > budget {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+            return Some(hi);
+        }
+        hi *= 2.0;
+    }
+    None
+}
+
+/// Background recalibration policy over a [`FleetPool`].
+pub struct RecalScheduler {
+    pub drift_err_budget: f64,
+}
+
+impl RecalScheduler {
+    pub fn new(drift_err_budget: f64) -> RecalScheduler {
+        RecalScheduler { drift_err_budget }
+    }
+
+    /// Is a chip of this age due for reprogramming?
+    pub fn due(&self, cfg: &ChipConfig, age_s: f64) -> bool {
+        estimated_drift_error(cfg, age_s) > self.drift_err_budget
+    }
+
+    /// One scheduler pass: sync every chip's drift model to its current
+    /// age, then reprogram the chips whose estimated drift error exceeds
+    /// the budget. Chips are recalibrated sequentially — at most one chip
+    /// is locked for rewriting at any moment, so the rest of the fleet
+    /// keeps serving. Returns the recalibrated chip indices.
+    pub fn tick(&self, pool: &FleetPool) -> Result<Vec<usize>> {
+        pool.sync_drift();
+        let mut recalibrated = Vec::new();
+        for i in 0..pool.n_chips() {
+            // chips holding no shards have nothing to reprogram
+            if pool.chip_shard_count(i) > 0 && self.due(pool.chip_config(), pool.chip_age(i)) {
+                pool.recalibrate_chip(i)?;
+                recalibrated.push(i);
+            }
+        }
+        Ok(recalibrated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimate_is_zero_fresh_and_monotone_in_age() {
+        let cfg = ChipConfig::default();
+        assert_eq!(estimated_drift_error(&cfg, 0.0), 0.0);
+        let e1 = estimated_drift_error(&cfg, 3600.0);
+        let e2 = estimated_drift_error(&cfg, 86_400.0);
+        let e3 = estimated_drift_error(&cfg, 1e7);
+        assert!(e1 > 0.0 && e2 > e1 && e3 > e2, "{e1} {e2} {e3}");
+    }
+
+    #[test]
+    fn older_baseline_slows_recal_cadence() {
+        // a chip already modeled at 1 h baseline accrues *additional*
+        // error slower than a fresh one — the budget measures what recal
+        // can recover, so the aged-baseline fleet recalibrates less often
+        let fresh = ChipConfig { drift_t_seconds: DRIFT_T0, ..ChipConfig::default() };
+        let aged = ChipConfig { drift_t_seconds: 3600.0, ..ChipConfig::default() };
+        let budget = 0.05;
+        let t_fresh = age_at_budget(&fresh, budget).unwrap();
+        let t_aged = age_at_budget(&aged, budget).unwrap();
+        assert!(t_aged > 10.0 * t_fresh, "fresh {t_fresh}, aged {t_aged}");
+        // and the cadence is sane: days, not minutes (no perpetual churn)
+        assert!(t_aged > 86_400.0, "{t_aged}");
+    }
+
+    #[test]
+    fn compensation_shrinks_the_estimate() {
+        let on = ChipConfig::default();
+        let off = ChipConfig { drift_compensation: false, ..ChipConfig::default() };
+        for age in [3600.0, 86_400.0, 1e7] {
+            assert!(
+                estimated_drift_error(&on, age) < estimated_drift_error(&off, age),
+                "age {age}"
+            );
+        }
+    }
+
+    #[test]
+    fn uncompensated_estimate_tracks_true_mean_decay() {
+        let cfg = ChipConfig {
+            drift_compensation: false,
+            drift_nu_std: 0.0,
+            drift_t_seconds: DRIFT_T0,
+            ..ChipConfig::default()
+        };
+        let age = 1e6;
+        let want = 1.0 - ((DRIFT_T0 + age) / DRIFT_T0).powf(-cfg.drift_nu_mean);
+        let got = estimated_drift_error(&cfg, age);
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn age_at_budget_inverts_the_estimate() {
+        let cfg = ChipConfig::default();
+        let budget = 0.05;
+        let age = age_at_budget(&cfg, budget).unwrap();
+        assert!(estimated_drift_error(&cfg, age * 0.99) <= budget);
+        assert!(estimated_drift_error(&cfg, age * 1.01) > budget);
+        // a noise-free chip never crosses any budget
+        assert_eq!(age_at_budget(&ChipConfig::ideal(), 0.01), None);
+    }
+
+    #[test]
+    fn due_respects_budget() {
+        let s = RecalScheduler::new(0.1);
+        let cfg = ChipConfig { drift_compensation: false, ..ChipConfig::default() };
+        assert!(!s.due(&cfg, 60.0));
+        assert!(s.due(&cfg, 1e7));
+    }
+}

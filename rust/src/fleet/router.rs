@@ -1,0 +1,187 @@
+//! Replica routing: pick which chip replica serves an analog MVM.
+//!
+//! The router replaces the seed's single `Mutex<Chip>` (which serialized
+//! every analog projection in the process) with a per-request choice over
+//! a shard's replica set; each chip then queues work on its own lock, so
+//! distinct chips execute concurrently.
+//!
+//! Policies: round-robin (stateless fairness), least-loaded (global scan
+//! of in-flight counters), and power-of-two-choices (two random probes,
+//! pick the lighter — Mitzenmacher's classic result gets exponentially
+//! better max-load than random with only two probes, without the
+//! contention of a global scan).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Replica-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    LeastLoaded,
+    /// power-of-two-choices
+    P2c,
+}
+
+impl RouterPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::LeastLoaded => "least_loaded",
+            RouterPolicy::P2c => "p2c",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "round_robin" | "rr" => Some(RouterPolicy::RoundRobin),
+            "least_loaded" | "ll" => Some(RouterPolicy::LeastLoaded),
+            "p2c" | "power_of_two" | "two_choices" => Some(RouterPolicy::P2c),
+            _ => None,
+        }
+    }
+}
+
+/// Lock-free replica picker (all state is atomic; `pick` takes `&self`).
+pub struct Router {
+    policy: RouterPolicy,
+    rr: AtomicUsize,
+    /// SplitMix64 counter stream for the P2c probes: atomically bumping a
+    /// Weyl sequence and hashing it gives each call an independent,
+    /// deterministic draw without a lock around an RNG.
+    state: AtomicU64,
+}
+
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, seed: u64) -> Router {
+        Router {
+            policy,
+            rr: AtomicUsize::new(0),
+            state: AtomicU64::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    #[inline]
+    fn draw(&self) -> u64 {
+        let c = self
+            .state
+            .fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+        mix64(c)
+    }
+
+    /// Choose a replica index in `[0, n)`. `load` reports the current
+    /// queue depth (in-flight analog MVMs, queued + executing) of replica
+    /// `i`; it is only consulted by the load-aware policies.
+    pub fn pick(&self, n: usize, load: impl Fn(usize) -> usize) -> usize {
+        debug_assert!(n > 0);
+        if n <= 1 {
+            return 0;
+        }
+        match self.policy {
+            RouterPolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RouterPolicy::LeastLoaded => (0..n)
+                .min_by_key(|&i| (load(i), i))
+                .unwrap_or(0),
+            RouterPolicy::P2c => {
+                let r = self.draw();
+                let a = (r % n as u64) as usize;
+                // second probe over the remaining n-1 replicas
+                let mut b = ((r >> 32) % (n as u64 - 1)) as usize;
+                if b >= a {
+                    b += 1;
+                }
+                if load(b) < load(a) {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips() {
+        for p in [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::P2c] {
+            assert_eq!(RouterPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(RouterPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = Router::new(RouterPolicy::RoundRobin, 0);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(3, |_| 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_follows_load() {
+        let r = Router::new(RouterPolicy::LeastLoaded, 0);
+        let loads = [5usize, 2, 7];
+        assert_eq!(r.pick(3, |i| loads[i]), 1);
+        // ties break toward the lowest index
+        assert_eq!(r.pick(3, |_| 1), 0);
+    }
+
+    #[test]
+    fn single_replica_short_circuits() {
+        for policy in [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::P2c] {
+            let r = Router::new(policy, 9);
+            assert_eq!(r.pick(1, |_| 3), 0);
+        }
+    }
+
+    #[test]
+    fn p2c_balances_closely() {
+        // classic balls-into-bins: with two choices the spread between the
+        // heaviest and lightest bin stays tiny relative to n/bins
+        let r = Router::new(RouterPolicy::P2c, 42);
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            let i = r.pick(4, |i| counts[i]);
+            counts[i] += 1;
+        }
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert_eq!(counts.iter().sum::<usize>(), 4000);
+        assert!(
+            max - min <= 8,
+            "p2c spread too wide: {counts:?}"
+        );
+        // and both probes actually vary (not stuck on one replica)
+        assert!(min > 800);
+    }
+
+    #[test]
+    fn p2c_prefers_lighter_of_two() {
+        let r = Router::new(RouterPolicy::P2c, 7);
+        // one replica is massively overloaded; p2c must route around it
+        // whenever its probe pair includes any other replica
+        let mut hits = [0usize; 3];
+        for _ in 0..300 {
+            let i = r.pick(3, |i| if i == 0 { 1000 } else { 0 });
+            hits[i] += 1;
+        }
+        // replica 0 only wins when both probes land on it — impossible
+        // with distinct probes, so it gets zero traffic
+        assert_eq!(hits[0], 0, "{hits:?}");
+        assert!(hits[1] > 0 && hits[2] > 0);
+    }
+}

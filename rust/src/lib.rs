@@ -32,11 +32,13 @@ pub mod energy;
 pub mod error;
 pub mod experiments;
 pub mod features;
+pub mod fleet;
 pub mod kernels;
 pub mod linalg;
 pub mod npy;
 pub mod ridge;
 pub mod runtime;
 pub mod util;
+pub mod ziparc;
 
 pub use error::{Error, Result};

@@ -128,10 +128,15 @@ impl Mat {
 
     /// Take the first `n` columns.
     pub fn take_cols(&self, n: usize) -> Mat {
-        assert!(n <= self.cols);
-        let mut out = Mat::zeros(self.rows, n);
+        self.slice_cols(0, n)
+    }
+
+    /// Copy out the column range `[c0, c1)` (tile/shard slicing).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, c1 - c0);
         for i in 0..self.rows {
-            out.row_mut(i).copy_from_slice(&self.row(i)[..n]);
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
         }
         out
     }

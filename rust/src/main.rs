@@ -68,6 +68,12 @@ SUBCOMMANDS
   serve                        boot the coordinator and TCP server
       --bind ADDR              (default 127.0.0.1:7473)
       --workers N --max-batch N --max-wait-us N --replication N
+      --n-chips N              emulated chips in the fleet (default 1)
+      --placement P            packed | sharded
+      --router R               round_robin | least_loaded | p2c
+      --fleet-replication N    chip-level replicas per lane shard
+      --recal-interval-s S     drift recalibration pass period (0 = off)
+      --drift-err-budget E     estimated drift error that triggers recal
   experiment <id>              regenerate a paper table/figure:
       fig2a fig2b fig3b table1 supp20 supp21 supp8 supp-table2
       redraw ablate-relu ablate-replication ablate-noise all
@@ -84,6 +90,9 @@ GLOBAL
 }
 
 fn serve(args: &Args, cfg: &Config) -> Result<()> {
+    use imka::error::Error;
+    use imka::fleet::{PlacementPolicy, RouterPolicy};
+
     let mut cfg = cfg.clone();
     if let Some(bind) = args.get("bind") {
         cfg.serve.bind = bind.to_string();
@@ -92,14 +101,41 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
     cfg.serve.max_batch = args.usize_or("max-batch", cfg.serve.max_batch)?;
     cfg.serve.max_wait_us = args.usize_or("max-wait-us", cfg.serve.max_wait_us as usize)? as u64;
     cfg.serve.replication = args.usize_or("replication", cfg.serve.replication)?;
+    cfg.fleet.n_chips = args.usize_or("n-chips", cfg.fleet.n_chips)?.max(1);
+    cfg.fleet.replication = args.usize_or("fleet-replication", cfg.fleet.replication)?.max(1);
+    cfg.fleet.recal_interval_s = args.f64_or("recal-interval-s", cfg.fleet.recal_interval_s)?;
+    cfg.fleet.drift_err_budget = args.f64_or("drift-err-budget", cfg.fleet.drift_err_budget)?;
+    if let Some(p) = args.get("placement") {
+        cfg.fleet.placement = PlacementPolicy::parse(p)
+            .ok_or_else(|| Error::Parse(format!("--placement: unknown policy '{p}'")))?;
+    }
+    if let Some(r) = args.get("router") {
+        cfg.fleet.router = RouterPolicy::parse(r)
+            .ok_or_else(|| Error::Parse(format!("--router: unknown policy '{r}'")))?;
+    }
 
     println!("booting engine (artifacts: {})...", cfg.artifacts_dir);
     let engine = Engine::start(&cfg)?;
     println!(
-        "engine up: {} chip cores programmed, model loaded: {}",
+        "engine up: {} chips ({} placement, {} router), {} cores programmed \
+         ({:.1}% of fleet), model loaded: {}",
+        engine.n_chips(),
+        cfg.fleet.placement.as_str(),
+        cfg.fleet.router.as_str(),
         engine.cores_used(),
+        100.0 * engine.fleet_utilization(),
         engine.has_model()
     );
+    if cfg.fleet.recal_interval_s > 0.0 {
+        match imka::fleet::age_at_budget(&cfg.chip, cfg.fleet.drift_err_budget) {
+            Some(age) => println!(
+                "drift recal: every {:.0}s, chips reprogram at age ~{age:.0}s \
+                 (budget {:.3})",
+                cfg.fleet.recal_interval_s, cfg.fleet.drift_err_budget
+            ),
+            None => println!("drift recal: enabled, but this chip model never drifts"),
+        }
+    }
     let server = Server::start(engine, &cfg.serve.bind)?;
     println!(
         "listening on {} (newline-delimited JSON; Ctrl-C to stop)",
@@ -153,6 +189,16 @@ fn info(cfg: &Config) -> Result<()> {
         cfg.chip.rows,
         cfg.chip.cols,
         cfg.chip.capacity()
+    );
+    println!(
+        "fleet: {} chips, placement {}, router {}, replication {}, \
+         recal every {}s at budget {:.3}",
+        cfg.fleet.n_chips,
+        cfg.fleet.placement.as_str(),
+        cfg.fleet.router.as_str(),
+        cfg.fleet.replication,
+        cfg.fleet.recal_interval_s,
+        cfg.fleet.drift_err_budget
     );
     println!(
         "noise: sigma_prog {:.3}, sigma_read {:.3}, drift nu {:.3}±{:.3} @ t={}s (comp: {})",

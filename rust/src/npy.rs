@@ -1,12 +1,15 @@
 //! Minimal `.npy` / `.npz` reader-writer (little-endian f32/i32/i64,
 //! C-order) — the weight/testset/oracle interchange with the Python build
-//! path. Built on the vendored `zip` crate; no numpy at runtime.
+//! path. Built on the in-tree STORED-only zip substitute ([`crate::ziparc`],
+//! aliased as `zip` below so the real crate can be swapped back in); no
+//! numpy at runtime. The Python side writes uncompressed `np.savez`.
 
 use std::collections::BTreeMap;
 use std::io::{Cursor, Read, Write};
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::ziparc as zip;
 
 /// A loaded numpy array: shape + flat data.
 #[derive(Clone, Debug, PartialEq)]
@@ -251,7 +254,7 @@ pub fn write_npz(path: &Path, arrays: &BTreeMap<String, NpyArray>) -> Result<()>
     let file = std::fs::File::create(path)?;
     let mut zip = zip::ZipWriter::new(file);
     let opts = zip::write::FileOptions::default()
-        .compression_method(zip::CompressionMethod::Deflated);
+        .compression_method(zip::CompressionMethod::Stored);
     for (name, arr) in arrays {
         zip.start_file(format!("{name}.npy"), opts)
             .map_err(|e| Error::Parse(format!("npz write: {e}")))?;

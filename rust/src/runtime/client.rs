@@ -7,6 +7,9 @@
 use std::path::Path;
 use std::sync::Mutex;
 
+// Offline PJRT stand-in; swap back to the real `xla` crate by deleting
+// this alias when the build environment provides it.
+use super::xla_stub as xla;
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 

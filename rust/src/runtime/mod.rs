@@ -5,6 +5,7 @@
 pub mod artifact;
 pub mod client;
 pub mod weights;
+pub mod xla_stub;
 
 pub use artifact::{ArtifactSpec, Registry};
 pub use client::{Executable, Input, XlaRuntime};

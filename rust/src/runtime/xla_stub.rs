@@ -1,0 +1,152 @@
+//! Offline stand-in for the `xla` (xla-rs / PJRT) crate.
+//!
+//! The build environment resolves no external crates (DESIGN.md
+//! §Toolchain substitutions), so this module mirrors the small slice of
+//! the xla-rs API surface that [`super::client`] consumes. Construction of
+//! clients and literals succeeds so the registry can open and index
+//! manifests; anything that would actually need the PJRT runtime
+//! (compiling HLO, executing) returns [`Error`] with an actionable
+//! message. `super::client` aliases this module as `xla`, so swapping the
+//! real crate back in is a one-line change there.
+//!
+//! What still works under the stub: the simulated chip (all analog MVMs),
+//! the native feature maps, and the full ArcCos0 analog serving lane
+//! (its postprocess is native Rust). What does not: every XLA-artifact
+//! execution — the digital feature lanes, the performer lanes, and the
+//! rbf/softmax *analog* lanes' digital postprocess step, which the engine
+//! runs from compiled artifacts. Artifact-gated tests skip when no
+//! manifest is present; in an environment that has both artifacts and the
+//! real xla crate, restore the alias in `super::client` to re-enable
+//! those paths end-to-end (tracked in ROADMAP "Real PJRT backend").
+
+use std::path::Path;
+
+/// Mirror of `xla::Error` (message-only).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<Error> for crate::error::Error {
+    fn from(e: Error) -> Self {
+        crate::error::Error::Xla(e.0)
+    }
+}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime not available in this offline build — \
+         XLA artifacts cannot compile or execute (chip-simulator MVMs and \
+         native feature maps still work); swap the real `xla` crate back \
+         in via the alias in runtime/client.rs"
+    ))
+}
+
+/// Host literal (opaque: the stub never materializes device data).
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Accepts any backing buffer; the stub discards it.
+    pub fn vec1<T>(_data: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("Literal::to_literal_sync"))
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(_v: i32) -> Self {
+        Literal
+    }
+}
+
+/// Mirror of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!(
+            "compile of HLO artifact {}",
+            path.display()
+        )))
+    }
+}
+
+/// Mirror of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Mirror of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<Literal>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Mirror of `xla::PjRtClient` (CPU).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Succeeds so `Registry::open` works offline; failures surface at
+    /// compile/execute time instead.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_opens_but_compile_fails_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        let err = HloModuleProto::from_text_file(Path::new("a.hlo.txt")).unwrap_err();
+        assert!(err.to_string().contains("PJRT runtime not available"));
+        let e: crate::error::Error = err.into();
+        assert!(matches!(e, crate::error::Error::Xla(_)));
+    }
+
+    #[test]
+    fn literal_construction_is_infallible() {
+        let l = Literal::vec1(&vec![1.0f32, 2.0]).reshape(&[1, 2]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}

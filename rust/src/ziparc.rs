@@ -1,0 +1,436 @@
+//! Minimal ZIP archive reader/writer (offline substitute for the `zip`
+//! crate — DESIGN.md §Toolchain substitutions). `npy.rs` aliases this
+//! module as `zip`, so the real crate can be swapped back in there.
+//!
+//! Scope: exactly what `.npz` interchange needs — STORED (method 0)
+//! entries with CRC-32 validation, central-directory-driven reads, and a
+//! buffered writer that emits correct local headers without seeking.
+//! DEFLATE entries (`np.savez_compressed`) are rejected with a clear
+//! error; the Python build path writes uncompressed `np.savez` bundles.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+
+/// Mirror of `zip::result::ZipError` (message-only).
+#[derive(Debug)]
+pub struct ZipError(pub String);
+
+impl std::fmt::Display for ZipError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ZipError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ZipError> {
+    Err(ZipError(msg.into()))
+}
+
+/// Compression methods this stub understands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressionMethod {
+    Stored,
+}
+
+/// Writer-side options, mirroring `zip::write::FileOptions`.
+pub mod write {
+    use super::CompressionMethod;
+
+    #[derive(Clone, Copy, Debug)]
+    pub struct FileOptions {
+        pub(super) method: CompressionMethod,
+    }
+
+    impl Default for FileOptions {
+        fn default() -> Self {
+            FileOptions { method: CompressionMethod::Stored }
+        }
+    }
+
+    impl FileOptions {
+        pub fn compression_method(mut self, method: CompressionMethod) -> Self {
+            self.method = method;
+            self
+        }
+    }
+}
+
+/// CRC-32 (IEEE, reflected) — bitwise, no table; archives are small.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn u16le(b: &[u8]) -> u16 {
+    u16::from_le_bytes([b[0], b[1]])
+}
+
+fn u32le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+struct CentralEntry {
+    name: String,
+    method: u16,
+    crc: u32,
+    comp_size: u64,
+    local_offset: u64,
+}
+
+/// Read side: index the central directory, extract entries by index.
+pub struct ZipArchive<R: Read + Seek> {
+    reader: R,
+    entries: Vec<CentralEntry>,
+}
+
+impl<R: Read + Seek> ZipArchive<R> {
+    pub fn new(mut reader: R) -> Result<ZipArchive<R>, ZipError> {
+        // locate the end-of-central-directory record: scan the last 64 KiB
+        // + 22 bytes backward for PK\x05\x06
+        let file_len = reader
+            .seek(SeekFrom::End(0))
+            .map_err(|e| ZipError(format!("seek: {e}")))?;
+        let tail_len = file_len.min(64 * 1024 + 22);
+        reader
+            .seek(SeekFrom::Start(file_len - tail_len))
+            .map_err(|e| ZipError(format!("seek: {e}")))?;
+        let mut tail = vec![0u8; tail_len as usize];
+        reader
+            .read_exact(&mut tail)
+            .map_err(|e| ZipError(format!("read eocd: {e}")))?;
+        let eocd = match (0..tail.len().saturating_sub(21))
+            .rev()
+            .find(|&i| &tail[i..i + 4] == b"PK\x05\x06")
+        {
+            Some(i) => &tail[i..],
+            None => return err("not a zip archive (no end-of-central-directory)"),
+        };
+        let n_total = u16le(&eocd[10..12]) as usize;
+        let cd_offset = u32le(&eocd[16..20]) as u64;
+        if cd_offset == 0xFFFF_FFFF || n_total == 0xFFFF {
+            return err("zip64 archives unsupported");
+        }
+
+        reader
+            .seek(SeekFrom::Start(cd_offset))
+            .map_err(|e| ZipError(format!("seek central dir: {e}")))?;
+        let mut entries = Vec::with_capacity(n_total);
+        let mut hdr = [0u8; 46];
+        for _ in 0..n_total {
+            reader
+                .read_exact(&mut hdr)
+                .map_err(|e| ZipError(format!("central header: {e}")))?;
+            if &hdr[..4] != b"PK\x01\x02" {
+                return err("bad central directory signature");
+            }
+            let method = u16le(&hdr[10..12]);
+            let crc = u32le(&hdr[16..20]);
+            let comp_size = u32le(&hdr[20..24]) as u64;
+            let name_len = u16le(&hdr[28..30]) as usize;
+            let extra_len = u16le(&hdr[30..32]) as usize;
+            let comment_len = u16le(&hdr[32..34]) as usize;
+            let local_offset = u32le(&hdr[42..46]) as u64;
+            let mut name = vec![0u8; name_len];
+            reader
+                .read_exact(&mut name)
+                .map_err(|e| ZipError(format!("entry name: {e}")))?;
+            reader
+                .seek(SeekFrom::Current((extra_len + comment_len) as i64))
+                .map_err(|e| ZipError(format!("seek: {e}")))?;
+            entries.push(CentralEntry {
+                name: String::from_utf8_lossy(&name).into_owned(),
+                method,
+                crc,
+                comp_size,
+                local_offset,
+            });
+        }
+        Ok(ZipArchive { reader, entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Extract entry `i` fully into memory (entries are small `.npy`
+    /// blobs) and return a readable handle.
+    pub fn by_index(&mut self, i: usize) -> Result<ZipEntry, ZipError> {
+        let e = match self.entries.get(i) {
+            Some(e) => e,
+            None => return err(format!("entry index {i} out of range")),
+        };
+        if e.method != 0 {
+            return err(format!(
+                "entry '{}' uses compression method {} \
+                 (only STORED is supported; write npz uncompressed)",
+                e.name, e.method
+            ));
+        }
+        self.reader
+            .seek(SeekFrom::Start(e.local_offset))
+            .map_err(|x| ZipError(format!("seek local header: {x}")))?;
+        let mut hdr = [0u8; 30];
+        self.reader
+            .read_exact(&mut hdr)
+            .map_err(|x| ZipError(format!("local header: {x}")))?;
+        if &hdr[..4] != b"PK\x03\x04" {
+            return err("bad local header signature");
+        }
+        let name_len = u16le(&hdr[26..28]) as i64;
+        let extra_len = u16le(&hdr[28..30]) as i64;
+        self.reader
+            .seek(SeekFrom::Current(name_len + extra_len))
+            .map_err(|x| ZipError(format!("seek: {x}")))?;
+        let mut data = vec![0u8; e.comp_size as usize];
+        self.reader
+            .read_exact(&mut data)
+            .map_err(|x| ZipError(format!("entry body: {x}")))?;
+        if crc32(&data) != e.crc {
+            return err(format!("entry '{}': CRC mismatch", e.name));
+        }
+        Ok(ZipEntry { name: e.name.clone(), data, pos: 0 })
+    }
+}
+
+/// One extracted entry (fully buffered).
+pub struct ZipEntry {
+    name: String,
+    data: Vec<u8>,
+    pos: usize,
+}
+
+impl ZipEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl Read for ZipEntry {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = buf.len().min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+struct PendingEntry {
+    name: String,
+    data: Vec<u8>,
+}
+
+/// Write side: buffers each entry so headers carry correct sizes without
+/// seeking in the underlying writer.
+pub struct ZipWriter<W: Write> {
+    out: W,
+    pending: Option<PendingEntry>,
+    /// (name, crc, size, local_offset)
+    written: Vec<(String, u32, u32, u32)>,
+    offset: u32,
+}
+
+impl<W: Write> ZipWriter<W> {
+    pub fn new(out: W) -> ZipWriter<W> {
+        ZipWriter { out, pending: None, written: Vec::new(), offset: 0 }
+    }
+
+    pub fn start_file<S: Into<String>>(
+        &mut self,
+        name: S,
+        _opts: write::FileOptions,
+    ) -> Result<(), ZipError> {
+        self.flush_pending().map_err(|e| ZipError(format!("zip write: {e}")))?;
+        self.pending = Some(PendingEntry { name: name.into(), data: Vec::new() });
+        Ok(())
+    }
+
+    fn flush_pending(&mut self) -> std::io::Result<()> {
+        let Some(entry) = self.pending.take() else {
+            return Ok(());
+        };
+        // no zip64: sizes and offsets must fit the classic 32-bit fields
+        if entry.data.len() > u32::MAX as usize {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("zip entry '{}' exceeds 4 GiB (zip64 unsupported)", entry.name),
+            ));
+        }
+        let crc = crc32(&entry.data);
+        let size = entry.data.len() as u32;
+        let name = entry.name.as_bytes();
+        let mut hdr = Vec::with_capacity(30 + name.len());
+        hdr.extend_from_slice(b"PK\x03\x04");
+        hdr.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        hdr.extend_from_slice(&0u16.to_le_bytes()); // flags
+        hdr.extend_from_slice(&0u16.to_le_bytes()); // method: stored
+        hdr.extend_from_slice(&0u16.to_le_bytes()); // mod time
+        hdr.extend_from_slice(&0u16.to_le_bytes()); // mod date
+        hdr.extend_from_slice(&crc.to_le_bytes());
+        hdr.extend_from_slice(&size.to_le_bytes()); // compressed
+        hdr.extend_from_slice(&size.to_le_bytes()); // uncompressed
+        hdr.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        hdr.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        hdr.extend_from_slice(name);
+        self.out.write_all(&hdr)?;
+        self.out.write_all(&entry.data)?;
+        self.written.push((entry.name, crc, size, self.offset));
+        self.offset = (hdr.len() as u32)
+            .checked_add(size)
+            .and_then(|n| self.offset.checked_add(n))
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "zip archive exceeds 4 GiB (zip64 unsupported)",
+                )
+            })?;
+        Ok(())
+    }
+
+    /// Write the central directory + end record; returns the inner writer.
+    pub fn finish(mut self) -> Result<W, ZipError> {
+        self.flush_pending().map_err(|e| ZipError(format!("zip write: {e}")))?;
+        let cd_offset = self.offset;
+        let mut cd_size = 0u32;
+        for (name, crc, size, local_offset) in &self.written {
+            let name = name.as_bytes();
+            let mut hdr = Vec::with_capacity(46 + name.len());
+            hdr.extend_from_slice(b"PK\x01\x02");
+            hdr.extend_from_slice(&20u16.to_le_bytes()); // version made by
+            hdr.extend_from_slice(&20u16.to_le_bytes()); // version needed
+            hdr.extend_from_slice(&0u16.to_le_bytes()); // flags
+            hdr.extend_from_slice(&0u16.to_le_bytes()); // method: stored
+            hdr.extend_from_slice(&0u16.to_le_bytes()); // mod time
+            hdr.extend_from_slice(&0u16.to_le_bytes()); // mod date
+            hdr.extend_from_slice(&crc.to_le_bytes());
+            hdr.extend_from_slice(&size.to_le_bytes());
+            hdr.extend_from_slice(&size.to_le_bytes());
+            hdr.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            hdr.extend_from_slice(&0u16.to_le_bytes()); // extra len
+            hdr.extend_from_slice(&0u16.to_le_bytes()); // comment len
+            hdr.extend_from_slice(&0u16.to_le_bytes()); // disk number
+            hdr.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+            hdr.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+            hdr.extend_from_slice(&local_offset.to_le_bytes());
+            hdr.extend_from_slice(name);
+            self.out
+                .write_all(&hdr)
+                .map_err(|e| ZipError(format!("zip central dir: {e}")))?;
+            cd_size += hdr.len() as u32;
+        }
+        let n = self.written.len() as u16;
+        let mut eocd = Vec::with_capacity(22);
+        eocd.extend_from_slice(b"PK\x05\x06");
+        eocd.extend_from_slice(&0u16.to_le_bytes()); // this disk
+        eocd.extend_from_slice(&0u16.to_le_bytes()); // cd disk
+        eocd.extend_from_slice(&n.to_le_bytes()); // entries this disk
+        eocd.extend_from_slice(&n.to_le_bytes()); // entries total
+        eocd.extend_from_slice(&cd_size.to_le_bytes());
+        eocd.extend_from_slice(&cd_offset.to_le_bytes());
+        eocd.extend_from_slice(&0u16.to_le_bytes()); // comment len
+        self.out
+            .write_all(&eocd)
+            .map_err(|e| ZipError(format!("zip eocd: {e}")))?;
+        self.out
+            .flush()
+            .map_err(|e| ZipError(format!("zip flush: {e}")))?;
+        Ok(self.out)
+    }
+}
+
+impl<W: Write> Write for ZipWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match &mut self.pending {
+            Some(e) => {
+                e.data.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "zip: write before start_file",
+            )),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_two_entries() {
+        let mut w = ZipWriter::new(Cursor::new(Vec::new()));
+        w.start_file("a.bin", write::FileOptions::default()).unwrap();
+        w.write_all(b"hello zip").unwrap();
+        w.start_file("dir/b.bin", write::FileOptions::default()).unwrap();
+        w.write_all(&[0u8, 1, 2, 255]).unwrap();
+        let bytes = w.finish().unwrap().into_inner();
+
+        let mut arc = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        assert_eq!(arc.len(), 2);
+        let mut names = Vec::new();
+        for i in 0..arc.len() {
+            let mut e = arc.by_index(i).unwrap();
+            names.push(e.name().to_string());
+            let mut buf = Vec::new();
+            e.read_to_end(&mut buf).unwrap();
+            if e.name() == "a.bin" {
+                assert_eq!(buf, b"hello zip");
+            } else {
+                assert_eq!(buf, vec![0u8, 1, 2, 255]);
+            }
+        }
+        names.sort();
+        assert_eq!(names, vec!["a.bin", "dir/b.bin"]);
+    }
+
+    #[test]
+    fn empty_archive_roundtrips() {
+        let bytes = ZipWriter::new(Cursor::new(Vec::new()))
+            .finish()
+            .unwrap()
+            .into_inner();
+        let arc = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        assert!(arc.is_empty());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(ZipArchive::new(Cursor::new(b"not a zip".to_vec())).is_err());
+        assert!(ZipArchive::new(Cursor::new(Vec::new())).is_err());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32 of "123456789" is 0xCBF43926 (IEEE test vector)
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut w = ZipWriter::new(Cursor::new(Vec::new()));
+        w.start_file("x", write::FileOptions::default()).unwrap();
+        w.write_all(b"payload-payload").unwrap();
+        let mut bytes = w.finish().unwrap().into_inner();
+        // flip a body byte (local header is 30 + 1 name byte)
+        bytes[33] ^= 0xFF;
+        let mut arc = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        let err = arc.by_index(0).unwrap_err();
+        assert!(err.to_string().contains("CRC"));
+    }
+}

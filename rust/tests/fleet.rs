@@ -1,0 +1,161 @@
+//! Fleet integration: sharded placement + routing + drift-aware
+//! recalibration, driven the way a long-lived deployment would be —
+//! but on a virtual clock, so months of PCM drift run in milliseconds.
+//! No artifacts needed: the analog path is pure Rust.
+
+use imka::aimc::pcm::DRIFT_T0;
+use imka::config::{ChipConfig, FleetConfig};
+use imka::coordinator::request::KernelLane;
+use imka::features::postprocess;
+use imka::features::sampler::{sample_omega, Sampler};
+use imka::fleet::{estimated_drift_error, FleetPool, PlacementPolicy, RecalScheduler, RouterPolicy};
+use imka::kernels::{approx_error, gram, gram_features, Kernel};
+use imka::linalg::Mat;
+use imka::util::threads::parallel_map;
+use imka::util::Rng;
+
+fn rbf_gram_err(pool: &FleetPool, x: &Mat) -> f64 {
+    let u = pool.project(KernelLane::Rbf, x).unwrap();
+    let z = postprocess(Kernel::Rbf, &u, Some(x));
+    approx_error(&gram(Kernel::Rbf, x), &gram_features(&z))
+}
+
+/// Clock-advance drift test (ISSUE acceptance): an aged fleet's Gram
+/// error degrades; the recalibration scheduler reprograms the drifted
+/// chips and measurably restores it vs the no-recal baseline.
+#[test]
+fn recalibration_restores_gram_error_after_drift() {
+    let chip = ChipConfig {
+        drift_compensation: false, // drift shows up as mean conductance decay
+        drift_nu_std: 0.0,
+        drift_t_seconds: DRIFT_T0, // baseline scenario: freshly programmed
+        ..ChipConfig::default()
+    };
+    let fleet = FleetConfig {
+        n_chips: 2,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::RoundRobin,
+        replication: 2,
+        recal_interval_s: 0.0, // scheduler driven explicitly on the virtual clock
+        drift_err_budget: 0.08,
+    };
+    let mut pool = FleetPool::new(chip.clone(), fleet, 7);
+    let mut rng = Rng::new(0);
+    let (d, m) = (16, 512);
+    let omega = sample_omega(Sampler::Orf, d, m, &mut rng);
+    let x_cal = Mat::randn(128, d, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+
+    let mut x = Mat::randn(48, d, &mut rng);
+    x.scale(0.5);
+    let e_fresh = rbf_gram_err(&pool, &x);
+
+    // ~2 months of uptime: uncompensated drift shrinks every conductance
+    pool.advance_clock(5e6);
+    pool.sync_drift();
+    let e_aged = rbf_gram_err(&pool, &x);
+    assert!(
+        e_aged > 1.5 * e_fresh,
+        "drift should degrade the kernel: fresh {e_fresh}, aged {e_aged}"
+    );
+    // the analytic estimate agrees that both chips are past budget
+    assert!(estimated_drift_error(&chip, 5e6) > 0.08);
+
+    let scheduler = RecalScheduler::new(0.08);
+    let recalibrated = scheduler.tick(&pool).unwrap();
+    assert_eq!(recalibrated, vec![0, 1], "both aged chips reprogram");
+    let e_recal = rbf_gram_err(&pool, &x);
+    assert!(
+        e_recal < 0.6 * e_aged,
+        "recal must restore accuracy: aged {e_aged}, recal {e_recal}"
+    );
+    assert!(
+        e_recal < 2.0 * e_fresh + 0.02,
+        "recal should land near fresh: fresh {e_fresh}, recal {e_recal}"
+    );
+
+    // chips are young again; an immediate second pass is a no-op
+    assert!(scheduler.tick(&pool).unwrap().is_empty());
+    let snaps = pool.chip_snapshots();
+    assert!(snaps.iter().all(|s| s.recals == 1 && s.age_s == 0.0));
+    assert!(snaps.iter().all(|s| s.drift_err_estimate == 0.0));
+    assert_eq!(pool.clock_s(), 5e6);
+    assert!(pool.chip_age(0) < DRIFT_T0);
+}
+
+/// Concurrent projections through a replicated lane complete correctly
+/// and spread over multiple chips (the throughput mechanism bench_fleet
+/// measures).
+#[test]
+fn concurrent_replicated_serving_spreads_over_chips() {
+    let fleet = FleetConfig {
+        n_chips: 4,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::P2c,
+        replication: 4,
+        recal_interval_s: 0.0,
+        drift_err_budget: 0.1,
+    };
+    let mut pool = FleetPool::new(ChipConfig::default(), fleet, 3);
+    let mut rng = Rng::new(1);
+    let omega = sample_omega(Sampler::Orf, 16, 128, &mut rng);
+    let x_cal = Mat::randn(64, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+    // one replica per chip
+    assert_eq!(pool.cores_used(), 4);
+
+    let x = Mat::randn(8, 16, &mut rng);
+    let want = imka::linalg::matmul(&x, &omega);
+    let pool_ref = &pool;
+    let x_ref = &x;
+    let want_ref = &want;
+    let errs = parallel_map(8, |_| {
+        let mut worst: f64 = 0.0;
+        for _ in 0..6 {
+            let u = pool_ref.project(KernelLane::Rbf, x_ref).unwrap();
+            worst = worst.max(imka::util::stats::rel_fro_error(&u.data, &want_ref.data));
+        }
+        worst
+    });
+    // every concurrent caller got a sane analog result
+    assert!(errs.iter().all(|&e| e > 0.0 && e < 0.12), "{errs:?}");
+
+    let snaps = pool.chip_snapshots();
+    let served: Vec<u64> = snaps.iter().map(|s| s.served).collect();
+    assert_eq!(served.iter().sum::<u64>(), 8 * 6);
+    assert!(
+        served.iter().filter(|&&c| c > 0).count() >= 2,
+        "p2c routing should hit multiple chips: {served:?}"
+    );
+    assert!(snaps.iter().all(|s| s.queue_depth == 0));
+}
+
+/// A lane wider than one chip's crossbar budget splits across chips and
+/// still round-trips the whole-matrix product.
+#[test]
+fn oversized_lane_shards_across_chips() {
+    // 4-core chips of 16x16 hold at most 4 column blocks; 16x128 needs 8
+    let chip = ChipConfig { cores: 4, rows: 16, cols: 16, ..ChipConfig::ideal() };
+    let fleet = FleetConfig {
+        n_chips: 2,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::LeastLoaded,
+        replication: 1,
+        recal_interval_s: 0.0,
+        drift_err_budget: 0.1,
+    };
+    let mut pool = FleetPool::new(chip, fleet, 5);
+    let mut rng = Rng::new(2);
+    let omega = Mat::randn(16, 128, &mut rng);
+    let x_cal = Mat::randn(32, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+    let mapping = pool.mapping(KernelLane::Rbf).unwrap();
+    assert!(mapping.plan.shards.len() >= 2);
+    assert_eq!(pool.cores_used(), 8);
+
+    let x = Mat::randn(8, 16, &mut rng);
+    let u = pool.project(KernelLane::Rbf, &x).unwrap();
+    let want = imka::linalg::matmul(&x, &omega);
+    let rel = imka::util::stats::rel_fro_error(&u.data, &want.data);
+    assert!(rel < 0.03, "sharded round-trip rel {rel}");
+}

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 gate in one command: build, test, format check.
+#
+#   scripts/ci.sh            # full gate
+#   SKIP_FMT=1 scripts/ci.sh # environments without rustfmt
+#
+# Runs from any cwd. Benches and examples are compiled as part of
+# `cargo test` (they are declared targets), so the gate also catches
+# bit-rot there.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "${SKIP_FMT:-0}" != "1" ]; then
+    if command -v rustfmt >/dev/null 2>&1; then
+        echo "== cargo fmt --check =="
+        cargo fmt --check
+    else
+        echo "rustfmt not installed; skipping format check (set SKIP_FMT=1 to silence)"
+    fi
+fi
+
+echo "tier-1 gate passed"
