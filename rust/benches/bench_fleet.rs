@@ -1,4 +1,5 @@
-//! Bench: analog-path serving throughput vs fleet size.
+//! Bench: analog-path serving throughput vs fleet size, plus a chaos row
+//! exercising the control plane's failover path.
 //!
 //! Replicates one RBF feature lane across `n_chips ∈ {1, 2, 4, 8}` chips
 //! and drives concurrent projections through the fleet router. With one
@@ -8,8 +9,16 @@
 //! error) is reported alongside throughput to show scaling does not cost
 //! approximation accuracy.
 //!
-//! Emits one human-readable line and one JSON row per fleet size.
+//! The chaos row then kills one chip of an N-chip fleet and measures
+//! throughput in three phases: healthy baseline, with the dead chip
+//! still in the replica sets (requests fail over per-shard), and after
+//! the control plane evicts it (dead replicas gone from the plans).
+//!
+//! Emits one human-readable line and one JSON row per configuration.
 //! Run: cargo bench --bench bench_fleet
+//! Smoke mode (CI tier-1 gate): IMKA_BENCH_FLEET_SMOKE=1 shrinks the
+//! lane and rep counts and runs {1, 2} chips so placement/routing
+//! regressions surface in seconds without artifacts.
 
 use imka::config::json::{num, obj, s, Json};
 use imka::config::{ChipConfig, FleetConfig};
@@ -22,48 +31,71 @@ use imka::linalg::Mat;
 use imka::util::threads::parallel_map;
 use imka::util::{Rng, Timer};
 
-const D: usize = 64;
-const M: usize = 256;
-const BATCH: usize = 32;
-const THREADS: usize = 8;
-const REPS: usize = 25;
+struct Params {
+    d: usize,
+    m: usize,
+    batch: usize,
+    threads: usize,
+    reps: usize,
+    sizes: Vec<usize>,
+    chaos_chips: usize,
+}
 
-fn build_pool(n_chips: usize) -> FleetPool {
+fn params() -> Params {
+    if std::env::var("IMKA_BENCH_FLEET_SMOKE").is_ok() {
+        Params { d: 16, m: 64, batch: 8, threads: 4, reps: 5, sizes: vec![1, 2], chaos_chips: 2 }
+    } else {
+        Params { d: 64, m: 256, batch: 32, threads: 8, reps: 25, sizes: vec![1, 2, 4, 8], chaos_chips: 4 }
+    }
+}
+
+fn build_pool(p: &Params, n_chips: usize) -> FleetPool {
     let fleet = FleetConfig {
         n_chips,
         placement: PlacementPolicy::Packed,
         router: RouterPolicy::P2c,
         replication: n_chips, // one replica per chip
-        recal_interval_s: 0.0,
-        drift_err_budget: 0.1,
+        ..FleetConfig::default()
     };
-    let mut pool = FleetPool::new(ChipConfig::default(), fleet, 1);
+    let pool = FleetPool::new(ChipConfig::default(), fleet, 1);
     let mut rng = Rng::new(7);
-    let omega = sample_omega(Sampler::Orf, D, M, &mut rng);
-    let x_cal = Mat::randn(128, D, &mut rng);
+    let omega = sample_omega(Sampler::Orf, p.d, p.m, &mut rng);
+    let x_cal = Mat::randn(128, p.d, &mut rng);
     pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
     pool
 }
 
-fn gram_err(pool: &FleetPool) -> f64 {
+fn gram_err(p: &Params, pool: &FleetPool) -> f64 {
     let mut rng = Rng::new(11);
-    let mut x = Mat::randn(64, D, &mut rng);
+    let mut x = Mat::randn(64, p.d, &mut rng);
     x.scale(0.5);
     let u = pool.project(KernelLane::Rbf, &x).unwrap();
     let z = postprocess(Kernel::Rbf, &u, Some(&x));
     approx_error(&gram(Kernel::Rbf, &x), &gram_features(&z))
 }
 
-fn main() {
+/// Drive `threads x reps` concurrent projections; returns MVM/s.
+fn drive(p: &Params, pool: &FleetPool, x: &Mat) -> f64 {
+    let t = Timer::start();
+    parallel_map(p.threads, |_| {
+        for _ in 0..p.reps {
+            pool.project(KernelLane::Rbf, x).unwrap();
+        }
+    });
+    (p.threads * p.reps) as f64 / t.elapsed_secs()
+}
+
+fn scaling_rows(p: &Params) {
     println!(
-        "== fleet analog-path throughput ({THREADS} threads x {REPS} reps, \
-         batch {BATCH}, lane {D}x{M} rbf) =="
+        "== fleet analog-path throughput ({} threads x {} reps, \
+         batch {}, lane {}x{} rbf) ==",
+        p.threads, p.reps, p.batch, p.d, p.m
     );
     let mut base = 0.0_f64;
-    for n_chips in [1usize, 2, 4, 8] {
-        let pool = build_pool(n_chips);
+    for &n_chips in &p.sizes {
+        let pool = build_pool(p, n_chips);
         let mut rng = Rng::new(3);
-        let mut x = Mat::randn(BATCH, D, &mut rng);
+        let mut x = Mat::randn(p.batch, p.d, &mut rng);
         x.scale(0.5);
 
         // warm every replica's locks/caches
@@ -71,23 +103,13 @@ fn main() {
             pool.project(KernelLane::Rbf, &x).unwrap();
         }
 
-        let pool_ref = &pool;
-        let x_ref = &x;
-        let t = Timer::start();
-        parallel_map(THREADS, |_| {
-            for _ in 0..REPS {
-                pool_ref.project(KernelLane::Rbf, x_ref).unwrap();
-            }
-        });
-        let secs = t.elapsed_secs();
-        let mvms = (THREADS * REPS) as f64;
-        let mvms_per_s = mvms / secs;
-        let samples_per_s = mvms * BATCH as f64 / secs;
-        if n_chips == 1 {
+        let mvms_per_s = drive(p, &pool, &x);
+        let samples_per_s = mvms_per_s * p.batch as f64;
+        if n_chips == p.sizes[0] {
             base = mvms_per_s;
         }
         let speedup = mvms_per_s / base.max(1e-12);
-        let err = gram_err(&pool);
+        let err = gram_err(p, &pool);
 
         println!(
             "n_chips {n_chips:>2}: {mvms_per_s:>8.1} MVM/s  \
@@ -97,9 +119,9 @@ fn main() {
         let row = obj(vec![
             ("bench", s("fleet")),
             ("n_chips", num(n_chips as f64)),
-            ("threads", num(THREADS as f64)),
-            ("batch", num(BATCH as f64)),
-            ("reps", num(REPS as f64)),
+            ("threads", num(p.threads as f64)),
+            ("batch", num(p.batch as f64)),
+            ("reps", num(p.reps as f64)),
             ("mvms_per_s", num(mvms_per_s)),
             ("samples_per_s", num(samples_per_s)),
             ("speedup_vs_1", num(speedup)),
@@ -108,4 +130,61 @@ fn main() {
         ]);
         println!("{}", row.to_string());
     }
+}
+
+/// Chaos row: throughput before / during / after evicting one chip of an
+/// N-chip fleet mid-run.
+fn chaos_row(p: &Params) {
+    let n_chips = p.chaos_chips;
+    println!("== fleet chaos: kill + evict 1 of {n_chips} chips ==");
+    let pool = build_pool(p, n_chips);
+    let mut rng = Rng::new(5);
+    let mut x = Mat::randn(p.batch, p.d, &mut rng);
+    x.scale(0.5);
+    for _ in 0..2 * n_chips {
+        pool.project(KernelLane::Rbf, &x).unwrap();
+    }
+
+    let before = drive(p, &pool, &x);
+
+    // chip 0 dies: it stays in every replica set, so requests that route
+    // to it pay a failed attempt before retrying a survivor
+    pool.inject_fault(0, true);
+    let during = drive(p, &pool, &x);
+
+    // the control plane evicts it: dead replicas leave the plans and the
+    // failover tax disappears
+    pool.evict_chip(0).unwrap();
+    let after = drive(p, &pool, &x);
+
+    let err = gram_err(p, &pool);
+    println!(
+        "before {before:>8.1} MVM/s  during-fault {during:>8.1} MVM/s  \
+         after-evict {after:>8.1} MVM/s  gram rel err {err:.4} \
+         (n_chips {} -> {})",
+        n_chips,
+        pool.n_chips()
+    );
+    let row = obj(vec![
+        ("bench", s("fleet_chaos")),
+        ("n_chips", num(n_chips as f64)),
+        ("evicted_chip", num(0.0)),
+        ("threads", num(p.threads as f64)),
+        ("batch", num(p.batch as f64)),
+        ("reps", num(p.reps as f64)),
+        ("mvms_per_s_before", num(before)),
+        ("mvms_per_s_during_fault", num(during)),
+        ("mvms_per_s_after_evict", num(after)),
+        ("n_chips_after", num(pool.n_chips() as f64)),
+        ("evictions", num(pool.events().evictions as f64)),
+        ("gram_rel_err", num(err)),
+        ("ok", Json::Bool(true)),
+    ]);
+    println!("{}", row.to_string());
+}
+
+fn main() {
+    let p = params();
+    scaling_rows(&p);
+    chaos_row(&p);
 }

@@ -7,5 +7,5 @@ pub mod settings;
 pub mod toml;
 
 pub use json::Json;
-pub use settings::{ChipConfig, Config, FleetConfig, ServeConfig};
+pub use settings::{ChipConfig, Config, ControlConfig, FleetConfig, ServeConfig};
 pub use toml::{TomlDoc, TomlValue};

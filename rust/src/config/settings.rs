@@ -103,10 +103,79 @@ impl ChipConfig {
     }
 }
 
+/// Fleet control plane: health tracking, eviction, draining, and
+/// queue-driven autoscaling (`[fleet.control]` section).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControlConfig {
+    /// run the supervisory control loop (health probes, eviction,
+    /// recalibration draining, autoscaling) on a background thread
+    pub enabled: bool,
+    /// seconds between control ticks
+    pub interval_s: f64,
+    /// consecutive failed heartbeat probes before a chip is evicted and
+    /// its shards re-placed on survivors
+    pub probe_evict_after: usize,
+    /// MVM errors within one tick that degrade a chip
+    pub degrade_errors: u64,
+    /// grow/shrink the fleet from queue-depth telemetry
+    pub autoscale: bool,
+    /// autoscaler never shrinks below this many chips
+    pub min_chips: usize,
+    /// autoscaler never grows beyond this many chips
+    pub max_chips: usize,
+    /// mean in-flight MVMs per chip that signals saturation (scale up)
+    pub scale_up_depth: f64,
+    /// mean in-flight MVMs per chip that signals idleness (scale down)
+    pub scale_down_depth: f64,
+    /// consecutive qualifying ticks before the autoscaler acts
+    pub scale_patience: usize,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            enabled: false,
+            interval_s: 1.0,
+            probe_evict_after: 2,
+            degrade_errors: 3,
+            autoscale: false,
+            min_chips: 1,
+            max_chips: 8,
+            scale_up_depth: 4.0,
+            scale_down_depth: 0.5,
+            scale_patience: 3,
+        }
+    }
+}
+
+impl ControlConfig {
+    fn from_doc(doc: &TomlDoc) -> Self {
+        let d = ControlConfig::default();
+        ControlConfig {
+            enabled: doc.bool_or("fleet.control.enabled", d.enabled),
+            interval_s: doc.f64_or("fleet.control.interval_s", d.interval_s),
+            probe_evict_after: doc
+                .usize_or("fleet.control.probe_evict_after", d.probe_evict_after)
+                .max(1),
+            degrade_errors: doc
+                .usize_or("fleet.control.degrade_errors", d.degrade_errors as usize)
+                .max(1) as u64,
+            autoscale: doc.bool_or("fleet.control.autoscale", d.autoscale),
+            min_chips: doc.usize_or("fleet.control.min_chips", d.min_chips).max(1),
+            max_chips: doc.usize_or("fleet.control.max_chips", d.max_chips).max(1),
+            scale_up_depth: doc.f64_or("fleet.control.scale_up_depth", d.scale_up_depth),
+            scale_down_depth: doc.f64_or("fleet.control.scale_down_depth", d.scale_down_depth),
+            scale_patience: doc
+                .usize_or("fleet.control.scale_patience", d.scale_patience)
+                .max(1),
+        }
+    }
+}
+
 /// Fleet topology and recalibration policy (`[fleet]` section).
 #[derive(Clone, Debug, PartialEq)]
 pub struct FleetConfig {
-    /// number of emulated chips in the pool
+    /// number of emulated chips in the pool at boot
     pub n_chips: usize,
     /// how lanes are spread over chips (`packed` | `sharded`)
     pub placement: PlacementPolicy,
@@ -115,10 +184,19 @@ pub struct FleetConfig {
     /// chip-level replicas per lane shard (distinct chips)
     pub replication: usize,
     /// seconds between recalibration scheduler passes; 0 disables the
-    /// background thread (recal can still be driven explicitly)
+    /// background thread (recal can still be driven explicitly). When
+    /// the control plane is enabled its loop runs recal instead.
     pub recal_interval_s: f64,
     /// estimated relative drift error that triggers reprogramming a chip
     pub drift_err_budget: f64,
+    /// per-chip core counts for heterogeneous fleets (chip `i` gets
+    /// `chip_cores[i]`; missing entries fall back to `chip.cores`)
+    pub chip_cores: Vec<usize>,
+    /// per-chip noise tiers for the planner's cost model (lower is a
+    /// quieter chip generation; missing entries default to 1.0)
+    pub noise_tiers: Vec<f64>,
+    /// supervisory control plane ([fleet.control])
+    pub control: ControlConfig,
 }
 
 impl Default for FleetConfig {
@@ -130,6 +208,9 @@ impl Default for FleetConfig {
             replication: 1,
             recal_interval_s: 0.0,
             drift_err_budget: 0.1,
+            chip_cores: Vec::new(),
+            noise_tiers: Vec::new(),
+            control: ControlConfig::default(),
         }
     }
 }
@@ -156,7 +237,41 @@ impl FleetConfig {
             replication: doc.usize_or("fleet.replication", d.replication).max(1),
             recal_interval_s: doc.f64_or("fleet.recal_interval_s", d.recal_interval_s),
             drift_err_budget: doc.f64_or("fleet.drift_err_budget", d.drift_err_budget),
+            chip_cores: usize_list(doc, "fleet.chip_cores")?,
+            noise_tiers: f64_list(doc, "fleet.noise_tiers")?,
+            control: ControlConfig::from_doc(doc),
         })
+    }
+}
+
+/// Parse a TOML/JSON array of non-negative integers (typed error on
+/// wrong element types); missing key -> empty.
+fn usize_list(doc: &TomlDoc, key: &str) -> Result<Vec<usize>> {
+    match doc.get(key) {
+        None => Ok(Vec::new()),
+        Some(TomlValue::Arr(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| Error::Config(format!("{key}: expected integers")))
+            })
+            .collect(),
+        Some(_) => Err(Error::Config(format!("{key}: expected an array"))),
+    }
+}
+
+/// Parse a TOML/JSON array of numbers; missing key -> empty.
+fn f64_list(doc: &TomlDoc, key: &str) -> Result<Vec<f64>> {
+    match doc.get(key) {
+        None => Ok(Vec::new()),
+        Some(TomlValue::Arr(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| Error::Config(format!("{key}: expected numbers")))
+            })
+            .collect(),
+        Some(_) => Err(Error::Config(format!("{key}: expected an array"))),
     }
 }
 
@@ -258,7 +373,32 @@ fn flatten_json(prefix: &str, j: &Json, out: &mut BTreeMap<String, TomlValue>) {
         Json::Bool(b) => {
             out.insert(prefix.to_string(), TomlValue::Bool(*b));
         }
-        Json::Null | Json::Arr(_) => {}
+        Json::Arr(a) => {
+            // scalar arrays map to TOML arrays (e.g. fleet.chip_cores);
+            // nested arrays/objects have no TOML-key equivalent and the
+            // whole key drops
+            let mut items = Vec::new();
+            let mut scalar = true;
+            for v in a {
+                match v {
+                    Json::Num(n) => items.push(if n.fract() == 0.0 && n.abs() < i64::MAX as f64 {
+                        TomlValue::Int(*n as i64)
+                    } else {
+                        TomlValue::Float(*n)
+                    }),
+                    Json::Str(s) => items.push(TomlValue::Str(s.clone())),
+                    Json::Bool(b) => items.push(TomlValue::Bool(*b)),
+                    Json::Null | Json::Arr(_) | Json::Obj(_) => {
+                        scalar = false;
+                        break;
+                    }
+                }
+            }
+            if scalar {
+                out.insert(prefix.to_string(), TomlValue::Arr(items));
+            }
+        }
+        Json::Null => {}
     }
 }
 
@@ -340,6 +480,12 @@ impl Config {
                 self.fleet.recal_interval_s = f;
             }
         }
+        if let Ok(v) = std::env::var("IMKA_FLEET_CONTROL_ENABLED") {
+            self.fleet.control.enabled = matches!(v.as_str(), "1" | "true" | "yes");
+        }
+        if let Ok(v) = std::env::var("IMKA_FLEET_AUTOSCALE") {
+            self.fleet.control.autoscale = matches!(v.as_str(), "1" | "true" | "yes");
+        }
         if let Ok(v) = std::env::var("IMKA_ARTIFACTS_DIR") {
             self.artifacts_dir = v;
         }
@@ -400,6 +546,65 @@ mod tests {
         assert_eq!(cfg.fleet.replication, 2);
         assert!((cfg.fleet.recal_interval_s - 30.0).abs() < 1e-12);
         assert!((cfg.fleet.drift_err_budget - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn control_defaults_are_off() {
+        let c = ControlConfig::default();
+        assert!(!c.enabled);
+        assert!(!c.autoscale);
+        assert_eq!(c.min_chips, 1);
+        assert!(c.max_chips >= c.min_chips);
+        assert!(c.scale_up_depth > c.scale_down_depth);
+        assert_eq!(FleetConfig::default().chip_cores, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn control_section_parses_from_toml() {
+        let cfg = Config::from_toml_str(
+            "[fleet]\nn_chips = 2\nchip_cores = [64, 32]\nnoise_tiers = [1.0, 2.0]\n\
+             [fleet.control]\nenabled = true\ninterval_s = 0.5\nprobe_evict_after = 3\n\
+             degrade_errors = 5\nautoscale = true\nmin_chips = 2\nmax_chips = 6\n\
+             scale_up_depth = 8.0\nscale_down_depth = 1.0\nscale_patience = 4\n",
+        )
+        .unwrap();
+        let c = &cfg.fleet.control;
+        assert!(c.enabled && c.autoscale);
+        assert!((c.interval_s - 0.5).abs() < 1e-12);
+        assert_eq!(c.probe_evict_after, 3);
+        assert_eq!(c.degrade_errors, 5);
+        assert_eq!((c.min_chips, c.max_chips), (2, 6));
+        assert!((c.scale_up_depth - 8.0).abs() < 1e-12);
+        assert!((c.scale_down_depth - 1.0).abs() < 1e-12);
+        assert_eq!(c.scale_patience, 4);
+        assert_eq!(cfg.fleet.chip_cores, vec![64, 32]);
+        assert_eq!(cfg.fleet.noise_tiers, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn control_section_parses_from_json_identically() {
+        let toml = Config::from_toml_str(
+            "[fleet]\nn_chips = 2\nchip_cores = [16, 8]\n\
+             [fleet.control]\nenabled = true\nautoscale = true\nmax_chips = 4\n",
+        )
+        .unwrap();
+        let json = Config::from_json_str(
+            r#"{"fleet":{"n_chips":2,"chip_cores":[16,8],
+                "control":{"enabled":true,"autoscale":true,"max_chips":4}}}"#,
+        )
+        .unwrap();
+        assert_eq!(toml, json);
+        assert_eq!(json.fleet.chip_cores, vec![16, 8]);
+        assert!(json.fleet.control.enabled);
+        assert_eq!(json.fleet.control.max_chips, 4);
+    }
+
+    #[test]
+    fn bad_capacity_list_is_config_error() {
+        let err = Config::from_toml_str("[fleet]\nchip_cores = [\"a\"]\n").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        let err = Config::from_toml_str("[fleet]\nchip_cores = 4\n").unwrap_err();
+        assert!(err.to_string().contains("array"));
     }
 
     #[test]

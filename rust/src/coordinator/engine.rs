@@ -12,13 +12,13 @@ use super::batcher::{run_batcher, Batch};
 use super::request::{
     KernelLane, Lane, ModeLane, PathLane, PerfMode, Request, RequestBody, Response, ResponseBody,
 };
-use super::telemetry::{ChipSnapshot, LaneSnapshot, Telemetry};
+use super::telemetry::{ChipSnapshot, FleetEventsSnapshot, LaneSnapshot, Telemetry};
 use super::tilepool::lane_omega;
 use crate::aimc::Emulator;
 use crate::config::Config;
 use crate::energy::{latency_energy, mapping_ops, Device};
 use crate::error::{Error, Result};
-use crate::fleet::{FleetPool, RecalScheduler};
+use crate::fleet::{ControlPlane, FleetPool, HealthState, RecalScheduler};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::runtime::{Input, ModelBundle, Registry};
@@ -36,6 +36,8 @@ struct Shared {
     registry: Registry,
     bundle: Option<ModelBundle>,
     pool: FleetPool,
+    /// is the fleet control plane loop running (for the health surface)
+    control_enabled: bool,
     geometries: BTreeMap<KernelLane, LaneGeometry>,
     /// emulator-programmed noisy Ω for the performer hw paths
     noisy_omega: Option<Mat>,
@@ -110,7 +112,7 @@ impl Engine {
 
         // program one Ω per feature lane present in the manifest, placed
         // across the configured fleet of chips
-        let mut pool = FleetPool::new(cfg.chip.clone(), cfg.fleet.clone(), 0xC41B);
+        let pool = FleetPool::new(cfg.chip.clone(), cfg.fleet.clone(), 0xC41B);
         let mut geometries = BTreeMap::new();
         let mut rng = Rng::new(0xCA11);
         for spec in registry.of_kind("feature_map") {
@@ -158,6 +160,7 @@ impl Engine {
             registry,
             bundle,
             pool,
+            control_enabled: cfg.fleet.control.enabled,
             geometries,
             noisy_omega,
             noisy_params,
@@ -193,11 +196,39 @@ impl Engine {
             }));
         }
 
-        // background drift-aware recalibration: advance the fleet clock in
-        // wall time and reprogram chips whose estimated drift error has
-        // crossed the budget. One chip is rewritten at a time, so replicas
-        // keep serving.
-        if cfg.fleet.recal_interval_s > 0.0 {
+        // background supervision. With the control plane enabled, one
+        // loop runs the full tick (health probes + eviction/re-placement,
+        // drift recalibration behind a Draining flag, queue-driven
+        // autoscaling); otherwise the PR-2 recal-only loop is kept. In
+        // both cases the fleet clock advances in wall time and at most
+        // one chip is locked for rewriting at a time, so replicas keep
+        // serving throughout.
+        if cfg.fleet.control.enabled {
+            let shared = shared.clone();
+            let stop_c = stop.clone();
+            let interval = cfg.fleet.control.interval_s.max(0.05);
+            let mut plane = ControlPlane::new(&cfg.fleet, &cfg.chip);
+            threads.push(std::thread::spawn(move || {
+                let mut last = Instant::now();
+                while !stop_c.load(Ordering::Relaxed) {
+                    // short sleeps keep shutdown latency bounded
+                    std::thread::sleep(Duration::from_millis(50));
+                    let dt = last.elapsed().as_secs_f64();
+                    if dt < interval {
+                        continue;
+                    }
+                    last = Instant::now();
+                    shared.pool.advance_clock(dt);
+                    match plane.tick(&shared.pool) {
+                        Ok(report) if !report.is_quiet() => {
+                            eprintln!("fleet control: {report}");
+                        }
+                        Ok(_) => {}
+                        Err(e) => eprintln!("fleet control tick failed: {e}"),
+                    }
+                }
+            }));
+        } else if cfg.fleet.recal_interval_s > 0.0 {
             let shared = shared.clone();
             let stop_r = stop.clone();
             let interval = cfg.fleet.recal_interval_s;
@@ -328,8 +359,14 @@ impl StatsHandle {
         self.shared.pool.chip_snapshots()
     }
 
+    /// Active (non-evicted) chips.
     pub fn n_chips(&self) -> usize {
         self.shared.pool.n_chips()
+    }
+
+    /// All slots ever created, including evicted tombstones.
+    pub fn total_slots(&self) -> usize {
+        self.shared.pool.total_slots()
     }
 
     pub fn cores_used(&self) -> usize {
@@ -342,6 +379,36 @@ impl StatsHandle {
 
     pub fn total_requests(&self) -> u64 {
         self.shared.telemetry.total_requests()
+    }
+
+    /// Is the background control-plane loop running?
+    pub fn control_enabled(&self) -> bool {
+        self.shared.control_enabled
+    }
+
+    /// Control-plane event counters (evictions, scale events, drains).
+    pub fn fleet_events(&self) -> FleetEventsSnapshot {
+        self.shared.pool.events()
+    }
+
+    /// Mark a chip `Draining` (the `drain` TCP verb): traffic is steered
+    /// to replicas on other chips while the chip stays programmed.
+    pub fn drain_chip(&self, chip: usize) -> Result<HealthState> {
+        if chip >= self.shared.pool.total_slots() {
+            return Err(Error::Coordinator(format!("no chip {chip}")));
+        }
+        self.shared.pool.drain_chip(chip)?;
+        Ok(self.shared.pool.chip_health(chip))
+    }
+
+    /// Return a drained chip to service (the `drain` verb with
+    /// `"undrain": true`).
+    pub fn undrain_chip(&self, chip: usize) -> Result<HealthState> {
+        if chip >= self.shared.pool.total_slots() {
+            return Err(Error::Coordinator(format!("no chip {chip}")));
+        }
+        self.shared.pool.undrain_chip(chip)?;
+        Ok(self.shared.pool.chip_health(chip))
     }
 }
 

@@ -36,5 +36,5 @@ pub mod tilepool;
 pub use engine::{Engine, StatsHandle, Submitter};
 pub use request::{PathKind, PerfMode, Request, RequestBody, Response, ResponseBody};
 pub use server::{Client, Server};
-pub use telemetry::{ChipSnapshot, LaneSnapshot, Telemetry};
+pub use telemetry::{ChipSnapshot, FleetEventsSnapshot, LaneSnapshot, Telemetry};
 pub use tilepool::TilePool;

@@ -4,6 +4,8 @@
 //!   {"type":"features","kernel":"rbf","path":"analog","x":[...]}
 //!   {"type":"performer","mode":"hw_attn","tokens":[...]}
 //!   {"type":"stats"}   -> per-lane latency/energy + per-chip fleet stats
+//!   {"type":"health"}  -> per-chip health states + control-plane events
+//!   {"type":"drain","chip":N[,"undrain":true]} -> steer traffic off/on a chip
 //!   {"type":"ping"}
 //! Responses: {"ok":true, ...} | {"ok":false,"error":"..."}
 
@@ -159,10 +161,12 @@ fn stats_json(stats: &StatsHandle) -> Json {
     let chips = stats.chips().into_iter().map(|c| {
         obj(vec![
             ("chip", num(c.chip as f64)),
+            ("health", s(c.health)),
             ("cores_used", num(c.cores_used as f64)),
             ("utilization", num(c.utilization)),
             ("queue_depth", num(c.queue_depth as f64)),
             ("served", num(c.served as f64)),
+            ("errors", num(c.errors as f64)),
             ("recals", num(c.recals as f64)),
             ("age_s", num(c.age_s)),
             ("drift_err_estimate", num(c.drift_err_estimate)),
@@ -175,11 +179,45 @@ fn stats_json(stats: &StatsHandle) -> Json {
             "fleet",
             obj(vec![
                 ("n_chips", num(stats.n_chips() as f64)),
+                ("total_slots", num(stats.total_slots() as f64)),
                 ("cores_used", num(stats.cores_used() as f64)),
                 ("utilization", num(stats.utilization())),
             ]),
         ),
         ("lanes", arr(lanes)),
+        ("chips", arr(chips)),
+    ])
+}
+
+/// The `health` response: the control plane's view — per-chip health
+/// states, error/probe counters, and fleet-wide event totals.
+fn health_json(stats: &StatsHandle) -> Json {
+    let chips = stats.chips().into_iter().map(|c| {
+        obj(vec![
+            ("chip", num(c.chip as f64)),
+            ("health", s(c.health)),
+            ("queue_depth", num(c.queue_depth as f64)),
+            ("errors", num(c.errors as f64)),
+            ("recals", num(c.recals as f64)),
+            ("age_s", num(c.age_s)),
+            ("drift_err_estimate", num(c.drift_err_estimate)),
+        ])
+    });
+    let ev = stats.fleet_events();
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("control_enabled", Json::Bool(stats.control_enabled())),
+        ("n_chips", num(stats.n_chips() as f64)),
+        ("total_slots", num(stats.total_slots() as f64)),
+        (
+            "events",
+            obj(vec![
+                ("evictions", num(ev.evictions as f64)),
+                ("scale_ups", num(ev.scale_ups as f64)),
+                ("scale_downs", num(ev.scale_downs as f64)),
+                ("drains", num(ev.drains as f64)),
+            ]),
+        ),
         ("chips", arr(chips)),
     ])
 }
@@ -190,6 +228,32 @@ fn parse_and_dispatch(line: &str, sub: &Submitter, stats: &StatsHandle) -> Resul
     match ty {
         "ping" => Ok(obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
         "stats" => Ok(stats_json(stats)),
+        "health" => Ok(health_json(stats)),
+        "drain" => {
+            // state-changing verb: reject negatives/fractions instead of
+            // letting `as usize` truncate them onto chip 0
+            let raw = req
+                .req("chip")?
+                .as_f64()
+                .ok_or_else(|| Error::Parse("chip must be an index".into()))?;
+            if raw < 0.0 || raw.fract() != 0.0 {
+                return Err(Error::Parse(format!(
+                    "chip must be a non-negative integer, got {raw}"
+                )));
+            }
+            let chip = raw as usize;
+            let undrain = matches!(req.get("undrain"), Some(Json::Bool(true)));
+            let state = if undrain {
+                stats.undrain_chip(chip)?
+            } else {
+                stats.drain_chip(chip)?
+            };
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("chip", num(chip as f64)),
+                ("health", s(state.as_str())),
+            ]))
+        }
         "features" => {
             let kernel = Kernel::parse(req.req_str("kernel")?)
                 .ok_or_else(|| Error::Parse("bad kernel".into()))?;
@@ -334,6 +398,30 @@ mod tests {
         assert!(!chips.is_empty());
         assert!(chips[0].get("served").unwrap().as_usize().unwrap() >= 1);
         assert!(!resp.get("lanes").unwrap().as_arr().unwrap().is_empty());
+
+        // health verb: per-chip states + control-plane event counters
+        let resp = client.call(&Json::parse(r#"{"type":"health"}"#).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("control_enabled"), Some(&Json::Bool(false)));
+        let chips = resp.get("chips").unwrap().as_arr().unwrap();
+        assert_eq!(chips[0].get("health").unwrap().as_str(), Some("healthy"));
+        assert!(resp.get("events").unwrap().get("evictions").is_some());
+
+        // drain steers the chip out of service; undrain restores it
+        let resp = client
+            .call(&Json::parse(r#"{"type":"drain","chip":0}"#).unwrap())
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("health").unwrap().as_str(), Some("draining"));
+        let resp = client
+            .call(&Json::parse(r#"{"type":"drain","chip":0,"undrain":true}"#).unwrap())
+            .unwrap();
+        assert_eq!(resp.get("health").unwrap().as_str(), Some("healthy"));
+        // draining a nonexistent chip is a clean error
+        let resp = client
+            .call(&Json::parse(r#"{"type":"drain","chip":99}"#).unwrap())
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
 
         // unknown type -> clean error
         let resp = client.call(&Json::parse(r#"{"type":"wat"}"#).unwrap()).unwrap();

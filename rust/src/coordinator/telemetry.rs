@@ -28,20 +28,39 @@ pub struct Telemetry {
 pub struct ChipSnapshot {
     /// fleet chip index
     pub chip: usize,
+    /// health state label (`healthy`/`degraded`/`draining`/`joining`/
+    /// `evicted`, from the control plane's state machine)
+    pub health: &'static str,
     /// crossbar cores programmed on this chip
     pub cores_used: usize,
-    /// cores_used / cores, in [0,1]
+    /// cores_used / this chip's capacity, in [0,1]
     pub utilization: f64,
     /// analog MVMs queued on or executing against this chip right now
     pub queue_depth: usize,
     /// analog MVMs completed by this chip
     pub served: u64,
+    /// failed MVMs/heartbeat probes on this chip since boot
+    pub errors: u64,
     /// recalibrations (full reprogram cycles) this chip has undergone
     pub recals: u64,
     /// seconds of fleet-clock time since the last (re)programming
     pub age_s: f64,
     /// analytic drift-error estimate at the current age
     pub drift_err_estimate: f64,
+}
+
+/// Control-plane event counters surfaced by the server's `health` verb
+/// (produced by `fleet::FleetPool::events`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetEventsSnapshot {
+    /// chips evicted (health monitor or explicit)
+    pub evictions: u64,
+    /// chips added + populated by the autoscaler
+    pub scale_ups: u64,
+    /// chips drained + retired by the autoscaler
+    pub scale_downs: u64,
+    /// manual drain requests honored
+    pub drains: u64,
 }
 
 /// Snapshot for one lane.

@@ -1,0 +1,130 @@
+//! Queue-depth autoscaler: grow the fleet under sustained load, shrink
+//! it when idle, with hysteresis so transient bursts don't flap chips.
+//!
+//! The signal is the telemetry the `stats` response already exposes —
+//! per-chip `queue_depth` (in-flight analog MVMs) summed over the fleet
+//! and normalized by the number of active chips. Depth above
+//! `scale_up_depth` for `patience` consecutive observations adds a chip;
+//! depth below `scale_down_depth` for `patience` observations drains and
+//! retires one. Both streaks reset on any action or on a
+//! non-qualifying observation, so the two thresholds plus patience form
+//! a classic hysteresis band.
+
+/// What the autoscaler wants done after an observation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// add one chip and program lane replicas onto it
+    Up,
+    /// drain + retire one chip
+    Down,
+}
+
+/// Hysteresis state machine over the queue-depth signal.
+pub struct Autoscaler {
+    /// fleet never shrinks below this
+    pub min_chips: usize,
+    /// fleet never grows beyond this
+    pub max_chips: usize,
+    /// mean in-flight MVMs per active chip that signals saturation
+    pub scale_up_depth: f64,
+    /// mean in-flight MVMs per active chip that signals idleness
+    pub scale_down_depth: f64,
+    /// consecutive qualifying observations before acting
+    pub patience: usize,
+    up_streak: usize,
+    down_streak: usize,
+}
+
+impl Autoscaler {
+    pub fn new(
+        min_chips: usize,
+        max_chips: usize,
+        scale_up_depth: f64,
+        scale_down_depth: f64,
+        patience: usize,
+    ) -> Autoscaler {
+        let min_chips = min_chips.max(1);
+        Autoscaler {
+            min_chips,
+            max_chips: max_chips.max(min_chips),
+            scale_up_depth,
+            scale_down_depth,
+            patience: patience.max(1),
+            up_streak: 0,
+            down_streak: 0,
+        }
+    }
+
+    /// Feed one observation: total in-flight MVMs across the fleet and
+    /// the current number of active chips. Returns the action to take
+    /// (already bounds-checked against `[min_chips, max_chips]`).
+    pub fn observe(&mut self, total_queue_depth: usize, active_chips: usize) -> ScaleDecision {
+        let per_chip = total_queue_depth as f64 / active_chips.max(1) as f64;
+        if per_chip > self.scale_up_depth {
+            self.up_streak += 1;
+            self.down_streak = 0;
+        } else if per_chip < self.scale_down_depth {
+            self.down_streak += 1;
+            self.up_streak = 0;
+        } else {
+            self.up_streak = 0;
+            self.down_streak = 0;
+        }
+        if self.up_streak >= self.patience && active_chips < self.max_chips {
+            self.up_streak = 0;
+            self.down_streak = 0;
+            return ScaleDecision::Up;
+        }
+        if self.down_streak >= self.patience && active_chips > self.min_chips {
+            self.up_streak = 0;
+            self.down_streak = 0;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sustained_depth_scales_up_once() {
+        let mut a = Autoscaler::new(1, 4, 2.0, 0.5, 3);
+        // two hot ticks are not enough
+        assert_eq!(a.observe(10, 2), ScaleDecision::Hold);
+        assert_eq!(a.observe(10, 2), ScaleDecision::Hold);
+        // third sustained tick fires, and the streak resets after acting
+        assert_eq!(a.observe(10, 2), ScaleDecision::Up);
+        assert_eq!(a.observe(10, 3), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn idle_fleet_scales_down_to_min() {
+        let mut a = Autoscaler::new(2, 4, 2.0, 0.5, 2);
+        assert_eq!(a.observe(0, 3), ScaleDecision::Hold);
+        assert_eq!(a.observe(0, 3), ScaleDecision::Down);
+        // at min_chips the decision is suppressed even when idle
+        assert_eq!(a.observe(0, 2), ScaleDecision::Hold);
+        assert_eq!(a.observe(0, 2), ScaleDecision::Hold);
+        assert_eq!(a.observe(0, 2), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn bursts_inside_the_band_reset_streaks() {
+        let mut a = Autoscaler::new(1, 4, 2.0, 0.5, 2);
+        assert_eq!(a.observe(10, 2), ScaleDecision::Hold);
+        // observation in the hysteresis band resets the up streak
+        assert_eq!(a.observe(2, 2), ScaleDecision::Hold);
+        assert_eq!(a.observe(10, 2), ScaleDecision::Hold);
+        assert_eq!(a.observe(10, 2), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn max_chips_caps_growth() {
+        let mut a = Autoscaler::new(1, 2, 1.0, 0.1, 1);
+        assert_eq!(a.observe(50, 2), ScaleDecision::Hold);
+        assert_eq!(a.observe(50, 2), ScaleDecision::Hold);
+    }
+}

@@ -1,0 +1,209 @@
+//! Per-chip health state machine and the monitor that drives it.
+//!
+//! States and transitions:
+//!
+//! ```text
+//!   Joining ──(lanes programmed)──▶ Healthy ◀──(probe ok, no errors)── Degraded
+//!                                    │  ▲                                 │
+//!                 (recal / drain req)│  │(recal done / undrain)           │
+//!                                    ▼  │                                 │
+//!                                  Draining                               │
+//!                                    │                                    │
+//!                    (probe dead)────┴──────▶ Evicted ◀──(probes keep ────┘
+//!                                                          failing)
+//! ```
+//!
+//! - `Joining`: created by the autoscaler, lanes still being programmed;
+//!   never routed to.
+//! - `Healthy`: full member of every replica set.
+//! - `Degraded`: missed a heartbeat or crossed the per-tick MVM error
+//!   threshold; routed to only when no `Healthy` replica exists.
+//! - `Draining`: traffic is steered away *before* a slow operation takes
+//!   the chip lock (recalibration) or ahead of removal (scale-down,
+//!   manual `drain` request). Routable as a last resort so a fully
+//!   draining replica set does not black-hole requests.
+//! - `Evicted`: permanently out; its shards are re-placed on survivors
+//!   and the slot index becomes a tombstone (indices are stable).
+//!
+//! The *authoritative* state is an `AtomicU8` on the pool's `ChipSlot`
+//! (read lock-free by the router on every request); this module owns the
+//! transition logic and the probe/error bookkeeping between ticks.
+
+use super::super::pool::FleetPool;
+
+/// Lifecycle state of one fleet chip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum HealthState {
+    /// added at runtime, lanes still being programmed — not routable
+    Joining = 0,
+    /// serving normally
+    Healthy = 1,
+    /// failing probes or erroring MVMs — routed to only as a fallback
+    Degraded = 2,
+    /// being vacated (recal, scale-down, manual drain) — last-resort only
+    Draining = 3,
+    /// removed from the fleet; slot is a tombstone
+    Evicted = 4,
+}
+
+impl HealthState {
+    pub fn from_u8(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Joining,
+            1 => HealthState::Healthy,
+            2 => HealthState::Degraded,
+            3 => HealthState::Draining,
+            _ => HealthState::Evicted,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthState::Joining => "joining",
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Draining => "draining",
+            HealthState::Evicted => "evicted",
+        }
+    }
+
+    /// Still part of the fleet (occupies planner capacity, counted in
+    /// `n_chips`, probed by the monitor)?
+    pub fn active(&self) -> bool {
+        !matches!(self, HealthState::Evicted)
+    }
+
+    /// May the router send ordinary traffic here?
+    pub fn routable(&self) -> bool {
+        matches!(self, HealthState::Healthy)
+    }
+
+    /// May the router fall back to this chip when no `Healthy` replica
+    /// exists? (`Degraded` before `Draining`; never `Joining`/`Evicted`.)
+    pub fn fallback_order(&self) -> Option<u8> {
+        match self {
+            HealthState::Healthy => Some(0),
+            HealthState::Degraded => Some(1),
+            HealthState::Draining => Some(2),
+            HealthState::Joining | HealthState::Evicted => None,
+        }
+    }
+}
+
+/// Heartbeat/error monitor: walks the fleet once per control tick,
+/// degrades chips that miss probes or burn errors, recovers them when
+/// they come back, and nominates chips for eviction after
+/// `evict_after_probes` consecutive dead heartbeats.
+pub struct HealthMonitor {
+    /// consecutive failed probes before a chip is nominated for eviction
+    pub evict_after_probes: usize,
+    /// MVM errors within one tick that degrade a chip
+    pub degrade_errors: u64,
+    /// per-chip consecutive failed probe count
+    probe_fails: Vec<usize>,
+    /// per-chip error counter value at the previous tick
+    last_errors: Vec<u64>,
+}
+
+impl HealthMonitor {
+    pub fn new(evict_after_probes: usize, degrade_errors: u64) -> HealthMonitor {
+        HealthMonitor {
+            evict_after_probes: evict_after_probes.max(1),
+            degrade_errors: degrade_errors.max(1),
+            probe_fails: Vec::new(),
+            last_errors: Vec::new(),
+        }
+    }
+
+    /// Consecutive failed probes currently recorded for chip `i`.
+    pub fn probe_fails(&self, i: usize) -> usize {
+        self.probe_fails.get(i).copied().unwrap_or(0)
+    }
+
+    /// One monitoring pass. Returns the chips whose heartbeat has been
+    /// dead for `evict_after_probes` consecutive ticks — the caller
+    /// (control plane) evicts them and re-places their shards.
+    pub fn tick(&mut self, pool: &FleetPool) -> Vec<usize> {
+        let n = pool.total_slots();
+        self.probe_fails.resize(n, 0);
+        self.last_errors.resize(n, 0);
+        let mut to_evict = Vec::new();
+        for i in 0..n {
+            let state = pool.chip_health(i);
+            if !state.active() {
+                continue;
+            }
+            let alive = pool.probe_chip(i);
+            let errors = pool.chip_errors(i);
+            let new_errors = errors.saturating_sub(self.last_errors[i]);
+            self.last_errors[i] = errors;
+            if alive {
+                self.probe_fails[i] = 0;
+            } else {
+                self.probe_fails[i] += 1;
+                if self.probe_fails[i] >= self.evict_after_probes {
+                    to_evict.push(i);
+                    continue;
+                }
+            }
+            match state {
+                // population (Joining→Healthy) and drain exits are owned
+                // by the operations that set those states
+                HealthState::Joining | HealthState::Draining => {}
+                HealthState::Healthy => {
+                    if !alive || new_errors >= self.degrade_errors {
+                        pool.set_chip_health(i, HealthState::Degraded);
+                    }
+                }
+                HealthState::Degraded => {
+                    if alive && new_errors == 0 {
+                        pool.set_chip_health(i, HealthState::Healthy);
+                    }
+                }
+                HealthState::Evicted => unreachable!("inactive states skipped"),
+            }
+        }
+        to_evict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_predicates() {
+        assert!(HealthState::Healthy.routable());
+        for s in [
+            HealthState::Joining,
+            HealthState::Degraded,
+            HealthState::Draining,
+            HealthState::Evicted,
+        ] {
+            assert!(!s.routable(), "{s:?}");
+        }
+        assert!(HealthState::Draining.active());
+        assert!(!HealthState::Evicted.active());
+        // fallback prefers degraded over draining, never joining/evicted
+        assert!(
+            HealthState::Degraded.fallback_order().unwrap()
+                < HealthState::Draining.fallback_order().unwrap()
+        );
+        assert_eq!(HealthState::Joining.fallback_order(), None);
+        assert_eq!(HealthState::Evicted.fallback_order(), None);
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        for s in [
+            HealthState::Joining,
+            HealthState::Healthy,
+            HealthState::Degraded,
+            HealthState::Draining,
+            HealthState::Evicted,
+        ] {
+            assert_eq!(HealthState::from_u8(s as u8), s);
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Fleet control plane: the supervisory layer over the [`FleetPool`]
+//! data plane.
+//!
+//! PR 2 gave the fleet a *data plane* — sharded placement, replica
+//! routing, drift-aware recalibration — but the fleet size was fixed at
+//! boot and a dead or recalibrating chip silently ate requests. This
+//! subsystem adds the pieces a long-lived deployment needs:
+//!
+//! ```text
+//!                 ControlPlane::tick (engine background loop)
+//!                ┌──────────────┬──────────────┬──────────────┐
+//!                ▼              ▼              ▼              ▼
+//!          HealthMonitor   failover      RecalScheduler   Autoscaler
+//!          (heartbeats,    (re-place     (sets Draining   (queue-depth
+//!           error rates)    lost shards)  before locking)  grow/shrink)
+//!                └──────────────┴──────┬───────┴──────────────┘
+//!                                      ▼
+//!                            FleetPool (data plane)
+//! ```
+//!
+//! - [`health`] — the per-chip health state machine
+//!   (`Joining → Healthy ⇄ Degraded → Evicted`, with `Draining` set by
+//!   the recal scheduler and manual drain requests) driven by heartbeat
+//!   probes and per-chip MVM error counters. The authoritative state
+//!   lives in an atomic on each [`ChipSlot`] so the router reads it
+//!   lock-free on every request.
+//! - [`autoscale`] — a queue-depth autoscaler with hysteresis: sustained
+//!   per-chip queue depth above the high-water mark grows the fleet,
+//!   sustained idle shrinks it (draining the victim chip first), within
+//!   `[min_chips, max_chips]`.
+//! - [`plane`] — [`ControlPlane`], the tick loop gluing the monitors to
+//!   the pool's eviction / re-placement / scale primitives, spawned by
+//!   `coordinator::Engine` when `[fleet.control] enabled = true`.
+//!
+//! Eviction and re-placement themselves are [`FleetPool`] primitives
+//! (`evict_chip`, `add_chip`/`populate_chip`, `retire_chip`) because they
+//! must coordinate with the pool's own locks; the control plane decides
+//! *when* to invoke them.
+//!
+//! [`FleetPool`]: super::pool::FleetPool
+//! [`ChipSlot`]: super::pool::FleetPool
+
+pub mod autoscale;
+pub mod health;
+pub mod plane;
+
+pub use autoscale::{Autoscaler, ScaleDecision};
+pub use health::{HealthMonitor, HealthState};
+pub use plane::{ControlPlane, TickReport};

@@ -1,0 +1,147 @@
+//! [`ControlPlane`] — the tick loop that turns monitor signals into data
+//! plane actions: evict dead chips and re-place their shards, reprogram
+//! drifted chips (behind a `Draining` flag), and grow/shrink the fleet
+//! from queue-depth telemetry.
+//!
+//! One tick runs, in order:
+//! 1. **Health**: probe every active chip, degrade/recover per the error
+//!    counters, and evict chips whose heartbeat stayed dead — eviction
+//!    re-places lost shard replicas onto survivors without dropping
+//!    in-flight traffic (requests retry across replicas).
+//! 2. **Recalibration**: the PR-2 drift scheduler, which now marks a
+//!    chip `Draining` before taking its lock so the router steers away
+//!    ahead of the multi-second GDP rewrite.
+//! 3. **Autoscaling**: observe the fleet-wide queue depth; `Up` spawns a
+//!    `Joining` chip and programs lane replicas onto it, `Down` drains
+//!    the least-loaded chip and retires it once idle.
+//!
+//! The engine runs one `ControlPlane` on a background thread
+//! (`[fleet.control] enabled = true`); tests drive `tick_with_depth`
+//! directly with synthetic queue depths — it is the exact code path the
+//! live loop takes, minus the wall-clock sampling.
+
+use super::super::placement::ChipCapacity;
+use super::super::pool::FleetPool;
+use super::super::recal::RecalScheduler;
+use super::autoscale::{Autoscaler, ScaleDecision};
+use super::health::{HealthMonitor, HealthState};
+use crate::config::{ChipConfig, FleetConfig};
+use crate::error::Result;
+
+/// What one control tick did (empty vectors = quiet tick).
+#[derive(Clone, Debug, Default)]
+pub struct TickReport {
+    /// chips evicted by the health monitor this tick
+    pub evicted: Vec<usize>,
+    /// chips reprogrammed by the drift scheduler
+    pub recalibrated: Vec<usize>,
+    /// chips added by the autoscaler
+    pub added: Vec<usize>,
+    /// chips retired by the autoscaler
+    pub retired: Vec<usize>,
+}
+
+impl TickReport {
+    pub fn is_quiet(&self) -> bool {
+        self.evicted.is_empty()
+            && self.recalibrated.is_empty()
+            && self.added.is_empty()
+            && self.retired.is_empty()
+    }
+}
+
+impl std::fmt::Display for TickReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut parts = Vec::new();
+        if !self.evicted.is_empty() {
+            parts.push(format!("evicted {:?}", self.evicted));
+        }
+        if !self.recalibrated.is_empty() {
+            parts.push(format!("recalibrated {:?}", self.recalibrated));
+        }
+        if !self.added.is_empty() {
+            parts.push(format!("added {:?}", self.added));
+        }
+        if !self.retired.is_empty() {
+            parts.push(format!("retired {:?}", self.retired));
+        }
+        write!(f, "{}", parts.join(", "))
+    }
+}
+
+/// Supervisory loop over a [`FleetPool`].
+pub struct ControlPlane {
+    monitor: HealthMonitor,
+    recal: RecalScheduler,
+    autoscaler: Option<Autoscaler>,
+    /// capacity descriptor for chips the autoscaler adds
+    new_chip_capacity: ChipCapacity,
+}
+
+impl ControlPlane {
+    pub fn new(fleet: &FleetConfig, chip: &ChipConfig) -> ControlPlane {
+        let c = &fleet.control;
+        ControlPlane {
+            monitor: HealthMonitor::new(c.probe_evict_after, c.degrade_errors),
+            recal: RecalScheduler::new(fleet.drift_err_budget),
+            autoscaler: c.autoscale.then(|| {
+                Autoscaler::new(
+                    c.min_chips,
+                    c.max_chips,
+                    c.scale_up_depth,
+                    c.scale_down_depth,
+                    c.scale_patience,
+                )
+            }),
+            new_chip_capacity: ChipCapacity { cores: chip.cores, noise_tier: 1.0 },
+        }
+    }
+
+    /// One control pass using the pool's live queue-depth telemetry.
+    pub fn tick(&mut self, pool: &FleetPool) -> Result<TickReport> {
+        self.tick_with_depth(pool, pool.total_queue_depth())
+    }
+
+    /// One control pass with an explicit queue-depth observation (tests
+    /// feed synthetic depths; `tick` feeds the live measurement).
+    pub fn tick_with_depth(&mut self, pool: &FleetPool, queue_depth: usize) -> Result<TickReport> {
+        let mut report = TickReport::default();
+
+        // 1. health: probe, degrade/recover, evict the dead
+        for chip in self.monitor.tick(pool) {
+            pool.evict_chip(chip)?;
+            report.evicted.push(chip);
+        }
+
+        // 2. drift recalibration (marks chips Draining while rewriting)
+        report.recalibrated = self.recal.tick(pool)?;
+
+        // 3. queue-driven autoscaling
+        if let Some(scaler) = &mut self.autoscaler {
+            match scaler.observe(queue_depth, pool.n_chips()) {
+                ScaleDecision::Hold => {}
+                ScaleDecision::Up => {
+                    let chip = pool.add_chip(self.new_chip_capacity.clone());
+                    pool.populate_chip(chip)?;
+                    report.added.push(chip);
+                }
+                ScaleDecision::Down => {
+                    if let Some(victim) = scale_down_victim(pool) {
+                        pool.retire_chip(victim)?;
+                        report.retired.push(victim);
+                    }
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Pick the chip the autoscaler should retire: a `Healthy` chip with the
+/// lightest queue, ties broken toward the *highest* index so late-added
+/// surge chips leave before the boot fleet.
+fn scale_down_victim(pool: &FleetPool) -> Option<usize> {
+    (0..pool.total_slots())
+        .filter(|&i| pool.chip_health(i) == HealthState::Healthy)
+        .min_by_key(|&i| (pool.chip_queue_depth(i), usize::MAX - i))
+}

@@ -36,13 +36,21 @@
 //!   `coordinator::Engine` (config section `[fleet]`, CLI flags
 //!   `--n-chips/--placement/--router/...`, and the server's `stats`
 //!   response).
+//! - [`control`] — the supervisory control plane over the data plane
+//!   above: per-chip health state machine driven by heartbeats and
+//!   error counters, an eviction/re-placement engine for chips that
+//!   die, draining-aware routing for recalibration and scale-down, and
+//!   a queue-depth autoscaler that changes `n_chips` at runtime
+//!   (config section `[fleet.control]`, server `health`/`drain` verbs).
 
+pub mod control;
 pub mod placement;
 pub mod pool;
 pub mod recal;
 pub mod router;
 
-pub use placement::{LanePlan, PlacementPolicy, Planner, ShardPlan};
+pub use control::{Autoscaler, ControlPlane, HealthMonitor, HealthState, ScaleDecision, TickReport};
+pub use placement::{ChipCapacity, LanePlan, PlacementPolicy, Planner, ShardPlan};
 pub use pool::{FleetPool, LaneMapping};
 pub use recal::{age_at_budget, estimated_drift_error, RecalScheduler};
 pub use router::{Router, RouterPolicy};

@@ -1,5 +1,6 @@
 //! Sharded lane placement: decides which chips of the fleet hold which
-//! column shards of each feature lane's Ω, with configurable replication.
+//! column shards of each feature lane's Ω, with configurable replication
+//! and per-chip capacity descriptors.
 //!
 //! An Ω (d × m) that exceeds one chip's crossbar budget is split along
 //! columns into shards aligned to crossbar column blocks; an analog MVM
@@ -8,9 +9,22 @@
 //! disjoint slice of the output, so recombination is a copy, not a sum,
 //! and per-shard error matches the whole-matrix error).
 //!
+//! Real deployments mix chip generations, so each chip carries a
+//! [`ChipCapacity`] — core count and a noise tier — and the cost model
+//! places replicas on the chip with the lowest *fractional* load
+//! (`(used + tiles) / cores`), preferring quieter tiers on ties. A small
+//! chip therefore is never over-packed just because it has the lowest
+//! absolute usage, and for uniform fleets the ranking reduces to the
+//! original least-loaded rule.
+//!
 //! Planning is purely arithmetic (no RNG): the same lane geometry, fleet
-//! size and policy always yield the same plan, which keeps every chip of
-//! a restarted fleet bit-compatible with its predecessor's layout.
+//! capacities and policy always yield the same plan, which keeps every
+//! chip of a restarted fleet bit-compatible with its predecessor's
+//! layout. The planner also supports runtime topology changes — chips
+//! added by the autoscaler ([`Planner::add_chip`]), chips leaving the
+//! fleet ([`Planner::set_active`]), and per-shard replica moves used by
+//! the control plane's failover engine ([`Planner::replace_replica`],
+//! [`Planner::place_replica_on`]).
 
 use std::collections::BTreeMap;
 
@@ -48,6 +62,23 @@ impl PlacementPolicy {
     }
 }
 
+/// Capacity descriptor of one fleet chip (heterogeneous fleets mix chip
+/// generations with different core counts and noise grades).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipCapacity {
+    /// crossbar cores available on this chip
+    pub cores: usize,
+    /// relative noise grade; the cost model prefers lower tiers on load
+    /// ties (1.0 = baseline generation)
+    pub noise_tier: f64,
+}
+
+impl ChipCapacity {
+    pub fn uniform(chip: &ChipConfig) -> ChipCapacity {
+        ChipCapacity { cores: chip.cores, noise_tier: 1.0 }
+    }
+}
+
 /// One column shard of a lane's Ω and the chips holding its replicas.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardPlan {
@@ -64,6 +95,8 @@ pub struct ShardPlan {
 pub struct LanePlan {
     pub d: usize,
     pub m: usize,
+    /// within-chip copy count each replica is programmed with
+    pub core_replication: usize,
     pub shards: Vec<ShardPlan>,
 }
 
@@ -77,13 +110,14 @@ impl LanePlan {
 /// Whole-fleet placement state: plans lanes one at a time against the
 /// running per-chip core budget (the serving engine programs lanes in
 /// manifest order, which is deterministic).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Planner {
     policy: PlacementPolicy,
-    n_chips: usize,
-    cores: usize,
     rows: usize,
     cols: usize,
+    caps: Vec<ChipCapacity>,
+    /// chips still part of the fleet (false = drained/evicted tombstone)
+    active: Vec<bool>,
     /// cores already committed per chip
     used: Vec<usize>,
     /// plans accepted so far (for introspection / determinism checks)
@@ -91,15 +125,28 @@ pub struct Planner {
 }
 
 impl Planner {
+    /// Uniform fleet: `n_chips` identical chips (the common case and the
+    /// PR-2 behaviour).
     pub fn new(policy: PlacementPolicy, n_chips: usize, chip: &ChipConfig) -> Planner {
-        let n_chips = n_chips.max(1);
+        let n = n_chips.max(1);
+        Planner::with_capacities(policy, vec![ChipCapacity::uniform(chip); n], chip)
+    }
+
+    /// Heterogeneous fleet: one capacity descriptor per chip.
+    pub fn with_capacities(
+        policy: PlacementPolicy,
+        caps: Vec<ChipCapacity>,
+        chip: &ChipConfig,
+    ) -> Planner {
+        let caps = if caps.is_empty() { vec![ChipCapacity::uniform(chip)] } else { caps };
+        let n = caps.len();
         Planner {
             policy,
-            n_chips,
-            cores: chip.cores,
             rows: chip.rows,
             cols: chip.cols,
-            used: vec![0; n_chips],
+            caps,
+            active: vec![true; n],
+            used: vec![0; n],
             lanes: BTreeMap::new(),
         }
     }
@@ -109,13 +156,77 @@ impl Planner {
         &self.used
     }
 
+    pub fn capacities(&self) -> &[ChipCapacity] {
+        &self.caps
+    }
+
+    /// Register a chip added at runtime; returns its index.
+    pub fn add_chip(&mut self, cap: ChipCapacity) -> usize {
+        self.caps.push(cap);
+        self.active.push(true);
+        self.used.push(0);
+        self.caps.len() - 1
+    }
+
+    /// Mark a chip (in)eligible for new placements. Indices are stable:
+    /// an evicted chip becomes an inactive tombstone, never removed.
+    pub fn set_active(&mut self, chip: usize, active: bool) {
+        if chip < self.active.len() {
+            self.active[chip] = active;
+        }
+    }
+
+    pub fn is_active(&self, chip: usize) -> bool {
+        self.active.get(chip).copied().unwrap_or(false)
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    /// Cores one replica of shard `s` of `plan` occupies.
+    pub fn shard_tiles(&self, plan: &LanePlan, s: usize) -> usize {
+        let row_blocks = plan.d.div_ceil(self.rows);
+        let blocks = (plan.shards[s].col1 - plan.shards[s].col0).div_ceil(self.cols);
+        row_blocks * blocks * plan.core_replication.max(1)
+    }
+
+    /// Cost-model pick: the active chip, not in `exclude`, with room for
+    /// `tiles`, minimizing fractional load `(used + tiles) / cores`;
+    /// ties prefer the lower noise tier, then the lower index.
+    fn pick_chip(&self, tiles: usize, exclude: &[usize]) -> Option<usize> {
+        (0..self.caps.len())
+            .filter(|c| {
+                self.active[*c]
+                    && !exclude.contains(c)
+                    && self.used[*c] + tiles <= self.caps[*c].cores
+            })
+            .min_by_key(|&c| {
+                // fixed-point keys: fractional load then noise tier
+                let load =
+                    ((self.used[c] + tiles) * 1_000_000 / self.caps[c].cores.max(1)) as u64;
+                let tier = (self.caps[c].noise_tier * 1000.0) as u64;
+                (load, tier, c)
+            })
+    }
+
+    /// Largest per-chip core budget among active chips (feasibility bound
+    /// for one shard).
+    fn max_active_cores(&self) -> usize {
+        (0..self.caps.len())
+            .filter(|&c| self.active[c])
+            .map(|c| self.caps[c].cores)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Plan one lane: split Ω (d × m) into column shards per the policy,
-    /// then place `replication` replicas of every shard on distinct,
-    /// least-loaded chips. `core_replication` is the *within-chip* copy
-    /// count each replica will be programmed with (it scales the core
-    /// cost). Replication is clamped to the number of distinct chips with
-    /// room; at least one replica per shard must fit or the lane is
-    /// rejected with a typed error.
+    /// then place `replication` replicas of every shard on distinct
+    /// chips via the cost model. `core_replication` is the *within-chip*
+    /// copy count each replica will be programmed with (it scales the
+    /// core cost). Replication is clamped to the number of distinct
+    /// chips with room; at least one replica per shard must fit or the
+    /// lane is rejected with a typed error.
     pub fn plan_lane(
         &mut self,
         lane: KernelLane,
@@ -136,24 +247,25 @@ impl Planner {
         let replication = replication.max(1);
         let row_blocks = d.div_ceil(self.rows);
         let col_blocks = m.div_ceil(self.cols);
-        // column blocks one chip can hold for this lane
-        let chip_col_budget = self.cores / (row_blocks * core_replication);
+        // column blocks the largest active chip can hold for this lane
+        let chip_col_budget = self.max_active_cores() / (row_blocks * core_replication);
         if chip_col_budget == 0 {
             return Err(Error::Coordinator(format!(
                 "lane {lane:?}: {row_blocks} row blocks x {core_replication} \
-                 core copies exceed one chip ({} cores)",
-                self.cores
+                 core copies exceed every chip (largest: {} cores)",
+                self.max_active_cores()
             )));
         }
         let n_shards = match self.policy {
             PlacementPolicy::Packed => col_blocks.div_ceil(chip_col_budget),
             PlacementPolicy::Sharded => self
-                .n_chips
+                .n_active()
+                .max(1)
                 .min(col_blocks)
                 .max(col_blocks.div_ceil(chip_col_budget)),
         };
 
-        let mut shards = Vec::with_capacity(n_shards);
+        let mut shards: Vec<ShardPlan> = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
             // spread column blocks near-evenly over shards
             let b0 = s * col_blocks / n_shards;
@@ -163,11 +275,7 @@ impl Planner {
             let tiles = row_blocks * (b1 - b0) * core_replication;
             let mut chips = Vec::new();
             for _ in 0..replication {
-                // least-loaded distinct chip with room; ties -> lowest index
-                let pick = (0..self.n_chips)
-                    .filter(|c| !chips.contains(c) && self.used[*c] + tiles <= self.cores)
-                    .min_by_key(|c| (self.used[*c], *c));
-                match pick {
+                match self.pick_chip(tiles, &chips) {
                     Some(c) => {
                         self.used[c] += tiles;
                         chips.push(c);
@@ -186,29 +294,131 @@ impl Planner {
                 return Err(Error::Coordinator(format!(
                     "fleet capacity exhausted placing lane {lane:?} \
                      (shard {s}/{n_shards} needs {tiles} cores; \
-                     per-chip usage {:?}/{})",
-                    self.used, self.cores
+                     per-chip usage {:?} of {:?})",
+                    self.used,
+                    self.caps.iter().map(|c| c.cores).collect::<Vec<_>>()
                 )));
             }
             shards.push(ShardPlan { col0, col1, chips });
         }
-        let plan = LanePlan { d, m, shards };
+        let plan = LanePlan { d, m, core_replication, shards };
         self.lanes.insert(lane, plan.clone());
         Ok(plan)
     }
 
     /// Forget a lane's placement and release its planned cores (used by
     /// idempotent reprogramming).
-    pub fn unplan_lane(&mut self, lane: KernelLane, core_replication: usize) {
+    pub fn unplan_lane(&mut self, lane: KernelLane) {
         if let Some(plan) = self.lanes.remove(&lane) {
-            let row_blocks = plan.d.div_ceil(self.rows);
-            for sh in &plan.shards {
-                let blocks = (sh.col1 - sh.col0).div_ceil(self.cols);
-                for &c in &sh.chips {
-                    self.used[c] -= row_blocks * blocks * core_replication.max(1);
+            for s in 0..plan.shards.len() {
+                let tiles = self.shard_tiles(&plan, s);
+                for &c in &plan.shards[s].chips {
+                    self.used[c] -= tiles;
                 }
             }
         }
+    }
+
+    /// Failover move: chip `gone` lost its replica of shard `s` of
+    /// `lane`. Releases the dead replica's cores and tries to place a
+    /// replacement on an active chip outside the remaining replica set.
+    /// Returns the replacement chip, or `None` when no chip has room
+    /// (replication stays degraded). The plan copy held by the planner is
+    /// updated either way; the caller mirrors the change into the pool's
+    /// serving plan.
+    pub fn replace_replica(
+        &mut self,
+        lane: KernelLane,
+        s: usize,
+        gone: usize,
+    ) -> Option<usize> {
+        let plan = self.lanes.get(&lane)?.clone();
+        if s >= plan.shards.len() || !plan.shards[s].chips.contains(&gone) {
+            return None;
+        }
+        let tiles = self.shard_tiles(&plan, s);
+        self.used[gone] -= tiles;
+        let survivors: Vec<usize> = plan.shards[s]
+            .chips
+            .iter()
+            .copied()
+            .filter(|&c| c != gone)
+            .collect();
+        let replacement = self.pick_chip(tiles, &survivors);
+        if let Some(c) = replacement {
+            self.used[c] += tiles;
+        }
+        let stored = self.lanes.get_mut(&lane).expect("lane present");
+        stored.shards[s].chips.retain(|&c| c != gone);
+        if let Some(c) = replacement {
+            stored.shards[s].chips.push(c);
+        }
+        replacement
+    }
+
+    /// Scale-up move: commit a replica of shard `s` of `lane` onto a
+    /// *specific* chip (the autoscaler populates a new chip this way).
+    /// Returns the shard's tile cost. Typed error when the chip is
+    /// inactive, already holds the shard, or lacks room.
+    pub fn place_replica_on(
+        &mut self,
+        lane: KernelLane,
+        s: usize,
+        chip: usize,
+    ) -> Result<usize> {
+        let plan = self
+            .lanes
+            .get(&lane)
+            .ok_or_else(|| Error::Coordinator(format!("lane {lane:?} not placed")))?
+            .clone();
+        if s >= plan.shards.len() {
+            return Err(Error::Coordinator(format!(
+                "lane {lane:?} has no shard {s}"
+            )));
+        }
+        if !self.is_active(chip) {
+            return Err(Error::Coordinator(format!("chip {chip} is not active")));
+        }
+        if plan.shards[s].chips.contains(&chip) {
+            return Err(Error::Coordinator(format!(
+                "chip {chip} already holds lane {lane:?} shard {s}"
+            )));
+        }
+        let tiles = self.shard_tiles(&plan, s);
+        if self.used[chip] + tiles > self.caps[chip].cores {
+            return Err(Error::Coordinator(format!(
+                "chip {chip} lacks room for lane {lane:?} shard {s} \
+                 ({} used of {}, need {tiles})",
+                self.used[chip], self.caps[chip].cores
+            )));
+        }
+        self.used[chip] += tiles;
+        self.lanes
+            .get_mut(&lane)
+            .expect("lane present")
+            .shards[s]
+            .chips
+            .push(chip);
+        Ok(tiles)
+    }
+
+    /// Release one chip's replica of shard `s` without replacement
+    /// (scale-down of a shard that keeps other replicas).
+    pub fn release_replica(&mut self, lane: KernelLane, s: usize, chip: usize) {
+        let Some(plan) = self.lanes.get(&lane).cloned() else {
+            return;
+        };
+        if s >= plan.shards.len() || !plan.shards[s].chips.contains(&chip) {
+            return;
+        }
+        let tiles = self.shard_tiles(&plan, s);
+        self.used[chip] -= tiles;
+        self.lanes
+            .get_mut(&lane)
+            .expect("lane present")
+            .shards[s]
+            .chips
+            .retain(|&c| c != chip);
     }
 }
 
@@ -305,7 +515,7 @@ mod tests {
         p.plan_lane(KernelLane::Rbf, 16, 64, 2, 1).unwrap();
         let committed: usize = p.used().iter().sum();
         assert!(committed > 0);
-        p.unplan_lane(KernelLane::Rbf, 1);
+        p.unplan_lane(KernelLane::Rbf);
         assert_eq!(p.used(), &[0, 0]);
     }
 
@@ -324,5 +534,96 @@ mod tests {
         // 3 row blocks can never fit a 2-core chip, under any column split
         let err = p.plan_lane(KernelLane::Rbf, 24, 8, 1, 1).unwrap_err();
         assert!(err.to_string().contains("row blocks"));
+    }
+
+    #[test]
+    fn heterogeneous_fleet_respects_small_chip_budget() {
+        let chip = small_chip(); // rows/cols 16
+        let caps = vec![
+            ChipCapacity { cores: 8, noise_tier: 1.0 },
+            ChipCapacity { cores: 2, noise_tier: 1.0 },
+        ];
+        let mut p = Planner::with_capacities(PlacementPolicy::Packed, caps, &chip);
+        // 16x48 = 3 cores: only the 8-core chip can host it, even though
+        // the 2-core chip has lower absolute usage
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 48, 1, 1).unwrap();
+        assert_eq!(plan.shards[0].chips, vec![0]);
+        // a 2-core lane balances by fractional load: chip 0 at 3/8 beats
+        // chip 1 at 2/2
+        let plan2 = p.plan_lane(KernelLane::Softmax, 16, 32, 1, 1).unwrap();
+        assert_eq!(plan2.shards[0].chips, vec![0]);
+        assert!(p.used()[1] <= 2, "small chip over-packed: {:?}", p.used());
+    }
+
+    #[test]
+    fn noise_tier_breaks_load_ties() {
+        let chip = small_chip();
+        let caps = vec![
+            ChipCapacity { cores: 4, noise_tier: 2.0 },
+            ChipCapacity { cores: 4, noise_tier: 1.0 },
+        ];
+        let mut p = Planner::with_capacities(PlacementPolicy::Packed, caps, &chip);
+        // equal fractional load -> quieter chip 1 wins despite higher index
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 16, 1, 1).unwrap();
+        assert_eq!(plan.shards[0].chips, vec![1]);
+    }
+
+    #[test]
+    fn inactive_chips_are_skipped_and_shards_follow_active_count() {
+        let mut p = Planner::new(PlacementPolicy::Sharded, 3, &small_chip());
+        p.set_active(0, false);
+        assert_eq!(p.n_active(), 2);
+        // sharded splits over the 2 active chips, not the 3 slots
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 32, 1, 1).unwrap();
+        assert_eq!(plan.shards.len(), 2);
+        for sh in &plan.shards {
+            assert!(!sh.chips.contains(&0), "{sh:?}");
+        }
+    }
+
+    #[test]
+    fn replace_replica_moves_shard_to_survivor() {
+        let mut p = Planner::new(PlacementPolicy::Sharded, 3, &small_chip());
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 32, 2, 1).unwrap();
+        let gone = plan.shards[0].chips[0];
+        p.set_active(gone, false);
+        // evict-style: move every shard replica the dead chip held
+        for s in 0..plan.shards.len() {
+            if plan.shards[s].chips.contains(&gone) {
+                let replacement = p.replace_replica(KernelLane::Rbf, s, gone).unwrap();
+                assert_ne!(replacement, gone);
+                let stored = &p.lanes[&KernelLane::Rbf].shards[s];
+                assert!(!stored.chips.contains(&gone));
+                assert!(stored.chips.contains(&replacement));
+            }
+        }
+        assert_eq!(p.used()[gone], 0);
+    }
+
+    #[test]
+    fn replace_replica_degrades_when_fleet_is_full() {
+        // 2 chips, both replicas placed; evicting one leaves nowhere to go
+        let mut p = Planner::new(PlacementPolicy::Packed, 2, &small_chip());
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 64, 2, 1).unwrap();
+        assert_eq!(plan.replication(), 2);
+        p.set_active(0, false);
+        assert_eq!(p.replace_replica(KernelLane::Rbf, 0, 0), None);
+        assert_eq!(p.lanes[&KernelLane::Rbf].shards[0].chips, vec![1]);
+    }
+
+    #[test]
+    fn place_replica_on_and_release_roundtrip() {
+        let mut p = Planner::new(PlacementPolicy::Packed, 2, &small_chip());
+        p.plan_lane(KernelLane::Rbf, 16, 32, 1, 1).unwrap();
+        let added = p.add_chip(ChipCapacity { cores: 4, noise_tier: 1.0 });
+        assert_eq!(added, 2);
+        let tiles = p.place_replica_on(KernelLane::Rbf, 0, added).unwrap();
+        assert_eq!(tiles, 2);
+        assert_eq!(p.used()[added], 2);
+        // duplicate placement is rejected
+        assert!(p.place_replica_on(KernelLane::Rbf, 0, added).is_err());
+        p.release_replica(KernelLane::Rbf, 0, added);
+        assert_eq!(p.used()[added], 0);
+        assert!(!p.lanes[&KernelLane::Rbf].shards[0].chips.contains(&added));
     }
 }

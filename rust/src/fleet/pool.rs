@@ -1,49 +1,83 @@
 //! `FleetPool` — the multi-chip generalization of the single-chip
-//! `coordinator::TilePool`.
+//! `coordinator::TilePool`, and the data plane the control plane
+//! ([`super::control`]) supervises.
 //!
 //! Each emulated chip sits behind its own lock with its own in-flight
 //! counter, so analog MVMs on different chips execute concurrently; the
 //! seed's `Mutex<Chip>` serialized every projection in the process. A
-//! request's projection walks the lane's column shards, asks the
-//! [`Router`] for a replica of each, and concatenates the per-shard
-//! results into the full feature projection.
+//! request's projection fans the lane's column shards out over worker
+//! threads, asks the [`Router`] for a *routable* replica of each (health
+//! tiers: `Healthy`, falling back to `Degraded`, then `Draining`), runs
+//! the per-chip MVMs concurrently, retries surviving replicas when a
+//! chip errors mid-request, and concatenates the per-shard results into
+//! the full feature projection.
+//!
+//! All serving and supervision methods take `&self`: topology state
+//! (slots, lane plans, placement bookkeeping) lives behind short-lived
+//! `RwLock`s so the control plane can evict, add, drain and retire chips
+//! *while requests are in flight*. Heavy work (GDP programming) only
+//! ever holds the one target chip's lock. Lock discipline: plan/lane/
+//! slot locks are never held across a chip lock acquisition on the
+//! write side, and readers clone the small plan structures out before
+//! touching chips.
 //!
 //! The pool also owns the *fleet clock*: a virtual time stream (advanced
-//! by the engine's recalibration thread in wall time, or directly by
-//! tests) from which per-chip programming age — and therefore PCM
-//! conductance drift — is derived.
+//! by the engine's control thread in wall time, or directly by tests)
+//! from which per-chip programming age — and therefore PCM conductance
+//! drift — is derived.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
-use super::placement::{LanePlan, Planner};
+use super::control::HealthState;
+use super::placement::{ChipCapacity, LanePlan, Planner, ShardPlan};
 use super::recal::estimated_drift_error;
 use super::router::Router;
 use crate::aimc::pcm::DRIFT_T0;
 use crate::aimc::{Chip, MatrixHandle};
 use crate::config::{ChipConfig, FleetConfig};
 use crate::coordinator::request::KernelLane;
-use crate::coordinator::telemetry::ChipSnapshot;
+use crate::coordinator::telemetry::{ChipSnapshot, FleetEventsSnapshot};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::util::threads::parallel_map;
 
-/// One programmed feature lane, fleet-wide.
+/// One programmed feature lane, fleet-wide. The shard plan is behind its
+/// own lock because failover and autoscaling edit replica sets at
+/// runtime; everything else is immutable for the lane's lifetime.
 pub struct LaneMapping {
     /// the FP-32 Ω (digital-path twin of the programmed weights)
     pub omega: Mat,
-    /// calibration inputs retained so recalibration can re-run the full
-    /// calibrate + GDP flow
+    /// calibration inputs retained so recalibration and failover
+    /// re-placement can re-run the full calibrate + GDP flow
     pub x_cal: Mat,
     pub d: usize,
     pub m: usize,
-    pub plan: LanePlan,
     pub core_replication: usize,
+    plan: RwLock<LanePlan>,
 }
 
-/// One chip plus its serving/recalibration counters.
-struct ChipSlot {
+impl LaneMapping {
+    /// Snapshot of the current shard plan (replica sets change under
+    /// failover/scaling; the snapshot is consistent for one request).
+    pub fn plan(&self) -> LanePlan {
+        self.plan.read().unwrap().clone()
+    }
+}
+
+/// One chip plus its serving/health/recalibration counters.
+pub(crate) struct ChipSlot {
     chip: Mutex<Chip>,
+    capacity: ChipCapacity,
+    /// authoritative health state, read lock-free on every request
+    health: AtomicU8,
+    /// fault injection: an unreachable chip (heartbeats fail, MVMs
+    /// error without touching the chip lock — a dead chip's lock could
+    /// hang forever)
+    faulted: AtomicBool,
+    /// failed MVMs/probes since boot (the health monitor diffs ticks)
+    errors: AtomicU64,
     /// mirror of `chip.cores_used()` maintained at every (un)programming
     /// so the stats surface never has to take a chip lock (and therefore
     /// never blocks behind an in-flight MVM or a multi-second GDP rewrite)
@@ -60,15 +94,50 @@ struct ChipSlot {
     synced_age_s: Mutex<f64>,
 }
 
-/// The fleet: chips, placement plan, router, clock.
+impl ChipSlot {
+    fn new(chip_cfg: ChipConfig, capacity: ChipCapacity, seed: u64, now_s: f64, health: HealthState) -> ChipSlot {
+        ChipSlot {
+            chip: Mutex::new(Chip::new(chip_cfg, seed)),
+            capacity,
+            health: AtomicU8::new(health as u8),
+            faulted: AtomicBool::new(false),
+            errors: AtomicU64::new(0),
+            cores: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            served: AtomicU64::new(0),
+            recals: AtomicU64::new(0),
+            programmed_at_s: Mutex::new(now_s),
+            synced_age_s: Mutex::new(0.0),
+        }
+    }
+
+    fn health(&self) -> HealthState {
+        HealthState::from_u8(self.health.load(Ordering::Relaxed))
+    }
+}
+
+/// Control-plane event counters (surfaced by the `health` TCP verb).
+#[derive(Default)]
+struct FleetEvents {
+    evictions: AtomicU64,
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+    drains: AtomicU64,
+}
+
+/// The fleet: chips, placement plan, router, health, clock.
 pub struct FleetPool {
     chip_cfg: ChipConfig,
     fleet_cfg: FleetConfig,
-    slots: Vec<ChipSlot>,
-    planner: Planner,
+    seed: u64,
+    slots: RwLock<Vec<Arc<ChipSlot>>>,
+    planner: Mutex<Planner>,
     router: Router,
-    lanes: BTreeMap<KernelLane, LaneMapping>,
+    lanes: RwLock<BTreeMap<KernelLane, Arc<LaneMapping>>>,
     clock_s: Mutex<f64>,
+    /// chips ever created (stable seed stream for runtime-added chips)
+    spawned: AtomicUsize,
+    events: FleetEvents,
 }
 
 /// Chip-level matrix name of one shard of a lane's Ω.
@@ -86,37 +155,77 @@ impl FleetPool {
         self.chip_cfg.drift_t_seconds.max(DRIFT_T0) + age_s.max(0.0)
     }
 
+    fn chip_seed(&self, ordinal: usize) -> u64 {
+        self.seed ^ (ordinal as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
     pub fn new(chip_cfg: ChipConfig, fleet_cfg: FleetConfig, seed: u64) -> FleetPool {
         let n = fleet_cfg.n_chips.max(1);
-        let slots = (0..n)
-            .map(|i| ChipSlot {
-                chip: Mutex::new(Chip::new(
-                    chip_cfg.clone(),
-                    seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                )),
-                cores: AtomicUsize::new(0),
-                inflight: AtomicUsize::new(0),
-                served: AtomicU64::new(0),
-                recals: AtomicU64::new(0),
-                programmed_at_s: Mutex::new(0.0),
-                synced_age_s: Mutex::new(0.0),
+        // per-chip capacity descriptors: heterogeneous core counts /
+        // noise tiers from config, defaulting to the uniform template
+        let caps: Vec<ChipCapacity> = (0..n)
+            .map(|i| ChipCapacity {
+                cores: fleet_cfg.chip_cores.get(i).copied().unwrap_or(chip_cfg.cores).max(1),
+                noise_tier: fleet_cfg.noise_tiers.get(i).copied().unwrap_or(1.0),
             })
             .collect();
-        let planner = Planner::new(fleet_cfg.placement, n, &chip_cfg);
+        let slots = caps
+            .iter()
+            .enumerate()
+            .map(|(i, cap)| {
+                let cfg = ChipConfig { cores: cap.cores, ..chip_cfg.clone() };
+                Arc::new(ChipSlot::new(
+                    cfg,
+                    cap.clone(),
+                    seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    0.0,
+                    HealthState::Healthy,
+                ))
+            })
+            .collect();
+        let planner = Planner::with_capacities(fleet_cfg.placement, caps, &chip_cfg);
         let router = Router::new(fleet_cfg.router, seed);
         FleetPool {
             chip_cfg,
             fleet_cfg,
-            slots,
-            planner,
+            seed,
+            slots: RwLock::new(slots),
+            planner: Mutex::new(planner),
             router,
-            lanes: BTreeMap::new(),
+            lanes: RwLock::new(BTreeMap::new()),
             clock_s: Mutex::new(0.0),
+            spawned: AtomicUsize::new(n),
+            events: FleetEvents::default(),
         }
     }
 
+    fn slots_snapshot(&self) -> Vec<Arc<ChipSlot>> {
+        self.slots.read().unwrap().clone()
+    }
+
+    fn lanes_snapshot(&self) -> Vec<(KernelLane, Arc<LaneMapping>)> {
+        self.lanes
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(l, m)| (*l, m.clone()))
+            .collect()
+    }
+
+    /// Active (non-evicted) chips — the live fleet size.
     pub fn n_chips(&self) -> usize {
-        self.slots.len()
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| s.health().active())
+            .count()
+    }
+
+    /// All slot indices ever created, including evicted tombstones
+    /// (indices are stable; plans reference them).
+    pub fn total_slots(&self) -> usize {
+        self.slots.read().unwrap().len()
     }
 
     pub fn chip_config(&self) -> &ChipConfig {
@@ -127,17 +236,104 @@ impl FleetPool {
         &self.fleet_cfg
     }
 
+    // -- health & fault surface --------------------------------------------
+
+    pub fn chip_health(&self, i: usize) -> HealthState {
+        self.slots.read().unwrap()[i].health()
+    }
+
+    pub fn set_chip_health(&self, i: usize, h: HealthState) {
+        self.slots.read().unwrap()[i]
+            .health
+            .store(h as u8, Ordering::Relaxed);
+    }
+
+    /// Heartbeat probe. On the emulated fleet this reports reachability
+    /// (fault injection stands in for a dead heartbeat RPC).
+    pub fn probe_chip(&self, i: usize) -> bool {
+        !self.slots.read().unwrap()[i].faulted.load(Ordering::Relaxed)
+    }
+
+    /// Inject (or clear) an unreachable-chip fault: heartbeats fail and
+    /// MVMs error without touching the chip lock. Used by chaos tests
+    /// and the failover bench.
+    pub fn inject_fault(&self, i: usize, faulted: bool) {
+        self.slots.read().unwrap()[i]
+            .faulted
+            .store(faulted, Ordering::Relaxed);
+    }
+
+    /// Failed MVMs/probes on chip `i` since boot.
+    pub fn chip_errors(&self, i: usize) -> u64 {
+        self.slots.read().unwrap()[i].errors.load(Ordering::Relaxed)
+    }
+
+    /// In-flight analog MVMs on chip `i` right now.
+    pub fn chip_queue_depth(&self, i: usize) -> usize {
+        self.slots.read().unwrap()[i].inflight.load(Ordering::Relaxed)
+    }
+
+    /// In-flight analog MVMs across the whole fleet (the autoscaler's
+    /// signal; also derivable from the `stats` response's per-chip
+    /// `queue_depth`).
+    pub fn total_queue_depth(&self) -> usize {
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.inflight.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Mark a chip `Draining` (manual `drain` TCP verb / ops): the
+    /// router steers traffic away while replicas elsewhere keep serving.
+    pub fn drain_chip(&self, i: usize) -> Result<()> {
+        let h = self.chip_health(i);
+        if !h.active() {
+            return Err(Error::Coordinator(format!("chip {i} is evicted")));
+        }
+        self.set_chip_health(i, HealthState::Draining);
+        self.events.drains.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Return a drained chip to service.
+    pub fn undrain_chip(&self, i: usize) -> Result<()> {
+        match self.chip_health(i) {
+            HealthState::Draining => {
+                self.set_chip_health(i, HealthState::Healthy);
+                Ok(())
+            }
+            h => Err(Error::Coordinator(format!(
+                "chip {i} is {}, not draining",
+                h.as_str()
+            ))),
+        }
+    }
+
+    /// Control-plane event counters.
+    pub fn events(&self) -> FleetEventsSnapshot {
+        FleetEventsSnapshot {
+            evictions: self.events.evictions.load(Ordering::Relaxed),
+            scale_ups: self.events.scale_ups.load(Ordering::Relaxed),
+            scale_downs: self.events.scale_downs.load(Ordering::Relaxed),
+            drains: self.events.drains.load(Ordering::Relaxed),
+        }
+    }
+
+    // -- lane programming ---------------------------------------------------
+
     /// Program Ω for a feature lane across the fleet. Duplicate lanes are
     /// a caller bug → typed [`Error::Coordinator`]; use
     /// [`FleetPool::reprogram_lane`] to rewrite an existing lane.
     pub fn program_lane(
-        &mut self,
+        &self,
         lane: KernelLane,
         omega: Mat,
         x_cal: &Mat,
         core_replication: usize,
     ) -> Result<()> {
-        if self.lanes.contains_key(&lane) {
+        if self.lanes.read().unwrap().contains_key(&lane) {
             return Err(Error::Coordinator(format!(
                 "lane {lane:?} already programmed (use reprogram_lane to rewrite it)"
             )));
@@ -148,35 +344,62 @@ impl FleetPool {
                 x_cal.cols, omega.rows
             )));
         }
-        let plan = self.planner.plan_lane(
+        let plan = self.planner.lock().unwrap().plan_lane(
             lane,
             omega.rows,
             omega.cols,
             self.fleet_cfg.replication,
             core_replication,
         )?;
-        for (s, shard) in plan.shards.iter().enumerate() {
+        let slots = self.slots_snapshot();
+        let mut programmed: Vec<(usize, usize)> = Vec::new();
+        let mut failure: Option<Error> = None;
+        'program: for (s, shard) in plan.shards.iter().enumerate() {
             let w = omega.slice_cols(shard.col0, shard.col1);
             for &c in &shard.chips {
                 let t = self.drift_eval_time(self.chip_age(c));
-                let mut chip = self.slots[c].chip.lock().unwrap();
-                chip.program_matrix(&shard_name(lane, s), &w, x_cal, core_replication)?;
-                chip.set_drift_time(t);
-                self.slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
+                let mut chip = slots[c].chip.lock().unwrap();
+                match chip.program_matrix(&shard_name(lane, s), &w, x_cal, core_replication) {
+                    Ok(_) => {
+                        chip.set_drift_time(t);
+                        slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
+                        programmed.push((s, c));
+                    }
+                    Err(e) => {
+                        failure = Some(e);
+                        break 'program;
+                    }
+                }
             }
         }
+        if let Some(e) = failure {
+            // roll the partial programming back so the planner and the
+            // chips agree the lane does not exist
+            for (s, c) in programmed {
+                let mut chip = slots[c].chip.lock().unwrap();
+                chip.unprogram(&shard_name(lane, s));
+                slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
+            }
+            self.planner.lock().unwrap().unplan_lane(lane);
+            return Err(e);
+        }
         let (d, m) = (omega.rows, omega.cols);
-        self.lanes.insert(
+        self.lanes.write().unwrap().insert(
             lane,
-            LaneMapping { omega, x_cal: x_cal.clone(), d, m, plan, core_replication },
+            Arc::new(LaneMapping {
+                omega,
+                x_cal: x_cal.clone(),
+                d,
+                m,
+                core_replication,
+                plan: RwLock::new(plan.clone()),
+            }),
         );
         // a chip whose entire contents were just written holds only fresh
         // conductances — restart its drift clock. Chips also holding
         // older lanes keep their age (conservative: the scheduler's next
         // recalibration rewrites such chips wholesale).
-        let mapping = &self.lanes[&lane];
-        let mut chips: Vec<usize> = mapping
-            .plan
+        let mut chips: Vec<usize> = plan
             .shards
             .iter()
             .flat_map(|sh| sh.chips.iter().copied())
@@ -184,12 +407,7 @@ impl FleetPool {
         chips.sort_unstable();
         chips.dedup();
         for c in chips {
-            let lane_shards = mapping
-                .plan
-                .shards
-                .iter()
-                .filter(|sh| sh.chips.contains(&c))
-                .count();
+            let lane_shards = plan.shards.iter().filter(|sh| sh.chips.contains(&c)).count();
             if self.chip_shard_count(c) == lane_shards {
                 self.reset_chip_clock(c);
             }
@@ -203,7 +421,7 @@ impl FleetPool {
     /// placement is torn down, so a rejected rewrite (capacity, shape)
     /// returns the error with the old lane still live.
     pub fn reprogram_lane(
-        &mut self,
+        &self,
         lane: KernelLane,
         omega: Mat,
         x_cal: &Mat,
@@ -215,40 +433,52 @@ impl FleetPool {
                 x_cal.cols, omega.rows
             )));
         }
-        if let Some(old) = self.lanes.get(&lane) {
-            let mut trial = self.planner.clone();
-            trial.unplan_lane(lane, old.core_replication);
-            trial.plan_lane(
-                lane,
-                omega.rows,
-                omega.cols,
-                self.fleet_cfg.replication,
-                core_replication,
-            )?;
+        {
+            let planner = self.planner.lock().unwrap();
+            if planner.lanes.contains_key(&lane) {
+                let mut trial = planner.clone();
+                trial.unplan_lane(lane);
+                trial.plan_lane(
+                    lane,
+                    omega.rows,
+                    omega.cols,
+                    self.fleet_cfg.replication,
+                    core_replication,
+                )?;
+            }
         }
-        if let Some(old) = self.lanes.remove(&lane) {
-            for (s, shard) in old.plan.shards.iter().enumerate() {
+        let old = self.lanes.write().unwrap().remove(&lane);
+        if let Some(old) = old {
+            let plan = old.plan();
+            let slots = self.slots_snapshot();
+            for (s, shard) in plan.shards.iter().enumerate() {
                 for &c in &shard.chips {
-                    let mut chip = self.slots[c].chip.lock().unwrap();
+                    let mut chip = slots[c].chip.lock().unwrap();
                     chip.unprogram(&shard_name(lane, s));
-                    self.slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
+                    slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
                 }
             }
-            self.planner.unplan_lane(lane, old.core_replication);
+            self.planner.lock().unwrap().unplan_lane(lane);
         }
         self.program_lane(lane, omega, x_cal, core_replication)
     }
 
-    pub fn mapping(&self, lane: KernelLane) -> Result<&LaneMapping> {
+    pub fn mapping(&self, lane: KernelLane) -> Result<Arc<LaneMapping>> {
         self.lanes
+            .read()
+            .unwrap()
             .get(&lane)
+            .cloned()
             .ok_or_else(|| Error::Coordinator(format!("lane {lane:?} not programmed")))
     }
 
-    /// Analog projection u = x·Ω: route every shard to a replica, run the
-    /// per-chip MVMs, concatenate the column ranges. Chips are locked one
-    /// at a time, so concurrent callers projecting through different
-    /// replicas proceed in parallel.
+    // -- serving ------------------------------------------------------------
+
+    /// Analog projection u = x·Ω: fan the lane's shards out over worker
+    /// threads, route every shard to a routable replica (health tiers,
+    /// then queue depth), run the per-chip MVMs concurrently, retry
+    /// surviving replicas if a chip errors, and concatenate the column
+    /// ranges.
     pub fn project(&self, lane: KernelLane, x: &Mat) -> Result<Mat> {
         let mapping = self.mapping(lane)?;
         if x.cols != mapping.d {
@@ -257,36 +487,102 @@ impl FleetPool {
                 x.cols, mapping.d
             )));
         }
+        let shards = mapping.plan().shards;
+        let slots = self.slots_snapshot();
+        // overlap per-chip MVMs of one request (sequential walk kept
+        // wide sharded lanes at single-chip latency)
+        let results: Vec<Result<Mat>> = if shards.len() > 1 {
+            parallel_map(shards.len(), |s| {
+                self.project_shard(&slots, lane, s, &shards[s], x)
+            })
+        } else {
+            vec![self.project_shard(&slots, lane, 0, &shards[0], x)]
+        };
         let mut out = Mat::zeros(x.rows, mapping.m);
-        for (s, shard) in mapping.plan.shards.iter().enumerate() {
-            let k = self.router.pick(shard.chips.len(), |i| {
-                self.slots[shard.chips[i]].inflight.load(Ordering::Relaxed)
-            });
-            let c = shard.chips[k];
-            let slot = &self.slots[c];
-            slot.inflight.fetch_add(1, Ordering::Relaxed);
-            let res = {
-                let mut chip = slot.chip.lock().unwrap();
-                chip.matmul(&MatrixHandle(shard_name(lane, s)), x)
-            };
-            slot.inflight.fetch_sub(1, Ordering::Relaxed);
+        for (s, res) in results.into_iter().enumerate() {
             let y = res?;
-            slot.served.fetch_add(1, Ordering::Relaxed);
             for i in 0..out.rows {
-                out.row_mut(i)[shard.col0..shard.col1].copy_from_slice(y.row(i));
+                out.row_mut(i)[shards[s].col0..shards[s].col1].copy_from_slice(y.row(i));
             }
         }
         Ok(out)
     }
 
+    /// Route one shard and run its MVM, failing over across the replica
+    /// set: `Healthy` replicas are tried first (router-ordered), then
+    /// `Degraded`, then `Draining` as a last resort; `Joining`/`Evicted`
+    /// replicas are never used. Every failed attempt bumps the chip's
+    /// error counter for the health monitor.
+    fn project_shard(
+        &self,
+        slots: &[Arc<ChipSlot>],
+        lane: KernelLane,
+        s: usize,
+        shard: &ShardPlan,
+        x: &Mat,
+    ) -> Result<Mat> {
+        let handle = MatrixHandle(shard_name(lane, s));
+        // bucket replicas into fallback tiers (healthy < degraded < draining)
+        let mut tiers: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for &c in &shard.chips {
+            if let Some(t) = slots[c].health().fallback_order() {
+                tiers[t as usize].push(c);
+            }
+        }
+        let mut last_err = Error::Coordinator(format!(
+            "no routable replica for lane {lane:?} shard {s} \
+             (replicas {:?} all joining/evicted)",
+            shard.chips
+        ));
+        for tier in tiers {
+            let mut avail = tier;
+            while !avail.is_empty() {
+                let c = self
+                    .router
+                    .pick_among(&avail, |i| slots[i].inflight.load(Ordering::Relaxed));
+                let slot = &slots[c];
+                if slot.faulted.load(Ordering::Relaxed) {
+                    // dead chip: fail fast without touching its lock
+                    slot.errors.fetch_add(1, Ordering::Relaxed);
+                    last_err =
+                        Error::Coordinator(format!("chip {c} is unreachable (heartbeat lost)"));
+                    avail.retain(|&a| a != c);
+                    continue;
+                }
+                slot.inflight.fetch_add(1, Ordering::Relaxed);
+                let res = {
+                    let mut chip = slot.chip.lock().unwrap();
+                    chip.matmul(&handle, x)
+                };
+                slot.inflight.fetch_sub(1, Ordering::Relaxed);
+                match res {
+                    Ok(y) => {
+                        slot.served.fetch_add(1, Ordering::Relaxed);
+                        return Ok(y);
+                    }
+                    Err(e) => {
+                        slot.errors.fetch_add(1, Ordering::Relaxed);
+                        last_err = e;
+                        avail.retain(|&a| a != c);
+                    }
+                }
+            }
+        }
+        Err(last_err)
+    }
+
     /// Mean GDP programming error across a lane's shards and replicas.
     pub fn programming_rms(&self, lane: KernelLane) -> Result<f64> {
         let mapping = self.mapping(lane)?;
+        // plan before slots: slots only grow, so every chip index the
+        // plan mentions exists in a slots snapshot taken afterwards
+        let plan = mapping.plan();
+        let slots = self.slots_snapshot();
         let (mut sum, mut n) = (0.0, 0usize);
-        for (s, shard) in mapping.plan.shards.iter().enumerate() {
+        for (s, shard) in plan.shards.iter().enumerate() {
             let handle = MatrixHandle(shard_name(lane, s));
             for &c in &shard.chips {
-                let chip = self.slots[c].chip.lock().unwrap();
+                let chip = slots[c].chip.lock().unwrap();
                 let stats = chip
                     .program_stats(&handle)
                     .ok_or_else(|| Error::Coordinator("no stats".into()))?;
@@ -301,14 +597,24 @@ impl FleetPool {
     /// per-chip mirrors, so monitoring never waits on serving or recal).
     pub fn cores_used(&self) -> usize {
         self.slots
+            .read()
+            .unwrap()
             .iter()
             .map(|s| s.cores.load(Ordering::Relaxed))
             .sum()
     }
 
-    /// Fleet-wide utilization in [0,1].
+    /// Fleet-wide utilization in [0,1] (over active chips' capacity).
     pub fn utilization(&self) -> f64 {
-        self.cores_used() as f64 / (self.slots.len() * self.chip_cfg.cores).max(1) as f64
+        let cap: usize = self
+            .slots
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| s.health().active())
+            .map(|s| s.capacity.cores)
+            .sum();
+        self.cores_used() as f64 / cap.max(1) as f64
     }
 
     // -- fleet clock & drift ------------------------------------------------
@@ -326,16 +632,18 @@ impl FleetPool {
 
     /// Seconds since chip `i`'s lanes were last (re)programmed.
     pub fn chip_age(&self, i: usize) -> f64 {
-        (self.clock_s() - *self.slots[i].programmed_at_s.lock().unwrap()).max(0.0)
+        let at = *self.slots.read().unwrap()[i].programmed_at_s.lock().unwrap();
+        (self.clock_s() - at).max(0.0)
     }
 
     /// Restart chip `c`'s drift clock: fleet-clock "now" becomes its
     /// programming instant and its crossbars evaluate at the baseline.
     fn reset_chip_clock(&self, c: usize) {
         let baseline = self.drift_eval_time(0.0);
-        self.slots[c].chip.lock().unwrap().set_drift_time(baseline);
-        *self.slots[c].programmed_at_s.lock().unwrap() = self.clock_s();
-        *self.slots[c].synced_age_s.lock().unwrap() = 0.0;
+        let slot = self.slots.read().unwrap()[c].clone();
+        slot.chip.lock().unwrap().set_drift_time(baseline);
+        *slot.programmed_at_s.lock().unwrap() = self.clock_s();
+        *slot.synced_age_s.lock().unwrap() = 0.0;
     }
 
     /// Push each chip's current age into its PCM drift model (refreshing
@@ -343,9 +651,13 @@ impl FleetPool {
     /// moved appreciably since the last sync — drift grows
     /// logarithmically, so resyncs become exponentially rarer with age
     /// and a full fleet-wide device re-evaluation is not paid on every
-    /// scheduler pass.
+    /// scheduler pass. Evicted and unreachable chips are skipped.
     pub fn sync_drift(&self) {
-        for (i, slot) in self.slots.iter().enumerate() {
+        let slots = self.slots_snapshot();
+        for (i, slot) in slots.iter().enumerate() {
+            if !slot.health().active() || slot.faulted.load(Ordering::Relaxed) {
+                continue;
+            }
             let age = self.chip_age(i);
             let synced = *slot.synced_age_s.lock().unwrap();
             let moved = (estimated_drift_error(&self.chip_cfg, age)
@@ -361,65 +673,378 @@ impl FleetPool {
 
     /// Number of lane shards placed on chip `i`.
     pub fn chip_shard_count(&self, i: usize) -> usize {
-        self.lanes
-            .values()
-            .flat_map(|m| m.plan.shards.iter())
-            .filter(|sh| sh.chips.contains(&i))
-            .count()
+        self.lanes_snapshot()
+            .iter()
+            .map(|(_, m)| {
+                m.plan()
+                    .shards
+                    .iter()
+                    .filter(|sh| sh.chips.contains(&i))
+                    .count()
+            })
+            .sum()
     }
 
     /// Reprogram every lane shard placed on chip `i` (full calibrate +
-    /// GDP on fresh conductances) and reset its drift clock. Only chip
-    /// `i`'s lock is held, so replicas on other chips keep serving —
-    /// the recalibration scheduler walks chips one at a time for exactly
-    /// that reason. Returns the number of shards rewritten.
+    /// GDP on fresh conductances) and reset its drift clock. The chip is
+    /// marked `Draining` *before* its lock is taken, so the router
+    /// steers new traffic to replicas on other chips for the duration of
+    /// the multi-second rewrite; it returns to `Healthy` afterwards.
+    /// Returns the number of shards rewritten.
     pub fn recalibrate_chip(&self, i: usize) -> Result<usize> {
+        let prior = self.chip_health(i);
+        if !prior.active() {
+            return Err(Error::Coordinator(format!("chip {i} is evicted")));
+        }
+        // steer traffic away before the long lock hold
+        self.set_chip_health(i, HealthState::Draining);
+        // collect this chip's shard work *before* locking it (no plan
+        // lock is ever taken while the chip lock is held)
+        let mut work: Vec<(KernelLane, usize, usize, usize, Arc<LaneMapping>)> = Vec::new();
+        for (lane, mapping) in self.lanes_snapshot() {
+            for (s, shard) in mapping.plan().shards.iter().enumerate() {
+                if shard.chips.contains(&i) {
+                    work.push((lane, s, shard.col0, shard.col1, mapping.clone()));
+                }
+            }
+        }
         let baseline = self.drift_eval_time(0.0);
+        let slot = self.slots.read().unwrap()[i].clone();
         let mut rewritten = 0;
+        let mut failure: Option<Error> = None;
         {
-            let mut chip = self.slots[i].chip.lock().unwrap();
-            for (lane, mapping) in &self.lanes {
-                for (s, shard) in mapping.plan.shards.iter().enumerate() {
-                    if shard.chips.contains(&i) {
-                        let w = mapping.omega.slice_cols(shard.col0, shard.col1);
-                        chip.reprogram_matrix(
-                            &shard_name(*lane, s),
-                            &w,
-                            &mapping.x_cal,
-                            mapping.core_replication,
-                        )?;
-                        rewritten += 1;
+            let mut chip = slot.chip.lock().unwrap();
+            for (lane, s, col0, col1, mapping) in &work {
+                let w = mapping.omega.slice_cols(*col0, *col1);
+                match chip.reprogram_matrix(
+                    &shard_name(*lane, *s),
+                    &w,
+                    &mapping.x_cal,
+                    mapping.core_replication,
+                ) {
+                    Ok(_) => rewritten += 1,
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
                     }
                 }
             }
             chip.set_drift_time(baseline);
-            self.slots[i].cores.store(chip.cores_used(), Ordering::Relaxed);
+            slot.cores.store(chip.cores_used(), Ordering::Relaxed);
+        }
+        if let Some(e) = failure {
+            // don't leave the chip stuck in Draining on a failed rewrite
+            self.set_chip_health(i, prior);
+            return Err(e);
         }
         // an empty chip has nothing to rewrite: reset its clock so the
         // scheduler doesn't retrigger, but don't count a recalibration
-        *self.slots[i].programmed_at_s.lock().unwrap() = self.clock_s();
-        *self.slots[i].synced_age_s.lock().unwrap() = 0.0;
+        *slot.programmed_at_s.lock().unwrap() = self.clock_s();
+        *slot.synced_age_s.lock().unwrap() = 0.0;
         if rewritten > 0 {
-            self.slots[i].recals.fetch_add(1, Ordering::Relaxed);
+            slot.recals.fetch_add(1, Ordering::Relaxed);
         }
+        // fresh conductances: the chip returns to full service — unless
+        // an operator had already drained it, which must stick
+        self.set_chip_health(
+            i,
+            if prior == HealthState::Draining { prior } else { HealthState::Healthy },
+        );
         Ok(rewritten)
     }
 
-    /// Per-chip serving/recalibration counters for the stats surface.
-    /// Lock-free with respect to the chip mutexes: safe to call while
-    /// chips are mid-MVM or mid-recalibration.
+    // -- control-plane topology primitives ----------------------------------
+
+    /// Program one replica of `lane`'s shard `s` (columns `col0..col1`)
+    /// onto `target`: slice Ω, run the full calibrate + GDP flow behind
+    /// only that chip's lock, stamp its drift time, refresh the cores
+    /// mirror. Idempotent per shard name. The caller owns the planner
+    /// bookkeeping and the live-plan swap (including rollback via
+    /// `release_replica` when this fails).
+    fn program_shard_replica(
+        &self,
+        slots: &[Arc<ChipSlot>],
+        lane: KernelLane,
+        s: usize,
+        col0: usize,
+        col1: usize,
+        mapping: &LaneMapping,
+        target: usize,
+    ) -> Result<()> {
+        let w = mapping.omega.slice_cols(col0, col1);
+        let t = self.drift_eval_time(self.chip_age(target));
+        let mut chip = slots[target].chip.lock().unwrap();
+        chip.reprogram_matrix(
+            &shard_name(lane, s),
+            &w,
+            &mapping.x_cal,
+            mapping.core_replication,
+        )?;
+        chip.set_drift_time(t);
+        slots[target].cores.store(chip.cores_used(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Evict chip `dead` from the fleet: mark it `Evicted` (the router
+    /// stops choosing it immediately), then re-run the placement for
+    /// every shard whose replica set lost it, programming replacements
+    /// onto survivors. Requests keep flowing throughout — they retry
+    /// across surviving replicas while this runs. Returns the number of
+    /// shard replicas moved. Errors if some shard would be left with no
+    /// replica at all (the lane data would be lost).
+    pub fn evict_chip(&self, dead: usize) -> Result<usize> {
+        if !self.chip_health(dead).active() {
+            return Ok(0); // already evicted — idempotent
+        }
+        self.set_chip_health(dead, HealthState::Evicted);
+        self.planner.lock().unwrap().set_active(dead, false);
+        self.events.evictions.fetch_add(1, Ordering::Relaxed);
+        let slots = self.slots_snapshot();
+        let mut moved = 0;
+        let mut lost: Vec<String> = Vec::new();
+        for (lane, mapping) in self.lanes_snapshot() {
+            let plan = mapping.plan();
+            for (s, shard) in plan.shards.iter().enumerate() {
+                if !shard.chips.contains(&dead) {
+                    continue;
+                }
+                // placement decision under the planner lock, heavy GDP
+                // programming outside it
+                let replacement = self.planner.lock().unwrap().replace_replica(lane, s, dead);
+                let programmed = match replacement {
+                    Some(new_chip) => match self.program_shard_replica(
+                        &slots, lane, s, shard.col0, shard.col1, &mapping, new_chip,
+                    ) {
+                        Ok(()) => {
+                            moved += 1;
+                            Some(new_chip)
+                        }
+                        Err(_) => {
+                            self.planner.lock().unwrap().release_replica(lane, s, new_chip);
+                            None
+                        }
+                    },
+                    None => None, // no room anywhere: replication degrades
+                };
+                // swap the serving plan only after the replacement is
+                // programmed, so routed requests never see a replica
+                // that cannot answer
+                let mut live = mapping.plan.write().unwrap();
+                live.shards[s].chips.retain(|&c| c != dead);
+                if let Some(new_chip) = programmed {
+                    live.shards[s].chips.push(new_chip);
+                }
+                if live.shards[s].chips.is_empty() {
+                    lost.push(format!("{lane:?}/s{s}"));
+                }
+            }
+        }
+        // tombstone bookkeeping: the dead chip serves nothing
+        slots[dead].cores.store(0, Ordering::Relaxed);
+        if !lost.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "evicted chip {dead} but shards {lost:?} have no replicas left \
+                 (fleet capacity exhausted)"
+            )));
+        }
+        Ok(moved)
+    }
+
+    /// Add a chip at runtime (autoscaler scale-up). The chip starts
+    /// `Joining` — unroutable — until [`FleetPool::populate_chip`]
+    /// programs lane replicas onto it. Returns the new chip index.
+    pub fn add_chip(&self, capacity: ChipCapacity) -> usize {
+        let ordinal = self.spawned.fetch_add(1, Ordering::Relaxed);
+        let cfg = ChipConfig { cores: capacity.cores.max(1), ..self.chip_cfg.clone() };
+        let slot = Arc::new(ChipSlot::new(
+            cfg,
+            capacity.clone(),
+            self.chip_seed(ordinal),
+            self.clock_s(),
+            HealthState::Joining,
+        ));
+        let idx = {
+            let mut slots = self.slots.write().unwrap();
+            slots.push(slot);
+            slots.len() - 1
+        };
+        let planner_idx = self.planner.lock().unwrap().add_chip(capacity);
+        debug_assert_eq!(planner_idx, idx);
+        idx
+    }
+
+    /// Program lane shard replicas onto a `Joining` chip until it is
+    /// full (one replica of each shard it doesn't already hold, in
+    /// deterministic lane/shard order), then mark it `Healthy`. Returns
+    /// the number of replicas programmed. A chip that could not host a
+    /// single shard despite lanes existing (e.g. a surge chip smaller
+    /// than every shard) is tombstoned and reported as an error — an
+    /// empty `Healthy` chip would dilute the autoscaler's queue-depth
+    /// signal while adding zero capacity.
+    pub fn populate_chip(&self, c: usize) -> Result<usize> {
+        let slots = self.slots_snapshot();
+        let mut added = 0;
+        let mut attempted = 0;
+        for (lane, mapping) in self.lanes_snapshot() {
+            let plan = mapping.plan();
+            for (s, shard) in plan.shards.iter().enumerate() {
+                if shard.chips.contains(&c) {
+                    continue;
+                }
+                attempted += 1;
+                // capacity-checked commit; skip shards that don't fit
+                if self
+                    .planner
+                    .lock()
+                    .unwrap()
+                    .place_replica_on(lane, s, c)
+                    .is_err()
+                {
+                    continue;
+                }
+                if self
+                    .program_shard_replica(&slots, lane, s, shard.col0, shard.col1, &mapping, c)
+                    .is_err()
+                {
+                    self.planner.lock().unwrap().release_replica(lane, s, c);
+                    continue;
+                }
+                mapping.plan.write().unwrap().shards[s].chips.push(c);
+                added += 1;
+            }
+        }
+        if attempted > 0 && added == 0 {
+            self.set_chip_health(c, HealthState::Evicted);
+            self.planner.lock().unwrap().set_active(c, false);
+            return Err(Error::Coordinator(format!(
+                "chip {c} joined but could not host any of {attempted} lane \
+                 shards (capacity too small?); tombstoned"
+            )));
+        }
+        self.reset_chip_clock(c);
+        self.set_chip_health(c, HealthState::Healthy);
+        self.events.scale_ups.fetch_add(1, Ordering::Relaxed);
+        Ok(added)
+    }
+
+    /// Gracefully remove a chip (autoscaler scale-down): mark it
+    /// `Draining`, move any shard for which it is the *sole* replica
+    /// onto survivors, drop its redundant replicas from the plans, wait
+    /// for in-flight MVMs to finish, free its cores, and tombstone it.
+    /// All placement moves are validated on a trial planner before any
+    /// state changes, so an impossible retire (no room for a sole
+    /// replica) aborts cleanly with the chip still serving.
+    pub fn retire_chip(&self, c: usize) -> Result<()> {
+        let prior = self.chip_health(c);
+        if !prior.active() {
+            return Ok(()); // already gone — idempotent
+        }
+        self.set_chip_health(c, HealthState::Draining);
+        let lanes = self.lanes_snapshot();
+        // plan every move on a trial planner; commit atomically on success
+        let mut moves: Vec<(KernelLane, usize, usize, usize, Option<usize>, Arc<LaneMapping>)> =
+            Vec::new();
+        {
+            let mut planner = self.planner.lock().unwrap();
+            let mut trial = planner.clone();
+            trial.set_active(c, false);
+            for (lane, mapping) in &lanes {
+                let plan = mapping.plan();
+                for (s, shard) in plan.shards.iter().enumerate() {
+                    if !shard.chips.contains(&c) {
+                        continue;
+                    }
+                    if shard.chips.len() == 1 {
+                        // only copy: must land a replacement first
+                        match trial.replace_replica(*lane, s, c) {
+                            Some(new_chip) => moves.push((
+                                *lane,
+                                s,
+                                shard.col0,
+                                shard.col1,
+                                Some(new_chip),
+                                mapping.clone(),
+                            )),
+                            None => {
+                                self.set_chip_health(c, prior);
+                                return Err(Error::Coordinator(format!(
+                                    "cannot retire chip {c}: no capacity for lane \
+                                     {lane:?} shard {s}'s only replica"
+                                )));
+                            }
+                        }
+                    } else {
+                        trial.release_replica(*lane, s, c);
+                        moves.push((*lane, s, shard.col0, shard.col1, None, mapping.clone()));
+                    }
+                }
+            }
+            *planner = trial;
+        }
+        let slots = self.slots_snapshot();
+        for (lane, s, col0, col1, replacement, mapping) in moves {
+            let programmed = match replacement {
+                Some(new_chip) => {
+                    match self.program_shard_replica(&slots, lane, s, col0, col1, &mapping, new_chip)
+                    {
+                        Ok(()) => Some(new_chip),
+                        Err(e) => {
+                            // trial-validated, so this is a chip-level
+                            // disagreement; surface it (the shard keeps
+                            // serving from `c`, which stays Draining)
+                            self.planner.lock().unwrap().release_replica(lane, s, new_chip);
+                            return Err(e);
+                        }
+                    }
+                }
+                None => None,
+            };
+            let mut live = mapping.plan.write().unwrap();
+            live.shards[s].chips.retain(|&x| x != c);
+            if let Some(new_chip) = programmed {
+                live.shards[s].chips.push(new_chip);
+            }
+        }
+        // plans no longer reference the chip; let in-flight MVMs finish
+        for _ in 0..2000 {
+            if slots[c].inflight.load(Ordering::Relaxed) == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        // free the emulated crossbars and tombstone the slot
+        {
+            let mut chip = slots[c].chip.lock().unwrap();
+            for (lane, mapping) in self.lanes_snapshot() {
+                for s in 0..mapping.plan().shards.len() {
+                    chip.unprogram(&shard_name(lane, s));
+                }
+            }
+            slots[c].cores.store(0, Ordering::Relaxed);
+        }
+        self.set_chip_health(c, HealthState::Evicted);
+        self.events.scale_downs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Per-chip serving/health/recalibration counters for the stats and
+    /// health surfaces. Lock-free with respect to the chip mutexes: safe
+    /// to call while chips are mid-MVM or mid-recalibration.
     pub fn chip_snapshots(&self) -> Vec<ChipSnapshot> {
-        (0..self.slots.len())
+        let slots = self.slots_snapshot();
+        (0..slots.len())
             .map(|i| {
-                let slot = &self.slots[i];
+                let slot = &slots[i];
                 let cores_used = slot.cores.load(Ordering::Relaxed);
                 let age_s = self.chip_age(i);
                 ChipSnapshot {
                     chip: i,
+                    health: slot.health().as_str(),
                     cores_used,
-                    utilization: cores_used as f64 / self.chip_cfg.cores.max(1) as f64,
+                    utilization: cores_used as f64 / slot.capacity.cores.max(1) as f64,
                     queue_depth: slot.inflight.load(Ordering::Relaxed),
                     served: slot.served.load(Ordering::Relaxed),
+                    errors: slot.errors.load(Ordering::Relaxed),
                     recals: slot.recals.load(Ordering::Relaxed),
                     age_s,
                     drift_err_estimate: estimated_drift_error(&self.chip_cfg, age_s),
@@ -457,12 +1082,12 @@ mod tests {
         // sharded result must match the whole-matrix product to DAC/ADC
         // quantization only
         let chip = ChipConfig { cores: 4, rows: 16, cols: 16, ..ChipConfig::ideal() };
-        let mut pool = FleetPool::new(chip, fleet_cfg(3, 1), 1);
+        let pool = FleetPool::new(chip, fleet_cfg(3, 1), 1);
         let mut rng = Rng::new(0);
         let omega = Mat::randn(16, 48, &mut rng); // 3 column shards
         let x_cal = Mat::randn(32, 16, &mut rng);
         pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
-        assert_eq!(pool.mapping(KernelLane::Rbf).unwrap().plan.shards.len(), 3);
+        assert_eq!(pool.mapping(KernelLane::Rbf).unwrap().plan().shards.len(), 3);
 
         let x = Mat::randn(8, 16, &mut rng);
         let u = pool.project(KernelLane::Rbf, &x).unwrap();
@@ -473,7 +1098,7 @@ mod tests {
 
     #[test]
     fn noisy_split_matches_single_chip_error_band() {
-        let mut pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 2);
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 2);
         let mut rng = Rng::new(1);
         let omega = Mat::randn(16, 32, &mut rng);
         let x_cal = Mat::randn(32, 16, &mut rng);
@@ -488,7 +1113,7 @@ mod tests {
 
     #[test]
     fn duplicate_lane_is_typed_error_and_reprogram_is_idempotent() {
-        let mut pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 3);
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 3);
         let mut rng = Rng::new(2);
         let omega = Mat::randn(16, 16, &mut rng);
         let x_cal = Mat::randn(16, 16, &mut rng);
@@ -511,7 +1136,7 @@ mod tests {
         // keep picking the lowest index)
         let mut cfg = fleet_cfg(2, 2);
         cfg.router = RouterPolicy::RoundRobin;
-        let mut pool = FleetPool::new(small_chip(), cfg, 4);
+        let pool = FleetPool::new(small_chip(), cfg, 4);
         let mut rng = Rng::new(3);
         let omega = Mat::randn(16, 16, &mut rng);
         let x_cal = Mat::randn(16, 16, &mut rng);
@@ -523,14 +1148,67 @@ mod tests {
         let snaps = pool.chip_snapshots();
         let served: Vec<u64> = snaps.iter().map(|s| s.served).collect();
         assert_eq!(served.iter().sum::<u64>(), 10);
-        // least-loaded over idle chips alternates rather than pinning one
+        // round-robin over two healthy replicas alternates evenly
         assert!(served.iter().all(|&s| s >= 2), "{served:?}");
         assert!(snaps.iter().all(|s| s.queue_depth == 0));
     }
 
     #[test]
+    fn router_skips_unhealthy_replicas() {
+        // chip 0 would win every least-loaded tie; once it is draining
+        // (or degraded), all traffic must flow to chip 1
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 2), 12);
+        let mut rng = Rng::new(9);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+        let x = Mat::randn(4, 16, &mut rng);
+
+        for state in [HealthState::Draining, HealthState::Degraded] {
+            pool.set_chip_health(0, state);
+            let before = pool.chip_snapshots()[0].served;
+            for _ in 0..6 {
+                pool.project(KernelLane::Rbf, &x).unwrap();
+            }
+            assert_eq!(
+                pool.chip_snapshots()[0].served,
+                before,
+                "{state:?} replica must not be routed to"
+            );
+            pool.set_chip_health(0, HealthState::Healthy);
+        }
+        // with chip 0 healthy again it serves once more
+        let before = pool.chip_snapshots()[0].served;
+        for _ in 0..6 {
+            pool.project(KernelLane::Rbf, &x).unwrap();
+        }
+        assert!(pool.chip_snapshots()[0].served > before);
+    }
+
+    #[test]
+    fn faulted_chip_fails_over_to_replica_without_request_errors() {
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 2), 13);
+        let mut rng = Rng::new(10);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+        let x = Mat::randn(4, 16, &mut rng);
+        pool.inject_fault(0, true);
+        for _ in 0..5 {
+            // chip 0 still looks Healthy — the retry path, not the
+            // router, keeps these requests alive
+            pool.project(KernelLane::Rbf, &x).unwrap();
+        }
+        assert!(pool.chip_errors(0) > 0);
+        assert_eq!(pool.chip_snapshots()[1].served, 5);
+        assert!(!pool.probe_chip(0));
+        pool.inject_fault(0, false);
+        assert!(pool.probe_chip(0));
+    }
+
+    #[test]
     fn unprogrammed_lane_and_bad_shape_error() {
-        let mut pool = FleetPool::new(small_chip(), fleet_cfg(1, 1), 5);
+        let pool = FleetPool::new(small_chip(), fleet_cfg(1, 1), 5);
         let x = Mat::zeros(1, 16);
         assert!(pool.project(KernelLane::Rbf, &x).is_err());
         let mut rng = Rng::new(4);
@@ -548,7 +1226,7 @@ mod tests {
     fn failed_reprogram_keeps_old_lane_serving() {
         // 1 chip x 4 cores: a 16x32 lane fits (2 cores), a 16x128 rewrite
         // needs 8 and must be rejected *without* tearing the old lane down
-        let mut pool = FleetPool::new(small_chip(), fleet_cfg(1, 1), 11);
+        let pool = FleetPool::new(small_chip(), fleet_cfg(1, 1), 11);
         let mut rng = Rng::new(8);
         let omega = Mat::randn(16, 32, &mut rng);
         let x_cal = Mat::randn(16, 16, &mut rng);
@@ -569,7 +1247,7 @@ mod tests {
 
     #[test]
     fn reprogram_on_aged_fleet_restarts_chip_clocks() {
-        let mut pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 9);
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 9);
         let mut rng = Rng::new(7);
         let omega = Mat::randn(16, 32, &mut rng); // sharded over both chips
         let x_cal = Mat::randn(16, 16, &mut rng);
@@ -585,7 +1263,7 @@ mod tests {
 
     #[test]
     fn clock_and_recal_counters() {
-        let mut pool = FleetPool::new(small_chip(), fleet_cfg(2, 2), 6);
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 2), 6);
         let mut rng = Rng::new(5);
         let omega = Mat::randn(16, 16, &mut rng);
         let x_cal = Mat::randn(16, 16, &mut rng);
@@ -600,5 +1278,119 @@ mod tests {
         let snaps = pool.chip_snapshots();
         assert_eq!(snaps[0].recals, 1);
         assert_eq!(snaps[1].recals, 0);
+        // recal passed through Draining and back to Healthy
+        assert_eq!(pool.chip_health(0), HealthState::Healthy);
+    }
+
+    #[test]
+    fn evict_replaces_shards_on_survivors() {
+        // 3 chips, replication 2: evicting one chip must restore 2
+        // replicas per shard using the third chip
+        let pool = FleetPool::new(small_chip(), fleet_cfg(3, 2), 14);
+        let mut rng = Rng::new(11);
+        let omega = Mat::randn(16, 32, &mut rng); // 2 shards x 2 replicas
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        let before = pool.mapping(KernelLane::Rbf).unwrap().plan();
+        let victim = before.shards[0].chips[0];
+
+        pool.inject_fault(victim, true);
+        let moved = pool.evict_chip(victim).unwrap();
+        assert!(moved >= 1, "at least one shard replica re-placed");
+        assert_eq!(pool.chip_health(victim), HealthState::Evicted);
+        assert_eq!(pool.n_chips(), 2);
+        assert_eq!(pool.total_slots(), 3);
+        assert_eq!(pool.events().evictions, 1);
+
+        let after = pool.mapping(KernelLane::Rbf).unwrap().plan();
+        for sh in &after.shards {
+            assert!(!sh.chips.contains(&victim), "{sh:?}");
+            assert_eq!(sh.chips.len(), 2, "replication restored: {sh:?}");
+        }
+        // the fleet still answers, against the digital twin
+        let x = Mat::randn(8, 16, &mut rng);
+        let u = pool.project(KernelLane::Rbf, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &omega);
+        assert!(rel_fro_error(&u.data, &want.data) < 0.12);
+        // idempotent
+        assert_eq!(pool.evict_chip(victim).unwrap(), 0);
+    }
+
+    #[test]
+    fn add_and_populate_then_retire_roundtrip() {
+        // round-robin so a sequential caller demonstrably reaches the
+        // new replica (least-loaded over idle chips pins the lowest index)
+        let mut cfg = fleet_cfg(2, 2);
+        cfg.router = RouterPolicy::RoundRobin;
+        let pool = FleetPool::new(small_chip(), cfg, 15);
+        let mut rng = Rng::new(12);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        assert_eq!(pool.n_chips(), 2);
+
+        let c = pool.add_chip(ChipCapacity { cores: 4, noise_tier: 1.0 });
+        assert_eq!(c, 2);
+        assert_eq!(pool.chip_health(c), HealthState::Joining);
+        assert_eq!(pool.n_chips(), 3);
+        let added = pool.populate_chip(c).unwrap();
+        assert_eq!(added, 1, "one surge replica of the single shard");
+        assert_eq!(pool.chip_health(c), HealthState::Healthy);
+        assert_eq!(pool.events().scale_ups, 1);
+        let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+        assert!(plan.shards[0].chips.contains(&c));
+
+        // the new chip actually serves traffic
+        let x = Mat::randn(4, 16, &mut rng);
+        let mut served_new = 0;
+        for _ in 0..12 {
+            pool.project(KernelLane::Rbf, &x).unwrap();
+            served_new = pool.chip_snapshots()[c].served;
+        }
+        assert!(served_new > 0, "populated chip never served");
+
+        pool.retire_chip(c).unwrap();
+        assert_eq!(pool.chip_health(c), HealthState::Evicted);
+        assert_eq!(pool.n_chips(), 2);
+        assert_eq!(pool.events().scale_downs, 1);
+        let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+        assert!(!plan.shards[0].chips.contains(&c));
+        pool.project(KernelLane::Rbf, &x).unwrap();
+    }
+
+    #[test]
+    fn retire_sole_replica_moves_shard_first() {
+        // replication 1: the retiring chip holds the only copy of its
+        // shards, which must be re-programmed onto the survivor
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 1), 16);
+        let mut rng = Rng::new(13);
+        let omega = Mat::randn(16, 32, &mut rng); // 2 shards, one per chip
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        pool.retire_chip(1).unwrap();
+        let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+        for sh in &plan.shards {
+            assert_eq!(sh.chips, vec![0], "{sh:?}");
+        }
+        let x = Mat::randn(4, 16, &mut rng);
+        let u = pool.project(KernelLane::Rbf, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &omega);
+        assert!(rel_fro_error(&u.data, &want.data) < 0.12);
+    }
+
+    #[test]
+    fn drain_and_undrain() {
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 2), 17);
+        pool.drain_chip(0).unwrap();
+        assert_eq!(pool.chip_health(0), HealthState::Draining);
+        assert_eq!(pool.events().drains, 1);
+        // undrain restores service; undraining a healthy chip errors
+        pool.undrain_chip(0).unwrap();
+        assert_eq!(pool.chip_health(0), HealthState::Healthy);
+        assert!(pool.undrain_chip(0).is_err());
+        // an operator's drain sticks through a recalibration pass
+        pool.drain_chip(1).unwrap();
+        pool.recalibrate_chip(1).unwrap();
+        assert_eq!(pool.chip_health(1), HealthState::Draining);
     }
 }

@@ -19,6 +19,7 @@
 //! a time, so with replication ≥ 2 (or ≥ 2 chips) the other replicas keep
 //! serving during a recalibration.
 
+use super::control::HealthState;
 use super::pool::FleetPool;
 use crate::aimc::pcm::DRIFT_T0;
 use crate::config::ChipConfig;
@@ -89,12 +90,26 @@ impl RecalScheduler {
     /// One scheduler pass: sync every chip's drift model to its current
     /// age, then reprogram the chips whose estimated drift error exceeds
     /// the budget. Chips are recalibrated sequentially — at most one chip
-    /// is locked for rewriting at any moment, so the rest of the fleet
-    /// keeps serving. Returns the recalibrated chip indices.
+    /// is locked for rewriting at any moment, and `recalibrate_chip`
+    /// marks the chip `Draining` *before* taking its lock, so the router
+    /// steers traffic to replicas rather than queueing behind the
+    /// rewrite. Evicted tombstones, `Joining` chips (the autoscaler owns
+    /// their first programming) and unreachable chips (the health
+    /// monitor owns their eviction) are skipped. Returns the
+    /// recalibrated chip indices.
     pub fn tick(&self, pool: &FleetPool) -> Result<Vec<usize>> {
         pool.sync_drift();
         let mut recalibrated = Vec::new();
-        for i in 0..pool.n_chips() {
+        for i in 0..pool.total_slots() {
+            let health = pool.chip_health(i);
+            // Draining is skipped too: an operator (or scale-down) is
+            // vacating the chip, and a rewrite would pointlessly refresh
+            // hardware that is about to leave
+            if !matches!(health, HealthState::Healthy | HealthState::Degraded)
+                || !pool.probe_chip(i)
+            {
+                continue;
+            }
             // chips holding no shards have nothing to reprogram
             if pool.chip_shard_count(i) > 0 && self.due(pool.chip_config(), pool.chip_age(i)) {
                 pool.recalibrate_chip(i)?;

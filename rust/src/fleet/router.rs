@@ -79,6 +79,16 @@ impl Router {
         mix64(c)
     }
 
+    /// Choose among an explicit candidate list (already filtered by the
+    /// caller — e.g. to the routable replicas of a shard) and return the
+    /// chosen *candidate value*. `load` is keyed by candidate value, so
+    /// callers can pass global chip indices directly.
+    pub fn pick_among(&self, candidates: &[usize], load: impl Fn(usize) -> usize) -> usize {
+        debug_assert!(!candidates.is_empty());
+        let k = self.pick(candidates.len(), |i| load(candidates[i]));
+        candidates[k]
+    }
+
     /// Choose a replica index in `[0, n)`. `load` reports the current
     /// queue depth (in-flight analog MVMs, queued + executing) of replica
     /// `i`; it is only consulted by the load-aware policies.
@@ -167,6 +177,19 @@ mod tests {
         );
         // and both probes actually vary (not stuck on one replica)
         assert!(min > 800);
+    }
+
+    #[test]
+    fn pick_among_returns_candidate_values() {
+        let r = Router::new(RouterPolicy::LeastLoaded, 0);
+        // candidates are global chip indices, loads keyed by them
+        let loads = [9usize, 9, 1, 9, 0];
+        assert_eq!(r.pick_among(&[1, 2, 3], |c| loads[c]), 2);
+        // a single candidate short-circuits regardless of load
+        assert_eq!(r.pick_among(&[3], |c| loads[c]), 3);
+        let rr = Router::new(RouterPolicy::RoundRobin, 0);
+        let picks: Vec<usize> = (0..4).map(|_| rr.pick_among(&[5, 7], |_| 0)).collect();
+        assert_eq!(picks, vec![5, 7, 5, 7]);
     }
 
     #[test]

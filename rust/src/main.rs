@@ -74,6 +74,16 @@ SUBCOMMANDS
       --fleet-replication N    chip-level replicas per lane shard
       --recal-interval-s S     drift recalibration pass period (0 = off)
       --drift-err-budget E     estimated drift error that triggers recal
+      --control                run the fleet control plane (health probes,
+                               chip eviction + shard re-placement, draining)
+      --control-interval-s S   control tick period (default 1.0)
+      --autoscale              queue-driven fleet autoscaling (implies --control)
+      --min-chips N --max-chips N
+                               autoscaler fleet-size bounds
+      --scale-up-depth F       mean queue depth per chip that adds a chip
+      --scale-down-depth F     mean queue depth per chip that drains one
+      --chip-cores LIST        per-chip core counts for heterogeneous
+                               fleets, e.g. 64,32,64
   experiment <id>              regenerate a paper table/figure:
       fig2a fig2b fig3b table1 supp20 supp21 supp8 supp-table2
       redraw ablate-relu ablate-replication ablate-noise all
@@ -113,6 +123,30 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
         cfg.fleet.router = RouterPolicy::parse(r)
             .ok_or_else(|| Error::Parse(format!("--router: unknown policy '{r}'")))?;
     }
+    // control plane (autoscaling needs the control loop to observe)
+    cfg.fleet.control.enabled =
+        cfg.fleet.control.enabled || args.bool("control") || args.bool("autoscale");
+    cfg.fleet.control.autoscale = cfg.fleet.control.autoscale || args.bool("autoscale");
+    cfg.fleet.control.interval_s =
+        args.f64_or("control-interval-s", cfg.fleet.control.interval_s)?;
+    cfg.fleet.control.min_chips =
+        args.usize_or("min-chips", cfg.fleet.control.min_chips)?.max(1);
+    cfg.fleet.control.max_chips =
+        args.usize_or("max-chips", cfg.fleet.control.max_chips)?.max(1);
+    cfg.fleet.control.scale_up_depth =
+        args.f64_or("scale-up-depth", cfg.fleet.control.scale_up_depth)?;
+    cfg.fleet.control.scale_down_depth =
+        args.f64_or("scale-down-depth", cfg.fleet.control.scale_down_depth)?;
+    if let Some(list) = args.get("chip-cores") {
+        cfg.fleet.chip_cores = list
+            .split(',')
+            .map(|p| {
+                p.trim().parse::<usize>().map_err(|_| {
+                    Error::Parse(format!("--chip-cores expects integers, got '{p}'"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
 
     println!("booting engine (artifacts: {})...", cfg.artifacts_dir);
     let engine = Engine::start(&cfg)?;
@@ -135,6 +169,22 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
             ),
             None => println!("drift recal: enabled, but this chip model never drifts"),
         }
+    }
+    if cfg.fleet.control.enabled {
+        let c = &cfg.fleet.control;
+        println!(
+            "control plane: tick {:.2}s, evict after {} dead probes{}",
+            c.interval_s,
+            c.probe_evict_after,
+            if c.autoscale {
+                format!(
+                    ", autoscale {}..{} chips (up >{:.1}, down <{:.1} in-flight/chip)",
+                    c.min_chips, c.max_chips, c.scale_up_depth, c.scale_down_depth
+                )
+            } else {
+                String::new()
+            }
+        );
     }
     let server = Server::start(engine, &cfg.serve.bind)?;
     println!(

@@ -1,14 +1,18 @@
 //! Fleet integration: sharded placement + routing + drift-aware
-//! recalibration, driven the way a long-lived deployment would be —
-//! but on a virtual clock, so months of PCM drift run in milliseconds.
-//! No artifacts needed: the analog path is pure Rust.
+//! recalibration + the control plane (health/eviction/failover,
+//! draining, autoscaling), driven the way a long-lived deployment would
+//! be — but on a virtual clock, so months of PCM drift run in
+//! milliseconds. No artifacts needed: the analog path is pure Rust.
 
 use imka::aimc::pcm::DRIFT_T0;
-use imka::config::{ChipConfig, FleetConfig};
+use imka::config::{ChipConfig, ControlConfig, FleetConfig};
 use imka::coordinator::request::KernelLane;
 use imka::features::postprocess;
 use imka::features::sampler::{sample_omega, Sampler};
-use imka::fleet::{estimated_drift_error, FleetPool, PlacementPolicy, RecalScheduler, RouterPolicy};
+use imka::fleet::{
+    estimated_drift_error, ControlPlane, FleetPool, HealthState, PlacementPolicy, RecalScheduler,
+    RouterPolicy,
+};
 use imka::kernels::{approx_error, gram, gram_features, Kernel};
 use imka::linalg::Mat;
 use imka::util::threads::parallel_map;
@@ -38,8 +42,9 @@ fn recalibration_restores_gram_error_after_drift() {
         replication: 2,
         recal_interval_s: 0.0, // scheduler driven explicitly on the virtual clock
         drift_err_budget: 0.08,
+        ..FleetConfig::default()
     };
-    let mut pool = FleetPool::new(chip.clone(), fleet, 7);
+    let pool = FleetPool::new(chip.clone(), fleet, 7);
     let mut rng = Rng::new(0);
     let (d, m) = (16, 512);
     let omega = sample_omega(Sampler::Orf, d, m, &mut rng);
@@ -79,6 +84,8 @@ fn recalibration_restores_gram_error_after_drift() {
     let snaps = pool.chip_snapshots();
     assert!(snaps.iter().all(|s| s.recals == 1 && s.age_s == 0.0));
     assert!(snaps.iter().all(|s| s.drift_err_estimate == 0.0));
+    // recalibration passed through Draining and returned to service
+    assert!(snaps.iter().all(|s| s.health == "healthy"));
     assert_eq!(pool.clock_s(), 5e6);
     assert!(pool.chip_age(0) < DRIFT_T0);
 }
@@ -93,10 +100,9 @@ fn concurrent_replicated_serving_spreads_over_chips() {
         placement: PlacementPolicy::Packed,
         router: RouterPolicy::P2c,
         replication: 4,
-        recal_interval_s: 0.0,
-        drift_err_budget: 0.1,
+        ..FleetConfig::default()
     };
-    let mut pool = FleetPool::new(ChipConfig::default(), fleet, 3);
+    let pool = FleetPool::new(ChipConfig::default(), fleet, 3);
     let mut rng = Rng::new(1);
     let omega = sample_omega(Sampler::Orf, 16, 128, &mut rng);
     let x_cal = Mat::randn(64, 16, &mut rng);
@@ -131,7 +137,9 @@ fn concurrent_replicated_serving_spreads_over_chips() {
 }
 
 /// A lane wider than one chip's crossbar budget splits across chips and
-/// still round-trips the whole-matrix product.
+/// still round-trips the whole-matrix product — and the shard fan-out
+/// (shards of one request run on worker threads) changes nothing about
+/// the result.
 #[test]
 fn oversized_lane_shards_across_chips() {
     // 4-core chips of 16x16 hold at most 4 column blocks; 16x128 needs 8
@@ -140,17 +148,15 @@ fn oversized_lane_shards_across_chips() {
         n_chips: 2,
         placement: PlacementPolicy::Packed,
         router: RouterPolicy::LeastLoaded,
-        replication: 1,
-        recal_interval_s: 0.0,
-        drift_err_budget: 0.1,
+        ..FleetConfig::default()
     };
-    let mut pool = FleetPool::new(chip, fleet, 5);
+    let pool = FleetPool::new(chip, fleet, 5);
     let mut rng = Rng::new(2);
     let omega = Mat::randn(16, 128, &mut rng);
     let x_cal = Mat::randn(32, 16, &mut rng);
     pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
     let mapping = pool.mapping(KernelLane::Rbf).unwrap();
-    assert!(mapping.plan.shards.len() >= 2);
+    assert!(mapping.plan().shards.len() >= 2);
     assert_eq!(pool.cores_used(), 8);
 
     let x = Mat::randn(8, 16, &mut rng);
@@ -158,4 +164,237 @@ fn oversized_lane_shards_across_chips() {
     let want = imka::linalg::matmul(&x, &omega);
     let rel = imka::util::stats::rel_fro_error(&u.data, &want.data);
     assert!(rel < 0.03, "sharded round-trip rel {rel}");
+}
+
+fn small_chip() -> ChipConfig {
+    ChipConfig { cores: 4, rows: 16, cols: 16, ..ChipConfig::default() }
+}
+
+/// ISSUE acceptance: a 4-chip fleet serving a replicated sharded lane
+/// keeps answering `project` requests — no errors, Gram error within the
+/// noise budget — while one chip dies, is evicted, and its shards are
+/// re-placed on the survivors.
+#[test]
+fn serving_continues_through_eviction_and_replacement() {
+    let fleet = FleetConfig {
+        n_chips: 4,
+        placement: PlacementPolicy::Sharded,
+        router: RouterPolicy::LeastLoaded,
+        replication: 2,
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(small_chip(), fleet, 21);
+    let mut rng = Rng::new(3);
+    // 4 column shards x 2 replicas over 4 small chips
+    let omega = sample_omega(Sampler::Orf, 16, 64, &mut rng);
+    let x_cal = Mat::randn(64, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+    let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+    assert_eq!(plan.shards.len(), 4);
+    assert_eq!(plan.replication(), 2);
+
+    let mut x = Mat::randn(32, 16, &mut rng);
+    x.scale(0.5);
+    let e_before = rbf_gram_err(&pool, &x);
+
+    // kill a chip, then evict it *while* 6 threads keep projecting
+    let victim = plan.shards[0].chips[0];
+    pool.inject_fault(victim, true);
+    let pool_ref = &pool;
+    let x_ref = &x;
+    let outcomes = parallel_map(7, |i| {
+        if i == 0 {
+            pool_ref.evict_chip(victim).map(|_| 0.0)
+        } else {
+            let mut worst: f64 = 0.0;
+            for _ in 0..8 {
+                let u = pool_ref.project(KernelLane::Rbf, x_ref)?;
+                assert!(u.data.iter().all(|v| v.is_finite()));
+                worst = worst.max(1e-12);
+            }
+            Ok(worst)
+        }
+    });
+    for (i, o) in outcomes.iter().enumerate() {
+        assert!(o.is_ok(), "caller {i} failed during eviction: {o:?}");
+    }
+
+    // the dead chip is out, every shard back at 2 replicas on survivors
+    assert_eq!(pool.chip_health(victim), HealthState::Evicted);
+    assert_eq!(pool.n_chips(), 3);
+    let after = pool.mapping(KernelLane::Rbf).unwrap().plan();
+    for sh in &after.shards {
+        assert!(!sh.chips.contains(&victim), "{sh:?}");
+        assert_eq!(sh.chips.len(), 2, "replication restored: {sh:?}");
+    }
+    assert_eq!(pool.events().evictions, 1);
+
+    // kernel quality is back inside the noise budget
+    let e_after = rbf_gram_err(&pool, &x);
+    assert!(
+        e_after < 2.0 * e_before + 0.02,
+        "failover cost accuracy: before {e_before}, after {e_after}"
+    );
+}
+
+fn control_cfg(min: usize, max: usize) -> ControlConfig {
+    ControlConfig {
+        enabled: true,
+        autoscale: true,
+        min_chips: min,
+        max_chips: max,
+        scale_up_depth: 2.0,
+        scale_down_depth: 0.5,
+        scale_patience: 2,
+        probe_evict_after: 2,
+        ..ControlConfig::default()
+    }
+}
+
+/// ISSUE acceptance: the autoscaler demonstrably changes live `n_chips`
+/// in both directions — sustained queue depth adds a chip (programmed
+/// and serving), sustained idleness drains and retires one.
+#[test]
+fn autoscaler_changes_live_fleet_size_in_both_directions() {
+    let chip = small_chip();
+    let fleet = FleetConfig {
+        n_chips: 2,
+        placement: PlacementPolicy::Sharded,
+        router: RouterPolicy::RoundRobin,
+        replication: 2,
+        control: control_cfg(1, 3),
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(chip.clone(), fleet.clone(), 22);
+    let mut rng = Rng::new(4);
+    let omega = Mat::randn(16, 16, &mut rng);
+    let x_cal = Mat::randn(16, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+    assert_eq!(pool.n_chips(), 2);
+    let mut plane = ControlPlane::new(&fleet, &chip);
+
+    // sustained saturation (tick_with_depth is the live loop's code
+    // path with the queue-depth observation made explicit)
+    assert!(plane.tick_with_depth(&pool, 20).unwrap().added.is_empty());
+    let report = plane.tick_with_depth(&pool, 20).unwrap();
+    assert_eq!(report.added, vec![2], "patience=2 adds on the 2nd hot tick");
+    assert_eq!(pool.n_chips(), 3);
+    assert_eq!(pool.chip_health(2), HealthState::Healthy);
+    assert_eq!(pool.events().scale_ups, 1);
+    // the surge chip holds a replica and actually serves
+    let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+    assert!(plan.shards[0].chips.contains(&2), "{plan:?}");
+    let x = Mat::randn(4, 16, &mut rng);
+    for _ in 0..9 {
+        pool.project(KernelLane::Rbf, &x).unwrap();
+    }
+    assert!(pool.chip_snapshots()[2].served > 0);
+
+    // sustained idleness drains one chip back out (highest index first)
+    assert!(plane.tick_with_depth(&pool, 0).unwrap().retired.is_empty());
+    let report = plane.tick_with_depth(&pool, 0).unwrap();
+    assert_eq!(report.retired, vec![2]);
+    assert_eq!(pool.n_chips(), 2);
+    assert_eq!(pool.chip_health(2), HealthState::Evicted);
+    assert_eq!(pool.events().scale_downs, 1);
+    let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+    assert!(!plan.shards[0].chips.contains(&2), "{plan:?}");
+    // and the fleet still answers
+    pool.project(KernelLane::Rbf, &x).unwrap();
+
+    // min_chips floors the shrink: two more idle windows retire chip 1
+    // but never chip 0
+    for _ in 0..4 {
+        plane.tick_with_depth(&pool, 0).unwrap();
+    }
+    assert_eq!(pool.n_chips(), 1);
+    assert_eq!(pool.chip_health(0), HealthState::Healthy);
+    for _ in 0..4 {
+        plane.tick_with_depth(&pool, 0).unwrap();
+    }
+    assert_eq!(pool.n_chips(), 1, "min_chips must hold the floor");
+    pool.project(KernelLane::Rbf, &x).unwrap();
+}
+
+/// The health monitor degrades a chip on its first dead heartbeat and
+/// evicts it after `probe_evict_after` consecutive failures; requests
+/// keep succeeding via replicas the whole time.
+#[test]
+fn health_monitor_degrades_then_evicts_dead_chip() {
+    let chip = small_chip();
+    let fleet = FleetConfig {
+        n_chips: 2,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::LeastLoaded,
+        replication: 2,
+        control: ControlConfig { enabled: true, probe_evict_after: 2, ..ControlConfig::default() },
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(chip.clone(), fleet.clone(), 23);
+    let mut rng = Rng::new(5);
+    let omega = Mat::randn(16, 16, &mut rng);
+    let x_cal = Mat::randn(16, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+    let mut plane = ControlPlane::new(&fleet, &chip);
+    let x = Mat::randn(4, 16, &mut rng);
+
+    pool.inject_fault(0, true);
+    let r1 = plane.tick(&pool).unwrap();
+    assert!(r1.evicted.is_empty());
+    assert_eq!(pool.chip_health(0), HealthState::Degraded);
+    pool.project(KernelLane::Rbf, &x).unwrap(); // replica 1 answers
+
+    let r2 = plane.tick(&pool).unwrap();
+    assert_eq!(r2.evicted, vec![0]);
+    assert_eq!(pool.chip_health(0), HealthState::Evicted);
+    assert_eq!(pool.n_chips(), 1);
+    pool.project(KernelLane::Rbf, &x).unwrap();
+
+    // a healthy fleet member that recovers is re-promoted: chip 1 never
+    // left Healthy
+    assert_eq!(pool.chip_health(1), HealthState::Healthy);
+}
+
+/// Heterogeneous capacity descriptors: the planner's cost model places
+/// by fractional load against per-chip core budgets, so a small chip is
+/// never over-packed — and the emulated chip itself is built with the
+/// smaller core count, enforcing the budget at the hardware layer too.
+#[test]
+fn heterogeneous_fleet_never_overpacks_small_chip() {
+    let fleet = FleetConfig {
+        n_chips: 2,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::LeastLoaded,
+        chip_cores: vec![4, 2],
+        noise_tiers: vec![1.0, 1.5],
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(small_chip(), fleet, 24);
+    let mut rng = Rng::new(6);
+    // 3 cores: only the 4-core chip can host it
+    let omega = Mat::randn(16, 48, &mut rng);
+    let x_cal = Mat::randn(16, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+    let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+    assert_eq!(plan.shards[0].chips, vec![0]);
+
+    // 2 cores: chip 0 is full (3+2 > 4), so this lands on the small chip
+    // at exactly its budget
+    let omega2 = Mat::randn(16, 32, &mut rng);
+    pool.program_lane(KernelLane::Softmax, omega2.clone(), &x_cal, 1).unwrap();
+    let snaps = pool.chip_snapshots();
+    assert_eq!(snaps[0].cores_used, 3);
+    assert_eq!(snaps[1].cores_used, 2, "small chip filled to, not past, budget");
+    assert!(snaps[1].utilization <= 1.0 + 1e-9);
+
+    // a third 2-core lane fits nowhere: typed capacity error, no change
+    let omega3 = Mat::randn(16, 32, &mut rng);
+    assert!(pool.program_lane(KernelLane::ArcCos0, omega3, &x_cal, 1).is_err());
+    assert_eq!(pool.cores_used(), 5);
+
+    // both lanes answer against their digital twins
+    let x = Mat::randn(8, 16, &mut rng);
+    let u = pool.project(KernelLane::Softmax, &x).unwrap();
+    let want = imka::linalg::matmul(&x, &omega2);
+    assert!(imka::util::stats::rel_fro_error(&u.data, &want.data) < 0.12);
 }

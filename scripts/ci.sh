@@ -16,6 +16,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# placement/routing/failover smoke: a 2-chip fleet with a small lane runs
+# the full bench (scaling rows + chaos eviction) in seconds, so fleet
+# regressions surface in the tier-1 gate even without artifacts
+echo "== bench_fleet smoke (2-chip, small lane) =="
+IMKA_BENCH_FLEET_SMOKE=1 cargo bench --bench bench_fleet
+
 if [ "${SKIP_FMT:-0}" != "1" ]; then
     if command -v rustfmt >/dev/null 2>&1; then
         echo "== cargo fmt --check =="
