@@ -1,0 +1,170 @@
+//! Bench: streaming kernelized-attention session throughput on both
+//! projection paths, with per-session concurrency over the fleet.
+//!
+//! Opens `sessions` sessions and streams `tokens` tokens through each,
+//! token-by-token (the serving hot path: one `attn_append` per token).
+//! Sessions run concurrently on worker threads, so the analog rows also
+//! exercise the router + per-chip locks the same way feature traffic
+//! does. Alongside throughput, the final token of a probe session is
+//! checked against the *offline* `favor_attention` on the full prefix —
+//! fp tolerance on the fp32 path, the paper-scale relative-error
+//! envelope on the analog path (the ISSUE 4 acceptance metric).
+//!
+//! Emits one human-readable line and one JSON row per path.
+//! Run: cargo bench --bench bench_attention_serve
+//! Smoke mode (CI tier-1 gate): IMKA_BENCH_ATTN_SMOKE=1 shrinks the
+//! geometry so both paths run in seconds without artifacts.
+
+use imka::config::json::{num, obj, s, Json};
+use imka::config::{AttnServeConfig, ChipConfig, FleetConfig};
+use imka::coordinator::session::{head_omega, SessionManager};
+use imka::coordinator::PathKind;
+use imka::features::favor::favor_attention;
+use imka::fleet::{FleetPool, PlacementPolicy, RouterPolicy};
+use imka::linalg::Mat;
+use imka::util::stats::rel_fro_error;
+use imka::util::threads::parallel_map;
+use imka::util::{Rng, Timer};
+
+struct Params {
+    heads: usize,
+    d_head: usize,
+    m: usize,
+    tokens: usize,
+    sessions: usize,
+    n_chips: usize,
+}
+
+fn params() -> Params {
+    if std::env::var("IMKA_BENCH_ATTN_SMOKE").is_ok() {
+        Params { heads: 2, d_head: 8, m: 32, tokens: 24, sessions: 2, n_chips: 2 }
+    } else {
+        Params { heads: 4, d_head: 16, m: 128, tokens: 192, sessions: 8, n_chips: 4 }
+    }
+}
+
+fn attn_cfg(p: &Params) -> AttnServeConfig {
+    AttnServeConfig {
+        heads: p.heads,
+        d_head: p.d_head,
+        m: p.m,
+        max_sessions: p.sessions + 1,
+        path: "analog".to_string(),
+        seed: 0xA77E,
+    }
+}
+
+/// Per-head q/k/v streams for one session plus flattened token vectors.
+fn gen_stream(
+    seed: u64,
+    p: &Params,
+) -> (Vec<Mat>, Vec<Mat>, Vec<Mat>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(seed);
+    let mk = |rng: &mut Rng| {
+        (0..p.heads)
+            .map(|_| {
+                let mut m = Mat::randn(p.tokens, p.d_head, rng);
+                m.scale(0.5);
+                m
+            })
+            .collect::<Vec<_>>()
+    };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let flatten = |mats: &[Mat]| {
+        (0..p.tokens)
+            .map(|t| mats.iter().flat_map(|m| m.row(t).to_vec()).collect::<Vec<f32>>())
+            .collect::<Vec<_>>()
+    };
+    let (fq, fk, fv) = (flatten(&q), flatten(&k), flatten(&v));
+    (q, k, v, fq, fk, fv)
+}
+
+fn run_path(p: &Params, pool: &FleetPool, mgr: &SessionManager, path: PathKind) {
+    let streams: Vec<_> = (0..p.sessions).map(|s| gen_stream(100 + s as u64, p)).collect();
+    let infos: Vec<_> = (0..p.sessions)
+        .map(|_| mgr.open(pool, Some(path)).unwrap())
+        .collect();
+
+    let t = Timer::start();
+    let finals: Vec<Vec<f32>> = parallel_map(p.sessions, |sidx| {
+        let (_, _, _, fq, fk, fv) = &streams[sidx];
+        let id = infos[sidx].id;
+        let mut last = Vec::new();
+        for tok in 0..p.tokens {
+            let out = mgr
+                .append_batch(
+                    pool,
+                    id,
+                    &[(fq[tok].as_slice(), fk[tok].as_slice(), fv[tok].as_slice())],
+                )
+                .unwrap();
+            last = out.into_iter().next().unwrap().0;
+        }
+        last
+    });
+    let secs = t.elapsed_secs();
+    let total_tokens = p.sessions * p.tokens;
+    let tokens_per_s = total_tokens as f64 / secs;
+
+    // accuracy probe: session 0's final token vs offline favor on the
+    // whole prefix, per head
+    let cfg = mgr.config();
+    let (q, k, v, ..) = &streams[0];
+    let mut rel = 0.0;
+    for h in 0..p.heads {
+        let offline = favor_attention(&q[h], &k[h], &v[h], &head_omega(cfg, h));
+        let want = offline.row(p.tokens - 1);
+        let got = &finals[0][h * p.d_head..(h + 1) * p.d_head];
+        rel += rel_fro_error(got, want);
+    }
+    rel /= p.heads as f64;
+
+    for info in infos {
+        mgr.close(info.id).unwrap();
+    }
+
+    println!(
+        "path {:>7}: {tokens_per_s:>8.1} tokens/s  ({} sessions x {} tokens, \
+         {} heads x d{} x m{})  final-token rel err vs offline favor {rel:.4}",
+        path.as_str(),
+        p.sessions,
+        p.tokens,
+        p.heads,
+        p.d_head,
+        p.m
+    );
+    let row = obj(vec![
+        ("bench", s("attention_serve")),
+        ("path", s(path.as_str())),
+        ("heads", num(p.heads as f64)),
+        ("d_head", num(p.d_head as f64)),
+        ("m", num(p.m as f64)),
+        ("sessions", num(p.sessions as f64)),
+        ("tokens", num(p.tokens as f64)),
+        ("tokens_per_s", num(tokens_per_s)),
+        ("final_rel_err_vs_offline", num(rel)),
+        ("n_chips", num(p.n_chips as f64)),
+        ("ok", Json::Bool(true)),
+    ]);
+    println!("{}", row.to_string());
+}
+
+fn main() {
+    let p = params();
+    println!(
+        "== streaming kernelized-attention serving ({} sessions x {} tokens, \
+         {} chips) ==",
+        p.sessions, p.tokens, p.n_chips
+    );
+    let fleet = FleetConfig {
+        n_chips: p.n_chips,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::P2c,
+        replication: p.n_chips,
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(ChipConfig::default(), fleet, 9);
+    let mgr = SessionManager::new(attn_cfg(&p), 1);
+    run_path(&p, &pool, &mgr, PathKind::Digital);
+    run_path(&p, &pool, &mgr, PathKind::Analog);
+}

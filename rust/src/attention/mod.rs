@@ -4,7 +4,12 @@
 //! module adds the analog-vs-digital comparison harness: projecting Q/K
 //! through the chip simulator (or emulator) instead of a digital matmul
 //! and quantifying the induced attention-matrix error — exactly the
-//! isolated-error experiment of Fig. 3b.
+//! isolated-error experiment of Fig. 3b. [`serve`] carries the same math
+//! onto the serving path: per-session FAVOR+ running sums that stream
+//! tokens with O(1) state (see `coordinator::session` for the fleet
+//! wiring).
+
+pub mod serve;
 
 use crate::aimc::Emulator;
 use crate::config::ChipConfig;
@@ -20,6 +25,7 @@ use crate::util::Rng;
 pub use crate::features::favor::{
     exact_attention, favor_attention, linear_attention_from_features,
 };
+pub use serve::{causal_favor_attention, HeadState};
 
 /// Where the feature projection u = x·Ω runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

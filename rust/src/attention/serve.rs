@@ -1,0 +1,182 @@
+//! Streaming kernelized-attention state — the serving-side form of the
+//! FAVOR+ re-association ([`crate::features::favor`]).
+//!
+//! Linear attention admits O(1)-per-token sufficient statistics: after t
+//! tokens, `S = Σ_{i≤t} φ(k_i) v_iᵀ` (Df × dv) and `z = Σ_{i≤t} φ(k_i)`
+//! (Df), and the attention output for a query is `φ(q)ᵀS / (φ(q)ᵀz)`.
+//! A session therefore streams token-by-token with per-head state that
+//! never grows with context length — the property that makes kernelized
+//! attention a serving workload rather than a batch experiment, with the
+//! φ projections `u = x·Ω` running as analog MVMs on the fleet.
+//!
+//! This module owns the pure state math; the session registry and the
+//! fleet-wired φ paths live in [`crate::coordinator::session`].
+
+use crate::features::favor::positive_features;
+use crate::linalg::Mat;
+
+/// Running FAVOR+ state of one attention head.
+#[derive(Clone)]
+pub struct HeadState {
+    /// (Df × dv) running feature–value outer-product sum Σ φ(k)vᵀ
+    s: Mat,
+    /// (Df) running feature sum Σ φ(k)
+    z: Vec<f32>,
+    /// tokens absorbed so far
+    tokens: usize,
+}
+
+impl HeadState {
+    /// Fresh state for feature dimension `df` and value dimension `dv`.
+    pub fn new(df: usize, dv: usize) -> HeadState {
+        HeadState { s: Mat::zeros(df, dv), z: vec![0.0; df], tokens: 0 }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Fold one token's key features φ(k) and value v into the state.
+    pub fn absorb(&mut self, phi_k: &[f32], v: &[f32]) {
+        debug_assert_eq!(phi_k.len(), self.z.len());
+        debug_assert_eq!(v.len(), self.s.cols);
+        for (i, &f) in phi_k.iter().enumerate() {
+            self.z[i] += f;
+            let row = self.s.row_mut(i);
+            for (r, &vv) in row.iter_mut().zip(v) {
+                *r += f * vv;
+            }
+        }
+        self.tokens += 1;
+    }
+
+    /// Attention output for query features φ(q) against the current
+    /// state: `φ(q)ᵀS / max(φ(q)ᵀz, ε)` — identical normalization to the
+    /// offline [`crate::features::favor::linear_attention_from_features`].
+    pub fn attend(&self, phi_q: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(phi_q.len(), self.z.len());
+        let mut num = vec![0.0f32; self.s.cols];
+        let mut den = 0.0f32;
+        for (i, &f) in phi_q.iter().enumerate() {
+            if f == 0.0 {
+                continue;
+            }
+            den += f * self.z[i];
+            let row = self.s.row(i);
+            for (n, &r) in num.iter_mut().zip(row) {
+                *n += f * r;
+            }
+        }
+        let den = den.max(1e-9);
+        for n in &mut num {
+            *n /= den;
+        }
+        num
+    }
+}
+
+/// Reference: causal FAVOR+ attention for a whole sequence at once — row
+/// t attends over tokens 0..=t. This is exactly what a streamed session
+/// produces token-by-token, so tests pin the streaming path against it
+/// (and against per-prefix [`crate::features::favor::favor_attention`],
+/// whose last row it matches).
+pub fn causal_favor_attention(q: &Mat, k: &Mat, v: &Mat, omega: &Mat) -> Mat {
+    assert_eq!(q.rows, k.rows);
+    assert_eq!(k.rows, v.rows);
+    let scale = (q.cols as f32).powf(-0.25);
+    let mut qs = q.clone();
+    qs.scale(scale);
+    let mut ks = k.clone();
+    ks.scale(scale);
+    let qp = positive_features(&qs, omega);
+    let kp = positive_features(&ks, omega);
+    let mut state = HeadState::new(qp.cols, v.cols);
+    let mut out = Mat::zeros(q.rows, v.cols);
+    for t in 0..q.rows {
+        state.absorb(kp.row(t), v.row(t));
+        out.row_mut(t).copy_from_slice(&state.attend(qp.row(t)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::favor::favor_attention;
+    use crate::features::{sample_omega, Sampler};
+    use crate::util::stats::rel_fro_error;
+    use crate::util::Rng;
+
+    fn qkv(seed: u64, l: usize, d: usize) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut q = Mat::randn(l, d, &mut rng);
+        q.scale(0.5);
+        let mut k = Mat::randn(l, d, &mut rng);
+        k.scale(0.5);
+        let v = Mat::randn(l, d, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn causal_last_row_matches_offline_favor() {
+        // the final token of a causal stream has seen the whole sequence,
+        // so it must agree with full (non-causal) FAVOR+ attention's last
+        // row to float-summation-order tolerance
+        let (q, k, v) = qkv(0, 20, 8);
+        let mut rng = Rng::new(1);
+        let omega = sample_omega(Sampler::Orf, 8, 64, &mut rng);
+        let causal = causal_favor_attention(&q, &k, &v, &omega);
+        let full = favor_attention(&q, &k, &v, &omega);
+        let last = q.rows - 1;
+        let rel = rel_fro_error(causal.row(last), full.row(last));
+        assert!(rel < 1e-4, "last-row rel {rel}");
+    }
+
+    #[test]
+    fn every_prefix_matches_offline_favor_on_that_prefix() {
+        // streamed output at step t == offline favor on tokens 0..=t,
+        // last row — the acceptance identity for streamed sessions
+        let (q, k, v) = qkv(2, 12, 8);
+        let mut rng = Rng::new(3);
+        let omega = sample_omega(Sampler::Orf, 8, 32, &mut rng);
+        let causal = causal_favor_attention(&q, &k, &v, &omega);
+        for t in [0usize, 3, 7, 11] {
+            let idx: Vec<usize> = (0..=t).collect();
+            let (qp, kp, vp) = (q.select_rows(&idx), k.select_rows(&idx), v.select_rows(&idx));
+            let offline = favor_attention(&qp, &kp, &vp, &omega);
+            let rel = rel_fro_error(causal.row(t), offline.row(t));
+            assert!(rel < 1e-4, "prefix {t}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn state_is_order_insensitive_for_keys() {
+        // S and z are sums: absorbing keys in any order yields the same
+        // state (the property that makes replica retries harmless)
+        let (_, k, v) = qkv(4, 6, 4);
+        let mut rng = Rng::new(5);
+        let omega = sample_omega(Sampler::Orf, 4, 16, &mut rng);
+        let kp = positive_features(&k, &omega);
+        let mut fwd = HeadState::new(kp.cols, v.cols);
+        let mut rev = HeadState::new(kp.cols, v.cols);
+        for t in 0..k.rows {
+            fwd.absorb(kp.row(t), v.row(t));
+            rev.absorb(kp.row(k.rows - 1 - t), v.row(k.rows - 1 - t));
+        }
+        let phi_q = kp.row(0);
+        let a = fwd.attend(phi_q);
+        let b = rev.attend(phi_q);
+        let rel = rel_fro_error(&a, &b);
+        assert!(rel < 1e-5, "rel {rel}");
+        assert_eq!(fwd.tokens(), 6);
+    }
+
+    #[test]
+    fn empty_state_attends_to_zero() {
+        let state = HeadState::new(8, 4);
+        let y = state.attend(&[0.5; 8]);
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|&v| v == 0.0));
+        assert_eq!(state.tokens(), 0);
+    }
+}

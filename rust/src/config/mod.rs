@@ -7,5 +7,7 @@ pub mod settings;
 pub mod toml;
 
 pub use json::Json;
-pub use settings::{ChipConfig, Config, ControlConfig, FleetConfig, ServeConfig};
+pub use settings::{
+    AttentionConfig, AttnServeConfig, ChipConfig, Config, ControlConfig, FleetConfig, ServeConfig,
+};
 pub use toml::{TomlDoc, TomlValue};

@@ -292,6 +292,11 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// eagerly compile request-path artifacts at engine start
     pub warm: bool,
+    /// cap on requests the batcher opportunistically drains from the
+    /// ingress queue per wake-up before flushing lanes (bounds the work a
+    /// single batching pass holds un-flushed under a request flood);
+    /// 0 = auto (4 × max_batch)
+    pub drain_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -304,11 +309,18 @@ impl Default for ServeConfig {
             replication: 1,
             queue_cap: 4096,
             warm: true,
+            drain_cap: 0,
         }
     }
 }
 
 impl ServeConfig {
+    /// The opportunistic-drain cap actually applied by the batcher.
+    pub fn effective_drain_cap(&self) -> usize {
+        let cap = if self.drain_cap == 0 { self.max_batch * 4 } else { self.drain_cap };
+        cap.max(self.max_batch.max(1))
+    }
+
     fn from_doc(doc: &TomlDoc) -> Self {
         let d = ServeConfig::default();
         ServeConfig {
@@ -319,8 +331,78 @@ impl ServeConfig {
             replication: doc.usize_or("serve.replication", d.replication),
             queue_cap: doc.usize_or("serve.queue_cap", d.queue_cap),
             warm: doc.bool_or("serve.warm", d.warm),
+            drain_cap: doc.usize_or("serve.drain_cap", d.drain_cap),
         }
     }
+}
+
+/// Streaming kernelized-attention serving (`[attention.serve]`): the
+/// geometry of the per-head FAVOR+ Ω lanes programmed on the fleet and
+/// the session-registry limits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttnServeConfig {
+    /// attention heads per session (one fleet Ω lane each)
+    pub heads: usize,
+    /// per-head query/key/value dimension
+    pub d_head: usize,
+    /// random features per head (φ dimension is 2m)
+    pub m: usize,
+    /// concurrently open sessions before `attn_open` is refused
+    pub max_sessions: usize,
+    /// default projection path for `attn_open` without an explicit path
+    /// (`analog` | `digital`/`fp32`)
+    pub path: String,
+    /// Ω sampling seed (per-head streams are derived from it)
+    pub seed: u64,
+}
+
+impl Default for AttnServeConfig {
+    fn default() -> Self {
+        AttnServeConfig {
+            heads: 2,
+            d_head: 16,
+            m: 64,
+            max_sessions: 1024,
+            path: "analog".to_string(),
+            seed: 0xA77E,
+        }
+    }
+}
+
+/// The projection-path spellings `coordinator::request::PathKind::parse`
+/// accepts (config sits below the coordinator layer, so the token list
+/// is mirrored here and pinned by a test).
+fn valid_attn_path(s: &str) -> bool {
+    matches!(s, "digital" | "fp32" | "analog" | "hw")
+}
+
+impl AttnServeConfig {
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = AttnServeConfig::default();
+        let path = doc.str_or("attention.serve.path", &d.path).to_string();
+        if !valid_attn_path(&path) {
+            return Err(Error::Config(format!(
+                "attention.serve.path: unknown path '{path}' \
+                 (expected analog | fp32 | digital)"
+            )));
+        }
+        Ok(AttnServeConfig {
+            heads: doc.usize_or("attention.serve.heads", d.heads).max(1),
+            d_head: doc.usize_or("attention.serve.d_head", d.d_head).max(1),
+            m: doc.usize_or("attention.serve.m", d.m).max(1),
+            max_sessions: doc
+                .usize_or("attention.serve.max_sessions", d.max_sessions)
+                .max(1),
+            path,
+            seed: doc.usize_or("attention.serve.seed", d.seed as usize) as u64,
+        })
+    }
+}
+
+/// Attention workload configuration (`[attention.*]` sections).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AttentionConfig {
+    pub serve: AttnServeConfig,
 }
 
 /// Top-level configuration bundle.
@@ -329,6 +411,7 @@ pub struct Config {
     pub chip: ChipConfig,
     pub fleet: FleetConfig,
     pub serve: ServeConfig,
+    pub attention: AttentionConfig,
     /// artifacts directory (manifest.json, *.hlo.txt, weights)
     pub artifacts_dir: String,
 }
@@ -339,6 +422,7 @@ impl Default for Config {
             chip: ChipConfig::default(),
             fleet: FleetConfig::default(),
             serve: ServeConfig::default(),
+            attention: AttentionConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -408,6 +492,7 @@ impl Config {
             chip: ChipConfig::from_doc(doc),
             fleet: FleetConfig::from_doc(doc)?,
             serve: ServeConfig::from_doc(doc),
+            attention: AttentionConfig { serve: AttnServeConfig::from_doc(doc)? },
             artifacts_dir: doc.str_or("paths.artifacts", "artifacts").to_string(),
         };
         cfg.apply_env();
@@ -485,6 +570,23 @@ impl Config {
         }
         if let Ok(v) = std::env::var("IMKA_FLEET_AUTOSCALE") {
             self.fleet.control.autoscale = matches!(v.as_str(), "1" | "true" | "yes");
+        }
+        if let Ok(v) = std::env::var("IMKA_ATTN_HEADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.attention.serve.heads = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_ATTN_M") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.attention.serve.m = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_ATTN_PATH") {
+            // invalid values are ignored (env overrides never fail), so a
+            // typo cannot silently fall back to a different path later
+            if valid_attn_path(&v) {
+                self.attention.serve.path = v;
+            }
         }
         if let Ok(v) = std::env::var("IMKA_ARTIFACTS_DIR") {
             self.artifacts_dir = v;
@@ -632,6 +734,64 @@ mod tests {
         assert_eq!(json.fleet.router, RouterPolicy::RoundRobin);
         assert_eq!(json.serve.max_batch, 8);
         assert_eq!(json.artifacts_dir, "art");
+    }
+
+    #[test]
+    fn attention_serve_defaults_and_toml_parse() {
+        let d = AttnServeConfig::default();
+        assert_eq!((d.heads, d.d_head, d.m), (2, 16, 64));
+        assert_eq!(d.path, "analog");
+        assert!(d.max_sessions >= 1);
+
+        let cfg = Config::from_toml_str(
+            "[attention.serve]\nheads = 4\nd_head = 32\nm = 128\n\
+             max_sessions = 16\npath = \"fp32\"\nseed = 99\n",
+        )
+        .unwrap();
+        let a = &cfg.attention.serve;
+        assert_eq!((a.heads, a.d_head, a.m), (4, 32, 128));
+        assert_eq!(a.max_sessions, 16);
+        assert_eq!(a.path, "fp32");
+        assert_eq!(a.seed, 99);
+    }
+
+    #[test]
+    fn bad_attention_path_is_config_error() {
+        let err = Config::from_toml_str("[attention.serve]\npath = \"FP32\"\n").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("attention.serve.path"));
+        // the mirrored token list matches PathKind::parse exactly
+        for p in ["digital", "fp32", "analog", "hw"] {
+            assert!(crate::coordinator::request::PathKind::parse(p).is_some());
+            assert!(super::valid_attn_path(p));
+        }
+        assert!(!super::valid_attn_path("wat"));
+    }
+
+    #[test]
+    fn attention_serve_parses_from_json_identically() {
+        let toml = Config::from_toml_str(
+            "[attention.serve]\nheads = 3\nm = 32\npath = \"digital\"\n",
+        )
+        .unwrap();
+        let json = Config::from_json_str(
+            r#"{"attention":{"serve":{"heads":3,"m":32,"path":"digital"}}}"#,
+        )
+        .unwrap();
+        assert_eq!(toml, json);
+        assert_eq!(json.attention.serve.heads, 3);
+    }
+
+    #[test]
+    fn drain_cap_knob_defaults_to_4x_max_batch() {
+        let d = ServeConfig::default();
+        assert_eq!(d.drain_cap, 0);
+        assert_eq!(d.effective_drain_cap(), 4 * d.max_batch);
+        let cfg = Config::from_toml_str("[serve]\nmax_batch = 8\ndrain_cap = 100\n").unwrap();
+        assert_eq!(cfg.serve.effective_drain_cap(), 100);
+        // never below one full batch
+        let small = ServeConfig { max_batch: 32, drain_cap: 2, ..ServeConfig::default() };
+        assert_eq!(small.effective_drain_cap(), 32);
     }
 
     #[test]

@@ -8,8 +8,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use super::request::{Lane, Request};
+use super::request::{Lane, Request, Response};
 use crate::config::ServeConfig;
+use crate::error::Error;
 
 /// A formed batch handed to the worker pool.
 pub struct Batch {
@@ -27,8 +28,13 @@ pub fn run_batcher(
     stop: Arc<AtomicBool>,
 ) {
     let max_wait = Duration::from_micros(cfg.max_wait_us);
+    let drain_cap = cfg.effective_drain_cap();
     let mut lanes: BTreeMap<Lane, Vec<Request>> = BTreeMap::new();
     let mut lane_oldest: BTreeMap<Lane, Instant> = BTreeMap::new();
+    // running count of queued requests across lanes — the lane map can
+    // hold one entry per open attention session, so the drain-cap check
+    // must not walk it per received request
+    let mut pending = 0usize;
 
     'outer: loop {
         // Block briefly for the next request so an idle batcher doesn't
@@ -43,11 +49,17 @@ pub fn run_batcher(
         };
         if let Some(r) = first {
             push(&mut lanes, &mut lane_oldest, r);
-            // opportunistically drain whatever else already arrived
-            while let Ok(r) = ingress.try_recv() {
-                push(&mut lanes, &mut lane_oldest, r);
-                if lanes.values().map(|v| v.len()).sum::<usize>() >= cfg.max_batch * 4 {
-                    break;
+            pending += 1;
+            // opportunistically drain whatever else already arrived, up
+            // to the configured cap (serve.drain_cap) so a flood cannot
+            // postpone lane flushes indefinitely
+            while pending < drain_cap {
+                match ingress.try_recv() {
+                    Ok(r) => {
+                        push(&mut lanes, &mut lane_oldest, r);
+                        pending += 1;
+                    }
+                    Err(_) => break,
                 }
             }
         }
@@ -63,21 +75,50 @@ pub fn run_batcher(
             if full || stale {
                 let mut reqs = lanes.remove(&lane).unwrap_or_default();
                 lane_oldest.remove(&lane);
+                pending -= reqs.len();
                 while !reqs.is_empty() {
                     let take = reqs.len().min(cfg.max_batch);
                     let batch: Vec<Request> = reqs.drain(..take).collect();
-                    if out.send(Batch { lane, requests: batch }).is_err() {
+                    if let Err(mpsc::SendError(dead)) = out.send(Batch { lane, requests: batch }) {
+                        // workers are gone: answer these requests and the
+                        // lane's remainder, then drain everything else
+                        answer_shutdown(dead.requests);
+                        answer_shutdown(std::mem::take(&mut reqs));
                         break 'outer;
                     }
                 }
             }
         }
     }
-    // drain remaining on shutdown
-    for (lane, reqs) in lanes {
-        if !reqs.is_empty() {
-            let _ = out.send(Batch { lane, requests: reqs });
+    // Shutdown flush: every still-queued request is either handed to the
+    // workers (which drain their channel before exiting) or answered
+    // with a typed error — never silently dropped.
+    for (lane, mut reqs) in lanes {
+        while !reqs.is_empty() {
+            let take = reqs.len().min(cfg.max_batch.max(1));
+            let batch: Vec<Request> = reqs.drain(..take).collect();
+            if let Err(mpsc::SendError(dead)) = out.send(Batch { lane, requests: batch }) {
+                answer_shutdown(dead.requests);
+                answer_shutdown(std::mem::take(&mut reqs));
+            }
         }
+    }
+}
+
+/// Reply to requests the worker pool can no longer serve (engine is
+/// shutting down) so callers get an error instead of a hung channel.
+/// Also used by the engine's dispatcher for the same situation.
+pub(crate) fn answer_shutdown(reqs: Vec<Request>) {
+    for req in reqs {
+        let latency_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+        let _ = req.reply.send(Response {
+            result: Err(Error::Coordinator(
+                "engine shut down before the request could run".into(),
+            )),
+            latency_us,
+            energy_uj: 0.0,
+            batch_size: 0,
+        });
     }
 }
 
@@ -187,6 +228,79 @@ mod tests {
         }
         assert_eq!(total, 10);
         assert!(max_seen <= 4);
+    }
+
+    #[test]
+    fn dead_workers_answer_pending_with_error() {
+        // if the worker pool is gone (batch channel closed), pending
+        // requests must be answered with a typed error, not dropped
+        let cfg = ServeConfig { max_batch: 4, max_wait_us: 500, ..Default::default() };
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(1);
+        drop(out_rx); // workers already exited
+        let h = std::thread::spawn(move || {
+            run_batcher(in_rx, out_tx, &cfg, Arc::new(AtomicBool::new(false)))
+        });
+        let (r, rep) = mk_request(Kernel::Rbf);
+        in_tx.send(r).unwrap();
+        let resp = rep.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(resp.result.is_err(), "expected shutdown error");
+        assert!(resp
+            .result
+            .unwrap_err()
+            .to_string()
+            .contains("shut down"));
+        drop(in_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn stop_flag_flushes_pending_lanes() {
+        // a stop-flag shutdown must hand still-pending requests to the
+        // workers (flush), not leave them queued
+        let cfg = ServeConfig { max_batch: 100, max_wait_us: 10_000_000, ..Default::default() };
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::sync_channel(64);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_b = stop.clone();
+        let h = std::thread::spawn(move || run_batcher(in_rx, out_tx, &cfg, stop_b));
+        let (r1, _rep1) = mk_request(Kernel::Rbf);
+        in_tx.send(r1).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        // raise stop, then wake the (possibly blocked) batcher with one
+        // more request; the next loop iteration sees the flag and the
+        // tail flush must deliver both pending requests
+        stop.store(true, Ordering::Relaxed);
+        let (r2, _rep2) = mk_request(Kernel::Rbf);
+        in_tx.send(r2).unwrap();
+        let b = out_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(b.requests.len(), 2);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tiny_drain_cap_still_flushes_everything() {
+        let cfg = ServeConfig {
+            max_batch: 2,
+            max_wait_us: 1_000,
+            drain_cap: 2,
+            ..Default::default()
+        };
+        assert_eq!(cfg.effective_drain_cap(), 2);
+        let (tx, rx) = spin_batcher(cfg);
+        let mut reps = Vec::new();
+        for _ in 0..9 {
+            let (r, rep) = mk_request(Kernel::Rbf);
+            reps.push(rep);
+            tx.send(r).unwrap();
+        }
+        let mut total = 0;
+        while total < 9 {
+            let b = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert!(b.requests.len() <= 2);
+            total += b.requests.len();
+        }
+        assert_eq!(total, 9);
     }
 
     #[test]

@@ -1,17 +1,22 @@
-//! The serving engine: ingress queue → dynamic batcher → worker pool →
-//! (analog chip | XLA artifacts) → replies. The leader (`Engine::start`)
-//! programs the chip, compiles artifacts, and spawns the threads; workers
-//! never touch Python — the request path is Rust + PJRT only.
+//! The serving engine: ingress queue → dynamic batcher → dispatcher →
+//! { worker pool (features/performer) | session-sharded attention
+//! executors } → (analog chip | XLA artifacts | session state) →
+//! replies. The leader
+//! (`Engine::start`) programs the chip, compiles artifacts, and spawns
+//! the threads; workers never touch Python — the request path is Rust +
+//! PJRT only.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::batcher::{run_batcher, Batch};
+use super::batcher::{answer_shutdown, run_batcher, Batch};
 use super::request::{
-    KernelLane, Lane, ModeLane, PathLane, PerfMode, Request, RequestBody, Response, ResponseBody,
+    KernelLane, Lane, ModeLane, PathKind, PathLane, PerfMode, Request, RequestBody, Response,
+    ResponseBody,
 };
+use super::session::{AttnSessionInfo, SessionManager, SessionStatsSnapshot};
 use super::telemetry::{ChipSnapshot, FleetEventsSnapshot, LaneSnapshot, Telemetry};
 use super::tilepool::lane_omega;
 use crate::aimc::Emulator;
@@ -43,6 +48,9 @@ struct Shared {
     noisy_omega: Option<Mat>,
     /// emulator-programmed noisy 2-D params (hw_full)
     noisy_params: BTreeMap<String, Mat>,
+    /// streaming-attention session registry (state off-chip, φ lanes on
+    /// the fleet)
+    sessions: SessionManager,
     telemetry: Telemetry,
     seed_ctr: AtomicI32,
     classes: usize,
@@ -164,15 +172,26 @@ impl Engine {
             geometries,
             noisy_omega,
             noisy_params,
+            sessions: SessionManager::new(cfg.attention.serve.clone(), cfg.serve.replication),
             telemetry: Telemetry::default(),
             seed_ctr: AtomicI32::new(1),
             classes,
         });
 
-        // threads: 1 batcher + N workers
+        // threads: 1 batcher + 1 dispatcher + N pool workers + A
+        // attention executors. The dispatcher routes batches by workload:
+        // feature/performer batches fan out over the worker pool
+        // (stateless — any order is fine), while attention batches route
+        // to the executor owning their session (session id mod A), so
+        // batches of one session are processed in exactly the batcher's
+        // emission order (two pool workers holding two batches of one
+        // session could otherwise fold tokens out of order into its
+        // running state) while distinct sessions still run concurrently.
+        let queue_cap = cfg.serve.queue_cap.max(16);
         let (ingress_tx, ingress_rx) = mpsc::channel::<Request>();
-        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(cfg.serve.queue_cap.max(16));
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(queue_cap);
+        let (work_tx, work_rx) = mpsc::sync_channel::<Batch>(queue_cap);
+        let work_rx = Arc::new(Mutex::new(work_rx));
 
         let mut threads = Vec::new();
         let stop = Arc::new(AtomicBool::new(false));
@@ -181,9 +200,35 @@ impl Engine {
         threads.push(std::thread::spawn(move || {
             run_batcher(ingress_rx, batch_tx, &serve_cfg, stop_b)
         }));
+        let attn_workers = cfg.serve.workers.clamp(1, 4);
+        let mut attn_txs = Vec::with_capacity(attn_workers);
+        for _ in 0..attn_workers {
+            let (tx, rx) = mpsc::sync_channel::<Batch>(queue_cap);
+            attn_txs.push(tx);
+            let shared = shared.clone();
+            threads.push(std::thread::spawn(move || {
+                while let Ok(b) = rx.recv() {
+                    execute_batch(&shared, b);
+                }
+            }));
+        }
+        threads.push(std::thread::spawn(move || {
+            // single-threaded routing keeps per-session FIFO order intact
+            while let Ok(batch) = batch_rx.recv() {
+                let dst = match batch.lane {
+                    Lane::Attention(s) => &attn_txs[(s.0 % attn_txs.len() as u64) as usize],
+                    _ => &work_tx,
+                };
+                if let Err(mpsc::SendError(dead)) = dst.send(batch) {
+                    // that executor is gone (shutdown): answer instead
+                    // of dropping, then keep draining the rest
+                    answer_shutdown(dead.requests);
+                }
+            }
+        }));
         for _ in 0..cfg.serve.workers.max(1) {
             let shared = shared.clone();
-            let rx = batch_rx.clone();
+            let rx = work_rx.clone();
             threads.push(std::thread::spawn(move || loop {
                 let batch = {
                     let guard = rx.lock().unwrap();
@@ -309,6 +354,13 @@ impl Engine {
         StatsHandle { shared: self.shared.clone() }
     }
 
+    /// Cloneable handle for attention-session control operations
+    /// (`attn_open` / `attn_close`); appends travel the batched request
+    /// path via [`Submitter`].
+    pub fn sessions_handle(&self) -> SessionsHandle {
+        SessionsHandle { shared: self.shared.clone() }
+    }
+
     pub fn cores_used(&self) -> usize {
         self.shared.pool.cores_used()
     }
@@ -412,8 +464,36 @@ impl StatsHandle {
     }
 }
 
+/// Control-plane view over the attention-session registry, shared with
+/// server connection handlers (mirrors [`StatsHandle`]).
+#[derive(Clone)]
+pub struct SessionsHandle {
+    shared: Arc<Shared>,
+}
+
+impl SessionsHandle {
+    /// Open a streaming session (`attn_open`). `path` falls back to the
+    /// `[attention.serve] path` default; an analog open lazily programs
+    /// the per-head Ω lanes onto the fleet.
+    pub fn open(&self, path: Option<PathKind>) -> Result<AttnSessionInfo> {
+        self.shared.sessions.open(&self.shared.pool, path)
+    }
+
+    /// Close a session (`attn_close`); returns its streamed token count.
+    pub fn close(&self, id: u64) -> Result<usize> {
+        self.shared.sessions.close(id)
+    }
+
+    /// Aggregate session counters (the `stats` response's `attention`
+    /// section).
+    pub fn stats(&self) -> SessionStatsSnapshot {
+        self.shared.sessions.snapshot()
+    }
+}
+
 // ---------------------------------------------------------------------------
-// batch execution
+// batch execution (one executor per workload; the batcher guarantees a
+// batch is lane-homogeneous, so dispatch is a single match)
 // ---------------------------------------------------------------------------
 
 fn execute_batch(shared: &Shared, batch: Batch) {
@@ -421,14 +501,16 @@ fn execute_batch(shared: &Shared, batch: Batch) {
     let result = match batch.lane {
         Lane::Feature(kernel, path) => run_feature_batch(shared, kernel, path, &batch),
         Lane::Performer(mode) => run_performer_batch(shared, mode, &batch),
+        Lane::Attention(session) => run_attention_batch(shared, session.0, &batch),
     };
+    let lane_key = batch.lane.telemetry_key();
     match result {
         Ok((bodies, energy_uj)) => {
             debug_assert_eq!(bodies.len(), n);
             for (req, body) in batch.requests.into_iter().zip(bodies) {
                 let latency_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
                 shared.telemetry.record(
-                    batch.lane,
+                    lane_key,
                     latency_us,
                     n,
                     energy_uj / n as f64,
@@ -446,7 +528,7 @@ fn execute_batch(shared: &Shared, batch: Batch) {
             let msg = e.to_string();
             for req in batch.requests {
                 let latency_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
-                shared.telemetry.record(batch.lane, latency_us, n, 0.0, true);
+                shared.telemetry.record(lane_key, latency_us, n, 0.0, true);
                 let _ = req.reply.send(Response {
                     result: Err(Error::Coordinator(msg.clone())),
                     latency_us,
@@ -456,6 +538,46 @@ fn execute_batch(shared: &Shared, batch: Batch) {
             }
         }
     }
+}
+
+/// Attention lane: stream the batch's tokens into the session in arrival
+/// order. The φ(q)/φ(k) projections run batched per head (analog: one
+/// fleet MVM per head); the running-sum update and normalization are
+/// native Rust against off-chip state.
+fn run_attention_batch(
+    shared: &Shared,
+    session: u64,
+    batch: &Batch,
+) -> Result<(Vec<ResponseBody>, f64)> {
+    let mut items: Vec<(&[f32], &[f32], &[f32])> = Vec::with_capacity(batch.requests.len());
+    for req in &batch.requests {
+        match &req.body {
+            RequestBody::AttnAppend { q, k, v, .. } => {
+                items.push((q.as_slice(), k.as_slice(), v.as_slice()))
+            }
+            _ => return Err(Error::Coordinator("mixed lane".into())),
+        }
+    }
+    let n = items.len();
+    let session = shared.sessions.get(session)?;
+    let outs = shared.sessions.append_to(&shared.pool, &session, &items)?;
+
+    // modelled AIMC energy: on the analog path every token's q and k
+    // project through each head's Ω lane on-chip
+    let energy_uj = if session.path == PathKind::Analog {
+        let a = shared.sessions.config();
+        let ops = 2.0 * a.heads as f64 * mapping_ops(n, a.d_head, a.m);
+        let (_, e_mj) = latency_energy(ops, &Device::Aimc.spec());
+        e_mj * 1e3
+    } else {
+        0.0
+    };
+
+    let bodies = outs
+        .into_iter()
+        .map(|(y, index)| ResponseBody::AttnOut { y, index })
+        .collect();
+    Ok((bodies, energy_uj))
 }
 
 /// Feature lane: digital = one fused XLA artifact; analog = chip MVM +

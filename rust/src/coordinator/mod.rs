@@ -1,19 +1,32 @@
-//! L3 serving coordinator — the system contribution: an inference server
-//! that routes kernel-approximation workloads between a fleet of
-//! simulated AIMC chips (analog path) and AOT-compiled XLA artifacts
-//! (digital path), with dynamic batching, sharded lane placement, replica
-//! routing, drift-aware recalibration, telemetry, and a TCP line
-//! protocol.
+//! L3 serving coordinator — the system contribution: a workload-generic
+//! inference server that routes kernel-approximation workloads between a
+//! fleet of simulated AIMC chips (analog path) and AOT-compiled XLA
+//! artifacts (digital path), with dynamic batching, sharded lane
+//! placement, replica routing, drift-aware recalibration, telemetry, and
+//! a TCP line protocol.
+//!
+//! Three workloads share one pipeline ([`request::WorkloadKind`]):
+//! stateless kernel **features**, whole-sequence **performer**
+//! classification, and streaming kernelized-**attention** sessions
+//! ([`session`]) whose per-head Ω lanes live on the fleet next to the
+//! feature lanes while the O(1) FAVOR+ running state stays here.
 //!
 //! Data flow:
 //!
 //! ```text
 //! clients -> Submitter -> ingress queue -> batcher (per-lane, max_batch /
-//!   max_wait) -> worker pool -> { FleetPool: router picks a replica per
+//!   max_wait; attention lanes keyed by session for affinity)
+//!          -> dispatcher (feature/performer batches -> worker pool;
+//!             attention batches -> session-sharded executors, so one
+//!             session's batches apply in emission order while distinct
+//!             sessions run concurrently)
+//!          -> { FleetPool: router picks a replica per
 //!                                 Ω shard -> per-chip MVM queues -> concat
 //!                                 + postproc artifact        (analog)
 //!                               | fused digital artifact     (digital)
-//!                               | performer artifact (+ noisy weights) }
+//!                               | performer artifact (+ noisy weights)
+//!                               | session state: S += φ(k)vᵀ, z += φ(k);
+//!                                 y = φ(q)ᵀS / φ(q)ᵀz      (attention) }
 //!          -> replies (+ latency/energy telemetry)
 //!
 //! background: recal thread -> fleet clock -> drift estimate per chip
@@ -30,11 +43,15 @@ pub mod batcher;
 pub mod engine;
 pub mod request;
 pub mod server;
+pub mod session;
 pub mod telemetry;
 pub mod tilepool;
 
-pub use engine::{Engine, StatsHandle, Submitter};
-pub use request::{PathKind, PerfMode, Request, RequestBody, Response, ResponseBody};
+pub use engine::{Engine, SessionsHandle, StatsHandle, Submitter};
+pub use request::{
+    LaneId, PathKind, PerfMode, Request, RequestBody, Response, ResponseBody, WorkloadKind,
+};
 pub use server::{Client, Server};
+pub use session::{AttnSessionInfo, SessionManager, SessionStatsSnapshot};
 pub use telemetry::{ChipSnapshot, FleetEventsSnapshot, LaneSnapshot, Telemetry};
 pub use tilepool::TilePool;

@@ -59,12 +59,106 @@ impl PerfMode {
     }
 }
 
-/// Batching lane: requests in one lane share an executable + path and can
-/// be batched together.
+/// Serving workload families — the dispatch axis of the workload-generic
+/// pipeline. Each workload owns its batch executor in the engine and its
+/// aggregate telemetry row; adding a workload means adding a variant
+/// here, a [`Lane`] variant to batch under, and one executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// stateless kernel feature maps z(x)
+    Features,
+    /// whole-sequence Performer classification
+    Performer,
+    /// streaming kernelized-attention sessions (FAVOR+ running sums)
+    Attention,
+}
+
+impl WorkloadKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkloadKind::Features => "features",
+            WorkloadKind::Performer => "performer",
+            WorkloadKind::Attention => "attention",
+        }
+    }
+}
+
+/// Fleet-wide identity of one programmed Ω lane: either a kernel feature
+/// lane or the shared projection lane of one attention head. This is the
+/// key the fleet planner/pool shard and replicate by (generalizing the
+/// feature-only `KernelLane` keying of PR 2-3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LaneId {
+    /// feature-map lane for one kernel
+    Kernel(KernelLane),
+    /// FAVOR+ Ω of attention head `h`, shared by every session's φ(q)/φ(k)
+    AttnHead(u32),
+}
+
+impl LaneId {
+    /// Stable label used in chip-level matrix names and diagnostics.
+    pub fn label(&self) -> String {
+        match self {
+            LaneId::Kernel(k) => k.kernel().as_str().to_string(),
+            LaneId::AttnHead(h) => format!("attn_h{h}"),
+        }
+    }
+}
+
+impl From<KernelLane> for LaneId {
+    fn from(k: KernelLane) -> Self {
+        LaneId::Kernel(k)
+    }
+}
+
+/// Attention-session batching key: appends to one session batch together
+/// (and only together), giving the batcher session affinity — one batch
+/// touches one session's running state, in arrival order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionLane(pub u64);
+
+/// Batching lane: requests in one lane share an executable + path (or a
+/// session's running state) and can be batched together.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Lane {
     Feature(KernelLane, PathLane),
     Performer(ModeLane),
+    Attention(SessionLane),
+}
+
+impl Lane {
+    /// Which workload executor serves this lane.
+    pub fn workload(&self) -> WorkloadKind {
+        match self {
+            Lane::Feature(..) => WorkloadKind::Features,
+            Lane::Performer(..) => WorkloadKind::Performer,
+            Lane::Attention(..) => WorkloadKind::Attention,
+        }
+    }
+
+    /// Aggregation key for telemetry: attention sessions would otherwise
+    /// mint one unbounded telemetry row per session id, so they collapse
+    /// onto a single per-workload row.
+    pub fn telemetry_key(&self) -> Lane {
+        match self {
+            Lane::Attention(_) => Lane::Attention(SessionLane(0)),
+            other => *other,
+        }
+    }
+
+    /// Human/debug label (the `stats` response's `lane` field).
+    pub fn label(&self) -> String {
+        match self {
+            Lane::Feature(k, PathLane::Digital) => {
+                format!("feature_{}_digital", k.kernel().as_str())
+            }
+            Lane::Feature(k, PathLane::Analog) => {
+                format!("feature_{}_analog", k.kernel().as_str())
+            }
+            Lane::Performer(m) => format!("performer_{}", m.mode().as_str()),
+            Lane::Attention(_) => "attention_serve".to_string(),
+        }
+    }
 }
 
 // ordered newtype-ish mirrors (Kernel/PathKind don't derive Ord)
@@ -148,6 +242,14 @@ pub enum RequestBody {
     },
     /// classify one token sequence with the Performer
     Performer { mode: PerfMode, tokens: Vec<i32> },
+    /// stream one token into an open attention session: q/k/v are the
+    /// flattened per-head projections (heads × d_head each)
+    AttnAppend {
+        session: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
 }
 
 impl RequestBody {
@@ -157,6 +259,7 @@ impl RequestBody {
                 Lane::Feature((*kernel).into(), (*path).into())
             }
             RequestBody::Performer { mode, .. } => Lane::Performer((*mode).into()),
+            RequestBody::AttnAppend { session, .. } => Lane::Attention(SessionLane(*session)),
         }
     }
 }
@@ -166,6 +269,9 @@ impl RequestBody {
 pub enum ResponseBody {
     Features(Vec<f32>),
     Class { label: usize, logits: Vec<f32> },
+    /// attention output for the appended token (heads × d_head, flattened)
+    /// and the token's 0-based index in the session
+    AttnOut { y: Vec<f32>, index: usize },
 }
 
 /// Full response with telemetry.
@@ -210,6 +316,59 @@ mod tests {
             a.lane(),
             Lane::Feature(KernelLane::Rbf, PathLane::Analog)
         );
+    }
+
+    #[test]
+    fn attention_lanes_have_session_affinity() {
+        let a = RequestBody::AttnAppend {
+            session: 7,
+            q: vec![0.0],
+            k: vec![0.0],
+            v: vec![0.0],
+        };
+        let b = RequestBody::AttnAppend {
+            session: 7,
+            q: vec![1.0],
+            k: vec![1.0],
+            v: vec![1.0],
+        };
+        let c = RequestBody::AttnAppend {
+            session: 8,
+            q: vec![0.0],
+            k: vec![0.0],
+            v: vec![0.0],
+        };
+        // same session batches together; different sessions never mix
+        assert_eq!(a.lane(), b.lane());
+        assert_ne!(a.lane(), c.lane());
+        assert_eq!(a.lane().workload(), WorkloadKind::Attention);
+        // telemetry collapses all sessions onto one row
+        assert_eq!(a.lane().telemetry_key(), c.lane().telemetry_key());
+        assert_eq!(a.lane().label(), "attention_serve");
+    }
+
+    #[test]
+    fn lane_ids_label_distinctly() {
+        let k: LaneId = KernelLane::Rbf.into();
+        assert_eq!(k.label(), "rbf");
+        assert_eq!(LaneId::AttnHead(3).label(), "attn_h3");
+        assert_ne!(LaneId::AttnHead(0), LaneId::AttnHead(1));
+        assert_ne!(k, LaneId::AttnHead(0));
+    }
+
+    #[test]
+    fn workloads_partition_lanes() {
+        let f = RequestBody::Features {
+            kernel: Kernel::Rbf,
+            path: PathKind::Digital,
+            x: vec![0.0],
+        };
+        let p = RequestBody::Performer { mode: PerfMode::Fp32, tokens: vec![] };
+        assert_eq!(f.lane().workload(), WorkloadKind::Features);
+        assert_eq!(p.lane().workload(), WorkloadKind::Performer);
+        assert_eq!(f.lane().telemetry_key(), f.lane());
+        assert_eq!(f.lane().label(), "feature_rbf_digital");
+        assert_eq!(p.lane().label(), "performer_fp32");
     }
 
     #[test]

@@ -3,7 +3,13 @@
 //! Request lines:
 //!   {"type":"features","kernel":"rbf","path":"analog","x":[...]}
 //!   {"type":"performer","mode":"hw_attn","tokens":[...]}
+//!   {"type":"attn_open"[,"path":"analog"|"fp32"]} -> open a streaming
+//!       kernelized-attention session (per-head Ω lanes on the fleet)
+//!   {"type":"attn_append","session":N,"q":[...],"k":[...],"v":[...]}
+//!       -> stream one token; returns its attention output
+//!   {"type":"attn_close","session":N} -> close, report streamed tokens
 //!   {"type":"stats"}   -> per-lane latency/energy + per-chip fleet stats
+//!                         + attention session counters
 //!   {"type":"health"}  -> per-chip health states + control-plane events
 //!   {"type":"drain","chip":N[,"undrain":true]} -> steer traffic off/on a chip
 //!   {"type":"ping"}
@@ -14,8 +20,8 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use super::engine::{Engine, StatsHandle, Submitter};
-use super::request::{KernelLane, Lane, PathKind, PathLane, PerfMode, RequestBody, ResponseBody};
+use super::engine::{Engine, SessionsHandle, StatsHandle, Submitter};
+use super::request::{PathKind, PerfMode, RequestBody, ResponseBody};
 use crate::config::json::{arr, num, obj, s, Json};
 use crate::error::{Error, Result};
 use crate::kernels::Kernel;
@@ -39,16 +45,22 @@ impl Server {
         let stop2 = stop.clone();
         let submitter = engine.submitter();
         let stats = engine.stats_handle();
+        let sessions = engine.sessions_handle();
         let accept_thread = std::thread::spawn(move || {
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !stop2.load(Ordering::Relaxed) {
+                // reap handles of connections that already hung up, so a
+                // long-lived server doesn't accumulate one JoinHandle per
+                // connection it ever accepted
+                conns.retain(|c| !c.is_finished());
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let sub = submitter.clone();
                         let stats_c = stats.clone();
+                        let sessions_c = sessions.clone();
                         let stop_c = stop2.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, sub, stats_c, stop_c);
+                            let _ = handle_conn(stream, sub, stats_c, sessions_c, stop_c);
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -90,6 +102,7 @@ fn handle_conn(
     stream: TcpStream,
     sub: Submitter,
     stats: StatsHandle,
+    sessions: SessionsHandle,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
@@ -110,7 +123,7 @@ fn handle_conn(
                 if line.trim().is_empty() {
                     continue;
                 }
-                let reply = handle_line(&line, &sub, &stats);
+                let reply = handle_line(&line, &sub, &stats, &sessions);
                 writer.write_all(reply.to_string().as_bytes())?;
                 writer.write_all(b"\n")?;
             }
@@ -126,29 +139,25 @@ fn handle_conn(
 }
 
 /// Parse one request line, dispatch, serialize the reply.
-pub fn handle_line(line: &str, sub: &Submitter, stats: &StatsHandle) -> Json {
-    match parse_and_dispatch(line, sub, stats) {
+pub fn handle_line(
+    line: &str,
+    sub: &Submitter,
+    stats: &StatsHandle,
+    sessions: &SessionsHandle,
+) -> Json {
+    match parse_and_dispatch(line, sub, stats, sessions) {
         Ok(j) => j,
         Err(e) => obj(vec![("ok", Json::Bool(false)), ("error", s(&e.to_string()))]),
     }
 }
 
-/// Human/debug label for a batching lane.
-fn lane_label(lane: Lane) -> String {
-    let kernel = |k: KernelLane| k.kernel().as_str();
-    match lane {
-        Lane::Feature(k, PathLane::Digital) => format!("feature_{}_digital", kernel(k)),
-        Lane::Feature(k, PathLane::Analog) => format!("feature_{}_analog", kernel(k)),
-        Lane::Performer(m) => format!("performer_{}", m.mode().as_str()),
-    }
-}
-
 /// The `stats` response: per-lane serving telemetry plus per-chip fleet
-/// utilization, queue depth and recalibration counters.
-fn stats_json(stats: &StatsHandle) -> Json {
+/// utilization, queue depth and recalibration counters, plus aggregate
+/// attention-session counters.
+fn stats_json(stats: &StatsHandle, sessions: &SessionsHandle) -> Json {
     let lanes = stats.lanes().into_iter().map(|l| {
         obj(vec![
-            ("lane", s(&lane_label(l.lane))),
+            ("lane", s(&l.lane.label())),
             ("requests", num(l.requests as f64)),
             ("errors", num(l.errors as f64)),
             ("p50_us", num(l.p50_us)),
@@ -172,6 +181,7 @@ fn stats_json(stats: &StatsHandle) -> Json {
             ("drift_err_estimate", num(c.drift_err_estimate)),
         ])
     });
+    let sess = sessions.stats();
     obj(vec![
         ("ok", Json::Bool(true)),
         ("total_requests", num(stats.total_requests() as f64)),
@@ -182,6 +192,15 @@ fn stats_json(stats: &StatsHandle) -> Json {
                 ("total_slots", num(stats.total_slots() as f64)),
                 ("cores_used", num(stats.cores_used() as f64)),
                 ("utilization", num(stats.utilization())),
+            ]),
+        ),
+        (
+            "attention",
+            obj(vec![
+                ("active_sessions", num(sess.active as f64)),
+                ("opened", num(sess.opened as f64)),
+                ("closed", num(sess.closed as f64)),
+                ("tokens", num(sess.tokens as f64)),
             ]),
         ),
         ("lanes", arr(lanes)),
@@ -222,13 +241,79 @@ fn health_json(stats: &StatsHandle) -> Json {
     ])
 }
 
-fn parse_and_dispatch(line: &str, sub: &Submitter, stats: &StatsHandle) -> Result<Json> {
+/// Parse a required JSON array of numbers into f32s (typed error on a
+/// missing key or non-numeric elements).
+fn f32_array(req: &Json, key: &str) -> Result<Vec<f32>> {
+    req.req(key)?
+        .as_arr()
+        .ok_or_else(|| Error::Parse(format!("{key} must be an array")))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| Error::Parse(format!("{key} must contain numbers")))
+        })
+        .collect()
+}
+
+fn parse_and_dispatch(
+    line: &str,
+    sub: &Submitter,
+    stats: &StatsHandle,
+    sessions: &SessionsHandle,
+) -> Result<Json> {
     let req = Json::parse(line)?;
     let ty = req.req_str("type")?;
     match ty {
         "ping" => Ok(obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
-        "stats" => Ok(stats_json(stats)),
+        "stats" => Ok(stats_json(stats, sessions)),
         "health" => Ok(health_json(stats)),
+        "attn_open" => {
+            let path = match req.get("path").and_then(|p| p.as_str()) {
+                Some(p) => Some(
+                    PathKind::parse(p).ok_or_else(|| Error::Parse("bad path".into()))?,
+                ),
+                None => None,
+            };
+            let info = sessions.open(path)?;
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("session", num(info.id as f64)),
+                ("path", s(info.path.as_str())),
+                ("heads", num(info.heads as f64)),
+                ("d_head", num(info.d_head as f64)),
+                ("m", num(info.m as f64)),
+            ]))
+        }
+        "attn_append" => {
+            let session = req.req_usize("session")? as u64;
+            let q = f32_array(&req, "q")?;
+            let k = f32_array(&req, "k")?;
+            let v = f32_array(&req, "v")?;
+            let resp = sub.call(RequestBody::AttnAppend { session, q, k, v })?;
+            let body = resp.result?;
+            match body {
+                ResponseBody::AttnOut { y, index } => Ok(obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("session", num(session as f64)),
+                    ("index", num(index as f64)),
+                    ("y", arr(y.iter().map(|&v| num(v as f64)))),
+                    ("latency_us", num(resp.latency_us)),
+                    ("energy_uj", num(resp.energy_uj)),
+                    ("batch", num(resp.batch_size as f64)),
+                ])),
+                _ => Err(Error::Coordinator("unexpected body".into())),
+            }
+        }
+        "attn_close" => {
+            let session = req.req_usize("session")? as u64;
+            let tokens = sessions.close(session)?;
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("session", num(session as f64)),
+                ("tokens", num(tokens as f64)),
+            ]))
+        }
         "drain" => {
             // state-changing verb: reject negatives/fractions instead of
             // letting `as usize` truncate them onto chip 0

@@ -1,0 +1,391 @@
+//! Attention-session registry: per-session FAVOR+ running state plus the
+//! fleet-wired φ(q)/φ(k) projection paths.
+//!
+//! Sessions hold O(1) state per head ([`crate::attention::serve::HeadState`]);
+//! the per-head Ω matrices are shared across every session and, on the
+//! analog path, programmed onto the fleet as [`LaneId::AttnHead`] lanes —
+//! so they shard, replicate, recalibrate and fail over exactly like the
+//! feature lanes. Session state lives here, off-chip, which is what lets
+//! an open session keep streaming through a chip eviction: only the φ
+//! projection moves to surviving replicas.
+//!
+//! Projection paths mirror the feature workload:
+//! - `Digital` (fp32): φ via [`positive_features`] against the digital
+//!   twin Ω — native Rust, no XLA artifact needed.
+//! - `Analog`: u = x·Ω on the fleet ([`FleetPool::project`]), then the
+//!   native softmax postprocess (exactly the split the paper's Fig. 3b
+//!   protocol isolates).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::request::{LaneId, PathKind};
+use crate::attention::serve::HeadState;
+use crate::config::AttnServeConfig;
+use crate::error::{Error, Result};
+use crate::features::favor::positive_features;
+use crate::features::maps::postprocess;
+use crate::features::{sample_omega, Sampler};
+use crate::fleet::FleetPool;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// Deterministic per-head Ω: the digital twin of the programmed analog
+/// lane and the matrix the fp32 path projects against, so both paths of
+/// one deployment share identical random features.
+pub fn head_omega(cfg: &AttnServeConfig, head: usize) -> Mat {
+    let mut rng = Rng::new(cfg.seed ^ (head as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    sample_omega(Sampler::Orf, cfg.d_head, cfg.m, &mut rng)
+}
+
+/// Immutable descriptor returned by `attn_open`.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnSessionInfo {
+    pub id: u64,
+    pub path: PathKind,
+    pub heads: usize,
+    pub d_head: usize,
+    pub m: usize,
+}
+
+struct SessionInner {
+    heads: Vec<HeadState>,
+}
+
+/// One open streaming-attention session.
+pub struct Session {
+    pub id: u64,
+    pub path: PathKind,
+    inner: Mutex<SessionInner>,
+}
+
+impl Session {
+    /// Tokens streamed into this session so far.
+    pub fn tokens(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.heads.first().map(|h| h.tokens()).unwrap_or(0)
+    }
+}
+
+/// Aggregate session counters for the `stats` surface.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStatsSnapshot {
+    /// sessions currently open
+    pub active: usize,
+    /// sessions opened since boot
+    pub opened: u64,
+    /// sessions closed since boot
+    pub closed: u64,
+    /// tokens streamed across all sessions since boot
+    pub tokens: u64,
+}
+
+/// Registry of open sessions + the shared per-head Ω twins.
+pub struct SessionManager {
+    cfg: AttnServeConfig,
+    /// within-chip copy count for the analog head lanes (mirrors the
+    /// feature lanes' `serve.replication`)
+    core_replication: usize,
+    omegas: Vec<Mat>,
+    /// serializes first-open lane programming (two concurrent opens must
+    /// not race `program_lane` — the loser would see a transient
+    /// "already placed" error while the winner is still mid-GDP)
+    lane_init: Mutex<()>,
+    sessions: RwLock<BTreeMap<u64, Arc<Session>>>,
+    next_id: AtomicU64,
+    opened: AtomicU64,
+    closed: AtomicU64,
+    tokens: AtomicU64,
+}
+
+impl SessionManager {
+    pub fn new(cfg: AttnServeConfig, core_replication: usize) -> SessionManager {
+        let omegas = (0..cfg.heads).map(|h| head_omega(&cfg, h)).collect();
+        SessionManager {
+            cfg,
+            core_replication: core_replication.max(1),
+            omegas,
+            lane_init: Mutex::new(()),
+            sessions: RwLock::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            opened: AtomicU64::new(0),
+            closed: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &AttnServeConfig {
+        &self.cfg
+    }
+
+    /// The configured default projection path for `attn_open`.
+    pub fn default_path(&self) -> PathKind {
+        PathKind::parse(&self.cfg.path).unwrap_or(PathKind::Analog)
+    }
+
+    /// Program the per-head Ω lanes onto the fleet if absent (first
+    /// analog open, lazily — digital-only deployments never pay for it).
+    /// `lane_init` serializes concurrent first opens, so the absent-check
+    /// and the programming are atomic with respect to other opens.
+    fn ensure_lanes(&self, pool: &FleetPool) -> Result<()> {
+        let _guard = self.lane_init.lock().unwrap();
+        for h in 0..self.cfg.heads {
+            let lane = LaneId::AttnHead(h as u32);
+            if pool.mapping(lane).is_ok() {
+                continue;
+            }
+            // calibration inputs match serving statistics: scaled queries
+            // x·d^-1/4 of roughly unit-normal heads
+            let mut rng = Rng::new(self.cfg.seed ^ (0xCA1B ^ h as u64));
+            let mut x_cal = Mat::randn(64, self.cfg.d_head, &mut rng);
+            x_cal.scale((self.cfg.d_head as f32).powf(-0.25));
+            pool.program_lane(lane, self.omegas[h].clone(), &x_cal, self.core_replication)?;
+        }
+        Ok(())
+    }
+
+    /// Open a session on `path` (falling back to the configured default).
+    pub fn open(&self, pool: &FleetPool, path: Option<PathKind>) -> Result<AttnSessionInfo> {
+        let path = path.unwrap_or_else(|| self.default_path());
+        if path == PathKind::Analog {
+            // idempotent, so doing it before the registry lock is safe;
+            // a concurrent open that loses the limit check below leaves
+            // the lanes programmed for the winner
+            self.ensure_lanes(pool)?;
+        }
+        // limit check and insert under one write lock, so concurrent
+        // opens cannot overshoot max_sessions
+        let mut sessions = self.sessions.write().unwrap();
+        if sessions.len() >= self.cfg.max_sessions {
+            return Err(Error::Coordinator(format!(
+                "session limit reached ({} open, max_sessions {})",
+                sessions.len(),
+                self.cfg.max_sessions
+            )));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let heads = (0..self.cfg.heads)
+            .map(|_| HeadState::new(2 * self.cfg.m, self.cfg.d_head))
+            .collect();
+        sessions.insert(id, Arc::new(Session { id, path, inner: Mutex::new(SessionInner { heads }) }));
+        self.opened.fetch_add(1, Ordering::Relaxed);
+        Ok(AttnSessionInfo {
+            id,
+            path,
+            heads: self.cfg.heads,
+            d_head: self.cfg.d_head,
+            m: self.cfg.m,
+        })
+    }
+
+    pub fn get(&self, id: u64) -> Result<Arc<Session>> {
+        self.sessions
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::Coordinator(format!("no open attention session {id}")))
+    }
+
+    /// Close a session; returns the number of tokens it streamed.
+    pub fn close(&self, id: u64) -> Result<usize> {
+        let session = self
+            .sessions
+            .write()
+            .unwrap()
+            .remove(&id)
+            .ok_or_else(|| Error::Coordinator(format!("no open attention session {id}")))?;
+        self.closed.fetch_add(1, Ordering::Relaxed);
+        Ok(session.tokens())
+    }
+
+    /// φ for a block of scaled inputs on the session's path. `xs` rows
+    /// are already scaled by d_head^-1/4.
+    fn phi(&self, pool: &FleetPool, path: PathKind, head: usize, xs: &Mat) -> Result<Mat> {
+        match path {
+            PathKind::Digital => Ok(positive_features(xs, &self.omegas[head])),
+            PathKind::Analog => {
+                let u = pool.project(LaneId::AttnHead(head as u32), xs)?;
+                Ok(postprocess(Kernel::Softmax, &u, Some(xs)))
+            }
+        }
+    }
+
+    /// Stream a batch of tokens into the session with this id, in order
+    /// (convenience wrapper over [`SessionManager::append_to`]).
+    pub fn append_batch(
+        &self,
+        pool: &FleetPool,
+        id: u64,
+        items: &[(&[f32], &[f32], &[f32])],
+    ) -> Result<Vec<(Vec<f32>, usize)>> {
+        let session = self.get(id)?;
+        self.append_to(pool, &session, items)
+    }
+
+    /// Stream a batch of tokens into one session, in order. Each item is
+    /// the flattened (q, k, v) of one token (heads × d_head each);
+    /// returns the attention output and 0-based token index per item.
+    ///
+    /// The φ projections of the whole batch are computed per head in one
+    /// fleet call (q rows then k rows), so a batch of appends pays
+    /// 2 × heads projection round-trips instead of 2 × heads × tokens —
+    /// the batching payoff the lane-affinity batcher exists to harvest.
+    pub fn append_to(
+        &self,
+        pool: &FleetPool,
+        session: &Session,
+        items: &[(&[f32], &[f32], &[f32])],
+    ) -> Result<Vec<(Vec<f32>, usize)>> {
+        let (heads, d_head) = (self.cfg.heads, self.cfg.d_head);
+        let dim = heads * d_head;
+        for (q, k, v) in items {
+            if q.len() != dim || k.len() != dim || v.len() != dim {
+                return Err(Error::Shape(format!(
+                    "attn_append expects q/k/v of {dim} values ({heads} heads x {d_head}), \
+                     got {}/{}/{}",
+                    q.len(),
+                    k.len(),
+                    v.len()
+                )));
+            }
+        }
+        let n = items.len();
+        let scale = (d_head as f32).powf(-0.25);
+        // per head: one (2n x d_head) block — scaled q rows, then k rows
+        let mut phis = Vec::with_capacity(heads);
+        for h in 0..heads {
+            let mut xs = Mat::zeros(2 * n, d_head);
+            for (t, (q, k, _)) in items.iter().enumerate() {
+                let qd = xs.row_mut(t);
+                for (dst, &src) in qd.iter_mut().zip(&q[h * d_head..(h + 1) * d_head]) {
+                    *dst = src * scale;
+                }
+                let kd = xs.row_mut(n + t);
+                for (dst, &src) in kd.iter_mut().zip(&k[h * d_head..(h + 1) * d_head]) {
+                    *dst = src * scale;
+                }
+            }
+            phis.push(self.phi(pool, session.path, h, &xs)?);
+        }
+        // fold tokens into the running state in arrival order, answering
+        // each with its post-absorb attention output
+        let mut inner = session.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(n);
+        for (t, (_, _, v)) in items.iter().enumerate() {
+            let mut y = vec![0.0f32; dim];
+            let mut index = 0;
+            for h in 0..heads {
+                let state = &mut inner.heads[h];
+                state.absorb(phis[h].row(n + t), &v[h * d_head..(h + 1) * d_head]);
+                index = state.tokens() - 1;
+                y[h * d_head..(h + 1) * d_head].copy_from_slice(&state.attend(phis[h].row(t)));
+            }
+            out.push((y, index));
+        }
+        self.tokens.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    pub fn snapshot(&self) -> SessionStatsSnapshot {
+        SessionStatsSnapshot {
+            active: self.sessions.read().unwrap().len(),
+            opened: self.opened.load(Ordering::Relaxed),
+            closed: self.closed.load(Ordering::Relaxed),
+            tokens: self.tokens.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipConfig, FleetConfig};
+
+    fn cfg() -> AttnServeConfig {
+        AttnServeConfig {
+            heads: 2,
+            d_head: 8,
+            m: 16,
+            max_sessions: 2,
+            path: "fp32".to_string(),
+            seed: 7,
+        }
+    }
+
+    fn pool() -> FleetPool {
+        FleetPool::new(
+            ChipConfig { cores: 8, rows: 16, cols: 16, ..ChipConfig::default() },
+            FleetConfig::default(),
+            1,
+        )
+    }
+
+    #[test]
+    fn open_append_close_roundtrip() {
+        let mgr = SessionManager::new(cfg(), 1);
+        let pool = pool();
+        let info = mgr.open(&pool, None).unwrap();
+        assert_eq!(info.path, PathKind::Digital); // cfg default "fp32"
+        let dim = info.heads * info.d_head;
+        let q = vec![0.1f32; dim];
+        let k = vec![0.2f32; dim];
+        let v = vec![0.3f32; dim];
+        let out = mgr
+            .append_batch(&pool, info.id, &[(&q, &k, &v), (&q, &k, &v)])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1, 0);
+        assert_eq!(out[1].1, 1);
+        assert_eq!(out[0].0.len(), dim);
+        assert!(out[1].0.iter().all(|y| y.is_finite()));
+        let snap = mgr.snapshot();
+        assert_eq!((snap.active, snap.opened, snap.tokens), (1, 1, 2));
+        assert_eq!(mgr.close(info.id).unwrap(), 2);
+        assert_eq!(mgr.snapshot().active, 0);
+        // closed sessions are gone
+        assert!(mgr.close(info.id).is_err());
+        assert!(mgr.append_batch(&pool, info.id, &[(&q, &k, &v)]).is_err());
+    }
+
+    #[test]
+    fn session_limit_is_enforced() {
+        let mgr = SessionManager::new(cfg(), 1);
+        let pool = pool();
+        let a = mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+        let _b = mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+        assert!(mgr.open(&pool, Some(PathKind::Digital)).is_err());
+        mgr.close(a.id).unwrap();
+        mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+    }
+
+    #[test]
+    fn bad_append_shape_is_typed_error() {
+        let mgr = SessionManager::new(cfg(), 1);
+        let pool = pool();
+        let info = mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+        let short = vec![0.0f32; 3];
+        let ok = vec![0.0f32; info.heads * info.d_head];
+        let err = mgr
+            .append_batch(&pool, info.id, &[(&short, &ok, &ok)])
+            .unwrap_err();
+        assert!(matches!(err, Error::Shape(_)), "{err:?}");
+    }
+
+    #[test]
+    fn analog_open_programs_head_lanes_once() {
+        let mgr = SessionManager::new(cfg(), 1);
+        let pool = pool();
+        assert!(pool.mapping(LaneId::AttnHead(0)).is_err());
+        let a = mgr.open(&pool, Some(PathKind::Analog)).unwrap();
+        assert!(pool.mapping(LaneId::AttnHead(0)).is_ok());
+        assert!(pool.mapping(LaneId::AttnHead(1)).is_ok());
+        let cores = pool.cores_used();
+        // second analog open reuses the programmed lanes
+        mgr.close(a.id).unwrap();
+        mgr.open(&pool, Some(PathKind::Analog)).unwrap();
+        assert_eq!(pool.cores_used(), cores);
+    }
+}

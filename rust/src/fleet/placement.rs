@@ -29,7 +29,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::ChipConfig;
-use crate::coordinator::request::KernelLane;
+use crate::coordinator::request::{KernelLane, LaneId};
 use crate::error::{Error, Result};
 
 /// How lanes are spread over the fleet.
@@ -121,7 +121,7 @@ pub struct Planner {
     /// cores already committed per chip
     used: Vec<usize>,
     /// plans accepted so far (for introspection / determinism checks)
-    pub lanes: BTreeMap<KernelLane, LanePlan>,
+    pub lanes: BTreeMap<LaneId, LanePlan>,
 }
 
 impl Planner {
@@ -229,12 +229,13 @@ impl Planner {
     /// lane is rejected with a typed error.
     pub fn plan_lane(
         &mut self,
-        lane: KernelLane,
+        lane: impl Into<LaneId>,
         d: usize,
         m: usize,
         replication: usize,
         core_replication: usize,
     ) -> Result<LanePlan> {
+        let lane = lane.into();
         if self.lanes.contains_key(&lane) {
             return Err(Error::Coordinator(format!(
                 "lane {lane:?} already placed"
@@ -308,8 +309,8 @@ impl Planner {
 
     /// Forget a lane's placement and release its planned cores (used by
     /// idempotent reprogramming).
-    pub fn unplan_lane(&mut self, lane: KernelLane) {
-        if let Some(plan) = self.lanes.remove(&lane) {
+    pub fn unplan_lane(&mut self, lane: impl Into<LaneId>) {
+        if let Some(plan) = self.lanes.remove(&lane.into()) {
             for s in 0..plan.shards.len() {
                 let tiles = self.shard_tiles(&plan, s);
                 for &c in &plan.shards[s].chips {
@@ -328,10 +329,11 @@ impl Planner {
     /// serving plan.
     pub fn replace_replica(
         &mut self,
-        lane: KernelLane,
+        lane: impl Into<LaneId>,
         s: usize,
         gone: usize,
     ) -> Option<usize> {
+        let lane = lane.into();
         let plan = self.lanes.get(&lane)?.clone();
         if s >= plan.shards.len() || !plan.shards[s].chips.contains(&gone) {
             return None;
@@ -362,10 +364,11 @@ impl Planner {
     /// inactive, already holds the shard, or lacks room.
     pub fn place_replica_on(
         &mut self,
-        lane: KernelLane,
+        lane: impl Into<LaneId>,
         s: usize,
         chip: usize,
     ) -> Result<usize> {
+        let lane = lane.into();
         let plan = self
             .lanes
             .get(&lane)
@@ -404,7 +407,8 @@ impl Planner {
 
     /// Release one chip's replica of shard `s` without replacement
     /// (scale-down of a shard that keeps other replicas).
-    pub fn release_replica(&mut self, lane: KernelLane, s: usize, chip: usize) {
+    pub fn release_replica(&mut self, lane: impl Into<LaneId>, s: usize, chip: usize) {
+        let lane = lane.into();
         let Some(plan) = self.lanes.get(&lane).cloned() else {
             return;
         };
@@ -447,7 +451,7 @@ mod tests {
         let a = build();
         let b = build();
         assert_eq!(a, b);
-        assert_eq!(a.lanes[&KernelLane::Rbf].shards.len(), 3);
+        assert_eq!(a.lanes[&LaneId::from(KernelLane::Rbf)].shards.len(), 3);
     }
 
     #[test]
@@ -592,7 +596,7 @@ mod tests {
             if plan.shards[s].chips.contains(&gone) {
                 let replacement = p.replace_replica(KernelLane::Rbf, s, gone).unwrap();
                 assert_ne!(replacement, gone);
-                let stored = &p.lanes[&KernelLane::Rbf].shards[s];
+                let stored = &p.lanes[&LaneId::from(KernelLane::Rbf)].shards[s];
                 assert!(!stored.chips.contains(&gone));
                 assert!(stored.chips.contains(&replacement));
             }
@@ -608,7 +612,7 @@ mod tests {
         assert_eq!(plan.replication(), 2);
         p.set_active(0, false);
         assert_eq!(p.replace_replica(KernelLane::Rbf, 0, 0), None);
-        assert_eq!(p.lanes[&KernelLane::Rbf].shards[0].chips, vec![1]);
+        assert_eq!(p.lanes[&LaneId::from(KernelLane::Rbf)].shards[0].chips, vec![1]);
     }
 
     #[test]
@@ -624,6 +628,6 @@ mod tests {
         assert!(p.place_replica_on(KernelLane::Rbf, 0, added).is_err());
         p.release_replica(KernelLane::Rbf, 0, added);
         assert_eq!(p.used()[added], 0);
-        assert!(!p.lanes[&KernelLane::Rbf].shards[0].chips.contains(&added));
+        assert!(!p.lanes[&LaneId::from(KernelLane::Rbf)].shards[0].chips.contains(&added));
     }
 }

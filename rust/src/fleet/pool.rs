@@ -37,13 +37,14 @@ use super::router::Router;
 use crate::aimc::pcm::DRIFT_T0;
 use crate::aimc::{Chip, MatrixHandle};
 use crate::config::{ChipConfig, FleetConfig};
-use crate::coordinator::request::KernelLane;
+use crate::coordinator::request::LaneId;
 use crate::coordinator::telemetry::{ChipSnapshot, FleetEventsSnapshot};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::util::threads::parallel_map;
 
-/// One programmed feature lane, fleet-wide. The shard plan is behind its
+/// One programmed Ω lane — a kernel feature lane or an attention head's
+/// projection lane ([`LaneId`]) — fleet-wide. The shard plan is behind its
 /// own lock because failover and autoscaling edit replica sets at
 /// runtime; everything else is immutable for the lane's lifetime.
 pub struct LaneMapping {
@@ -133,7 +134,7 @@ pub struct FleetPool {
     slots: RwLock<Vec<Arc<ChipSlot>>>,
     planner: Mutex<Planner>,
     router: Router,
-    lanes: RwLock<BTreeMap<KernelLane, Arc<LaneMapping>>>,
+    lanes: RwLock<BTreeMap<LaneId, Arc<LaneMapping>>>,
     clock_s: Mutex<f64>,
     /// chips ever created (stable seed stream for runtime-added chips)
     spawned: AtomicUsize,
@@ -141,8 +142,8 @@ pub struct FleetPool {
 }
 
 /// Chip-level matrix name of one shard of a lane's Ω.
-fn shard_name(lane: KernelLane, shard: usize) -> String {
-    format!("omega_{}_s{}", lane.kernel().as_str(), shard)
+fn shard_name(lane: LaneId, shard: usize) -> String {
+    format!("omega_{}_s{}", lane.label(), shard)
 }
 
 impl FleetPool {
@@ -203,7 +204,7 @@ impl FleetPool {
         self.slots.read().unwrap().clone()
     }
 
-    fn lanes_snapshot(&self) -> Vec<(KernelLane, Arc<LaneMapping>)> {
+    fn lanes_snapshot(&self) -> Vec<(LaneId, Arc<LaneMapping>)> {
         self.lanes
             .read()
             .unwrap()
@@ -328,11 +329,12 @@ impl FleetPool {
     /// [`FleetPool::reprogram_lane`] to rewrite an existing lane.
     pub fn program_lane(
         &self,
-        lane: KernelLane,
+        lane: impl Into<LaneId>,
         omega: Mat,
         x_cal: &Mat,
         core_replication: usize,
     ) -> Result<()> {
+        let lane = lane.into();
         if self.lanes.read().unwrap().contains_key(&lane) {
             return Err(Error::Coordinator(format!(
                 "lane {lane:?} already programmed (use reprogram_lane to rewrite it)"
@@ -422,11 +424,12 @@ impl FleetPool {
     /// returns the error with the old lane still live.
     pub fn reprogram_lane(
         &self,
-        lane: KernelLane,
+        lane: impl Into<LaneId>,
         omega: Mat,
         x_cal: &Mat,
         core_replication: usize,
     ) -> Result<()> {
+        let lane = lane.into();
         if x_cal.cols != omega.rows {
             return Err(Error::Shape(format!(
                 "calibration inputs are {}-d but Ω has {} rows",
@@ -463,7 +466,8 @@ impl FleetPool {
         self.program_lane(lane, omega, x_cal, core_replication)
     }
 
-    pub fn mapping(&self, lane: KernelLane) -> Result<Arc<LaneMapping>> {
+    pub fn mapping(&self, lane: impl Into<LaneId>) -> Result<Arc<LaneMapping>> {
+        let lane = lane.into();
         self.lanes
             .read()
             .unwrap()
@@ -479,7 +483,8 @@ impl FleetPool {
     /// then queue depth), run the per-chip MVMs concurrently, retry
     /// surviving replicas if a chip errors, and concatenate the column
     /// ranges.
-    pub fn project(&self, lane: KernelLane, x: &Mat) -> Result<Mat> {
+    pub fn project(&self, lane: impl Into<LaneId>, x: &Mat) -> Result<Mat> {
+        let lane = lane.into();
         let mapping = self.mapping(lane)?;
         if x.cols != mapping.d {
             return Err(Error::Shape(format!(
@@ -516,7 +521,7 @@ impl FleetPool {
     fn project_shard(
         &self,
         slots: &[Arc<ChipSlot>],
-        lane: KernelLane,
+        lane: LaneId,
         s: usize,
         shard: &ShardPlan,
         x: &Mat,
@@ -572,7 +577,8 @@ impl FleetPool {
     }
 
     /// Mean GDP programming error across a lane's shards and replicas.
-    pub fn programming_rms(&self, lane: KernelLane) -> Result<f64> {
+    pub fn programming_rms(&self, lane: impl Into<LaneId>) -> Result<f64> {
+        let lane = lane.into();
         let mapping = self.mapping(lane)?;
         // plan before slots: slots only grow, so every chip index the
         // plan mentions exists in a slots snapshot taken afterwards
@@ -700,7 +706,7 @@ impl FleetPool {
         self.set_chip_health(i, HealthState::Draining);
         // collect this chip's shard work *before* locking it (no plan
         // lock is ever taken while the chip lock is held)
-        let mut work: Vec<(KernelLane, usize, usize, usize, Arc<LaneMapping>)> = Vec::new();
+        let mut work: Vec<(LaneId, usize, usize, usize, Arc<LaneMapping>)> = Vec::new();
         for (lane, mapping) in self.lanes_snapshot() {
             for (s, shard) in mapping.plan().shards.iter().enumerate() {
                 if shard.chips.contains(&i) {
@@ -764,7 +770,7 @@ impl FleetPool {
     fn program_shard_replica(
         &self,
         slots: &[Arc<ChipSlot>],
-        lane: KernelLane,
+        lane: LaneId,
         s: usize,
         col0: usize,
         col1: usize,
@@ -942,7 +948,7 @@ impl FleetPool {
         self.set_chip_health(c, HealthState::Draining);
         let lanes = self.lanes_snapshot();
         // plan every move on a trial planner; commit atomically on success
-        let mut moves: Vec<(KernelLane, usize, usize, usize, Option<usize>, Arc<LaneMapping>)> =
+        let mut moves: Vec<(LaneId, usize, usize, usize, Option<usize>, Arc<LaneMapping>)> =
             Vec::new();
         {
             let mut planner = self.planner.lock().unwrap();
@@ -1057,6 +1063,7 @@ impl FleetPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::KernelLane;
     use crate::fleet::placement::PlacementPolicy;
     use crate::fleet::router::RouterPolicy;
     use crate::util::stats::rel_fro_error;

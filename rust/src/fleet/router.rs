@@ -193,6 +193,42 @@ mod tests {
     }
 
     #[test]
+    fn p2c_follows_skewed_static_queue_depths() {
+        // graded skew (not just one hot replica): with static loads
+        // [8, 4, 0, 0], p2c traffic must be monotone in queue depth —
+        // the deepest queue gets nothing (it loses every distinct-probe
+        // pair), the mid-depth replica wins only against it, and the
+        // idle replicas absorb the rest
+        let r = Router::new(RouterPolicy::P2c, 11);
+        let loads = [8usize, 4, 0, 0];
+        let mut hits = [0usize; 4];
+        for _ in 0..2000 {
+            hits[r.pick(4, |i| loads[i])] += 1;
+        }
+        assert_eq!(hits[0], 0, "deepest queue still routed: {hits:?}");
+        assert!(hits[1] > 0, "mid-depth starved: {hits:?}");
+        assert!(hits[1] < hits[2] && hits[1] < hits[3], "{hits:?}");
+        assert_eq!(hits.iter().sum::<usize>(), 2000);
+    }
+
+    #[test]
+    fn p2c_pick_among_respects_per_chip_depths() {
+        // pick_among is the serving entry point: candidates are global
+        // chip indices and loads are per-chip in-flight counters
+        let r = Router::new(RouterPolicy::P2c, 13);
+        let depth = [0usize, 50, 2, 9, 0];
+        let mut hits = [0usize; 5];
+        for _ in 0..600 {
+            hits[r.pick_among(&[1, 2, 4], |c| depth[c])] += 1;
+        }
+        assert_eq!(hits[0] + hits[3], 0, "non-candidates routed: {hits:?}");
+        assert_eq!(hits[1], 0, "overloaded candidate routed: {hits:?}");
+        assert!(hits[2] > 0 && hits[4] > 0, "{hits:?}");
+        // the idle chip beats the 2-deep chip whenever they are paired
+        assert!(hits[4] > hits[2], "{hits:?}");
+    }
+
+    #[test]
     fn p2c_prefers_lighter_of_two() {
         let r = Router::new(RouterPolicy::P2c, 7);
         // one replica is massively overloaded; p2c must route around it

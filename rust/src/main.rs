@@ -68,6 +68,13 @@ SUBCOMMANDS
   serve                        boot the coordinator and TCP server
       --bind ADDR              (default 127.0.0.1:7473)
       --workers N --max-batch N --max-wait-us N --replication N
+      --drain-cap N            batcher opportunistic-drain cap per pass
+                               (0 = auto, 4 x max-batch)
+      --attn-heads N --attn-d-head N --attn-m N
+                               streaming-attention lane geometry
+                               (per-head FAVOR+ Ω programmed on the fleet)
+      --attn-max-sessions N    concurrently open attention sessions
+      --attn-path P            default attn_open path: analog | fp32
       --n-chips N              emulated chips in the fleet (default 1)
       --placement P            packed | sharded
       --router R               round_robin | least_loaded | p2c
@@ -111,6 +118,19 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
     cfg.serve.max_batch = args.usize_or("max-batch", cfg.serve.max_batch)?;
     cfg.serve.max_wait_us = args.usize_or("max-wait-us", cfg.serve.max_wait_us as usize)? as u64;
     cfg.serve.replication = args.usize_or("replication", cfg.serve.replication)?;
+    cfg.serve.drain_cap = args.usize_or("drain-cap", cfg.serve.drain_cap)?;
+    cfg.attention.serve.heads = args.usize_or("attn-heads", cfg.attention.serve.heads)?.max(1);
+    cfg.attention.serve.d_head =
+        args.usize_or("attn-d-head", cfg.attention.serve.d_head)?.max(1);
+    cfg.attention.serve.m = args.usize_or("attn-m", cfg.attention.serve.m)?.max(1);
+    cfg.attention.serve.max_sessions = args
+        .usize_or("attn-max-sessions", cfg.attention.serve.max_sessions)?
+        .max(1);
+    if let Some(p) = args.get("attn-path") {
+        imka::coordinator::PathKind::parse(p)
+            .ok_or_else(|| Error::Parse(format!("--attn-path: unknown path '{p}'")))?;
+        cfg.attention.serve.path = p.to_string();
+    }
     cfg.fleet.n_chips = args.usize_or("n-chips", cfg.fleet.n_chips)?.max(1);
     cfg.fleet.replication = args.usize_or("fleet-replication", cfg.fleet.replication)?.max(1);
     cfg.fleet.recal_interval_s = args.f64_or("recal-interval-s", cfg.fleet.recal_interval_s)?;
@@ -160,6 +180,14 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
         100.0 * engine.fleet_utilization(),
         engine.has_model()
     );
+    {
+        let a = &cfg.attention.serve;
+        println!(
+            "attention serving: {} heads x d_head {} x m {} (default path {}, \
+             up to {} sessions)",
+            a.heads, a.d_head, a.m, a.path, a.max_sessions
+        );
+    }
     if cfg.fleet.recal_interval_s > 0.0 {
         match imka::fleet::age_at_budget(&cfg.chip, cfg.fleet.drift_err_budget) {
             Some(age) => println!(

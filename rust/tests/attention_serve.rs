@@ -1,0 +1,417 @@
+//! Streaming kernelized-attention serving (ISSUE 4 acceptance):
+//!
+//! - a token-by-token streamed session reproduces the offline
+//!   `favor_attention` output on every prefix (fp32 path, fp tolerance);
+//! - the analog path stays inside the paper-scale relative-error
+//!   envelope against its digital twin;
+//! - an open session keeps serving through a chip eviction (the FAVOR+
+//!   running state lives off-chip; only the φ lanes fail over);
+//! - the engine + TCP server serve the attention workload end-to-end on
+//!   the checked-in miniature artifact bundle (`artifacts-mini`), so
+//!   this engine/server coverage runs unconditionally — no `make
+//!   artifacts`, no PJRT.
+
+use imka::config::json::Json;
+use imka::config::{AttnServeConfig, ChipConfig, Config, FleetConfig};
+use imka::coordinator::session::{head_omega, SessionManager};
+use imka::coordinator::{Client, Engine, PathKind, Server};
+use imka::features::favor::favor_attention;
+use imka::fleet::{FleetPool, HealthState, PlacementPolicy, RouterPolicy};
+use imka::linalg::Mat;
+use imka::util::stats::rel_fro_error;
+use imka::util::Rng;
+
+fn attn_cfg(heads: usize, d_head: usize, m: usize) -> AttnServeConfig {
+    AttnServeConfig {
+        heads,
+        d_head,
+        m,
+        max_sessions: 16,
+        path: "analog".to_string(),
+        seed: 0xA77E,
+    }
+}
+
+/// Per-head token streams (heads × (L × d_head) mats) plus the flattened
+/// per-token vectors the serving API consumes.
+struct TokenStream {
+    q: Vec<Mat>,
+    k: Vec<Mat>,
+    v: Vec<Mat>,
+    flat_q: Vec<Vec<f32>>,
+    flat_k: Vec<Vec<f32>>,
+    flat_v: Vec<Vec<f32>>,
+}
+
+fn token_stream(seed: u64, l: usize, heads: usize, d_head: usize) -> TokenStream {
+    let mut rng = Rng::new(seed);
+    let mk = |rng: &mut Rng| {
+        (0..heads)
+            .map(|_| {
+                let mut m = Mat::randn(l, d_head, rng);
+                m.scale(0.5);
+                m
+            })
+            .collect::<Vec<_>>()
+    };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let flatten = |mats: &[Mat]| {
+        (0..l)
+            .map(|t| mats.iter().flat_map(|m| m.row(t).to_vec()).collect::<Vec<f32>>())
+            .collect::<Vec<_>>()
+    };
+    let (flat_q, flat_k, flat_v) = (flatten(&q), flatten(&k), flatten(&v));
+    TokenStream { q, k, v, flat_q, flat_k, flat_v }
+}
+
+/// Offline reference: full FAVOR+ attention on the prefix 0..=t of head
+/// `h`, last row — exactly what a causal stream must emit at step t.
+fn offline_prefix_row(ts: &TokenStream, cfg: &AttnServeConfig, h: usize, t: usize) -> Vec<f32> {
+    let idx: Vec<usize> = (0..=t).collect();
+    let out = favor_attention(
+        &ts.q[h].select_rows(&idx),
+        &ts.k[h].select_rows(&idx),
+        &ts.v[h].select_rows(&idx),
+        &head_omega(cfg, h),
+    );
+    out.row(t).to_vec()
+}
+
+fn small_chip() -> ChipConfig {
+    ChipConfig { cores: 8, rows: 16, cols: 16, ..ChipConfig::default() }
+}
+
+/// ISSUE acceptance: token-by-token streaming through the serving
+/// session layer reproduces the offline favor_attention output on every
+/// checked prefix, to float tolerance, on the fp32 path.
+#[test]
+fn streamed_session_reproduces_offline_favor_fp32() {
+    let cfg = attn_cfg(2, 8, 64);
+    let mgr = SessionManager::new(cfg.clone(), 1);
+    let pool = FleetPool::new(small_chip(), FleetConfig::default(), 1);
+    let info = mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+
+    let l = 12;
+    let ts = token_stream(3, l, cfg.heads, cfg.d_head);
+    let mut streamed: Vec<Vec<f32>> = Vec::new();
+    for t in 0..l {
+        let out = mgr
+            .append_batch(
+                &pool,
+                info.id,
+                &[(
+                    ts.flat_q[t].as_slice(),
+                    ts.flat_k[t].as_slice(),
+                    ts.flat_v[t].as_slice(),
+                )],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1, t, "token index must be the stream position");
+        streamed.push(out[0].0.clone());
+    }
+    for t in [0usize, 3, 7, 11] {
+        for h in 0..cfg.heads {
+            let want = offline_prefix_row(&ts, &cfg, h, t);
+            let got = &streamed[t][h * cfg.d_head..(h + 1) * cfg.d_head];
+            let rel = rel_fro_error(got, &want);
+            assert!(rel < 1e-3, "t {t} head {h}: streamed-vs-offline rel {rel}");
+        }
+    }
+    assert_eq!(mgr.close(info.id).unwrap(), l);
+}
+
+/// Batched appends must produce the identical stream as token-by-token
+/// appends (the batcher's session-affinity contract).
+#[test]
+fn batched_appends_match_single_token_stream() {
+    let cfg = attn_cfg(2, 8, 32);
+    let mgr = SessionManager::new(cfg.clone(), 1);
+    let pool = FleetPool::new(small_chip(), FleetConfig::default(), 2);
+    let l = 6;
+    let ts = token_stream(5, l, cfg.heads, cfg.d_head);
+
+    let one = mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+    let mut single: Vec<Vec<f32>> = Vec::new();
+    for t in 0..l {
+        let out = mgr
+            .append_batch(
+                &pool,
+                one.id,
+                &[(
+                    ts.flat_q[t].as_slice(),
+                    ts.flat_k[t].as_slice(),
+                    ts.flat_v[t].as_slice(),
+                )],
+            )
+            .unwrap();
+        single.push(out[0].0.clone());
+    }
+
+    let many = mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+    let items: Vec<(&[f32], &[f32], &[f32])> = (0..l)
+        .map(|t| {
+            (
+                ts.flat_q[t].as_slice(),
+                ts.flat_k[t].as_slice(),
+                ts.flat_v[t].as_slice(),
+            )
+        })
+        .collect();
+    let out = mgr.append_batch(&pool, many.id, &items).unwrap();
+    assert_eq!(out.len(), l);
+    for t in 0..l {
+        assert_eq!(out[t].1, t);
+        let rel = rel_fro_error(&out[t].0, &single[t]);
+        assert!(rel < 1e-5, "t {t}: batched-vs-single rel {rel}");
+    }
+}
+
+/// The analog path (φ via fleet MVM + native softmax postprocess) stays
+/// within the paper-scale relative-error envelope of its digital twin.
+#[test]
+fn analog_streamed_session_stays_in_error_envelope() {
+    let cfg = attn_cfg(2, 8, 128);
+    let mgr = SessionManager::new(cfg.clone(), 1);
+    let pool = FleetPool::new(ChipConfig::default(), FleetConfig::default(), 3);
+    let analog = mgr.open(&pool, Some(PathKind::Analog)).unwrap();
+    let digital = mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+    assert!(pool.cores_used() > 0, "analog open must program head lanes");
+
+    let l = 10;
+    let ts = token_stream(7, l, cfg.heads, cfg.d_head);
+    let mut acc = 0.0;
+    for t in 0..l {
+        let item = [(
+            ts.flat_q[t].as_slice(),
+            ts.flat_k[t].as_slice(),
+            ts.flat_v[t].as_slice(),
+        )];
+        let ya = mgr.append_batch(&pool, analog.id, &item).unwrap();
+        let yd = mgr.append_batch(&pool, digital.id, &item).unwrap();
+        assert!(ya[0].0.iter().all(|v| v.is_finite()));
+        let rel = rel_fro_error(&ya[0].0, &yd[0].0);
+        assert!(rel < 1.0, "t {t}: analog-vs-digital rel {rel}");
+        acc += rel;
+    }
+    let mean = acc / l as f64;
+    assert!(mean > 0.0, "analog path must actually run on the chip");
+    assert!(mean < 0.6, "mean analog-vs-digital rel {mean}");
+}
+
+/// ISSUE acceptance: an open attention session keeps serving through
+/// `evict_chip`. The running state is off-chip; the per-head Ω lanes are
+/// replicated, so eviction re-places them on survivors mid-stream.
+#[test]
+fn open_session_survives_chip_eviction() {
+    let cfg = attn_cfg(2, 8, 32);
+    let mgr = SessionManager::new(cfg.clone(), 1);
+    let fleet = FleetConfig {
+        n_chips: 3,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::LeastLoaded,
+        replication: 2,
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(small_chip(), fleet, 41);
+    let analog = mgr.open(&pool, Some(PathKind::Analog)).unwrap();
+    let digital = mgr.open(&pool, Some(PathKind::Digital)).unwrap();
+
+    let l = 8;
+    let ts = token_stream(11, l, cfg.heads, cfg.d_head);
+    let stream_one = |t: usize, id: u64| {
+        let item = [(
+            ts.flat_q[t].as_slice(),
+            ts.flat_k[t].as_slice(),
+            ts.flat_v[t].as_slice(),
+        )];
+        mgr.append_batch(&pool, id, &item).map(|mut o| o.remove(0))
+    };
+
+    for t in 0..4 {
+        stream_one(t, analog.id).unwrap();
+        stream_one(t, digital.id).unwrap();
+    }
+
+    // kill the chip holding a replica of head 0's lane, then evict it
+    let victim = pool
+        .mapping(imka::coordinator::LaneId::AttnHead(0))
+        .unwrap()
+        .plan()
+        .shards[0]
+        .chips[0];
+    pool.inject_fault(victim, true);
+    pool.evict_chip(victim).unwrap();
+    assert_eq!(pool.chip_health(victim), HealthState::Evicted);
+    assert_eq!(pool.events().evictions, 1);
+
+    // the session was never told anything happened: streaming continues
+    let mut acc = 0.0;
+    for t in 4..l {
+        let (ya, idx) = stream_one(t, analog.id).unwrap();
+        let (yd, _) = stream_one(t, digital.id).unwrap();
+        assert_eq!(idx, t, "token indices must survive the eviction");
+        assert!(ya.iter().all(|v| v.is_finite()));
+        acc += rel_fro_error(&ya, &yd);
+    }
+    assert!(acc / 4.0 < 0.8, "post-eviction analog drifted: {}", acc / 4.0);
+
+    // every head lane has been re-placed off the victim
+    for h in 0..cfg.heads {
+        let plan = pool
+            .mapping(imka::coordinator::LaneId::AttnHead(h as u32))
+            .unwrap()
+            .plan();
+        for sh in &plan.shards {
+            assert!(!sh.chips.contains(&victim), "{sh:?}");
+        }
+    }
+    assert_eq!(mgr.close(analog.id).unwrap(), l);
+}
+
+// ---------------------------------------------------------------------------
+// engine + TCP server on the checked-in miniature artifact bundle
+// ---------------------------------------------------------------------------
+
+fn mini_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts-mini")
+        .to_string_lossy()
+        .to_string();
+    cfg.serve.max_wait_us = 500;
+    cfg.serve.workers = 2;
+    cfg.serve.warm = false; // nothing to warm: the mini bundle is analog-only
+    cfg.serve.bind = "127.0.0.1:0".into();
+    cfg.attention.serve = attn_cfg(2, 8, 32);
+    cfg
+}
+
+/// Runs unconditionally (ROADMAP seed-test triage): the checked-in
+/// `artifacts-mini` manifest boots the engine with an analog arccos0
+/// feature lane and the attention workload, no built artifacts or PJRT
+/// runtime required.
+#[test]
+fn mini_bundle_engine_serves_features_and_attention_over_tcp() {
+    let cfg = mini_config();
+    let acfg = cfg.attention.serve.clone();
+    let engine = Engine::start(&cfg).expect("mini bundle must boot the engine");
+    assert!(!engine.has_model());
+    let server = Server::start(engine, &cfg.serve.bind).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let pong = client.call(&Json::parse(r#"{"type":"ping"}"#).unwrap()).unwrap();
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    // analog arccos0 features are fully native: chip MVM + heaviside
+    let x: Vec<String> = (0..16).map(|i| format!("{}", (i as f64 - 8.0) / 8.0)).collect();
+    let req = format!(
+        r#"{{"type":"features","kernel":"arccos0","path":"analog","x":[{}]}}"#,
+        x.join(",")
+    );
+    let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let z = resp.get("z").unwrap().as_arr().unwrap();
+    assert_eq!(z.len(), 64);
+    assert!(resp.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+
+    // the digital path needs the real PJRT runtime: clean error, not a hang
+    let req = format!(
+        r#"{{"type":"features","kernel":"arccos0","path":"digital","x":[{}]}}"#,
+        x.join(",")
+    );
+    let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+
+    // open an fp32 attention session and stream tokens through TCP
+    let resp = client
+        .call(&Json::parse(r#"{"type":"attn_open","path":"fp32"}"#).unwrap())
+        .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("heads").unwrap().as_usize(), Some(2));
+    let session = resp.get("session").unwrap().as_usize().unwrap();
+
+    let l = 6;
+    let ts = token_stream(21, l, acfg.heads, acfg.d_head);
+    let join = |v: &[f32]| {
+        v.iter().map(|x| format!("{x:.7}")).collect::<Vec<_>>().join(",")
+    };
+    let mut last = Vec::new();
+    for t in 0..l {
+        let req = format!(
+            r#"{{"type":"attn_append","session":{session},"q":[{}],"k":[{}],"v":[{}]}}"#,
+            join(&ts.flat_q[t]),
+            join(&ts.flat_k[t]),
+            join(&ts.flat_v[t])
+        );
+        let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("index").unwrap().as_usize(), Some(t));
+        last = resp
+            .get("y")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(last.len(), acfg.heads * acfg.d_head);
+    }
+    // the TCP stream reproduces offline favor_attention on the full
+    // prefix (values crossed the wire with 7 decimals — loose tolerance)
+    for h in 0..acfg.heads {
+        let want = offline_prefix_row(&ts, &acfg, h, l - 1);
+        let got = &last[h * acfg.d_head..(h + 1) * acfg.d_head];
+        let rel = rel_fro_error(got, &want);
+        assert!(rel < 1e-2, "head {h}: tcp-streamed vs offline rel {rel}");
+    }
+
+    // an analog session over the same verbs programs the head lanes
+    let resp = client
+        .call(&Json::parse(r#"{"type":"attn_open","path":"analog"}"#).unwrap())
+        .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let analog_session = resp.get("session").unwrap().as_usize().unwrap();
+    let req = format!(
+        r#"{{"type":"attn_append","session":{analog_session},"q":[{}],"k":[{}],"v":[{}]}}"#,
+        join(&ts.flat_q[0]),
+        join(&ts.flat_k[0]),
+        join(&ts.flat_v[0])
+    );
+    let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert!(resp.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+
+    // appends to a bogus session fail cleanly
+    let resp = client
+        .call(&Json::parse(r#"{"type":"attn_append","session":999,"q":[1],"k":[1],"v":[1]}"#).unwrap())
+        .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+
+    // stats aggregates the attention workload
+    let resp = client.call(&Json::parse(r#"{"type":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    let attn = resp.get("attention").unwrap();
+    assert_eq!(attn.get("active_sessions").unwrap().as_usize(), Some(2));
+    assert_eq!(attn.get("opened").unwrap().as_usize(), Some(2));
+    assert!(attn.get("tokens").unwrap().as_usize().unwrap() >= (l + 1));
+    let lanes = resp.get("lanes").unwrap().as_arr().unwrap();
+    assert!(
+        lanes.iter().any(|l| l.get("lane").and_then(|s| s.as_str()) == Some("attention_serve")),
+        "{lanes:?}"
+    );
+
+    // close both; a second close is a clean error
+    for id in [session, analog_session] {
+        let resp = client
+            .call(&Json::parse(&format!(r#"{{"type":"attn_close","session":{id}}}"#)).unwrap())
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    }
+    let resp = client
+        .call(&Json::parse(&format!(r#"{{"type":"attn_close","session":{session}}}"#)).unwrap())
+        .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+
+    server.shutdown();
+}

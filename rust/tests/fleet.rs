@@ -237,6 +237,58 @@ fn serving_continues_through_eviction_and_replacement() {
     );
 }
 
+/// Fallback-tier ordering (ISSUE 4): with a fully replicated shard, a
+/// `Healthy` replica takes all traffic over `Degraded` and `Draining`
+/// ones; with no `Healthy` replica, `Degraded` outranks `Draining`; and
+/// an all-`Draining` replica set still serves (last resort) rather than
+/// black-holing, while `Joining`/`Evicted` never serve.
+#[test]
+fn draining_tier_serves_only_as_last_resort() {
+    let fleet = FleetConfig {
+        n_chips: 3,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::LeastLoaded,
+        replication: 3,
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(small_chip(), fleet, 31);
+    let mut rng = Rng::new(9);
+    let omega = Mat::randn(16, 16, &mut rng);
+    let x_cal = Mat::randn(16, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+    let x = Mat::randn(4, 16, &mut rng);
+    let served = |i: usize| pool.chip_snapshots()[i].served;
+
+    // healthy replica wins over degraded + draining
+    pool.set_chip_health(0, HealthState::Draining);
+    pool.set_chip_health(1, HealthState::Degraded);
+    for _ in 0..4 {
+        pool.project(KernelLane::Rbf, &x).unwrap();
+    }
+    assert_eq!((served(0), served(1), served(2)), (0, 0, 4));
+
+    // no healthy replica: degraded outranks draining
+    pool.set_chip_health(2, HealthState::Draining);
+    for _ in 0..4 {
+        pool.project(KernelLane::Rbf, &x).unwrap();
+    }
+    assert_eq!((served(0), served(1), served(2)), (0, 4, 4));
+
+    // all draining: last resort still serves
+    pool.set_chip_health(1, HealthState::Draining);
+    for _ in 0..4 {
+        pool.project(KernelLane::Rbf, &x).unwrap();
+    }
+    assert_eq!(served(0) + served(1) + served(2), 16);
+
+    // joining/evicted replicas are never used, even as a last resort
+    pool.set_chip_health(0, HealthState::Joining);
+    pool.set_chip_health(1, HealthState::Evicted);
+    pool.set_chip_health(2, HealthState::Joining);
+    let err = pool.project(KernelLane::Rbf, &x).unwrap_err();
+    assert!(err.to_string().contains("no routable replica"), "{err}");
+}
+
 fn control_cfg(min: usize, max: usize) -> ControlConfig {
     ControlConfig {
         enabled: true,

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 gate in one command: build, test, format check.
+# Tier-1 gate in one command: build, test, lint, format check.
 #
-#   scripts/ci.sh            # full gate
-#   SKIP_FMT=1 scripts/ci.sh # environments without rustfmt
+#   scripts/ci.sh               # full gate
+#   SKIP_FMT=1 scripts/ci.sh    # environments without rustfmt
+#   SKIP_CLIPPY=1 scripts/ci.sh # environments without clippy
 #
 # Runs from any cwd. Benches and examples are compiled as part of
 # `cargo test` (they are declared targets), so the gate also catches
@@ -21,6 +22,21 @@ cargo test -q
 # regressions surface in the tier-1 gate even without artifacts
 echo "== bench_fleet smoke (2-chip, small lane) =="
 IMKA_BENCH_FLEET_SMOKE=1 cargo bench --bench bench_fleet
+
+# streaming-attention smoke: both projection paths of the session layer
+# (fp32 + analog over the fleet router), including the final-token
+# rel-err check against offline favor_attention — artifact-free
+echo "== bench_attention_serve smoke (fp32 + analog sessions) =="
+IMKA_BENCH_ATTN_SMOKE=1 cargo bench --bench bench_attention_serve
+
+if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== cargo clippy --all-targets -- -D warnings =="
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "clippy not installed; skipping lint (set SKIP_CLIPPY=1 to silence)"
+    fi
+fi
 
 if [ "${SKIP_FMT:-0}" != "1" ]; then
     if command -v rustfmt >/dev/null 2>&1; then
