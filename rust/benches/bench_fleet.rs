@@ -9,6 +9,14 @@
 //! error) is reported alongside throughput to show scaling does not cost
 //! approximation accuracy.
 //!
+//! The contended row pins N lanes to ONE chip and drives one thread per
+//! lane: before the core-parallel refactor every MVM serialized behind
+//! the chip-global lock (emulated here by a mutex around `project`);
+//! after it, lanes on disjoint cores of the same chip run concurrently
+//! under the chip's read lock. The speedup between the two disciplines
+//! is the tentpole's acceptance number (≥ 2x for 4 lanes), and the Gram
+//! error is reported for both to show the envelope is unchanged.
+//!
 //! The chaos row then kills one chip of an N-chip fleet and measures
 //! throughput in three phases: healthy baseline, with the dead chip
 //! still in the replica sets (requests fail over per-shard), and after
@@ -17,12 +25,15 @@
 //! Emits one human-readable line and one JSON row per configuration.
 //! Run: cargo bench --bench bench_fleet
 //! Smoke mode (CI tier-1 gate): IMKA_BENCH_FLEET_SMOKE=1 shrinks the
-//! lane and rep counts and runs {1, 2} chips so placement/routing
-//! regressions surface in seconds without artifacts.
+//! lane and rep counts and runs {1, 2} chips so placement/routing — and
+//! same-chip core-parallelism — regressions surface in seconds without
+//! artifacts.
+
+use std::sync::Mutex;
 
 use imka::config::json::{num, obj, s, Json};
 use imka::config::{ChipConfig, FleetConfig};
-use imka::coordinator::request::KernelLane;
+use imka::coordinator::request::{KernelLane, LaneId};
 use imka::features::postprocess;
 use imka::features::sampler::{sample_omega, Sampler};
 use imka::fleet::{FleetPool, PlacementPolicy, RouterPolicy};
@@ -183,8 +194,84 @@ fn chaos_row(p: &Params) {
     println!("{}", row.to_string());
 }
 
+/// Contended row: N lanes pinned to one multi-core chip, one driver
+/// thread per lane. "Serialized" wraps every projection in a global
+/// mutex — the pre-refactor chip-global lock discipline — while
+/// "concurrent" is the live read-lock path.
+fn contended_row(p: &Params) {
+    let n_lanes = 4usize;
+    println!("== contended: {n_lanes} lanes pinned to 1 chip, 1 thread/lane ==");
+    let fleet = FleetConfig {
+        n_chips: 1,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::P2c,
+        replication: 1,
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(ChipConfig::default(), fleet, 2);
+    let mut rng = Rng::new(9);
+    let x_cal = Mat::randn(128, p.d, &mut rng);
+    // lane 0 is the RBF kernel lane (so the Gram-error probe applies);
+    // the rest are independent Ω lanes on further cores of the same chip
+    let lanes: Vec<LaneId> = (0..n_lanes)
+        .map(|i| {
+            if i == 0 {
+                LaneId::from(KernelLane::Rbf)
+            } else {
+                LaneId::AttnHead(i as u32)
+            }
+        })
+        .collect();
+    for &lane in &lanes {
+        let omega = sample_omega(Sampler::Orf, p.d, p.m, &mut rng);
+        pool.program_lane(lane, omega, &x_cal, 1).unwrap();
+    }
+    let mut x = Mat::randn(p.batch, p.d, &mut rng);
+    x.scale(0.5);
+    for &lane in &lanes {
+        pool.project(lane, &x).unwrap(); // warm
+    }
+
+    let drive_lanes = |serialize: bool| -> f64 {
+        let gate = Mutex::new(());
+        let t = Timer::start();
+        parallel_map(n_lanes, |i| {
+            for _ in 0..p.reps {
+                let _hold = serialize.then(|| gate.lock().unwrap());
+                pool.project(lanes[i], &x).unwrap();
+            }
+        });
+        (n_lanes * p.reps) as f64 / t.elapsed_secs()
+    };
+
+    let serialized = drive_lanes(true);
+    let err_serialized = gram_err(p, &pool);
+    let concurrent = drive_lanes(false);
+    let err_concurrent = gram_err(p, &pool);
+    let speedup = concurrent / serialized.max(1e-12);
+
+    println!(
+        "serialized {serialized:>8.1} MVM/s  concurrent {concurrent:>8.1} MVM/s  \
+         speedup x{speedup:<5.2}  gram rel err {err_serialized:.4} -> {err_concurrent:.4}"
+    );
+    let row = obj(vec![
+        ("bench", s("fleet_contended")),
+        ("lanes", num(n_lanes as f64)),
+        ("batch", num(p.batch as f64)),
+        ("reps", num(p.reps as f64)),
+        ("mvms_per_s_serialized", num(serialized)),
+        ("mvms_per_s_concurrent", num(concurrent)),
+        ("speedup", num(speedup)),
+        ("gram_rel_err_serialized", num(err_serialized)),
+        ("gram_rel_err_concurrent", num(err_concurrent)),
+        ("ok", Json::Bool(true)),
+    ]);
+    println!("{}", row.to_string());
+}
+
 fn main() {
     let p = params();
     scaling_rows(&p);
+    contended_row(&p);
     chaos_row(&p);
 }

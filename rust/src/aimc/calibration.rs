@@ -10,6 +10,10 @@
 //!   calibration set with a safety margin, so reads don't saturate),
 //! - the per-column digital affine correction that undoes the
 //!   normalization after the ADC.
+//!
+//! Calibration runs only at (re)programming time, i.e. on the write path
+//! under the chip's exclusive lock; its outputs are baked into the core's
+//! converters and never mutated by the concurrent MVM read path.
 
 use crate::config::ChipConfig;
 use crate::linalg::{matmul, Mat};

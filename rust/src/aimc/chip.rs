@@ -9,6 +9,14 @@
 //! whole placement on spare cores and round-robins reads across them —
 //! the paper's throughput-scaling strategy ("one can simply replicate the
 //! mapping matrix across different cores").
+//!
+//! Lock discipline: the MVM hot path ([`Chip::matmul`]) takes `&self` —
+//! cores execute reads independently and in parallel, exactly like the
+//! 64-core HERMES device — while everything that rewrites conductances
+//! or placement state (`program_matrix`, `unprogram`, `reprogram_matrix`,
+//! `set_drift_time`) stays `&mut self`. Callers holding a chip behind a
+//! `RwLock` therefore run many concurrent MVMs under the read lock and
+//! take the write lock only to (re)program.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -20,6 +28,11 @@ use crate::config::ChipConfig;
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::util::Rng;
+
+/// Minimum multiply-accumulates per tile before a multi-tile MVM fans
+/// its tiles over worker threads (below this, spawn/join overhead on
+/// the scoped threads outweighs the tile matmul itself).
+const PARALLEL_TILE_MACS: usize = 1 << 17;
 
 /// One tile of a placed matrix.
 struct Tile {
@@ -140,10 +153,14 @@ impl Chip {
     }
 
     /// Analog MVM: x (n x d) @ W (d x m) on the programmed tiles.
-    pub fn matmul(&mut self, handle: &MatrixHandle, x: &Mat) -> Result<Mat> {
+    /// `&self`: MVMs on disjoint cores (different tiles, replicas or
+    /// placements) of one chip run concurrently; a multi-tile replica
+    /// additionally fans its tiles out over worker threads, since each
+    /// tile is an independent core read.
+    pub fn matmul(&self, handle: &MatrixHandle, x: &Mat) -> Result<Mat> {
         let p = self
             .placements
-            .get_mut(&handle.0)
+            .get(&handle.0)
             .ok_or_else(|| Error::Chip(format!("unknown matrix '{}'", handle.0)))?;
         if x.cols != p.rows {
             return Err(Error::Shape(format!(
@@ -151,13 +168,41 @@ impl Chip {
                 x.cols, handle.0, p.rows
             )));
         }
-        let r = p.next_replica.fetch_add(1, Ordering::Relaxed) % p.replicas.len();
+        // bounded round-robin: the stored counter is reduced modulo the
+        // replica count at every step, so it can never wrap usize and
+        // skew the distribution (a plain fetch_add(1) % len would)
+        let n_rep = p.replicas.len();
+        let r = p
+            .next_replica
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.wrapping_add(1) % n_rep)
+            })
+            .unwrap_or(0)
+            % n_rep;
         let cols = p.cols;
-        let tiles = &mut p.replicas[r];
+        let tiles = &p.replicas[r];
+        // fan tiles over worker threads only when the per-tile matmul
+        // amortizes the thread-spawn cost; tiny tiles (or single-tile
+        // placements) run inline — the caller is often already inside a
+        // per-shard / per-request fan-out, so oversubscribing on small
+        // work would cost more than it buys
+        let per_tile_macs = tiles
+            .first()
+            .map(|t| x.rows * (t.row1 - t.row0) * (t.col1 - t.col0))
+            .unwrap_or(0);
+        let partials: Vec<Mat> = if tiles.len() > 1 && per_tile_macs >= PARALLEL_TILE_MACS {
+            crate::util::threads::parallel_map(tiles.len(), |t| {
+                let tile = &tiles[t];
+                tile.core.forward_batch(&x.slice_cols(tile.row0, tile.row1))
+            })
+        } else {
+            tiles
+                .iter()
+                .map(|tile| tile.core.forward_batch(&x.slice_cols(tile.row0, tile.row1)))
+                .collect()
+        };
         let mut out = Mat::zeros(x.rows, cols);
-        for tile in tiles.iter_mut() {
-            let x_block = x.slice_cols(tile.row0, tile.row1);
-            let y = tile.core.forward_batch(&x_block);
+        for (tile, y) in tiles.iter().zip(partials) {
             // digital accumulation across row blocks
             for i in 0..out.rows {
                 let dst = &mut out.row_mut(i)[tile.col0..tile.col1];
@@ -343,6 +388,54 @@ mod tests {
         let y3 = c.matmul(&h, &x).unwrap();
         assert_ne!(y1.data, y2.data);
         assert_ne!(y2.data, y3.data);
+    }
+
+    #[test]
+    fn replica_round_robin_survives_poisoned_counter() {
+        // with sigma_read = 0 each replica's output is deterministic
+        // (distinct programming noise), so the rotation is directly
+        // observable; a counter parked near usize::MAX must neither
+        // panic nor skew the cycle (the old fetch_add % len wrapped)
+        let mut cfg = ChipConfig::default();
+        cfg.sigma_read = 0.0;
+        let mut c = chip(cfg);
+        let mut rng = Rng::new(20);
+        let w = Mat::randn(8, 8, &mut rng);
+        let x = Mat::randn(4, 8, &mut rng);
+        let h = c.program_matrix("w", &w, &x, 3).unwrap();
+        c.placements["w"].next_replica.store(usize::MAX - 1, Ordering::Relaxed);
+        let ys: Vec<Vec<f32>> = (0..6).map(|_| c.matmul(&h, &x).unwrap().data).collect();
+        // a clean period-3 rotation through three distinct replicas
+        for i in 0..3 {
+            assert_eq!(ys[i], ys[i + 3], "replica cycle broken at {i}");
+        }
+        assert_ne!(ys[0], ys[1]);
+        assert_ne!(ys[1], ys[2]);
+        assert_ne!(ys[0], ys[2]);
+        // and the stored counter is back inside [0, replicas)
+        let stored = c.placements["w"].next_replica.load(Ordering::Relaxed);
+        assert!(stored < 3, "counter not bounded: {stored}");
+    }
+
+    #[test]
+    fn concurrent_matmuls_on_disjoint_cores_share_the_chip() {
+        // two placements on disjoint cores of one chip, read from four
+        // threads through a shared reference — the core-parallel hot path
+        let mut c = chip(ChipConfig::default());
+        let mut rng = Rng::new(21);
+        let w1 = Mat::randn(16, 16, &mut rng);
+        let w2 = Mat::randn(16, 16, &mut rng);
+        let x = Mat::randn(8, 16, &mut rng);
+        let h1 = c.program_matrix("a", &w1, &x, 1).unwrap();
+        let h2 = c.program_matrix("b", &w2, &x, 1).unwrap();
+        let shared = &c;
+        let handles = [&h1, &h2];
+        let wants = [crate::linalg::matmul(&x, &w1), crate::linalg::matmul(&x, &w2)];
+        let errs = crate::util::threads::parallel_map(4, |i| {
+            let y = shared.matmul(handles[i % 2], &x).unwrap();
+            rel_fro_error(&y.data, &wants[i % 2].data)
+        });
+        assert!(errs.iter().all(|&e| e > 0.0 && e < 0.12), "{errs:?}");
     }
 
     #[test]

@@ -4,6 +4,17 @@
 //! DAC grid, accumulate column currents on the crossbar (with read noise),
 //! convert through the saturating ADCs, then apply the per-column affine
 //! correction that folds the calibration's weight de-normalization back in.
+//!
+//! The read path takes `&self`, matching the hardware: HERMES cores
+//! execute MVMs independently and in parallel, so nothing chip-global may
+//! serialize them. Read noise comes from a per-core counter-derived
+//! stream (each read seeds an independent sub-stream from an atomic
+//! counter), which keeps concurrent reads lock-free. Determinism caveat:
+//! a fixed seed still pins the *distribution* per read index, but which
+//! thread receives which sub-stream depends on interleaving — tests
+//! assert error envelopes, not bit-identical noise.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::calibration::Calibration;
 use super::converters::{Adc, Dac};
@@ -17,8 +28,10 @@ pub struct Core {
     pub xbar: Crossbar,
     pub dac: Dac,
     pub adcs: Vec<Adc>,
-    /// RNG stream for this core's read noise
-    rng: Rng,
+    /// base seed of this core's read-noise stream
+    noise_seed: u64,
+    /// reads issued so far; each read derives an independent sub-stream
+    reads: AtomicU64,
 }
 
 impl Core {
@@ -40,18 +53,24 @@ impl Core {
                 adc
             })
             .collect();
-        Core { xbar, dac, adcs, rng: rng.fork(0xC0DE) }
+        Core { xbar, dac, adcs, noise_seed: rng.fork(0xC0DE).next_u64(), reads: AtomicU64::new(0) }
     }
 
     /// Analog MVM for a batch (n x rows) -> (n x cols), original units.
-    pub fn forward_batch(&mut self, x: &Mat) -> Mat {
+    /// `&self`: concurrent reads of one core model back-to-back hardware
+    /// reads — each draws read noise from its own counter-derived stream.
+    pub fn forward_batch(&self, x: &Mat) -> Mat {
         assert_eq!(x.cols, self.xbar.rows);
+        let read = self.reads.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Rng::new(
+            self.noise_seed ^ read.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
         let mut xq = x.clone();
         for i in 0..xq.rows {
             self.dac.quantize_slice(xq.row_mut(i));
         }
         let full_scale: Vec<f32> = self.adcs.iter().map(|a| a.full_scale).collect();
-        let mut y = self.xbar.mvm(&xq, &full_scale, &mut self.rng);
+        let mut y = self.xbar.mvm(&xq, &full_scale, &mut rng);
         for r in 0..y.rows {
             let row = y.row_mut(r);
             for (v, adc) in row.iter_mut().zip(&self.adcs) {
@@ -88,7 +107,7 @@ mod tests {
     #[test]
     fn ideal_core_matches_matmul_to_quantization() {
         let cfg = ChipConfig::ideal();
-        let (w, x, mut core) = setup(&cfg, 0);
+        let (w, x, core) = setup(&cfg, 0);
         let y = core.forward_batch(&x);
         let want = crate::linalg::matmul(&x, &w);
         let rel = crate::util::stats::rel_fro_error(&y.data, &want.data);
@@ -100,7 +119,7 @@ mod tests {
     #[test]
     fn noisy_core_error_in_expected_band() {
         let cfg = ChipConfig::default();
-        let (w, x, mut core) = setup(&cfg, 1);
+        let (w, x, core) = setup(&cfg, 1);
         let y = core.forward_batch(&x);
         let want = crate::linalg::matmul(&x, &w);
         let rel = crate::util::stats::rel_fro_error(&y.data, &want.data);
@@ -112,11 +131,27 @@ mod tests {
     fn repeated_reads_differ_by_read_noise() {
         let mut cfg = ChipConfig::ideal();
         cfg.sigma_read = 0.01;
-        let (_, x, mut core) = setup(&cfg, 2);
+        let (_, x, core) = setup(&cfg, 2);
         let y1 = core.forward_batch(&x);
         let y2 = core.forward_batch(&x);
         assert_ne!(y1.data, y2.data);
         let rel = crate::util::stats::rel_fro_error(&y1.data, &y2.data);
         assert!(rel < 0.1);
+    }
+
+    #[test]
+    fn concurrent_reads_of_one_core_stay_in_envelope() {
+        // the shared-reference read path: several threads reading the
+        // same core at once each get an independent noise sub-stream and
+        // an in-band result (this is the hardware's back-to-back read)
+        let mut cfg = ChipConfig::default();
+        cfg.sigma_read = 0.01;
+        let (w, x, core) = setup(&cfg, 3);
+        let want = crate::linalg::matmul(&x, &w);
+        let errs = crate::util::threads::parallel_map(4, |_| {
+            let y = core.forward_batch(&x);
+            crate::util::stats::rel_fro_error(&y.data, &want.data)
+        });
+        assert!(errs.iter().all(|&e| e > 0.0 && e < 0.12), "{errs:?}");
     }
 }

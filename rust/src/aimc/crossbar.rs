@@ -5,6 +5,12 @@
 //! the MVM produces column currents from the *drifted* effective
 //! conductances plus aggregated read noise (per-column Gaussian; the
 //! central-limit aggregate of 256 per-device fluctuations).
+//!
+//! Read/write split: [`Crossbar::mvm`] is `&self` and safe to call from
+//! many threads at once (the caller supplies the per-read noise stream);
+//! everything that rewrites conductances or the cached effective weights
+//! (`reprogram`, `nudge`, `set_drift_time`, `refresh_effective`) is
+//! `&mut self` and must run under the owner's exclusive lock.
 
 use super::pcm::mean_drift_factor;
 use super::unitcell::UnitCell;

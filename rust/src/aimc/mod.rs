@@ -11,6 +11,12 @@
 //! - [`emulator::Emulator`] — the *emulated mode* (the paper's own
 //!   terminology for its software twin): a vectorized statistical model
 //!   pinned to the Python-side noise model for large sweeps.
+//!
+//! Concurrency: the device-level MVM read path (`Chip::matmul` →
+//! `Core::forward_batch` → `Crossbar::mvm`) is `&self` throughout, so
+//! MVMs on disjoint cores of one chip execute in parallel like on the
+//! 64-core HERMES part; all conductance-rewriting operations
+//! (programming, GDP nudges, drift-clock moves) are `&mut self`.
 
 pub mod calibration;
 pub mod chip;

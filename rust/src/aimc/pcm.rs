@@ -13,6 +13,11 @@
 //!   crossbar level the 256 per-device contributions of a column aggregate
 //!   into one Gaussian on the column current (central limit), which is how
 //!   [`crate::aimc::crossbar`] applies it.
+//!
+//! Everything in this module runs on the *write path* (programming and
+//! drift-clock evaluation rewrite device state), i.e. under the owning
+//! chip's exclusive lock; the concurrent MVM read path only ever touches
+//! the crossbar's cached effective weights.
 
 use crate::config::ChipConfig;
 use crate::util::Rng;

@@ -129,6 +129,10 @@ pub struct ControlConfig {
     pub scale_down_depth: f64,
     /// consecutive qualifying ticks before the autoscaler acts
     pub scale_patience: usize,
+    /// deferred eviction re-placements (shard-replica GDP rewrites)
+    /// drained from the control plane's work queue per tick — bounds a
+    /// tick's latency when a chip holding many shards dies
+    pub replace_per_tick: usize,
 }
 
 impl Default for ControlConfig {
@@ -144,6 +148,7 @@ impl Default for ControlConfig {
             scale_up_depth: 4.0,
             scale_down_depth: 0.5,
             scale_patience: 3,
+            replace_per_tick: 2,
         }
     }
 }
@@ -167,6 +172,9 @@ impl ControlConfig {
             scale_down_depth: doc.f64_or("fleet.control.scale_down_depth", d.scale_down_depth),
             scale_patience: doc
                 .usize_or("fleet.control.scale_patience", d.scale_patience)
+                .max(1),
+            replace_per_tick: doc
+                .usize_or("fleet.control.replace_per_tick", d.replace_per_tick)
                 .max(1),
         }
     }
@@ -658,6 +666,7 @@ mod tests {
         assert_eq!(c.min_chips, 1);
         assert!(c.max_chips >= c.min_chips);
         assert!(c.scale_up_depth > c.scale_down_depth);
+        assert!(c.replace_per_tick >= 1);
         assert_eq!(FleetConfig::default().chip_cores, Vec::<usize>::new());
     }
 
@@ -667,7 +676,8 @@ mod tests {
             "[fleet]\nn_chips = 2\nchip_cores = [64, 32]\nnoise_tiers = [1.0, 2.0]\n\
              [fleet.control]\nenabled = true\ninterval_s = 0.5\nprobe_evict_after = 3\n\
              degrade_errors = 5\nautoscale = true\nmin_chips = 2\nmax_chips = 6\n\
-             scale_up_depth = 8.0\nscale_down_depth = 1.0\nscale_patience = 4\n",
+             scale_up_depth = 8.0\nscale_down_depth = 1.0\nscale_patience = 4\n\
+             replace_per_tick = 5\n",
         )
         .unwrap();
         let c = &cfg.fleet.control;
@@ -679,6 +689,7 @@ mod tests {
         assert!((c.scale_up_depth - 8.0).abs() < 1e-12);
         assert!((c.scale_down_depth - 1.0).abs() < 1e-12);
         assert_eq!(c.scale_patience, 4);
+        assert_eq!(c.replace_per_tick, 5);
         assert_eq!(cfg.fleet.chip_cores, vec![64, 32]);
         assert_eq!(cfg.fleet.noise_tiers, vec![1.0, 2.0]);
     }

@@ -433,6 +433,13 @@ impl StatsHandle {
         self.shared.telemetry.total_requests()
     }
 
+    /// Analog MVMs in flight across the fleet right now (sum of the
+    /// per-chip atomic gauges — no chip lock taken, so `stats` never
+    /// blocks behind an MVM or a GDP rewrite).
+    pub fn total_inflight(&self) -> usize {
+        self.shared.pool.total_queue_depth()
+    }
+
     /// Is the background control-plane loop running?
     pub fn control_enabled(&self) -> bool {
         self.shared.control_enabled

@@ -174,6 +174,8 @@ fn stats_json(stats: &StatsHandle, sessions: &SessionsHandle) -> Json {
             ("cores_used", num(c.cores_used as f64)),
             ("utilization", num(c.utilization)),
             ("queue_depth", num(c.queue_depth as f64)),
+            ("busy_cores", num(c.busy_cores as f64)),
+            ("core_utilization", num(c.core_utilization)),
             ("served", num(c.served as f64)),
             ("errors", num(c.errors as f64)),
             ("recals", num(c.recals as f64)),
@@ -192,6 +194,7 @@ fn stats_json(stats: &StatsHandle, sessions: &SessionsHandle) -> Json {
                 ("total_slots", num(stats.total_slots() as f64)),
                 ("cores_used", num(stats.cores_used() as f64)),
                 ("utilization", num(stats.utilization())),
+                ("inflight", num(stats.total_inflight() as f64)),
             ]),
         ),
         (
@@ -216,6 +219,8 @@ fn health_json(stats: &StatsHandle) -> Json {
             ("chip", num(c.chip as f64)),
             ("health", s(c.health)),
             ("queue_depth", num(c.queue_depth as f64)),
+            ("busy_cores", num(c.busy_cores as f64)),
+            ("core_utilization", num(c.core_utilization)),
             ("errors", num(c.errors as f64)),
             ("recals", num(c.recals as f64)),
             ("age_s", num(c.age_s)),
@@ -482,6 +487,13 @@ mod tests {
         let chips = resp.get("chips").unwrap().as_arr().unwrap();
         assert!(!chips.is_empty());
         assert!(chips[0].get("served").unwrap().as_usize().unwrap() >= 1);
+        // lock-free core-parallelism gauges: idle between requests
+        assert_eq!(chips[0].get("busy_cores").unwrap().as_usize(), Some(0));
+        assert!(chips[0].get("core_utilization").is_some());
+        assert_eq!(
+            resp.get("fleet").unwrap().get("inflight").unwrap().as_usize(),
+            Some(0)
+        );
         assert!(!resp.get("lanes").unwrap().as_arr().unwrap().is_empty());
 
         // health verb: per-chip states + control-plane event counters
@@ -490,6 +502,8 @@ mod tests {
         assert_eq!(resp.get("control_enabled"), Some(&Json::Bool(false)));
         let chips = resp.get("chips").unwrap().as_arr().unwrap();
         assert_eq!(chips[0].get("health").unwrap().as_str(), Some("healthy"));
+        assert!(chips[0].get("busy_cores").is_some());
+        assert!(chips[0].get("core_utilization").is_some());
         assert!(resp.get("events").unwrap().get("evictions").is_some());
 
         // drain steers the chip out of service; undrain restores it

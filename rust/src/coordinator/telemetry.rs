@@ -37,6 +37,18 @@ pub struct ChipSnapshot {
     pub utilization: f64,
     /// analog MVMs queued on or executing against this chip right now
     pub queue_depth: usize,
+    /// cores currently executing an MVM (summed tile footprint of the
+    /// executing shards; read from the slot's atomic gauge — no chip
+    /// lock taken). MVMs queued behind a recal write lock are counted
+    /// in `queue_depth`, not here. Concurrent reads round-robined onto
+    /// the same replica each count their own footprint (back-to-back
+    /// reads of the same physical cores), so the sum can transiently
+    /// exceed the chip's core count under heavy same-replica load.
+    pub busy_cores: usize,
+    /// busy_cores / this chip's capacity — live core utilization of the
+    /// core-parallel MVM path ([0,1] except under the same-replica
+    /// overlap noted on `busy_cores`)
+    pub core_utilization: f64,
     /// analog MVMs completed by this chip
     pub served: u64,
     /// failed MVMs/heartbeat probes on this chip since boot

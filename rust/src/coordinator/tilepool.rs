@@ -1,9 +1,15 @@
-//! Tile pool: owns the simulated chip, programs the mapping matrices of
-//! each feature lane (with optional replication across spare cores), and
-//! serializes analog MVMs.
+//! Tile pool: owns the simulated chip and programs the mapping matrices
+//! of each feature lane (with optional replication across spare cores).
+//!
+//! Single-chip sibling of `fleet::FleetPool`, sharing its lock
+//! discipline: the chip sits behind a `RwLock`, analog MVMs take the
+//! read lock (projections on disjoint cores run concurrently — the
+//! seed's `Mutex<Chip>` serialized every MVM in the process), and only
+//! (re)programming takes the write lock. All methods are `&self`, so a
+//! shared `TilePool` serves many worker threads directly.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, RwLock};
 
 use super::request::KernelLane;
 use crate::aimc::{Chip, MatrixHandle};
@@ -23,13 +29,17 @@ pub struct LaneMapping {
 
 /// The chip + its programmed lanes.
 pub struct TilePool {
-    chip: Mutex<Chip>,
-    lanes: BTreeMap<KernelLane, LaneMapping>,
+    /// read lock for MVMs, write lock for (re)programming
+    chip: RwLock<Chip>,
+    lanes: RwLock<BTreeMap<KernelLane, Arc<LaneMapping>>>,
 }
 
 impl TilePool {
     pub fn new(cfg: ChipConfig, seed: u64) -> TilePool {
-        TilePool { chip: Mutex::new(Chip::new(cfg, seed)), lanes: BTreeMap::new() }
+        TilePool {
+            chip: RwLock::new(Chip::new(cfg, seed)),
+            lanes: RwLock::new(BTreeMap::new()),
+        }
     }
 
     /// Program Ω for a feature lane. `x_cal` is a sample of (normalized)
@@ -42,13 +52,13 @@ impl TilePool {
     /// half-programmed placement). Use [`TilePool::reprogram_lane`] when
     /// rewriting an existing lane is intended (recalibration).
     pub fn program_lane(
-        &mut self,
+        &self,
         lane: KernelLane,
         omega: Mat,
         x_cal: &Mat,
         replication: usize,
     ) -> Result<()> {
-        if self.lanes.contains_key(&lane) {
+        if self.lanes.read().unwrap().contains_key(&lane) {
             return Err(Error::Coordinator(format!(
                 "lane {lane:?} already programmed (use reprogram_lane to rewrite it)"
             )));
@@ -61,24 +71,34 @@ impl TilePool {
     /// fresh conductances, so the lane's drift clock restarts — this is
     /// the primitive the drift-aware recalibration scheduler
     /// (`fleet::recal`) relies on.
+    ///
+    /// Atomic with respect to concurrent `project` calls: the old
+    /// placement is unprogrammed and the new one written under ONE chip
+    /// write-lock hold, and the lanes-map entry is never removed — a
+    /// projection therefore runs either entirely before the rewrite (old
+    /// conductances) or entirely after it (new conductances, same matrix
+    /// name), and never observes a missing lane or a half-written
+    /// placement. (If the rewrite changes the lane's geometry, a racing
+    /// caller still holding the old shape gets a clean `Shape` error.)
     pub fn reprogram_lane(
-        &mut self,
+        &self,
         lane: KernelLane,
         omega: Mat,
         x_cal: &Mat,
         replication: usize,
     ) -> Result<()> {
         let name = lane_matrix_name(lane);
-        // validate the rewrite before tearing down the serving placement,
-        // so a rejected reprogram leaves the old lane intact
-        {
-            let chip = self.chip.lock().unwrap();
-            if x_cal.cols != omega.rows {
-                return Err(Error::Shape(format!(
-                    "calibration inputs are {}-d but Ω has {} rows",
-                    x_cal.cols, omega.rows
-                )));
-            }
+        if x_cal.cols != omega.rows {
+            return Err(Error::Shape(format!(
+                "calibration inputs are {}-d but Ω has {} rows",
+                x_cal.cols, omega.rows
+            )));
+        }
+        let handle = {
+            let mut chip = self.chip.write().unwrap();
+            // validate against capacity with the old placement reclaimed
+            // *before* tearing it down, so a rejected reprogram leaves
+            // the old lane intact and serving
             let freed = chip.placement_tiles(&name).unwrap_or(0);
             let need = chip.tiles_needed(omega.rows, omega.cols) * replication.max(1);
             if need > chip.cores_free() + freed {
@@ -88,54 +108,67 @@ impl TilePool {
                     chip.cores_free() + freed
                 )));
             }
-        }
-        if self.lanes.remove(&lane).is_some() {
-            self.chip.lock().unwrap().unprogram(&name);
-        }
-        self.write_lane(lane, omega, x_cal, replication)
+            chip.unprogram(&name);
+            chip.program_matrix(&name, &omega, x_cal, replication)?
+        };
+        let (d, m) = (omega.rows, omega.cols);
+        self.lanes
+            .write()
+            .unwrap()
+            .insert(lane, Arc::new(LaneMapping { handle, omega, d, m }));
+        Ok(())
     }
 
     fn write_lane(
-        &mut self,
+        &self,
         lane: KernelLane,
         omega: Mat,
         x_cal: &Mat,
         replication: usize,
     ) -> Result<()> {
         let name = lane_matrix_name(lane);
-        let mut chip = self.chip.lock().unwrap();
-        let handle = chip.program_matrix(&name, &omega, x_cal, replication)?;
-        drop(chip);
+        let handle = {
+            let mut chip = self.chip.write().unwrap();
+            chip.program_matrix(&name, &omega, x_cal, replication)?
+        };
         let (d, m) = (omega.rows, omega.cols);
-        self.lanes.insert(lane, LaneMapping { handle, omega, d, m });
+        self.lanes
+            .write()
+            .unwrap()
+            .insert(lane, Arc::new(LaneMapping { handle, omega, d, m }));
         Ok(())
     }
 
-    pub fn mapping(&self, lane: KernelLane) -> Result<&LaneMapping> {
+    pub fn mapping(&self, lane: KernelLane) -> Result<Arc<LaneMapping>> {
         self.lanes
+            .read()
+            .unwrap()
             .get(&lane)
+            .cloned()
             .ok_or_else(|| Error::Coordinator(format!("lane {lane:?} not programmed")))
     }
 
-    /// Analog projection u = x·Ω on the chip.
+    /// Analog projection u = x·Ω on the chip. Takes only the chip's read
+    /// lock: projections of different lanes (disjoint cores) — and
+    /// round-robined replicas of one lane — execute concurrently.
     pub fn project(&self, lane: KernelLane, x: &Mat) -> Result<Mat> {
         let mapping = self.mapping(lane)?;
-        let mut chip = self.chip.lock().unwrap();
+        let chip = self.chip.read().unwrap();
         chip.matmul(&mapping.handle, x)
     }
 
     pub fn cores_used(&self) -> usize {
-        self.chip.lock().unwrap().cores_used()
+        self.chip.read().unwrap().cores_used()
     }
 
     pub fn utilization(&self) -> f64 {
-        self.chip.lock().unwrap().utilization()
+        self.chip.read().unwrap().utilization()
     }
 
     /// Mean GDP programming error across a lane's tiles.
     pub fn programming_rms(&self, lane: KernelLane) -> Result<f64> {
         let mapping = self.mapping(lane)?;
-        let chip = self.chip.lock().unwrap();
+        let chip = self.chip.read().unwrap();
         let stats = chip
             .program_stats(&mapping.handle)
             .ok_or_else(|| Error::Coordinator("no stats".into()))?;
@@ -161,7 +194,7 @@ mod tests {
 
     #[test]
     fn program_and_project() {
-        let mut pool = TilePool::new(ChipConfig::default(), 1);
+        let pool = TilePool::new(ChipConfig::default(), 1);
         let mut rng = Rng::new(0);
         let omega = Mat::randn(16, 64, &mut rng);
         let x_cal = Mat::randn(32, 16, &mut rng);
@@ -178,7 +211,7 @@ mod tests {
 
     #[test]
     fn double_program_rejected_with_typed_error() {
-        let mut pool = TilePool::new(ChipConfig::default(), 2);
+        let pool = TilePool::new(ChipConfig::default(), 2);
         let mut rng = Rng::new(1);
         let omega = Mat::randn(8, 8, &mut rng);
         let x = Mat::randn(8, 8, &mut rng);
@@ -195,7 +228,7 @@ mod tests {
 
     #[test]
     fn reprogram_lane_is_idempotent_and_frees_cores() {
-        let mut pool = TilePool::new(ChipConfig::default(), 4);
+        let pool = TilePool::new(ChipConfig::default(), 4);
         let mut rng = Rng::new(5);
         let omega = Mat::randn(16, 32, &mut rng);
         let x_cal = Mat::randn(16, 16, &mut rng);
@@ -228,7 +261,7 @@ mod tests {
         cfg.cores = 2;
         cfg.rows = 8;
         cfg.cols = 8;
-        let mut pool = TilePool::new(cfg, 6);
+        let pool = TilePool::new(cfg, 6);
         let mut rng = Rng::new(9);
         let omega = Mat::randn(8, 8, &mut rng);
         let x_cal = Mat::randn(8, 8, &mut rng);
@@ -243,6 +276,33 @@ mod tests {
         assert_eq!(pool.mapping(KernelLane::Rbf).unwrap().m, 8);
         let x = Mat::randn(2, 8, &mut rng);
         assert!(pool.project(KernelLane::Rbf, &x).is_ok());
+    }
+
+    #[test]
+    fn concurrent_projections_share_the_chip() {
+        // two lanes on disjoint cores of one chip, projected from four
+        // threads through &TilePool — the single-chip core-parallel path
+        let pool = TilePool::new(ChipConfig::default(), 7);
+        let mut rng = Rng::new(11);
+        let om_a = Mat::randn(16, 32, &mut rng);
+        let om_b = Mat::randn(16, 32, &mut rng);
+        let x_cal = Mat::randn(32, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, om_a.clone(), &x_cal, 1).unwrap();
+        pool.program_lane(KernelLane::Softmax, om_b.clone(), &x_cal, 1).unwrap();
+        let x = Mat::randn(8, 16, &mut rng);
+        let wants = [
+            crate::linalg::matmul(&x, &om_a),
+            crate::linalg::matmul(&x, &om_b),
+        ];
+        let lanes = [KernelLane::Rbf, KernelLane::Softmax];
+        let pool_ref = &pool;
+        let x_ref = &x;
+        let wants_ref = &wants;
+        let errs = crate::util::threads::parallel_map(4, |i| {
+            let u = pool_ref.project(lanes[i % 2], x_ref).unwrap();
+            rel_fro_error(&u.data, &wants_ref[i % 2].data)
+        });
+        assert!(errs.iter().all(|&e| e > 0.0 && e < 0.12), "{errs:?}");
     }
 
     #[test]

@@ -33,9 +33,13 @@
 //!   `coordinator::Engine` when `[fleet.control] enabled = true`.
 //!
 //! Eviction and re-placement themselves are [`FleetPool`] primitives
-//! (`evict_chip`, `add_chip`/`populate_chip`, `retire_chip`) because they
-//! must coordinate with the pool's own locks; the control plane decides
-//! *when* to invoke them.
+//! (`detach_chip`/`restore_replica`, `evict_chip`, `add_chip`/
+//! `populate_chip`, `retire_chip`) because they must coordinate with the
+//! pool's own locks; the control plane decides *when* to invoke them.
+//! Eviction is split so ticks stay cheap: `detach_chip` removes the dead
+//! chip from every serving plan at once (reprogramming inline only the
+//! shards it solely held), and the redundancy-restoring GDP rewrites
+//! drain from a work queue at `replace_per_tick` per tick.
 //!
 //! [`FleetPool`]: super::pool::FleetPool
 //! [`ChipSlot`]: super::pool::FleetPool

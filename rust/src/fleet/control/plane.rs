@@ -5,13 +5,19 @@
 //!
 //! One tick runs, in order:
 //! 1. **Health**: probe every active chip, degrade/recover per the error
-//!    counters, and evict chips whose heartbeat stayed dead — eviction
-//!    re-places lost shard replicas onto survivors without dropping
-//!    in-flight traffic (requests retry across replicas).
-//! 2. **Recalibration**: the PR-2 drift scheduler, which now marks a
-//!    chip `Draining` before taking its lock so the router steers away
-//!    ahead of the multi-second GDP rewrite.
-//! 3. **Autoscaling**: observe the fleet-wide queue depth; `Up` spawns a
+//!    counters, and *detach* chips whose heartbeat stayed dead — the dead
+//!    chip leaves every serving plan immediately, sole-replica shards are
+//!    re-placed inline (deferring them would black-hole requests), and
+//!    the remaining redundancy-restore rewrites go onto a small work
+//!    queue instead of running in the tick.
+//! 2. **Replacement queue**: drain up to `replace_per_tick` deferred
+//!    shard-replica restorations. Each is one GDP rewrite behind one
+//!    chip's write lock, so a big fleet losing a full chip costs many
+//!    *bounded* ticks rather than one unbounded one.
+//! 3. **Recalibration**: the PR-2 drift scheduler, which marks a chip
+//!    `Draining` before taking its write lock so the router steers
+//!    readers away ahead of the multi-second GDP rewrite.
+//! 4. **Autoscaling**: observe the fleet-wide queue depth; `Up` spawns a
 //!    `Joining` chip and programs lane replicas onto it, `Down` drains
 //!    the least-loaded chip and retires it once idle.
 //!
@@ -20,8 +26,10 @@
 //! directly with synthetic queue depths — it is the exact code path the
 //! live loop takes, minus the wall-clock sampling.
 
+use std::collections::VecDeque;
+
 use super::super::placement::ChipCapacity;
-use super::super::pool::FleetPool;
+use super::super::pool::{FleetPool, ReplacementJob, RestoreOutcome};
 use super::super::recal::RecalScheduler;
 use super::autoscale::{Autoscaler, ScaleDecision};
 use super::health::{HealthMonitor, HealthState};
@@ -33,6 +41,9 @@ use crate::error::Result;
 pub struct TickReport {
     /// chips evicted by the health monitor this tick
     pub evicted: Vec<usize>,
+    /// chips that received a deferred shard-replica restoration drained
+    /// from the replacement queue this tick
+    pub replaced: Vec<usize>,
     /// chips reprogrammed by the drift scheduler
     pub recalibrated: Vec<usize>,
     /// chips added by the autoscaler
@@ -44,6 +55,7 @@ pub struct TickReport {
 impl TickReport {
     pub fn is_quiet(&self) -> bool {
         self.evicted.is_empty()
+            && self.replaced.is_empty()
             && self.recalibrated.is_empty()
             && self.added.is_empty()
             && self.retired.is_empty()
@@ -55,6 +67,9 @@ impl std::fmt::Display for TickReport {
         let mut parts = Vec::new();
         if !self.evicted.is_empty() {
             parts.push(format!("evicted {:?}", self.evicted));
+        }
+        if !self.replaced.is_empty() {
+            parts.push(format!("restored replicas onto {:?}", self.replaced));
         }
         if !self.recalibrated.is_empty() {
             parts.push(format!("recalibrated {:?}", self.recalibrated));
@@ -76,7 +91,18 @@ pub struct ControlPlane {
     autoscaler: Option<Autoscaler>,
     /// capacity descriptor for chips the autoscaler adds
     new_chip_capacity: ChipCapacity,
+    /// deferred eviction re-placement work (redundancy restores) with a
+    /// per-job transient-failure count, drained at most
+    /// `replace_per_tick` per tick so a big fleet's tick latency stays
+    /// bounded regardless of how many shards a dead chip held
+    repl_queue: VecDeque<(ReplacementJob, u8)>,
+    replace_per_tick: usize,
 }
+
+/// Transient chip-level programming failures tolerated per deferred
+/// restore before the job is dropped (each retry lands on the planner's
+/// current best-cost chip, which may differ from the failing one).
+const MAX_RESTORE_ATTEMPTS: u8 = 3;
 
 impl ControlPlane {
     pub fn new(fleet: &FleetConfig, chip: &ChipConfig) -> ControlPlane {
@@ -94,7 +120,14 @@ impl ControlPlane {
                 )
             }),
             new_chip_capacity: ChipCapacity { cores: chip.cores, noise_tier: 1.0 },
+            repl_queue: VecDeque::new(),
+            replace_per_tick: c.replace_per_tick.max(1),
         }
+    }
+
+    /// Deferred shard-replica restorations still waiting in the queue.
+    pub fn pending_replacements(&self) -> usize {
+        self.repl_queue.len()
     }
 
     /// One control pass using the pool's live queue-depth telemetry.
@@ -107,16 +140,63 @@ impl ControlPlane {
     pub fn tick_with_depth(&mut self, pool: &FleetPool, queue_depth: usize) -> Result<TickReport> {
         let mut report = TickReport::default();
 
-        // 1. health: probe, degrade/recover, evict the dead
+        // 1. health: probe, degrade/recover, detach the dead. Only
+        // sole-replica shards reprogram inline; redundancy restores are
+        // queued, keeping the eviction itself cheap. A shard lost to
+        // capacity exhaustion is logged, not propagated — the queued
+        // jobs for recoverable shards and the rest of the tick (recal,
+        // autoscaling, further evictions) must still run.
         for chip in self.monitor.tick(pool) {
-            pool.evict_chip(chip)?;
+            let outcome = pool.detach_chip(chip);
+            self.repl_queue
+                .extend(outcome.jobs.into_iter().map(|j| (j, 0)));
+            if !outcome.lost.is_empty() {
+                // the matching jobs are queued: these shards re-place
+                // themselves the moment capacity appears
+                eprintln!(
+                    "evicted chip {chip}: shards {:?} have no replica until \
+                     a deferred restore finds capacity",
+                    outcome.lost
+                );
+            }
             report.evicted.push(chip);
         }
 
-        // 2. drift recalibration (marks chips Draining while rewriting)
+        // 2. drain a bounded slice of the replacement queue. Outcomes:
+        // restored → report; stale (lane reprogrammed/retired since) →
+        // drop; no capacity → requeue and wait for the autoscaler or an
+        // operator to add room (the probe is a cheap planner check, no
+        // GDP is run); transient programming failure → bounded retries,
+        // each against the planner's then-best chip.
+        let budget = self.replace_per_tick.min(self.repl_queue.len());
+        for _ in 0..budget {
+            let Some((job, attempts)) = self.repl_queue.pop_front() else {
+                break;
+            };
+            match pool.restore_replica(job.lane, job.shard) {
+                Ok(RestoreOutcome::Restored(chip)) => report.replaced.push(chip),
+                Ok(RestoreOutcome::Stale) => {}
+                Ok(RestoreOutcome::NoCapacity) => {
+                    self.repl_queue.push_back((job, attempts));
+                }
+                Err(e) => {
+                    if attempts + 1 < MAX_RESTORE_ATTEMPTS {
+                        self.repl_queue.push_back((job, attempts + 1));
+                    } else {
+                        eprintln!(
+                            "deferred re-placement of {:?}/s{} dropped after \
+                             {MAX_RESTORE_ATTEMPTS} failures: {e}",
+                            job.lane, job.shard
+                        );
+                    }
+                }
+            }
+        }
+
+        // 3. drift recalibration (marks chips Draining while rewriting)
         report.recalibrated = self.recal.tick(pool)?;
 
-        // 3. queue-driven autoscaling
+        // 4. queue-driven autoscaling
         if let Some(scaler) = &mut self.autoscaler {
             match scaler.observe(queue_depth, pool.n_chips()) {
                 ScaleDecision::Hold => {}

@@ -405,6 +405,30 @@ impl Planner {
         Ok(tiles)
     }
 
+    /// Failback move: commit one more replica of shard `s` of `lane` on
+    /// the best active chip outside the current replica set. This is the
+    /// deferred half of eviction re-placement — the control plane's work
+    /// queue restores replication lost to an eviction one shard at a
+    /// time. Returns the chosen chip, or `None` when no chip has room
+    /// (replication stays degraded until capacity appears).
+    pub fn add_replica(&mut self, lane: impl Into<LaneId>, s: usize) -> Option<usize> {
+        let lane = lane.into();
+        let plan = self.lanes.get(&lane)?.clone();
+        if s >= plan.shards.len() {
+            return None;
+        }
+        let tiles = self.shard_tiles(&plan, s);
+        let chip = self.pick_chip(tiles, &plan.shards[s].chips)?;
+        self.used[chip] += tiles;
+        self.lanes
+            .get_mut(&lane)
+            .expect("lane present")
+            .shards[s]
+            .chips
+            .push(chip);
+        Some(chip)
+    }
+
     /// Release one chip's replica of shard `s` without replacement
     /// (scale-down of a shard that keeps other replicas).
     pub fn release_replica(&mut self, lane: impl Into<LaneId>, s: usize, chip: usize) {
@@ -602,6 +626,27 @@ mod tests {
             }
         }
         assert_eq!(p.used()[gone], 0);
+    }
+
+    #[test]
+    fn add_replica_restores_lost_replication() {
+        let mut p = Planner::new(PlacementPolicy::Sharded, 3, &small_chip());
+        let plan = p.plan_lane(KernelLane::Rbf, 16, 32, 2, 1).unwrap();
+        let gone = plan.shards[0].chips[0];
+        p.set_active(gone, false);
+        // release-then-add is the deferred eviction path: the dead
+        // replica leaves first, add_replica restores it later
+        p.release_replica(KernelLane::Rbf, 0, gone);
+        let stored = p.lanes[&LaneId::from(KernelLane::Rbf)].shards[0].clone();
+        assert_eq!(stored.chips.len(), 1);
+        let added = p.add_replica(KernelLane::Rbf, 0).unwrap();
+        assert_ne!(added, gone);
+        let stored = &p.lanes[&LaneId::from(KernelLane::Rbf)].shards[0];
+        assert_eq!(stored.chips.len(), 2);
+        assert!(stored.chips.contains(&added));
+        // out-of-range shard and unknown lane are clean no-ops
+        assert_eq!(p.add_replica(KernelLane::Rbf, 99), None);
+        assert_eq!(p.add_replica(KernelLane::Softmax, 0), None);
     }
 
     #[test]

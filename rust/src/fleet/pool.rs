@@ -2,15 +2,26 @@
 //! `coordinator::TilePool`, and the data plane the control plane
 //! ([`super::control`]) supervises.
 //!
-//! Each emulated chip sits behind its own lock with its own in-flight
-//! counter, so analog MVMs on different chips execute concurrently; the
-//! seed's `Mutex<Chip>` serialized every projection in the process. A
-//! request's projection fans the lane's column shards out over worker
-//! threads, asks the [`Router`] for a *routable* replica of each (health
-//! tiers: `Healthy`, falling back to `Degraded`, then `Draining`), runs
-//! the per-chip MVMs concurrently, retries surviving replicas when a
-//! chip errors mid-request, and concatenates the per-shard results into
-//! the full feature projection.
+//! Each emulated chip sits behind a `RwLock` with its own in-flight and
+//! busy-core counters: analog MVMs take the *read* lock, so projections
+//! on disjoint cores of **one** chip execute concurrently — matching the
+//! 64-core HERMES device, where cores run MVMs independently — while
+//! programming, recalibration and drift-clock writes take the *write*
+//! lock and fully exclude readers (no torn placements). The seed's
+//! `Mutex<Chip>` serialized every projection in the process; PR 2 got
+//! chips concurrent with each other; this layer now gets cores
+//! concurrent within a chip. A request's projection fans the lane's
+//! column shards out over worker threads (and a multi-tile shard fans
+//! its tiles again inside `Chip::matmul`), asks the [`Router`] for a
+//! *routable* replica of each (health tiers: `Healthy`, falling back to
+//! `Degraded`, then `Draining`), runs the per-chip MVMs concurrently,
+//! retries surviving replicas when a chip errors mid-request, and
+//! concatenates the per-shard results into the full feature projection.
+//!
+//! Write-path ops drain before they block: `recalibrate_chip` marks the
+//! chip `Draining` *before* taking the write lock so the router steers
+//! new readers away and the writer is not starved behind a stream of
+//! MVM read locks.
 //!
 //! All serving and supervision methods take `&self`: topology state
 //! (slots, lane plans, placement bookkeeping) lives behind short-lived
@@ -69,7 +80,9 @@ impl LaneMapping {
 
 /// One chip plus its serving/health/recalibration counters.
 pub(crate) struct ChipSlot {
-    chip: Mutex<Chip>,
+    /// MVMs take the read lock (many concurrent projections per chip);
+    /// programming/recal/drift writes take the write lock
+    chip: RwLock<Chip>,
     capacity: ChipCapacity,
     /// authoritative health state, read lock-free on every request
     health: AtomicU8,
@@ -85,6 +98,10 @@ pub(crate) struct ChipSlot {
     cores: AtomicUsize,
     /// analog MVMs queued on or executing against this chip
     inflight: AtomicUsize,
+    /// cores currently executing an MVM (tile footprint of the in-flight
+    /// shards); with `capacity.cores` this is the live core utilization
+    /// the stats surface reports without taking the chip lock
+    busy_cores: AtomicUsize,
     /// completed analog MVMs
     served: AtomicU64,
     /// completed recalibrations
@@ -98,13 +115,14 @@ pub(crate) struct ChipSlot {
 impl ChipSlot {
     fn new(chip_cfg: ChipConfig, capacity: ChipCapacity, seed: u64, now_s: f64, health: HealthState) -> ChipSlot {
         ChipSlot {
-            chip: Mutex::new(Chip::new(chip_cfg, seed)),
+            chip: RwLock::new(Chip::new(chip_cfg, seed)),
             capacity,
             health: AtomicU8::new(health as u8),
             faulted: AtomicBool::new(false),
             errors: AtomicU64::new(0),
             cores: AtomicUsize::new(0),
             inflight: AtomicUsize::new(0),
+            busy_cores: AtomicUsize::new(0),
             served: AtomicU64::new(0),
             recals: AtomicU64::new(0),
             programmed_at_s: Mutex::new(now_s),
@@ -144,6 +162,50 @@ pub struct FleetPool {
 /// Chip-level matrix name of one shard of a lane's Ω.
 fn shard_name(lane: LaneId, shard: usize) -> String {
     format!("omega_{}_s{}", lane.label(), shard)
+}
+
+/// One deferred shard-replica restoration: an eviction degraded this
+/// shard's replication (live replicas still serve it), and a later
+/// [`FleetPool::restore_replica`] reprograms a replacement on a
+/// surviving chip. The control plane drains these a few per tick so
+/// eviction handling never holds a tick for a whole chip's worth of GDP
+/// rewrites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplacementJob {
+    pub lane: LaneId,
+    pub shard: usize,
+}
+
+/// What one [`FleetPool::restore_replica`] attempt did, so the caller's
+/// retry policy can distinguish waiting from giving up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RestoreOutcome {
+    /// a replacement replica was programmed onto this chip
+    Restored(usize),
+    /// no chip has room right now — worth retrying once capacity appears
+    NoCapacity,
+    /// the lane or shard no longer exists (reprogrammed/retired since
+    /// the job was queued) — drop the job
+    Stale,
+}
+
+/// What [`FleetPool::detach_chip`] did. Returned by value (not behind a
+/// `Result`) so a shard lost to capacity exhaustion cannot make the
+/// caller drop the deferred jobs for the shards that *are* recoverable.
+#[derive(Debug, Default)]
+pub struct DetachOutcome {
+    /// sole-replica shards re-placed and reprogrammed inline
+    pub moved: usize,
+    /// deferred restores for the caller's work queue — one per shard
+    /// whose replication (or, for `lost` shards, whose very existence on
+    /// the fleet) still needs repair
+    pub jobs: Vec<ReplacementJob>,
+    /// shards currently left with NO replica (the dead chip held the
+    /// only copy and no chip had room for the inline re-placement).
+    /// Requests to these column ranges fail until their matching job in
+    /// `jobs` lands — the lane's Ω and calibration inputs are retained,
+    /// so the shard re-places itself as soon as capacity appears.
+    pub lost: Vec<ReplacementJob>,
 }
 
 impl FleetPool {
@@ -274,6 +336,13 @@ impl FleetPool {
         self.slots.read().unwrap()[i].inflight.load(Ordering::Relaxed)
     }
 
+    /// Cores of chip `i` currently executing analog MVMs (tile footprint
+    /// of the in-flight shards) — a lock-free gauge the stats surface
+    /// reports as core utilization without touching the chip lock.
+    pub fn chip_busy_cores(&self, i: usize) -> usize {
+        self.slots.read().unwrap()[i].busy_cores.load(Ordering::Relaxed)
+    }
+
     /// In-flight analog MVMs across the whole fleet (the autoscaler's
     /// signal; also derivable from the `stats` response's per-chip
     /// `queue_depth`).
@@ -360,7 +429,7 @@ impl FleetPool {
             let w = omega.slice_cols(shard.col0, shard.col1);
             for &c in &shard.chips {
                 let t = self.drift_eval_time(self.chip_age(c));
-                let mut chip = slots[c].chip.lock().unwrap();
+                let mut chip = slots[c].chip.write().unwrap();
                 match chip.program_matrix(&shard_name(lane, s), &w, x_cal, core_replication) {
                     Ok(_) => {
                         chip.set_drift_time(t);
@@ -378,7 +447,7 @@ impl FleetPool {
             // roll the partial programming back so the planner and the
             // chips agree the lane does not exist
             for (s, c) in programmed {
-                let mut chip = slots[c].chip.lock().unwrap();
+                let mut chip = slots[c].chip.write().unwrap();
                 chip.unprogram(&shard_name(lane, s));
                 slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
             }
@@ -456,7 +525,7 @@ impl FleetPool {
             let slots = self.slots_snapshot();
             for (s, shard) in plan.shards.iter().enumerate() {
                 for &c in &shard.chips {
-                    let mut chip = slots[c].chip.lock().unwrap();
+                    let mut chip = slots[c].chip.write().unwrap();
                     chip.unprogram(&shard_name(lane, s));
                     slots[c].cores.store(chip.cores_used(), Ordering::Relaxed);
                 }
@@ -480,9 +549,10 @@ impl FleetPool {
 
     /// Analog projection u = x·Ω: fan the lane's shards out over worker
     /// threads, route every shard to a routable replica (health tiers,
-    /// then queue depth), run the per-chip MVMs concurrently, retry
-    /// surviving replicas if a chip errors, and concatenate the column
-    /// ranges.
+    /// then queue depth), run the per-chip MVMs concurrently — multiple
+    /// shards of one request landing on one chip overlap there too,
+    /// since MVMs only hold the chip's read lock — retry surviving
+    /// replicas if a chip errors, and concatenate the column ranges.
     pub fn project(&self, lane: impl Into<LaneId>, x: &Mat) -> Result<Mat> {
         let lane = lane.into();
         let mapping = self.mapping(lane)?;
@@ -498,10 +568,10 @@ impl FleetPool {
         // wide sharded lanes at single-chip latency)
         let results: Vec<Result<Mat>> = if shards.len() > 1 {
             parallel_map(shards.len(), |s| {
-                self.project_shard(&slots, lane, s, &shards[s], x)
+                self.project_shard(&slots, lane, s, &shards[s], &mapping, x)
             })
         } else {
-            vec![self.project_shard(&slots, lane, 0, &shards[0], x)]
+            vec![self.project_shard(&slots, lane, 0, &shards[0], &mapping, x)]
         };
         let mut out = Mat::zeros(x.rows, mapping.m);
         for (s, res) in results.into_iter().enumerate() {
@@ -524,9 +594,16 @@ impl FleetPool {
         lane: LaneId,
         s: usize,
         shard: &ShardPlan,
+        mapping: &LaneMapping,
         x: &Mat,
     ) -> Result<Mat> {
         let handle = MatrixHandle(shard_name(lane, s));
+        // core footprint of this shard's MVM (pure geometry — no chip
+        // lock), feeding the lock-free busy-core gauge. One MVM executes
+        // exactly one round-robined replica, so within-chip
+        // core_replication does NOT multiply the in-flight footprint.
+        let shard_tiles = mapping.d.div_ceil(self.chip_cfg.rows)
+            * (shard.col1 - shard.col0).div_ceil(self.chip_cfg.cols);
         // bucket replicas into fallback tiers (healthy < degraded < draining)
         let mut tiers: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
         for &c in &shard.chips {
@@ -556,8 +633,17 @@ impl FleetPool {
                 }
                 slot.inflight.fetch_add(1, Ordering::Relaxed);
                 let res = {
-                    let mut chip = slot.chip.lock().unwrap();
-                    chip.matmul(&handle, x)
+                    // read lock: MVMs on disjoint cores of this chip run
+                    // concurrently; only (re)programming excludes us.
+                    // busy_cores counts *executing* MVMs only, so it is
+                    // bumped after the lock is held — an MVM queued
+                    // behind a recal write lock shows up in inflight
+                    // (queue depth) but not in core utilization
+                    let chip = slot.chip.read().unwrap();
+                    slot.busy_cores.fetch_add(shard_tiles, Ordering::Relaxed);
+                    let r = chip.matmul(&handle, x);
+                    slot.busy_cores.fetch_sub(shard_tiles, Ordering::Relaxed);
+                    r
                 };
                 slot.inflight.fetch_sub(1, Ordering::Relaxed);
                 match res {
@@ -588,7 +674,7 @@ impl FleetPool {
         for (s, shard) in plan.shards.iter().enumerate() {
             let handle = MatrixHandle(shard_name(lane, s));
             for &c in &shard.chips {
-                let chip = slots[c].chip.lock().unwrap();
+                let chip = slots[c].chip.read().unwrap();
                 let stats = chip
                     .program_stats(&handle)
                     .ok_or_else(|| Error::Coordinator("no stats".into()))?;
@@ -647,7 +733,7 @@ impl FleetPool {
     fn reset_chip_clock(&self, c: usize) {
         let baseline = self.drift_eval_time(0.0);
         let slot = self.slots.read().unwrap()[c].clone();
-        slot.chip.lock().unwrap().set_drift_time(baseline);
+        slot.chip.write().unwrap().set_drift_time(baseline);
         *slot.programmed_at_s.lock().unwrap() = self.clock_s();
         *slot.synced_age_s.lock().unwrap() = 0.0;
     }
@@ -671,7 +757,8 @@ impl FleetPool {
                 .abs();
             if moved > 1e-3 || age < synced {
                 let t = self.drift_eval_time(age);
-                slot.chip.lock().unwrap().set_drift_time(t);
+                // drift refresh rewrites cached conductances: write lock
+                slot.chip.write().unwrap().set_drift_time(t);
                 *slot.synced_age_s.lock().unwrap() = age;
             }
         }
@@ -692,11 +779,13 @@ impl FleetPool {
     }
 
     /// Reprogram every lane shard placed on chip `i` (full calibrate +
-    /// GDP on fresh conductances) and reset its drift clock. The chip is
-    /// marked `Draining` *before* its lock is taken, so the router
-    /// steers new traffic to replicas on other chips for the duration of
-    /// the multi-second rewrite; it returns to `Healthy` afterwards.
-    /// Returns the number of shards rewritten.
+    /// GDP on fresh conductances) and reset its drift clock. Drain-
+    /// before-write-lock: the chip is marked `Draining` *before* its
+    /// write lock is requested, so the router steers new MVM readers to
+    /// replicas on other chips and the writer only has to wait out the
+    /// already-in-flight read locks, not a continuing stream of them;
+    /// it returns to `Healthy` afterwards. Returns the number of shards
+    /// rewritten.
     pub fn recalibrate_chip(&self, i: usize) -> Result<usize> {
         let prior = self.chip_health(i);
         if !prior.active() {
@@ -719,7 +808,7 @@ impl FleetPool {
         let mut rewritten = 0;
         let mut failure: Option<Error> = None;
         {
-            let mut chip = slot.chip.lock().unwrap();
+            let mut chip = slot.chip.write().unwrap();
             for (lane, s, col0, col1, mapping) in &work {
                 let w = mapping.omega.slice_cols(*col0, *col1);
                 match chip.reprogram_matrix(
@@ -779,7 +868,7 @@ impl FleetPool {
     ) -> Result<()> {
         let w = mapping.omega.slice_cols(col0, col1);
         let t = self.drift_eval_time(self.chip_age(target));
-        let mut chip = slots[target].chip.lock().unwrap();
+        let mut chip = slots[target].chip.write().unwrap();
         chip.reprogram_matrix(
             &shard_name(lane, s),
             &w,
@@ -791,31 +880,89 @@ impl FleetPool {
         Ok(())
     }
 
-    /// Evict chip `dead` from the fleet: mark it `Evicted` (the router
-    /// stops choosing it immediately), then re-run the placement for
-    /// every shard whose replica set lost it, programming replacements
-    /// onto survivors. Requests keep flowing throughout — they retry
-    /// across surviving replicas while this runs. Returns the number of
-    /// shard replicas moved. Errors if some shard would be left with no
+    /// Evict chip `dead` from the fleet and restore full replication
+    /// synchronously: detach it, then drain every deferred re-placement
+    /// job inline. Requests keep flowing throughout — they retry across
+    /// surviving replicas while this runs. Returns the number of shard
+    /// replicas moved. Errors if some shard would be left with no
     /// replica at all (the lane data would be lost).
+    ///
+    /// The control plane instead calls [`FleetPool::detach_chip`] and
+    /// feeds the returned jobs through its bounded work queue, so a big
+    /// fleet's tick latency stays bounded by `replace_per_tick` GDP
+    /// rewrites rather than by the dead chip's whole shard count.
     pub fn evict_chip(&self, dead: usize) -> Result<usize> {
+        let outcome = self.detach_chip(dead);
+        let mut moved = outcome.moved;
+        let mut still_lost = outcome.lost;
+        for job in outcome.jobs {
+            match self.restore_replica(job.lane, job.shard) {
+                Ok(RestoreOutcome::Restored(_)) => {
+                    moved += 1;
+                    still_lost.retain(|l| *l != job);
+                }
+                // no capacity, a stale job, or a chip-level programming
+                // failure (planner already rolled back): these shards
+                // keep serving from their surviving replicas — or stay
+                // lost — at degraded replication
+                Ok(_) | Err(_) => {}
+            }
+        }
+        if !still_lost.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "evicted chip {dead} but shards {still_lost:?} have no replicas \
+                 left (fleet capacity exhausted)"
+            )));
+        }
+        Ok(moved)
+    }
+
+    /// Take chip `dead` out of the fleet *now*: mark it `Evicted` (the
+    /// router stops choosing it immediately), drop its replicas from
+    /// every serving plan, and split the repair work in two:
+    ///
+    /// - shards for which it held the **sole** replica are re-placed and
+    ///   reprogrammed inline (deferring them would black-hole requests);
+    /// - shards that keep live replicas elsewhere are returned as
+    ///   deferred [`ReplacementJob`]s — routing is already correct with
+    ///   the dead replica gone, only redundancy is degraded, so the
+    ///   expensive GDP rewrites can happen a few per control tick.
+    ///
+    /// Never fails: a sole-replica shard that cannot be re-placed
+    /// anywhere is reported in [`DetachOutcome::lost`] rather than as an
+    /// error, so the deferred jobs for the recoverable shards are never
+    /// dropped on the floor alongside it.
+    pub fn detach_chip(&self, dead: usize) -> DetachOutcome {
         if !self.chip_health(dead).active() {
-            return Ok(0); // already evicted — idempotent
+            return DetachOutcome::default(); // already evicted — idempotent
         }
         self.set_chip_health(dead, HealthState::Evicted);
         self.planner.lock().unwrap().set_active(dead, false);
         self.events.evictions.fetch_add(1, Ordering::Relaxed);
         let slots = self.slots_snapshot();
         let mut moved = 0;
-        let mut lost: Vec<String> = Vec::new();
+        let mut jobs = Vec::new();
+        let mut lost: Vec<ReplacementJob> = Vec::new();
         for (lane, mapping) in self.lanes_snapshot() {
             let plan = mapping.plan();
             for (s, shard) in plan.shards.iter().enumerate() {
                 if !shard.chips.contains(&dead) {
                     continue;
                 }
-                // placement decision under the planner lock, heavy GDP
-                // programming outside it
+                if shard.chips.len() > 1 {
+                    // live replicas remain: detach the dead one now
+                    // (routing improves immediately — no failed attempts
+                    // against an evicted replica) and defer the
+                    // replication restore to the caller's work queue
+                    self.planner.lock().unwrap().release_replica(lane, s, dead);
+                    mapping.plan.write().unwrap().shards[s].chips.retain(|&c| c != dead);
+                    jobs.push(ReplacementJob { lane, shard: s });
+                    continue;
+                }
+                // sole replica: placement decision under the planner
+                // lock, heavy GDP programming outside it — and the plan
+                // swap only after the replacement is programmed, so
+                // routed requests never see a replica that cannot answer
                 let replacement = self.planner.lock().unwrap().replace_replica(lane, s, dead);
                 let programmed = match replacement {
                     Some(new_chip) => match self.program_shard_replica(
@@ -832,28 +979,59 @@ impl FleetPool {
                     },
                     None => None, // no room anywhere: replication degrades
                 };
-                // swap the serving plan only after the replacement is
-                // programmed, so routed requests never see a replica
-                // that cannot answer
                 let mut live = mapping.plan.write().unwrap();
                 live.shards[s].chips.retain(|&c| c != dead);
                 if let Some(new_chip) = programmed {
                     live.shards[s].chips.push(new_chip);
                 }
                 if live.shards[s].chips.is_empty() {
-                    lost.push(format!("{lane:?}/s{s}"));
+                    // the Ω twin and calibration inputs are retained, so
+                    // a deferred job can still resurrect this shard the
+                    // moment capacity appears — queue it alongside
+                    // reporting it lost
+                    let job = ReplacementJob { lane, shard: s };
+                    lost.push(job);
+                    jobs.push(job);
                 }
             }
         }
         // tombstone bookkeeping: the dead chip serves nothing
         slots[dead].cores.store(0, Ordering::Relaxed);
-        if !lost.is_empty() {
-            return Err(Error::Coordinator(format!(
-                "evicted chip {dead} but shards {lost:?} have no replicas left \
-                 (fleet capacity exhausted)"
-            )));
+        DetachOutcome { moved, jobs, lost }
+    }
+
+    /// Restore one replica of `lane`'s shard `shard` lost to an eviction
+    /// (the deferred half of [`FleetPool::detach_chip`]): pick the best
+    /// chip with room, run the full calibrate + GDP flow behind only
+    /// that chip's write lock, then add it to the serving plan. Returns
+    /// [`RestoreOutcome`] so the caller's retry policy can tell "wait
+    /// for capacity" from "drop the stale job"; `Err` only on a
+    /// chip-level programming failure (transient — worth a bounded
+    /// retry; the planner bookkeeping was already rolled back).
+    pub fn restore_replica(&self, lane: LaneId, shard: usize) -> Result<RestoreOutcome> {
+        let Ok(mapping) = self.mapping(lane) else {
+            return Ok(RestoreOutcome::Stale); // lane gone since queueing
+        };
+        let plan = mapping.plan();
+        if shard >= plan.shards.len() {
+            return Ok(RestoreOutcome::Stale);
         }
-        Ok(moved)
+        let Some(target) = self.planner.lock().unwrap().add_replica(lane, shard) else {
+            return Ok(RestoreOutcome::NoCapacity);
+        };
+        let slots = self.slots_snapshot();
+        let sh = &plan.shards[shard];
+        match self.program_shard_replica(&slots, lane, shard, sh.col0, sh.col1, &mapping, target)
+        {
+            Ok(()) => {
+                mapping.plan.write().unwrap().shards[shard].chips.push(target);
+                Ok(RestoreOutcome::Restored(target))
+            }
+            Err(e) => {
+                self.planner.lock().unwrap().release_replica(lane, shard, target);
+                Err(e)
+            }
+        }
     }
 
     /// Add a chip at runtime (autoscaler scale-up). The chip starts
@@ -1020,7 +1198,7 @@ impl FleetPool {
         }
         // free the emulated crossbars and tombstone the slot
         {
-            let mut chip = slots[c].chip.lock().unwrap();
+            let mut chip = slots[c].chip.write().unwrap();
             for (lane, mapping) in self.lanes_snapshot() {
                 for s in 0..mapping.plan().shards.len() {
                     chip.unprogram(&shard_name(lane, s));
@@ -1042,6 +1220,7 @@ impl FleetPool {
             .map(|i| {
                 let slot = &slots[i];
                 let cores_used = slot.cores.load(Ordering::Relaxed);
+                let busy_cores = slot.busy_cores.load(Ordering::Relaxed);
                 let age_s = self.chip_age(i);
                 ChipSnapshot {
                     chip: i,
@@ -1049,6 +1228,8 @@ impl FleetPool {
                     cores_used,
                     utilization: cores_used as f64 / slot.capacity.cores.max(1) as f64,
                     queue_depth: slot.inflight.load(Ordering::Relaxed),
+                    busy_cores,
+                    core_utilization: busy_cores as f64 / slot.capacity.cores.max(1) as f64,
                     served: slot.served.load(Ordering::Relaxed),
                     errors: slot.errors.load(Ordering::Relaxed),
                     recals: slot.recals.load(Ordering::Relaxed),

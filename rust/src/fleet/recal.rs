@@ -90,10 +90,11 @@ impl RecalScheduler {
     /// One scheduler pass: sync every chip's drift model to its current
     /// age, then reprogram the chips whose estimated drift error exceeds
     /// the budget. Chips are recalibrated sequentially — at most one chip
-    /// is locked for rewriting at any moment, and `recalibrate_chip`
-    /// marks the chip `Draining` *before* taking its lock, so the router
-    /// steers traffic to replicas rather than queueing behind the
-    /// rewrite. Evicted tombstones, `Joining` chips (the autoscaler owns
+    /// is write-locked for rewriting at any moment, and
+    /// `recalibrate_chip` marks the chip `Draining` *before* requesting
+    /// its write lock, so the router steers new MVM read locks to
+    /// replicas and the writer only waits out the already-in-flight
+    /// reads. Evicted tombstones, `Joining` chips (the autoscaler owns
     /// their first programming) and unreachable chips (the health
     /// monitor owns their eviction) are skipped. Returns the
     /// recalibrated chip indices.

@@ -2,8 +2,12 @@
 //!
 //! The router replaces the seed's single `Mutex<Chip>` (which serialized
 //! every analog projection in the process) with a per-request choice over
-//! a shard's replica set; each chip then queues work on its own lock, so
-//! distinct chips execute concurrently.
+//! a shard's replica set. Since the chips themselves moved to
+//! core-granular read locks, routing no longer decides *whether* MVMs
+//! overlap — replicas on one chip already run concurrently — it balances
+//! queue depth so no chip's ADC/DAC pipeline saturates while another
+//! idles. The `load` signal is the per-chip in-flight MVM gauge the pool
+//! maintains lock-free.
 //!
 //! Policies: round-robin (stateless fairness), least-loaded (global scan
 //! of in-flight counters), and power-of-two-choices (two random probes,

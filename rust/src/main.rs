@@ -89,6 +89,8 @@ SUBCOMMANDS
                                autoscaler fleet-size bounds
       --scale-up-depth F       mean queue depth per chip that adds a chip
       --scale-down-depth F     mean queue depth per chip that drains one
+      --replace-per-tick N     deferred eviction re-placements (shard GDP
+                               rewrites) drained per control tick
       --chip-cores LIST        per-chip core counts for heterogeneous
                                fleets, e.g. 64,32,64
   experiment <id>              regenerate a paper table/figure:
@@ -157,6 +159,8 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
         args.f64_or("scale-up-depth", cfg.fleet.control.scale_up_depth)?;
     cfg.fleet.control.scale_down_depth =
         args.f64_or("scale-down-depth", cfg.fleet.control.scale_down_depth)?;
+    cfg.fleet.control.replace_per_tick =
+        args.usize_or("replace-per-tick", cfg.fleet.control.replace_per_tick)?.max(1);
     if let Some(list) = args.get("chip-cores") {
         cfg.fleet.chip_cores = list
             .split(',')

@@ -289,6 +289,181 @@ fn draining_tier_serves_only_as_last_resort() {
     assert!(err.to_string().contains("no routable replica"), "{err}");
 }
 
+/// Tentpole: two lanes on disjoint cores of ONE chip execute MVMs in
+/// lockstep from two threads through a shared `&Chip`. The read path is
+/// `&self` — there is no chip-global lock left to serialize them (the
+/// pre-refactor `matmul(&mut self)` would not even compile here) — and
+/// a barrier forces every round to be issued simultaneously, so any
+/// hidden shared-state race would corrupt the outputs across 32 rounds.
+#[test]
+fn disjoint_core_lanes_run_lockstep_on_one_chip() {
+    use std::sync::Barrier;
+    let mut chip = imka::aimc::Chip::new(ChipConfig::default(), 77);
+    let mut rng = Rng::new(40);
+    let w_a = Mat::randn(16, 32, &mut rng);
+    let w_b = Mat::randn(16, 32, &mut rng);
+    let x = Mat::randn(8, 16, &mut rng);
+    let h_a = chip.program_matrix("lane_a", &w_a, &x, 1).unwrap();
+    let h_b = chip.program_matrix("lane_b", &w_b, &x, 1).unwrap();
+    assert_eq!(chip.cores_used(), 2);
+    let want_a = imka::linalg::matmul(&x, &w_a);
+    let want_b = imka::linalg::matmul(&x, &w_b);
+
+    let chip = &chip;
+    let barrier = Barrier::new(2);
+    std::thread::scope(|scope| {
+        let a = scope.spawn(|| {
+            for _ in 0..32 {
+                barrier.wait();
+                let y = chip.matmul(&h_a, &x).unwrap();
+                let rel = imka::util::stats::rel_fro_error(&y.data, &want_a.data);
+                assert!(rel > 0.0 && rel < 0.12, "lane A off-envelope: {rel}");
+            }
+        });
+        let b = scope.spawn(|| {
+            for _ in 0..32 {
+                barrier.wait();
+                let y = chip.matmul(&h_b, &x).unwrap();
+                let rel = imka::util::stats::rel_fro_error(&y.data, &want_b.data);
+                assert!(rel > 0.0 && rel < 0.12, "lane B off-envelope: {rel}");
+            }
+        });
+        a.join().unwrap();
+        b.join().unwrap();
+    });
+}
+
+/// Tentpole: a `program_matrix`/recal write lock fully excludes readers.
+/// Reader threads hammer projections while the chip is recalibrated
+/// (whole-chip GDP rewrite under the write lock) five times over; every
+/// single read must see either the old or the new placement — full
+/// output width, error inside the analog envelope — never a torn one.
+#[test]
+fn recal_write_lock_excludes_readers_no_torn_placements() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let fleet = FleetConfig {
+        n_chips: 1,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::P2c,
+        replication: 1,
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(ChipConfig::default(), fleet, 42);
+    let mut rng = Rng::new(41);
+    let omega = Mat::randn(16, 64, &mut rng);
+    let x_cal = Mat::randn(64, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+    let x = Mat::randn(8, 16, &mut rng);
+    let want = imka::linalg::matmul(&x, &omega);
+
+    let stop = AtomicBool::new(false);
+    let (pool_ref, x_ref, want_ref, stop_ref) = (&pool, &x, &want, &stop);
+    std::thread::scope(|scope| {
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut reads = 0u64;
+                    while !stop_ref.load(Ordering::Relaxed) {
+                        let u = pool_ref.project(KernelLane::Rbf, x_ref).unwrap();
+                        assert_eq!((u.rows, u.cols), (8, 64), "torn shape");
+                        let rel =
+                            imka::util::stats::rel_fro_error(&u.data, &want_ref.data);
+                        assert!(rel > 0.0 && rel < 0.2, "torn placement read: {rel}");
+                        reads += 1;
+                    }
+                    reads
+                })
+            })
+            .collect();
+        // five full-chip rewrites race the readers; recalibrate_chip
+        // marks the chip Draining before requesting the write lock, and
+        // the single-replica fallback keeps last-resort serving alive
+        for _ in 0..5 {
+            assert_eq!(pool.recalibrate_chip(0).unwrap(), 1);
+        }
+        // let readers demonstrably hit the final placement too before
+        // stopping (bounded wait so a wedged reader fails, not hangs)
+        for _ in 0..5000 {
+            if pool.chip_snapshots()[0].served >= 30 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total >= 30, "readers barely ran: {total}");
+    });
+    let snap = &pool.chip_snapshots()[0];
+    assert_eq!(snap.recals, 5);
+    assert_eq!(snap.health, "healthy");
+    // the lock-free gauges settle back to idle
+    assert_eq!(snap.queue_depth, 0);
+    assert_eq!(snap.busy_cores, 0);
+    assert_eq!(pool.chip_busy_cores(0), 0);
+}
+
+/// Satellite: eviction re-placement drains from the control plane's
+/// bounded work queue instead of running wholly inside one tick. With
+/// `replace_per_tick = 1`, the eviction tick restores at most one of the
+/// dead chip's redundant replicas; subsequent ticks restore the rest,
+/// and the fleet serves throughout at degraded-then-restored replication.
+#[test]
+fn eviction_replacement_drains_across_ticks() {
+    let chip = small_chip();
+    let fleet = FleetConfig {
+        n_chips: 4,
+        placement: PlacementPolicy::Sharded,
+        router: RouterPolicy::LeastLoaded,
+        replication: 2,
+        control: ControlConfig {
+            enabled: true,
+            probe_evict_after: 1,
+            replace_per_tick: 1,
+            ..ControlConfig::default()
+        },
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(chip.clone(), fleet.clone(), 43);
+    let mut rng = Rng::new(44);
+    // 4 shards x 2 replicas = 2 replicas per chip
+    let omega = sample_omega(Sampler::Orf, 16, 64, &mut rng);
+    let x_cal = Mat::randn(64, 16, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+    let mut plane = ControlPlane::new(&fleet, &chip);
+    let x = Mat::randn(8, 16, &mut rng);
+
+    let victim = pool.mapping(KernelLane::Rbf).unwrap().plan().shards[0].chips[0];
+    pool.inject_fault(victim, true);
+    let r1 = plane.tick(&pool).unwrap();
+    assert_eq!(r1.evicted, vec![victim]);
+    // the eviction tick restored at most replace_per_tick replicas; the
+    // victim held 2, so exactly one restoration is still queued
+    assert_eq!(r1.replaced.len(), 1);
+    assert_eq!(plane.pending_replacements(), 1);
+    let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+    for sh in &plan.shards {
+        assert!(!sh.chips.contains(&victim), "dead replica still routed: {sh:?}");
+    }
+    assert_eq!(plan.replication(), 1, "one shard still degraded");
+    // degraded replication still serves
+    let u = pool.project(KernelLane::Rbf, &x).unwrap();
+    let want = imka::linalg::matmul(&x, &omega);
+    assert!(imka::util::stats::rel_fro_error(&u.data, &want.data) < 0.12);
+
+    // the next tick drains the queue and restores full replication
+    let r2 = plane.tick(&pool).unwrap();
+    assert_eq!(r2.replaced.len(), 1);
+    assert_eq!(plane.pending_replacements(), 0);
+    let plan = pool.mapping(KernelLane::Rbf).unwrap().plan();
+    assert_eq!(plan.replication(), 2, "replication restored: {plan:?}");
+    for sh in &plan.shards {
+        assert!(!sh.chips.contains(&victim), "{sh:?}");
+    }
+    pool.project(KernelLane::Rbf, &x).unwrap();
+    // quiet from here on
+    assert!(plane.tick(&pool).unwrap().is_quiet());
+}
+
 fn control_cfg(min: usize, max: usize) -> ControlConfig {
     ControlConfig {
         enabled: true,

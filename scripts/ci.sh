@@ -18,9 +18,11 @@ echo "== cargo test -q =="
 cargo test -q
 
 # placement/routing/failover smoke: a 2-chip fleet with a small lane runs
-# the full bench (scaling rows + chaos eviction) in seconds, so fleet
+# the full bench (scaling rows + the contended same-chip row comparing
+# the serialized pre-refactor lock discipline against core-parallel read
+# locks + chaos eviction) in seconds, so fleet and core-concurrency
 # regressions surface in the tier-1 gate even without artifacts
-echo "== bench_fleet smoke (2-chip, small lane) =="
+echo "== bench_fleet smoke (2-chip, small lane, contended row) =="
 IMKA_BENCH_FLEET_SMOKE=1 cargo bench --bench bench_fleet
 
 # streaming-attention smoke: both projection paths of the session layer
