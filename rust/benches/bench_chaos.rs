@@ -1,0 +1,144 @@
+//! Bench: deterministic chaos/soak run against the fleet control plane.
+//!
+//! Generates a seed-replayable fault schedule (chip kill, flicker
+//! faults, drain cycles, drift jumps, transient programming failures,
+//! a queue-pressure surge and a trailing idle stretch), drives mixed
+//! feature / attention traffic from concurrent client threads through
+//! the real `ControlPlane::tick` loop, and checks fleet-wide invariants
+//! after every step. Reports throughput before / during / after the
+//! backbone kill window, request latency percentiles, worst-case
+//! accuracy vs the digital twin, control-plane event counts, and the
+//! invariant-violation count (the acceptance number: must be 0).
+//!
+//! Run: cargo bench --bench bench_chaos
+//! Smoke mode (CI tier-1 gate): IMKA_BENCH_CHAOS_SMOKE=1 runs the
+//! short `cargo test`-sized schedule so control-plane regressions
+//! surface in seconds.
+//!
+//! Machine-readable output: the JSON row is also written to
+//! `BENCH_chaos.json` at the repo root (override the path with
+//! IMKA_BENCH_CHAOS_JSON). Exit status is non-zero if any invariant
+//! was violated; the printed schedule seed replays the run exactly.
+
+use imka::config::json::{num, obj, s, Json};
+use imka::testkit::{run_chaos, ChaosConfig, FaultSchedule};
+use imka::util::Timer;
+
+/// Fixed schedule seed so successive bench runs are comparable; any
+/// failure is replayable by feeding the printed seed back to
+/// `run_chaos` (or `FaultSchedule::generate`) with the same config.
+const SEED: u64 = 0xC4A0_55;
+
+fn main() {
+    let smoke = std::env::var("IMKA_BENCH_CHAOS_SMOKE").is_ok();
+    let (mode, cfg) = if smoke {
+        ("smoke", ChaosConfig::small())
+    } else {
+        ("full", ChaosConfig::full())
+    };
+
+    let schedule = FaultSchedule::generate(SEED, &cfg);
+    let h = schedule.op_histogram();
+    println!(
+        "== chaos soak ({mode}): {} steps on {} chips x {} cores, \
+         {} threads, schedule seed {:#x} ==",
+        schedule.steps.len(),
+        cfg.n_chips,
+        cfg.cores,
+        cfg.threads,
+        SEED
+    );
+    println!(
+        "schedule: {} faults, {} heals, {} drains, {} undrains, \
+         {} drift jumps, {} programming faults (kill window steps {}..{})",
+        h[0], h[1], h[2], h[3], h[4], h[5], schedule.fault_window.0, schedule.fault_window.1
+    );
+
+    let t = Timer::start();
+    let r = run_chaos(SEED, &cfg);
+    let wall_s = t.elapsed_secs();
+
+    let e = &r.events;
+    println!(
+        "traffic: {} feature projections ok ({} typed errors), \
+         {} attention tokens ({} typed errors)",
+        r.feature_ok, r.feature_err, r.attn_tokens, r.attn_err
+    );
+    println!(
+        "control: {} evictions, {} shard replicas restored, {} recals, \
+         {} scale-ups, {} scale-downs, {} tick errors",
+        e.evictions,
+        e.replaced,
+        e.recals,
+        e.scale_ups,
+        e.scale_downs,
+        r.tick_errors.len()
+    );
+    println!(
+        "throughput req/s: before {:.1}  during-fault {:.1}  after {:.1}   \
+         latency p50 {:.2} ms  p99 {:.2} ms",
+        r.throughput_before,
+        r.throughput_during,
+        r.throughput_after,
+        r.latency_p50_s * 1e3,
+        r.latency_p99_s * 1e3
+    );
+    println!(
+        "accuracy: gram rel err {:.4} -> worst {:.4} -> final {:.4}   \
+         proj {:.4} -> worst {:.4}   attn worst {:.4}",
+        r.gram_baseline, r.gram_worst, r.gram_final, r.proj_baseline, r.proj_worst, r.attn_rel_worst
+    );
+    for v in &r.violations {
+        println!("VIOLATION {v}");
+    }
+    println!(
+        "invariants: {} violation(s) over {} steps ({wall_s:.1}s wall)",
+        r.violations.len(),
+        r.steps
+    );
+
+    let row = obj(vec![
+        ("bench", s("chaos")),
+        ("mode", s(mode)),
+        ("schedule_seed", num(SEED as f64)),
+        ("steps", num(r.steps as f64)),
+        ("n_chips", num(cfg.n_chips as f64)),
+        ("threads", num(cfg.threads as f64)),
+        ("feature_ok", num(r.feature_ok as f64)),
+        ("feature_err", num(r.feature_err as f64)),
+        ("attn_tokens", num(r.attn_tokens as f64)),
+        ("attn_err", num(r.attn_err as f64)),
+        ("evictions", num(e.evictions as f64)),
+        ("replaced", num(e.replaced as f64)),
+        ("recals", num(e.recals as f64)),
+        ("scale_ups", num(e.scale_ups as f64)),
+        ("scale_downs", num(e.scale_downs as f64)),
+        ("tick_errors", num(r.tick_errors.len() as f64)),
+        ("throughput_before", num(r.throughput_before)),
+        ("throughput_during_fault", num(r.throughput_during)),
+        ("throughput_after", num(r.throughput_after)),
+        ("latency_p50_ms", num(r.latency_p50_s * 1e3)),
+        ("latency_p99_ms", num(r.latency_p99_s * 1e3)),
+        ("gram_rel_err_worst", num(r.gram_worst)),
+        ("proj_rel_err_worst", num(r.proj_worst)),
+        ("attn_rel_err_worst", num(r.attn_rel_worst)),
+        ("wall_s", num(wall_s)),
+        ("invariant_violations", num(r.violations.len() as f64)),
+        ("ok", Json::Bool(r.violations.is_empty())),
+    ]);
+    println!("{}", row.to_string());
+
+    let path = std::env::var("IMKA_BENCH_CHAOS_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_chaos.json", env!("CARGO_MANIFEST_DIR")));
+    match std::fs::write(&path, row.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(err) => {
+            eprintln!("failed to write {path}: {err}");
+            std::process::exit(1);
+        }
+    }
+    if !r.violations.is_empty() {
+        eprintln!("invariants violated — replay with schedule seed {SEED:#x}");
+        std::process::exit(1);
+    }
+}

@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use super::json::Json;
+use super::json::{arr, num, obj, s, Json};
 use super::toml::{TomlDoc, TomlValue};
 use crate::error::{Error, Result};
 use crate::fleet::{PlacementPolicy, RouterPolicy};
@@ -541,6 +541,96 @@ impl Config {
         }
     }
 
+    /// The full configuration as a JSON document in the same schema
+    /// [`Config::from_json_str`] accepts, so `TOML -> Config -> JSON ->
+    /// Config` is the identity for every value representable as an f64
+    /// (pinned by a round-trip property test below).
+    pub fn to_json(&self) -> Json {
+        let c = &self.chip;
+        let f = &self.fleet;
+        let ctl = &f.control;
+        let sv = &self.serve;
+        let a = &self.attention.serve;
+        obj(vec![
+            (
+                "chip",
+                obj(vec![
+                    ("cores", num(c.cores as f64)),
+                    ("rows", num(c.rows as f64)),
+                    ("cols", num(c.cols as f64)),
+                    ("input_bits", num(c.input_bits as f64)),
+                    ("adc_bits", num(c.adc_bits as f64)),
+                    ("sigma_prog", num(c.sigma_prog)),
+                    ("sigma_read", num(c.sigma_read)),
+                    ("drift_nu_mean", num(c.drift_nu_mean)),
+                    ("drift_nu_std", num(c.drift_nu_std)),
+                    ("drift_t_seconds", num(c.drift_t_seconds)),
+                    ("drift_compensation", Json::Bool(c.drift_compensation)),
+                    ("g_max", num(c.g_max)),
+                    ("program_iters", num(c.program_iters as f64)),
+                    ("program_lr", num(c.program_lr)),
+                ]),
+            ),
+            (
+                "fleet",
+                obj(vec![
+                    ("n_chips", num(f.n_chips as f64)),
+                    ("placement", s(f.placement.as_str())),
+                    ("router", s(f.router.as_str())),
+                    ("replication", num(f.replication as f64)),
+                    ("recal_interval_s", num(f.recal_interval_s)),
+                    ("drift_err_budget", num(f.drift_err_budget)),
+                    ("chip_cores", arr(f.chip_cores.iter().map(|&n| num(n as f64)))),
+                    ("noise_tiers", arr(f.noise_tiers.iter().map(|&x| num(x)))),
+                    (
+                        "control",
+                        obj(vec![
+                            ("enabled", Json::Bool(ctl.enabled)),
+                            ("interval_s", num(ctl.interval_s)),
+                            ("probe_evict_after", num(ctl.probe_evict_after as f64)),
+                            ("degrade_errors", num(ctl.degrade_errors as f64)),
+                            ("autoscale", Json::Bool(ctl.autoscale)),
+                            ("min_chips", num(ctl.min_chips as f64)),
+                            ("max_chips", num(ctl.max_chips as f64)),
+                            ("scale_up_depth", num(ctl.scale_up_depth)),
+                            ("scale_down_depth", num(ctl.scale_down_depth)),
+                            ("scale_patience", num(ctl.scale_patience as f64)),
+                            ("replace_per_tick", num(ctl.replace_per_tick as f64)),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "serve",
+                obj(vec![
+                    ("max_batch", num(sv.max_batch as f64)),
+                    ("max_wait_us", num(sv.max_wait_us as f64)),
+                    ("workers", num(sv.workers as f64)),
+                    ("bind", s(&sv.bind)),
+                    ("replication", num(sv.replication as f64)),
+                    ("queue_cap", num(sv.queue_cap as f64)),
+                    ("warm", Json::Bool(sv.warm)),
+                    ("drain_cap", num(sv.drain_cap as f64)),
+                ]),
+            ),
+            (
+                "attention",
+                obj(vec![(
+                    "serve",
+                    obj(vec![
+                        ("heads", num(a.heads as f64)),
+                        ("d_head", num(a.d_head as f64)),
+                        ("m", num(a.m as f64)),
+                        ("max_sessions", num(a.max_sessions as f64)),
+                        ("path", s(&a.path)),
+                        ("seed", num(a.seed as f64)),
+                    ]),
+                )]),
+            ),
+            ("paths", obj(vec![("artifacts", s(&self.artifacts_dir))])),
+        ])
+    }
+
     /// Env overrides, e.g. IMKA_CHIP_SIGMA_PROG=0.03, IMKA_SERVE_WORKERS=8.
     fn apply_env(&mut self) {
         if let Ok(v) = std::env::var("IMKA_CHIP_SIGMA_PROG") {
@@ -803,6 +893,98 @@ mod tests {
         // never below one full batch
         let small = ServeConfig { max_batch: 32, drain_cap: 2, ..ServeConfig::default() };
         assert_eq!(small.effective_drain_cap(), 32);
+    }
+
+    #[test]
+    fn to_json_emits_the_from_json_schema() {
+        let cfg = Config::default();
+        let j = cfg.to_json();
+        assert!(j.get("chip").is_some() && j.get("fleet").is_some());
+        assert_eq!(
+            j.get("paths").and_then(|p| p.get("artifacts")).and_then(|a| a.as_str()),
+            Some("artifacts")
+        );
+        assert_eq!(
+            j.get("fleet")
+                .and_then(|f| f.get("control"))
+                .and_then(|c| c.get("max_chips"))
+                .and_then(|m| m.as_usize()),
+            Some(8)
+        );
+        let back = Config::from_json_str(&j.to_string()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn config_survives_toml_to_struct_to_json_to_struct() {
+        // Random valid settings across [chip], [fleet], [fleet.control],
+        // [serve], [attention.serve] and [paths] must survive
+        // TOML -> Config -> JSON -> Config unchanged. Generated values
+        // respect the loader's clamps (>= 1 where from_doc applies
+        // .max(1)) so the first parse is already a fixed point; float
+        // draws stay in plain-decimal ranges and round-trip exactly
+        // through Rust's shortest-representation formatting.
+        crate::util::prop::check("config-roundtrip", 64, |g| {
+            let placement = *g.choose(&["packed", "sharded"]);
+            let router = *g.choose(&["round_robin", "least_loaded", "p2c"]);
+            let path = *g.choose(&["digital", "fp32", "analog", "hw"]);
+            let toml = format!(
+                "[chip]\ncores = {}\nsigma_prog = {:?}\ndrift_compensation = {}\n\
+                 [fleet]\nn_chips = {}\nplacement = \"{placement}\"\nrouter = \"{router}\"\n\
+                 replication = {}\nrecal_interval_s = {:?}\ndrift_err_budget = {:?}\n\
+                 chip_cores = [{}, {}]\nnoise_tiers = [{:?}, {:?}]\n\
+                 [fleet.control]\nenabled = {}\ninterval_s = {:?}\nprobe_evict_after = {}\n\
+                 degrade_errors = {}\nautoscale = {}\nmin_chips = {}\nmax_chips = {}\n\
+                 scale_up_depth = {:?}\nscale_down_depth = {:?}\nscale_patience = {}\n\
+                 replace_per_tick = {}\n\
+                 [serve]\nmax_batch = {}\nmax_wait_us = {}\nworkers = {}\n\
+                 bind = \"127.0.0.1:{}\"\nreplication = {}\nqueue_cap = {}\nwarm = {}\n\
+                 drain_cap = {}\n\
+                 [attention.serve]\nheads = {}\nd_head = {}\nm = {}\nmax_sessions = {}\n\
+                 path = \"{path}\"\nseed = {}\n\
+                 [paths]\nartifacts = \"art-{}\"\n",
+                g.int(1, 128),                // chip.cores
+                g.f64_in(0.001, 0.2),         // sigma_prog
+                g.bool(),                     // drift_compensation
+                g.int(1, 16),                 // n_chips
+                g.int(1, 4),                  // fleet.replication
+                g.f64_in(0.0, 120.0),         // recal_interval_s
+                g.f64_in(0.01, 0.5),          // drift_err_budget
+                g.int(1, 256),                // chip_cores[0]
+                g.int(1, 256),                // chip_cores[1]
+                g.f64_in(0.5, 4.0),           // noise_tiers[0]
+                g.f64_in(0.5, 4.0),           // noise_tiers[1]
+                g.bool(),                     // control.enabled
+                g.f64_in(0.1, 10.0),          // interval_s
+                g.int(1, 8),                  // probe_evict_after
+                g.int(1, 1_000_000),          // degrade_errors
+                g.bool(),                     // autoscale
+                g.int(1, 4),                  // min_chips
+                g.int(4, 32),                 // max_chips
+                g.f64_in(1.0, 16.0),          // scale_up_depth
+                g.f64_in(0.01, 1.0),          // scale_down_depth
+                g.int(1, 8),                  // scale_patience
+                g.int(1, 8),                  // replace_per_tick
+                g.int(1, 256),                // max_batch
+                g.int(1, 100_000),            // max_wait_us
+                g.int(1, 32),                 // workers
+                g.int(1024, 65_535),          // bind port
+                g.int(1, 4),                  // serve.replication
+                g.int(1, 65_536),             // queue_cap
+                g.bool(),                     // warm
+                g.int(0, 512),                // drain_cap
+                g.int(1, 8),                  // heads
+                g.int(1, 64),                 // d_head
+                g.int(1, 256),                // attention m
+                g.int(1, 64),                 // max_sessions
+                g.int(0, i32::MAX as usize),  // seed
+                g.int(0, 999),                // artifacts suffix
+            );
+            let a = Config::from_toml_str(&toml).expect("generated TOML must parse");
+            let b = Config::from_json_str(&a.to_json().to_string())
+                .expect("emitted JSON must re-parse");
+            a == b
+        });
     }
 
     #[test]

@@ -90,6 +90,10 @@ pub(crate) struct ChipSlot {
     /// error without touching the chip lock — a dead chip's lock could
     /// hang forever)
     faulted: AtomicBool,
+    /// fault injection: the next N shard-replica programmings targeting
+    /// this chip fail with a chip-level error (a transient GDP failure),
+    /// exercising the control plane's bounded-retry restore path
+    program_faults: AtomicUsize,
     /// failed MVMs/probes since boot (the health monitor diffs ticks)
     errors: AtomicU64,
     /// mirror of `chip.cores_used()` maintained at every (un)programming
@@ -119,6 +123,7 @@ impl ChipSlot {
             capacity,
             health: AtomicU8::new(health as u8),
             faulted: AtomicBool::new(false),
+            program_faults: AtomicUsize::new(0),
             errors: AtomicU64::new(0),
             cores: AtomicUsize::new(0),
             inflight: AtomicUsize::new(0),
@@ -324,6 +329,24 @@ impl FleetPool {
         self.slots.read().unwrap()[i]
             .faulted
             .store(faulted, Ordering::Relaxed);
+    }
+
+    /// Inject `n` transient programming failures on chip `i`: the next
+    /// `n` shard-replica programmings targeting it error out as a failed
+    /// GDP pass would, then programming recovers by itself. Heartbeats
+    /// and MVMs are unaffected — this is the "chip is reachable but a
+    /// write verify failed" fault class, distinct from `inject_fault`.
+    pub fn inject_program_faults(&self, i: usize, n: usize) {
+        self.slots.read().unwrap()[i]
+            .program_faults
+            .fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Injected programming failures not yet consumed on chip `i`.
+    pub fn pending_program_faults(&self, i: usize) -> usize {
+        self.slots.read().unwrap()[i]
+            .program_faults
+            .load(Ordering::Relaxed)
     }
 
     /// Failed MVMs/probes on chip `i` since boot.
@@ -866,6 +889,27 @@ impl FleetPool {
         mapping: &LaneMapping,
         target: usize,
     ) -> Result<()> {
+        // consume one injected transient-failure budget unit, if any:
+        // the write never reaches the crossbar, exactly like a GDP pass
+        // whose verify read came back out of tolerance
+        let faults = &slots[target].program_faults;
+        let mut budget = faults.load(Ordering::Relaxed);
+        while budget > 0 {
+            match faults.compare_exchange(
+                budget,
+                budget - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    slots[target].errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::Chip(format!(
+                        "injected transient programming failure on chip {target}"
+                    )));
+                }
+                Err(now) => budget = now,
+            }
+        }
         let w = mapping.omega.slice_cols(col0, col1);
         let t = self.drift_eval_time(self.chip_age(target));
         let mut chip = slots[target].chip.write().unwrap();
@@ -1392,6 +1436,45 @@ mod tests {
         assert!(!pool.probe_chip(0));
         pool.inject_fault(0, false);
         assert!(pool.probe_chip(0));
+    }
+
+    #[test]
+    fn injected_program_fault_fails_one_restore_then_recovers() {
+        // packed single-replica lane on chip 0; chip 1 is the only
+        // restore target, and its first programming attempt is poisoned
+        let mut cfg = fleet_cfg(2, 1);
+        cfg.placement = PlacementPolicy::Packed;
+        let pool = FleetPool::new(small_chip(), cfg, 14);
+        let mut rng = Rng::new(11);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(16, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
+        assert_eq!(pool.mapping(KernelLane::Rbf).unwrap().plan().shards[0].chips, vec![0]);
+
+        pool.inject_program_faults(1, 1);
+        assert_eq!(pool.pending_program_faults(1), 1);
+        let outcome = pool.detach_chip(0);
+        // the sole-replica inline move hit the injected failure: the
+        // shard is reported lost with its deferred job still queued
+        assert_eq!(outcome.moved, 0);
+        assert_eq!(outcome.lost.len(), 1);
+        assert_eq!(pool.pending_program_faults(1), 0);
+        assert!(pool.mapping(KernelLane::Rbf).unwrap().plan().shards[0].chips.is_empty());
+        let errs_after_fault = pool.chip_errors(1);
+        assert!(errs_after_fault >= 1);
+
+        // the budget is consumed, so replaying the queued job succeeds —
+        // the transient failure cost one retry, not the lane
+        let job = outcome.jobs[0];
+        match pool.restore_replica(job.lane, job.shard).unwrap() {
+            RestoreOutcome::Restored(c) => assert_eq!(c, 1),
+            other => panic!("expected restore onto chip 1, got {other:?}"),
+        }
+        assert_eq!(pool.mapping(KernelLane::Rbf).unwrap().plan().shards[0].chips, vec![1]);
+        let x = Mat::randn(4, 16, &mut rng);
+        let u = pool.project(KernelLane::Rbf, &x).unwrap();
+        let want = crate::linalg::matmul(&x, &omega);
+        assert!(rel_fro_error(&u.data, &want.data) < 0.12);
     }
 
     #[test]

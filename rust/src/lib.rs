@@ -38,6 +38,7 @@ pub mod linalg;
 pub mod npy;
 pub mod ridge;
 pub mod runtime;
+pub mod testkit;
 pub mod util;
 pub mod ziparc;
 

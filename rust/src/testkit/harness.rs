@@ -1,0 +1,595 @@
+//! The chaos/soak driver: applies a [`FaultSchedule`] to a live fleet
+//! while concurrent client threads push mixed traffic, runs the real
+//! [`ControlPlane::tick`] loop, and checks every invariant after every
+//! step.
+//!
+//! Determinism: the control-side evolution (which chips fault, evict,
+//! recalibrate, scale) is a pure function of the schedule seed —
+//! probes are fault-driven, tick depths come from the schedule, the
+//! traffic-error degrade path is disabled (`degrade_errors` is set
+//! unreachably high, because error *counts* depend on thread
+//! interleaving), and load gauges are zero between the synchronous
+//! traffic quanta. Traffic-side measurements (latency, relative error)
+//! vary run to run per the PR-5 caveat, so accuracy invariants are
+//! envelopes, not bit-asserts.
+
+use super::invariants::InvariantChecker;
+use super::schedule::{ChaosOp, FaultSchedule};
+use super::ChaosConfig;
+use crate::config::{AttnServeConfig, ChipConfig, ControlConfig, FleetConfig};
+use crate::coordinator::request::{KernelLane, LaneId, PathKind};
+use crate::coordinator::SessionManager;
+use crate::features::postprocess;
+use crate::features::sampler::{sample_omega, Sampler};
+use crate::fleet::{ControlPlane, FleetPool, PlacementPolicy, RouterPolicy};
+use crate::kernels::{approx_error, gram, gram_features, Kernel};
+use crate::linalg::{matmul, Mat};
+use crate::util::stats::rel_fro_error;
+use crate::util::threads::parallel_map;
+use crate::util::{Rng, Summary, Timer};
+
+pub use super::invariants::Violation;
+
+/// Counts of the control/chaos events a run actually produced.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosEvents {
+    pub faults: usize,
+    pub heals: usize,
+    pub drains: usize,
+    pub undrains: usize,
+    pub drift_jumps: usize,
+    pub program_faults: usize,
+    pub evictions: usize,
+    pub replaced: usize,
+    pub recals: usize,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+}
+
+/// Everything a chaos run produced: the event trail, traffic and
+/// latency accounting, accuracy extremes, and the invariant verdicts.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// schedule seed — regenerates the identical fault sequence
+    pub seed: u64,
+    pub steps: usize,
+    /// resolved op trail (`"03: fault chip 2"`), deterministic per seed
+    pub applied: Vec<String>,
+    pub events: ChaosEvents,
+    /// feature projections answered / answered with a typed error
+    pub feature_ok: u64,
+    pub feature_err: u64,
+    /// attention tokens absorbed / refused with a typed error
+    pub attn_tokens: u64,
+    pub attn_err: u64,
+    /// control ticks that returned a typed error (not violations)
+    pub tick_errors: Vec<String>,
+    pub gram_baseline: f64,
+    pub gram_worst: f64,
+    pub gram_final: f64,
+    pub proj_baseline: f64,
+    pub proj_worst: f64,
+    /// worst per-quantum mean analog-vs-digital attention rel error
+    pub attn_rel_worst: f64,
+    /// request latency percentiles over the whole run, seconds
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    /// requests/s before, during, and after the backbone kill window
+    pub throughput_before: f64,
+    pub throughput_during: f64,
+    pub throughput_after: f64,
+    pub violations: Vec<Violation>,
+}
+
+impl ChaosReport {
+    /// Panic if any invariant was violated, printing the schedule seed
+    /// so the run replays exactly (the `util::prop` contract).
+    pub fn assert_green(&self) {
+        if !self.violations.is_empty() {
+            let list: Vec<String> = self.violations.iter().map(|v| format!("  {v}")).collect();
+            panic!(
+                "chaos run violated {} invariant(s) (replay with schedule seed {}):\n{}",
+                self.violations.len(),
+                self.seed,
+                list.join("\n")
+            );
+        }
+    }
+}
+
+/// Per-worker traffic accounting, merged after each quantum.
+#[derive(Default)]
+struct WorkerLedger {
+    ok: u64,
+    err: u64,
+    attn_ok: u64,
+    attn_err: u64,
+    attn_rel_sum: f64,
+    attn_rel_n: u64,
+    latencies: Vec<f64>,
+    violations: Vec<String>,
+}
+
+fn chip_cfg(cfg: &ChaosConfig) -> ChipConfig {
+    ChipConfig { cores: cfg.cores, rows: 16, cols: 16, ..ChipConfig::default() }
+}
+
+fn fleet_cfg(cfg: &ChaosConfig) -> FleetConfig {
+    FleetConfig {
+        n_chips: cfg.n_chips,
+        placement: PlacementPolicy::Sharded,
+        router: RouterPolicy::LeastLoaded,
+        replication: cfg.replication,
+        recal_interval_s: 0.0, // the control tick drives recal
+        drift_err_budget: cfg.drift_err_budget,
+        control: ControlConfig {
+            enabled: true,
+            probe_evict_after: cfg.probe_evict_after,
+            // traffic-error counts depend on thread interleaving; the
+            // deterministic degrade path is the fault-driven probe one
+            degrade_errors: u64::MAX,
+            autoscale: true,
+            min_chips: cfg.n_chips.saturating_sub(1).max(1),
+            max_chips: cfg.n_chips + 1,
+            scale_up_depth: 2.0,
+            scale_down_depth: 0.5,
+            scale_patience: cfg.scale_patience,
+            replace_per_tick: cfg.replace_per_tick,
+            ..ControlConfig::default()
+        },
+        ..FleetConfig::default()
+    }
+}
+
+/// Run one chaos/soak session. Panics only on harness-setup failures
+/// (a pristine fleet refusing to program); every in-run failure is
+/// recorded as a typed error or an invariant violation in the report.
+pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
+    let schedule = FaultSchedule::generate(seed, cfg);
+    let chip = chip_cfg(cfg);
+    let fleet = fleet_cfg(cfg);
+    let pool = FleetPool::new(chip.clone(), fleet.clone(), seed ^ 0xF1EE_7);
+    let mut plane = ControlPlane::new(&fleet, &chip);
+
+    // two feature lanes (RBF + arc-cos) and the attention head lanes
+    let mut rng = Rng::new(seed ^ 0xC0F_FEE);
+    let omega_rbf = sample_omega(Sampler::Orf, cfg.d, cfg.m, &mut rng);
+    let omega_arc = sample_omega(Sampler::Orf, cfg.d, cfg.m, &mut rng);
+    let x_cal = Mat::randn(64, cfg.d, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega_rbf.clone(), &x_cal, 1)
+        .expect("pristine fleet must program the RBF lane");
+    pool.program_lane(KernelLane::ArcCos0, omega_arc.clone(), &x_cal, 1)
+        .expect("pristine fleet must program the arc-cos lane");
+
+    let mgr = SessionManager::new(
+        AttnServeConfig {
+            heads: cfg.heads,
+            d_head: cfg.d_head,
+            m: cfg.attn_m,
+            max_sessions: 8,
+            path: "analog".to_string(),
+            seed: seed ^ 0xA77E,
+        },
+        1,
+    );
+    let analog = mgr
+        .open(&pool, Some(PathKind::Analog))
+        .expect("pristine fleet must open the analog session");
+    let digital = mgr
+        .open(&pool, Some(PathKind::Digital))
+        .expect("digital twin session must open");
+
+    let mut lanes: Vec<LaneId> = vec![KernelLane::Rbf.into(), KernelLane::ArcCos0.into()];
+    for h in 0..cfg.heads {
+        lanes.push(LaneId::AttnHead(h as u32));
+    }
+    let mut checker = InvariantChecker::new(lanes, cfg.replication);
+
+    // request data, fixed up front: probes for the accuracy envelopes
+    // and a small rotation of traffic batches
+    let mut x_probe = Mat::randn(16, cfg.d, &mut rng);
+    x_probe.scale(0.5);
+    let xs: Vec<Mat> = (0..4)
+        .map(|_| {
+            let mut x = Mat::randn(cfg.batch, cfg.d, &mut rng);
+            x.scale(0.5);
+            x
+        })
+        .collect();
+
+    let gram_probe = |pool: &FleetPool| -> Option<f64> {
+        let u = pool.project(KernelLane::Rbf, &x_probe).ok()?;
+        let z = postprocess(Kernel::Rbf, &u, Some(&x_probe));
+        Some(approx_error(&gram(Kernel::Rbf, &x_probe), &gram_features(&z)))
+    };
+    let exact_arc = matmul(&x_probe, &omega_arc);
+    let proj_probe = |pool: &FleetPool| -> Option<f64> {
+        let u = pool.project(KernelLane::ArcCos0, &x_probe).ok()?;
+        Some(rel_fro_error(&u.data, &exact_arc.data))
+    };
+    let gram_baseline = gram_probe(&pool).expect("pristine fleet must serve the Gram probe");
+    let proj_baseline = proj_probe(&pool).expect("pristine fleet must serve the projection probe");
+    let gram_cap = cfg.gram_envelope.0 * gram_baseline + cfg.gram_envelope.1;
+    let proj_cap = cfg.proj_envelope.0 * proj_baseline + cfg.proj_envelope.1;
+
+    // warm both sessions so per-quantum rel-error means never ride on a
+    // single-token running sum
+    let mut attn_expected: u64 = 0;
+    for t in 0..4u64 {
+        let dim = cfg.heads * cfg.d_head;
+        let mut wrng = Rng::new(seed ^ 0x3A3A ^ t);
+        let mut q = vec![0f32; dim];
+        let mut k = vec![0f32; dim];
+        let mut v = vec![0f32; dim];
+        wrng.fill_gaussian(&mut q);
+        wrng.fill_gaussian(&mut k);
+        wrng.fill_gaussian(&mut v);
+        for x in q.iter_mut().chain(k.iter_mut()).chain(v.iter_mut()) {
+            *x *= 0.5;
+        }
+        mgr.append_batch(&pool, analog.id, &[(&q, &k, &v)])
+            .expect("warmup append on a pristine fleet");
+        mgr.append_batch(&pool, digital.id, &[(&q, &k, &v)])
+            .expect("warmup append on the digital twin");
+        attn_expected += 1;
+    }
+
+    // harness-side chaos bookkeeping (LIFO release matches the
+    // generator's nested fault/heal, drain/undrain pairing)
+    let mut flicker_faulted: Vec<usize> = Vec::new();
+    let mut kill_faulted: Vec<usize> = Vec::new();
+    let mut drained: Vec<usize> = Vec::new();
+    let mut applied: Vec<String> = Vec::new();
+    let mut events = ChaosEvents::default();
+    let mut tick_errors: Vec<String> = Vec::new();
+    let mut lat = Summary::new();
+    let mut rps_per_step: Vec<f64> = Vec::new();
+    let (mut feature_ok, mut feature_err) = (0u64, 0u64);
+    let mut attn_err_total = 0u64;
+    let (mut gram_worst, mut gram_final) = (gram_baseline, gram_baseline);
+    let mut proj_worst = proj_baseline;
+    let mut attn_rel_worst = 0.0f64;
+
+    for (i, step) in schedule.steps.iter().enumerate() {
+        pool.advance_clock(step.dt_s);
+
+        // -- apply this step's chaos ops (guarded, resolved live) -------
+        for op in &step.ops {
+            let serving: Vec<usize> = (0..pool.total_slots())
+                .filter(|&c| pool.chip_health(c).fallback_order().is_some())
+                .collect();
+            match *op {
+                ChaosOp::Fault { slot } => {
+                    let unfaulted: Vec<usize> = serving
+                        .iter()
+                        .copied()
+                        .filter(|c| !flicker_faulted.contains(c) && !kill_faulted.contains(c))
+                        .collect();
+                    // never fault below `replication` reachable chips —
+                    // the run must distinguish "control plane failed"
+                    // from "schedule left nothing to serve with"
+                    if unfaulted.len() <= cfg.replication {
+                        applied.push(format!("{i:02}: fault skipped (too few survivors)"));
+                        continue;
+                    }
+                    let c = unfaulted[slot % unfaulted.len()];
+                    pool.inject_fault(c, true);
+                    if i == schedule.fault_window.0 {
+                        kill_faulted.push(c); // backbone kill: stays dead
+                    } else {
+                        flicker_faulted.push(c);
+                    }
+                    events.faults += 1;
+                    applied.push(format!("{i:02}: fault chip {c}"));
+                }
+                ChaosOp::Heal => {
+                    if let Some(c) = flicker_faulted.pop() {
+                        pool.inject_fault(c, false);
+                        events.heals += 1;
+                        applied.push(format!("{i:02}: heal chip {c}"));
+                    }
+                }
+                ChaosOp::Drain { slot } => {
+                    let eligible: Vec<usize> = serving
+                        .iter()
+                        .copied()
+                        .filter(|c| {
+                            !flicker_faulted.contains(c)
+                                && !kill_faulted.contains(c)
+                                && !drained.contains(c)
+                        })
+                        .collect();
+                    if !drained.is_empty() || eligible.len() <= cfg.replication {
+                        applied.push(format!("{i:02}: drain skipped"));
+                        continue;
+                    }
+                    let c = eligible[slot % eligible.len()];
+                    if pool.drain_chip(c).is_ok() {
+                        drained.push(c);
+                        events.drains += 1;
+                        applied.push(format!("{i:02}: drain chip {c}"));
+                    }
+                }
+                ChaosOp::Undrain => {
+                    if let Some(c) = drained.pop() {
+                        match pool.undrain_chip(c) {
+                            Ok(()) => {
+                                events.undrains += 1;
+                                applied.push(format!("{i:02}: undrain chip {c}"));
+                            }
+                            Err(e) => applied.push(format!("{i:02}: undrain chip {c} refused: {e}")),
+                        }
+                    }
+                }
+                ChaosOp::DriftJump { dt_s } => {
+                    pool.advance_clock(dt_s);
+                    events.drift_jumps += 1;
+                    applied.push(format!("{i:02}: drift jump +{dt_s:.0}s"));
+                }
+                ChaosOp::ProgramFault { slot, n } => {
+                    if serving.is_empty() {
+                        continue;
+                    }
+                    let c = serving[slot % serving.len()];
+                    pool.inject_program_faults(c, n);
+                    checker.observe_program_fault();
+                    events.program_faults += n;
+                    applied.push(format!("{i:02}: poison {n} programming(s) on chip {c}"));
+                }
+            }
+        }
+
+        // -- concurrent traffic quantum ---------------------------------
+        let quantum = Timer::start();
+        let expected_at_entry = attn_expected;
+        let ledgers = parallel_map(cfg.threads.max(2), |w| {
+            let mut led = WorkerLedger::default();
+            if w + 1 == cfg.threads.max(2) {
+                // streaming-attention worker: paired analog/digital
+                // appends, lockstep so outputs stay comparable
+                let mut expected = expected_at_entry;
+                for t in 0..cfg.attn_tokens_per_step {
+                    let dim = cfg.heads * cfg.d_head;
+                    let mut trng =
+                        Rng::new(seed ^ ((i as u64) << 24) ^ ((t as u64) << 4) ^ 0x70_C3);
+                    let mut q = vec![0f32; dim];
+                    let mut k = vec![0f32; dim];
+                    let mut v = vec![0f32; dim];
+                    trng.fill_gaussian(&mut q);
+                    trng.fill_gaussian(&mut k);
+                    trng.fill_gaussian(&mut v);
+                    for x in q.iter_mut().chain(k.iter_mut()).chain(v.iter_mut()) {
+                        *x *= 0.5;
+                    }
+                    let t0 = Timer::start();
+                    match mgr.append_batch(&pool, analog.id, &[(&q, &k, &v)]) {
+                        Ok(res) => {
+                            led.latencies.push(t0.elapsed_secs());
+                            let (ya, idx) = &res[0];
+                            if *idx as u64 != expected {
+                                led.violations.push(format!(
+                                    "analog session token index {idx} != expected {expected} \
+                                     (token lost or duplicated)"
+                                ));
+                            }
+                            expected += 1;
+                            led.attn_ok += 1;
+                            match mgr.append_batch(&pool, digital.id, &[(&q, &k, &v)]) {
+                                Ok(dres) => {
+                                    let rel = rel_fro_error(ya, &dres[0].0);
+                                    if rel.is_finite() {
+                                        led.attn_rel_sum += rel;
+                                        led.attn_rel_n += 1;
+                                    } else {
+                                        led.violations
+                                            .push("non-finite attention output".to_string());
+                                    }
+                                }
+                                Err(e) => led
+                                    .violations
+                                    .push(format!("digital twin append failed: {e}")),
+                            }
+                        }
+                        Err(_) => {
+                            // typed error; the token was not absorbed
+                            // and the session index must not advance
+                            led.latencies.push(t0.elapsed_secs());
+                            led.attn_err += 1;
+                        }
+                    }
+                }
+            } else {
+                // feature/performer-projection worker
+                for r in 0..cfg.feature_reqs_per_thread {
+                    let lane = if (w + r) % 2 == 0 { KernelLane::Rbf } else { KernelLane::ArcCos0 };
+                    let x = &xs[(w * 31 + r * 7 + i) % xs.len()];
+                    let t0 = Timer::start();
+                    match pool.project(lane, x) {
+                        Ok(u) => {
+                            led.latencies.push(t0.elapsed_secs());
+                            if u.rows != x.rows
+                                || u.cols != cfg.m
+                                || !u.data.iter().all(|v| v.is_finite())
+                            {
+                                led.violations.push(format!(
+                                    "malformed {lane:?} reply: {}x{}",
+                                    u.rows, u.cols
+                                ));
+                            }
+                            led.ok += 1;
+                        }
+                        Err(_) => {
+                            led.latencies.push(t0.elapsed_secs());
+                            led.err += 1;
+                        }
+                    }
+                }
+            }
+            led
+        });
+        let quantum_s = quantum.elapsed_secs().max(1e-9);
+
+        // merge ledgers; a reply (or typed error) was observed for every
+        // submitted request, so submitted == ok + err by construction —
+        // black-holing would surface as a hang, a panic, or a ledger
+        // violation, never silently
+        let mut quantum_reqs = 0u64;
+        let (mut rel_sum, mut rel_n) = (0.0f64, 0u64);
+        for led in ledgers {
+            feature_ok += led.ok;
+            feature_err += led.err;
+            attn_expected += led.attn_ok;
+            attn_err_total += led.attn_err;
+            quantum_reqs += led.ok + led.err + led.attn_ok + led.attn_err;
+            rel_sum += led.attn_rel_sum;
+            rel_n += led.attn_rel_n;
+            for l in led.latencies {
+                lat.push(l);
+            }
+            for vstr in led.violations {
+                checker.record(i, vstr);
+            }
+        }
+        rps_per_step.push(quantum_reqs as f64 / quantum_s);
+        if rel_n > 0 {
+            let mean = rel_sum / rel_n as f64;
+            attn_rel_worst = attn_rel_worst.max(mean);
+            if mean > cfg.attn_envelope {
+                checker.record(
+                    i,
+                    format!(
+                        "attention error envelope breached: quantum mean {mean:.3} > {:.3}",
+                        cfg.attn_envelope
+                    ),
+                );
+            }
+        }
+
+        // token continuity: the registry agrees with the ledger
+        match mgr.get(analog.id) {
+            Ok(s) => {
+                if s.tokens() as u64 != attn_expected {
+                    checker.record(
+                        i,
+                        format!(
+                            "analog session holds {} tokens, ledger says {attn_expected}",
+                            s.tokens()
+                        ),
+                    );
+                }
+            }
+            Err(e) => checker.record(i, format!("analog session vanished: {e}")),
+        }
+
+        // -- one control tick -------------------------------------------
+        match plane.tick_with_depth(&pool, step.depth) {
+            Ok(report) => {
+                events.evictions += report.evicted.len();
+                events.replaced += report.replaced.len();
+                events.recals += report.recalibrated.len();
+                events.scale_ups += report.added.len();
+                events.scale_downs += report.retired.len();
+                // an evicted backbone kill no longer counts as an
+                // outstanding fault
+                kill_faulted.retain(|&c| pool.chip_health(c).active());
+                checker.observe_tick(&report);
+            }
+            Err(e) => tick_errors.push(format!("step {i}: {e}")),
+        }
+
+        // -- invariants --------------------------------------------------
+        let pf_outstanding: usize =
+            (0..pool.total_slots()).map(|c| pool.pending_program_faults(c)).sum();
+        let quiescent = flicker_faulted.is_empty()
+            && kill_faulted.is_empty()
+            && drained.is_empty()
+            && pf_outstanding == 0;
+        checker.check_step(i, &pool, &plane, quiescent);
+
+        // accuracy probes (post-tick, so a scheduled recal has landed)
+        match gram_probe(&pool) {
+            Some(e) => {
+                gram_worst = gram_worst.max(e);
+                gram_final = e;
+                if !e.is_finite() || e > gram_cap {
+                    checker.record(
+                        i,
+                        format!("Gram error envelope breached: {e:.4} > {gram_cap:.4}"),
+                    );
+                }
+            }
+            None if quiescent => {
+                checker.record(i, "Gram probe failed on a quiescent fleet".to_string())
+            }
+            None => feature_err += 1, // typed error under injected faults
+        }
+        match proj_probe(&pool) {
+            Some(e) => {
+                proj_worst = proj_worst.max(e);
+                if !e.is_finite() || e > proj_cap {
+                    checker.record(
+                        i,
+                        format!("projection error envelope breached: {e:.4} > {proj_cap:.4}"),
+                    );
+                }
+            }
+            None if quiescent => {
+                checker.record(i, "projection probe failed on a quiescent fleet".to_string())
+            }
+            None => feature_err += 1,
+        }
+    }
+
+    // closing returns the exact token count each session absorbed
+    match mgr.close(analog.id) {
+        Ok(n) if n as u64 == attn_expected => {}
+        Ok(n) => checker.record(
+            schedule.steps.len(),
+            format!("analog session closed with {n} tokens, ledger says {attn_expected}"),
+        ),
+        Err(e) => checker.record(schedule.steps.len(), format!("analog close failed: {e}")),
+    }
+    match mgr.close(digital.id) {
+        Ok(n) if n as u64 == attn_expected => {}
+        Ok(n) => checker.record(
+            schedule.steps.len(),
+            format!("digital twin closed with {n} tokens, ledger says {attn_expected}"),
+        ),
+        Err(e) => checker.record(schedule.steps.len(), format!("digital close failed: {e}")),
+    }
+
+    let phase_mean = |range: std::ops::Range<usize>| -> f64 {
+        let xs: Vec<f64> = rps_per_step
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| range.contains(i))
+            .map(|(_, &r)| r)
+            .collect();
+        if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+    };
+    let (w0, w1) = schedule.fault_window;
+
+    ChaosReport {
+        seed,
+        steps: schedule.steps.len(),
+        applied,
+        events,
+        feature_ok,
+        feature_err,
+        attn_tokens: attn_expected,
+        attn_err: attn_err_total,
+        tick_errors,
+        gram_baseline,
+        gram_worst,
+        gram_final,
+        proj_baseline,
+        proj_worst,
+        attn_rel_worst,
+        latency_p50_s: lat.p50(),
+        latency_p99_s: lat.p99(),
+        throughput_before: phase_mean(0..w0),
+        throughput_during: phase_mean(w0..w1),
+        throughput_after: phase_mean(w1..rps_per_step.len()),
+        violations: checker.into_violations(),
+    }
+}

@@ -1,0 +1,181 @@
+//! Fleet-wide invariants checked after every chaos step.
+//!
+//! Structural invariants (placement integrity, routability, replication
+//! restoration) are checked here from pool/plane state. Behavioural
+//! invariants that need the traffic ledgers (token continuity, accuracy
+//! envelopes, no black-holed requests) are computed by the harness and
+//! recorded through [`InvariantChecker::record`], so one report carries
+//! every violation of a run.
+
+use crate::coordinator::request::LaneId;
+use crate::fleet::{ControlPlane, FleetPool, TickReport};
+use std::fmt;
+
+/// One invariant violation: the step it was detected on plus a
+/// human-readable description.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub step: usize,
+    pub what: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "step {}: {}", self.step, self.what)
+    }
+}
+
+/// Tracks the replication floor and accumulates violations.
+///
+/// The floor is *conservative*: a naive `replicas == cfg.replication`
+/// assert would misfire, because two legitimate events permanently
+/// lower achievable replication — an autoscaler retire drops redundant
+/// replicas by design, and an injected programming failure can consume
+/// a restore attempt. The floor starts at the configured replication,
+/// steps down on retires and injected programming faults, and recovers
+/// (capped at the configured value) when the autoscaler adds a chip and
+/// repopulates it with one replica of every shard.
+pub struct InvariantChecker {
+    lanes: Vec<LaneId>,
+    configured_replication: usize,
+    floor: usize,
+    violations: Vec<Violation>,
+}
+
+impl InvariantChecker {
+    pub fn new(lanes: Vec<LaneId>, configured_replication: usize) -> InvariantChecker {
+        InvariantChecker {
+            lanes,
+            configured_replication: configured_replication.max(1),
+            floor: configured_replication.max(1),
+            violations: Vec::new(),
+        }
+    }
+
+    /// Fold a control tick's scaling events into the replication floor.
+    pub fn observe_tick(&mut self, report: &TickReport) {
+        if !report.retired.is_empty() {
+            self.floor = self.floor.saturating_sub(report.retired.len()).max(1);
+        }
+        if !report.added.is_empty() {
+            self.floor = (self.floor + report.added.len()).min(self.configured_replication);
+        }
+    }
+
+    /// An injected transient programming failure may consume a restore
+    /// attempt; lower the floor so the restoration check never blames
+    /// the control plane for sabotage the schedule itself ordered.
+    pub fn observe_program_fault(&mut self) {
+        self.floor = self.floor.saturating_sub(1).max(1);
+    }
+
+    pub fn replication_floor(&self) -> usize {
+        self.floor
+    }
+
+    /// Record a harness-detected violation (token loss, envelope
+    /// breach, black-holed request).
+    pub fn record(&mut self, step: usize, what: String) {
+        self.violations.push(Violation { step, what });
+    }
+
+    /// Structural checks against live pool/plane state.
+    ///
+    /// `quiescent` is true when no injected condition is outstanding
+    /// (no live fault, drain, or unconsumed programming-fault budget);
+    /// the replication-restored check only applies when the system has
+    /// actually been given the chance to converge.
+    pub fn check_step(
+        &mut self,
+        step: usize,
+        pool: &FleetPool,
+        plane: &ControlPlane,
+        quiescent: bool,
+    ) {
+        let pending = plane.pending_replacements();
+        let total = pool.total_slots();
+        for &lane in &self.lanes.clone() {
+            let mapping = match pool.mapping(lane) {
+                Ok(m) => m,
+                Err(e) => {
+                    self.record(step, format!("lane {} lost its mapping: {e}", lane.label()));
+                    continue;
+                }
+            };
+            let plan = mapping.plan();
+            // torn-placement checks: shards tile [0, m) exactly and
+            // every replica resolves to a chip the router could use
+            let mut col = 0usize;
+            for (s, shard) in plan.shards.iter().enumerate() {
+                if shard.col0 != col || shard.col1 <= shard.col0 {
+                    self.record(
+                        step,
+                        format!(
+                            "lane {} shard {s} tears column coverage: [{}, {}) after {col}",
+                            lane.label(),
+                            shard.col0,
+                            shard.col1
+                        ),
+                    );
+                }
+                col = shard.col1;
+                for &c in &shard.chips {
+                    if c >= total {
+                        self.record(
+                            step,
+                            format!("lane {} shard {s} references unknown chip {c}", lane.label()),
+                        );
+                    } else if pool.chip_health(c).fallback_order().is_none() {
+                        self.record(
+                            step,
+                            format!(
+                                "lane {} shard {s} routes to unroutable chip {c} ({})",
+                                lane.label(),
+                                pool.chip_health(c).as_str()
+                            ),
+                        );
+                    }
+                }
+                if shard.chips.is_empty() && pending == 0 {
+                    self.record(
+                        step,
+                        format!(
+                            "lane {} shard {s} has no replica and nothing queued to restore it",
+                            lane.label()
+                        ),
+                    );
+                }
+                if quiescent && pending == 0 && shard.chips.len() < self.floor {
+                    self.record(
+                        step,
+                        format!(
+                            "replication not restored: lane {} shard {s} has {} replica(s), \
+                             floor is {} and the replacement queue is empty",
+                            lane.label(),
+                            shard.chips.len(),
+                            self.floor
+                        ),
+                    );
+                }
+            }
+            if col != plan.m {
+                self.record(
+                    step,
+                    format!(
+                        "lane {} shards cover {col} of {} columns",
+                        lane.label(),
+                        plan.m
+                    ),
+                );
+            }
+        }
+    }
+
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    pub fn into_violations(self) -> Vec<Violation> {
+        self.violations
+    }
+}

@@ -1,0 +1,150 @@
+//! Deterministic chaos/soak harness for the serving fleet.
+//!
+//! The paper's claim — kernel approximation stays inside a small
+//! relative-error envelope under real device non-idealities — is only as
+//! strong as the *fleet's* behaviour when those non-idealities coincide
+//! with distributed failure modes. This module generates a
+//! **seed-replayable fault schedule** on the virtual fleet clock (chip
+//! fault/heal, drain/undrain, drift jumps, transient programming
+//! failures, queue-pressure surges that drive the autoscaler), runs the
+//! real [`ControlPlane::tick`](crate::fleet::ControlPlane) loop against
+//! it while concurrent client threads stream mixed feature / performer /
+//! attention traffic, and checks fleet-wide **invariants after every
+//! step**:
+//!
+//! - no torn placements: every lane's shard plan partitions its columns
+//!   and routes only to routable (non-evicted, non-joining) chips;
+//! - replication is restored once the control plane's replacement queue
+//!   drains (tracked against a conservative floor that accounts for
+//!   scale-downs and injected programming failures);
+//! - open attention sessions never lose tokens across eviction/recal
+//!   (every successful append returns the next sequential index, and the
+//!   session registry's counters agree);
+//! - per-lane Gram/projection/attention relative error stays inside the
+//!   configured envelopes (accuracy asserts use envelopes, not bits —
+//!   per-core noise streams are not bit-stable across interleavings);
+//! - no request is black-holed: every submitted request gets a reply or
+//!   a typed error.
+//!
+//! Replay contract (same as [`crate::util::prop`]): every failure
+//! message carries the schedule seed, and
+//! [`FaultSchedule::generate`](schedule::FaultSchedule::generate) is a
+//! pure function of `(seed, config)` — the control-side sequence of
+//! faults, evictions, recals and scale events replays exactly.
+
+pub mod harness;
+pub mod invariants;
+pub mod schedule;
+
+pub use harness::{run_chaos, ChaosEvents, ChaosReport};
+pub use invariants::{InvariantChecker, Violation};
+pub use schedule::{ChaosOp, FaultSchedule, ScheduledStep};
+
+/// Shape of one chaos/soak run: fleet geometry, traffic mix, schedule
+/// length and the accuracy envelopes the checker enforces.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// schedule steps (each: clock advance + ops + traffic quantum +
+    /// one control tick + invariant checks)
+    pub steps: usize,
+    /// chips at boot
+    pub n_chips: usize,
+    /// cores per chip (crossbars are 16x16 — small tiles keep GDP cheap)
+    pub cores: usize,
+    /// chip-level replicas per lane shard
+    pub replication: usize,
+    /// consecutive dead probes before the health monitor evicts
+    pub probe_evict_after: usize,
+    /// deferred shard restores drained per control tick
+    pub replace_per_tick: usize,
+    /// qualifying ticks before the autoscaler acts
+    pub scale_patience: usize,
+    /// synthetic queue depth of the backbone surge window
+    pub surge_depth: usize,
+    /// backbone clock jump that pushes every chip past the drift budget
+    pub recal_jump_s: f64,
+    /// estimated drift error that triggers recalibration
+    pub drift_err_budget: f64,
+    /// concurrent traffic threads per quantum (last one streams
+    /// attention tokens; the rest drive feature/performer projections)
+    pub threads: usize,
+    /// feature projections per worker per quantum
+    pub feature_reqs_per_thread: usize,
+    /// attention tokens appended per quantum
+    pub attn_tokens_per_step: usize,
+    /// feature-lane geometry (input dim, random features, request batch)
+    pub d: usize,
+    pub m: usize,
+    pub batch: usize,
+    /// attention geometry
+    pub heads: usize,
+    pub d_head: usize,
+    pub attn_m: usize,
+    /// RBF Gram-error cap: `factor * baseline + floor`
+    pub gram_envelope: (f64, f64),
+    /// per-lane projection rel-error cap vs the digital twin, same form
+    pub proj_envelope: (f64, f64),
+    /// cap on a quantum's mean analog-vs-digital attention rel error
+    pub attn_envelope: f64,
+    /// weights of the random per-step op mix:
+    /// [quiet, flicker fault, drain cycle, programming fault, drift jump]
+    pub op_weights: [f64; 5],
+}
+
+impl ChaosConfig {
+    /// The `cargo test` soak shape: a 4-chip fleet, ~30 steps, enough
+    /// traffic to exercise concurrency without slowing the tier-1 gate.
+    pub fn small() -> ChaosConfig {
+        ChaosConfig {
+            steps: 30,
+            n_chips: 4,
+            cores: 16,
+            replication: 2,
+            probe_evict_after: 2,
+            replace_per_tick: 1,
+            scale_patience: 2,
+            surge_depth: 64,
+            recal_jump_s: 3e5,
+            drift_err_budget: 0.05,
+            threads: 4,
+            feature_reqs_per_thread: 3,
+            attn_tokens_per_step: 2,
+            d: 16,
+            m: 64,
+            batch: 4,
+            heads: 2,
+            d_head: 8,
+            attn_m: 32,
+            gram_envelope: (3.0, 0.06),
+            proj_envelope: (2.5, 0.12),
+            attn_envelope: 0.9,
+            op_weights: [3.0, 1.0, 1.0, 1.0, 1.0],
+        }
+    }
+
+    /// Seed-sweep shape: shorter and lighter, for running several seeds
+    /// inside one test.
+    pub fn tiny() -> ChaosConfig {
+        ChaosConfig {
+            steps: 18,
+            threads: 2,
+            feature_reqs_per_thread: 2,
+            attn_tokens_per_step: 1,
+            ..ChaosConfig::small()
+        }
+    }
+
+    /// The bench shape: a bigger fleet under heavier concurrent load.
+    pub fn full() -> ChaosConfig {
+        ChaosConfig {
+            steps: 60,
+            n_chips: 6,
+            cores: 32,
+            threads: 8,
+            feature_reqs_per_thread: 6,
+            attn_tokens_per_step: 4,
+            batch: 8,
+            ..ChaosConfig::small()
+        }
+    }
+}

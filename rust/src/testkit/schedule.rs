@@ -1,0 +1,212 @@
+//! Seed-replayable fault schedules.
+//!
+//! A schedule is **pure data**: [`FaultSchedule::generate`] is a
+//! deterministic function of `(seed, config)` and nothing else, so a
+//! schedule can be regenerated bit-for-bit from the seed printed by a
+//! failing run. Each step advances the virtual fleet clock, applies
+//! chaos ops, and feeds one synthetic queue-depth observation to the
+//! control tick.
+//!
+//! Chip references are **abstract slot selectors**, not fleet indices:
+//! the fleet grows and shrinks while the schedule runs, so the harness
+//! resolves a selector against the chips that are serving at apply
+//! time (`selector % candidates.len()`). Resolution stays replayable
+//! because the control-side fleet evolution is itself a deterministic
+//! function of the schedule (probes are fault-driven, autoscale depths
+//! come from the schedule, and load gauges are zero between the
+//! synchronous traffic quanta).
+//!
+//! On top of a weighted random op mix, every schedule weaves in a
+//! deterministic **backbone** guaranteeing the events the soak must
+//! exercise: a held fault that crosses the eviction threshold, a drift
+//! jump past the recalibration budget, a queue-pressure surge long
+//! enough to out-wait the autoscaler's patience, and a trailing idle
+//! stretch that retires a chip again.
+
+use super::ChaosConfig;
+use crate::util::prop::Gen;
+
+/// One chaos operation. `slot` fields are abstract selectors resolved
+/// by the harness against the currently-serving chips; `Heal`/`Undrain`
+/// release the most recently injected fault/drain (ops are generated as
+/// nested pairs, so LIFO release is exact).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChaosOp {
+    /// make a chip unreachable: heartbeats fail, MVMs error
+    Fault { slot: usize },
+    /// clear the most recent *flicker* fault (backbone kills stay dead)
+    Heal,
+    /// operator drain: traffic steered away, chip stays a member
+    Drain { slot: usize },
+    /// return the drained chip to service
+    Undrain,
+    /// extra virtual-clock jump (big ones cross the drift budget)
+    DriftJump { dt_s: f64 },
+    /// poison the next `n` shard-replica programmings on a chip
+    /// (transient GDP failure → bounded-retry restore path)
+    ProgramFault { slot: usize, n: usize },
+}
+
+/// One step of a schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduledStep {
+    /// virtual-clock advance before this step's ops
+    pub dt_s: f64,
+    /// chaos ops applied before the step's traffic quantum
+    pub ops: Vec<ChaosOp>,
+    /// synthetic queue-depth observation fed to the control tick
+    pub depth: usize,
+}
+
+/// A generated schedule plus the step window of the backbone chip kill
+/// (used to split throughput into before/during/after phases).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSchedule {
+    pub seed: u64,
+    pub steps: Vec<ScheduledStep>,
+    /// `[start, end)` step range covering the kill and its recovery
+    pub fault_window: (usize, usize),
+}
+
+impl FaultSchedule {
+    /// Generate the schedule for `seed`. Pure: same `(seed, cfg)` →
+    /// identical schedule, regardless of what any prior run did.
+    pub fn generate(seed: u64, cfg: &ChaosConfig) -> FaultSchedule {
+        let mut g = Gen::new(seed);
+        let n = cfg.steps.max(12);
+
+        // backbone landmarks
+        let kill_at = n / 6;
+        let kill_recovered_by = kill_at + cfg.probe_evict_after + 4;
+        let drift_at = n / 3;
+        let surge_start = n / 2;
+        let surge_end = surge_start + cfg.scale_patience + 1;
+        let idle_start = (3 * n) / 4;
+        // random ops stay out of the windows whose outcome the soak
+        // asserts on, so the guaranteed events are never perturbed
+        let reserved = |i: usize| {
+            (kill_at..kill_recovered_by).contains(&i)
+                || i == drift_at
+                || (surge_start..surge_end).contains(&i)
+                || i >= idle_start
+        };
+
+        let mut steps: Vec<ScheduledStep> = Vec::with_capacity(n);
+        // ops a step schedules for the *next* step (flicker heals /
+        // undrains), keeping every injected condition short-lived
+        let mut carry: Vec<ChaosOp> = Vec::new();
+        for i in 0..n {
+            // per-step sub-stream: a change to one step's draw count
+            // never shifts the randomness of later steps
+            let mut sg = g.fork(i as u64);
+            let mut ops = std::mem::take(&mut carry);
+            let dt_s = sg.duration_s(0.5, 30.0);
+            let mut depth = sg.int(0, 2);
+
+            if i == kill_at {
+                ops.push(ChaosOp::Fault { slot: sg.int(0, usize::MAX >> 1) });
+            } else if i == drift_at {
+                ops.push(ChaosOp::DriftJump { dt_s: cfg.recal_jump_s });
+            }
+            if (surge_start..surge_end).contains(&i) {
+                depth = cfg.surge_depth;
+            } else if i >= idle_start {
+                depth = 0;
+            }
+
+            if !reserved(i) && i + 1 < n {
+                match sg.weighted(&cfg.op_weights) {
+                    0 => {} // quiet step
+                    1 => {
+                        // flicker fault: one failed probe + errored MVMs,
+                        // healed before the eviction threshold
+                        ops.push(ChaosOp::Fault { slot: sg.int(0, usize::MAX >> 1) });
+                        carry.push(ChaosOp::Heal);
+                    }
+                    2 => {
+                        ops.push(ChaosOp::Drain { slot: sg.int(0, usize::MAX >> 1) });
+                        carry.push(ChaosOp::Undrain);
+                    }
+                    3 => {
+                        ops.push(ChaosOp::ProgramFault {
+                            slot: sg.int(0, usize::MAX >> 1),
+                            n: 1,
+                        });
+                    }
+                    _ => {
+                        // sub-budget drift jump; several may accumulate
+                        // into an extra (scheduled, deterministic) recal
+                        ops.push(ChaosOp::DriftJump {
+                            dt_s: sg.duration_s(10.0, 2e4),
+                        });
+                    }
+                }
+            }
+            steps.push(ScheduledStep { dt_s, ops, depth });
+        }
+        FaultSchedule {
+            seed,
+            steps,
+            fault_window: (kill_at, kill_recovered_by),
+        }
+    }
+
+    /// Count of ops of each kind, for quick schedule summaries.
+    pub fn op_histogram(&self) -> [usize; 6] {
+        let mut h = [0usize; 6];
+        for step in &self.steps {
+            for op in &step.ops {
+                let k = match op {
+                    ChaosOp::Fault { .. } => 0,
+                    ChaosOp::Heal => 1,
+                    ChaosOp::Drain { .. } => 2,
+                    ChaosOp::Undrain => 3,
+                    ChaosOp::DriftJump { .. } => 4,
+                    ChaosOp::ProgramFault { .. } => 5,
+                };
+                h[k] += 1;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_pure_and_seed_sensitive() {
+        let cfg = ChaosConfig::small();
+        let a = FaultSchedule::generate(123, &cfg);
+        let b = FaultSchedule::generate(123, &cfg);
+        assert_eq!(a, b, "same seed must regenerate the identical schedule");
+        let c = FaultSchedule::generate(124, &cfg);
+        assert_ne!(a.steps, c.steps, "different seeds must differ");
+    }
+
+    #[test]
+    fn backbone_events_are_always_present() {
+        let cfg = ChaosConfig::small();
+        for seed in 0..20u64 {
+            let s = FaultSchedule::generate(seed, &cfg);
+            let h = s.op_histogram();
+            assert!(h[0] >= 1, "seed {seed}: no fault scheduled");
+            assert!(h[4] >= 1, "seed {seed}: no drift jump scheduled");
+            // heals/undrains pair with their flicker injections
+            assert_eq!(h[1], h[0] - 1, "seed {seed}: unpaired flicker fault");
+            assert_eq!(h[3], h[2], "seed {seed}: unpaired drain");
+            // the backbone kill window is inside the schedule
+            let (w0, w1) = s.fault_window;
+            assert!(w0 < w1 && w1 <= s.steps.len());
+            assert!(s.steps[w0].ops.iter().any(|o| matches!(o, ChaosOp::Fault { .. })));
+            // surge window out-waits the autoscaler's patience
+            let surge = s.steps.iter().filter(|st| st.depth == cfg.surge_depth).count();
+            assert!(surge > cfg.scale_patience, "seed {seed}: surge too short");
+            // trailing idle stretch
+            assert!(s.steps.last().unwrap().depth == 0);
+            // clock always moves forward
+            assert!(s.steps.iter().all(|st| st.dt_s > 0.0));
+        }
+    }
+}

@@ -28,19 +28,72 @@ impl Gen {
         Gen { rng: Rng::new(seed), seed }
     }
 
-    /// Integer in [lo, hi] inclusive.
+    /// Integer in [lo, hi] inclusive. A reversed range is a generator
+    /// bug, and in release builds `hi - lo + 1` would silently wrap into
+    /// a near-2^64 modulus — so this is a hard assert, not a debug one.
     pub fn int(&mut self, lo: usize, hi: usize) -> usize {
-        debug_assert!(hi >= lo);
+        assert!(hi >= lo, "Gen::int: empty range [{lo}, {hi}]");
         lo + self.rng.below(hi - lo + 1)
     }
 
     /// One of the provided choices.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "Gen::choose: empty slice");
         &xs[self.rng.below(xs.len())]
+    }
+
+    /// Index into `weights`, picked proportionally to each weight.
+    /// Zero-weight entries are never picked.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        assert!(!weights.is_empty(), "Gen::weighted: empty weight list");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "Gen::weighted: weights must be finite and non-negative: {weights:?}"
+        );
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "Gen::weighted: all weights are zero");
+        let mut t = self.rng.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if *w > 0.0 && t < *w {
+                return i;
+            }
+            t -= w;
+        }
+        // float-edge fallback: the last non-zero weight
+        weights
+            .iter()
+            .rposition(|w| *w > 0.0)
+            .expect("checked above")
+    }
+
+    /// Derive an independent sub-seeded generator (one schedule per
+    /// chaos thread / per schedule step) without disturbing callers that
+    /// share `self`. Same parent state + same tag → same child stream.
+    pub fn fork(&mut self, tag: u64) -> Gen {
+        let seed = self.rng.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Gen::new(seed)
     }
 
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(hi >= lo, "Gen::f64_in: empty range [{lo}, {hi}]");
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Log-uniform duration/clock-step in [lo, hi] seconds. Drift-driven
+    /// schedules care about timescales spanning decades (seconds of
+    /// serving vs months of PCM drift), so uniform sampling of the
+    /// *exponent* is the natural generator.
+    pub fn duration_s(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(
+            lo > 0.0 && hi >= lo,
+            "Gen::duration_s: need 0 < lo <= hi, got [{lo}, {hi}]"
+        );
+        self.rng.range_f64(lo.ln(), hi.ln()).exp()
     }
 
     pub fn bool(&mut self) -> bool {
@@ -129,5 +182,90 @@ mod tests {
         for _ in 0..100 {
             assert!(xs.contains(g.choose(&xs)));
         }
+    }
+
+    /// The replay contract: a `Gen` rebuilt from the same seed emits the
+    /// identical value sequence across every generator, including the
+    /// streams of sub-seeded forks — this is what makes a chaos schedule
+    /// replayable from nothing but its seed.
+    #[test]
+    fn replay_determinism_across_all_generators() {
+        let drive = |seed: u64| {
+            let mut g = Gen::new(seed);
+            let mut log: Vec<String> = Vec::new();
+            for i in 0..50 {
+                log.push(format!("{}", g.int(0, 1000)));
+                log.push(format!("{}", g.weighted(&[1.0, 3.0, 0.0, 2.0])));
+                log.push(format!("{:?}", g.f64_in(-2.0, 2.0)));
+                log.push(format!("{:?}", g.duration_s(1.0, 1e7)));
+                let mut f = g.fork(i);
+                log.push(format!("{}:{}", f.seed, f.int(0, 9)));
+            }
+            log
+        };
+        assert_eq!(drive(42), drive(42));
+        assert_ne!(drive(42), drive(43));
+    }
+
+    #[test]
+    fn fork_streams_are_independent_of_parent_and_each_other() {
+        let mut g = Gen::new(9);
+        let mut a = g.fork(1);
+        let mut b = g.fork(2);
+        let va: Vec<usize> = (0..16).map(|_| a.int(0, 1_000_000)).collect();
+        let vb: Vec<usize> = (0..16).map(|_| b.int(0, 1_000_000)).collect();
+        assert_ne!(va, vb, "sibling forks must not alias");
+        // draining a fork leaves the parent stream where forking left it
+        let mut g2 = Gen::new(9);
+        let _ = g2.fork(1);
+        let _ = g2.fork(2);
+        assert_eq!(g.int(0, 1000), g2.int(0, 1000));
+    }
+
+    #[test]
+    fn weighted_respects_weights_and_skips_zeros() {
+        let mut g = Gen::new(5);
+        let w = [0.0, 1.0, 0.0, 3.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[g.weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0, "zero weight picked: {counts:?}");
+        assert_eq!(counts[2], 0, "zero weight picked: {counts:?}");
+        assert!(counts[1] > 0 && counts[3] > 0);
+        let ratio = counts[3] as f64 / counts[1] as f64;
+        assert!((2.0..4.5).contains(&ratio), "3:1 weights off: {counts:?}");
+    }
+
+    #[test]
+    fn duration_is_log_uniform_in_range() {
+        let mut g = Gen::new(6);
+        let (mut lo_decade, mut hi_decade) = (0, 0);
+        for _ in 0..2000 {
+            let d = g.duration_s(1.0, 1e6);
+            assert!((1.0..=1e6).contains(&d), "{d}");
+            if d < 1e1 {
+                lo_decade += 1;
+            }
+            if d > 1e5 {
+                hi_decade += 1;
+            }
+        }
+        // each of the 6 decades carries ~1/6 of the mass
+        assert!(lo_decade > 200 && hi_decade > 200, "{lo_decade} {hi_decade}");
+    }
+
+    #[test]
+    #[should_panic(expected = "Gen::int: empty range")]
+    fn reversed_int_range_fails_loudly_in_release_too() {
+        let mut g = Gen::new(1);
+        let _ = g.int(7, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "Gen::weighted: all weights are zero")]
+    fn all_zero_weights_fail_loudly() {
+        let mut g = Gen::new(1);
+        let _ = g.weighted(&[0.0, 0.0]);
     }
 }

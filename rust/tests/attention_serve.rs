@@ -415,3 +415,169 @@ fn mini_bundle_engine_serves_features_and_attention_over_tcp() {
 
     server.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// server protocol error paths (ISSUE 6): every malformed frame gets a
+// typed error reply; the connection never drops, the server never panics
+// ---------------------------------------------------------------------------
+
+/// One persistent raw TCP connection, so tests can push frames the
+/// `Client` wrapper (which only sends well-formed JSON) cannot.
+struct RawConn {
+    stream: std::net::TcpStream,
+    reader: std::io::BufReader<std::net::TcpStream>,
+}
+
+impl RawConn {
+    fn connect(addr: &std::net::SocketAddr) -> RawConn {
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        RawConn { stream, reader }
+    }
+
+    /// Send one line verbatim; a `None` reply means the server hung up.
+    fn call(&mut self, line: &str) -> Option<Json> {
+        use std::io::{BufRead, Write};
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).unwrap();
+        (n > 0).then(|| Json::parse(reply.trim()).expect("server replies are valid JSON"))
+    }
+}
+
+fn expect_typed_error(reply: Option<Json>, needle: &str) {
+    let reply = reply.expect("server must reply, not disconnect");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply:?}");
+    let msg = reply.get("error").and_then(|e| e.as_str()).unwrap_or_default().to_string();
+    assert!(!msg.is_empty(), "error reply must carry a message: {reply:?}");
+    assert!(
+        msg.contains(needle),
+        "error {msg:?} should mention {needle:?}"
+    );
+}
+
+/// Malformed frames — non-JSON garbage, non-object frames, unknown
+/// verbs — each produce a typed error on the SAME connection, which
+/// stays serviceable afterwards.
+#[test]
+fn malformed_frames_get_typed_errors_and_keep_the_connection() {
+    let cfg = mini_config();
+    let engine = Engine::start(&cfg).unwrap();
+    let server = Server::start(engine, &cfg.serve.bind).unwrap();
+    let mut conn = RawConn::connect(&server.addr);
+
+    expect_typed_error(conn.call("this is not json"), "");
+    expect_typed_error(conn.call("[1, 2, 3]"), "type");
+    expect_typed_error(conn.call("42"), "type");
+    expect_typed_error(conn.call(r#"{"no_type_key": true}"#), "type");
+    expect_typed_error(conn.call(r#"{"type":"frobnicate"}"#), "unknown request type");
+    expect_typed_error(conn.call(r#"{"type":17}"#), "");
+
+    // after six bad frames, the same connection still serves
+    let pong = conn.call(r#"{"type":"ping"}"#).expect("connection must survive bad frames");
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)), "{pong:?}");
+    server.shutdown();
+}
+
+/// Session-verb error paths: short/non-numeric q/k/v, appends to closed
+/// or never-opened sessions, double close — typed errors, stream intact.
+#[test]
+fn session_verb_errors_are_typed_and_recoverable() {
+    let cfg = mini_config();
+    let acfg = cfg.attention.serve.clone();
+    let engine = Engine::start(&cfg).unwrap();
+    let server = Server::start(engine, &cfg.serve.bind).unwrap();
+    let mut conn = RawConn::connect(&server.addr);
+
+    // append to a session that was never opened
+    expect_typed_error(
+        conn.call(r#"{"type":"attn_append","session":12345,"q":[1],"k":[1],"v":[1]}"#),
+        "session",
+    );
+
+    let open = conn.call(r#"{"type":"attn_open","path":"fp32"}"#).unwrap();
+    assert_eq!(open.get("ok"), Some(&Json::Bool(true)), "{open:?}");
+    let sid = open.get("session").unwrap().as_usize().unwrap();
+    let dim = acfg.heads * acfg.d_head;
+
+    // q/k/v shorter than heads * d_head
+    expect_typed_error(
+        conn.call(&format!(
+            r#"{{"type":"attn_append","session":{sid},"q":[0.1,0.2],"k":[0.1,0.2],"v":[0.1,0.2]}}"#
+        )),
+        "q/k/v",
+    );
+    // one array of the right length, two missing
+    expect_typed_error(
+        conn.call(&format!(
+            r#"{{"type":"attn_append","session":{sid},"q":[{}]}}"#,
+            vec!["0.1"; dim].join(",")
+        )),
+        "k",
+    );
+    // non-numeric entries inside q
+    expect_typed_error(
+        conn.call(&format!(
+            r#"{{"type":"attn_append","session":{sid},"q":["x"],"k":[0.1],"v":[0.1]}}"#
+        )),
+        "",
+    );
+
+    // the failed appends consumed no token indices: a valid append is 0
+    let ok = conn
+        .call(&format!(
+            r#"{{"type":"attn_append","session":{sid},"q":[{v}],"k":[{v}],"v":[{v}]}}"#,
+            v = vec!["0.1"; dim].join(",")
+        ))
+        .unwrap();
+    assert_eq!(ok.get("ok"), Some(&Json::Bool(true)), "{ok:?}");
+    assert_eq!(ok.get("index").unwrap().as_usize(), Some(0));
+
+    // close, then append to the now-closed session
+    let closed = conn.call(&format!(r#"{{"type":"attn_close","session":{sid}}}"#)).unwrap();
+    assert_eq!(closed.get("ok"), Some(&Json::Bool(true)), "{closed:?}");
+    assert_eq!(closed.get("tokens").unwrap().as_usize(), Some(1));
+    expect_typed_error(
+        conn.call(&format!(
+            r#"{{"type":"attn_append","session":{sid},"q":[0.1],"k":[0.1],"v":[0.1]}}"#
+        )),
+        "session",
+    );
+    // double close
+    expect_typed_error(
+        conn.call(&format!(r#"{{"type":"attn_close","session":{sid}}}"#)),
+        "session",
+    );
+
+    // the connection is still fine
+    let pong = conn.call(r#"{"type":"ping"}"#).unwrap();
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+    server.shutdown();
+}
+
+/// `attn_open` past `max_sessions` is refused with a typed error, and a
+/// freed slot can be re-opened.
+#[test]
+fn attn_open_past_max_sessions_is_refused_then_recovers() {
+    let mut cfg = mini_config();
+    cfg.attention.serve.max_sessions = 2;
+    let engine = Engine::start(&cfg).unwrap();
+    let server = Server::start(engine, &cfg.serve.bind).unwrap();
+    let mut conn = RawConn::connect(&server.addr);
+
+    let mut ids = Vec::new();
+    for _ in 0..2 {
+        let open = conn.call(r#"{"type":"attn_open","path":"fp32"}"#).unwrap();
+        assert_eq!(open.get("ok"), Some(&Json::Bool(true)), "{open:?}");
+        ids.push(open.get("session").unwrap().as_usize().unwrap());
+    }
+    expect_typed_error(conn.call(r#"{"type":"attn_open","path":"fp32"}"#), "session limit");
+
+    // closing one frees the slot
+    let closed = conn.call(&format!(r#"{{"type":"attn_close","session":{}}}"#, ids[0])).unwrap();
+    assert_eq!(closed.get("ok"), Some(&Json::Bool(true)));
+    let open = conn.call(r#"{"type":"attn_open","path":"fp32"}"#).unwrap();
+    assert_eq!(open.get("ok"), Some(&Json::Bool(true)), "{open:?}");
+    server.shutdown();
+}

@@ -625,3 +625,76 @@ fn heterogeneous_fleet_never_overpacks_small_chip() {
     let want = imka::linalg::matmul(&x, &omega2);
     assert!(imka::util::stats::rel_fro_error(&u.data, &want.data) < 0.12);
 }
+
+// ---------------------------------------------------------------------------
+// chaos/soak harness (testkit): the ISSUE-6 acceptance entries
+// ---------------------------------------------------------------------------
+
+use imka::testkit::{run_chaos, ChaosConfig, FaultSchedule};
+use imka::util::prop;
+
+/// ISSUE acceptance: one seeded soak drives both workload kinds
+/// (feature/performer projections + a streaming-attention session)
+/// through at least one eviction, one recalibration and one autoscale
+/// event, with every fleet-wide invariant green.
+#[test]
+fn chaos_soak_mixed_workloads_all_invariants_green() {
+    let cfg = ChaosConfig::small();
+    let report = run_chaos(0xC0_5EED, &cfg);
+    report.assert_green();
+
+    // both workload kinds actually served
+    assert!(report.feature_ok > 0, "no feature traffic served: {report:?}");
+    assert!(report.attn_tokens > 4, "no attention tokens streamed: {report:?}");
+    // the backbone guarantees each control-plane event class fired
+    assert!(report.events.evictions >= 1, "no eviction: {:?}", report.events);
+    assert!(report.events.recals >= 1, "no recalibration: {:?}", report.events);
+    assert!(
+        report.events.scale_ups >= 1 && report.events.scale_downs >= 1,
+        "autoscaler did not act in both directions: {:?}",
+        report.events
+    );
+    assert!(report.events.replaced >= 1, "no deferred restore drained: {:?}", report.events);
+    // the traffic side kept measuring across all three phases
+    assert!(report.throughput_before > 0.0 && report.throughput_after > 0.0);
+    assert!(report.latency_p99_s >= report.latency_p50_s);
+}
+
+/// ISSUE acceptance: the same schedule seed produces the same fault
+/// sequence and the same invariant verdicts. The resolved op trail and
+/// every control-plane event count must match bit-for-bit; traffic-side
+/// noise (latency, relative error) may vary per the PR-5 caveat.
+#[test]
+fn chaos_run_is_replayable_from_its_seed() {
+    let cfg = ChaosConfig::tiny();
+    let a = FaultSchedule::generate(7, &cfg);
+    let b = FaultSchedule::generate(7, &cfg);
+    assert_eq!(a, b, "schedule generation must be pure");
+
+    let r1 = run_chaos(7, &cfg);
+    let r2 = run_chaos(7, &cfg);
+    assert_eq!(r1.applied, r2.applied, "resolved op trail must replay exactly");
+    assert_eq!(r1.events, r2.events, "control-plane event counts must replay exactly");
+    assert_eq!(
+        r1.violations, r2.violations,
+        "invariant verdicts must replay exactly"
+    );
+    assert_eq!(r1.attn_tokens, r2.attn_tokens);
+}
+
+/// Seed sweep through the property driver: several distinct schedules
+/// stay invariant-green, and any failure prints a replayable seed.
+#[test]
+fn chaos_seed_sweep_stays_green() {
+    let cfg = ChaosConfig::tiny();
+    prop::check("chaos-soak-sweep", 3, |g| {
+        let report = run_chaos(g.seed, &cfg);
+        if !report.violations.is_empty() {
+            eprintln!(
+                "chaos sweep seed {} violated: {:?}",
+                report.seed, report.violations
+            );
+        }
+        report.violations.is_empty()
+    });
+}

@@ -31,6 +31,19 @@ IMKA_BENCH_FLEET_SMOKE=1 cargo bench --bench bench_fleet
 echo "== bench_attention_serve smoke (fp32 + analog sessions) =="
 IMKA_BENCH_ATTN_SMOKE=1 cargo bench --bench bench_attention_serve
 
+# chaos/soak smoke: a seed-replayable fault schedule (kill + flicker
+# faults, drains, drift jumps, programming failures, autoscale surge)
+# against the live control plane under concurrent mixed traffic, with
+# fleet-wide invariants checked after every step. The gate is the
+# machine-readable artifact: BENCH_chaos.json must report zero
+# invariant violations.
+echo "== bench_chaos smoke (fault schedule + invariant checks) =="
+IMKA_BENCH_CHAOS_SMOKE=1 cargo bench --bench bench_chaos
+if ! grep -q '"invariant_violations":0' BENCH_chaos.json; then
+    echo "chaos smoke: invariant violations reported in BENCH_chaos.json" >&2
+    exit 1
+fi
+
 if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
     if cargo clippy --version >/dev/null 2>&1; then
         echo "== cargo clippy --all-targets -- -D warnings =="
