@@ -10,18 +10,32 @@
 //! fp tolerance on the fp32 path, the paper-scale relative-error
 //! envelope on the analog path (the ISSUE 4 acceptance metric).
 //!
-//! Emits one human-readable line and one JSON row per path.
+//! Per-append latency is recorded into one bounded `LogHistogram` per
+//! worker thread and merged afterwards (the same observability
+//! primitive the serving telemetry uses), giving p50/p95/p99 without
+//! unbounded sample vectors; the analog stage breakdown (lock wait /
+//! analog MVM / digital combine) comes from an `MvmProfile` threaded
+//! through the fleet fan-out.
+//!
+//! Emits one human-readable line and one JSON row per path, writes the
+//! combined row set to `BENCH_serve.json` at the repo root (override
+//! with IMKA_BENCH_SERVE_JSON), and ends with the Prometheus-style
+//! metrics exposition so CI can grep the gauge names. Exit status is
+//! non-zero if any path moved zero tokens/s.
+//!
 //! Run: cargo bench --bench bench_attention_serve
 //! Smoke mode (CI tier-1 gate): IMKA_BENCH_ATTN_SMOKE=1 shrinks the
 //! geometry so both paths run in seconds without artifacts.
 
-use imka::config::json::{num, obj, s, Json};
+use imka::config::json::{arr, num, obj, s, Json};
 use imka::config::{AttnServeConfig, ChipConfig, FleetConfig};
+use imka::coordinator::request::{Lane, SessionLane};
 use imka::coordinator::session::{head_omega, SessionManager};
-use imka::coordinator::PathKind;
+use imka::coordinator::{render_metrics, LiveGauges, PathKind, Telemetry};
 use imka::features::favor::favor_attention;
 use imka::fleet::{FleetPool, PlacementPolicy, RouterPolicy};
 use imka::linalg::Mat;
+use imka::obsv::{LogHistogram, MvmProfile};
 use imka::util::stats::rel_fro_error;
 use imka::util::threads::parallel_map;
 use imka::util::{Rng, Timer};
@@ -79,32 +93,59 @@ fn gen_stream(
     (q, k, v, fq, fk, fv)
 }
 
-fn run_path(p: &Params, pool: &FleetPool, mgr: &SessionManager, path: PathKind) {
+fn run_path(
+    p: &Params,
+    pool: &FleetPool,
+    mgr: &SessionManager,
+    telemetry: &Telemetry,
+    path: PathKind,
+) -> Json {
     let streams: Vec<_> = (0..p.sessions).map(|s| gen_stream(100 + s as u64, p)).collect();
     let infos: Vec<_> = (0..p.sessions)
         .map(|_| mgr.open(pool, Some(path)).unwrap())
         .collect();
+    let prof = MvmProfile::default();
+    let lane = Lane::Attention(SessionLane(0));
 
     let t = Timer::start();
-    let finals: Vec<Vec<f32>> = parallel_map(p.sessions, |sidx| {
+    let results: Vec<(Vec<f32>, LogHistogram)> = parallel_map(p.sessions, |sidx| {
         let (_, _, _, fq, fk, fv) = &streams[sidx];
-        let id = infos[sidx].id;
+        let session = mgr.get(infos[sidx].id).unwrap();
+        let hist = LogHistogram::latency_us();
         let mut last = Vec::new();
         for tok in 0..p.tokens {
+            let t0 = Timer::start();
             let out = mgr
-                .append_batch(
+                .append_to(
                     pool,
-                    id,
+                    &session,
                     &[(fq[tok].as_slice(), fk[tok].as_slice(), fv[tok].as_slice())],
+                    Some(&prof),
                 )
                 .unwrap();
+            let us = t0.elapsed_secs() * 1e6;
+            hist.record(us);
+            telemetry.record(lane, us, 1, 0.0, false);
             last = out.into_iter().next().unwrap().0;
         }
-        last
+        (last, hist)
     });
     let secs = t.elapsed_secs();
     let total_tokens = p.sessions * p.tokens;
     let tokens_per_s = total_tokens as f64 / secs;
+
+    // merge the per-thread histograms (exercises the same merge the
+    // fleet would use to aggregate replicas)
+    let merged = LogHistogram::latency_us();
+    for (_, hist) in &results {
+        merged.merge_from(hist);
+    }
+
+    // analog stage means per append; digital appends never touch the
+    // fleet so their lock/MVM stages are structurally zero
+    let lock_us = prof.lock_wait_us() / total_tokens as f64;
+    let mvm_us = prof.mvm_us() / total_tokens as f64;
+    let combine_us = (merged.sum() / total_tokens as f64 - lock_us - mvm_us).max(0.0);
 
     // accuracy probe: session 0's final token vs offline favor on the
     // whole prefix, per head
@@ -114,7 +155,7 @@ fn run_path(p: &Params, pool: &FleetPool, mgr: &SessionManager, path: PathKind) 
     for h in 0..p.heads {
         let offline = favor_attention(&q[h], &k[h], &v[h], &head_omega(cfg, h));
         let want = offline.row(p.tokens - 1);
-        let got = &finals[0][h * p.d_head..(h + 1) * p.d_head];
+        let got = &results[0].0[h * p.d_head..(h + 1) * p.d_head];
         rel += rel_fro_error(got, want);
     }
     rel /= p.heads as f64;
@@ -123,18 +164,33 @@ fn run_path(p: &Params, pool: &FleetPool, mgr: &SessionManager, path: PathKind) 
         mgr.close(info.id).unwrap();
     }
 
+    telemetry
+        .registry()
+        .counter(
+            "imka_bench_serve_tokens_total",
+            "tokens streamed by bench_attention_serve per path",
+            &[("path", path.as_str())],
+        )
+        .add(total_tokens as f64);
+
     println!(
-        "path {:>7}: {tokens_per_s:>8.1} tokens/s  ({} sessions x {} tokens, \
-         {} heads x d{} x m{})  final-token rel err vs offline favor {rel:.4}",
+        "path {:>7}: {tokens_per_s:>8.1} tokens/s ({:.1}/session)  \
+         append p50 {:.0} us  p95 {:.0} us  p99 {:.0} us  \
+         stages lock {lock_us:.1} mvm {mvm_us:.1} combine {combine_us:.1} us  \
+         ({} sessions x {} tokens, {} heads x d{} x m{})  \
+         final-token rel err vs offline favor {rel:.4}",
         path.as_str(),
+        tokens_per_s / p.sessions as f64,
+        merged.p50(),
+        merged.p95(),
+        merged.p99(),
         p.sessions,
         p.tokens,
         p.heads,
         p.d_head,
         p.m
     );
-    let row = obj(vec![
-        ("bench", s("attention_serve")),
+    obj(vec![
         ("path", s(path.as_str())),
         ("heads", num(p.heads as f64)),
         ("d_head", num(p.d_head as f64)),
@@ -142,11 +198,16 @@ fn run_path(p: &Params, pool: &FleetPool, mgr: &SessionManager, path: PathKind) 
         ("sessions", num(p.sessions as f64)),
         ("tokens", num(p.tokens as f64)),
         ("tokens_per_s", num(tokens_per_s)),
+        ("tokens_per_s_per_session", num(tokens_per_s / p.sessions as f64)),
+        ("append_p50_us", num(merged.p50())),
+        ("append_p95_us", num(merged.p95())),
+        ("append_p99_us", num(merged.p99())),
+        ("stage_lock_wait_us", num(lock_us)),
+        ("stage_analog_mvm_us", num(mvm_us)),
+        ("stage_digital_combine_us", num(combine_us)),
         ("final_rel_err_vs_offline", num(rel)),
         ("n_chips", num(p.n_chips as f64)),
-        ("ok", Json::Bool(true)),
-    ]);
-    println!("{}", row.to_string());
+    ])
 }
 
 fn main() {
@@ -165,6 +226,59 @@ fn main() {
     };
     let pool = FleetPool::new(ChipConfig::default(), fleet, 9);
     let mgr = SessionManager::new(attn_cfg(&p), 1);
-    run_path(&p, &pool, &mgr, PathKind::Digital);
-    run_path(&p, &pool, &mgr, PathKind::Analog);
+    let telemetry = Telemetry::new();
+    let rows = vec![
+        run_path(&p, &pool, &mgr, &telemetry, PathKind::Digital),
+        run_path(&p, &pool, &mgr, &telemetry, PathKind::Analog),
+    ];
+
+    let zero_paths = rows
+        .iter()
+        .filter(|r| {
+            r.get("tokens_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0) <= 0.0
+        })
+        .count();
+    let row = obj(vec![
+        ("bench", s("attention_serve")),
+        (
+            "mode",
+            s(if std::env::var("IMKA_BENCH_ATTN_SMOKE").is_ok() { "smoke" } else { "full" }),
+        ),
+        ("paths", arr(rows.into_iter())),
+        ("paths_with_zero_throughput", num(zero_paths as f64)),
+        ("ok", Json::Bool(zero_paths == 0)),
+    ]);
+    println!("{}", row.to_string());
+
+    let path = std::env::var("IMKA_BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_serve.json", env!("CARGO_MANIFEST_DIR")));
+    match std::fs::write(&path, row.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(err) => {
+            eprintln!("failed to write {path}: {err}");
+            std::process::exit(1);
+        }
+    }
+
+    // the same exposition the server's `metrics` verb returns, built from
+    // this run's telemetry + the pool's live gauges (CI greps the names)
+    let live = LiveGauges {
+        chips: pool.chip_snapshots(),
+        events: pool.events(),
+        n_chips: pool.n_chips(),
+        total_slots: pool.total_slots(),
+        cores_used: pool.cores_used(),
+        utilization: pool.utilization(),
+        inflight: pool.total_queue_depth(),
+        control_enabled: false,
+        sessions: Some(mgr.snapshot()),
+        trace: None,
+    };
+    println!("-- metrics exposition --");
+    print!("{}", render_metrics(telemetry.registry(), &live));
+
+    if zero_paths > 0 {
+        eprintln!("{zero_paths} path(s) moved zero tokens/s");
+        std::process::exit(1);
+    }
 }

@@ -21,6 +21,7 @@
 //! was violated; the printed schedule seed replays the run exactly.
 
 use imka::config::json::{num, obj, s, Json};
+use imka::obsv::MetricsRegistry;
 use imka::testkit::{run_chaos, ChaosConfig, FaultSchedule};
 use imka::util::Timer;
 
@@ -137,6 +138,13 @@ fn main() {
             std::process::exit(1);
         }
     }
+    // invariant verdicts in Prometheus form, so scrapers (and CI greps)
+    // see the same numbers the JSON row carries
+    let registry = MetricsRegistry::new();
+    r.record_metrics(&registry);
+    println!("-- metrics exposition --");
+    print!("{}", registry.render());
+
     if !r.violations.is_empty() {
         eprintln!("invariants violated — replay with schedule seed {SEED:#x}");
         std::process::exit(1);

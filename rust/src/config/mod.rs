@@ -8,6 +8,7 @@ pub mod toml;
 
 pub use json::Json;
 pub use settings::{
-    AttentionConfig, AttnServeConfig, ChipConfig, Config, ControlConfig, FleetConfig, ServeConfig,
+    AttentionConfig, AttnServeConfig, ChipConfig, Config, ControlConfig, FleetConfig, ObsvConfig,
+    ServeConfig,
 };
 pub use toml::{TomlDoc, TomlValue};

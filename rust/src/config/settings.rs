@@ -413,6 +413,35 @@ pub struct AttentionConfig {
     pub serve: AttnServeConfig,
 }
 
+/// Observability knobs (`[obsv]` section): per-request trace sampling
+/// and the bounded span ring the `trace` TCP verb reads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsvConfig {
+    /// sample 1 in N request ids for a trace span; 0 disables tracing,
+    /// 1 traces every request
+    pub trace_sample_every: u64,
+    /// sampled spans kept in memory (older spans are overwritten)
+    pub trace_buffer: usize,
+}
+
+impl Default for ObsvConfig {
+    fn default() -> Self {
+        ObsvConfig { trace_sample_every: 8, trace_buffer: 256 }
+    }
+}
+
+impl ObsvConfig {
+    fn from_doc(doc: &TomlDoc) -> Self {
+        let d = ObsvConfig::default();
+        ObsvConfig {
+            trace_sample_every: doc
+                .usize_or("obsv.trace_sample_every", d.trace_sample_every as usize)
+                as u64,
+            trace_buffer: doc.usize_or("obsv.trace_buffer", d.trace_buffer).max(1),
+        }
+    }
+}
+
 /// Top-level configuration bundle.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Config {
@@ -420,6 +449,7 @@ pub struct Config {
     pub fleet: FleetConfig,
     pub serve: ServeConfig,
     pub attention: AttentionConfig,
+    pub obsv: ObsvConfig,
     /// artifacts directory (manifest.json, *.hlo.txt, weights)
     pub artifacts_dir: String,
 }
@@ -431,6 +461,7 @@ impl Default for Config {
             fleet: FleetConfig::default(),
             serve: ServeConfig::default(),
             attention: AttentionConfig::default(),
+            obsv: ObsvConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -501,6 +532,7 @@ impl Config {
             fleet: FleetConfig::from_doc(doc)?,
             serve: ServeConfig::from_doc(doc),
             attention: AttentionConfig { serve: AttnServeConfig::from_doc(doc)? },
+            obsv: ObsvConfig::from_doc(doc),
             artifacts_dir: doc.str_or("paths.artifacts", "artifacts").to_string(),
         };
         cfg.apply_env();
@@ -627,6 +659,13 @@ impl Config {
                     ]),
                 )]),
             ),
+            (
+                "obsv",
+                obj(vec![
+                    ("trace_sample_every", num(self.obsv.trace_sample_every as f64)),
+                    ("trace_buffer", num(self.obsv.trace_buffer as f64)),
+                ]),
+            ),
             ("paths", obj(vec![("artifacts", s(&self.artifacts_dir))])),
         ])
     }
@@ -684,6 +723,16 @@ impl Config {
             // typo cannot silently fall back to a different path later
             if valid_attn_path(&v) {
                 self.attention.serve.path = v;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_OBSV_TRACE_SAMPLE_EVERY") {
+            if let Ok(n) = v.parse() {
+                self.obsv.trace_sample_every = n;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_OBSV_TRACE_BUFFER") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.obsv.trace_buffer = n.max(1);
             }
         }
         if let Ok(v) = std::env::var("IMKA_ARTIFACTS_DIR") {
@@ -942,6 +991,7 @@ mod tests {
                  drain_cap = {}\n\
                  [attention.serve]\nheads = {}\nd_head = {}\nm = {}\nmax_sessions = {}\n\
                  path = \"{path}\"\nseed = {}\n\
+                 [obsv]\ntrace_sample_every = {}\ntrace_buffer = {}\n\
                  [paths]\nartifacts = \"art-{}\"\n",
                 g.int(1, 128),                // chip.cores
                 g.f64_in(0.001, 0.2),         // sigma_prog
@@ -978,6 +1028,8 @@ mod tests {
                 g.int(1, 256),                // attention m
                 g.int(1, 64),                 // max_sessions
                 g.int(0, i32::MAX as usize),  // seed
+                g.int(0, 64),                 // trace_sample_every
+                g.int(1, 1024),               // trace_buffer
                 g.int(0, 999),                // artifacts suffix
             );
             let a = Config::from_toml_str(&toml).expect("generated TOML must parse");
@@ -985,6 +1037,31 @@ mod tests {
                 .expect("emitted JSON must re-parse");
             a == b
         });
+    }
+
+    #[test]
+    fn obsv_defaults_and_toml_parse() {
+        let d = ObsvConfig::default();
+        assert_eq!(d.trace_sample_every, 8);
+        assert_eq!(d.trace_buffer, 256);
+
+        let cfg = Config::from_toml_str(
+            "[obsv]\ntrace_sample_every = 1\ntrace_buffer = 0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.obsv.trace_sample_every, 1);
+        // buffer is clamped to at least one span
+        assert_eq!(cfg.obsv.trace_buffer, 1);
+
+        let off = Config::from_toml_str("[obsv]\ntrace_sample_every = 0\n").unwrap();
+        assert_eq!(off.obsv.trace_sample_every, 0);
+
+        let json = Config::from_json_str(
+            r#"{"obsv":{"trace_sample_every":4,"trace_buffer":32}}"#,
+        )
+        .unwrap();
+        assert_eq!(json.obsv.trace_sample_every, 4);
+        assert_eq!(json.obsv.trace_buffer, 32);
     }
 
     #[test]

@@ -118,6 +118,7 @@ pub(crate) fn answer_shutdown(reqs: Vec<Request>) {
             latency_us,
             energy_uj: 0.0,
             batch_size: 0,
+            request_id: req.id,
         });
     }
 }
@@ -149,6 +150,9 @@ mod tests {
                 },
                 reply: tx,
                 enqueued: Instant::now(),
+                id: 0,
+                parse_us: 0.0,
+                trace: false,
             },
             rx,
         )

@@ -7,7 +7,7 @@
 //! PJRT only.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -17,7 +17,9 @@ use super::request::{
     ResponseBody,
 };
 use super::session::{AttnSessionInfo, SessionManager, SessionStatsSnapshot};
-use super::telemetry::{ChipSnapshot, FleetEventsSnapshot, LaneSnapshot, Telemetry};
+use super::telemetry::{
+    render_metrics, ChipSnapshot, FleetEventsSnapshot, LaneSnapshot, LiveGauges, Telemetry,
+};
 use super::tilepool::lane_omega;
 use crate::aimc::Emulator;
 use crate::config::Config;
@@ -26,6 +28,7 @@ use crate::error::{Error, Result};
 use crate::fleet::{ControlPlane, FleetPool, HealthState, RecalScheduler};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
+use crate::obsv::{MvmProfile, TraceRing, TraceSpan};
 use crate::runtime::{Input, ModelBundle, Registry};
 use crate::util::Rng;
 
@@ -52,22 +55,43 @@ struct Shared {
     /// the fleet)
     sessions: SessionManager,
     telemetry: Telemetry,
+    /// bounded ring of sampled per-request trace spans (`trace` verb)
+    trace: TraceRing,
+    /// engine-wide request-id source (Submitter clones share it)
+    ids: AtomicU64,
     seed_ctr: AtomicI32,
     classes: usize,
 }
 
 /// Handle for submitting requests (clone freely across threads).
+/// Assigns every request its engine-wide id and its trace-sampling
+/// decision at submission, so the id a caller gets back in the reply is
+/// enough to look up the span via the `trace` verb.
 #[derive(Clone)]
 pub struct Submitter {
     tx: mpsc::Sender<Request>,
+    shared: Arc<Shared>,
 }
 
 impl Submitter {
+    fn request(&self, body: RequestBody, parse_us: f64, reply: mpsc::SyncSender<Response>) -> Request {
+        let id = self.shared.ids.fetch_add(1, Ordering::Relaxed);
+        let trace = self.shared.trace.sampled(id);
+        Request { body, reply, enqueued: Instant::now(), id, parse_us, trace }
+    }
+
     /// Submit and wait for the reply (simple blocking client).
     pub fn call(&self, body: RequestBody) -> Result<Response> {
+        self.call_parsed(body, 0.0)
+    }
+
+    /// Like [`Submitter::call`] but records the caller-measured parse
+    /// time (µs) as the span's `parse` stage (the TCP server uses this).
+    pub fn call_parsed(&self, body: RequestBody, parse_us: f64) -> Result<Response> {
         let (reply, rx) = mpsc::sync_channel(1);
+        let req = self.request(body, parse_us, reply);
         self.tx
-            .send(Request { body, reply, enqueued: Instant::now() })
+            .send(req)
             .map_err(|_| Error::Coordinator("engine is shut down".into()))?;
         rx.recv()
             .map_err(|_| Error::Coordinator("engine dropped the request".into()))
@@ -76,8 +100,9 @@ impl Submitter {
     /// Fire-and-forget with caller-held reply channel (for load drivers).
     pub fn submit(&self, body: RequestBody) -> Result<mpsc::Receiver<Response>> {
         let (reply, rx) = mpsc::sync_channel(1);
+        let req = self.request(body, 0.0, reply);
         self.tx
-            .send(Request { body, reply, enqueued: Instant::now() })
+            .send(req)
             .map_err(|_| Error::Coordinator("engine is shut down".into()))?;
         Ok(rx)
     }
@@ -174,6 +199,8 @@ impl Engine {
             noisy_params,
             sessions: SessionManager::new(cfg.attention.serve.clone(), cfg.serve.replication),
             telemetry: Telemetry::default(),
+            trace: TraceRing::new(cfg.obsv.trace_buffer, cfg.obsv.trace_sample_every),
+            ids: AtomicU64::new(1),
             seed_ctr: AtomicI32::new(1),
             classes,
         });
@@ -341,7 +368,7 @@ impl Engine {
     }
 
     pub fn submitter(&self) -> Submitter {
-        Submitter { tx: self.ingress.clone() }
+        Submitter { tx: self.ingress.clone(), shared: self.shared.clone() }
     }
 
     pub fn telemetry(&self) -> &Telemetry {
@@ -450,6 +477,39 @@ impl StatsHandle {
         self.shared.pool.events()
     }
 
+    /// The full Prometheus-style text exposition (the `metrics` verb):
+    /// every registry series (lane counters/histograms, stage
+    /// histograms, bench counters) plus scrape-time fleet/chip/session/
+    /// trace gauges.
+    pub fn metrics_text(&self) -> String {
+        let (sampled, dropped) = self.shared.trace.counts();
+        let live = LiveGauges {
+            chips: self.shared.pool.chip_snapshots(),
+            events: self.shared.pool.events(),
+            n_chips: self.shared.pool.n_chips(),
+            total_slots: self.shared.pool.total_slots(),
+            cores_used: self.shared.pool.cores_used(),
+            utilization: self.shared.pool.utilization(),
+            inflight: self.shared.pool.total_queue_depth(),
+            control_enabled: self.shared.control_enabled,
+            sessions: Some(self.shared.sessions.snapshot()),
+            trace: Some((self.shared.trace.sample_every(), sampled, dropped)),
+        };
+        render_metrics(self.shared.telemetry.registry(), &live)
+    }
+
+    /// Newest-first sampled trace spans (the `trace` verb).
+    pub fn traces(&self, limit: usize) -> Vec<TraceSpan> {
+        self.shared.trace.latest(limit)
+    }
+
+    /// Trace-sampling counters: (sample_every, spans recorded, spans
+    /// overwritten by the ring cap).
+    pub fn trace_counts(&self) -> (u64, u64, u64) {
+        let (sampled, dropped) = self.shared.trace.counts();
+        (self.shared.trace.sample_every(), sampled, dropped)
+    }
+
     /// Mark a chip `Draining` (the `drain` TCP verb): traffic is steered
     /// to replicas on other chips while the chip stays programmed.
     pub fn drain_chip(&self, chip: usize) -> Result<HealthState> {
@@ -503,48 +563,117 @@ impl SessionsHandle {
 // batch is lane-homogeneous, so dispatch is a single match)
 // ---------------------------------------------------------------------------
 
+/// Per-batch stage breakdown, measured once and shared by every request
+/// in the batch: the executor's lock-wait and analog-MVM time come from
+/// the [`MvmProfile`] the fleet fan-out fills; everything else the
+/// executor spent (gather/validate, XLA artifacts, postprocessing) is
+/// the digital-combine stage.
+#[derive(Clone, Copy)]
+struct BatchStages {
+    lock_wait_us: f64,
+    analog_mvm_us: f64,
+    digital_combine_us: f64,
+}
+
 fn execute_batch(shared: &Shared, batch: Batch) {
     let n = batch.requests.len();
+    let exec_start = Instant::now();
+    let prof = MvmProfile::default();
     let result = match batch.lane {
-        Lane::Feature(kernel, path) => run_feature_batch(shared, kernel, path, &batch),
+        Lane::Feature(kernel, path) => run_feature_batch(shared, kernel, path, &batch, &prof),
         Lane::Performer(mode) => run_performer_batch(shared, mode, &batch),
-        Lane::Attention(session) => run_attention_batch(shared, session.0, &batch),
+        Lane::Attention(session) => run_attention_batch(shared, session.0, &batch, &prof),
     };
     let lane_key = batch.lane.telemetry_key();
+    let lane_label = batch.lane.label();
+    let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
+    let stages = BatchStages {
+        lock_wait_us: prof.lock_wait_us(),
+        analog_mvm_us: prof.mvm_us(),
+        digital_combine_us: (exec_us - prof.lock_wait_us() - prof.mvm_us()).max(0.0),
+    };
+    shared.telemetry.record_batch_stages(
+        stages.lock_wait_us,
+        stages.analog_mvm_us,
+        stages.digital_combine_us,
+    );
     match result {
         Ok((bodies, energy_uj)) => {
             debug_assert_eq!(bodies.len(), n);
             for (req, body) in batch.requests.into_iter().zip(bodies) {
-                let latency_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
-                shared.telemetry.record(
-                    lane_key,
-                    latency_us,
-                    n,
+                finish_request(
+                    shared,
+                    req,
+                    Ok(body),
                     energy_uj / n as f64,
-                    false,
+                    n,
+                    lane_key,
+                    &lane_label,
+                    exec_start,
+                    stages,
                 );
-                let _ = req.reply.send(Response {
-                    result: Ok(body),
-                    latency_us,
-                    energy_uj: energy_uj / n as f64,
-                    batch_size: n,
-                });
             }
         }
         Err(e) => {
             let msg = e.to_string();
             for req in batch.requests {
-                let latency_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
-                shared.telemetry.record(lane_key, latency_us, n, 0.0, true);
-                let _ = req.reply.send(Response {
-                    result: Err(Error::Coordinator(msg.clone())),
-                    latency_us,
-                    energy_uj: 0.0,
-                    batch_size: n,
-                });
+                finish_request(
+                    shared,
+                    req,
+                    Err(Error::Coordinator(msg.clone())),
+                    0.0,
+                    n,
+                    lane_key,
+                    &lane_label,
+                    exec_start,
+                    stages,
+                );
             }
         }
     }
+}
+
+/// Tail of every request: record telemetry + stages, push a trace span
+/// if the request id was sampled, send the reply.
+#[allow(clippy::too_many_arguments)]
+fn finish_request(
+    shared: &Shared,
+    req: Request,
+    result: Result<ResponseBody>,
+    energy_uj: f64,
+    batch_size: usize,
+    lane_key: Lane,
+    lane_label: &str,
+    exec_start: Instant,
+    stages: BatchStages,
+) {
+    let latency_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+    // saturates to 0 if the batch started before this request enqueued
+    let queue_us = exec_start.duration_since(req.enqueued).as_secs_f64() * 1e6;
+    let ok = result.is_ok();
+    shared.telemetry.record(lane_key, latency_us, batch_size, energy_uj, !ok);
+    shared.telemetry.record_request_stages(req.parse_us, queue_us);
+    if req.trace {
+        shared.trace.push(TraceSpan {
+            request_id: req.id,
+            lane: lane_label.to_string(),
+            batch: batch_size,
+            ok,
+            parse_us: req.parse_us,
+            queue_us,
+            lock_wait_us: stages.lock_wait_us,
+            analog_mvm_us: stages.analog_mvm_us,
+            digital_combine_us: stages.digital_combine_us,
+            total_us: latency_us,
+        });
+    }
+    let _ = req.reply.send(Response {
+        result,
+        latency_us,
+        energy_uj,
+        batch_size,
+        request_id: req.id,
+    });
 }
 
 /// Attention lane: stream the batch's tokens into the session in arrival
@@ -555,6 +684,7 @@ fn run_attention_batch(
     shared: &Shared,
     session: u64,
     batch: &Batch,
+    prof: &MvmProfile,
 ) -> Result<(Vec<ResponseBody>, f64)> {
     let mut items: Vec<(&[f32], &[f32], &[f32])> = Vec::with_capacity(batch.requests.len());
     for req in &batch.requests {
@@ -567,7 +697,7 @@ fn run_attention_batch(
     }
     let n = items.len();
     let session = shared.sessions.get(session)?;
-    let outs = shared.sessions.append_to(&shared.pool, &session, &items)?;
+    let outs = shared.sessions.append_to(&shared.pool, &session, &items, Some(prof))?;
 
     // modelled AIMC energy: on the analog path every token's q and k
     // project through each head's Ω lane on-chip
@@ -595,6 +725,7 @@ fn run_feature_batch(
     lane: KernelLane,
     path: PathLane,
     batch: &Batch,
+    prof: &MvmProfile,
 ) -> Result<(Vec<ResponseBody>, f64)> {
     let kernel = lane.kernel();
     let geo = shared
@@ -642,7 +773,7 @@ fn run_feature_batch(
         }
         PathLane::Analog => {
             // chip MVM (whole batch at once), then the digital half
-            let u = shared.pool.project(lane, &x)?;
+            let u = shared.pool.project_with(lane, &x, Some(prof))?;
             let z = match kernel {
                 Kernel::ArcCos0 => {
                     crate::features::postprocess(kernel, &u, None)

@@ -53,5 +53,7 @@ pub use request::{
 };
 pub use server::{Client, Server};
 pub use session::{AttnSessionInfo, SessionManager, SessionStatsSnapshot};
-pub use telemetry::{ChipSnapshot, FleetEventsSnapshot, LaneSnapshot, Telemetry};
+pub use telemetry::{
+    render_metrics, ChipSnapshot, FleetEventsSnapshot, LaneSnapshot, LiveGauges, Telemetry,
+};
 pub use tilepool::TilePool;

@@ -284,6 +284,9 @@ pub struct Response {
     pub energy_uj: f64,
     /// batch this request was served in
     pub batch_size: usize,
+    /// the id assigned at submission — echoed back so callers can
+    /// correlate replies with sampled trace spans (the `trace` verb)
+    pub request_id: u64,
 }
 
 /// An in-flight request.
@@ -291,6 +294,15 @@ pub struct Request {
     pub body: RequestBody,
     pub reply: mpsc::SyncSender<Response>,
     pub enqueued: Instant,
+    /// engine-wide monotonically increasing id, assigned by the
+    /// [`super::engine::Submitter`] and propagated server → batcher →
+    /// dispatcher → executor → reply
+    pub id: u64,
+    /// server-side parse time (µs); 0 for direct in-process submitters
+    pub parse_us: f64,
+    /// was this id selected for trace-span recording (decided once at
+    /// submission from the configured sampling rate)
+    pub trace: bool,
 }
 
 #[cfg(test)]

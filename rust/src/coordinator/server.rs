@@ -11,9 +11,17 @@
 //!   {"type":"stats"}   -> per-lane latency/energy + per-chip fleet stats
 //!                         + attention session counters
 //!   {"type":"health"}  -> per-chip health states + control-plane events
+//!   {"type":"metrics"} -> the full Prometheus-style text exposition,
+//!                         escaped into one JSON string field
+//!   {"type":"trace"[,"limit":N]} -> newest sampled per-request trace
+//!       spans with their stage breakdown + sampling counters
 //!   {"type":"drain","chip":N[,"undrain":true]} -> steer traffic off/on a chip
 //!   {"type":"ping"}
 //! Responses: {"ok":true, ...} | {"ok":false,"error":"..."}
+//!
+//! Data-plane replies (`features`/`performer`/`attn_append`) echo the
+//! engine-assigned `request_id`, which is the key to find that request's
+//! span in the `trace` output (when its id was sampled).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -138,14 +146,20 @@ fn handle_conn(
     }
 }
 
-/// Parse one request line, dispatch, serialize the reply.
+/// Parse one request line, dispatch, serialize the reply. The JSON parse
+/// is timed and attached to data-plane requests as their span's `parse`
+/// stage.
 pub fn handle_line(
     line: &str,
     sub: &Submitter,
     stats: &StatsHandle,
     sessions: &SessionsHandle,
 ) -> Json {
-    match parse_and_dispatch(line, sub, stats, sessions) {
+    let t_parse = std::time::Instant::now();
+    let parsed = Json::parse(line);
+    let parse_us = t_parse.elapsed().as_secs_f64() * 1e6;
+    let result = parsed.and_then(|req| dispatch(&req, parse_us, sub, stats, sessions));
+    match result {
         Ok(j) => j,
         Err(e) => obj(vec![("ok", Json::Bool(false)), ("error", s(&e.to_string()))]),
     }
@@ -176,6 +190,7 @@ fn stats_json(stats: &StatsHandle, sessions: &SessionsHandle) -> Json {
             ("queue_depth", num(c.queue_depth as f64)),
             ("busy_cores", num(c.busy_cores as f64)),
             ("core_utilization", num(c.core_utilization)),
+            ("core_oversubscription", num(c.core_oversubscription)),
             ("served", num(c.served as f64)),
             ("errors", num(c.errors as f64)),
             ("recals", num(c.recals as f64)),
@@ -221,6 +236,7 @@ fn health_json(stats: &StatsHandle) -> Json {
             ("queue_depth", num(c.queue_depth as f64)),
             ("busy_cores", num(c.busy_cores as f64)),
             ("core_utilization", num(c.core_utilization)),
+            ("core_oversubscription", num(c.core_oversubscription)),
             ("errors", num(c.errors as f64)),
             ("recals", num(c.recals as f64)),
             ("age_s", num(c.age_s)),
@@ -261,18 +277,47 @@ fn f32_array(req: &Json, key: &str) -> Result<Vec<f32>> {
         .collect()
 }
 
-fn parse_and_dispatch(
-    line: &str,
+fn dispatch(
+    req: &Json,
+    parse_us: f64,
     sub: &Submitter,
     stats: &StatsHandle,
     sessions: &SessionsHandle,
 ) -> Result<Json> {
-    let req = Json::parse(line)?;
     let ty = req.req_str("type")?;
     match ty {
         "ping" => Ok(obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
         "stats" => Ok(stats_json(stats, sessions)),
         "health" => Ok(health_json(stats)),
+        "metrics" => Ok(obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", s(&stats.metrics_text())),
+        ])),
+        "trace" => {
+            let limit = req.get("limit").and_then(|v| v.as_usize()).unwrap_or(16);
+            let (sample_every, sampled, dropped) = stats.trace_counts();
+            let spans = stats.traces(limit).into_iter().map(|sp| {
+                obj(vec![
+                    ("request_id", num(sp.request_id as f64)),
+                    ("lane", s(&sp.lane)),
+                    ("batch", num(sp.batch as f64)),
+                    ("ok", Json::Bool(sp.ok)),
+                    ("parse_us", num(sp.parse_us)),
+                    ("queue_us", num(sp.queue_us)),
+                    ("lock_wait_us", num(sp.lock_wait_us)),
+                    ("analog_mvm_us", num(sp.analog_mvm_us)),
+                    ("digital_combine_us", num(sp.digital_combine_us)),
+                    ("total_us", num(sp.total_us)),
+                ])
+            });
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("sample_every", num(sample_every as f64)),
+                ("sampled", num(sampled as f64)),
+                ("dropped", num(dropped as f64)),
+                ("spans", arr(spans)),
+            ]))
+        }
         "attn_open" => {
             let path = match req.get("path").and_then(|p| p.as_str()) {
                 Some(p) => Some(
@@ -292,10 +337,10 @@ fn parse_and_dispatch(
         }
         "attn_append" => {
             let session = req.req_usize("session")? as u64;
-            let q = f32_array(&req, "q")?;
-            let k = f32_array(&req, "k")?;
-            let v = f32_array(&req, "v")?;
-            let resp = sub.call(RequestBody::AttnAppend { session, q, k, v })?;
+            let q = f32_array(req, "q")?;
+            let k = f32_array(req, "k")?;
+            let v = f32_array(req, "v")?;
+            let resp = sub.call_parsed(RequestBody::AttnAppend { session, q, k, v }, parse_us)?;
             let body = resp.result?;
             match body {
                 ResponseBody::AttnOut { y, index } => Ok(obj(vec![
@@ -306,6 +351,7 @@ fn parse_and_dispatch(
                     ("latency_us", num(resp.latency_us)),
                     ("energy_uj", num(resp.energy_uj)),
                     ("batch", num(resp.batch_size as f64)),
+                    ("request_id", num(resp.request_id as f64)),
                 ])),
                 _ => Err(Error::Coordinator("unexpected body".into())),
             }
@@ -356,7 +402,7 @@ fn parse_and_dispatch(
                 .iter()
                 .filter_map(|v| v.as_f64().map(|f| f as f32))
                 .collect();
-            let resp = sub.call(RequestBody::Features { kernel, path, x })?;
+            let resp = sub.call_parsed(RequestBody::Features { kernel, path, x }, parse_us)?;
             let body = resp.result?;
             match body {
                 ResponseBody::Features(z) => Ok(obj(vec![
@@ -365,6 +411,7 @@ fn parse_and_dispatch(
                     ("latency_us", num(resp.latency_us)),
                     ("energy_uj", num(resp.energy_uj)),
                     ("batch", num(resp.batch_size as f64)),
+                    ("request_id", num(resp.request_id as f64)),
                 ])),
                 _ => Err(Error::Coordinator("unexpected body".into())),
             }
@@ -379,7 +426,7 @@ fn parse_and_dispatch(
                 .iter()
                 .filter_map(|v| v.as_f64().map(|f| f as i32))
                 .collect();
-            let resp = sub.call(RequestBody::Performer { mode, tokens })?;
+            let resp = sub.call_parsed(RequestBody::Performer { mode, tokens }, parse_us)?;
             let body = resp.result?;
             match body {
                 ResponseBody::Class { label, logits } => Ok(obj(vec![
@@ -389,6 +436,7 @@ fn parse_and_dispatch(
                     ("latency_us", num(resp.latency_us)),
                     ("energy_uj", num(resp.energy_uj)),
                     ("batch", num(resp.batch_size as f64)),
+                    ("request_id", num(resp.request_id as f64)),
                 ])),
                 _ => Err(Error::Coordinator("unexpected body".into())),
             }
@@ -479,6 +527,7 @@ mod tests {
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
         let label = resp.get("label").unwrap().as_usize().unwrap();
         assert_eq!(label, batch.labels[0]);
+        assert!(resp.get("request_id").unwrap().as_usize().unwrap() >= 1);
 
         // stats surfaces lanes + per-chip fleet counters
         let resp = client.call(&Json::parse(r#"{"type":"stats"}"#).unwrap()).unwrap();
@@ -521,6 +570,21 @@ mod tests {
             .call(&Json::parse(r#"{"type":"drain","chip":99}"#).unwrap())
             .unwrap();
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+
+        // metrics verb: Prometheus text escaped into one JSON string
+        let resp = client.call(&Json::parse(r#"{"type":"metrics"}"#).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let text = resp.get("metrics").unwrap().as_str().unwrap();
+        assert!(text.contains("imka_requests_total"));
+        assert!(text.contains("imka_chip_core_utilization"));
+        assert!(text.contains("imka_fleet_inflight"));
+
+        // trace verb: sampling counters + span array (shape only here;
+        // id propagation is pinned by the tests/attention_serve.rs suite)
+        let resp = client.call(&Json::parse(r#"{"type":"trace"}"#).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert!(resp.get("sample_every").is_some());
+        assert!(resp.get("spans").unwrap().as_arr().is_some());
 
         // unknown type -> clean error
         let resp = client.call(&Json::parse(r#"{"type":"wat"}"#).unwrap()).unwrap();

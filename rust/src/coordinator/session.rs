@@ -30,6 +30,7 @@ use crate::features::{sample_omega, Sampler};
 use crate::fleet::FleetPool;
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
+use crate::obsv::MvmProfile;
 use crate::util::Rng;
 
 /// Deterministic per-head Ω: the digital twin of the programmed analog
@@ -203,11 +204,18 @@ impl SessionManager {
 
     /// φ for a block of scaled inputs on the session's path. `xs` rows
     /// are already scaled by d_head^-1/4.
-    fn phi(&self, pool: &FleetPool, path: PathKind, head: usize, xs: &Mat) -> Result<Mat> {
+    fn phi(
+        &self,
+        pool: &FleetPool,
+        path: PathKind,
+        head: usize,
+        xs: &Mat,
+        profile: Option<&MvmProfile>,
+    ) -> Result<Mat> {
         match path {
             PathKind::Digital => Ok(positive_features(xs, &self.omegas[head])),
             PathKind::Analog => {
-                let u = pool.project(LaneId::AttnHead(head as u32), xs)?;
+                let u = pool.project_with(LaneId::AttnHead(head as u32), xs, profile)?;
                 Ok(postprocess(Kernel::Softmax, &u, Some(xs)))
             }
         }
@@ -222,7 +230,7 @@ impl SessionManager {
         items: &[(&[f32], &[f32], &[f32])],
     ) -> Result<Vec<(Vec<f32>, usize)>> {
         let session = self.get(id)?;
-        self.append_to(pool, &session, items)
+        self.append_to(pool, &session, items, None)
     }
 
     /// Stream a batch of tokens into one session, in order. Each item is
@@ -233,11 +241,16 @@ impl SessionManager {
     /// fleet call (q rows then k rows), so a batch of appends pays
     /// 2 × heads projection round-trips instead of 2 × heads × tokens —
     /// the batching payoff the lane-affinity batcher exists to harvest.
+    ///
+    /// `profile`, when given, accumulates the analog path's lock-wait
+    /// and on-chip matmul time across the per-head projections (for
+    /// trace spans and the bench's per-stage means).
     pub fn append_to(
         &self,
         pool: &FleetPool,
         session: &Session,
         items: &[(&[f32], &[f32], &[f32])],
+        profile: Option<&MvmProfile>,
     ) -> Result<Vec<(Vec<f32>, usize)>> {
         let (heads, d_head) = (self.cfg.heads, self.cfg.d_head);
         let dim = heads * d_head;
@@ -268,7 +281,7 @@ impl SessionManager {
                     *dst = src * scale;
                 }
             }
-            phis.push(self.phi(pool, session.path, h, &xs)?);
+            phis.push(self.phi(pool, session.path, h, &xs, profile)?);
         }
         // fold tokens into the running state in arrival order, answering
         // each with its post-absorb attention output

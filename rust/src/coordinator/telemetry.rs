@@ -1,25 +1,65 @@
-//! Serving telemetry: per-lane latency percentiles, batch-size stats,
-//! modelled energy totals.
+//! Serving telemetry: bounded, lock-free per-lane metrics plus the
+//! Prometheus-style exposition the `metrics` TCP verb serves.
+//!
+//! PR 2–6 kept one `Mutex<BTreeMap<Lane, Summary>>` here: every
+//! `record()` serialized all lanes on one lock and pushed into
+//! unbounded `Vec<f64>`s — a contention point and a slow memory leak on
+//! a long-running server. The rework stores everything in an
+//! [`obsv::MetricsRegistry`]:
+//!
+//! - per-lane counters (`imka_requests_total`, `imka_request_errors_total`,
+//!   `imka_lane_energy_uj_total`) and log-bucketed histograms
+//!   (`imka_lane_latency_us`, `imka_lane_batch_size`) — fixed memory per
+//!   lane, and the lane set is closed (attention sessions collapse onto
+//!   one row via [`Lane::telemetry_key`]);
+//! - per-stage histograms `imka_stage_us{stage=...}` for the request
+//!   breakdown (parse, queue, lock_wait, analog_mvm, digital_combine).
+//!
+//! The hot path (`record`) takes a shared read lock only to fetch the
+//! lane's `Arc` of handles (a write lock happens once per lane, on its
+//! first request) and then records through relaxed atomics — concurrent
+//! lanes, and concurrent requests of one lane, never serialize.
+//! The exact, unbounded [`crate::util::stats::Summary`] remains the
+//! right tool for offline experiments and benches with finite samples.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, RwLock};
 
 use super::request::Lane;
-use crate::util::Summary;
+use super::session::SessionStatsSnapshot;
+use crate::obsv::registry::{push_sample, Counter, MetricsRegistry};
+use crate::obsv::LogHistogram;
 
-#[derive(Default)]
-struct LaneStats {
-    latency_us: Summary,
-    batch_sizes: Summary,
-    requests: u64,
-    errors: u64,
-    energy_uj: f64,
+/// Per-lane metric handles, resolved once per lane then shared.
+struct LaneCells {
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    energy_uj: Arc<Counter>,
+    latency_us: Arc<LogHistogram>,
+    batch: Arc<LogHistogram>,
 }
 
-/// Thread-safe telemetry sink.
-#[derive(Default)]
+/// Per-stage latency histograms (shared across lanes; the stage label
+/// is the dimension).
+struct StageCells {
+    parse: Arc<LogHistogram>,
+    queue: Arc<LogHistogram>,
+    lock_wait: Arc<LogHistogram>,
+    analog_mvm: Arc<LogHistogram>,
+    digital_combine: Arc<LogHistogram>,
+}
+
+/// Thread-safe telemetry sink; see module docs.
 pub struct Telemetry {
-    inner: Mutex<BTreeMap<Lane, LaneStats>>,
+    registry: Arc<MetricsRegistry>,
+    lanes: RwLock<BTreeMap<Lane, Arc<LaneCells>>>,
+    stages: StageCells,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
 }
 
 /// Per-chip fleet counters surfaced in the server's `stats` response
@@ -45,10 +85,14 @@ pub struct ChipSnapshot {
     /// reads of the same physical cores), so the sum can transiently
     /// exceed the chip's core count under heavy same-replica load.
     pub busy_cores: usize,
-    /// busy_cores / this chip's capacity — live core utilization of the
-    /// core-parallel MVM path ([0,1] except under the same-replica
-    /// overlap noted on `busy_cores`)
+    /// busy_cores / this chip's capacity, clamped to [0,1]; the
+    /// same-replica overlap beyond capacity is reported separately in
+    /// `core_oversubscription` instead of as a >100% utilization
     pub core_utilization: f64,
+    /// overlap beyond capacity: max(busy_cores / capacity - 1, 0) — a
+    /// nonzero value means concurrent MVMs were round-robined onto the
+    /// same replica and are queueing on its physical cores
+    pub core_oversubscription: f64,
     /// analog MVMs completed by this chip
     pub served: u64,
     /// failed MVMs/heartbeat probes on this chip since boot
@@ -89,38 +133,253 @@ pub struct LaneSnapshot {
 }
 
 impl Telemetry {
-    pub fn record(&self, lane: Lane, latency_us: f64, batch: usize, energy_uj: f64, err: bool) {
-        let mut inner = self.inner.lock().unwrap();
-        let s = inner.entry(lane).or_default();
-        s.latency_us.push(latency_us);
-        s.batch_sizes.push(batch as f64);
-        s.requests += 1;
-        if err {
-            s.errors += 1;
+    pub fn new() -> Telemetry {
+        let registry = Arc::new(MetricsRegistry::new());
+        let stage = |name: &str| {
+            registry.histogram(
+                "imka_stage_us",
+                "per-stage request latency breakdown (parse, queue, lock_wait, \
+                 analog_mvm, digital_combine)",
+                &[("stage", name)],
+                LogHistogram::latency_us,
+            )
+        };
+        let stages = StageCells {
+            parse: stage("parse"),
+            queue: stage("queue"),
+            lock_wait: stage("lock_wait"),
+            analog_mvm: stage("analog_mvm"),
+            digital_combine: stage("digital_combine"),
+        };
+        Telemetry { registry, lanes: RwLock::new(BTreeMap::new()), stages }
+    }
+
+    /// The registry every cell lives in (rendered by the `metrics` verb
+    /// and reusable by benches for their own counters).
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    fn lane_cells(&self, lane: Lane) -> Arc<LaneCells> {
+        if let Some(cells) = self.lanes.read().unwrap().get(&lane) {
+            return cells.clone();
         }
-        s.energy_uj += energy_uj;
+        let mut lanes = self.lanes.write().unwrap();
+        lanes
+            .entry(lane)
+            .or_insert_with(|| {
+                let label = lane.label();
+                let l: &[(&str, &str)] = &[("lane", label.as_str())];
+                Arc::new(LaneCells {
+                    requests: self.registry.counter(
+                        "imka_requests_total",
+                        "requests served per lane",
+                        l,
+                    ),
+                    errors: self.registry.counter(
+                        "imka_request_errors_total",
+                        "requests answered with an error per lane",
+                        l,
+                    ),
+                    energy_uj: self.registry.counter(
+                        "imka_lane_energy_uj_total",
+                        "modelled AIMC energy of the analog portion, microjoules",
+                        l,
+                    ),
+                    latency_us: self.registry.histogram(
+                        "imka_lane_latency_us",
+                        "end-to-end request latency (enqueue to reply)",
+                        l,
+                        LogHistogram::latency_us,
+                    ),
+                    batch: self.registry.histogram(
+                        "imka_lane_batch_size",
+                        "executed batch sizes per lane",
+                        l,
+                        LogHistogram::small_counts,
+                    ),
+                })
+            })
+            .clone()
+    }
+
+    /// Record one served request (hot path: read-lock + atomics only).
+    pub fn record(&self, lane: Lane, latency_us: f64, batch: usize, energy_uj: f64, err: bool) {
+        let cells = self.lane_cells(lane);
+        cells.requests.inc();
+        if err {
+            cells.errors.inc();
+        }
+        cells.energy_uj.add(energy_uj.max(0.0));
+        cells.latency_us.record(latency_us);
+        cells.batch.record(batch as f64);
+    }
+
+    /// Record the per-request stages (zero/negative samples are skipped
+    /// — e.g. in-process submitters have no parse stage).
+    pub fn record_request_stages(&self, parse_us: f64, queue_us: f64) {
+        if parse_us > 0.0 {
+            self.stages.parse.record(parse_us);
+        }
+        if queue_us > 0.0 {
+            self.stages.queue.record(queue_us);
+        }
+    }
+
+    /// Record the per-batch stages measured by an executor (digital
+    /// lanes have no lock-wait/MVM stage and skip those samples).
+    pub fn record_batch_stages(&self, lock_wait_us: f64, analog_mvm_us: f64, combine_us: f64) {
+        if lock_wait_us > 0.0 {
+            self.stages.lock_wait.record(lock_wait_us);
+        }
+        if analog_mvm_us > 0.0 {
+            self.stages.analog_mvm.record(analog_mvm_us);
+        }
+        if combine_us > 0.0 {
+            self.stages.digital_combine.record(combine_us);
+        }
     }
 
     pub fn snapshot(&self) -> Vec<LaneSnapshot> {
-        let inner = self.inner.lock().unwrap();
-        inner
+        let lanes = self.lanes.read().unwrap();
+        lanes
             .iter()
-            .map(|(lane, s)| LaneSnapshot {
+            .map(|(lane, c)| LaneSnapshot {
                 lane: *lane,
-                requests: s.requests,
-                errors: s.errors,
-                p50_us: s.latency_us.p50(),
-                p95_us: s.latency_us.p95(),
-                p99_us: s.latency_us.p99(),
-                mean_batch: s.batch_sizes.mean(),
-                energy_uj: s.energy_uj,
+                requests: c.requests.get() as u64,
+                errors: c.errors.get() as u64,
+                p50_us: c.latency_us.p50(),
+                p95_us: c.latency_us.p95(),
+                p99_us: c.latency_us.p99(),
+                mean_batch: c.batch.mean(),
+                energy_uj: c.energy_uj.get(),
             })
             .collect()
     }
 
     pub fn total_requests(&self) -> u64 {
-        self.inner.lock().unwrap().values().map(|s| s.requests).sum()
+        let lanes = self.lanes.read().unwrap();
+        lanes.values().map(|c| c.requests.get() as u64).sum()
     }
+}
+
+/// Live (scrape-time) gauges that complement the registry in the
+/// `metrics` exposition: fleet totals, per-chip counters, control-plane
+/// events, attention sessions, trace-sampling counters.
+#[derive(Default)]
+pub struct LiveGauges {
+    pub chips: Vec<ChipSnapshot>,
+    pub events: FleetEventsSnapshot,
+    pub n_chips: usize,
+    pub total_slots: usize,
+    pub cores_used: usize,
+    pub utilization: f64,
+    pub inflight: usize,
+    pub control_enabled: bool,
+    pub sessions: Option<SessionStatsSnapshot>,
+    /// (sample_every, spans sampled, spans dropped by the ring cap)
+    pub trace: Option<(u64, u64, u64)>,
+}
+
+/// Render the full Prometheus-style text exposition: everything in
+/// `registry` (lane + stage series) followed by the live gauges. The
+/// `metrics` TCP verb returns exactly this text; `bench_attention_serve`
+/// prints it in its smoke mode so CI can grep the gauge names.
+pub fn render_metrics(registry: &MetricsRegistry, live: &LiveGauges) -> String {
+    let mut out = registry.render();
+
+    let gauge = |out: &mut String, name: &str, help: &str, v: f64| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+        push_sample(out, name, &[], &[], v);
+    };
+    gauge(&mut out, "imka_fleet_chips", "active (non-evicted) chips", live.n_chips as f64);
+    gauge(
+        &mut out,
+        "imka_fleet_slots",
+        "slots ever created, including evicted tombstones",
+        live.total_slots as f64,
+    );
+    gauge(&mut out, "imka_fleet_cores_used", "crossbar cores programmed fleet-wide", live.cores_used as f64);
+    gauge(&mut out, "imka_fleet_utilization", "programmed cores / fleet capacity", live.utilization);
+    gauge(
+        &mut out,
+        "imka_fleet_inflight",
+        "analog MVMs in flight fleet-wide (sum of per-chip queue depths)",
+        live.inflight as f64,
+    );
+    gauge(
+        &mut out,
+        "imka_fleet_control_enabled",
+        "1 when the background control-plane loop is running",
+        if live.control_enabled { 1.0 } else { 0.0 },
+    );
+
+    // control-plane event counters
+    let counter = |out: &mut String, name: &str, help: &str, v: f64| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+        push_sample(out, name, &[], &[], v);
+    };
+    counter(&mut out, "imka_fleet_evictions_total", "chips evicted", live.events.evictions as f64);
+    counter(&mut out, "imka_fleet_scale_ups_total", "autoscaler scale-ups", live.events.scale_ups as f64);
+    counter(
+        &mut out,
+        "imka_fleet_scale_downs_total",
+        "autoscaler scale-downs",
+        live.events.scale_downs as f64,
+    );
+    counter(&mut out, "imka_fleet_drains_total", "manual drains honored", live.events.drains as f64);
+
+    // per-chip gauges/counters, one family block each
+    let per_chip = |out: &mut String, name: &str, help: &str, kind: &str, f: &dyn Fn(&ChipSnapshot) -> f64| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        for c in &live.chips {
+            let chip = c.chip.to_string();
+            push_sample(out, name, &[], &[("chip", chip.as_str())], f(c));
+        }
+    };
+    per_chip(&mut out, "imka_chip_queue_depth", "MVMs queued on or executing against this chip", "gauge", &|c| c.queue_depth as f64);
+    per_chip(&mut out, "imka_chip_busy_cores", "cores currently executing an MVM", "gauge", &|c| c.busy_cores as f64);
+    per_chip(&mut out, "imka_chip_core_utilization", "busy cores / capacity, clamped to [0,1]", "gauge", &|c| c.core_utilization);
+    per_chip(
+        &mut out,
+        "imka_chip_core_oversubscription",
+        "same-replica overlap beyond core capacity (fraction of capacity)",
+        "gauge",
+        &|c| c.core_oversubscription,
+    );
+    per_chip(&mut out, "imka_chip_cores_used", "cores programmed on this chip", "gauge", &|c| c.cores_used as f64);
+    per_chip(&mut out, "imka_chip_utilization", "programmed cores / capacity", "gauge", &|c| c.utilization);
+    per_chip(&mut out, "imka_chip_served_total", "analog MVMs completed", "counter", &|c| c.served as f64);
+    per_chip(&mut out, "imka_chip_errors_total", "failed MVMs/heartbeat probes", "counter", &|c| c.errors as f64);
+    per_chip(&mut out, "imka_chip_recals_total", "recalibration cycles", "counter", &|c| c.recals as f64);
+    per_chip(&mut out, "imka_chip_age_s", "fleet-clock seconds since last (re)programming", "gauge", &|c| c.age_s);
+    per_chip(&mut out, "imka_chip_drift_err_estimate", "analytic drift-error estimate at current age", "gauge", &|c| c.drift_err_estimate);
+    out.push_str(
+        "# HELP imka_chip_health 1 for the chip's current control-plane state\n\
+         # TYPE imka_chip_health gauge\n",
+    );
+    for c in &live.chips {
+        let chip = c.chip.to_string();
+        push_sample(&mut out, "imka_chip_health", &[], &[("chip", chip.as_str()), ("state", c.health)], 1.0);
+    }
+
+    if let Some(s) = &live.sessions {
+        gauge(&mut out, "imka_attn_sessions_active", "streaming attention sessions open", s.active as f64);
+        counter(&mut out, "imka_attn_sessions_opened_total", "sessions opened since boot", s.opened as f64);
+        counter(&mut out, "imka_attn_sessions_closed_total", "sessions closed since boot", s.closed as f64);
+        counter(&mut out, "imka_attn_tokens_total", "tokens streamed across all sessions", s.tokens as f64);
+    }
+    if let Some((every, sampled, dropped)) = live.trace {
+        gauge(
+            &mut out,
+            "imka_trace_sample_every",
+            "trace sampling rate (1 in N requests; 0 disables)",
+            every as f64,
+        );
+        counter(&mut out, "imka_trace_sampled_total", "trace spans recorded", sampled as f64);
+        counter(&mut out, "imka_trace_dropped_total", "trace spans overwritten by the ring cap", dropped as f64);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -141,8 +400,122 @@ mod tests {
         assert_eq!(s.requests, 10);
         assert_eq!(s.errors, 1);
         assert!((s.mean_batch - 4.0).abs() < 1e-9);
-        assert!(s.p50_us >= 100.0 && s.p99_us <= 109.0 + 1e-9);
+        // histogram quantiles are approximate within the bucket growth
+        // factor (±~10%), unlike the exact Summary they replaced
+        assert!(s.p50_us >= 90.0 && s.p50_us <= 120.0, "p50 {}", s.p50_us);
+        assert!(s.p99_us >= 90.0 && s.p99_us <= 125.0, "p99 {}", s.p99_us);
         assert!((s.energy_uj - 5.0).abs() < 1e-9);
         assert_eq!(t.total_requests(), 10);
+    }
+
+    #[test]
+    fn memory_is_bounded_per_lane() {
+        // 100k requests must not grow per-lane state (the PR 2-6 sink
+        // pushed every latency into a Vec)
+        let t = Telemetry::new();
+        let lane = Lane::Feature(KernelLane::Softmax, PathLane::Digital);
+        for i in 0..100_000u64 {
+            t.record(lane, (i % 1000) as f64 + 1.0, 8, 0.0, false);
+        }
+        assert_eq!(t.total_requests(), 100_000);
+        let s = &t.snapshot()[0];
+        assert!(s.p50_us.is_finite() && s.p99_us.is_finite());
+        assert_eq!(t.lanes.read().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn concurrent_lanes_do_not_serialize_or_lose_counts() {
+        use std::sync::Arc;
+        let t = Arc::new(Telemetry::new());
+        let lanes = [
+            Lane::Feature(KernelLane::Rbf, PathLane::Analog),
+            Lane::Feature(KernelLane::Rbf, PathLane::Digital),
+            Lane::Feature(KernelLane::ArcCos0, PathLane::Analog),
+            Lane::Performer(crate::coordinator::request::ModeLane::Fp32),
+        ];
+        let threads: Vec<_> = lanes
+            .iter()
+            .map(|&lane| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for i in 0..2000 {
+                        t.record(lane, 50.0 + (i % 100) as f64, 2, 0.1, false);
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(t.total_requests(), 8000);
+        assert_eq!(t.snapshot().len(), 4);
+    }
+
+    #[test]
+    fn exposition_golden_shape() {
+        let t = Telemetry::new();
+        t.record(Lane::Feature(KernelLane::Rbf, PathLane::Analog), 120.0, 4, 0.5, false);
+        t.record_request_stages(3.0, 40.0);
+        t.record_batch_stages(1.5, 60.0, 15.0);
+        let live = LiveGauges {
+            chips: vec![ChipSnapshot {
+                chip: 0,
+                health: "healthy",
+                cores_used: 4,
+                utilization: 0.5,
+                queue_depth: 2,
+                busy_cores: 3,
+                core_utilization: 0.375,
+                core_oversubscription: 0.0,
+                served: 11,
+                errors: 0,
+                recals: 1,
+                age_s: 9.5,
+                drift_err_estimate: 0.01,
+            }],
+            events: FleetEventsSnapshot { evictions: 1, scale_ups: 2, scale_downs: 0, drains: 3 },
+            n_chips: 1,
+            total_slots: 2,
+            cores_used: 4,
+            utilization: 0.5,
+            inflight: 2,
+            control_enabled: true,
+            sessions: Some(SessionStatsSnapshot { active: 1, opened: 2, closed: 1, tokens: 64 }),
+            trace: Some((8, 5, 0)),
+        };
+        let text = render_metrics(t.registry(), &live);
+
+        for needle in [
+            "# TYPE imka_lane_latency_us histogram",
+            "imka_lane_latency_us_count{lane=\"feature_rbf_analog\"} 1",
+            "imka_lane_batch_size_sum{lane=\"feature_rbf_analog\"} 4",
+            "imka_requests_total{lane=\"feature_rbf_analog\"} 1",
+            "imka_lane_energy_uj_total{lane=\"feature_rbf_analog\"} 0.5",
+            "imka_stage_us_count{stage=\"queue\"} 1",
+            "imka_stage_us_count{stage=\"analog_mvm\"} 1",
+            "# TYPE imka_fleet_inflight gauge",
+            "imka_fleet_inflight 2",
+            "imka_fleet_chips 1",
+            "imka_fleet_control_enabled 1",
+            "imka_fleet_evictions_total 1",
+            "imka_fleet_drains_total 3",
+            "imka_chip_queue_depth{chip=\"0\"} 2",
+            "imka_chip_busy_cores{chip=\"0\"} 3",
+            "imka_chip_core_utilization{chip=\"0\"} 0.375",
+            "imka_chip_core_oversubscription{chip=\"0\"} 0",
+            "imka_chip_served_total{chip=\"0\"} 11",
+            "imka_chip_health{chip=\"0\",state=\"healthy\"} 1",
+            "imka_attn_sessions_active 1",
+            "imka_attn_tokens_total 64",
+            "imka_trace_sample_every 8",
+            "imka_trace_sampled_total 5",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // every non-comment line is `name{...} value` with a numeric value
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, val) = line.rsplit_once(' ').unwrap();
+            assert!(val.parse::<f64>().is_ok(), "bad exposition line: {line}");
+        }
     }
 }

@@ -40,6 +40,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
 
 use super::control::HealthState;
 use super::placement::{ChipCapacity, LanePlan, Planner, ShardPlan};
@@ -52,6 +53,7 @@ use crate::coordinator::request::LaneId;
 use crate::coordinator::telemetry::{ChipSnapshot, FleetEventsSnapshot};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::obsv::MvmProfile;
 use crate::util::threads::parallel_map;
 
 /// One programmed Ω lane — a kernel feature lane or an attention head's
@@ -577,6 +579,19 @@ impl FleetPool {
     /// since MVMs only hold the chip's read lock — retry surviving
     /// replicas if a chip errors, and concatenate the column ranges.
     pub fn project(&self, lane: impl Into<LaneId>, x: &Mat) -> Result<Mat> {
+        self.project_with(lane, x, None)
+    }
+
+    /// [`FleetPool::project`] with optional stage profiling: when
+    /// `profile` is given, read-lock wait and on-chip matmul time are
+    /// accumulated into it (summed across the shard fan-out), feeding
+    /// the per-request trace spans' lock_wait/analog_mvm stages.
+    pub fn project_with(
+        &self,
+        lane: impl Into<LaneId>,
+        x: &Mat,
+        profile: Option<&MvmProfile>,
+    ) -> Result<Mat> {
         let lane = lane.into();
         let mapping = self.mapping(lane)?;
         if x.cols != mapping.d {
@@ -591,10 +606,10 @@ impl FleetPool {
         // wide sharded lanes at single-chip latency)
         let results: Vec<Result<Mat>> = if shards.len() > 1 {
             parallel_map(shards.len(), |s| {
-                self.project_shard(&slots, lane, s, &shards[s], &mapping, x)
+                self.project_shard(&slots, lane, s, &shards[s], &mapping, x, profile)
             })
         } else {
-            vec![self.project_shard(&slots, lane, 0, &shards[0], &mapping, x)]
+            vec![self.project_shard(&slots, lane, 0, &shards[0], &mapping, x, profile)]
         };
         let mut out = Mat::zeros(x.rows, mapping.m);
         for (s, res) in results.into_iter().enumerate() {
@@ -611,6 +626,7 @@ impl FleetPool {
     /// `Degraded`, then `Draining` as a last resort; `Joining`/`Evicted`
     /// replicas are never used. Every failed attempt bumps the chip's
     /// error counter for the health monitor.
+    #[allow(clippy::too_many_arguments)]
     fn project_shard(
         &self,
         slots: &[Arc<ChipSlot>],
@@ -619,6 +635,7 @@ impl FleetPool {
         shard: &ShardPlan,
         mapping: &LaneMapping,
         x: &Mat,
+        profile: Option<&MvmProfile>,
     ) -> Result<Mat> {
         let handle = MatrixHandle(shard_name(lane, s));
         // core footprint of this shard's MVM (pure geometry — no chip
@@ -662,9 +679,17 @@ impl FleetPool {
                     // bumped after the lock is held — an MVM queued
                     // behind a recal write lock shows up in inflight
                     // (queue depth) but not in core utilization
+                    let t_lock = Instant::now();
                     let chip = slot.chip.read().unwrap();
+                    if let Some(p) = profile {
+                        p.add_lock_wait(t_lock.elapsed());
+                    }
                     slot.busy_cores.fetch_add(shard_tiles, Ordering::Relaxed);
+                    let t_mvm = Instant::now();
                     let r = chip.matmul(&handle, x);
+                    if let Some(p) = profile {
+                        p.add_mvm(t_mvm.elapsed());
+                    }
                     slot.busy_cores.fetch_sub(shard_tiles, Ordering::Relaxed);
                     r
                 };
@@ -1266,6 +1291,11 @@ impl FleetPool {
                 let cores_used = slot.cores.load(Ordering::Relaxed);
                 let busy_cores = slot.busy_cores.load(Ordering::Relaxed);
                 let age_s = self.chip_age(i);
+                // busy/capacity can transiently exceed 1.0 when the
+                // round-robin lands concurrent MVMs on one replica (see
+                // ChipSnapshot::busy_cores); report utilization clamped
+                // and the excess as a separate oversubscription gauge
+                let busy_frac = busy_cores as f64 / slot.capacity.cores.max(1) as f64;
                 ChipSnapshot {
                     chip: i,
                     health: slot.health().as_str(),
@@ -1273,7 +1303,8 @@ impl FleetPool {
                     utilization: cores_used as f64 / slot.capacity.cores.max(1) as f64,
                     queue_depth: slot.inflight.load(Ordering::Relaxed),
                     busy_cores,
-                    core_utilization: busy_cores as f64 / slot.capacity.cores.max(1) as f64,
+                    core_utilization: busy_frac.min(1.0),
+                    core_oversubscription: (busy_frac - 1.0).max(0.0),
                     served: slot.served.load(Ordering::Relaxed),
                     errors: slot.errors.load(Ordering::Relaxed),
                     recals: slot.recals.load(Ordering::Relaxed),

@@ -36,6 +36,7 @@ pub mod fleet;
 pub mod kernels;
 pub mod linalg;
 pub mod npy;
+pub mod obsv;
 pub mod ridge;
 pub mod runtime;
 pub mod testkit;

@@ -93,6 +93,9 @@ SUBCOMMANDS
                                rewrites) drained per control tick
       --chip-cores LIST        per-chip core counts for heterogeneous
                                fleets, e.g. 64,32,64
+      --trace-sample-every N   record a trace span for 1 in N requests
+                               (0 = off, 1 = every request; default 8)
+      --trace-buffer N         sampled spans kept for the trace verb
   experiment <id>              regenerate a paper table/figure:
       fig2a fig2b fig3b table1 supp20 supp21 supp8 supp-table2
       redraw ablate-relu ablate-replication ablate-noise all
@@ -171,6 +174,9 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
             })
             .collect::<Result<Vec<_>>>()?;
     }
+    cfg.obsv.trace_sample_every =
+        args.usize_or("trace-sample-every", cfg.obsv.trace_sample_every as usize)? as u64;
+    cfg.obsv.trace_buffer = args.usize_or("trace-buffer", cfg.obsv.trace_buffer)?.max(1);
 
     println!("booting engine (artifacts: {})...", cfg.artifacts_dir);
     let engine = Engine::start(&cfg)?;
@@ -190,6 +196,12 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
             "attention serving: {} heads x d_head {} x m {} (default path {}, \
              up to {} sessions)",
             a.heads, a.d_head, a.m, a.path, a.max_sessions
+        );
+    }
+    if cfg.obsv.trace_sample_every > 0 {
+        println!(
+            "tracing: 1 in {} requests sampled, newest {} spans kept (trace verb)",
+            cfg.obsv.trace_sample_every, cfg.obsv.trace_buffer
         );
     }
     if cfg.fleet.recal_interval_s > 0.0 {

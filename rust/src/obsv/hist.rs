@@ -1,0 +1,375 @@
+//! Fixed-bucket log-scaled histogram with lock-free recording.
+//!
+//! HDR-style: bucket boundaries grow geometrically between a fixed
+//! `lo` and `hi`, so relative quantile error is bounded by the bucket
+//! growth factor while memory stays constant no matter how many samples
+//! are recorded — this is what replaces the unbounded `util::stats::
+//! Summary` vectors on the serving telemetry path. Recording is a
+//! handful of relaxed atomic ops (no locks, no allocation), and two
+//! histograms with identical geometry merge bucket-wise, so per-thread
+//! instances can be combined after a run.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Add `x` to an `AtomicU64` holding `f64` bits (CAS loop).
+fn f64_add(cell: &AtomicU64, x: f64) {
+    let _ = cell.fetch_update(Relaxed, Relaxed, |bits| {
+        Some((f64::from_bits(bits) + x).to_bits())
+    });
+}
+
+/// Lower `cell` (f64 bits) to `min(current, x)`.
+fn f64_min(cell: &AtomicU64, x: f64) {
+    let _ = cell.fetch_update(Relaxed, Relaxed, |bits| {
+        let cur = f64::from_bits(bits);
+        if x < cur { Some(x.to_bits()) } else { None }
+    });
+}
+
+/// Raise `cell` (f64 bits) to `max(current, x)`.
+fn f64_max(cell: &AtomicU64, x: f64) {
+    let _ = cell.fetch_update(Relaxed, Relaxed, |bits| {
+        let cur = f64::from_bits(bits);
+        if x > cur { Some(x.to_bits()) } else { None }
+    });
+}
+
+/// Log-bucketed histogram over `(0, +inf)` with fixed memory.
+///
+/// Layout: bucket `0` is the underflow bin (`x < lo`), buckets
+/// `1..=n` are geometric bins covering `[lo, hi)`, bucket `n + 1` is
+/// the overflow bin (`x >= hi`). Quantiles are reported at the
+/// geometric midpoint of the selected bin (clamped to the observed
+/// min/max), so the worst-case relative error is about `sqrt(g) - 1`
+/// where `g = (hi/lo)^(1/n)` is the per-bucket growth factor.
+pub struct LogHistogram {
+    lo: f64,
+    growth: f64,
+    inv_log_g: f64,
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl LogHistogram {
+    /// `n` geometric buckets spanning `[lo, hi)`, plus under/overflow.
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 1, "bad histogram geometry");
+        let growth = (hi / lo).powf(1.0 / n as f64);
+        let buckets = (0..n + 2).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        LogHistogram {
+            lo,
+            growth,
+            inv_log_g: 1.0 / growth.ln(),
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    /// Default geometry for microsecond latencies: 0.5 µs .. ~537 s in
+    /// 240 buckets (growth 2^(1/8), ≈4.4% worst-case quantile error),
+    /// ~2 KB fixed.
+    pub fn latency_us() -> Self {
+        LogHistogram::new(0.5, 0.5 * 2f64.powi(30), 240)
+    }
+
+    /// Geometry for small positive integers (batch sizes, shard
+    /// counts): 1 .. 1024 in 80 buckets.
+    pub fn small_counts() -> Self {
+        LogHistogram::new(1.0, 1024.0, 80)
+    }
+
+    fn n(&self) -> usize {
+        self.buckets.len() - 2
+    }
+
+    fn index_of(&self, x: f64) -> usize {
+        if x < self.lo {
+            return 0;
+        }
+        let i = ((x / self.lo).ln() * self.inv_log_g).floor();
+        if i < 0.0 {
+            return 0;
+        }
+        let i = i as usize;
+        if i >= self.n() {
+            self.n() + 1
+        } else {
+            1 + i
+        }
+    }
+
+    /// Upper bound of bucket slot `b` (1-based geometric bins).
+    fn upper_bound(&self, b: usize) -> f64 {
+        self.lo * self.growth.powi(b as i32)
+    }
+
+    /// Record one observation. Non-finite samples are dropped.
+    pub fn record(&self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.buckets[self.index_of(x)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        f64_add(&self.sum_bits, x);
+        f64_min(&self.min_bits, x);
+        f64_max(&self.max_bits, x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Relaxed))
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum() / n as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        f64::from_bits(self.min_bits.load(Relaxed))
+    }
+
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Relaxed))
+    }
+
+    /// Quantile estimate; `q` in [0, 100]. NaN when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 100.0) / 100.0 * (total - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (slot, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Relaxed);
+            if cum > target {
+                let rep = if slot == 0 {
+                    self.min().min(self.lo)
+                } else if slot == self.n() + 1 {
+                    self.max()
+                } else {
+                    // geometric midpoint of [lo·g^(slot-1), lo·g^slot)
+                    self.upper_bound(slot) / self.growth.sqrt()
+                };
+                return rep.clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// True when `other` was built with identical geometry.
+    pub fn same_geometry(&self, other: &Self) -> bool {
+        self.lo == other.lo
+            && self.growth == other.growth
+            && self.buckets.len() == other.buckets.len()
+    }
+
+    /// Fold `other` into `self` bucket-wise (same geometry required).
+    pub fn merge_from(&self, other: &Self) {
+        assert!(self.same_geometry(other), "histogram geometry mismatch");
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            a.fetch_add(b.load(Relaxed), Relaxed);
+        }
+        self.count.fetch_add(other.count(), Relaxed);
+        f64_add(&self.sum_bits, other.sum());
+        f64_min(&self.min_bits, other.min());
+        f64_max(&self.max_bits, other.max());
+    }
+
+    /// Raw per-bucket counts (underflow, geometric bins, overflow).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Relaxed)).collect()
+    }
+
+    /// Cumulative `(le, count)` pairs for Prometheus exposition,
+    /// decimated to at most `max_lines` boundaries (the `+Inf` line is
+    /// the caller's, with `count()` as its value).
+    pub fn prom_buckets(&self, max_lines: usize) -> Vec<(f64, u64)> {
+        let n = self.n();
+        let stride = n.div_ceil(max_lines.max(1));
+        let mut out = Vec::new();
+        let mut cum = self.buckets[0].load(Relaxed);
+        let mut since_emit = 0usize;
+        for b in 1..=n {
+            cum += self.buckets[b].load(Relaxed);
+            since_emit += 1;
+            if since_emit >= stride || b == n {
+                out.push((self.upper_bound(b), cum));
+                since_emit = 0;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::Summary;
+
+    #[test]
+    fn empty_is_nan() {
+        let h = LogHistogram::latency_us();
+        assert_eq!(h.count(), 0);
+        assert!(h.p50().is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn exact_sum_and_extremes() {
+        let h = LogHistogram::latency_us();
+        for x in [3.0, 700.0, 12.5, 90000.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 90715.5).abs() < 1e-9);
+        assert_eq!(h.min(), 3.0);
+        assert_eq!(h.max(), 90000.0);
+        // non-finite samples are dropped, not corrupting sums
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn under_and_overflow_bins() {
+        let h = LogHistogram::new(1.0, 1024.0, 10);
+        h.record(0.01); // underflow
+        h.record(5000.0); // overflow
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[counts.len() - 1], 1);
+        // quantiles clamp to observed extremes
+        assert_eq!(h.percentile(0.0), 0.01);
+        assert_eq!(h.percentile(100.0), 5000.0);
+    }
+
+    #[test]
+    fn bounded_memory() {
+        let h = LogHistogram::latency_us();
+        let before = h.bucket_counts().len();
+        for i in 0..50_000 {
+            h.record(1.0 + (i % 977) as f64);
+        }
+        assert_eq!(h.bucket_counts().len(), before);
+        assert_eq!(h.count(), 50_000);
+    }
+
+    #[test]
+    fn prop_percentile_tracks_exact_summary() {
+        // worst-case relative quantile error is ~sqrt(g)-1; allow a
+        // full bucket width (g-1) plus slack for rank rounding.
+        check("obsv-hist-percentile-accuracy", 40, |g: &mut Gen| {
+            let n = g.int(50, 400);
+            let h = LogHistogram::latency_us();
+            let mut exact = Summary::new();
+            for _ in 0..n {
+                let x = g.f64_in(1.0, 5.0e5);
+                h.record(x);
+                exact.push(x);
+            }
+            let growth = 2f64.powf(1.0 / 8.0);
+            let tol = 2.0 * (growth - 1.0);
+            [50.0, 95.0, 99.0].iter().all(|&q| {
+                let approx = h.percentile(q);
+                let truth = exact.percentile(q);
+                (approx - truth).abs() <= tol * truth.abs() + 1e-9
+            })
+        });
+    }
+
+    #[test]
+    fn prop_merge_equals_concatenation() {
+        check("obsv-hist-merge", 40, |g: &mut Gen| {
+            let (na, nb) = (g.int(1, 200), g.int(1, 200));
+            let (a, b, both) = (
+                LogHistogram::latency_us(),
+                LogHistogram::latency_us(),
+                LogHistogram::latency_us(),
+            );
+            for _ in 0..na {
+                let x = g.f64_in(0.1, 1.0e7);
+                a.record(x);
+                both.record(x);
+            }
+            for _ in 0..nb {
+                let x = g.f64_in(0.1, 1.0e7);
+                b.record(x);
+                both.record(x);
+            }
+            a.merge_from(&b);
+            a.bucket_counts() == both.bucket_counts()
+                && a.count() == both.count()
+                && (a.sum() - both.sum()).abs() <= 1e-6 * both.sum().abs()
+                && a.min() == both.min()
+                && a.max() == both.max()
+        });
+    }
+
+    #[test]
+    fn prom_buckets_are_cumulative_and_bounded() {
+        let h = LogHistogram::latency_us();
+        for i in 0..1000 {
+            h.record(1.0 + i as f64);
+        }
+        let lines = h.prom_buckets(16);
+        assert!(lines.len() <= 16);
+        let mut prev_le = 0.0;
+        let mut prev_c = 0;
+        for &(le, c) in &lines {
+            assert!(le > prev_le);
+            assert!(c >= prev_c);
+            prev_le = le;
+            prev_c = c;
+        }
+        // every finite sample here lands below the last boundary
+        assert_eq!(lines.last().unwrap().1, 1000);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        use std::sync::Arc;
+        let h = Arc::new(LogHistogram::latency_us());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..5000 {
+                        h.record(1.0 + ((t * 5000 + i) % 313) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 20_000);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 20_000);
+    }
+}

@@ -1,0 +1,34 @@
+//! Observability primitives for the serving stack.
+//!
+//! Three building blocks, all bounded-memory and safe to hammer from
+//! the hot path:
+//!
+//! - [`hist::LogHistogram`] — fixed-bucket log-scaled latency histogram
+//!   (HDR-style). Recording is pure atomics, memory is fixed at
+//!   construction, and two histograms with the same geometry merge
+//!   bucket-wise, so per-thread histograms can be combined after a run.
+//! - [`registry::MetricsRegistry`] — a small metric registry of named
+//!   counter/gauge/histogram families with label dimensions
+//!   (`lane="..."`, `chip="..."`, tenant-ready). Registration is rare
+//!   and takes a write lock; recording goes through `Arc` handles and
+//!   never touches the registry, so concurrent lanes never serialize.
+//!   [`registry::MetricsRegistry::render`] emits Prometheus-style text
+//!   exposition of everything registered.
+//! - [`trace::TraceRing`] — a bounded ring of per-request
+//!   [`trace::TraceSpan`]s with a per-stage latency breakdown (parse,
+//!   queue wait, lock wait, analog MVM, digital combine), sampled by
+//!   request id at a configurable rate and queryable via the server's
+//!   `trace` verb.
+//!
+//! The serving integration (per-lane rows, fleet gauges, the `metrics`
+//! TCP verb) lives in `coordinator::telemetry`; this module has no
+//! knowledge of lanes, chips or sessions and is reusable by benches and
+//! the chaos harness.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use registry::{Counter, Gauge, MetricsRegistry};
+pub use trace::{MvmProfile, TraceRing, TraceSpan};

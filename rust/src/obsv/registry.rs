@@ -1,0 +1,368 @@
+//! Lock-free metrics registry with Prometheus-style text exposition.
+//!
+//! A registry is a set of metric *families* (one name + help + type),
+//! each holding one metric per label set (`lane="rbf"`, `chip="3"`,
+//! `tenant="..."` — any dimensions the caller wants). Registration is
+//! get-or-create and takes the registry write lock, but it happens once
+//! per (family, label set); recording goes through the returned `Arc`
+//! handle and is pure atomics, so the hot path never serializes on the
+//! registry no matter how many threads record concurrently.
+//!
+//! [`MetricsRegistry::render`] produces Prometheus text format
+//! (`# HELP` / `# TYPE` headers, `name{labels} value` samples,
+//! histogram `_bucket`/`_sum`/`_count` series), deterministically
+//! ordered so golden-shape tests can pin the output.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, RwLock};
+
+use super::hist::LogHistogram;
+
+/// Monotonic float counter (Prometheus counters may be fractional,
+/// e.g. modelled energy in µJ).
+#[derive(Default)]
+pub struct Counter {
+    bits: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1.0);
+    }
+
+    pub fn add(&self, x: f64) {
+        debug_assert!(x >= 0.0, "counters only go up");
+        let _ = self.bits.fetch_update(Relaxed, Relaxed, |b| {
+            Some((f64::from_bits(b) + x).to_bits())
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Relaxed))
+    }
+}
+
+/// Settable float gauge.
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Relaxed);
+    }
+
+    pub fn add(&self, x: f64) {
+        let _ = self.bits.fetch_update(Relaxed, Relaxed, |b| {
+            Some((f64::from_bits(b) + x).to_bits())
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Relaxed))
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Handle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<LogHistogram>),
+}
+
+type LabelSet = Vec<(String, String)>;
+
+struct Family {
+    help: String,
+    kind: Kind,
+    metrics: BTreeMap<LabelSet, Handle>,
+}
+
+/// Registry of metric families; see module docs.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    families: RwLock<BTreeMap<String, Family>>,
+}
+
+fn own_labels(labels: &[(&str, &str)]) -> LabelSet {
+    let mut v: LabelSet = labels
+        .iter()
+        .map(|(k, val)| (k.to_string(), val.to_string()))
+        .collect();
+    v.sort();
+    v
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        && !name.starts_with(|c: char| c.is_ascii_digit())
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        build: impl FnOnce() -> Handle,
+    ) -> Handle {
+        debug_assert!(valid_name(name), "bad metric name {name:?}");
+        let key = own_labels(labels);
+        if let Some(fam) = self.families.read().unwrap().get(name) {
+            assert!(
+                fam.kind == kind,
+                "metric {name} kind mismatch: registered as {} then as {}",
+                fam.kind.as_str(),
+                kind.as_str()
+            );
+            if let Some(h) = fam.metrics.get(&key) {
+                return h.clone();
+            }
+        }
+        let mut fams = self.families.write().unwrap();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            metrics: BTreeMap::new(),
+        });
+        assert!(fam.kind == kind, "metric {name} kind mismatch");
+        fam.metrics.entry(key).or_insert_with(build).clone()
+    }
+
+    /// Get or register a counter in family `name` for `labels`.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.get_or_insert(name, help, Kind::Counter, labels, || {
+            Handle::Counter(Arc::new(Counter::default()))
+        }) {
+            Handle::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get or register a gauge in family `name` for `labels`.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.get_or_insert(name, help, Kind::Gauge, labels, || {
+            Handle::Gauge(Arc::new(Gauge::default()))
+        }) {
+            Handle::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get or register a histogram; `build` supplies the geometry on
+    /// first registration (ignored afterwards).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        build: impl FnOnce() -> LogHistogram,
+    ) -> Arc<LogHistogram> {
+        match self.get_or_insert(name, help, Kind::Histogram, labels, || {
+            Handle::Hist(Arc::new(build()))
+        }) {
+            Handle::Hist(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Prometheus text exposition of every registered family, sorted by
+    /// family name then label set.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let fams = self.families.read().unwrap();
+        for (name, fam) in fams.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind.as_str());
+            for (labels, handle) in fam.metrics.iter() {
+                match handle {
+                    Handle::Counter(c) => {
+                        push_sample(&mut out, name, labels, &[], c.get());
+                    }
+                    Handle::Gauge(g) => {
+                        push_sample(&mut out, name, labels, &[], g.get());
+                    }
+                    Handle::Hist(h) => {
+                        let bucket = format!("{name}_bucket");
+                        for (le, cum) in h.prom_buckets(16) {
+                            push_sample(
+                                &mut out,
+                                &bucket,
+                                labels,
+                                &[("le", &fmt_value(le))],
+                                cum as f64,
+                            );
+                        }
+                        push_sample(&mut out, &bucket, labels, &[("le", "+Inf")], h.count() as f64);
+                        push_sample(&mut out, &format!("{name}_sum"), labels, &[], h.sum());
+                        push_sample(&mut out, &format!("{name}_count"), labels, &[], h.count() as f64);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Format a sample value: integral values render without a fraction.
+pub fn fmt_value(v: f64) -> String {
+    if v.is_finite() && v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn push_escaped(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Append one `name{labels} value` exposition line. `extra` label pairs
+/// (e.g. `le`) are appended after the metric's own sorted labels. Also
+/// used by `coordinator::telemetry` to render live fleet gauges into
+/// the same text format.
+pub fn push_sample(
+    out: &mut String,
+    name: &str,
+    labels: &[(String, String)],
+    extra: &[(&str, &str)],
+    value: f64,
+) {
+    out.push_str(name);
+    if !labels.is_empty() || !extra.is_empty() {
+        out.push('{');
+        let mut first = true;
+        for (k, v) in labels
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .chain(extra.iter().copied())
+        {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(k);
+            out.push_str("=\"");
+            push_escaped(out, v);
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_value(value));
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_per_label_set() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("imka_requests_total", "reqs", &[("lane", "rbf")]);
+        let b = r.counter("imka_requests_total", "reqs", &[("lane", "rbf")]);
+        let c = r.counter("imka_requests_total", "reqs", &[("lane", "softmax")]);
+        a.inc();
+        b.add(2.0);
+        c.inc();
+        assert_eq!(a.get(), 3.0);
+        assert_eq!(c.get(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "kind mismatch")]
+    fn kind_conflicts_panic() {
+        let r = MetricsRegistry::new();
+        let _ = r.counter("imka_x", "x", &[]);
+        let _ = r.gauge("imka_x", "x", &[]);
+    }
+
+    #[test]
+    fn render_golden_shape() {
+        let r = MetricsRegistry::new();
+        r.counter("imka_requests_total", "requests served", &[("lane", "rbf")])
+            .add(7.0);
+        r.gauge("imka_fleet_inflight", "in-flight MVMs", &[]).set(3.0);
+        let h = r.histogram(
+            "imka_lane_latency_us",
+            "request latency",
+            &[("lane", "rbf")],
+            LogHistogram::latency_us,
+        );
+        for x in [10.0, 20.0, 40.0] {
+            h.record(x);
+        }
+        let text = r.render();
+        let lines: Vec<&str> = text.lines().collect();
+
+        // families sorted by name, each with HELP+TYPE headers
+        assert_eq!(lines[0], "# HELP imka_fleet_inflight in-flight MVMs");
+        assert_eq!(lines[1], "# TYPE imka_fleet_inflight gauge");
+        assert_eq!(lines[2], "imka_fleet_inflight 3");
+        assert!(text.contains("# TYPE imka_lane_latency_us histogram"));
+        assert!(text.contains("# TYPE imka_requests_total counter"));
+        assert!(text.contains("imka_requests_total{lane=\"rbf\"} 7"));
+
+        // histogram series: cumulative buckets end at +Inf == count
+        let inf = "imka_lane_latency_us_bucket{lane=\"rbf\",le=\"+Inf\"} 3";
+        assert!(text.contains(inf), "missing +Inf bucket:\n{text}");
+        assert!(text.contains("imka_lane_latency_us_count{lane=\"rbf\"} 3"));
+        assert!(text.contains("imka_lane_latency_us_sum{lane=\"rbf\"} 70"));
+        let bucket_lines: Vec<&str> = lines
+            .iter()
+            .filter(|l| l.starts_with("imka_lane_latency_us_bucket"))
+            .copied()
+            .collect();
+        assert!(bucket_lines.len() >= 2);
+        assert_eq!(*bucket_lines.last().unwrap(), inf);
+
+        // every non-comment line parses as `name{...} value`
+        for l in lines.iter().filter(|l| !l.starts_with('#')) {
+            let (_, val) = l.rsplit_once(' ').unwrap();
+            assert!(val == "+Inf" || val.parse::<f64>().is_ok(), "bad line {l}");
+        }
+    }
+
+    #[test]
+    fn label_values_escape() {
+        let r = MetricsRegistry::new();
+        r.gauge("imka_g", "g", &[("tag", "a\"b\\c\nd")]).set(1.0);
+        assert!(r.render().contains("tag=\"a\\\"b\\\\c\\nd\""));
+    }
+}

@@ -1,0 +1,184 @@
+//! Per-request trace spans: bounded ring buffer + stage profiling.
+//!
+//! Every request entering the serving stack gets a monotonically
+//! increasing request id at submission. Ids where
+//! `id % sample_every == 0` are *sampled*: the engine records a
+//! [`TraceSpan`] with the per-stage latency breakdown (parse, queue
+//! wait, lock wait, analog MVM, digital combine) into the
+//! [`TraceRing`] when the request completes. The ring holds the last
+//! `cap` spans — memory is bounded; older spans are overwritten and
+//! counted as dropped. The server's `trace` verb drains the newest
+//! spans as JSON.
+//!
+//! [`MvmProfile`] is the accumulator `FleetPool::project_with` fills
+//! while shards fan out over threads: read-lock wait vs. analog matmul
+//! time, summed across shards/tiles as atomic nanoseconds.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One sampled request with its per-stage breakdown (µs).
+///
+/// `parse_us` and `queue_us` are per-request; the lock/MVM/combine
+/// stages are measured once per executed batch and shared by every
+/// request in it (`batch` says how many that was).
+#[derive(Clone, Debug, Default)]
+pub struct TraceSpan {
+    pub request_id: u64,
+    /// telemetry lane label, e.g. `feature_rbf_analog`
+    pub lane: String,
+    /// size of the batch this request executed in
+    pub batch: usize,
+    pub ok: bool,
+    /// server-side request parsing (0 for direct in-process submitters)
+    pub parse_us: f64,
+    /// enqueue → batch execution start
+    pub queue_us: f64,
+    /// waiting on chip read locks inside the fleet fan-out
+    pub lock_wait_us: f64,
+    /// analog matmul time on-chip
+    pub analog_mvm_us: f64,
+    /// digital pre/post-processing around the analog portion
+    pub digital_combine_us: f64,
+    /// enqueue → reply, the end-to-end latency telemetry records
+    pub total_us: f64,
+}
+
+/// Bounded ring of sampled spans; see module docs.
+pub struct TraceRing {
+    cap: usize,
+    sample_every: u64,
+    spans: Mutex<VecDeque<TraceSpan>>,
+    sampled: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    /// `sample_every == 0` disables sampling entirely; `1` samples
+    /// every request. `cap` is clamped to at least 1.
+    pub fn new(cap: usize, sample_every: u64) -> Self {
+        TraceRing {
+            cap: cap.max(1),
+            sample_every,
+            spans: Mutex::new(VecDeque::new()),
+            sampled: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Does this request id get a span? Deterministic in the id, so a
+    /// caller can tell from a reply id whether to expect a span.
+    pub fn sampled(&self, request_id: u64) -> bool {
+        self.sample_every != 0 && request_id % self.sample_every == 0
+    }
+
+    /// Record a span (call only for sampled ids; cheap Mutex push on
+    /// the 1-in-N sampled path, never on unsampled requests).
+    pub fn push(&self, span: TraceSpan) {
+        let mut spans = self.spans.lock().unwrap();
+        if spans.len() == self.cap {
+            spans.pop_front();
+            self.dropped.fetch_add(1, Relaxed);
+        }
+        spans.push_back(span);
+        self.sampled.fetch_add(1, Relaxed);
+    }
+
+    /// Newest-first snapshot of up to `limit` spans.
+    pub fn latest(&self, limit: usize) -> Vec<TraceSpan> {
+        let spans = self.spans.lock().unwrap();
+        spans.iter().rev().take(limit).cloned().collect()
+    }
+
+    /// (spans ever sampled, spans overwritten by the ring cap)
+    pub fn counts(&self) -> (u64, u64) {
+        (self.sampled.load(Relaxed), self.dropped.load(Relaxed))
+    }
+}
+
+/// Lock-wait / analog-MVM time accumulator for one `project` call,
+/// shared by the parallel shard fan-out (atomic nanoseconds).
+#[derive(Default)]
+pub struct MvmProfile {
+    lock_wait_ns: AtomicU64,
+    mvm_ns: AtomicU64,
+}
+
+impl MvmProfile {
+    pub fn add_lock_wait(&self, d: Duration) {
+        self.lock_wait_ns.fetch_add(d.as_nanos() as u64, Relaxed);
+    }
+
+    pub fn add_mvm(&self, d: Duration) {
+        self.mvm_ns.fetch_add(d.as_nanos() as u64, Relaxed);
+    }
+
+    pub fn lock_wait_us(&self) -> f64 {
+        self.lock_wait_ns.load(Relaxed) as f64 / 1_000.0
+    }
+
+    pub fn mvm_us(&self) -> f64 {
+        self.mvm_ns.load(Relaxed) as f64 / 1_000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_in_id() {
+        let r = TraceRing::new(8, 4);
+        assert!(r.sampled(0) && r.sampled(4) && r.sampled(8));
+        assert!(!r.sampled(1) && !r.sampled(7));
+        let all = TraceRing::new(8, 1);
+        assert!(all.sampled(0) && all.sampled(1) && all.sampled(2));
+        let off = TraceRing::new(8, 0);
+        assert!(!off.sampled(0) && !off.sampled(1));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_newest_first() {
+        let r = TraceRing::new(3, 1);
+        for id in 0..5u64 {
+            r.push(TraceSpan { request_id: id, ..TraceSpan::default() });
+        }
+        let spans = r.latest(10);
+        assert_eq!(
+            spans.iter().map(|s| s.request_id).collect::<Vec<_>>(),
+            vec![4, 3, 2]
+        );
+        let (sampled, dropped) = r.counts();
+        assert_eq!(sampled, 5);
+        assert_eq!(dropped, 2);
+        assert_eq!(r.latest(1).len(), 1);
+    }
+
+    #[test]
+    fn mvm_profile_accumulates_across_threads() {
+        use std::sync::Arc;
+        let p = Arc::new(MvmProfile::default());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let p = Arc::clone(&p);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        p.add_lock_wait(Duration::from_micros(2));
+                        p.add_mvm(Duration::from_micros(5));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!((p.lock_wait_us() - 800.0).abs() < 1e-9);
+        assert!((p.mvm_us() - 2000.0).abs() < 1e-9);
+    }
+}

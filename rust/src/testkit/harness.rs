@@ -82,6 +82,39 @@ pub struct ChaosReport {
 }
 
 impl ChaosReport {
+    /// Record the run's invariant verdicts and event totals into a
+    /// metrics registry, so chaos outcomes ride the same Prometheus
+    /// exposition as serving telemetry (`bench_chaos` feeds its registry
+    /// through `coordinator::render_metrics`).
+    pub fn record_metrics(&self, registry: &crate::obsv::MetricsRegistry) {
+        let count = |name: &str, help: &str, v: f64| {
+            registry.counter(name, help, &[]).add(v);
+        };
+        count(
+            "imka_chaos_invariant_violations_total",
+            "invariants violated across chaos runs",
+            self.violations.len() as f64,
+        );
+        count(
+            "imka_chaos_runs_total",
+            "chaos runs folded into this registry",
+            1.0,
+        );
+        count(
+            "imka_chaos_runs_green_total",
+            "chaos runs that finished with zero violations",
+            if self.violations.is_empty() { 1.0 } else { 0.0 },
+        );
+        count("imka_chaos_faults_total", "chip faults injected", self.events.faults as f64);
+        count("imka_chaos_evictions_total", "chips evicted by the control plane", self.events.evictions as f64);
+        count("imka_chaos_recals_total", "recalibrations during chaos", self.events.recals as f64);
+        count(
+            "imka_chaos_feature_errors_total",
+            "feature requests answered with a typed error",
+            self.feature_err as f64,
+        );
+    }
+
     /// Panic if any invariant was violated, printing the schedule seed
     /// so the run replays exactly (the `util::prop` contract).
     pub fn assert_green(&self) {

@@ -1,7 +1,17 @@
-//! Summary statistics and error metrics shared by experiments, telemetry
-//! and the bench harness.
+//! Summary statistics and error metrics shared by experiments and the
+//! bench harness.
+//!
+//! `Summary` keeps every sample (exact percentiles, unbounded memory),
+//! which is the right trade for *finite* offline runs — experiments,
+//! calibration sweeps, bench reports. Long-running serving telemetry
+//! must NOT accumulate into it: use the fixed-memory
+//! `obsv::LogHistogram` there (bounded buckets, lock-free recording,
+//! mergeable across threads), which is what `coordinator::telemetry`
+//! records into.
 
 /// Running summary of a sample (mean/std/min/max/percentiles).
+/// Stores all pushed values — intended for finite offline sample sets,
+/// not for unbounded serving-path recording (see module docs).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     values: Vec<f64>,

@@ -581,3 +581,102 @@ fn attn_open_past_max_sessions_is_refused_then_recovers() {
     assert_eq!(open.get("ok"), Some(&Json::Bool(true)), "{open:?}");
     server.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// observability over live TCP: request-id propagation into trace spans,
+// and the Prometheus exposition behind the `metrics` verb
+// ---------------------------------------------------------------------------
+
+/// With `trace_sample_every = 1`, every data-plane reply's `request_id`
+/// must resolve to a span in the `trace` output, and the span's stage
+/// breakdown must show the request actually crossed the analog fleet
+/// (non-zero MVM time, stages bounded by the total). The `metrics` verb
+/// must return the full exposition including fleet/chip/lane families.
+#[test]
+fn request_ids_propagate_into_trace_spans_and_metrics_expose() {
+    let mut cfg = mini_config();
+    cfg.obsv.trace_sample_every = 1; // sample every request
+    cfg.obsv.trace_buffer = 64;
+    let acfg = cfg.attention.serve.clone();
+    let engine = Engine::start(&cfg).unwrap();
+    let server = Server::start(engine, &cfg.serve.bind).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // one analog feature request — crosses FleetPool::project
+    let x: Vec<String> = (0..16).map(|i| format!("{}", (i as f64 - 8.0) / 8.0)).collect();
+    let req = format!(
+        r#"{{"type":"features","kernel":"arccos0","path":"analog","x":[{}]}}"#,
+        x.join(",")
+    );
+    let feat = client.call(&Json::parse(&req).unwrap()).unwrap();
+    assert_eq!(feat.get("ok"), Some(&Json::Bool(true)), "{feat:?}");
+    let feat_id = feat.get("request_id").unwrap().as_usize().unwrap();
+    assert!(feat_id >= 1, "engine request ids start at 1");
+
+    // one analog attention append — crosses the session fan-out
+    let open = client
+        .call(&Json::parse(r#"{"type":"attn_open","path":"analog"}"#).unwrap())
+        .unwrap();
+    assert_eq!(open.get("ok"), Some(&Json::Bool(true)), "{open:?}");
+    let session = open.get("session").unwrap().as_usize().unwrap();
+    let dim = acfg.heads * acfg.d_head;
+    let qkv = vec!["0.1"; dim].join(",");
+    let append = client
+        .call(
+            &Json::parse(&format!(
+                r#"{{"type":"attn_append","session":{session},"q":[{qkv}],"k":[{qkv}],"v":[{qkv}]}}"#
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(append.get("ok"), Some(&Json::Bool(true)), "{append:?}");
+    let append_id = append.get("request_id").unwrap().as_usize().unwrap();
+    assert_ne!(append_id, feat_id, "each request gets a fresh id");
+
+    // both ids must appear in the trace ring with sane stage breakdowns
+    let tr = client.call(&Json::parse(r#"{"type":"trace","limit":32}"#).unwrap()).unwrap();
+    assert_eq!(tr.get("ok"), Some(&Json::Bool(true)), "{tr:?}");
+    assert_eq!(tr.get("sample_every").unwrap().as_usize(), Some(1));
+    assert!(tr.get("sampled").unwrap().as_usize().unwrap() >= 2);
+    let spans = tr.get("spans").unwrap().as_arr().unwrap();
+    for id in [feat_id, append_id] {
+        let span = spans
+            .iter()
+            .find(|sp| sp.get("request_id").and_then(|v| v.as_usize()) == Some(id))
+            .unwrap_or_else(|| panic!("request {id} missing from trace: {spans:?}"));
+        assert_eq!(span.get("ok"), Some(&Json::Bool(true)), "{span:?}");
+        let f = |key: &str| span.get(key).unwrap().as_f64().unwrap();
+        let total = f("total_us");
+        assert!(total > 0.0, "{span:?}");
+        // parse happens before enqueue, so it is outside total_us
+        assert!(f("parse_us") >= 0.0, "{span:?}");
+        for stage in ["queue_us", "lock_wait_us", "analog_mvm_us", "digital_combine_us"] {
+            let v = f(stage);
+            assert!(v >= 0.0 && v <= total + 1.0, "{stage} out of range: {span:?}");
+        }
+        // the analog path really ran on the emulated chips
+        assert!(f("analog_mvm_us") > 0.0, "{span:?}");
+        assert!(span.get("lane").and_then(|l| l.as_str()).is_some(), "{span:?}");
+    }
+
+    // the exposition behind the `metrics` verb carries the core families
+    let m = client.call(&Json::parse(r#"{"type":"metrics"}"#).unwrap()).unwrap();
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)), "{m:?}");
+    let text = m.get("metrics").unwrap().as_str().unwrap().to_string();
+    for family in [
+        "imka_requests_total",
+        "imka_lane_latency_us",
+        "imka_stage_us",
+        "imka_fleet_inflight",
+        "imka_chip_core_utilization",
+        "imka_chip_core_oversubscription",
+        "imka_attn_sessions_active",
+        "imka_trace_sampled_total",
+    ] {
+        assert!(text.contains(family), "exposition missing {family}:\n{text}");
+    }
+    // sampled-every-request config round-trips into the exposition
+    assert!(text.contains("imka_trace_sample_every 1"), "{text}");
+
+    server.shutdown();
+}

@@ -27,9 +27,29 @@ IMKA_BENCH_FLEET_SMOKE=1 cargo bench --bench bench_fleet
 
 # streaming-attention smoke: both projection paths of the session layer
 # (fp32 + analog over the fleet router), including the final-token
-# rel-err check against offline favor_attention — artifact-free
+# rel-err check against offline favor_attention — artifact-free. The
+# gate is the freshly-emitted BENCH_serve.json (per-connection
+# throughput, append-latency percentiles, per-stage means) plus the
+# metrics exposition tail, which must carry the core fleet gauges.
 echo "== bench_attention_serve smoke (fp32 + analog sessions) =="
-IMKA_BENCH_ATTN_SMOKE=1 cargo bench --bench bench_attention_serve
+rm -f BENCH_serve.json
+serve_log="$(mktemp)"
+IMKA_BENCH_ATTN_SMOKE=1 cargo bench --bench bench_attention_serve | tee "$serve_log"
+if [ ! -f BENCH_serve.json ]; then
+    echo "serve smoke: BENCH_serve.json was not emitted" >&2
+    exit 1
+fi
+if ! grep -q '"paths_with_zero_throughput":0' BENCH_serve.json; then
+    echo "serve smoke: a projection path reported zero tokens/s" >&2
+    exit 1
+fi
+for gauge in imka_chip_core_utilization imka_fleet_inflight imka_lane_latency_us; do
+    if ! grep -q "$gauge" "$serve_log"; then
+        echo "serve smoke: metrics exposition is missing $gauge" >&2
+        exit 1
+    fi
+done
+rm -f "$serve_log"
 
 # chaos/soak smoke: a seed-replayable fault schedule (kill + flicker
 # faults, drains, drift jumps, programming failures, autoscale surge)
