@@ -7,7 +7,10 @@
 //! the real `ControlPlane::tick` loop, and checks fleet-wide invariants
 //! after every step. Reports throughput before / during / after the
 //! backbone kill window, request latency percentiles, worst-case
-//! accuracy vs the digital twin, control-plane event counts, and the
+//! accuracy vs the digital twin, control-plane event counts, the
+//! accuracy-canary / SLO-alert outcome (the drift jump must fire the
+//! alert, recal must resolve it — the exposition's final
+//! `imka_alert_state` gauges are what `ci.sh` gates on), and the
 //! invariant-violation count (the acceptance number: must be 0).
 //!
 //! Run: cargo bench --bench bench_chaos
@@ -89,6 +92,16 @@ fn main() {
          proj {:.4} -> worst {:.4}   attn worst {:.4}",
         r.gram_baseline, r.gram_worst, r.gram_final, r.proj_baseline, r.proj_worst, r.attn_rel_worst
     );
+    println!(
+        "canary: baseline {:.4} -> worst {:.4} (slo {:.4})   \
+         accuracy alerts fired {}, firing at exit {}, journal {} events",
+        r.canary_baseline,
+        r.canary_worst,
+        r.canary_slo,
+        r.accuracy_alerts_fired,
+        r.alerts_firing_at_exit,
+        r.journal.len()
+    );
     for v in &r.violations {
         println!("VIOLATION {v}");
     }
@@ -123,6 +136,11 @@ fn main() {
         ("gram_rel_err_worst", num(r.gram_worst)),
         ("proj_rel_err_worst", num(r.proj_worst)),
         ("attn_rel_err_worst", num(r.attn_rel_worst)),
+        ("canary_rel_err_worst", num(r.canary_worst)),
+        ("canary_slo", num(r.canary_slo)),
+        ("accuracy_alerts_fired", num(r.accuracy_alerts_fired as f64)),
+        ("alerts_firing_at_exit", num(r.alerts_firing_at_exit as f64)),
+        ("journal_events", num(r.journal.len() as f64)),
         ("wall_s", num(wall_s)),
         ("invariant_violations", num(r.violations.len() as f64)),
         ("ok", Json::Bool(r.violations.is_empty())),

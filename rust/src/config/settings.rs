@@ -413,8 +413,10 @@ pub struct AttentionConfig {
     pub serve: AttnServeConfig,
 }
 
-/// Observability knobs (`[obsv]` section): per-request trace sampling
-/// and the bounded span ring the `trace` TCP verb reads.
+/// Observability knobs (`[obsv]` section): per-request trace sampling,
+/// the bounded span ring the `trace` TCP verb reads, the scrape pass
+/// that fills the time-series rings, accuracy canaries, and the SLO
+/// thresholds the alert engine evaluates on every scrape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ObsvConfig {
     /// sample 1 in N request ids for a trace span; 0 disables tracing,
@@ -422,11 +424,45 @@ pub struct ObsvConfig {
     pub trace_sample_every: u64,
     /// sampled spans kept in memory (older spans are overwritten)
     pub trace_buffer: usize,
+    /// minimum seconds between scrape passes (series + alert eval)
+    pub scrape_interval_s: f64,
+    /// points retained per time-series ring (clamped to at least 2)
+    pub series_capacity: usize,
+    /// control-plane journal entries retained (clamped to at least 1)
+    pub events_capacity: usize,
+    /// rows in each accuracy-canary probe batch (clamped to at least 1)
+    pub canary_batch: usize,
+    /// fire the canary stage every N control ticks; 0 disables canaries
+    pub canary_period_ticks: usize,
+    /// per-lane p99 latency SLO (µs) for the `latency_p99` alert
+    pub slo_p99_latency_us: f64,
+    /// error-budget ratio for the `error_budget_{fast,slow}` alerts
+    pub slo_error_ratio: f64,
+    /// measured canary rel-err envelope for the `canary_accuracy` alert
+    /// (and the measured-drift recalibration trigger)
+    pub slo_canary_rel_err: f64,
+    /// consecutive breaching scrapes before a pending alert fires
+    pub alert_for_scrapes: usize,
+    /// consecutive clear scrapes before a firing alert resolves
+    pub alert_resolve_scrapes: usize,
 }
 
 impl Default for ObsvConfig {
     fn default() -> Self {
-        ObsvConfig { trace_sample_every: 8, trace_buffer: 256 }
+        ObsvConfig {
+            trace_sample_every: 8,
+            trace_buffer: 256,
+            scrape_interval_s: 1.0,
+            series_capacity: 512,
+            events_capacity: 1024,
+            canary_batch: 4,
+            canary_period_ticks: 1,
+            slo_p99_latency_us: 50_000.0,
+            slo_error_ratio: 0.05,
+            slo_canary_rel_err: 0.25,
+            alert_for_scrapes: 2,
+            alert_resolve_scrapes: 2,
+        }
     }
 }
 
@@ -438,6 +474,18 @@ impl ObsvConfig {
                 .usize_or("obsv.trace_sample_every", d.trace_sample_every as usize)
                 as u64,
             trace_buffer: doc.usize_or("obsv.trace_buffer", d.trace_buffer).max(1),
+            scrape_interval_s: doc.f64_or("obsv.scrape_interval_s", d.scrape_interval_s),
+            series_capacity: doc.usize_or("obsv.series_capacity", d.series_capacity).max(2),
+            events_capacity: doc.usize_or("obsv.events_capacity", d.events_capacity).max(1),
+            canary_batch: doc.usize_or("obsv.canary_batch", d.canary_batch).max(1),
+            canary_period_ticks: doc.usize_or("obsv.canary_period_ticks", d.canary_period_ticks),
+            slo_p99_latency_us: doc.f64_or("obsv.slo_p99_latency_us", d.slo_p99_latency_us),
+            slo_error_ratio: doc.f64_or("obsv.slo_error_ratio", d.slo_error_ratio),
+            slo_canary_rel_err: doc.f64_or("obsv.slo_canary_rel_err", d.slo_canary_rel_err),
+            alert_for_scrapes: doc.usize_or("obsv.alert_for_scrapes", d.alert_for_scrapes).max(1),
+            alert_resolve_scrapes: doc
+                .usize_or("obsv.alert_resolve_scrapes", d.alert_resolve_scrapes)
+                .max(1),
         }
     }
 }
@@ -664,6 +712,16 @@ impl Config {
                 obj(vec![
                     ("trace_sample_every", num(self.obsv.trace_sample_every as f64)),
                     ("trace_buffer", num(self.obsv.trace_buffer as f64)),
+                    ("scrape_interval_s", num(self.obsv.scrape_interval_s)),
+                    ("series_capacity", num(self.obsv.series_capacity as f64)),
+                    ("events_capacity", num(self.obsv.events_capacity as f64)),
+                    ("canary_batch", num(self.obsv.canary_batch as f64)),
+                    ("canary_period_ticks", num(self.obsv.canary_period_ticks as f64)),
+                    ("slo_p99_latency_us", num(self.obsv.slo_p99_latency_us)),
+                    ("slo_error_ratio", num(self.obsv.slo_error_ratio)),
+                    ("slo_canary_rel_err", num(self.obsv.slo_canary_rel_err)),
+                    ("alert_for_scrapes", num(self.obsv.alert_for_scrapes as f64)),
+                    ("alert_resolve_scrapes", num(self.obsv.alert_resolve_scrapes as f64)),
                 ]),
             ),
             ("paths", obj(vec![("artifacts", s(&self.artifacts_dir))])),
@@ -733,6 +791,36 @@ impl Config {
         if let Ok(v) = std::env::var("IMKA_OBSV_TRACE_BUFFER") {
             if let Ok(n) = v.parse::<usize>() {
                 self.obsv.trace_buffer = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_OBSV_SCRAPE_INTERVAL_S") {
+            if let Ok(f) = v.parse() {
+                self.obsv.scrape_interval_s = f;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_OBSV_SERIES_CAPACITY") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.obsv.series_capacity = n.max(2);
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_OBSV_EVENTS_CAPACITY") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.obsv.events_capacity = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_OBSV_CANARY_BATCH") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.obsv.canary_batch = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_OBSV_CANARY_PERIOD_TICKS") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.obsv.canary_period_ticks = n;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_OBSV_SLO_CANARY_REL_ERR") {
+            if let Ok(f) = v.parse() {
+                self.obsv.slo_canary_rel_err = f;
             }
         }
         if let Ok(v) = std::env::var("IMKA_ARTIFACTS_DIR") {
@@ -992,6 +1080,10 @@ mod tests {
                  [attention.serve]\nheads = {}\nd_head = {}\nm = {}\nmax_sessions = {}\n\
                  path = \"{path}\"\nseed = {}\n\
                  [obsv]\ntrace_sample_every = {}\ntrace_buffer = {}\n\
+                 scrape_interval_s = {:?}\nseries_capacity = {}\nevents_capacity = {}\n\
+                 canary_batch = {}\ncanary_period_ticks = {}\nslo_p99_latency_us = {:?}\n\
+                 slo_error_ratio = {:?}\nslo_canary_rel_err = {:?}\nalert_for_scrapes = {}\n\
+                 alert_resolve_scrapes = {}\n\
                  [paths]\nartifacts = \"art-{}\"\n",
                 g.int(1, 128),                // chip.cores
                 g.f64_in(0.001, 0.2),         // sigma_prog
@@ -1030,6 +1122,16 @@ mod tests {
                 g.int(0, i32::MAX as usize),  // seed
                 g.int(0, 64),                 // trace_sample_every
                 g.int(1, 1024),               // trace_buffer
+                g.f64_in(0.1, 60.0),          // scrape_interval_s
+                g.int(2, 4096),               // series_capacity
+                g.int(1, 8192),               // events_capacity
+                g.int(1, 64),                 // canary_batch
+                g.int(0, 16),                 // canary_period_ticks
+                g.f64_in(100.0, 1.0e6),       // slo_p99_latency_us
+                g.f64_in(0.001, 0.5),         // slo_error_ratio
+                g.f64_in(0.01, 1.0),          // slo_canary_rel_err
+                g.int(1, 8),                  // alert_for_scrapes
+                g.int(1, 8),                  // alert_resolve_scrapes
                 g.int(0, 999),                // artifacts suffix
             );
             let a = Config::from_toml_str(&toml).expect("generated TOML must parse");
@@ -1044,14 +1146,31 @@ mod tests {
         let d = ObsvConfig::default();
         assert_eq!(d.trace_sample_every, 8);
         assert_eq!(d.trace_buffer, 256);
+        assert_eq!(d.series_capacity, 512);
+        assert_eq!(d.events_capacity, 1024);
+        assert_eq!(d.canary_batch, 4);
+        assert_eq!(d.canary_period_ticks, 1);
+        assert!((d.scrape_interval_s - 1.0).abs() < 1e-12);
+        assert!((d.slo_canary_rel_err - 0.25).abs() < 1e-12);
+        assert_eq!(d.alert_for_scrapes, 2);
 
         let cfg = Config::from_toml_str(
-            "[obsv]\ntrace_sample_every = 1\ntrace_buffer = 0\n",
+            "[obsv]\ntrace_sample_every = 1\ntrace_buffer = 0\n\
+             series_capacity = 1\nevents_capacity = 0\ncanary_batch = 0\n\
+             canary_period_ticks = 0\nslo_canary_rel_err = 0.1\n\
+             alert_for_scrapes = 0\n",
         )
         .unwrap();
         assert_eq!(cfg.obsv.trace_sample_every, 1);
         // buffer is clamped to at least one span
         assert_eq!(cfg.obsv.trace_buffer, 1);
+        // ring/batch knobs clamp to their minimums; period 0 = disabled
+        assert_eq!(cfg.obsv.series_capacity, 2);
+        assert_eq!(cfg.obsv.events_capacity, 1);
+        assert_eq!(cfg.obsv.canary_batch, 1);
+        assert_eq!(cfg.obsv.canary_period_ticks, 0);
+        assert!((cfg.obsv.slo_canary_rel_err - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.obsv.alert_for_scrapes, 1);
 
         let off = Config::from_toml_str("[obsv]\ntrace_sample_every = 0\n").unwrap();
         assert_eq!(off.obsv.trace_sample_every, 0);

@@ -28,7 +28,9 @@ use crate::error::{Error, Result};
 use crate::fleet::{ControlPlane, FleetPool, HealthState, RecalScheduler};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
-use crate::obsv::{MvmProfile, TraceRing, TraceSpan};
+use crate::obsv::{
+    AlertInstance, Event, MvmProfile, ObservabilityHub, SeriesPoint, TraceRing, TraceSpan,
+};
 use crate::runtime::{Input, ModelBundle, Registry};
 use crate::util::Rng;
 
@@ -55,6 +57,9 @@ struct Shared {
     /// the fleet)
     sessions: SessionManager,
     telemetry: Telemetry,
+    /// canaries + time-series rings + SLO alerts + event journal, built
+    /// over the telemetry registry (`series`/`alerts`/`events` verbs)
+    obsv: Arc<ObservabilityHub>,
     /// bounded ring of sampled per-request trace spans (`trace` verb)
     trace: TraceRing,
     /// engine-wide request-id source (Submitter clones share it)
@@ -189,6 +194,11 @@ impl Engine {
             .and_then(|v| v.as_usize())
             .unwrap_or(2);
 
+        // the hub shares the telemetry registry, so canary gauges and
+        // alert states render in the same `metrics` exposition as the
+        // lane counters
+        let telemetry = Telemetry::default();
+        let obsv = Arc::new(ObservabilityHub::new(telemetry.registry_arc(), &cfg.obsv));
         let shared = Arc::new(Shared {
             registry,
             bundle,
@@ -198,7 +208,8 @@ impl Engine {
             noisy_omega,
             noisy_params,
             sessions: SessionManager::new(cfg.attention.serve.clone(), cfg.serve.replication),
-            telemetry: Telemetry::default(),
+            telemetry,
+            obsv,
             trace: TraceRing::new(cfg.obsv.trace_buffer, cfg.obsv.trace_sample_every),
             ids: AtomicU64::new(1),
             seed_ctr: AtomicI32::new(1),
@@ -279,9 +290,12 @@ impl Engine {
             let shared = shared.clone();
             let stop_c = stop.clone();
             let interval = cfg.fleet.control.interval_s.max(0.05);
+            let scrape_interval = cfg.obsv.scrape_interval_s.max(0.05);
             let mut plane = ControlPlane::new(&cfg.fleet, &cfg.chip);
+            plane.attach_observability(shared.obsv.clone());
             threads.push(std::thread::spawn(move || {
                 let mut last = Instant::now();
+                let mut last_scrape = Instant::now();
                 while !stop_c.load(Ordering::Relaxed) {
                     // short sleeps keep shutdown latency bounded
                     std::thread::sleep(Duration::from_millis(50));
@@ -297,6 +311,13 @@ impl Engine {
                         }
                         Ok(_) => {}
                         Err(e) => eprintln!("fleet control tick failed: {e}"),
+                    }
+                    // scrape on the wall clock, but only after a tick —
+                    // the fleet clock just advanced, so series points
+                    // and rate denominators stay strictly monotone
+                    if last_scrape.elapsed().as_secs_f64() >= scrape_interval {
+                        last_scrape = Instant::now();
+                        plane.scrape(&shared.pool);
                     }
                 }
             }));
@@ -508,6 +529,39 @@ impl StatsHandle {
     pub fn trace_counts(&self) -> (u64, u64, u64) {
         let (sampled, dropped) = self.shared.trace.counts();
         (self.shared.trace.sample_every(), sampled, dropped)
+    }
+
+    /// Trace-ring capacity — the `trace` verb clamps its limit to this.
+    pub fn trace_cap(&self) -> usize {
+        self.shared.trace.cap()
+    }
+
+    /// Time-series keys starting with `prefix` ("" = all), sorted (the
+    /// `series` verb).
+    pub fn series_keys(&self, prefix: &str) -> Vec<String> {
+        self.shared.obsv.series().keys_matching(prefix)
+    }
+
+    /// Newest `n` points of one series, oldest-first.
+    pub fn series_points(&self, key: &str, n: usize) -> Vec<SeriesPoint> {
+        let pts = self.shared.obsv.series().get(key);
+        let skip = pts.len().saturating_sub(n);
+        pts.into_iter().skip(skip).collect()
+    }
+
+    /// Current SLO alert instances, ordered by (rule, series) (the
+    /// `alerts` verb).
+    pub fn alerts(&self) -> Vec<AlertInstance> {
+        self.shared.obsv.alert_states()
+    }
+
+    /// Journal entries with `seq >= since`, plus (oldest retained seq,
+    /// next seq to be assigned). `first_seq > since` tells a pager that
+    /// the bounded ring dropped entries it never saw.
+    pub fn events_since(&self, since: u64) -> (Vec<Event>, u64, u64) {
+        let j = self.shared.obsv.journal();
+        let next = j.next_seq();
+        (j.since(since), j.first_seq().unwrap_or(next), next)
     }
 
     /// Mark a chip `Draining` (the `drain` TCP verb): traffic is steered

@@ -14,14 +14,25 @@
 //!   {"type":"metrics"} -> the full Prometheus-style text exposition,
 //!                         escaped into one JSON string field
 //!   {"type":"trace"[,"limit":N]} -> newest sampled per-request trace
-//!       spans with their stage breakdown + sampling counters
+//!       spans with their stage breakdown + sampling counters (limit is
+//!       clamped to the configured ring size; must be a positive integer)
+//!   {"type":"series"[,"name":PREFIX,"points":N]} -> bounded metric
+//!       time-series rings: key list without "name", ring tails (newest
+//!       N points, default 64) for keys matching the prefix with it
+//!   {"type":"alerts"} -> SLO alert instances (rule, series, state,
+//!       value, threshold) + the count currently firing
+//!   {"type":"events"[,"since":N,"limit":K]} -> control-plane event
+//!       journal entries with seq >= since (bounded ring: first_seq >
+//!       since means entries were dropped)
 //!   {"type":"drain","chip":N[,"undrain":true]} -> steer traffic off/on a chip
 //!   {"type":"ping"}
 //! Responses: {"ok":true, ...} | {"ok":false,"error":"..."}
 //!
 //! Data-plane replies (`features`/`performer`/`attn_append`) echo the
 //! engine-assigned `request_id`, which is the key to find that request's
-//! span in the `trace` output (when its id was sampled).
+//! span in the `trace` output (when its id was sampled). Error replies
+//! echo a client-supplied `request_id` field when the request line
+//! parsed, so pipelined clients can correlate failures too.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -33,6 +44,7 @@ use super::request::{PathKind, PerfMode, RequestBody, ResponseBody};
 use crate::config::json::{arr, num, obj, s, Json};
 use crate::error::{Error, Result};
 use crate::kernels::Kernel;
+use crate::obsv::AlertState;
 
 /// Running server (owns the engine).
 pub struct Server {
@@ -158,10 +170,23 @@ pub fn handle_line(
     let t_parse = std::time::Instant::now();
     let parsed = Json::parse(line);
     let parse_us = t_parse.elapsed().as_secs_f64() * 1e6;
-    let result = parsed.and_then(|req| dispatch(&req, parse_us, sub, stats, sessions));
+    let (request_id, result) = match parsed {
+        Ok(req) => {
+            // a client-supplied correlation id is echoed even on errors
+            let id = req.get("request_id").cloned();
+            (id, dispatch(&req, parse_us, sub, stats, sessions))
+        }
+        Err(e) => (None, Err(e)),
+    };
     match result {
         Ok(j) => j,
-        Err(e) => obj(vec![("ok", Json::Bool(false)), ("error", s(&e.to_string()))]),
+        Err(e) => {
+            let mut fields = vec![("ok", Json::Bool(false)), ("error", s(&e.to_string()))];
+            if let Some(id) = request_id {
+                fields.push(("request_id", id));
+            }
+            obj(fields)
+        }
     }
 }
 
@@ -262,6 +287,37 @@ fn health_json(stats: &StatsHandle) -> Json {
     ])
 }
 
+/// Render a reply value that may be NaN (never-served gauges): JSON has
+/// no NaN, so non-finite values become null.
+fn fin(v: f64) -> Json {
+    if v.is_finite() {
+        num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Parse an optional non-negative integer field. Typed error on
+/// negatives, fractions, non-numbers and absurd magnitudes — `as usize`
+/// must never wrap or truncate a bad value into a plausible one.
+fn opt_index(req: &Json, key: &str) -> Result<Option<usize>> {
+    match req.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let raw = v
+                .as_f64()
+                .ok_or_else(|| Error::Parse(format!("{key} must be a number")))?;
+            if raw < 0.0 || raw.fract() != 0.0 || raw > u32::MAX as f64 {
+                return Err(Error::Parse(format!(
+                    "{key} must be a non-negative integer (at most {}), got {raw}",
+                    u32::MAX
+                )));
+            }
+            Ok(Some(raw as usize))
+        }
+    }
+}
+
 /// Parse a required JSON array of numbers into f32s (typed error on a
 /// missing key or non-numeric elements).
 fn f32_array(req: &Json, key: &str) -> Result<Vec<f32>> {
@@ -294,7 +350,16 @@ fn dispatch(
             ("metrics", s(&stats.metrics_text())),
         ])),
         "trace" => {
-            let limit = req.get("limit").and_then(|v| v.as_usize()).unwrap_or(16);
+            // a limit of 0 is a typed error (a silent empty reply reads
+            // as "no spans"); sane-but-large limits clamp to the ring
+            // cap, which is the most `latest` can ever return anyway
+            let limit = match opt_index(req, "limit")? {
+                None => 16,
+                Some(0) => {
+                    return Err(Error::Parse("limit must be at least 1".into()));
+                }
+                Some(n) => n.min(stats.trace_cap()),
+            };
             let (sample_every, sampled, dropped) = stats.trace_counts();
             let spans = stats.traces(limit).into_iter().map(|sp| {
                 obj(vec![
@@ -440,6 +505,89 @@ fn dispatch(
                 ])),
                 _ => Err(Error::Coordinator("unexpected body".into())),
             }
+        }
+        "series" => {
+            let points = match opt_index(req, "points")? {
+                None => 64,
+                Some(0) => {
+                    return Err(Error::Parse("points must be at least 1".into()));
+                }
+                Some(n) => n,
+            };
+            match req.get("name").and_then(|v| v.as_str()) {
+                // no name: enumerate the keys so a client can discover
+                // what to ask for
+                None => Ok(obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("keys", arr(stats.series_keys("").into_iter().map(|k| s(&k)))),
+                ])),
+                Some(prefix) => {
+                    let series = stats.series_keys(prefix).into_iter().map(|key| {
+                        let pts = stats.series_points(&key, points);
+                        obj(vec![
+                            ("key", s(&key)),
+                            (
+                                "points",
+                                arr(pts.iter().map(|p| {
+                                    obj(vec![("t_s", num(p.t_s)), ("value", fin(p.value))])
+                                })),
+                            ),
+                        ])
+                    });
+                    Ok(obj(vec![("ok", Json::Bool(true)), ("series", arr(series))]))
+                }
+            }
+        }
+        "alerts" => {
+            let insts = stats.alerts();
+            let firing = insts
+                .iter()
+                .filter(|a| a.state == AlertState::Firing)
+                .count();
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("firing", num(firing as f64)),
+                (
+                    "alerts",
+                    arr(insts.iter().map(|a| {
+                        obj(vec![
+                            ("rule", s(&a.rule)),
+                            ("series", s(&a.series)),
+                            ("state", s(a.state.as_str())),
+                            ("value", fin(a.value)),
+                            ("threshold", fin(a.threshold)),
+                            ("since_t_s", num(a.since_t_s)),
+                        ])
+                    })),
+                ),
+            ]))
+        }
+        "events" => {
+            let since = opt_index(req, "since")?.unwrap_or(0) as u64;
+            let limit = match opt_index(req, "limit")? {
+                None => 256,
+                Some(0) => {
+                    return Err(Error::Parse("limit must be at least 1".into()));
+                }
+                Some(n) => n,
+            };
+            let (events, first_seq, next_seq) = stats.events_since(since);
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("first_seq", num(first_seq as f64)),
+                ("next_seq", num(next_seq as f64)),
+                (
+                    "events",
+                    arr(events.iter().take(limit).map(|e| {
+                        obj(vec![
+                            ("seq", num(e.seq as f64)),
+                            ("t_s", num(e.t_s)),
+                            ("kind", s(&e.kind)),
+                            ("detail", s(&e.detail)),
+                        ])
+                    })),
+                ),
+            ]))
         }
         other => Err(Error::Parse(format!("unknown request type '{other}'"))),
     }

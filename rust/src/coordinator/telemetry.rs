@@ -160,6 +160,13 @@ impl Telemetry {
         &self.registry
     }
 
+    /// Shared handle to the same registry — the observability hub holds
+    /// one so canary gauges and alert states render in the same
+    /// exposition as the lane counters.
+    pub fn registry_arc(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.registry)
+    }
+
     fn lane_cells(&self, lane: Lane) -> Arc<LaneCells> {
         if let Some(cells) = self.lanes.read().unwrap().get(&lane) {
             return cells.clone();

@@ -14,10 +14,15 @@
 //!    shard-replica restorations. Each is one GDP rewrite behind one
 //!    chip's write lock, so a big fleet losing a full chip costs many
 //!    *bounded* ticks rather than one unbounded one.
-//! 3. **Recalibration**: the PR-2 drift scheduler, which marks a chip
+//! 3. **Accuracy canary** (with an attached [`ObservabilityHub`]): fire
+//!    a small deterministic probe batch per (lane, replica chip) through
+//!    the real analog read path, compare against the retained digital
+//!    twin, record `imka_canary_rel_err{lane,chip}` — measured breaches
+//!    of the canary SLO force a recalibration this tick.
+//! 4. **Recalibration**: the PR-2 drift scheduler, which marks a chip
 //!    `Draining` before taking its write lock so the router steers
 //!    readers away ahead of the multi-second GDP rewrite.
-//! 4. **Autoscaling**: observe the fleet-wide queue depth; `Up` spawns a
+//! 5. **Autoscaling**: observe the fleet-wide queue depth; `Up` spawns a
 //!    `Joining` chip and programs lane replicas onto it, `Down` drains
 //!    the least-loaded chip and retires it once idle.
 //!
@@ -27,14 +32,17 @@
 //! live loop takes, minus the wall-clock sampling.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use super::super::placement::ChipCapacity;
-use super::super::pool::{FleetPool, ReplacementJob, RestoreOutcome};
+use super::super::pool::{CanarySample, FleetPool, ReplacementJob, RestoreOutcome};
 use super::super::recal::RecalScheduler;
 use super::autoscale::{Autoscaler, ScaleDecision};
 use super::health::{HealthMonitor, HealthState};
 use crate::config::{ChipConfig, FleetConfig};
 use crate::error::Result;
+use crate::obsv::registry::{MetricSample, SampleKind};
+use crate::obsv::ObservabilityHub;
 
 /// What one control tick did (empty vectors = quiet tick).
 #[derive(Clone, Debug, Default)]
@@ -44,12 +52,16 @@ pub struct TickReport {
     /// chips that received a deferred shard-replica restoration drained
     /// from the replacement queue this tick
     pub replaced: Vec<usize>,
-    /// chips reprogrammed by the drift scheduler
+    /// chips reprogrammed by the drift scheduler (analytic estimate over
+    /// budget, or a measured canary breach)
     pub recalibrated: Vec<usize>,
     /// chips added by the autoscaler
     pub added: Vec<usize>,
     /// chips retired by the autoscaler
     pub retired: Vec<usize>,
+    /// measured accuracy-canary samples, when the canary stage ran this
+    /// tick (empty on non-canary ticks or without an attached hub)
+    pub canary: Vec<CanarySample>,
 }
 
 impl TickReport {
@@ -97,6 +109,12 @@ pub struct ControlPlane {
     /// bounded regardless of how many shards a dead chip held
     repl_queue: VecDeque<(ReplacementJob, u8)>,
     replace_per_tick: usize,
+    /// attached observability hub: canary gauges/histogram, the event
+    /// journal, and the scrape surface (None = PR-8-less behavior)
+    obsv: Option<Arc<ObservabilityHub>>,
+    /// ticks run since construction (canary cadence is tick-based so the
+    /// chaos harness stays deterministic on the fleet clock)
+    ticks: u64,
 }
 
 /// Transient chip-level programming failures tolerated per deferred
@@ -122,7 +140,21 @@ impl ControlPlane {
             new_chip_capacity: ChipCapacity { cores: chip.cores, noise_tier: 1.0 },
             repl_queue: VecDeque::new(),
             replace_per_tick: c.replace_per_tick.max(1),
+            obsv: None,
+            ticks: 0,
         }
+    }
+
+    /// Attach the observability hub: enables the accuracy-canary stage
+    /// (measured analog-vs-twin errors feeding recal decisions and the
+    /// `canary_accuracy` alert) and journals every control transition.
+    pub fn attach_observability(&mut self, hub: Arc<ObservabilityHub>) {
+        self.obsv = Some(hub);
+    }
+
+    /// The attached hub, if any (the engine shares it with the server).
+    pub fn observability(&self) -> Option<&Arc<ObservabilityHub>> {
+        self.obsv.as_ref()
     }
 
     /// Deferred shard-replica restorations still waiting in the queue.
@@ -139,6 +171,8 @@ impl ControlPlane {
     /// feed synthetic depths; `tick` feeds the live measurement).
     pub fn tick_with_depth(&mut self, pool: &FleetPool, queue_depth: usize) -> Result<TickReport> {
         let mut report = TickReport::default();
+        let tick_index = self.ticks;
+        self.ticks += 1;
 
         // 1. health: probe, degrade/recover, detach the dead. Only
         // sole-replica shards reprogram inline; redundancy restores are
@@ -193,10 +227,32 @@ impl ControlPlane {
             }
         }
 
-        // 3. drift recalibration (marks chips Draining while rewriting)
-        report.recalibrated = self.recal.tick(pool)?;
+        // 3. accuracy canary: fire a small deterministic probe batch per
+        // (lane, replica chip) through the real analog read path and
+        // compare against the retained digital twin. Measured breaches
+        // of the canary SLO force a recalibration this tick even when
+        // the analytic drift estimate is still under budget — the
+        // measurement sees programming noise and faults the model can't.
+        let mut forced: Vec<usize> = Vec::new();
+        if let Some(hub) = &self.obsv {
+            let period = hub.cfg().canary_period_ticks as u64;
+            if period > 0 && tick_index % period == 0 {
+                let samples = pool.canary_probe(hub.cfg().canary_batch);
+                let slo = hub.cfg().slo_canary_rel_err;
+                for s in &samples {
+                    hub.record_canary(&s.lane.label(), s.chip, s.rel_err);
+                    if s.rel_err > slo && !forced.contains(&s.chip) {
+                        forced.push(s.chip);
+                    }
+                }
+                report.canary = samples;
+            }
+        }
 
-        // 4. queue-driven autoscaling
+        // 4. drift recalibration (marks chips Draining while rewriting)
+        report.recalibrated = self.recal.tick_forced(pool, &forced)?;
+
+        // 5. queue-driven autoscaling
         if let Some(scaler) = &mut self.autoscaler {
             match scaler.observe(queue_depth, pool.n_chips()) {
                 ScaleDecision::Hold => {}
@@ -213,7 +269,79 @@ impl ControlPlane {
                 }
             }
         }
+
+        // journal every transition this tick made, stamped on the fleet
+        // clock (the `events` verb and the chaos consistency checks
+        // read these back)
+        if let Some(hub) = &self.obsv {
+            let t = pool.clock_s();
+            for &c in &report.evicted {
+                hub.journal()
+                    .push(t, "evict", format!("chip {c} evicted by the health monitor"));
+            }
+            for &c in &report.replaced {
+                hub.journal()
+                    .push(t, "replace", format!("shard replica restored onto chip {c}"));
+            }
+            for &c in &report.recalibrated {
+                let why = if forced.contains(&c) {
+                    "measured canary breach"
+                } else {
+                    "drift estimate over budget"
+                };
+                hub.journal()
+                    .push(t, "recal", format!("chip {c} reprogrammed ({why})"));
+            }
+            for &c in &report.added {
+                hub.journal()
+                    .push(t, "scale_up", format!("chip {c} added by the autoscaler"));
+            }
+            for &c in &report.retired {
+                hub.journal()
+                    .push(t, "scale_down", format!("chip {c} retired by the autoscaler"));
+            }
+        }
         Ok(report)
+    }
+
+    /// One scrape through the attached hub at the pool's fleet-clock
+    /// time. Fleet-level samples the registry cannot see — the worst
+    /// shard's replication deficit and per-chip core oversubscription —
+    /// are recomputed here from live pool state. No-op without a hub.
+    /// The *caller* paces this: the engine's control loop scrapes by
+    /// wall clock (`[obsv] scrape_interval_s`), the chaos harness once
+    /// per control tick on the fleet clock.
+    pub fn scrape(&self, pool: &FleetPool) {
+        let Some(hub) = &self.obsv else { return };
+        let mut extra: Vec<MetricSample> = Vec::new();
+        // the configured target is capped at the live fleet size: a
+        // 2-chip fleet can never hold 3 replicas — that's capacity, not
+        // degradation, and must not page forever
+        let target = pool.fleet_config().replication.min(pool.n_chips().max(1));
+        let mut deficit = 0usize;
+        for lane in pool.lane_ids() {
+            if let Ok(m) = pool.mapping(lane) {
+                deficit = deficit.max(target.saturating_sub(m.plan().replication()));
+            }
+        }
+        extra.push(MetricSample {
+            name: "imka_fleet_replication_deficit".into(),
+            labels: Vec::new(),
+            kind: SampleKind::Gauge,
+            value: deficit as f64,
+        });
+        for snap in pool.chip_snapshots() {
+            if snap.health == "evicted" {
+                continue;
+            }
+            extra.push(MetricSample {
+                name: "imka_chip_core_oversubscription".into(),
+                labels: vec![("chip".into(), snap.chip.to_string())],
+                kind: SampleKind::Gauge,
+                value: snap.core_oversubscription,
+            });
+        }
+        hub.scrape(pool.clock_s(), &extra);
     }
 }
 

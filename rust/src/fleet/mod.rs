@@ -51,6 +51,6 @@ pub mod router;
 
 pub use control::{Autoscaler, ControlPlane, HealthMonitor, HealthState, ScaleDecision, TickReport};
 pub use placement::{ChipCapacity, LanePlan, PlacementPolicy, Planner, ShardPlan};
-pub use pool::{DetachOutcome, FleetPool, LaneMapping, ReplacementJob, RestoreOutcome};
+pub use pool::{CanarySample, DetachOutcome, FleetPool, LaneMapping, ReplacementJob, RestoreOutcome};
 pub use recal::{age_at_budget, estimated_drift_error, RecalScheduler};
 pub use router::{Router, RouterPolicy};

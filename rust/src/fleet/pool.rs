@@ -52,9 +52,10 @@ use crate::config::{ChipConfig, FleetConfig};
 use crate::coordinator::request::LaneId;
 use crate::coordinator::telemetry::{ChipSnapshot, FleetEventsSnapshot};
 use crate::error::{Error, Result};
-use crate::linalg::Mat;
+use crate::linalg::{matmul, Mat};
 use crate::obsv::MvmProfile;
 use crate::util::threads::parallel_map;
+use crate::util::Rng;
 
 /// One programmed Ω lane — a kernel feature lane or an attention head's
 /// projection lane ([`LaneId`]) — fleet-wide. The shard plan is behind its
@@ -78,6 +79,17 @@ impl LaneMapping {
     pub fn plan(&self) -> LanePlan {
         self.plan.read().unwrap().clone()
     }
+}
+
+/// One accuracy-canary measurement: the relative error of a
+/// deterministic probe batch read through one chip's programmed
+/// (drifted, noisy) crossbars against the lane's retained FP-32 Ω twin,
+/// aggregated over every shard of the lane placed on that chip.
+#[derive(Clone, Debug)]
+pub struct CanarySample {
+    pub lane: LaneId,
+    pub chip: usize,
+    pub rel_err: f64,
 }
 
 /// One chip plus its serving/health/recalibration counters.
@@ -169,6 +181,17 @@ pub struct FleetPool {
 /// Chip-level matrix name of one shard of a lane's Ω.
 fn shard_name(lane: LaneId, shard: usize) -> String {
     format!("omega_{}_s{}", lane.label(), shard)
+}
+
+/// Stable per-lane salt for the canary-probe RNG (FNV-1a over the lane
+/// label), so every lane probes a distinct but reproducible batch.
+fn lane_salt(lane: LaneId) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in lane.label().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
 }
 
 /// One deferred shard-replica restoration: an eviction degraded this
@@ -271,6 +294,11 @@ impl FleetPool {
 
     fn slots_snapshot(&self) -> Vec<Arc<ChipSlot>> {
         self.slots.read().unwrap().clone()
+    }
+
+    /// Identities of every programmed lane (stable BTreeMap order).
+    pub fn lane_ids(&self) -> Vec<LaneId> {
+        self.lanes.read().unwrap().keys().copied().collect()
     }
 
     fn lanes_snapshot(&self) -> Vec<(LaneId, Arc<LaneMapping>)> {
@@ -731,6 +759,86 @@ impl FleetPool {
             }
         }
         Ok(sum / n.max(1) as f64)
+    }
+
+    /// Fire the accuracy canary: a small deterministic probe batch per
+    /// lane, read through **every** replica of every shard — not just
+    /// the router's pick; the point is to measure each chip, including
+    /// the ones traffic is currently steered away from — and compared
+    /// against the retained digital twin. Faulted and Joining/Evicted
+    /// replicas are skipped. Probe MVMs use the same inflight/busy-core
+    /// accounting as served traffic (so the load is visible in the
+    /// gauges) but do not count as served requests. Returns one
+    /// aggregated sample per (lane, chip).
+    pub fn canary_probe(&self, batch: usize) -> Vec<CanarySample> {
+        let batch = batch.max(1);
+        // measure at the chips' current drift age, not the last lazy sync
+        self.sync_drift();
+        let lanes = self.lanes_snapshot();
+        let slots = self.slots_snapshot();
+        // (err², ref²) accumulators: a chip can hold several shards of a lane
+        let mut acc: BTreeMap<(LaneId, usize), (f64, f64)> = BTreeMap::new();
+        for (lane, mapping) in lanes {
+            // probe inputs are deterministic per (pool seed, lane) and
+            // match the calibration distribution (normalized data ~N(0,1))
+            let mut rng = Rng::new(self.seed ^ lane_salt(lane));
+            let x = Mat::randn(batch, mapping.d, &mut rng);
+            let plan = mapping.plan();
+            for (s, shard) in plan.shards.iter().enumerate() {
+                let reference = matmul(&x, &mapping.omega.slice_cols(shard.col0, shard.col1));
+                let ref_sq: f64 = reference
+                    .data
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum();
+                let handle = MatrixHandle(shard_name(lane, s));
+                let shard_tiles = mapping.d.div_ceil(self.chip_cfg.rows)
+                    * (shard.col1 - shard.col0).div_ceil(self.chip_cfg.cols);
+                for &c in &shard.chips {
+                    let slot = &slots[c];
+                    if slot.faulted.load(Ordering::Relaxed)
+                        || slot.health().fallback_order().is_none()
+                    {
+                        continue;
+                    }
+                    slot.inflight.fetch_add(1, Ordering::Relaxed);
+                    let res = {
+                        let chip = slot.chip.read().unwrap();
+                        slot.busy_cores.fetch_add(shard_tiles, Ordering::Relaxed);
+                        let r = chip.matmul(&handle, &x);
+                        slot.busy_cores.fetch_sub(shard_tiles, Ordering::Relaxed);
+                        r
+                    };
+                    slot.inflight.fetch_sub(1, Ordering::Relaxed);
+                    match res {
+                        Ok(y) => {
+                            let err_sq: f64 = y
+                                .data
+                                .iter()
+                                .zip(&reference.data)
+                                .map(|(&a, &b)| {
+                                    let d = a as f64 - b as f64;
+                                    d * d
+                                })
+                                .sum();
+                            let e = acc.entry((lane, c)).or_insert((0.0, 0.0));
+                            e.0 += err_sq;
+                            e.1 += ref_sq;
+                        }
+                        Err(_) => {
+                            slot.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+        acc.into_iter()
+            .map(|((lane, chip), (err_sq, ref_sq))| CanarySample {
+                lane,
+                chip,
+                rel_err: (err_sq / ref_sq.max(1e-30)).sqrt(),
+            })
+            .collect()
     }
 
     /// Cores programmed across the whole fleet (lock-free: reads the
@@ -1390,6 +1498,34 @@ mod tests {
             pool.reprogram_lane(KernelLane::Rbf, omega.clone(), &x_cal, 1).unwrap();
             assert_eq!(pool.cores_used(), before);
         }
+    }
+
+    #[test]
+    fn canary_probe_measures_each_replica_and_tracks_drift() {
+        let pool = FleetPool::new(small_chip(), fleet_cfg(2, 2), 7);
+        let mut rng = Rng::new(5);
+        let omega = Mat::randn(16, 16, &mut rng);
+        let x_cal = Mat::randn(32, 16, &mut rng);
+        pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+        let fresh = pool.canary_probe(4);
+        // one sample per replica chip, small error right after programming
+        assert_eq!(fresh.len(), 2, "{fresh:?}");
+        for s in &fresh {
+            assert!(s.rel_err > 0.0 && s.rel_err < 0.15, "{s:?}");
+        }
+        // probes are load-visible but are not served requests
+        assert!(pool.chip_snapshots().iter().all(|c| c.served == 0));
+        // a big drift age must show up in the measurement on every chip
+        pool.advance_clock(3.0e5);
+        let drifted = pool.canary_probe(4);
+        for (d, f) in drifted.iter().zip(&fresh) {
+            assert_eq!(d.chip, f.chip);
+            assert!(d.rel_err > f.rel_err, "{} !> {}", d.rel_err, f.rel_err);
+        }
+        // faulted replicas are skipped, not probed
+        pool.inject_fault(0, true);
+        let samples = pool.canary_probe(4);
+        assert!(samples.iter().all(|s| s.chip != 0), "{samples:?}");
     }
 
     #[test]

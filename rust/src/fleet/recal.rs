@@ -99,6 +99,15 @@ impl RecalScheduler {
     /// monitor owns their eviction) are skipped. Returns the
     /// recalibrated chip indices.
     pub fn tick(&self, pool: &FleetPool) -> Result<Vec<usize>> {
+        self.tick_forced(pool, &[])
+    }
+
+    /// Like [`RecalScheduler::tick`], but additionally reprograms the
+    /// `forced` chips — accuracy-canary breaches measured on the real
+    /// analog read path — even when the analytic estimate is still under
+    /// budget: the measurement outranks the model. Forced chips still
+    /// go through the same health/probe/shard-count eligibility checks.
+    pub fn tick_forced(&self, pool: &FleetPool, forced: &[usize]) -> Result<Vec<usize>> {
         pool.sync_drift();
         let mut recalibrated = Vec::new();
         for i in 0..pool.total_slots() {
@@ -112,7 +121,9 @@ impl RecalScheduler {
                 continue;
             }
             // chips holding no shards have nothing to reprogram
-            if pool.chip_shard_count(i) > 0 && self.due(pool.chip_config(), pool.chip_age(i)) {
+            if pool.chip_shard_count(i) > 0
+                && (forced.contains(&i) || self.due(pool.chip_config(), pool.chip_age(i)))
+            {
                 pool.recalibrate_chip(i)?;
                 recalibrated.push(i);
             }

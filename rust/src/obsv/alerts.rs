@@ -1,0 +1,419 @@
+//! Declarative SLO alert rules with pending → firing → resolved
+//! hysteresis, evaluated against the [`SeriesStore`] on every scrape.
+//!
+//! A rule names a series *prefix* (one rule covers every lane or chip:
+//! `imka_lane_latency_us_p99{` expands to one **instance** per matching
+//! key) and an expression — latest value or windowed mean above a
+//! threshold. The per-instance state machine:
+//!
+//! ```text
+//!            breach                breach × for_scrapes
+//! Inactive ─────────▶ Pending ───────────────────────▶ Firing
+//!     ▲                  │                               │
+//!     │  clear (flap     │                               │
+//!     └──suppressed)─────┘      clear × resolve_scrapes  │
+//!     ◀──────────────────────────────────────────────────┘
+//! ```
+//!
+//! - `for_scrapes` suppresses one-scrape flaps: an instance must breach
+//!   on that many *consecutive* scrapes before it fires.
+//! - `resolve_scrapes` debounces the way down: a firing instance must
+//!   be clear that many consecutive scrapes before it resolves.
+//! - "No data" (unknown key, empty window, all-NaN tail) is *clear*,
+//!   not a breach — a lane that has never served must not page.
+//!
+//! [`AlertEngine::eval`] returns the state **edges** of the scrape
+//! (consumed by the event journal) and retains current states for the
+//! `{"type":"alerts"}` verb and `imka_alert_state` gauges.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::series::SeriesStore;
+
+/// Current state of one alert instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertState {
+    Inactive,
+    Pending,
+    Firing,
+}
+
+impl AlertState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AlertState::Inactive => "inactive",
+            AlertState::Pending => "pending",
+            AlertState::Firing => "firing",
+        }
+    }
+
+    /// Gauge encoding for `imka_alert_state`: 0 / 1 / 2.
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            AlertState::Inactive => 0.0,
+            AlertState::Pending => 1.0,
+            AlertState::Firing => 2.0,
+        }
+    }
+}
+
+impl fmt::Display for AlertState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Threshold expression evaluated per matching series key.
+#[derive(Clone, Debug)]
+pub enum AlertExpr {
+    /// latest point of the series is above the threshold
+    Latest { above: f64 },
+    /// mean of the last `window` finite points is above the threshold
+    MeanOver { window: usize, above: f64 },
+}
+
+impl AlertExpr {
+    /// `None` means "no data" — treated as clear by the state machine.
+    fn eval(&self, store: &SeriesStore, key: &str) -> Option<f64> {
+        match self {
+            AlertExpr::Latest { .. } => {
+                store.latest(key).map(|p| p.value).filter(|v| v.is_finite())
+            }
+            AlertExpr::MeanOver { window, .. } => store.mean_tail(key, *window),
+        }
+    }
+
+    fn threshold(&self) -> f64 {
+        match self {
+            AlertExpr::Latest { above } | AlertExpr::MeanOver { above, .. } => *above,
+        }
+    }
+}
+
+/// One declarative SLO rule; see module docs.
+#[derive(Clone, Debug)]
+pub struct AlertRule {
+    /// stable rule name (`canary_accuracy`, `latency_p99`, ...)
+    pub name: String,
+    /// series-key prefix the rule expands over (an exact key is its own
+    /// prefix, so fully-qualified rules work too)
+    pub prefix: String,
+    pub expr: AlertExpr,
+    /// consecutive breaching scrapes before Pending escalates to Firing
+    pub for_scrapes: usize,
+    /// consecutive clear scrapes before Firing resolves
+    pub resolve_scrapes: usize,
+}
+
+/// One state transition produced by a scrape evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlertEdge {
+    pub rule: String,
+    pub series: String,
+    pub from: AlertState,
+    pub to: AlertState,
+    /// the evaluated value that caused the transition (NaN on no-data)
+    pub value: f64,
+    pub t_s: f64,
+}
+
+/// Snapshot of one instance for the `alerts` verb / state gauges.
+#[derive(Clone, Debug)]
+pub struct AlertInstance {
+    pub rule: String,
+    pub series: String,
+    pub state: AlertState,
+    pub threshold: f64,
+    /// last evaluated value (NaN while the series has no data)
+    pub value: f64,
+    /// fleet-clock time the instance entered its current state
+    pub since_t_s: f64,
+}
+
+struct InstState {
+    state: AlertState,
+    breach_run: usize,
+    clear_run: usize,
+    value: f64,
+    since_t_s: f64,
+}
+
+/// Rule set + per-instance states; see module docs.
+#[derive(Default)]
+pub struct AlertEngine {
+    rules: Vec<AlertRule>,
+    instances: BTreeMap<(String, String), InstState>,
+}
+
+impl AlertEngine {
+    pub fn new() -> AlertEngine {
+        AlertEngine::default()
+    }
+
+    pub fn add_rule(&mut self, mut rule: AlertRule) {
+        rule.for_scrapes = rule.for_scrapes.max(1);
+        rule.resolve_scrapes = rule.resolve_scrapes.max(1);
+        self.rules.push(rule);
+    }
+
+    pub fn rules(&self) -> &[AlertRule] {
+        &self.rules
+    }
+
+    /// Evaluate every rule against the store; returns the edges of this
+    /// scrape in deterministic (rule, series) order.
+    pub fn eval(&mut self, t_s: f64, store: &SeriesStore) -> Vec<AlertEdge> {
+        let mut edges = Vec::new();
+        for rule in &self.rules {
+            for key in store.keys_matching(&rule.prefix) {
+                let value = rule.expr.eval(store, &key);
+                let breach = value.map(|v| v > rule.expr.threshold()).unwrap_or(false);
+                let id = (rule.name.clone(), key.clone());
+                let inst = self.instances.entry(id).or_insert(InstState {
+                    state: AlertState::Inactive,
+                    breach_run: 0,
+                    clear_run: 0,
+                    value: f64::NAN,
+                    since_t_s: t_s,
+                });
+                inst.value = value.unwrap_or(f64::NAN);
+                let mut transition = |inst: &mut InstState, to: AlertState| {
+                    edges.push(AlertEdge {
+                        rule: rule.name.clone(),
+                        series: key.clone(),
+                        from: inst.state,
+                        to,
+                        value: inst.value,
+                        t_s,
+                    });
+                    inst.state = to;
+                    inst.since_t_s = t_s;
+                };
+                match inst.state {
+                    AlertState::Inactive if breach => {
+                        inst.breach_run = 1;
+                        transition(inst, AlertState::Pending);
+                        if inst.breach_run >= rule.for_scrapes {
+                            transition(inst, AlertState::Firing);
+                        }
+                    }
+                    AlertState::Inactive => {}
+                    AlertState::Pending if breach => {
+                        inst.breach_run += 1;
+                        if inst.breach_run >= rule.for_scrapes {
+                            transition(inst, AlertState::Firing);
+                        }
+                    }
+                    AlertState::Pending => {
+                        // flap: breach did not sustain for `for_scrapes`
+                        inst.breach_run = 0;
+                        transition(inst, AlertState::Inactive);
+                    }
+                    AlertState::Firing if breach => inst.clear_run = 0,
+                    AlertState::Firing => {
+                        inst.clear_run += 1;
+                        if inst.clear_run >= rule.resolve_scrapes {
+                            inst.breach_run = 0;
+                            inst.clear_run = 0;
+                            transition(inst, AlertState::Inactive);
+                        }
+                    }
+                }
+            }
+        }
+        edges
+    }
+
+    /// Current instance states, ordered by (rule, series).
+    pub fn states(&self) -> Vec<AlertInstance> {
+        self.instances
+            .iter()
+            .map(|((rule, series), inst)| AlertInstance {
+                rule: rule.clone(),
+                series: series.clone(),
+                state: inst.state,
+                threshold: self
+                    .rules
+                    .iter()
+                    .find(|r| &r.name == rule)
+                    .map(|r| r.expr.threshold())
+                    .unwrap_or(f64::NAN),
+                value: inst.value,
+                since_t_s: inst.since_t_s,
+            })
+            .collect()
+    }
+
+    /// Number of instances currently firing (optionally one rule only).
+    pub fn firing(&self, rule: Option<&str>) -> usize {
+        self.instances
+            .iter()
+            .filter(|((r, _), inst)| {
+                inst.state == AlertState::Firing && rule.map(|want| r == want).unwrap_or(true)
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(for_scrapes: usize, resolve_scrapes: usize) -> AlertEngine {
+        let mut e = AlertEngine::new();
+        e.add_rule(AlertRule {
+            name: "canary_accuracy".into(),
+            prefix: "imka_canary_rel_err{".into(),
+            expr: AlertExpr::Latest { above: 0.2 },
+            for_scrapes,
+            resolve_scrapes,
+        });
+        e
+    }
+
+    fn key(chip: usize) -> String {
+        format!("imka_canary_rel_err{{chip=\"{chip}\"}}")
+    }
+
+    #[test]
+    fn pending_firing_resolved_hysteresis() {
+        let store = SeriesStore::new(16);
+        let mut e = engine(2, 2);
+        // scrape 1: breach -> Pending (not yet Firing)
+        store.record(&key(0), 1.0, 0.5);
+        let edges = e.eval(1.0, &store);
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].to, AlertState::Pending);
+        assert_eq!(e.firing(None), 0);
+        // scrape 2: still breaching -> Firing
+        store.record(&key(0), 2.0, 0.6);
+        let edges = e.eval(2.0, &store);
+        assert_eq!(edges.len(), 1);
+        assert_eq!((edges[0].from, edges[0].to), (AlertState::Pending, AlertState::Firing));
+        assert_eq!(e.firing(Some("canary_accuracy")), 1);
+        // scrape 3: clear once -> still Firing (resolve needs 2)
+        store.record(&key(0), 3.0, 0.05);
+        assert!(e.eval(3.0, &store).is_empty());
+        assert_eq!(e.firing(None), 1);
+        // scrape 4: clear again -> resolved
+        store.record(&key(0), 4.0, 0.04);
+        let edges = e.eval(4.0, &store);
+        assert_eq!(edges.len(), 1);
+        assert_eq!((edges[0].from, edges[0].to), (AlertState::Firing, AlertState::Inactive));
+        assert_eq!(e.firing(None), 0);
+    }
+
+    #[test]
+    fn one_scrape_flap_is_suppressed() {
+        let store = SeriesStore::new(16);
+        let mut e = engine(3, 1);
+        store.record(&key(0), 1.0, 0.9);
+        let edges = e.eval(1.0, &store);
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].to, AlertState::Pending);
+        // breach did not sustain: back to Inactive, never Firing
+        store.record(&key(0), 2.0, 0.01);
+        let edges = e.eval(2.0, &store);
+        assert_eq!(edges.len(), 1);
+        assert_eq!((edges[0].from, edges[0].to), (AlertState::Pending, AlertState::Inactive));
+        // a later sustained breach starts its run from scratch
+        for t in 3..6 {
+            store.record(&key(0), t as f64, 0.9);
+            e.eval(t as f64, &store);
+        }
+        assert_eq!(e.firing(None), 1);
+    }
+
+    #[test]
+    fn for_scrapes_one_fires_immediately_through_pending() {
+        let store = SeriesStore::new(16);
+        let mut e = engine(1, 1);
+        store.record(&key(0), 1.0, 0.5);
+        let edges = e.eval(1.0, &store);
+        // both edges of the escalation are reported, in order
+        assert_eq!(edges.len(), 2);
+        assert_eq!(edges[0].to, AlertState::Pending);
+        assert_eq!(edges[1].to, AlertState::Firing);
+        assert_eq!(e.firing(None), 1);
+    }
+
+    #[test]
+    fn empty_window_and_nan_are_clear_not_breach() {
+        let store = SeriesStore::new(16);
+        let mut e = AlertEngine::new();
+        e.add_rule(AlertRule {
+            name: "error_budget".into(),
+            prefix: "imka_error_ratio{".into(),
+            expr: AlertExpr::MeanOver { window: 3, above: 0.1 },
+            for_scrapes: 1,
+            resolve_scrapes: 1,
+        });
+        // unknown key: no instances at all
+        assert!(e.eval(1.0, &store).is_empty());
+        assert!(e.states().is_empty());
+        // all-NaN tail: instance exists but stays Inactive
+        store.record("imka_error_ratio{lane=\"rbf\"}", 1.0, f64::NAN);
+        assert!(e.eval(2.0, &store).is_empty());
+        let st = e.states();
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].state, AlertState::Inactive);
+        assert!(st[0].value.is_nan());
+    }
+
+    #[test]
+    fn firing_instance_resolves_when_series_goes_silent() {
+        // an evicted chip's canary gauge stops updating (NaN) — the
+        // alert must resolve via no-data-is-clear instead of firing
+        // forever on the stale last value
+        let store = SeriesStore::new(16);
+        let mut e = engine(1, 1);
+        store.record(&key(2), 1.0, 0.8);
+        e.eval(1.0, &store);
+        assert_eq!(e.firing(None), 1);
+        store.record(&key(2), 2.0, f64::NAN);
+        let edges = e.eval(2.0, &store);
+        assert_eq!(edges.len(), 1);
+        assert_eq!(edges[0].to, AlertState::Inactive);
+        assert_eq!(e.firing(None), 0);
+    }
+
+    #[test]
+    fn rule_expands_one_instance_per_matching_series() {
+        let store = SeriesStore::new(16);
+        let mut e = engine(1, 1);
+        store.record(&key(0), 1.0, 0.9);
+        store.record(&key(1), 1.0, 0.01);
+        e.eval(1.0, &store);
+        let st = e.states();
+        assert_eq!(st.len(), 2);
+        assert_eq!(st[0].series, key(0));
+        assert_eq!(st[0].state, AlertState::Firing);
+        assert_eq!(st[1].state, AlertState::Inactive);
+        assert_eq!(st[0].threshold, 0.2);
+    }
+
+    #[test]
+    fn mean_window_smooths_counter_reset_spikes() {
+        // after a chip eviction the request counter resets; the scraper
+        // records a from-zero rate, which can dip the error *ratio* for
+        // one scrape — a windowed rule must not resolve-and-refire on it
+        let store = SeriesStore::new(16);
+        let mut e = AlertEngine::new();
+        e.add_rule(AlertRule {
+            name: "error_budget_slow".into(),
+            prefix: "imka_error_ratio{".into(),
+            expr: AlertExpr::MeanOver { window: 4, above: 0.1 },
+            for_scrapes: 1,
+            resolve_scrapes: 2,
+        });
+        let k = "imka_error_ratio{lane=\"rbf\"}";
+        for (t, v) in [(1.0, 0.3), (2.0, 0.3), (3.0, 0.0), (4.0, 0.3)] {
+            store.record(k, t, v);
+            e.eval(t, &store);
+        }
+        // mean over the window never dropped below 0.1: still firing,
+        // and the only edges ever emitted were the initial escalation
+        assert_eq!(e.firing(None), 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Bounded, sequence-numbered control-plane event journal.
+//!
+//! Every consequential control-plane transition — eviction, replacement
+//! restore, recalibration, scale up/down, drain/undrain, alert edge —
+//! is appended here with a monotonically increasing sequence number and
+//! the fleet-clock timestamp it happened at. The journal is a bounded
+//! ring: old entries are dropped, but sequence numbers never reset, so
+//! a reader can both page (`{"type":"events","since":N}` on the TCP
+//! server) and detect that it missed entries (`first_seq` jumped past
+//! its cursor).
+//!
+//! Writers are the control plane (one append per transition per tick)
+//! and the alert engine (state edges); readers are the server verb, the
+//! chaos harness (which cross-checks the journal against the fault
+//! schedule it applied), and humans. Appends take a mutex — they are
+//! off the MVM hot path, a handful per control tick at most.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// One journal entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    /// monotone sequence number, never reused even after ring wrap
+    pub seq: u64,
+    /// fleet-clock seconds at append time
+    pub t_s: f64,
+    /// machine-matchable kind: `evict`, `replace`, `recal`, `scale_up`,
+    /// `scale_down`, `drain`, `undrain`, `alert_pending`,
+    /// `alert_firing`, `alert_resolved`, ...
+    pub kind: String,
+    /// human-readable detail (chip index, lane, rule name, value)
+    pub detail: String,
+}
+
+struct Inner {
+    ring: VecDeque<Event>,
+    next_seq: u64,
+}
+
+/// Bounded seq-numbered journal; see module docs.
+pub struct EventJournal {
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl EventJournal {
+    /// `cap` is clamped to at least 1.
+    pub fn new(cap: usize) -> EventJournal {
+        EventJournal {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner {
+                ring: VecDeque::new(),
+                next_seq: 0,
+            }),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Append one entry; returns its sequence number.
+    pub fn push(&self, t_s: f64, kind: &str, detail: String) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        if inner.ring.len() == self.cap {
+            inner.ring.pop_front();
+        }
+        inner.ring.push_back(Event {
+            seq,
+            t_s,
+            kind: kind.to_string(),
+            detail,
+        });
+        seq
+    }
+
+    /// All retained entries with `seq >= since`, oldest first.
+    pub fn since(&self, since: u64) -> Vec<Event> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .ring
+            .iter()
+            .filter(|e| e.seq >= since)
+            .cloned()
+            .collect()
+    }
+
+    /// Every retained entry, oldest first.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.since(0)
+    }
+
+    /// Sequence number the next append will get (== total appends ever).
+    pub fn next_seq(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Oldest retained sequence number, if any entry is retained. A
+    /// reader whose cursor is below this has missed entries.
+    pub fn first_seq(&self) -> Option<u64> {
+        self.inner.lock().unwrap().ring.front().map(|e| e.seq)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_numbers_survive_ring_wrap() {
+        let j = EventJournal::new(3);
+        for i in 0..5u64 {
+            let seq = j.push(i as f64, "evict", format!("chip {i}"));
+            assert_eq!(seq, i);
+        }
+        // entries 0 and 1 were dropped; seq numbers keep counting
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.first_seq(), Some(2));
+        assert_eq!(j.next_seq(), 5);
+        let all = j.snapshot();
+        assert_eq!(all.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn since_pages_from_a_cursor() {
+        let j = EventJournal::new(16);
+        for i in 0..4u64 {
+            j.push(0.0, "recal", format!("chip {i}"));
+        }
+        let tail = j.since(2);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[0].seq, 2);
+        assert_eq!(tail[0].detail, "chip 2");
+        assert!(j.since(99).is_empty());
+        assert_eq!(j.since(0).len(), 4);
+    }
+
+    #[test]
+    fn cap_clamps_to_one() {
+        let j = EventJournal::new(0);
+        assert_eq!(j.cap(), 1);
+        j.push(0.0, "a", String::new());
+        j.push(0.0, "b", String::new());
+        assert_eq!(j.len(), 1);
+        assert_eq!(j.snapshot()[0].kind, "b");
+    }
+}

@@ -84,6 +84,12 @@ impl LogHistogram {
         LogHistogram::new(1.0, 1024.0, 80)
     }
 
+    /// Geometry for relative errors (accuracy canaries): 1e-4 .. 10 in
+    /// 100 buckets (~6% worst-case quantile error).
+    pub fn rel_err() -> Self {
+        LogHistogram::new(1e-4, 10.0, 100)
+    }
+
     fn n(&self) -> usize {
         self.buckets.len() - 2
     }

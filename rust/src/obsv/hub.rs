@@ -1,0 +1,307 @@
+//! The closed observability loop: one object bundling the metric
+//! registry, the event journal, the time-series rings and the SLO alert
+//! engine, with the default rule set built from `[obsv]` config.
+//!
+//! The hub is the integration point the control plane and the TCP
+//! server share:
+//!
+//! - the control plane's canary stage calls [`ObservabilityHub::
+//!   record_canary`] with measured analog-vs-twin relative errors and
+//!   appends its transitions to [`ObservabilityHub::journal`];
+//! - once per scrape interval the caller invokes [`ObservabilityHub::
+//!   scrape`] with any live samples the registry cannot see (replication
+//!   deficit, per-chip core oversubscription); the hub snapshots the
+//!   registry, derives counter rates and per-lane error ratios, runs
+//!   the alert rules, journals every alert edge and refreshes the
+//!   `imka_alert_state` gauges;
+//! - the server's `series` / `alerts` / `events` verbs read back
+//!   through the accessors.
+//!
+//! Scrape *pacing* is the caller's job (the engine uses wall-clock
+//! `scrape_interval_s`; the chaos harness scrapes once per control
+//! tick on the fleet clock) — the hub itself is cadence-agnostic so
+//! both stay deterministic.
+//!
+//! Default SLO rules (thresholds from [`ObsvConfig`]):
+//!
+//! | rule                   | expression                                               |
+//! |------------------------|----------------------------------------------------------|
+//! | `latency_p99`          | per-lane p99 latency above `slo_p99_latency_us`          |
+//! | `error_budget_fast`    | error ratio, mean over 3 scrapes, above 2× budget        |
+//! | `error_budget_slow`    | error ratio, mean over 12 scrapes, above budget          |
+//! | `canary_accuracy`      | measured canary rel err above `slo_canary_rel_err`       |
+//! | `replication_degraded` | shards below the replication target, sustained           |
+//! | `core_oversubscription`| per-chip tiles-in-flight / cores above 1, sustained      |
+
+use std::sync::{Arc, Mutex};
+
+use crate::config::ObsvConfig;
+
+use super::alerts::{AlertEdge, AlertEngine, AlertExpr, AlertInstance, AlertRule, AlertState};
+use super::events::EventJournal;
+use super::hist::LogHistogram;
+use super::registry::{MetricSample, MetricsRegistry};
+use super::series::{Scraper, SeriesStore};
+
+/// Scrapes in the fast error-budget burn window.
+pub const FAST_BURN_WINDOW: usize = 3;
+/// Scrapes in the slow error-budget burn window.
+pub const SLOW_BURN_WINDOW: usize = 12;
+
+/// See module docs.
+pub struct ObservabilityHub {
+    registry: Arc<MetricsRegistry>,
+    journal: EventJournal,
+    store: SeriesStore,
+    scraper: Mutex<Scraper>,
+    alerts: Mutex<AlertEngine>,
+    canary_hist: Arc<LogHistogram>,
+    cfg: ObsvConfig,
+}
+
+impl ObservabilityHub {
+    pub fn new(registry: Arc<MetricsRegistry>, cfg: &ObsvConfig) -> ObservabilityHub {
+        let canary_hist = registry.histogram(
+            "imka_canary_rel_err_fleet",
+            "fleet-wide accuracy-canary relative error vs the digital twin",
+            &[],
+            LogHistogram::rel_err,
+        );
+        let mut alerts = AlertEngine::new();
+        let (for_s, res_s) = (cfg.alert_for_scrapes, cfg.alert_resolve_scrapes);
+        let rule = |name: &str, prefix: &str, expr: AlertExpr, for_scrapes: usize| AlertRule {
+            name: name.into(),
+            prefix: prefix.into(),
+            expr,
+            for_scrapes,
+            resolve_scrapes: res_s,
+        };
+        alerts.add_rule(rule(
+            "latency_p99",
+            "imka_lane_latency_us_p99{",
+            AlertExpr::Latest { above: cfg.slo_p99_latency_us },
+            for_s,
+        ));
+        alerts.add_rule(rule(
+            "error_budget_fast",
+            "imka_error_ratio{",
+            AlertExpr::MeanOver { window: FAST_BURN_WINDOW, above: 2.0 * cfg.slo_error_ratio },
+            for_s,
+        ));
+        alerts.add_rule(rule(
+            "error_budget_slow",
+            "imka_error_ratio{",
+            AlertExpr::MeanOver { window: SLOW_BURN_WINDOW, above: cfg.slo_error_ratio },
+            for_s,
+        ));
+        alerts.add_rule(rule(
+            "canary_accuracy",
+            "imka_canary_rel_err{",
+            AlertExpr::Latest { above: cfg.slo_canary_rel_err },
+            for_s,
+        ));
+        // "degraded too long": never page on the tick of the eviction
+        // itself — the replacement queue legitimately needs a few ticks
+        alerts.add_rule(rule(
+            "replication_degraded",
+            "imka_fleet_replication_deficit",
+            AlertExpr::Latest { above: 0.5 },
+            for_s.max(3),
+        ));
+        alerts.add_rule(rule(
+            "core_oversubscription",
+            "imka_chip_core_oversubscription{",
+            AlertExpr::MeanOver { window: FAST_BURN_WINDOW, above: 1.0 },
+            for_s,
+        ));
+        ObservabilityHub {
+            registry,
+            journal: EventJournal::new(cfg.events_capacity),
+            store: SeriesStore::new(cfg.series_capacity),
+            scraper: Mutex::new(Scraper::new()),
+            alerts: Mutex::new(alerts),
+            canary_hist,
+            cfg: cfg.clone(),
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
+    pub fn journal(&self) -> &EventJournal {
+        &self.journal
+    }
+
+    pub fn series(&self) -> &SeriesStore {
+        &self.store
+    }
+
+    pub fn cfg(&self) -> &ObsvConfig {
+        &self.cfg
+    }
+
+    /// Record one measured (lane, chip) canary result: the labelled
+    /// gauge the `canary_accuracy` rule watches plus the fleet-wide
+    /// histogram.
+    pub fn record_canary(&self, lane: &str, chip: usize, rel_err: f64) {
+        self.registry
+            .gauge(
+                "imka_canary_rel_err",
+                "measured analog-vs-twin relative error of the canary probe",
+                &[("lane", lane), ("chip", &chip.to_string())],
+            )
+            .set(rel_err);
+        self.canary_hist.record(rel_err);
+    }
+
+    /// One scrape pass; see module docs. Returns the alert edges of
+    /// this scrape (already journaled).
+    pub fn scrape(&self, t_s: f64, extra: &[MetricSample]) -> Vec<AlertEdge> {
+        // alert-state gauges are outputs of the previous scrape — keep
+        // them out of the rings so rules never read their own echo
+        let mut samples: Vec<MetricSample> = self
+            .registry
+            .samples()
+            .into_iter()
+            .filter(|s| !s.name.starts_with("imka_alert_state"))
+            .collect();
+        samples.extend_from_slice(extra);
+        self.scraper.lock().unwrap().scrape(&self.store, t_s, &samples);
+        self.derive_error_ratios(t_s);
+        let edges = self.alerts.lock().unwrap().eval(t_s, &self.store);
+        for e in &edges {
+            let kind = match (e.from, e.to) {
+                (_, AlertState::Pending) => "alert_pending",
+                (_, AlertState::Firing) => "alert_firing",
+                (AlertState::Firing, _) => "alert_resolved",
+                _ => "alert_suppressed",
+            };
+            self.journal
+                .push(t_s, kind, format!("{}: {} (value {:.6})", e.rule, e.series, e.value));
+        }
+        for inst in self.alert_states() {
+            self.registry
+                .gauge(
+                    "imka_alert_state",
+                    "SLO alert state: 0 inactive, 1 pending, 2 firing",
+                    &[("rule", &inst.rule), ("series", &inst.series)],
+                )
+                .set(inst.state.as_f64());
+        }
+        edges
+    }
+
+    /// Derive per-lane `imka_error_ratio{...}` series from the request
+    /// and error counter rates of the scrape that just landed.
+    fn derive_error_ratios(&self, t_s: f64) {
+        const REQ: &str = "imka_requests_total";
+        const ERR: &str = "imka_request_errors_total";
+        for key in self.store.keys_matching("imka_requests_total{") {
+            if !key.ends_with('}') {
+                continue; // skip the derived :rate series themselves
+            }
+            let labels = &key[REQ.len()..];
+            let req_rate = match self.store.latest(&format!("{REQ}{labels}:rate")) {
+                // no rate yet (first scrape) or stale: nothing to derive
+                Some(p) if p.t_s == t_s && p.value > 0.0 => p.value,
+                _ => continue,
+            };
+            let err_rate = self
+                .store
+                .latest(&format!("{ERR}{labels}:rate"))
+                .filter(|p| p.t_s == t_s)
+                .map(|p| p.value)
+                .unwrap_or(0.0);
+            self.store
+                .record(&format!("imka_error_ratio{labels}"), t_s, err_rate / req_rate);
+        }
+    }
+
+    /// Current alert instance states, ordered by (rule, series).
+    pub fn alert_states(&self) -> Vec<AlertInstance> {
+        self.alerts.lock().unwrap().states()
+    }
+
+    /// Instances currently firing (optionally for one rule).
+    pub fn firing(&self, rule: Option<&str>) -> usize {
+        self.alerts.lock().unwrap().firing(rule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hub() -> ObservabilityHub {
+        let cfg = ObsvConfig {
+            alert_for_scrapes: 1,
+            alert_resolve_scrapes: 1,
+            slo_canary_rel_err: 0.2,
+            slo_error_ratio: 0.1,
+            ..ObsvConfig::default()
+        };
+        ObservabilityHub::new(Arc::new(MetricsRegistry::new()), &cfg)
+    }
+
+    #[test]
+    fn canary_breach_fires_and_resolves_with_journal_entries() {
+        let h = hub();
+        h.record_canary("rbf", 0, 0.5);
+        let edges = h.scrape(1.0, &[]);
+        assert!(edges.iter().any(|e| e.rule == "canary_accuracy" && e.to == AlertState::Firing));
+        assert_eq!(h.firing(Some("canary_accuracy")), 1);
+        // gauge exposition carries the state
+        assert!(h.registry().render().contains("imka_alert_state{rule=\"canary_accuracy\""));
+        // recal brings the measured error back under the envelope
+        h.record_canary("rbf", 0, 0.01);
+        h.scrape(2.0, &[]);
+        assert_eq!(h.firing(None), 0);
+        let kinds: Vec<String> = h.journal.snapshot().iter().map(|e| e.kind.clone()).collect();
+        assert!(kinds.contains(&"alert_firing".to_string()), "{kinds:?}");
+        assert!(kinds.contains(&"alert_resolved".to_string()), "{kinds:?}");
+    }
+
+    #[test]
+    fn error_ratio_is_derived_from_counter_rates() {
+        let h = hub();
+        let req = h.registry().counter("imka_requests_total", "reqs", &[("lane", "rbf")]);
+        let err =
+            h.registry().counter("imka_request_errors_total", "errs", &[("lane", "rbf")]);
+        req.add(10.0);
+        h.scrape(0.0, &[]);
+        req.add(10.0);
+        err.add(4.0);
+        h.scrape(1.0, &[]);
+        let ratio = h.series().latest("imka_error_ratio{lane=\"rbf\"}").unwrap();
+        assert!((ratio.value - 0.4).abs() < 1e-12, "{}", ratio.value);
+        // 0.4 mean over the fast window beats 2×0.1: the fast burn fires
+        h.scrape(2.0, &[]);
+        assert!(h.firing(Some("error_budget_fast")) >= 1);
+    }
+
+    #[test]
+    fn extra_samples_feed_fleet_rules() {
+        let h = hub();
+        let deficit = MetricSample {
+            name: "imka_fleet_replication_deficit".into(),
+            labels: Vec::new(),
+            kind: crate::obsv::registry::SampleKind::Gauge,
+            value: 1.0,
+        };
+        for t in 0..4 {
+            h.scrape(t as f64, &[deficit.clone()]);
+        }
+        // for_scrapes is clamped to 3 for this rule: fires on scrape 3
+        assert_eq!(h.firing(Some("replication_degraded")), 1);
+    }
+
+    #[test]
+    fn alert_state_gauges_do_not_feed_back_into_series() {
+        let h = hub();
+        h.record_canary("rbf", 0, 0.9);
+        h.scrape(1.0, &[]);
+        h.scrape(2.0, &[]);
+        assert!(h.series().keys_matching("imka_alert_state").is_empty());
+    }
+}

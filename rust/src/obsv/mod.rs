@@ -19,16 +19,38 @@
 //!   queue wait, lock wait, analog MVM, digital combine), sampled by
 //!   request id at a configurable rate and queryable via the server's
 //!   `trace` verb.
+//! - [`series::SeriesStore`] / [`series::Scraper`] — bounded per-metric
+//!   time-series rings filled by a scrape pass, with per-second rates
+//!   derived from counter deltas (reset-safe) — history without an
+//!   external scraper, served by the `series` verb.
+//! - [`events::EventJournal`] — a bounded, sequence-numbered journal of
+//!   control-plane transitions (evictions, recals, scale events, alert
+//!   edges), pageable via the `events` verb.
+//! - [`alerts::AlertEngine`] — declarative SLO rules evaluated per
+//!   scrape with pending → firing → resolved hysteresis, exposed as
+//!   `imka_alert_state` gauges and the `alerts` verb.
+//! - [`hub::ObservabilityHub`] — the integration bundle (registry +
+//!   journal + series + alerts + default rule set from `[obsv]`
+//!   config) shared by the control plane, the TCP server and the chaos
+//!   harness.
 //!
 //! The serving integration (per-lane rows, fleet gauges, the `metrics`
-//! TCP verb) lives in `coordinator::telemetry`; this module has no
-//! knowledge of lanes, chips or sessions and is reusable by benches and
-//! the chaos harness.
+//! TCP verb) lives in `coordinator::telemetry`; apart from the hub's
+//! default rule names, this module has no knowledge of lanes, chips or
+//! sessions and is reusable by benches and the chaos harness.
 
+pub mod alerts;
+pub mod events;
 pub mod hist;
+pub mod hub;
 pub mod registry;
+pub mod series;
 pub mod trace;
 
+pub use alerts::{AlertEngine, AlertExpr, AlertInstance, AlertRule, AlertState};
+pub use events::{Event, EventJournal};
 pub use hist::LogHistogram;
-pub use registry::{Counter, Gauge, MetricsRegistry};
+pub use hub::ObservabilityHub;
+pub use registry::{Counter, Gauge, MetricSample, MetricsRegistry, SampleKind};
+pub use series::{Scraper, SeriesPoint, SeriesStore};
 pub use trace::{MvmProfile, TraceRing, TraceSpan};

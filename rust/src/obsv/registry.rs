@@ -104,6 +104,34 @@ pub struct MetricsRegistry {
     families: RwLock<BTreeMap<String, Family>>,
 }
 
+/// Whether a scraped sample is cumulative (rate-derivable) or a level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleKind {
+    Counter,
+    Gauge,
+}
+
+/// One scraped metric value; see [`MetricsRegistry::samples`].
+#[derive(Clone, Debug)]
+pub struct MetricSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub kind: SampleKind,
+    pub value: f64,
+}
+
+impl MetricSample {
+    /// Stable series key: the exposition-style `name{labels}` line head,
+    /// used to address one ring in [`crate::obsv::series::SeriesStore`].
+    pub fn key(&self) -> String {
+        let mut s = String::new();
+        push_sample(&mut s, &self.name, &self.labels, &[], 0.0);
+        // strip the trailing " 0\n" the renderer appended
+        s.truncate(s.len() - 3);
+        s
+    }
+}
+
 fn own_labels(labels: &[(&str, &str)]) -> LabelSet {
     let mut v: LabelSet = labels
         .iter()
@@ -194,6 +222,43 @@ impl MetricsRegistry {
         }
     }
 
+    /// Read-only snapshot of every registered metric's current value,
+    /// sorted by family name then label set. Histograms are flattened
+    /// into the derived samples a scraper wants (`_count`, `_sum`,
+    /// `_p50`/`_p95`/`_p99`); percentiles of an empty histogram are
+    /// omitted rather than reported as `NaN`. This is what
+    /// [`crate::obsv::series`] scrapes into its time-series rings.
+    pub fn samples(&self) -> Vec<MetricSample> {
+        let mut out = Vec::new();
+        let fams = self.families.read().unwrap();
+        for (name, fam) in fams.iter() {
+            for (labels, handle) in fam.metrics.iter() {
+                let mut push = |suffix: &str, kind: SampleKind, value: f64| {
+                    out.push(MetricSample {
+                        name: format!("{name}{suffix}"),
+                        labels: labels.clone(),
+                        kind,
+                        value,
+                    });
+                };
+                match handle {
+                    Handle::Counter(c) => push("", SampleKind::Counter, c.get()),
+                    Handle::Gauge(g) => push("", SampleKind::Gauge, g.get()),
+                    Handle::Hist(h) => {
+                        push("_count", SampleKind::Counter, h.count() as f64);
+                        push("_sum", SampleKind::Counter, h.sum());
+                        if h.count() > 0 {
+                            push("_p50", SampleKind::Gauge, h.percentile(50.0));
+                            push("_p95", SampleKind::Gauge, h.percentile(95.0));
+                            push("_p99", SampleKind::Gauge, h.percentile(99.0));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Prometheus text exposition of every registered family, sorted by
     /// family name then label set.
     pub fn render(&self) -> String {
@@ -232,9 +297,18 @@ impl MetricsRegistry {
     }
 }
 
-/// Format a sample value: integral values render without a fraction.
+/// Format a sample value: integral values render without a fraction,
+/// non-finite values render in the canonical Prometheus spellings
+/// (`NaN`, `+Inf`, `-Inf`) — Rust's own `{}` would emit `inf`/`-inf`,
+/// which strict exposition parsers reject.
 pub fn fmt_value(v: f64) -> String {
-    if v.is_finite() && v.fract() == 0.0 && v.abs() < 1e15 {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
         format!("{}", v as i64)
     } else {
         format!("{v}")
@@ -357,6 +431,59 @@ mod tests {
             let (_, val) = l.rsplit_once(' ').unwrap();
             assert!(val == "+Inf" || val.parse::<f64>().is_ok(), "bad line {l}");
         }
+    }
+
+    #[test]
+    fn non_finite_values_render_canonically() {
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        // a never-served chip's rel-err gauge is NaN; the exposition
+        // line must still be the canonical token, not Rust's "inf"
+        let r = MetricsRegistry::new();
+        r.gauge("imka_canary_rel_err", "canary", &[("chip", "0")])
+            .set(f64::NAN);
+        r.gauge("imka_canary_rel_err", "canary", &[("chip", "1")])
+            .set(f64::INFINITY);
+        let text = r.render();
+        assert!(text.contains("imka_canary_rel_err{chip=\"0\"} NaN"), "{text}");
+        assert!(text.contains("imka_canary_rel_err{chip=\"1\"} +Inf"), "{text}");
+        assert!(!text.contains(" inf"), "{text}");
+    }
+
+    #[test]
+    fn samples_snapshot_flattens_histograms() {
+        let r = MetricsRegistry::new();
+        r.counter("imka_requests_total", "reqs", &[("lane", "rbf")])
+            .add(5.0);
+        r.gauge("imka_fleet_inflight", "inflight", &[]).set(2.0);
+        let h = r.histogram(
+            "imka_lane_latency_us",
+            "latency",
+            &[("lane", "rbf")],
+            LogHistogram::latency_us,
+        );
+        // empty histogram: count/sum only, no NaN percentiles
+        let empty: Vec<String> = r
+            .samples()
+            .iter()
+            .filter(|s| s.name.starts_with("imka_lane_latency_us"))
+            .map(|s| s.name.clone())
+            .collect();
+        assert_eq!(empty, vec!["imka_lane_latency_us_count", "imka_lane_latency_us_sum"]);
+        h.record(100.0);
+        let samples = r.samples();
+        let find = |n: &str| samples.iter().find(|s| s.name == n).unwrap();
+        assert_eq!(find("imka_requests_total").kind, SampleKind::Counter);
+        assert_eq!(find("imka_requests_total").value, 5.0);
+        assert_eq!(find("imka_fleet_inflight").kind, SampleKind::Gauge);
+        assert_eq!(find("imka_lane_latency_us_count").value, 1.0);
+        assert_eq!(find("imka_lane_latency_us_p99").kind, SampleKind::Gauge);
+        assert_eq!(
+            find("imka_requests_total").key(),
+            "imka_requests_total{lane=\"rbf\"}"
+        );
+        assert_eq!(find("imka_fleet_inflight").key(), "imka_fleet_inflight");
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Bounded in-process time series: per-metric rings on the fleet clock.
+//!
+//! A scrape pass ([`Scraper::scrape`]) snapshots metric samples (from
+//! [`MetricsRegistry::samples`](super::registry::MetricsRegistry::samples)
+//! plus any caller-supplied extras) into one bounded ring per series
+//! key, and derives per-second **rates** from counter deltas — so the
+//! deployment gets requests/s, error ratios and latency-percentile
+//! history without an external scraper. Memory is strictly bounded:
+//! each ring holds at most `cap` points and the store refuses new keys
+//! beyond [`MAX_SERIES`].
+//!
+//! Series keys are the exposition line heads (`name{labels}`), e.g.
+//! `imka_lane_latency_us_p99{lane="rbf"}`; derived rate series append
+//! `:rate`. The `{"type":"series"}` TCP verb serves rings by key or key
+//! prefix; the alert engine ([`super::alerts`]) evaluates its rule
+//! windows against the same store.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use super::registry::{MetricSample, SampleKind};
+
+/// Hard cap on distinct series keys — a leak guard, far above any real
+/// fleet (lanes × chips × a dozen families).
+pub const MAX_SERIES: usize = 4096;
+
+/// One point: fleet-clock timestamp + value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SeriesPoint {
+    pub t_s: f64,
+    pub value: f64,
+}
+
+/// Bounded per-key rings; see module docs.
+pub struct SeriesStore {
+    cap: usize,
+    series: Mutex<BTreeMap<String, VecDeque<SeriesPoint>>>,
+}
+
+impl SeriesStore {
+    /// `cap` points per ring, clamped to at least 2 (a rate needs two).
+    pub fn new(cap: usize) -> SeriesStore {
+        SeriesStore {
+            cap: cap.max(2),
+            series: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Append one point to `key`'s ring (dropping the oldest at cap).
+    /// Non-finite values are recorded as-is — `NaN` gaps are data.
+    pub fn record(&self, key: &str, t_s: f64, value: f64) {
+        let mut map = self.series.lock().unwrap();
+        if !map.contains_key(key) && map.len() >= MAX_SERIES {
+            return;
+        }
+        let ring = map.entry(key.to_string()).or_default();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(SeriesPoint { t_s, value });
+    }
+
+    /// All known keys, sorted.
+    pub fn keys(&self) -> Vec<String> {
+        self.series.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Keys starting with `prefix`, sorted. An exact key matches its
+    /// own prefix, so this also resolves fully-qualified lookups.
+    pub fn keys_matching(&self, prefix: &str) -> Vec<String> {
+        self.series
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
+    /// Full ring for `key`, oldest first; empty if unknown.
+    pub fn get(&self, key: &str) -> Vec<SeriesPoint> {
+        self.series
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|r| r.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Most recent point of `key`.
+    pub fn latest(&self, key: &str) -> Option<SeriesPoint> {
+        self.series
+            .lock()
+            .unwrap()
+            .get(key)
+            .and_then(|r| r.back().copied())
+    }
+
+    /// Mean of the last `window` finite points of `key`; `None` when
+    /// the window is empty (unknown key, empty ring, or all-NaN tail) —
+    /// "no data" is distinct from 0 for alert rules.
+    pub fn mean_tail(&self, key: &str, window: usize) -> Option<f64> {
+        let map = self.series.lock().unwrap();
+        let ring = map.get(key)?;
+        let n = window.max(1).min(ring.len());
+        let tail = ring.iter().rev().take(n).filter(|p| p.value.is_finite());
+        let (mut sum, mut count) = (0.0, 0usize);
+        for p in tail {
+            sum += p.value;
+            count += 1;
+        }
+        if count == 0 {
+            None
+        } else {
+            Some(sum / count as f64)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.series.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Scrape driver: feeds samples into a [`SeriesStore`], remembering the
+/// previous cumulative value of every counter so it can record derived
+/// `:rate` series. A counter that went *backwards* (chip evicted and
+/// its slot's counters replaced, process restart) is treated as a
+/// reset: the new cumulative value is the delta, never a negative rate.
+#[derive(Default)]
+pub struct Scraper {
+    last_counter: BTreeMap<String, f64>,
+    last_t_s: Option<f64>,
+}
+
+impl Scraper {
+    pub fn new() -> Scraper {
+        Scraper::default()
+    }
+
+    /// Scrapes before any data arrived record nothing for rates; the
+    /// first observation of each counter seeds its baseline.
+    pub fn scrape(&mut self, store: &SeriesStore, t_s: f64, samples: &[MetricSample]) {
+        let dt = self.last_t_s.map(|last| t_s - last);
+        for s in samples {
+            let key = s.key();
+            store.record(&key, t_s, s.value);
+            if s.kind != SampleKind::Counter {
+                continue;
+            }
+            let prev = self.last_counter.insert(key.clone(), s.value);
+            if let (Some(prev), Some(dt)) = (prev, dt) {
+                if dt > 0.0 {
+                    // backwards counter == reset: count from zero
+                    let delta = if s.value >= prev { s.value - prev } else { s.value };
+                    store.record(&format!("{key}:rate"), t_s, delta / dt);
+                }
+            }
+        }
+        self.last_t_s = Some(t_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counter(name: &str, lane: &str, v: f64) -> MetricSample {
+        MetricSample {
+            name: name.to_string(),
+            labels: vec![("lane".to_string(), lane.to_string())],
+            kind: SampleKind::Counter,
+            value: v,
+        }
+    }
+
+    fn gauge(name: &str, v: f64) -> MetricSample {
+        MetricSample {
+            name: name.to_string(),
+            labels: Vec::new(),
+            kind: SampleKind::Gauge,
+            value: v,
+        }
+    }
+
+    #[test]
+    fn rings_are_bounded_and_ordered() {
+        let s = SeriesStore::new(3);
+        for i in 0..5 {
+            s.record("k", i as f64, (i * 10) as f64);
+        }
+        let pts = s.get("k");
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].value, 20.0);
+        assert_eq!(pts[2].value, 40.0);
+        assert_eq!(s.latest("k").unwrap().t_s, 4.0);
+        assert!(s.get("missing").is_empty());
+    }
+
+    #[test]
+    fn mean_tail_skips_nan_and_reports_no_data() {
+        let s = SeriesStore::new(8);
+        assert_eq!(s.mean_tail("k", 3), None);
+        s.record("k", 0.0, f64::NAN);
+        assert_eq!(s.mean_tail("k", 3), None);
+        s.record("k", 1.0, 2.0);
+        s.record("k", 2.0, 4.0);
+        assert_eq!(s.mean_tail("k", 2), Some(3.0));
+        assert_eq!(s.mean_tail("k", 10), Some(3.0));
+    }
+
+    #[test]
+    fn prefix_matching_resolves_labelled_families() {
+        let s = SeriesStore::new(4);
+        s.record("imka_canary_rel_err{chip=\"0\",lane=\"rbf\"}", 0.0, 0.1);
+        s.record("imka_canary_rel_err{chip=\"1\",lane=\"rbf\"}", 0.0, 0.2);
+        s.record("imka_requests_total{lane=\"rbf\"}", 0.0, 5.0);
+        assert_eq!(s.keys_matching("imka_canary_rel_err{").len(), 2);
+        assert_eq!(s.keys().len(), 3);
+    }
+
+    #[test]
+    fn scraper_derives_rates_and_handles_resets() {
+        let store = SeriesStore::new(16);
+        let mut sc = Scraper::new();
+        sc.scrape(&store, 0.0, &[counter("imka_requests_total", "rbf", 10.0)]);
+        // first scrape seeds the baseline, no rate yet
+        assert!(store.get("imka_requests_total{lane=\"rbf\"}:rate").is_empty());
+        sc.scrape(&store, 2.0, &[counter("imka_requests_total", "rbf", 16.0)]);
+        let rate = store.latest("imka_requests_total{lane=\"rbf\"}:rate").unwrap();
+        assert!((rate.value - 3.0).abs() < 1e-12, "{}", rate.value);
+        // counter reset (evicted chip's slot reprogrammed): new value is
+        // below the old cumulative — rate counts from zero, not negative
+        sc.scrape(&store, 4.0, &[counter("imka_requests_total", "rbf", 4.0)]);
+        let rate = store.latest("imka_requests_total{lane=\"rbf\"}:rate").unwrap();
+        assert!((rate.value - 2.0).abs() < 1e-12, "{}", rate.value);
+    }
+
+    #[test]
+    fn gauges_record_raw_without_rates() {
+        let store = SeriesStore::new(16);
+        let mut sc = Scraper::new();
+        sc.scrape(&store, 0.0, &[gauge("imka_fleet_inflight", 3.0)]);
+        sc.scrape(&store, 1.0, &[gauge("imka_fleet_inflight", 5.0)]);
+        assert_eq!(store.get("imka_fleet_inflight").len(), 2);
+        assert!(store.get("imka_fleet_inflight:rate").is_empty());
+    }
+}

@@ -72,6 +72,12 @@ impl TraceRing {
         self.sample_every
     }
 
+    /// Configured ring capacity — the largest useful `latest` limit,
+    /// which the server's `trace` verb clamps requests to.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
     /// Does this request id get a span? Deterministic in the id, so a
     /// caller can tell from a reply id whether to expect a span.
     pub fn sampled(&self, request_id: u64) -> bool {

@@ -12,18 +12,33 @@
 //! traffic quanta. Traffic-side measurements (latency, relative error)
 //! vary run to run per the PR-5 caveat, so accuracy invariants are
 //! envelopes, not bit-asserts.
+//!
+//! The run also closes the ISSUE-8 observability loop: an
+//! [`ObservabilityHub`] rides the control plane (canary probes every
+//! tick, one scrape per tick on the fleet clock), with the canary SLO
+//! adapted to the fleet's measured noise floor so that the *only*
+//! breach is the scheduled backbone drift jump — measured canary values
+//! are interleaving-noisy, but the breach/no-breach decision has wide
+//! margins on both sides and therefore replays. Exit checks assert the
+//! journal agrees with the applied-op trail, the jump fired (then
+//! resolved) the accuracy alert, and nothing is still firing at exit.
+
+use std::sync::Arc;
 
 use super::invariants::InvariantChecker;
 use super::schedule::{ChaosOp, FaultSchedule};
 use super::ChaosConfig;
-use crate::config::{AttnServeConfig, ChipConfig, ControlConfig, FleetConfig};
+use crate::config::{AttnServeConfig, ChipConfig, ControlConfig, FleetConfig, ObsvConfig};
 use crate::coordinator::request::{KernelLane, LaneId, PathKind};
 use crate::coordinator::SessionManager;
 use crate::features::postprocess;
 use crate::features::sampler::{sample_omega, Sampler};
-use crate::fleet::{ControlPlane, FleetPool, PlacementPolicy, RouterPolicy};
+use crate::fleet::{
+    estimated_drift_error, ControlPlane, FleetPool, PlacementPolicy, RouterPolicy,
+};
 use crate::kernels::{approx_error, gram, gram_features, Kernel};
 use crate::linalg::{matmul, Mat};
+use crate::obsv::{AlertInstance, AlertState, Event, MetricsRegistry, ObservabilityHub};
 use crate::util::stats::rel_fro_error;
 use crate::util::threads::parallel_map;
 use crate::util::{Rng, Summary, Timer};
@@ -78,6 +93,21 @@ pub struct ChaosReport {
     pub throughput_before: f64,
     pub throughput_during: f64,
     pub throughput_after: f64,
+    /// worst canary rel err measured on the pristine fleet (max over
+    /// (lane, replica) samples) — the noise floor the SLO adapts to
+    pub canary_baseline: f64,
+    /// worst canary rel err any control tick measured during the run
+    pub canary_worst: f64,
+    /// the adaptive `slo_canary_rel_err` this run alerted on
+    pub canary_slo: f64,
+    /// `canary_accuracy` firing edges journaled during the run
+    pub accuracy_alerts_fired: usize,
+    /// alert instances (any rule) still firing when the run ended
+    pub alerts_firing_at_exit: usize,
+    /// the full control-plane event journal, in sequence order
+    pub journal: Vec<Event>,
+    /// final alert-instance states at exit, ordered by (rule, series)
+    pub alert_states: Vec<AlertInstance>,
     pub violations: Vec<Violation>,
 }
 
@@ -113,6 +143,35 @@ impl ChaosReport {
             "feature requests answered with a typed error",
             self.feature_err as f64,
         );
+        count(
+            "imka_chaos_accuracy_alerts_fired_total",
+            "canary accuracy alerts that fired during chaos",
+            self.accuracy_alerts_fired as f64,
+        );
+        count(
+            "imka_chaos_journal_events_total",
+            "control-plane journal entries produced during chaos",
+            self.journal.len() as f64,
+        );
+        registry
+            .gauge(
+                "imka_chaos_alerts_firing_at_exit",
+                "alert instances still firing when the chaos run ended",
+                &[],
+            )
+            .set(self.alerts_firing_at_exit as f64);
+        // per-rule final states, in the same form the serving hub
+        // exposes, so `ci.sh` can grep the chaos exposition for a
+        // still-firing accuracy alert
+        for inst in &self.alert_states {
+            registry
+                .gauge(
+                    "imka_alert_state",
+                    "SLO alert state at chaos exit: 0 inactive, 1 pending, 2 firing",
+                    &[("rule", &inst.rule), ("series", &inst.series)],
+                )
+                .set(inst.state.as_f64());
+        }
     }
 
     /// Panic if any invariant was violated, printing the schedule seed
@@ -245,6 +304,38 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
     let gram_cap = cfg.gram_envelope.0 * gram_baseline + cfg.gram_envelope.1;
     let proj_cap = cfg.proj_envelope.0 * proj_baseline + cfg.proj_envelope.1;
 
+    // accuracy-canary + SLO alert loop (ISSUE 8). The canary SLO is
+    // adaptive: the pristine fleet's own measured noise floor with 30%
+    // headroom (read noise is interleaving-dependent, so the quiet-state
+    // margin must be wide enough that the breach decision replays) plus
+    // half the analytic drift error of the backbone jump, in quadrature.
+    // Quiet-state measurements sit far below it, the post-jump
+    // measurement far above — the only breach is the scheduled one.
+    let canary_batch = 8;
+    let canary_baseline = pool
+        .canary_probe(canary_batch)
+        .iter()
+        .map(|c| c.rel_err)
+        .fold(0.0f64, f64::max);
+    assert!(
+        canary_baseline.is_finite() && canary_baseline > 0.0,
+        "pristine fleet must serve the canary probe"
+    );
+    let jump_err = estimated_drift_error(&chip, cfg.recal_jump_s);
+    let canary_slo = ((1.3 * canary_baseline).powi(2) + (jump_err / 2.0).powi(2)).sqrt();
+    let hub = Arc::new(ObservabilityHub::new(
+        Arc::new(MetricsRegistry::new()),
+        &ObsvConfig {
+            canary_batch,
+            canary_period_ticks: 1,
+            slo_canary_rel_err: canary_slo,
+            alert_for_scrapes: 1,
+            alert_resolve_scrapes: 1,
+            ..ObsvConfig::default()
+        },
+    ));
+    plane.attach_observability(hub.clone());
+
     // warm both sessions so per-quantum rel-error means never ride on a
     // single-token running sum
     let mut attn_expected: u64 = 0;
@@ -282,6 +373,7 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
     let (mut gram_worst, mut gram_final) = (gram_baseline, gram_baseline);
     let mut proj_worst = proj_baseline;
     let mut attn_rel_worst = 0.0f64;
+    let mut canary_worst = canary_baseline;
 
     for (i, step) in schedule.steps.iter().enumerate() {
         pool.advance_clock(step.dt_s);
@@ -525,10 +617,16 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
                 // an evicted backbone kill no longer counts as an
                 // outstanding fault
                 kill_faulted.retain(|&c| pool.chip_health(c).active());
+                for c in &report.canary {
+                    canary_worst = canary_worst.max(c.rel_err);
+                }
                 checker.observe_tick(&report);
             }
             Err(e) => tick_errors.push(format!("step {i}: {e}")),
         }
+        // one scrape per control tick on the fleet clock: series points,
+        // rates and alert evaluations stay schedule-deterministic
+        plane.scrape(&pool);
 
         // -- invariants --------------------------------------------------
         let pf_outstanding: usize =
@@ -573,6 +671,30 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
         }
     }
 
+    // settle ticks: a breach near the end of the schedule still gets its
+    // post-recal canary measurement and a resolving scrape before exit
+    // accounting. Bounded, quiet (no ops, neutral queue depth), and part
+    // of the run — so exit state is as deterministic as the schedule.
+    let mut settled = 0;
+    while hub.firing(None) > 0 && settled < 4 {
+        pool.advance_clock(1.0);
+        match plane.tick_with_depth(&pool, 1) {
+            Ok(report) => {
+                events.evictions += report.evicted.len();
+                events.replaced += report.replaced.len();
+                events.recals += report.recalibrated.len();
+                events.scale_ups += report.added.len();
+                events.scale_downs += report.retired.len();
+                for c in &report.canary {
+                    canary_worst = canary_worst.max(c.rel_err);
+                }
+            }
+            Err(e) => tick_errors.push(format!("settle: {e}")),
+        }
+        plane.scrape(&pool);
+        settled += 1;
+    }
+
     // closing returns the exact token count each session absorbed
     match mgr.close(analog.id) {
         Ok(n) if n as u64 == attn_expected => {}
@@ -590,6 +712,69 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
         ),
         Err(e) => checker.record(schedule.steps.len(), format!("digital close failed: {e}")),
     }
+
+    // observability exit accounting: the journal must agree with the
+    // control-side event trail, the scheduled drift jump must have
+    // tripped (and resolved) the accuracy alert, and nothing may still
+    // be firing on the recalibrated fleet
+    let end = schedule.steps.len();
+    let journal = hub.journal().snapshot();
+    let jcount = |kind: &str| journal.iter().filter(|e| e.kind == kind).count();
+    for (kind, want) in [
+        ("evict", events.evictions),
+        ("replace", events.replaced),
+        ("recal", events.recals),
+        ("scale_up", events.scale_ups),
+        ("scale_down", events.scale_downs),
+    ] {
+        if jcount(kind) != want {
+            checker.record(
+                end,
+                format!(
+                    "journal holds {} '{kind}' entries, the control trail counted {want}",
+                    jcount(kind)
+                ),
+            );
+        }
+    }
+    let accuracy_alerts_fired = journal
+        .iter()
+        .filter(|e| e.kind == "alert_firing" && e.detail.starts_with("canary_accuracy:"))
+        .count();
+    let accuracy_resolved = journal
+        .iter()
+        .filter(|e| e.kind == "alert_resolved" && e.detail.starts_with("canary_accuracy:"))
+        .count();
+    if events.drift_jumps > 0 {
+        if accuracy_alerts_fired == 0 {
+            checker.record(
+                end,
+                "backbone drift jump never fired the canary accuracy alert".to_string(),
+            );
+        } else {
+            if !journal
+                .iter()
+                .any(|e| e.kind == "recal" && e.detail.contains("measured canary breach"))
+            {
+                checker.record(
+                    end,
+                    "canary breach fired the alert but forced no recalibration".to_string(),
+                );
+            }
+            if accuracy_resolved == 0 {
+                checker.record(
+                    end,
+                    "canary accuracy alert fired but never resolved after recal".to_string(),
+                );
+            }
+        }
+    }
+    if hub.firing(Some("canary_accuracy")) > 0 {
+        checker.record(end, "canary accuracy alert still firing at exit".to_string());
+    }
+    let alert_states = hub.alert_states();
+    let alerts_firing_at_exit =
+        alert_states.iter().filter(|a| a.state == AlertState::Firing).count();
 
     let phase_mean = |range: std::ops::Range<usize>| -> f64 {
         let xs: Vec<f64> = rps_per_step
@@ -623,6 +808,13 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
         throughput_before: phase_mean(0..w0),
         throughput_during: phase_mean(w0..w1),
         throughput_after: phase_mean(w1..rps_per_step.len()),
+        canary_baseline,
+        canary_worst,
+        canary_slo,
+        accuracy_alerts_fired,
+        alerts_firing_at_exit,
+        journal,
+        alert_states,
         violations: checker.into_violations(),
     }
 }

@@ -61,7 +61,10 @@ pub struct ChaosConfig {
     pub scale_patience: usize,
     /// synthetic queue depth of the backbone surge window
     pub surge_depth: usize,
-    /// backbone clock jump that pushes every chip past the drift budget
+    /// backbone clock jump that pushes every chip far past the drift
+    /// budget — and far past the measured canary threshold, so the
+    /// accuracy alert's breach decision replays regardless of read-noise
+    /// interleaving
     pub recal_jump_s: f64,
     /// estimated drift error that triggers recalibration
     pub drift_err_budget: f64,
@@ -104,7 +107,7 @@ impl ChaosConfig {
             replace_per_tick: 1,
             scale_patience: 2,
             surge_depth: 64,
-            recal_jump_s: 3e5,
+            recal_jump_s: 3e7,
             drift_err_budget: 0.05,
             threads: 4,
             feature_reqs_per_thread: 3,

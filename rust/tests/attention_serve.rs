@@ -680,3 +680,200 @@ fn request_ids_propagate_into_trace_spans_and_metrics_expose() {
 
     server.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// observability over live TCP, part two (ISSUE 8): the `series`,
+// `alerts` and `events` verbs against a running control plane
+// ---------------------------------------------------------------------------
+
+/// The mini bundle boots with the fleet control plane on a fast tick,
+/// and the canary SLO envelope pinned *below* the chip's intrinsic
+/// analog read noise — so every canary probe measurably breaches, the
+/// `canary_accuracy` alert deterministically fires, the breach forces a
+/// recalibration, and both land in the event journal. The test then
+/// reads all of it back over TCP: series discovery + ring tails,
+/// alert instances with rule/state/threshold, journal paging by `since`,
+/// and typed errors (with `request_id` echo) for bad limits.
+#[test]
+fn series_alerts_events_verbs_serve_over_tcp() {
+    let mut cfg = mini_config();
+    cfg.fleet.control.enabled = true;
+    cfg.fleet.control.interval_s = 0.05;
+    cfg.obsv.scrape_interval_s = 0.05;
+    cfg.obsv.canary_batch = 2;
+    cfg.obsv.canary_period_ticks = 1;
+    cfg.obsv.alert_for_scrapes = 1;
+    cfg.obsv.alert_resolve_scrapes = 1;
+    // below any real analog read error: every probe breaches
+    cfg.obsv.slo_canary_rel_err = 1e-6;
+    let engine = Engine::start(&cfg).unwrap();
+    let server = Server::start(engine, &cfg.serve.bind).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    // one data-plane request so the scraper has request counters to rate
+    let x: Vec<String> = (0..16).map(|i| format!("{}", (i as f64 - 8.0) / 8.0)).collect();
+    let req = format!(
+        r#"{{"type":"features","kernel":"arccos0","path":"analog","x":[{}]}}"#,
+        x.join(",")
+    );
+    let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+
+    // wait for the control loop to tick + scrape: the pinned envelope
+    // guarantees the accuracy alert fires once a scrape has happened
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let a = client.call(&Json::parse(r#"{"type":"alerts"}"#).unwrap()).unwrap();
+        assert_eq!(a.get("ok"), Some(&Json::Bool(true)), "{a:?}");
+        if a.get("firing").unwrap().as_usize().unwrap() >= 1 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "accuracy alert never fired: {a:?}");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    // --- series: discovery without "name" lists the ring keys ---------
+    let ks = client.call(&Json::parse(r#"{"type":"series"}"#).unwrap()).unwrap();
+    assert_eq!(ks.get("ok"), Some(&Json::Bool(true)), "{ks:?}");
+    let keys: Vec<String> = ks
+        .get("keys")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|k| k.as_str().unwrap().to_string())
+        .collect();
+    assert!(keys.iter().any(|k| k.starts_with("imka_canary_rel_err{")), "{keys:?}");
+    assert!(keys.iter().any(|k| k == "imka_fleet_replication_deficit"), "{keys:?}");
+    assert!(
+        keys.iter().any(|k| k.starts_with("imka_chip_core_oversubscription{")),
+        "{keys:?}"
+    );
+    // derived counter-rate series ride along under their :rate suffix
+    assert!(keys.iter().any(|k| k.ends_with(":rate")), "{keys:?}");
+    // the alert-state gauge is an *output* of the scrape: never ringed
+    assert!(!keys.iter().any(|k| k.starts_with("imka_alert_state")), "{keys:?}");
+
+    // --- series: a named prefix returns bounded ring tails ------------
+    let sr = client
+        .call(&Json::parse(r#"{"type":"series","name":"imka_canary_rel_err{","points":8}"#).unwrap())
+        .unwrap();
+    assert_eq!(sr.get("ok"), Some(&Json::Bool(true)), "{sr:?}");
+    let series = sr.get("series").unwrap().as_arr().unwrap();
+    assert!(!series.is_empty(), "{sr:?}");
+    for one in series {
+        assert!(
+            one.get("key").and_then(|k| k.as_str()).unwrap().starts_with("imka_canary_rel_err{"),
+            "{one:?}"
+        );
+        let pts = one.get("points").unwrap().as_arr().unwrap();
+        assert!(!pts.is_empty() && pts.len() <= 8, "{one:?}");
+        let mut prev = f64::NEG_INFINITY;
+        for p in pts {
+            let t = p.get("t_s").unwrap().as_f64().unwrap();
+            assert!(t >= prev, "scrape times must be monotone: {one:?}");
+            prev = t;
+            // every measured canary error sits above the pinned SLO
+            assert!(p.get("value").unwrap().as_f64().unwrap() > 1e-6, "{one:?}");
+        }
+    }
+
+    // --- alerts: instance list with rule/state/threshold ---------------
+    let a = client.call(&Json::parse(r#"{"type":"alerts"}"#).unwrap()).unwrap();
+    assert_eq!(a.get("ok"), Some(&Json::Bool(true)), "{a:?}");
+    let insts = a.get("alerts").unwrap().as_arr().unwrap();
+    let firing_counted = insts
+        .iter()
+        .filter(|i| i.get("state").and_then(|v| v.as_str()) == Some("firing"))
+        .count();
+    assert_eq!(a.get("firing").unwrap().as_usize(), Some(firing_counted), "{a:?}");
+    let canary: Vec<&Json> = insts
+        .iter()
+        .filter(|i| i.get("rule").and_then(|r| r.as_str()) == Some("canary_accuracy"))
+        .collect();
+    assert!(!canary.is_empty(), "{a:?}");
+    for inst in &canary {
+        assert_eq!(inst.get("state").and_then(|v| v.as_str()), Some("firing"), "{inst:?}");
+        assert!(
+            inst.get("series").and_then(|v| v.as_str()).unwrap().starts_with("imka_canary_rel_err{"),
+            "{inst:?}"
+        );
+        assert!(inst.get("value").unwrap().as_f64().unwrap() > 1e-6, "{inst:?}");
+        let thr = inst.get("threshold").unwrap().as_f64().unwrap();
+        assert!((thr - 1e-6).abs() < 1e-12, "{inst:?}");
+    }
+
+    // the registry exposition carries the canary + alert families too
+    let m = client.call(&Json::parse(r#"{"type":"metrics"}"#).unwrap()).unwrap();
+    let text = m.get("metrics").unwrap().as_str().unwrap().to_string();
+    assert!(text.contains("imka_canary_rel_err"), "{text}");
+    assert!(text.contains("imka_canary_rel_err_fleet"), "{text}");
+    assert!(text.contains("imka_alert_state{rule=\"canary_accuracy\""), "{text}");
+
+    // --- events: the journal has the forced recal and the alert edge ---
+    let ev = client.call(&Json::parse(r#"{"type":"events"}"#).unwrap()).unwrap();
+    assert_eq!(ev.get("ok"), Some(&Json::Bool(true)), "{ev:?}");
+    let first_seq = ev.get("first_seq").unwrap().as_usize().unwrap();
+    let next_seq = ev.get("next_seq").unwrap().as_usize().unwrap();
+    assert!(next_seq > first_seq, "{ev:?}");
+    let events = ev.get("events").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "{ev:?}");
+    let mut prev_seq = None;
+    for e in events {
+        let seq = e.get("seq").unwrap().as_usize().unwrap();
+        assert!(seq >= first_seq && seq < next_seq, "{e:?}");
+        if let Some(p) = prev_seq {
+            assert!(seq > p, "journal seqs must be strictly increasing: {ev:?}");
+        }
+        prev_seq = Some(seq);
+        assert!(!e.get("kind").and_then(|k| k.as_str()).unwrap().is_empty(), "{e:?}");
+    }
+    let kinds: Vec<&str> =
+        events.iter().map(|e| e.get("kind").and_then(|k| k.as_str()).unwrap()).collect();
+    assert!(kinds.contains(&"alert_firing"), "{kinds:?}");
+    assert!(kinds.contains(&"recal"), "{kinds:?}");
+    // and the recal entry records *why*: the measurement, not the model
+    assert!(
+        events.iter().any(|e| {
+            e.get("kind").and_then(|k| k.as_str()) == Some("recal")
+                && e.get("detail")
+                    .and_then(|d| d.as_str())
+                    .is_some_and(|d| d.contains("measured canary breach"))
+        }),
+        "{events:?}"
+    );
+
+    // --- events: `since` pages past everything we have already seen ----
+    let ev2 = client
+        .call(&Json::parse(&format!(r#"{{"type":"events","since":{next_seq}}}"#)).unwrap())
+        .unwrap();
+    assert_eq!(ev2.get("ok"), Some(&Json::Bool(true)), "{ev2:?}");
+    for e in ev2.get("events").unwrap().as_arr().unwrap() {
+        // the journal keeps growing; anything returned must be new
+        assert!(e.get("seq").unwrap().as_usize().unwrap() >= next_seq, "{ev2:?}");
+    }
+    // and `limit` bounds the page
+    let ev3 = client.call(&Json::parse(r#"{"type":"events","limit":1}"#).unwrap()).unwrap();
+    assert_eq!(ev3.get("ok"), Some(&Json::Bool(true)), "{ev3:?}");
+    assert!(ev3.get("events").unwrap().as_arr().unwrap().len() <= 1, "{ev3:?}");
+
+    // --- typed errors for bad limits, with request_id echo --------------
+    let mut raw = RawConn::connect(&server.addr);
+    expect_typed_error(raw.call(r#"{"type":"trace","limit":0}"#), "limit");
+    expect_typed_error(raw.call(r#"{"type":"trace","limit":2.5}"#), "limit");
+    expect_typed_error(raw.call(r#"{"type":"trace","limit":-3}"#), "limit");
+    expect_typed_error(raw.call(r#"{"type":"trace","limit":"many"}"#), "limit");
+    expect_typed_error(raw.call(r#"{"type":"trace","limit":4294967296}"#), "limit");
+    expect_typed_error(raw.call(r#"{"type":"series","points":0}"#), "points");
+    expect_typed_error(raw.call(r#"{"type":"events","limit":0}"#), "limit");
+    expect_typed_error(raw.call(r#"{"type":"events","since":-1}"#), "since");
+    // error replies echo the client-supplied request id for correlation
+    let reply = raw.call(r#"{"type":"trace","limit":0,"request_id":7701}"#).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply:?}");
+    assert_eq!(reply.get("request_id").and_then(|v| v.as_usize()), Some(7701), "{reply:?}");
+    // a sane-but-huge limit clamps to the ring cap instead of erroring
+    let tr = raw.call(r#"{"type":"trace","limit":1000000}"#).unwrap();
+    assert_eq!(tr.get("ok"), Some(&Json::Bool(true)), "{tr:?}");
+
+    server.shutdown();
+}

@@ -90,6 +90,113 @@ fn recalibration_restores_gram_error_after_drift() {
     assert!(pool.chip_age(0) < DRIFT_T0);
 }
 
+/// The PR-8 closed loop: the control plane's accuracy canary *measures*
+/// drift through the real analog read path, the breach forces a
+/// recalibration (even with the analytic budget set far too loose to
+/// trigger), the `canary_accuracy` alert fires and resolves, and every
+/// transition lands in the event journal.
+#[test]
+fn canary_breach_forces_recal_fires_and_resolves_alert() {
+    use imka::config::ObsvConfig;
+    use imka::obsv::{AlertState, MetricsRegistry, ObservabilityHub};
+    use std::sync::Arc;
+
+    let chip = ChipConfig {
+        drift_compensation: false,
+        drift_nu_std: 0.0,
+        drift_t_seconds: DRIFT_T0,
+        ..ChipConfig::default()
+    };
+    let fleet = FleetConfig {
+        n_chips: 2,
+        placement: PlacementPolicy::Packed,
+        router: RouterPolicy::RoundRobin,
+        replication: 2,
+        recal_interval_s: 0.0,
+        // analytic budget far above what the drift jump produces: only
+        // the *measured* canary can justify the recal
+        drift_err_budget: 10.0,
+        ..FleetConfig::default()
+    };
+    let pool = FleetPool::new(chip, fleet.clone(), 7);
+    let mut rng = Rng::new(0);
+    let (d, m) = (16, 256);
+    let omega = sample_omega(Sampler::Orf, d, m, &mut rng);
+    let x_cal = Mat::randn(128, d, &mut rng);
+    pool.program_lane(KernelLane::Rbf, omega, &x_cal, 1).unwrap();
+
+    let obsv = ObsvConfig {
+        canary_batch: 8,
+        canary_period_ticks: 1,
+        slo_canary_rel_err: 0.3,
+        alert_for_scrapes: 1,
+        alert_resolve_scrapes: 1,
+        ..ObsvConfig::default()
+    };
+    let hub = Arc::new(ObservabilityHub::new(Arc::new(MetricsRegistry::new()), &obsv));
+    let mut plane = ControlPlane::new(&fleet, pool.chip_config());
+    plane.attach_observability(hub.clone());
+
+    // healthy fleet: canary runs, measures a small error, no recal
+    let r = plane.tick(&pool).unwrap();
+    plane.scrape(&pool);
+    assert_eq!(r.canary.len(), 2, "{:?}", r.canary);
+    assert!(r.canary.iter().all(|s| s.rel_err < 0.3), "{:?}", r.canary);
+    assert!(r.recalibrated.is_empty());
+    assert_eq!(hub.firing(None), 0);
+
+    // ~2 months of uncompensated drift: the canary measures the decay.
+    // The tick's canary stage runs before its recal stage, so the same
+    // tick that fixes the fleet first records the breached measurement —
+    // the scrape after it fires the alert on real data.
+    pool.advance_clock(5e6);
+    let r = plane.tick(&pool).unwrap();
+    plane.scrape(&pool);
+    assert!(
+        r.canary.iter().all(|s| s.rel_err > 0.3),
+        "drift must be measured: {:?}",
+        r.canary
+    );
+    assert_eq!(r.recalibrated, vec![0, 1], "measured breach forces recal");
+    assert_eq!(hub.firing(Some("canary_accuracy")), 2);
+
+    // next tick re-probes the reprogrammed chips: measurement is back
+    // under the SLO and the alert resolves
+    let r = plane.tick(&pool).unwrap();
+    plane.scrape(&pool);
+    assert!(r.canary.iter().all(|s| s.rel_err < 0.3), "{:?}", r.canary);
+    assert!(r.recalibrated.is_empty());
+    assert_eq!(hub.firing(None), 0);
+    let resolved = hub
+        .alert_states()
+        .iter()
+        .filter(|a| a.rule == "canary_accuracy")
+        .all(|a| a.state == AlertState::Inactive);
+    assert!(resolved);
+
+    // the journal tells the whole story, in order
+    let kinds: Vec<String> = hub
+        .journal()
+        .snapshot()
+        .iter()
+        .map(|e| e.kind.clone())
+        .collect();
+    let first_recal = kinds.iter().position(|k| k == "recal").unwrap();
+    let first_firing = kinds.iter().position(|k| k == "alert_firing").unwrap();
+    let resolved_at = kinds.iter().position(|k| k == "alert_resolved").unwrap();
+    assert_eq!(kinds.iter().filter(|k| *k == "recal").count(), 2);
+    assert!(first_recal < first_firing, "{kinds:?}");
+    assert!(first_firing < resolved_at, "{kinds:?}");
+    let recal_details: Vec<&str> = hub
+        .journal()
+        .snapshot()
+        .iter()
+        .filter(|e| e.kind == "recal")
+        .map(|e| if e.detail.contains("measured canary breach") { "m" } else { "?" })
+        .collect();
+    assert_eq!(recal_details, vec!["m", "m"]);
+}
+
 /// Concurrent projections through a replicated lane complete correctly
 /// and spread over multiple chips (the throughput mechanism bench_fleet
 /// measures).
@@ -658,6 +765,26 @@ fn chaos_soak_mixed_workloads_all_invariants_green() {
     // the traffic side kept measuring across all three phases
     assert!(report.throughput_before > 0.0 && report.throughput_after > 0.0);
     assert!(report.latency_p99_s >= report.latency_p50_s);
+
+    // ISSUE-8 closed loop: the backbone drift jump tripped the measured
+    // accuracy canary (the adaptive SLO sits between the noise floor and
+    // the drifted measurement), recal resolved it, and the journal both
+    // recorded the loop and agrees with the control trail (that
+    // agreement is an invariant — assert_green above already gates it)
+    assert!(
+        report.canary_baseline < report.canary_slo && report.canary_slo < report.canary_worst,
+        "canary baseline {} < slo {} < worst {} ordering broken",
+        report.canary_baseline,
+        report.canary_slo,
+        report.canary_worst
+    );
+    assert!(report.accuracy_alerts_fired >= 1, "accuracy alert never fired: {report:?}");
+    assert_eq!(report.alerts_firing_at_exit, 0, "alerts still firing: {:?}", report.alert_states);
+    assert!(
+        report.journal.iter().any(|e| e.kind == "recal"
+            && e.detail.contains("measured canary breach")),
+        "no measurement-forced recal journaled"
+    );
 }
 
 /// ISSUE acceptance: the same schedule seed produces the same fault
@@ -680,6 +807,11 @@ fn chaos_run_is_replayable_from_its_seed() {
         "invariant verdicts must replay exactly"
     );
     assert_eq!(r1.attn_tokens, r2.attn_tokens);
+    // the adaptive canary SLO derives from pre-traffic single-threaded
+    // measurements, so it is bit-replayable; alert decisions follow
+    assert_eq!(r1.canary_slo, r2.canary_slo, "canary SLO must replay bit-for-bit");
+    assert_eq!(r1.accuracy_alerts_fired, r2.accuracy_alerts_fired);
+    assert_eq!(r1.alerts_firing_at_exit, r2.alerts_firing_at_exit);
 }
 
 /// Seed sweep through the property driver: several distinct schedules

@@ -51,18 +51,41 @@ for gauge in imka_chip_core_utilization imka_fleet_inflight imka_lane_latency_us
 done
 rm -f "$serve_log"
 
+# regression diff against the committed previous run (tolerant of a
+# missing baseline on fresh clones — see scripts/bench_compare)
+echo "== bench_compare (BENCH_serve.json vs committed baseline) =="
+scripts/bench_compare BENCH_serve.json
+
 # chaos/soak smoke: a seed-replayable fault schedule (kill + flicker
 # faults, drains, drift jumps, programming failures, autoscale surge)
 # against the live control plane under concurrent mixed traffic, with
-# fleet-wide invariants checked after every step. The gate is the
-# machine-readable artifact: BENCH_chaos.json must report zero
-# invariant violations.
+# fleet-wide invariants checked after every step. The gates are the
+# machine-readable artifact — BENCH_chaos.json must report zero
+# invariant violations and zero SLO alerts still firing at exit — and
+# the final metrics exposition, whose canary-accuracy alert gauge must
+# be present and must not read 2 (firing): the backbone drift jump is
+# required to trip the accuracy alert, and recalibration is required
+# to resolve it before the run ends.
 echo "== bench_chaos smoke (fault schedule + invariant checks) =="
-IMKA_BENCH_CHAOS_SMOKE=1 cargo bench --bench bench_chaos
+chaos_log="$(mktemp)"
+IMKA_BENCH_CHAOS_SMOKE=1 cargo bench --bench bench_chaos | tee "$chaos_log"
 if ! grep -q '"invariant_violations":0' BENCH_chaos.json; then
     echo "chaos smoke: invariant violations reported in BENCH_chaos.json" >&2
     exit 1
 fi
+if ! grep -q '"alerts_firing_at_exit":0' BENCH_chaos.json; then
+    echo "chaos smoke: an SLO alert was still firing when the run ended" >&2
+    exit 1
+fi
+if ! grep -q 'imka_alert_state{rule="canary_accuracy"' "$chaos_log"; then
+    echo "chaos smoke: exposition is missing the canary_accuracy alert-state gauge" >&2
+    exit 1
+fi
+if grep 'imka_alert_state{rule="canary_accuracy"' "$chaos_log" | grep -qE ' 2$'; then
+    echo "chaos smoke: canary accuracy alert still firing in the final exposition" >&2
+    exit 1
+fi
+rm -f "$chaos_log"
 
 if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
     if cargo clippy --version >/dev/null 2>&1; then
