@@ -17,6 +17,14 @@
 //! analog MVM / digital combine) comes from an `MvmProfile` threaded
 //! through the fleet fan-out.
 //!
+//! Two more rows run the same session workload end-to-end over loopback
+//! TCP against a live engine + server — once per wire encoding
+//! (`wire_json` newline-JSON, `wire_binary` length-prefixed frames, see
+//! `docs/protocol.md`) — so the encoding cost of the serving hot path
+//! is measured where it is paid. Every row carries a `wire` field
+//! (`inproc` for the direct-session rows); CI gates the binary row's
+//! throughput against the JSON row's.
+//!
 //! Emits one human-readable line and one JSON row per path, writes the
 //! combined row set to `BENCH_serve.json` at the repo root (override
 //! with IMKA_BENCH_SERVE_JSON), and ends with the Prometheus-style
@@ -28,10 +36,11 @@
 //! geometry so both paths run in seconds without artifacts.
 
 use imka::config::json::{arr, num, obj, s, Json};
-use imka::config::{AttnServeConfig, ChipConfig, FleetConfig};
+use imka::config::{AttnServeConfig, ChipConfig, Config, FleetConfig};
 use imka::coordinator::request::{Lane, SessionLane};
 use imka::coordinator::session::{head_omega, SessionManager};
-use imka::coordinator::{render_metrics, LiveGauges, PathKind, Telemetry};
+use imka::coordinator::{render_metrics, Client, Engine, LiveGauges, PathKind, Server, Telemetry};
+use imka::wire::{BinaryClient, WireReply, WireRequest};
 use imka::features::favor::favor_attention;
 use imka::fleet::{FleetPool, PlacementPolicy, RouterPolicy};
 use imka::linalg::Mat;
@@ -192,6 +201,7 @@ fn run_path(
     );
     obj(vec![
         ("path", s(path.as_str())),
+        ("wire", s("inproc")),
         ("heads", num(p.heads as f64)),
         ("d_head", num(p.d_head as f64)),
         ("m", num(p.m as f64)),
@@ -205,6 +215,176 @@ fn run_path(
         ("stage_lock_wait_us", num(lock_us)),
         ("stage_analog_mvm_us", num(mvm_us)),
         ("stage_digital_combine_us", num(combine_us)),
+        ("final_rel_err_vs_offline", num(rel)),
+        ("n_chips", num(p.n_chips as f64)),
+    ])
+}
+
+/// Geometry for the end-to-end TCP wire rows. Fixed across smoke/full:
+/// the wire rows compare encodings against each other on the same run,
+/// not against a committed baseline, and the fp32 session path over
+/// loopback finishes in well under a second either way.
+fn wire_params() -> Params {
+    Params { heads: 2, d_head: 32, m: 64, tokens: 160, sessions: 2, n_chips: 1 }
+}
+
+/// Streaming-attention sessions through a real [`Engine`] + [`Server`]
+/// over loopback TCP, one connection + thread per session, in the given
+/// wire encoding. This is the row pair the binary protocol exists for:
+/// same geometry, same engine, only the wire format differs, so the
+/// tokens/s delta is pure (de)serialization + framing cost.
+fn run_wire_path(binary: bool) -> Json {
+    let p = wire_params();
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts-mini")
+        .to_string_lossy()
+        .to_string();
+    cfg.serve.warm = false;
+    cfg.serve.bind = "127.0.0.1:0".into();
+    cfg.serve.max_wait_us = 500;
+    cfg.serve.workers = 2;
+    cfg.serve.wire = if binary { "binary".into() } else { "json".into() };
+    cfg.fleet.n_chips = p.n_chips;
+    cfg.attention.serve = AttnServeConfig { path: "fp32".to_string(), ..attn_cfg(&p) };
+    let acfg = cfg.attention.serve.clone();
+
+    let engine = Engine::start(&cfg).expect("mini artifact bundle must boot the engine");
+    let server = Server::start(engine, &cfg.serve.bind).expect("server start");
+    let addr = server.addr;
+
+    let streams: Vec<_> = (0..p.sessions).map(|s| gen_stream(100 + s as u64, &p)).collect();
+    let wire = if binary { "binary" } else { "json" };
+
+    let t = Timer::start();
+    let results: Vec<(Vec<f32>, LogHistogram)> = parallel_map(p.sessions, |sidx| {
+        let (_, _, _, fq, fk, fv) = &streams[sidx];
+        let hist = LogHistogram::latency_us();
+        let mut last = Vec::new();
+        if binary {
+            let mut client = BinaryClient::connect(&addr).unwrap();
+            let opened = client
+                .call(&WireRequest::AttnOpen { request_id: 1, path: Some(PathKind::Digital) })
+                .unwrap();
+            let session = match opened {
+                WireReply::AttnOpened { session, .. } => session,
+                other => panic!("attn_open: {other:?}"),
+            };
+            for tok in 0..p.tokens {
+                let req = WireRequest::AttnAppend {
+                    request_id: tok as u64,
+                    session,
+                    q: fq[tok].clone(),
+                    k: fk[tok].clone(),
+                    v: fv[tok].clone(),
+                };
+                let t0 = Timer::start();
+                let reply = client.call(&req).unwrap();
+                hist.record(t0.elapsed_secs() * 1e6);
+                match reply {
+                    WireReply::AttnOut { y, index, .. } => {
+                        assert_eq!(index as usize, tok);
+                        last = y;
+                    }
+                    other => panic!("attn_append: {other:?}"),
+                }
+            }
+            match client.call(&WireRequest::AttnClose { request_id: 2, session }).unwrap() {
+                WireReply::AttnClosed { tokens, .. } => assert_eq!(tokens as usize, p.tokens),
+                other => panic!("attn_close: {other:?}"),
+            }
+        } else {
+            let mut client = Client::connect(&addr).unwrap();
+            let opened = client
+                .call(&Json::parse(r#"{"type":"attn_open","path":"fp32"}"#).unwrap())
+                .unwrap();
+            assert_eq!(opened.get("ok"), Some(&Json::Bool(true)), "{opened:?}");
+            let session = opened.get("session").unwrap().as_f64().unwrap();
+            for tok in 0..p.tokens {
+                let req = obj(vec![
+                    ("type", s("attn_append")),
+                    ("session", num(session)),
+                    ("q", arr(fq[tok].iter().map(|&v| num(v as f64)))),
+                    ("k", arr(fk[tok].iter().map(|&v| num(v as f64)))),
+                    ("v", arr(fv[tok].iter().map(|&v| num(v as f64)))),
+                ]);
+                let t0 = Timer::start();
+                let reply = client.call(&req).unwrap();
+                hist.record(t0.elapsed_secs() * 1e6);
+                assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+                assert_eq!(reply.get("index").and_then(|v| v.as_f64()), Some(tok as f64));
+                last = reply
+                    .get("y")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_f64().unwrap() as f32)
+                    .collect();
+            }
+            let close = obj(vec![("type", s("attn_close")), ("session", num(session))]);
+            let reply = client.call(&close).unwrap();
+            assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+        }
+        (last, hist)
+    });
+    let secs = t.elapsed_secs();
+    let total_tokens = p.sessions * p.tokens;
+    let tokens_per_s = total_tokens as f64 / secs;
+
+    let merged = LogHistogram::latency_us();
+    for (_, hist) in &results {
+        merged.merge_from(hist);
+    }
+
+    // same accuracy probe as the in-process rows: session 0's final
+    // token against offline favor on the full prefix (fp32 path, so
+    // this pins the end-to-end float round-trip of each encoding)
+    let (q, k, v, ..) = &streams[0];
+    let mut rel = 0.0;
+    for h in 0..p.heads {
+        let offline = favor_attention(&q[h], &k[h], &v[h], &head_omega(&acfg, h));
+        let want = offline.row(p.tokens - 1);
+        let got = &results[0].0[h * p.d_head..(h + 1) * p.d_head];
+        rel += rel_fro_error(got, want);
+    }
+    rel /= p.heads as f64;
+
+    server.shutdown();
+
+    println!(
+        "path wire_{wire:>6}: {tokens_per_s:>8.1} tokens/s ({:.1}/session)  \
+         append p50 {:.0} us  p95 {:.0} us  p99 {:.0} us  \
+         ({} sessions x {} tokens over TCP, {} heads x d{} x m{})  \
+         final-token rel err vs offline favor {rel:.4}",
+        tokens_per_s / p.sessions as f64,
+        merged.p50(),
+        merged.p95(),
+        merged.p99(),
+        p.sessions,
+        p.tokens,
+        p.heads,
+        p.d_head,
+        p.m
+    );
+    obj(vec![
+        ("path", s(&format!("wire_{wire}"))),
+        ("wire", s(wire)),
+        ("heads", num(p.heads as f64)),
+        ("d_head", num(p.d_head as f64)),
+        ("m", num(p.m as f64)),
+        ("sessions", num(p.sessions as f64)),
+        ("tokens", num(p.tokens as f64)),
+        ("tokens_per_s", num(tokens_per_s)),
+        ("tokens_per_s_per_session", num(tokens_per_s / p.sessions as f64)),
+        ("append_p50_us", num(merged.p50())),
+        ("append_p95_us", num(merged.p95())),
+        ("append_p99_us", num(merged.p99())),
+        // fp32 sessions never touch the fleet; the wire rows isolate
+        // encoding cost, so the analog stage means are structurally zero
+        ("stage_lock_wait_us", num(0.0)),
+        ("stage_analog_mvm_us", num(0.0)),
+        ("stage_digital_combine_us", num(0.0)),
         ("final_rel_err_vs_offline", num(rel)),
         ("n_chips", num(p.n_chips as f64)),
     ])
@@ -230,6 +410,10 @@ fn main() {
     let rows = vec![
         run_path(&p, &pool, &mgr, &telemetry, PathKind::Digital),
         run_path(&p, &pool, &mgr, &telemetry, PathKind::Analog),
+        // end-to-end wire-format rows: same sessions through a live
+        // engine + TCP server, newline-JSON vs binary frames
+        run_wire_path(false),
+        run_wire_path(true),
     ];
 
     let zero_paths = rows

@@ -305,6 +305,18 @@ pub struct ServeConfig {
     /// single batching pass holds un-flushed under a request flood);
     /// 0 = auto (4 × max_batch)
     pub drain_cap: usize,
+    /// wire protocol the listener speaks: `auto` sniffs the first byte of
+    /// every request (`0xB1` = binary frame, anything else = JSON line),
+    /// `json` / `binary` force one encoding and reject the other
+    pub wire: String,
+    /// hard cap on a single request — binary frame body bytes or JSON
+    /// line bytes; an oversize request gets a typed error and the
+    /// connection closes
+    pub max_frame_bytes: usize,
+    /// seconds a connection may sit idle between requests (and a started
+    /// frame/line may stall without a byte of progress) before the server
+    /// replies with a typed timeout error and closes it
+    pub idle_timeout_s: f64,
 }
 
 impl Default for ServeConfig {
@@ -318,8 +330,18 @@ impl Default for ServeConfig {
             queue_cap: 4096,
             warm: true,
             drain_cap: 0,
+            wire: "auto".to_string(),
+            max_frame_bytes: 16 * 1024 * 1024,
+            idle_timeout_s: 900.0,
         }
     }
+}
+
+/// The wire-mode spellings `wire::WireMode::parse` accepts (config sits
+/// below the wire layer, so the token list is mirrored here and pinned
+/// by a test).
+fn valid_wire_mode(s: &str) -> bool {
+    matches!(s, "auto" | "json" | "binary")
 }
 
 impl ServeConfig {
@@ -329,9 +351,15 @@ impl ServeConfig {
         cap.max(self.max_batch.max(1))
     }
 
-    fn from_doc(doc: &TomlDoc) -> Self {
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
         let d = ServeConfig::default();
-        ServeConfig {
+        let wire = doc.str_or("serve.wire", &d.wire).to_string();
+        if !valid_wire_mode(&wire) {
+            return Err(Error::Config(format!(
+                "serve.wire: unknown mode '{wire}' (expected auto | json | binary)"
+            )));
+        }
+        Ok(ServeConfig {
             max_batch: doc.usize_or("serve.max_batch", d.max_batch),
             max_wait_us: doc.usize_or("serve.max_wait_us", d.max_wait_us as usize) as u64,
             workers: doc.usize_or("serve.workers", d.workers),
@@ -340,7 +368,12 @@ impl ServeConfig {
             queue_cap: doc.usize_or("serve.queue_cap", d.queue_cap),
             warm: doc.bool_or("serve.warm", d.warm),
             drain_cap: doc.usize_or("serve.drain_cap", d.drain_cap),
-        }
+            wire,
+            max_frame_bytes: doc
+                .usize_or("serve.max_frame_bytes", d.max_frame_bytes)
+                .max(1),
+            idle_timeout_s: doc.f64_or("serve.idle_timeout_s", d.idle_timeout_s),
+        })
     }
 }
 
@@ -578,7 +611,7 @@ impl Config {
         let mut cfg = Config {
             chip: ChipConfig::from_doc(doc),
             fleet: FleetConfig::from_doc(doc)?,
-            serve: ServeConfig::from_doc(doc),
+            serve: ServeConfig::from_doc(doc)?,
             attention: AttentionConfig { serve: AttnServeConfig::from_doc(doc)? },
             obsv: ObsvConfig::from_doc(doc),
             artifacts_dir: doc.str_or("paths.artifacts", "artifacts").to_string(),
@@ -691,6 +724,9 @@ impl Config {
                     ("queue_cap", num(sv.queue_cap as f64)),
                     ("warm", Json::Bool(sv.warm)),
                     ("drain_cap", num(sv.drain_cap as f64)),
+                    ("wire", s(&sv.wire)),
+                    ("max_frame_bytes", num(sv.max_frame_bytes as f64)),
+                    ("idle_timeout_s", num(sv.idle_timeout_s)),
                 ]),
             ),
             (
@@ -743,6 +779,13 @@ impl Config {
         if let Ok(v) = std::env::var("IMKA_SERVE_WORKERS") {
             if let Ok(n) = v.parse() {
                 self.serve.workers = n;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_SERVE_WIRE") {
+            // invalid values are ignored (env overrides never fail), so a
+            // typo cannot silently disable the configured protocol
+            if valid_wire_mode(&v) {
+                self.serve.wire = v;
             }
         }
         if let Ok(v) = std::env::var("IMKA_FLEET_N_CHIPS") {
@@ -1033,6 +1076,39 @@ mod tests {
     }
 
     #[test]
+    fn serve_wire_defaults_and_toml_parse() {
+        let d = ServeConfig::default();
+        assert_eq!(d.wire, "auto");
+        assert_eq!(d.max_frame_bytes, 16 * 1024 * 1024);
+        assert!((d.idle_timeout_s - 900.0).abs() < 1e-12);
+
+        let cfg = Config::from_toml_str(
+            "[serve]\nwire = \"binary\"\nmax_frame_bytes = 4096\nidle_timeout_s = 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.wire, "binary");
+        assert_eq!(cfg.serve.max_frame_bytes, 4096);
+        assert!((cfg.serve.idle_timeout_s - 2.5).abs() < 1e-12);
+
+        // a zero frame cap would reject every request; clamp to one byte
+        let cfg = Config::from_toml_str("[serve]\nmax_frame_bytes = 0\n").unwrap();
+        assert_eq!(cfg.serve.max_frame_bytes, 1);
+    }
+
+    #[test]
+    fn bad_wire_mode_is_config_error() {
+        let err = Config::from_toml_str("[serve]\nwire = \"BINARY\"\n").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("serve.wire"));
+        // the mirrored token list matches wire::WireMode::parse exactly
+        for w in ["auto", "json", "binary"] {
+            assert!(crate::wire::WireMode::parse(w).is_some());
+            assert!(super::valid_wire_mode(w));
+        }
+        assert!(!super::valid_wire_mode("frames"));
+    }
+
+    #[test]
     fn to_json_emits_the_from_json_schema() {
         let cfg = Config::default();
         let j = cfg.to_json();
@@ -1065,6 +1141,7 @@ mod tests {
             let placement = *g.choose(&["packed", "sharded"]);
             let router = *g.choose(&["round_robin", "least_loaded", "p2c"]);
             let path = *g.choose(&["digital", "fp32", "analog", "hw"]);
+            let wire = *g.choose(&["auto", "json", "binary"]);
             let toml = format!(
                 "[chip]\ncores = {}\nsigma_prog = {:?}\ndrift_compensation = {}\n\
                  [fleet]\nn_chips = {}\nplacement = \"{placement}\"\nrouter = \"{router}\"\n\
@@ -1076,7 +1153,8 @@ mod tests {
                  replace_per_tick = {}\n\
                  [serve]\nmax_batch = {}\nmax_wait_us = {}\nworkers = {}\n\
                  bind = \"127.0.0.1:{}\"\nreplication = {}\nqueue_cap = {}\nwarm = {}\n\
-                 drain_cap = {}\n\
+                 drain_cap = {}\nwire = \"{wire}\"\nmax_frame_bytes = {}\n\
+                 idle_timeout_s = {:?}\n\
                  [attention.serve]\nheads = {}\nd_head = {}\nm = {}\nmax_sessions = {}\n\
                  path = \"{path}\"\nseed = {}\n\
                  [obsv]\ntrace_sample_every = {}\ntrace_buffer = {}\n\
@@ -1115,6 +1193,8 @@ mod tests {
                 g.int(1, 65_536),             // queue_cap
                 g.bool(),                     // warm
                 g.int(0, 512),                // drain_cap
+                g.int(1, 1 << 26),            // max_frame_bytes
+                g.f64_in(0.1, 3600.0),        // idle_timeout_s
                 g.int(1, 8),                  // heads
                 g.int(1, 64),                 // d_head
                 g.int(1, 256),                // attention m

@@ -2,6 +2,12 @@
 //! `max_wait_us`, whichever comes first (the standard serving trade-off —
 //! vLLM-style continuous batching specialized to lane-homogeneous
 //! requests).
+//!
+//! Ingest is zero-copy past the wire codec: a [`Request`] owns the f32
+//! payload buffers its decoder produced (JSON parse or binary frame
+//! decode), and they move through the channel, the lane map, and into
+//! batch execution without another copy. The batcher only ever moves
+//! `Request` values between containers.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -62,6 +62,9 @@ struct Shared {
     obsv: Arc<ObservabilityHub>,
     /// bounded ring of sampled per-request trace spans (`trace` verb)
     trace: TraceRing,
+    /// wire policy the TCP server applies per connection (mode,
+    /// frame/line caps, idle timeout), derived from `[serve]` at boot
+    wire: crate::wire::WireConfig,
     /// engine-wide request-id source (Submitter clones share it)
     ids: AtomicU64,
     seed_ctr: AtomicI32,
@@ -211,6 +214,7 @@ impl Engine {
             telemetry,
             obsv,
             trace: TraceRing::new(cfg.obsv.trace_buffer, cfg.obsv.trace_sample_every),
+            wire: crate::wire::WireConfig::from_serve(&cfg.serve),
             ids: AtomicU64::new(1),
             seed_ctr: AtomicI32::new(1),
             classes,
@@ -409,6 +413,12 @@ impl Engine {
         SessionsHandle { shared: self.shared.clone() }
     }
 
+    /// The wire policy (`[serve] wire` / frame caps / idle timeout) the
+    /// TCP server applies to every connection it accepts.
+    pub fn wire_config(&self) -> crate::wire::WireConfig {
+        self.shared.wire.clone()
+    }
+
     pub fn cores_used(&self) -> usize {
         self.shared.pool.cores_used()
     }
@@ -534,6 +544,19 @@ impl StatsHandle {
     /// Trace-ring capacity — the `trace` verb clamps its limit to this.
     pub fn trace_cap(&self) -> usize {
         self.shared.trace.cap()
+    }
+
+    /// Record the reply-encoding time the server measured for one
+    /// request: always feeds the `serialize` stage histogram, and — when
+    /// the request id is known and was trace-sampled — patches the
+    /// already-pushed span so the `trace` verb shows `serialize_us`.
+    pub fn record_serialize(&self, request_id: Option<u64>, us: f64) {
+        self.shared.telemetry.record_serialize_stage(us);
+        if let Some(id) = request_id {
+            if self.shared.trace.sampled(id) {
+                self.shared.trace.attach_serialize(id, us);
+            }
+        }
     }
 
     /// Time-series keys starting with `prefix` ("" = all), sorted (the

@@ -30,6 +30,22 @@ impl PathKind {
             _ => None,
         }
     }
+
+    /// Stable one-byte tag on the binary wire (see `docs/protocol.md`).
+    pub fn wire_tag(&self) -> u8 {
+        match self {
+            PathKind::Digital => 0,
+            PathKind::Analog => 1,
+        }
+    }
+
+    pub fn from_wire_tag(t: u8) -> Option<PathKind> {
+        match t {
+            0 => Some(PathKind::Digital),
+            1 => Some(PathKind::Analog),
+            _ => None,
+        }
+    }
 }
 
 /// Performer deployment variant (Table I rows).
@@ -54,6 +70,24 @@ impl PerfMode {
             "fp32" => Some(PerfMode::Fp32),
             "hw_attn" => Some(PerfMode::HwAttn),
             "hw_full" => Some(PerfMode::HwFull),
+            _ => None,
+        }
+    }
+
+    /// Stable one-byte tag on the binary wire (see `docs/protocol.md`).
+    pub fn wire_tag(&self) -> u8 {
+        match self {
+            PerfMode::Fp32 => 0,
+            PerfMode::HwAttn => 1,
+            PerfMode::HwFull => 2,
+        }
+    }
+
+    pub fn from_wire_tag(t: u8) -> Option<PerfMode> {
+        match t {
+            0 => Some(PerfMode::Fp32),
+            1 => Some(PerfMode::HwAttn),
+            2 => Some(PerfMode::HwFull),
             _ => None,
         }
     }
@@ -231,7 +265,11 @@ impl ModeLane {
     }
 }
 
-/// Request payload.
+/// Request payload. Tensor fields (`x`, `tokens`, `q`/`k`/`v`) are
+/// decoded once at the server edge — from JSON text or straight out of a
+/// binary frame's raw little-endian run — and then *move* through
+/// batcher → dispatcher → executor; no hop on the serving path copies
+/// them.
 #[derive(Clone, Debug)]
 pub enum RequestBody {
     /// map one sample x (len d) to its feature vector z
@@ -392,5 +430,17 @@ mod tests {
             assert_eq!(PerfMode::parse(m.as_str()), Some(m));
         }
         assert_eq!(PathKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn wire_tags_roundtrip_and_reject_unknowns() {
+        for p in [PathKind::Digital, PathKind::Analog] {
+            assert_eq!(PathKind::from_wire_tag(p.wire_tag()), Some(p));
+        }
+        for m in [PerfMode::Fp32, PerfMode::HwAttn, PerfMode::HwFull] {
+            assert_eq!(PerfMode::from_wire_tag(m.wire_tag()), Some(m));
+        }
+        assert_eq!(PathKind::from_wire_tag(0xFE), None);
+        assert_eq!(PerfMode::from_wire_tag(0xFE), None);
     }
 }

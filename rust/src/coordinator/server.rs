@@ -1,6 +1,16 @@
-//! TCP line-protocol server: newline-delimited JSON requests/responses.
+//! TCP server: newline-delimited JSON requests/responses, plus binary
+//! frames ([`crate::wire::frame`]) on the same listener.
 //!
-//! Request lines:
+//! Protocol detection is per request (see `docs/protocol.md`): a request
+//! whose first byte is `0xB1` is a length-prefixed binary frame, any
+//! other first byte starts a JSON line. `[serve] wire` (or `--wire`)
+//! can force one encoding; the other then gets a typed error and the
+//! connection closes. Both encodings share one hardening envelope —
+//! `[serve] max_frame_bytes` caps a frame body / request line, and
+//! `[serve] idle_timeout_s` bounds both idle connections and half-sent
+//! requests (typed error + close, never a hung reader).
+//!
+//! JSON request lines:
 //!   {"type":"features","kernel":"rbf","path":"analog","x":[...]}
 //!   {"type":"performer","mode":"hw_attn","tokens":[...]}
 //!   {"type":"attn_open"[,"path":"analog"|"fp32"]} -> open a streaming
@@ -34,10 +44,11 @@
 //! echo a client-supplied `request_id` field when the request line
 //! parsed, so pipelined clients can correlate failures too.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::engine::{Engine, SessionsHandle, StatsHandle, Submitter};
 use super::request::{PathKind, PerfMode, RequestBody, ResponseBody};
@@ -45,6 +56,8 @@ use crate::config::json::{arr, num, obj, s, Json};
 use crate::error::{Error, Result};
 use crate::kernels::Kernel;
 use crate::obsv::AlertState;
+use crate::wire::frame::{WireReply, WireRequest};
+use crate::wire::{scan_control_line, WireConfig, WireMode, MAGIC_REQUEST, PREFIX_LEN};
 
 /// Running server (owns the engine).
 pub struct Server {
@@ -66,6 +79,7 @@ impl Server {
         let submitter = engine.submitter();
         let stats = engine.stats_handle();
         let sessions = engine.sessions_handle();
+        let wire = engine.wire_config();
         let accept_thread = std::thread::spawn(move || {
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !stop2.load(Ordering::Relaxed) {
@@ -79,8 +93,9 @@ impl Server {
                         let stats_c = stats.clone();
                         let sessions_c = sessions.clone();
                         let stop_c = stop2.clone();
+                        let wire_c = wire.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, sub, stats_c, sessions_c, stop_c);
+                            let _ = handle_conn(stream, sub, stats_c, sessions_c, stop_c, wire_c);
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -118,42 +133,337 @@ impl Server {
     }
 }
 
+/// Outcome of a blocking-with-deadline read helper. The connection's
+/// 200ms read timeout is what turns the blocking reads into a poll loop
+/// (for the stop flag and the deadline); `WouldBlock`/`TimedOut` never
+/// escape these helpers.
+enum ReadOutcome {
+    Done,
+    /// peer closed mid-request
+    Eof,
+    /// server is shutting down
+    Stop,
+    /// deadline passed without the request completing
+    TimedOut,
+    Err(std::io::Error),
+}
+
+fn is_poll_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Fill `out` exactly, polling stop/deadline across short read timeouts
+/// (`read_exact` would mis-handle `WouldBlock` on a timeout socket).
+fn read_full(
+    reader: &mut BufReader<TcpStream>,
+    out: &mut [u8],
+    deadline: Instant,
+    stop: &AtomicBool,
+) -> ReadOutcome {
+    let mut filled = 0;
+    while filled < out.len() {
+        if stop.load(Ordering::Relaxed) {
+            return ReadOutcome::Stop;
+        }
+        match reader.read(&mut out[filled..]) {
+            Ok(0) => return ReadOutcome::Eof,
+            Ok(n) => filled += n,
+            Err(e) if is_poll_timeout(&e) => {
+                if Instant::now() >= deadline {
+                    return ReadOutcome::TimedOut;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return ReadOutcome::Err(e),
+        }
+    }
+    ReadOutcome::Done
+}
+
+enum LineOutcome {
+    /// a full `\n`-terminated line is in the buffer (newline excluded)
+    Line,
+    /// peer closed; the buffer holds a final unterminated line
+    EofLine,
+    /// the line exceeded `max` bytes before its newline arrived
+    Oversize,
+    Stop,
+    TimedOut,
+    Err(std::io::Error),
+}
+
+/// Accumulate one request line with a hard length cap and a deadline,
+/// so a connection can neither grow an unbounded buffer nor hang the
+/// handler with a newline that never comes.
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    max: usize,
+    deadline: Instant,
+    stop: &AtomicBool,
+) -> LineOutcome {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return LineOutcome::Stop;
+        }
+        match reader.fill_buf() {
+            Ok([]) => return LineOutcome::EofLine,
+            Ok(avail) => match avail.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    if buf.len() + i > max {
+                        return LineOutcome::Oversize;
+                    }
+                    buf.extend_from_slice(&avail[..i]);
+                    reader.consume(i + 1);
+                    return LineOutcome::Line;
+                }
+                None => {
+                    if buf.len() + avail.len() > max {
+                        return LineOutcome::Oversize;
+                    }
+                    let n = avail.len();
+                    buf.extend_from_slice(avail);
+                    reader.consume(n);
+                }
+            },
+            Err(e) if is_poll_timeout(&e) => {
+                if Instant::now() >= deadline {
+                    return LineOutcome::TimedOut;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return LineOutcome::Err(e),
+        }
+    }
+}
+
+/// Terminal JSON error: best-effort write (the connection closes next).
+fn send_json_error(writer: &mut TcpStream, msg: &str) {
+    let reply = obj(vec![("ok", Json::Bool(false)), ("error", s(msg))]);
+    let _ = writer.write_all(reply.to_string().as_bytes());
+    let _ = writer.write_all(b"\n");
+}
+
+/// Terminal binary error: best-effort write (the connection closes next).
+fn send_binary_error(writer: &mut TcpStream, verb: u8, request_id: u64, msg: &str) {
+    let (mut head, mut body) = (Vec::new(), Vec::new());
+    WireReply::Err { verb, request_id, message: msg.to_string() }.encode_into(&mut head, &mut body);
+    let _ = write_all_vectored(writer, &head, &body);
+}
+
+/// Terminal error in whichever encoding the connection's mode implies
+/// (used where no request prefix chose one, e.g. the idle timeout).
+fn send_mode_error(writer: &mut TcpStream, wire: &WireConfig, msg: &str) {
+    if wire.mode == WireMode::Binary {
+        send_binary_error(writer, 0, 0, msg);
+    } else {
+        send_json_error(writer, msg);
+    }
+}
+
+/// One vectored write for prefix + body, with a fallback loop for
+/// partial writes (`write_vectored` is best-effort, not all-or-nothing).
+fn write_all_vectored(w: &mut TcpStream, head: &[u8], body: &[u8]) -> std::io::Result<()> {
+    use std::io::IoSlice;
+    let total = head.len() + body.len();
+    let mut written = w.write_vectored(&[IoSlice::new(head), IoSlice::new(body)])?;
+    while written < total {
+        let n = if written < head.len() {
+            w.write(&head[written..])?
+        } else {
+            w.write(&body[written - head.len()..])?
+        };
+        if n == 0 {
+            return Err(std::io::ErrorKind::WriteZero.into());
+        }
+        written += n;
+    }
+    Ok(())
+}
+
 fn handle_conn(
     stream: TcpStream,
     sub: Submitter,
     stats: StatsHandle,
     sessions: SessionsHandle,
     stop: Arc<AtomicBool>,
+    wire: WireConfig,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
     // periodic read timeout lets the handler notice server shutdown even
     // while a client holds the connection open without sending
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    // per-connection scratch, reused across requests: the JSON line
+    // buffer, the binary frame body, and the reply prefix + body the
+    // vectored writes send from
+    let mut line: Vec<u8> = Vec::new();
+    let mut frame_body: Vec<u8> = Vec::new();
+    let mut head: Vec<u8> = Vec::new();
+    let mut reply_body: Vec<u8> = Vec::new();
     loop {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(());
-        }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // EOF: client closed
-            Ok(_) => {
-                if line.trim().is_empty() {
+        // ---- sniff the first byte of the next request -------------------
+        let idle_deadline = Instant::now() + wire.idle_timeout;
+        let first = loop {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match reader.fill_buf() {
+                Ok([]) => return Ok(()), // EOF between requests
+                Ok(avail) => {
+                    // skip request separators / blank lines
+                    let skip = avail.iter().take_while(|&&b| b == b'\n' || b == b'\r').count();
+                    if skip > 0 {
+                        reader.consume(skip);
+                        continue;
+                    }
+                    break avail[0];
+                }
+                Err(e) if is_poll_timeout(&e) => {
+                    if Instant::now() >= idle_deadline {
+                        let msg = format!(
+                            "idle timeout: no request in {:.0}s (serve.idle_timeout_s)",
+                            wire.idle_timeout.as_secs_f64()
+                        );
+                        send_mode_error(&mut writer, &wire, &msg);
+                        return Ok(());
+                    }
                     continue;
                 }
-                let reply = handle_line(&line, &sub, &stats, &sessions);
-                writer.write_all(reply.to_string().as_bytes())?;
-                writer.write_all(b"\n")?;
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
             }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
+        };
+        // a started request must complete within the same window
+        let deadline = Instant::now() + wire.idle_timeout;
+
+        if first == MAGIC_REQUEST {
+            // ---- binary frame ------------------------------------------
+            if wire.mode == WireMode::Json {
+                send_json_error(
+                    &mut writer,
+                    "binary frame rejected: this listener is configured for \
+                     newline-JSON only (serve.wire = \"json\")",
+                );
+                return Ok(());
+            }
+            let mut prefix = [0u8; PREFIX_LEN];
+            match read_full(&mut reader, &mut prefix, deadline, &stop) {
+                ReadOutcome::Done => {}
+                ReadOutcome::Eof | ReadOutcome::Stop => return Ok(()),
+                ReadOutcome::TimedOut => {
+                    send_binary_error(&mut writer, 0, 0, "timed out mid-frame (prefix)");
+                    return Ok(());
+                }
+                ReadOutcome::Err(e) => return Err(e),
+            }
+            let flags = u16::from_le_bytes(prefix[2..4].try_into().unwrap());
+            if flags != 0 {
+                send_binary_error(
+                    &mut writer,
+                    prefix[1],
+                    0,
+                    &format!("unsupported frame flags 0x{flags:04x}"),
+                );
+                return Ok(());
+            }
+            let len = u32::from_le_bytes(prefix[4..8].try_into().unwrap()) as usize;
+            if len > wire.max_frame_bytes {
+                send_binary_error(
+                    &mut writer,
+                    prefix[1],
+                    0,
+                    &format!(
+                        "frame body of {len} bytes exceeds serve.max_frame_bytes ({})",
+                        wire.max_frame_bytes
+                    ),
+                );
+                return Ok(());
+            }
+            frame_body.resize(len, 0);
+            match read_full(&mut reader, &mut frame_body, deadline, &stop) {
+                ReadOutcome::Done => {}
+                ReadOutcome::Eof | ReadOutcome::Stop => return Ok(()),
+                ReadOutcome::TimedOut => {
+                    send_binary_error(&mut writer, prefix[1], 0, "timed out mid-frame (body)");
+                    return Ok(());
+                }
+                ReadOutcome::Err(e) => return Err(e),
+            }
+            // decode is the binary path's parse stage: raw little-endian
+            // runs straight into batch-ready buffers
+            let t_parse = Instant::now();
+            let decoded = WireRequest::decode_body(prefix[1], &frame_body);
+            let parse_us = t_parse.elapsed().as_secs_f64() * 1e6;
+            let reply = match decoded {
+                Ok(req) => dispatch_binary(req, parse_us, &sub, &sessions),
+                Err(e) => {
+                    // enough of the body to carry a correlation id?
+                    // echo it, like JSON errors echo `request_id`
+                    let rid = frame_body
+                        .get(..8)
+                        .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+                        .unwrap_or(0);
+                    WireReply::Err { verb: prefix[1], request_id: rid, message: e.to_string() }
+                }
+            };
+            let t_ser = Instant::now();
+            reply.encode_into(&mut head, &mut reply_body);
+            let ser_us = t_ser.elapsed().as_secs_f64() * 1e6;
+            stats.record_serialize(Some(reply.request_id()), ser_us);
+            write_all_vectored(&mut writer, &head, &reply_body)?;
+        } else {
+            // ---- JSON line ---------------------------------------------
+            if wire.mode == WireMode::Binary {
+                send_binary_error(
+                    &mut writer,
+                    0,
+                    0,
+                    "JSON line rejected: this listener is configured for \
+                     binary frames only (serve.wire = \"binary\")",
+                );
+                return Ok(());
+            }
+            line.clear();
+            match read_bounded_line(&mut reader, &mut line, wire.max_frame_bytes, deadline, &stop)
             {
+                LineOutcome::Line | LineOutcome::EofLine => {}
+                LineOutcome::Oversize => {
+                    send_json_error(
+                        &mut writer,
+                        &format!(
+                            "request line exceeds serve.max_frame_bytes ({})",
+                            wire.max_frame_bytes
+                        ),
+                    );
+                    return Ok(());
+                }
+                LineOutcome::Stop => return Ok(()),
+                LineOutcome::TimedOut => {
+                    send_json_error(&mut writer, "timed out mid-line (no terminating newline)");
+                    return Ok(());
+                }
+                LineOutcome::Err(e) => return Err(e),
+            }
+            let text = match std::str::from_utf8(&line) {
+                Ok(t) => t,
+                Err(_) => {
+                    send_json_error(&mut writer, "request line is not valid UTF-8");
+                    return Ok(());
+                }
+            };
+            if text.trim().is_empty() {
                 continue;
             }
-            Err(e) => return Err(e),
+            let reply = handle_line(text, &sub, &stats, &sessions);
+            let t_ser = Instant::now();
+            let out = reply.to_string();
+            let ser_us = t_ser.elapsed().as_secs_f64() * 1e6;
+            let rid = reply.get("request_id").and_then(|v| v.as_f64()).map(|f| f as u64);
+            stats.record_serialize(rid, ser_us);
+            writer.write_all(out.as_bytes())?;
+            writer.write_all(b"\n")?;
         }
     }
 }
@@ -161,6 +471,12 @@ fn handle_conn(
 /// Parse one request line, dispatch, serialize the reply. The JSON parse
 /// is timed and attached to data-plane requests as their span's `parse`
 /// stage.
+///
+/// Small control verbs take the lazy path-scanner
+/// ([`scan_control_line`]) first: it extracts only the handful of keys
+/// control dispatch reads, without building a `Json` tree for the rest
+/// of the line. Data-plane lines (with their large numeric arrays) and
+/// anything the scanner is unsure about fall back to the full parser.
 pub fn handle_line(
     line: &str,
     sub: &Submitter,
@@ -168,7 +484,10 @@ pub fn handle_line(
     sessions: &SessionsHandle,
 ) -> Json {
     let t_parse = std::time::Instant::now();
-    let parsed = Json::parse(line);
+    let parsed = match scan_control_line(line) {
+        Some(j) => Ok(j),
+        None => Json::parse(line),
+    };
     let parse_us = t_parse.elapsed().as_secs_f64() * 1e6;
     let (request_id, result) = match parsed {
         Ok(req) => {
@@ -372,6 +691,7 @@ fn dispatch(
                     ("lock_wait_us", num(sp.lock_wait_us)),
                     ("analog_mvm_us", num(sp.analog_mvm_us)),
                     ("digital_combine_us", num(sp.digital_combine_us)),
+                    ("serialize_us", num(sp.serialize_us)),
                     ("total_us", num(sp.total_us)),
                 ])
             });
@@ -591,6 +911,92 @@ fn dispatch(
         }
         other => Err(Error::Parse(format!("unknown request type '{other}'"))),
     }
+}
+
+/// Dispatch a decoded binary request. The f32 payloads decoded from the
+/// frame body move into [`RequestBody`] unchanged — no re-copy between
+/// the wire codec and the batcher. Errors echo the *client's*
+/// correlation id; data-plane successes carry the engine-assigned id,
+/// exactly like the JSON encoding.
+fn dispatch_binary(
+    req: WireRequest,
+    parse_us: f64,
+    sub: &Submitter,
+    sessions: &SessionsHandle,
+) -> WireReply {
+    let verb = req.verb();
+    let client_id = req.request_id();
+    let result = (|| -> Result<WireReply> {
+        match req {
+            WireRequest::Ping { request_id } => Ok(WireReply::Pong { request_id }),
+            WireRequest::AttnOpen { request_id, path } => {
+                let info = sessions.open(path)?;
+                Ok(WireReply::AttnOpened {
+                    request_id,
+                    session: info.id,
+                    heads: info.heads as u32,
+                    d_head: info.d_head as u32,
+                    m: info.m as u32,
+                    path: info.path,
+                })
+            }
+            WireRequest::AttnClose { request_id, session } => {
+                let tokens = sessions.close(session)?;
+                Ok(WireReply::AttnClosed { request_id, session, tokens: tokens as u64 })
+            }
+            WireRequest::AttnAppend { session, q, k, v, .. } => {
+                let resp =
+                    sub.call_parsed(RequestBody::AttnAppend { session, q, k, v }, parse_us)?;
+                let request_id = resp.request_id;
+                match resp.result? {
+                    ResponseBody::AttnOut { y, index } => Ok(WireReply::AttnOut {
+                        request_id,
+                        session,
+                        index: index as u32,
+                        latency_us: resp.latency_us,
+                        energy_uj: resp.energy_uj,
+                        batch: resp.batch_size as u32,
+                        y,
+                    }),
+                    _ => Err(Error::Coordinator("unexpected body".into())),
+                }
+            }
+            WireRequest::Features { kernel, path, x, .. } => {
+                let resp = sub.call_parsed(RequestBody::Features { kernel, path, x }, parse_us)?;
+                let request_id = resp.request_id;
+                match resp.result? {
+                    ResponseBody::Features(z) => Ok(WireReply::Features {
+                        request_id,
+                        latency_us: resp.latency_us,
+                        energy_uj: resp.energy_uj,
+                        batch: resp.batch_size as u32,
+                        z,
+                    }),
+                    _ => Err(Error::Coordinator("unexpected body".into())),
+                }
+            }
+            WireRequest::Performer { mode, tokens, .. } => {
+                let resp = sub.call_parsed(RequestBody::Performer { mode, tokens }, parse_us)?;
+                let request_id = resp.request_id;
+                match resp.result? {
+                    ResponseBody::Class { label, logits } => Ok(WireReply::Class {
+                        request_id,
+                        latency_us: resp.latency_us,
+                        energy_uj: resp.energy_uj,
+                        batch: resp.batch_size as u32,
+                        label: label as u32,
+                        logits,
+                    }),
+                    _ => Err(Error::Coordinator("unexpected body".into())),
+                }
+            }
+        }
+    })();
+    result.unwrap_or_else(|e| WireReply::Err {
+        verb,
+        request_id: client_id,
+        message: e.to_string(),
+    })
 }
 
 /// Minimal blocking TCP client for the line protocol (examples + tests).

@@ -15,6 +15,11 @@
 //! - `Analog`: u = x·Ω on the fleet ([`FleetPool::project`]), then the
 //!   native softmax postprocess (exactly the split the paper's Fig. 3b
 //!   protocol isolates).
+//!
+//! Append ingest borrows: `append_to` takes the q/k/v token rows as
+//! `&[f32]` slices into the buffers the wire codec decoded (which the
+//! batched requests still own), so streaming a token from socket to
+//! per-head state costs one decode, zero re-copies.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

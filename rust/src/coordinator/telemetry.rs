@@ -13,7 +13,8 @@
 //!   lane, and the lane set is closed (attention sessions collapse onto
 //!   one row via [`Lane::telemetry_key`]);
 //! - per-stage histograms `imka_stage_us{stage=...}` for the request
-//!   breakdown (parse, queue, lock_wait, analog_mvm, digital_combine).
+//!   breakdown (parse, queue, lock_wait, analog_mvm, digital_combine,
+//!   serialize).
 //!
 //! The hot path (`record`) takes a shared read lock only to fetch the
 //! lane's `Arc` of handles (a write lock happens once per lane, on its
@@ -47,6 +48,7 @@ struct StageCells {
     lock_wait: Arc<LogHistogram>,
     analog_mvm: Arc<LogHistogram>,
     digital_combine: Arc<LogHistogram>,
+    serialize: Arc<LogHistogram>,
 }
 
 /// Thread-safe telemetry sink; see module docs.
@@ -139,7 +141,7 @@ impl Telemetry {
             registry.histogram(
                 "imka_stage_us",
                 "per-stage request latency breakdown (parse, queue, lock_wait, \
-                 analog_mvm, digital_combine)",
+                 analog_mvm, digital_combine, serialize)",
                 &[("stage", name)],
                 LogHistogram::latency_us,
             )
@@ -150,6 +152,7 @@ impl Telemetry {
             lock_wait: stage("lock_wait"),
             analog_mvm: stage("analog_mvm"),
             digital_combine: stage("digital_combine"),
+            serialize: stage("serialize"),
         };
         Telemetry { registry, lanes: RwLock::new(BTreeMap::new()), stages }
     }
@@ -244,6 +247,15 @@ impl Telemetry {
         }
         if combine_us > 0.0 {
             self.stages.digital_combine.record(combine_us);
+        }
+    }
+
+    /// Record the reply-encoding stage measured by the server as it
+    /// builds the wire bytes (the one stage that runs after the request
+    /// completes; in-process submitters have none and never call this).
+    pub fn record_serialize_stage(&self, us: f64) {
+        if us > 0.0 {
+            self.stages.serialize.record(us);
         }
     }
 
@@ -464,6 +476,7 @@ mod tests {
         t.record(Lane::Feature(KernelLane::Rbf, PathLane::Analog), 120.0, 4, 0.5, false);
         t.record_request_stages(3.0, 40.0);
         t.record_batch_stages(1.5, 60.0, 15.0);
+        t.record_serialize_stage(7.0);
         let live = LiveGauges {
             chips: vec![ChipSnapshot {
                 chip: 0,
@@ -500,6 +513,7 @@ mod tests {
             "imka_lane_energy_uj_total{lane=\"feature_rbf_analog\"} 0.5",
             "imka_stage_us_count{stage=\"queue\"} 1",
             "imka_stage_us_count{stage=\"analog_mvm\"} 1",
+            "imka_stage_us_count{stage=\"serialize\"} 1",
             "# TYPE imka_fleet_inflight gauge",
             "imka_fleet_inflight 2",
             "imka_fleet_chips 1",

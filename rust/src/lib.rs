@@ -41,6 +41,7 @@ pub mod ridge;
 pub mod runtime;
 pub mod testkit;
 pub mod util;
+pub mod wire;
 pub mod ziparc;
 
 pub use error::{Error, Result};

@@ -70,6 +70,12 @@ SUBCOMMANDS
       --workers N --max-batch N --max-wait-us N --replication N
       --drain-cap N            batcher opportunistic-drain cap per pass
                                (0 = auto, 4 x max-batch)
+      --wire MODE              wire protocol: auto (per-request detection,
+                               default) | json | binary (see docs/protocol.md)
+      --max-frame-bytes N      cap on a binary frame body / JSON request
+                               line (default 16777216)
+      --idle-timeout-s S       close connections idle (or mid-request)
+                               longer than S seconds (default 900)
       --attn-heads N --attn-d-head N --attn-m N
                                streaming-attention lane geometry
                                (per-head FAVOR+ Ω programmed on the fleet)
@@ -124,6 +130,14 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
     cfg.serve.max_wait_us = args.usize_or("max-wait-us", cfg.serve.max_wait_us as usize)? as u64;
     cfg.serve.replication = args.usize_or("replication", cfg.serve.replication)?;
     cfg.serve.drain_cap = args.usize_or("drain-cap", cfg.serve.drain_cap)?;
+    if let Some(w) = args.get("wire") {
+        imka::wire::WireMode::parse(w)
+            .ok_or_else(|| Error::Parse(format!("--wire: unknown mode '{w}' (auto | json | binary)")))?;
+        cfg.serve.wire = w.to_string();
+    }
+    cfg.serve.max_frame_bytes =
+        args.usize_or("max-frame-bytes", cfg.serve.max_frame_bytes)?.max(1);
+    cfg.serve.idle_timeout_s = args.f64_or("idle-timeout-s", cfg.serve.idle_timeout_s)?;
     cfg.attention.serve.heads = args.usize_or("attn-heads", cfg.attention.serve.heads)?.max(1);
     cfg.attention.serve.d_head =
         args.usize_or("attn-d-head", cfg.attention.serve.d_head)?.max(1);
@@ -231,9 +245,15 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
         );
     }
     let server = Server::start(engine, &cfg.serve.bind)?;
+    let wire_desc = match cfg.serve.wire.as_str() {
+        "json" => "newline-JSON only",
+        "binary" => "binary frames only",
+        _ => "newline-JSON + binary frames, auto-detected",
+    };
     println!(
-        "listening on {} (newline-delimited JSON; Ctrl-C to stop)",
-        server.addr
+        "listening on {} ({wire_desc}; max frame {} bytes, idle timeout {:.0}s; \
+         Ctrl-C to stop)",
+        server.addr, cfg.serve.max_frame_bytes, cfg.serve.idle_timeout_s
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -42,6 +42,10 @@ pub struct TraceSpan {
     pub analog_mvm_us: f64,
     /// digital pre/post-processing around the analog portion
     pub digital_combine_us: f64,
+    /// reply encoding on the server (bytes for binary frames, JSON text
+    /// for line replies); 0 for in-process submitters and for spans whose
+    /// reply had not been encoded yet when the span was read
+    pub serialize_us: f64,
     /// enqueue → reply, the end-to-end latency telemetry records
     pub total_us: f64,
 }
@@ -100,6 +104,23 @@ impl TraceRing {
     pub fn latest(&self, limit: usize) -> Vec<TraceSpan> {
         let spans = self.spans.lock().unwrap();
         spans.iter().rev().take(limit).cloned().collect()
+    }
+
+    /// Attach the reply-encoding time to an already-pushed span. Spans
+    /// are recorded when a request completes, but its reply is encoded
+    /// *after* that — the server patches the measurement in by id once
+    /// the bytes are built. Scans newest-first (the span was pushed
+    /// moments ago); a span already overwritten by the ring cap is
+    /// silently skipped. Returns whether a span was patched.
+    pub fn attach_serialize(&self, request_id: u64, us: f64) -> bool {
+        let mut spans = self.spans.lock().unwrap();
+        for span in spans.iter_mut().rev() {
+            if span.request_id == request_id {
+                span.serialize_us = us;
+                return true;
+            }
+        }
+        false
     }
 
     /// (spans ever sampled, spans overwritten by the ring cap)
@@ -164,6 +185,22 @@ mod tests {
         assert_eq!(sampled, 5);
         assert_eq!(dropped, 2);
         assert_eq!(r.latest(1).len(), 1);
+    }
+
+    #[test]
+    fn attach_serialize_patches_newest_matching_span() {
+        let r = TraceRing::new(4, 1);
+        for id in [7u64, 8, 9] {
+            r.push(TraceSpan { request_id: id, ..TraceSpan::default() });
+        }
+        assert!(r.attach_serialize(8, 12.5));
+        let spans = r.latest(10);
+        let s8 = spans.iter().find(|s| s.request_id == 8).unwrap();
+        assert!((s8.serialize_us - 12.5).abs() < 1e-12);
+        // untouched spans keep the zero default
+        assert_eq!(spans.iter().find(|s| s.request_id == 9).unwrap().serialize_us, 0.0);
+        // an id the ring never held (or already evicted) is a no-op
+        assert!(!r.attach_serialize(99, 1.0));
     }
 
     #[test]

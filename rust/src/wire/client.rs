@@ -1,0 +1,56 @@
+//! Minimal blocking binary-frame client (tests + benches), the frame
+//! counterpart of [`crate::coordinator::Client`].
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use super::frame::{WireReply, WireRequest, MAGIC_REPLY, PREFIX_LEN};
+use crate::error::{Error, Result};
+
+/// Guard against a corrupt reply length turning into an absurd
+/// allocation client-side.
+const MAX_REPLY_BODY: usize = 256 * 1024 * 1024;
+
+pub struct BinaryClient {
+    stream: TcpStream,
+}
+
+impl BinaryClient {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<BinaryClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Coordinator(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(BinaryClient { stream })
+    }
+
+    /// Send one frame, block for its reply.
+    pub fn call(&mut self, request: &WireRequest) -> Result<WireReply> {
+        self.stream.write_all(&request.encode())?;
+        self.read_reply()
+    }
+
+    /// Read one reply frame off the stream (for pipelined use: send
+    /// several frames with [`send`], then drain replies in order).
+    ///
+    /// [`send`]: BinaryClient::send
+    pub fn read_reply(&mut self) -> Result<WireReply> {
+        let mut prefix = [0u8; PREFIX_LEN];
+        self.stream.read_exact(&mut prefix)?;
+        if prefix[0] != MAGIC_REPLY {
+            return Err(Error::Parse(format!("bad reply magic 0x{:02x}", prefix[0])));
+        }
+        let len = u32::from_le_bytes(prefix[4..8].try_into().unwrap()) as usize;
+        if len > MAX_REPLY_BODY {
+            return Err(Error::Parse(format!("reply body of {len} bytes is implausible")));
+        }
+        let mut body = vec![0u8; len];
+        self.stream.read_exact(&mut body)?;
+        WireReply::decode_body(prefix[1], prefix[2], &body)
+    }
+
+    /// Fire a frame without waiting for the reply (pipelining).
+    pub fn send(&mut self, request: &WireRequest) -> Result<()> {
+        self.stream.write_all(&request.encode())?;
+        Ok(())
+    }
+}

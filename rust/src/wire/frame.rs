@@ -1,0 +1,646 @@
+//! Length-prefixed binary frames (the data-plane fast path).
+//!
+//! Every frame is an 8-byte prefix plus a body; all integers and floats
+//! are little-endian (byte-by-byte layout in `docs/protocol.md`):
+//!
+//! ```text
+//! request:  [ 0xB1 | verb u8 | flags u16 (0) | body_len u32 ] body
+//! reply:    [ 0xB2 | verb u8 | status u8     | 0u8 | body_len u32 ] body
+//! ```
+//!
+//! Bodies always start with a `u64` request id: on requests it is a
+//! client-chosen correlation id (0 = none), echoed verbatim on error
+//! replies; successful data-plane replies carry the engine-assigned id
+//! instead, exactly like the JSON encoding's `request_id` field.
+//!
+//! Tensor payloads (`q`/`k`/`v`, feature inputs, performer tokens and
+//! every reply vector) are raw `f32`/`i32` runs: the decoder turns them
+//! into batch-ready buffers in one `chunks_exact(4)` pass — no
+//! per-number text parsing, no intermediate `Json` tree — and those
+//! buffers then *move* through `RequestBody` → batcher → engine without
+//! another copy. Request-side floats must be finite; a NaN/Inf payload
+//! is a typed error, not a poisoned session.
+
+use crate::coordinator::request::{PathKind, PerfMode};
+use crate::error::{Error, Result};
+use crate::kernels::Kernel;
+
+/// First byte of a binary request frame. JSON text can never start with
+/// this byte (it is not valid leading UTF-8 for any JSON value), which
+/// is what makes per-request auto-detection unambiguous.
+pub const MAGIC_REQUEST: u8 = 0xB1;
+/// First byte of a binary reply frame.
+pub const MAGIC_REPLY: u8 = 0xB2;
+/// Fixed prefix length, both directions.
+pub const PREFIX_LEN: usize = 8;
+
+/// Verb tags (requests and reply echoes).
+pub mod verb {
+    pub const PING: u8 = 0x01;
+    pub const ATTN_APPEND: u8 = 0x10;
+    pub const FEATURES: u8 = 0x11;
+    pub const PERFORMER: u8 = 0x12;
+    pub const ATTN_OPEN: u8 = 0x13;
+    pub const ATTN_CLOSE: u8 = 0x14;
+}
+
+fn kernel_tag(k: Kernel) -> u8 {
+    match k {
+        Kernel::Rbf => 0,
+        Kernel::ArcCos0 => 1,
+        Kernel::Softmax => 2,
+    }
+}
+
+fn kernel_from_tag(t: u8) -> Result<Kernel> {
+    match t {
+        0 => Ok(Kernel::Rbf),
+        1 => Ok(Kernel::ArcCos0),
+        2 => Ok(Kernel::Softmax),
+        other => Err(Error::Parse(format!("unknown kernel tag 0x{other:02x}"))),
+    }
+}
+
+/// `attn_open` "use the configured default path" tag.
+const PATH_DEFAULT: u8 = 0xFF;
+
+/// A decoded binary request — the frame-level mirror of the JSON verbs
+/// that carry tensor payloads (control verbs stay JSON-only).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    Ping { request_id: u64 },
+    AttnOpen { request_id: u64, path: Option<PathKind> },
+    AttnAppend { request_id: u64, session: u64, q: Vec<f32>, k: Vec<f32>, v: Vec<f32> },
+    AttnClose { request_id: u64, session: u64 },
+    Features { request_id: u64, kernel: Kernel, path: PathKind, x: Vec<f32> },
+    Performer { request_id: u64, mode: PerfMode, tokens: Vec<i32> },
+}
+
+impl WireRequest {
+    pub fn verb(&self) -> u8 {
+        match self {
+            WireRequest::Ping { .. } => verb::PING,
+            WireRequest::AttnOpen { .. } => verb::ATTN_OPEN,
+            WireRequest::AttnAppend { .. } => verb::ATTN_APPEND,
+            WireRequest::AttnClose { .. } => verb::ATTN_CLOSE,
+            WireRequest::Features { .. } => verb::FEATURES,
+            WireRequest::Performer { .. } => verb::PERFORMER,
+        }
+    }
+
+    pub fn request_id(&self) -> u64 {
+        match self {
+            WireRequest::Ping { request_id }
+            | WireRequest::AttnOpen { request_id, .. }
+            | WireRequest::AttnAppend { request_id, .. }
+            | WireRequest::AttnClose { request_id, .. }
+            | WireRequest::Features { request_id, .. }
+            | WireRequest::Performer { request_id, .. } => *request_id,
+        }
+    }
+
+    /// Encode the full frame (prefix + body) — the client side.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        put_u64(&mut body, self.request_id());
+        match self {
+            WireRequest::Ping { .. } => {}
+            WireRequest::AttnOpen { path, .. } => {
+                body.push(path.map(path_tag).unwrap_or(PATH_DEFAULT));
+            }
+            WireRequest::AttnAppend { session, q, k, v, .. } => {
+                put_u64(&mut body, *session);
+                put_u32(&mut body, q.len() as u32);
+                put_f32s(&mut body, q);
+                put_f32s(&mut body, k);
+                put_f32s(&mut body, v);
+            }
+            WireRequest::AttnClose { session, .. } => put_u64(&mut body, *session),
+            WireRequest::Features { kernel, path, x, .. } => {
+                body.push(kernel_tag(*kernel));
+                body.push(path_tag(*path));
+                body.extend_from_slice(&[0, 0]); // reserved
+                put_u32(&mut body, x.len() as u32);
+                put_f32s(&mut body, x);
+            }
+            WireRequest::Performer { mode, tokens, .. } => {
+                body.push(mode.wire_tag());
+                body.extend_from_slice(&[0, 0, 0]); // reserved
+                put_u32(&mut body, tokens.len() as u32);
+                for t in tokens {
+                    body.extend_from_slice(&t.to_le_bytes());
+                }
+            }
+        }
+        let mut frame = Vec::with_capacity(PREFIX_LEN + body.len());
+        frame.push(MAGIC_REQUEST);
+        frame.push(self.verb());
+        frame.extend_from_slice(&0u16.to_le_bytes()); // flags (reserved)
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        frame
+    }
+
+    /// Decode a request body (the prefix was already consumed and
+    /// validated by the server's framing loop).
+    pub fn decode_body(verb_tag: u8, body: &[u8]) -> Result<WireRequest> {
+        let mut cur = Cur::new(body);
+        let request_id = cur.u64()?;
+        let req = match verb_tag {
+            verb::PING => WireRequest::Ping { request_id },
+            verb::ATTN_OPEN => {
+                let tag = cur.u8()?;
+                let path = if tag == PATH_DEFAULT { None } else { Some(path_from_tag(tag)?) };
+                WireRequest::AttnOpen { request_id, path }
+            }
+            verb::ATTN_APPEND => {
+                let session = cur.u64()?;
+                let n = cur.u32()? as usize;
+                let q = cur.f32s_finite(n, "q")?;
+                let k = cur.f32s_finite(n, "k")?;
+                let v = cur.f32s_finite(n, "v")?;
+                WireRequest::AttnAppend { request_id, session, q, k, v }
+            }
+            verb::ATTN_CLOSE => WireRequest::AttnClose { request_id, session: cur.u64()? },
+            verb::FEATURES => {
+                let kernel = kernel_from_tag(cur.u8()?)?;
+                let path = path_from_tag(cur.u8()?)?;
+                cur.take(2)?; // reserved
+                let n = cur.u32()? as usize;
+                let x = cur.f32s_finite(n, "x")?;
+                WireRequest::Features { request_id, kernel, path, x }
+            }
+            verb::PERFORMER => {
+                let mode = PerfMode::from_wire_tag(cur.u8()?)
+                    .ok_or_else(|| Error::Parse("unknown performer mode tag".into()))?;
+                cur.take(3)?; // reserved
+                let n = cur.u32()? as usize;
+                let tokens = cur.i32s(n)?;
+                WireRequest::Performer { request_id, mode, tokens }
+            }
+            other => {
+                return Err(Error::Parse(format!("unknown wire verb 0x{other:02x}")));
+            }
+        };
+        cur.done()?;
+        Ok(req)
+    }
+}
+
+fn path_tag(p: PathKind) -> u8 {
+    p.wire_tag()
+}
+
+fn path_from_tag(t: u8) -> Result<PathKind> {
+    PathKind::from_wire_tag(t).ok_or_else(|| Error::Parse(format!("unknown path tag 0x{t:02x}")))
+}
+
+/// A binary reply — either a typed error (verb echoed, message carried
+/// as UTF-8) or the verb-specific success payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireReply {
+    Err { verb: u8, request_id: u64, message: String },
+    Pong { request_id: u64 },
+    AttnOpened { request_id: u64, session: u64, heads: u32, d_head: u32, m: u32, path: PathKind },
+    AttnClosed { request_id: u64, session: u64, tokens: u64 },
+    AttnOut {
+        request_id: u64,
+        session: u64,
+        index: u32,
+        latency_us: f64,
+        energy_uj: f64,
+        batch: u32,
+        y: Vec<f32>,
+    },
+    Features { request_id: u64, latency_us: f64, energy_uj: f64, batch: u32, z: Vec<f32> },
+    Class {
+        request_id: u64,
+        latency_us: f64,
+        energy_uj: f64,
+        batch: u32,
+        label: u32,
+        logits: Vec<f32>,
+    },
+}
+
+impl WireReply {
+    pub fn verb(&self) -> u8 {
+        match self {
+            WireReply::Err { verb, .. } => *verb,
+            WireReply::Pong { .. } => verb::PING,
+            WireReply::AttnOpened { .. } => verb::ATTN_OPEN,
+            WireReply::AttnClosed { .. } => verb::ATTN_CLOSE,
+            WireReply::AttnOut { .. } => verb::ATTN_APPEND,
+            WireReply::Features { .. } => verb::FEATURES,
+            WireReply::Class { .. } => verb::PERFORMER,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        !matches!(self, WireReply::Err { .. })
+    }
+
+    pub fn request_id(&self) -> u64 {
+        match self {
+            WireReply::Err { request_id, .. }
+            | WireReply::Pong { request_id }
+            | WireReply::AttnOpened { request_id, .. }
+            | WireReply::AttnClosed { request_id, .. }
+            | WireReply::AttnOut { request_id, .. }
+            | WireReply::Features { request_id, .. }
+            | WireReply::Class { request_id, .. } => *request_id,
+        }
+    }
+
+    /// Encode into two reusable scratch buffers (prefix + body) so the
+    /// server can issue one vectored write per reply without
+    /// reallocating per request. Both buffers are cleared first.
+    pub fn encode_into(&self, head: &mut Vec<u8>, body: &mut Vec<u8>) {
+        head.clear();
+        body.clear();
+        put_u64(body, self.request_id());
+        match self {
+            WireReply::Err { message, .. } => {
+                put_u32(body, message.len() as u32);
+                body.extend_from_slice(message.as_bytes());
+            }
+            WireReply::Pong { .. } => {}
+            WireReply::AttnOpened { session, heads, d_head, m, path, .. } => {
+                put_u64(body, *session);
+                put_u32(body, *heads);
+                put_u32(body, *d_head);
+                put_u32(body, *m);
+                body.push(path.wire_tag());
+            }
+            WireReply::AttnClosed { session, tokens, .. } => {
+                put_u64(body, *session);
+                put_u64(body, *tokens);
+            }
+            WireReply::AttnOut { session, index, latency_us, energy_uj, batch, y, .. } => {
+                put_u64(body, *session);
+                put_u32(body, *index);
+                put_f64(body, *latency_us);
+                put_f64(body, *energy_uj);
+                put_u32(body, *batch);
+                put_u32(body, y.len() as u32);
+                put_f32s(body, y);
+            }
+            WireReply::Features { latency_us, energy_uj, batch, z, .. } => {
+                put_f64(body, *latency_us);
+                put_f64(body, *energy_uj);
+                put_u32(body, *batch);
+                put_u32(body, z.len() as u32);
+                put_f32s(body, z);
+            }
+            WireReply::Class { latency_us, energy_uj, batch, label, logits, .. } => {
+                put_f64(body, *latency_us);
+                put_f64(body, *energy_uj);
+                put_u32(body, *batch);
+                put_u32(body, *label);
+                put_u32(body, logits.len() as u32);
+                put_f32s(body, logits);
+            }
+        }
+        head.push(MAGIC_REPLY);
+        head.push(self.verb());
+        head.push(if self.is_ok() { 1 } else { 0 });
+        head.push(0); // reserved
+        head.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    }
+
+    /// Decode a reply body — the client side.
+    pub fn decode_body(verb_tag: u8, status: u8, body: &[u8]) -> Result<WireReply> {
+        let mut cur = Cur::new(body);
+        let request_id = cur.u64()?;
+        if status == 0 {
+            let n = cur.u32()? as usize;
+            let raw = cur.take(n)?;
+            let message = String::from_utf8(raw.to_vec())
+                .map_err(|_| Error::Parse("error message is not UTF-8".into()))?;
+            cur.done()?;
+            return Ok(WireReply::Err { verb: verb_tag, request_id, message });
+        }
+        let reply = match verb_tag {
+            verb::PING => WireReply::Pong { request_id },
+            verb::ATTN_OPEN => {
+                let session = cur.u64()?;
+                let heads = cur.u32()?;
+                let d_head = cur.u32()?;
+                let m = cur.u32()?;
+                let path = path_from_tag(cur.u8()?)?;
+                WireReply::AttnOpened { request_id, session, heads, d_head, m, path }
+            }
+            verb::ATTN_CLOSE => {
+                WireReply::AttnClosed { request_id, session: cur.u64()?, tokens: cur.u64()? }
+            }
+            verb::ATTN_APPEND => {
+                let session = cur.u64()?;
+                let index = cur.u32()?;
+                let latency_us = cur.f64()?;
+                let energy_uj = cur.f64()?;
+                let batch = cur.u32()?;
+                let n = cur.u32()? as usize;
+                let y = cur.f32s(n)?;
+                WireReply::AttnOut { request_id, session, index, latency_us, energy_uj, batch, y }
+            }
+            verb::FEATURES => {
+                let latency_us = cur.f64()?;
+                let energy_uj = cur.f64()?;
+                let batch = cur.u32()?;
+                let n = cur.u32()? as usize;
+                let z = cur.f32s(n)?;
+                WireReply::Features { request_id, latency_us, energy_uj, batch, z }
+            }
+            verb::PERFORMER => {
+                let latency_us = cur.f64()?;
+                let energy_uj = cur.f64()?;
+                let batch = cur.u32()?;
+                let label = cur.u32()?;
+                let n = cur.u32()? as usize;
+                let logits = cur.f32s(n)?;
+                WireReply::Class { request_id, latency_us, energy_uj, batch, label, logits }
+            }
+            other => {
+                return Err(Error::Parse(format!("unknown wire verb 0x{other:02x}")));
+            }
+        };
+        cur.done()?;
+        Ok(reply)
+    }
+}
+
+// -- little-endian buffer helpers -------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked read cursor over a frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| Error::Parse("truncated frame body".into()))?;
+        let out = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// One pass over a raw f32 run, straight into a batch-ready buffer.
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| Error::Parse("oversize f32 run".into()))?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// `f32s` that rejects NaN/Inf with the offending field's name.
+    fn f32s_finite(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let vs = self.f32s(n)?;
+        if vs.iter().any(|v| !v.is_finite()) {
+            return Err(Error::Parse(format!("{what} must contain finite numbers")));
+        }
+        Ok(vs)
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| Error::Parse("oversize i32 run".into()))?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            return Err(Error::Parse(format!(
+                "trailing bytes in frame body ({} of {} consumed)",
+                self.pos,
+                self.b.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: WireRequest) {
+        let frame = req.encode();
+        assert_eq!(frame[0], MAGIC_REQUEST);
+        assert_eq!(frame[1], req.verb());
+        let len = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - PREFIX_LEN);
+        let back = WireRequest::decode_body(frame[1], &frame[PREFIX_LEN..]).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn request_roundtrips_every_verb() {
+        roundtrip_request(WireRequest::Ping { request_id: 7 });
+        roundtrip_request(WireRequest::AttnOpen { request_id: 1, path: None });
+        roundtrip_request(WireRequest::AttnOpen { request_id: 2, path: Some(PathKind::Analog) });
+        roundtrip_request(WireRequest::AttnAppend {
+            request_id: 3,
+            session: 9,
+            q: vec![0.5, -1.25],
+            k: vec![1.0, 2.0],
+            v: vec![-0.125, 8.0],
+        });
+        roundtrip_request(WireRequest::AttnClose { request_id: 4, session: 9 });
+        roundtrip_request(WireRequest::Features {
+            request_id: 5,
+            kernel: Kernel::ArcCos0,
+            path: PathKind::Digital,
+            x: vec![0.0, 0.25, -3.5],
+        });
+        roundtrip_request(WireRequest::Performer {
+            request_id: 6,
+            mode: PerfMode::HwAttn,
+            tokens: vec![-1, 0, 255],
+        });
+    }
+
+    fn roundtrip_reply(reply: WireReply) {
+        let (mut head, mut body) = (Vec::new(), Vec::new());
+        reply.encode_into(&mut head, &mut body);
+        assert_eq!(head.len(), PREFIX_LEN);
+        assert_eq!(head[0], MAGIC_REPLY);
+        assert_eq!(head[1], reply.verb());
+        assert_eq!(head[2], if reply.is_ok() { 1 } else { 0 });
+        assert_eq!(u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize, body.len());
+        let back = WireReply::decode_body(head[1], head[2], &body).unwrap();
+        assert_eq!(back, reply);
+    }
+
+    #[test]
+    fn reply_roundtrips_every_shape() {
+        roundtrip_reply(WireReply::Err {
+            verb: verb::ATTN_APPEND,
+            request_id: 11,
+            message: "no open attention session 3".into(),
+        });
+        roundtrip_reply(WireReply::Pong { request_id: 0 });
+        roundtrip_reply(WireReply::AttnOpened {
+            request_id: 1,
+            session: 5,
+            heads: 2,
+            d_head: 8,
+            m: 32,
+            path: PathKind::Analog,
+        });
+        roundtrip_reply(WireReply::AttnClosed { request_id: 2, session: 5, tokens: 100 });
+        roundtrip_reply(WireReply::AttnOut {
+            request_id: 3,
+            session: 5,
+            index: 41,
+            latency_us: 123.5,
+            energy_uj: 0.25,
+            batch: 4,
+            y: vec![1.0, -2.0, 3.5],
+        });
+        roundtrip_reply(WireReply::Features {
+            request_id: 4,
+            latency_us: 10.0,
+            energy_uj: 0.5,
+            batch: 1,
+            z: vec![0.0; 8],
+        });
+        roundtrip_reply(WireReply::Class {
+            request_id: 5,
+            latency_us: 9.0,
+            energy_uj: 1.5,
+            batch: 2,
+            label: 1,
+            logits: vec![0.1, 0.9],
+        });
+    }
+
+    #[test]
+    fn scratch_buffers_are_reusable_across_replies() {
+        let (mut head, mut body) = (Vec::new(), Vec::new());
+        WireReply::Features {
+            request_id: 1,
+            latency_us: 1.0,
+            energy_uj: 1.0,
+            batch: 1,
+            z: vec![9.0; 64],
+        }
+        .encode_into(&mut head, &mut body);
+        let big = body.len();
+        WireReply::Pong { request_id: 2 }.encode_into(&mut head, &mut body);
+        assert_eq!(body.len(), 8, "encode_into must clear the scratch");
+        assert!(big > body.len());
+        assert_eq!(WireReply::decode_body(head[1], head[2], &body).unwrap(),
+            WireReply::Pong { request_id: 2 });
+    }
+
+    #[test]
+    fn truncated_body_is_a_typed_error() {
+        let req = WireRequest::AttnAppend {
+            request_id: 1,
+            session: 2,
+            q: vec![1.0; 4],
+            k: vec![1.0; 4],
+            v: vec![1.0; 4],
+        };
+        let frame = req.encode();
+        let body = &frame[PREFIX_LEN..];
+        for cut in [0, 8, 20, body.len() - 1] {
+            let err = WireRequest::decode_body(verb::ATTN_APPEND, &body[..cut]).unwrap_err();
+            assert!(err.to_string().contains("truncated"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_a_typed_error() {
+        let mut frame = WireRequest::Ping { request_id: 1 }.encode();
+        frame.push(0xAA);
+        let err = WireRequest::decode_body(verb::PING, &frame[PREFIX_LEN..]).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_payloads_are_rejected_by_field() {
+        for (field, qv, kv, vv) in [
+            ("q", f32::NAN, 0.0, 0.0),
+            ("k", 0.0, f32::INFINITY, 0.0),
+            ("v", 0.0, 0.0, f32::NEG_INFINITY),
+        ] {
+            let frame = WireRequest::AttnAppend {
+                request_id: 1,
+                session: 1,
+                q: vec![qv],
+                k: vec![kv],
+                v: vec![vv],
+            }
+            .encode();
+            let err = WireRequest::decode_body(verb::ATTN_APPEND, &frame[PREFIX_LEN..]).unwrap_err();
+            assert!(err.to_string().contains(field), "{err}");
+            assert!(err.to_string().contains("finite"), "{err}");
+        }
+        let frame = WireRequest::Features {
+            request_id: 1,
+            kernel: Kernel::Rbf,
+            path: PathKind::Digital,
+            x: vec![f32::NAN],
+        }
+        .encode();
+        let err = WireRequest::decode_body(verb::FEATURES, &frame[PREFIX_LEN..]).unwrap_err();
+        assert!(err.to_string().contains('x'), "{err}");
+    }
+
+    #[test]
+    fn unknown_tags_are_typed_errors() {
+        let mut body = Vec::new();
+        put_u64(&mut body, 0);
+        let err = WireRequest::decode_body(0x7F, &body).unwrap_err();
+        assert!(err.to_string().contains("unknown wire verb"), "{err}");
+
+        let mut body = Vec::new();
+        put_u64(&mut body, 0);
+        body.extend_from_slice(&[9, 0, 0, 0]); // kernel tag 9
+        put_u32(&mut body, 0);
+        let err = WireRequest::decode_body(verb::FEATURES, &body).unwrap_err();
+        assert!(err.to_string().contains("kernel tag"), "{err}");
+    }
+}

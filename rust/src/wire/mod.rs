@@ -1,0 +1,107 @@
+//! Wire codecs for the serving TCP listener.
+//!
+//! One listener speaks two encodings (see `docs/protocol.md`):
+//!
+//! - **newline-JSON** — the original line protocol, kept byte-for-byte
+//!   compatible for every existing client and test;
+//! - **binary frames** ([`frame`]) — length-prefixed frames whose tensor
+//!   payloads (q/k/v, `features` x, `performer` tokens) travel as raw
+//!   little-endian numbers and decode straight into the batch buffers,
+//!   with no per-number text parsing and no intermediate [`Json`] tree.
+//!
+//! Auto-detection is per request: a request whose first byte is
+//! [`frame::MAGIC_REQUEST`] (0xB1 — never the first byte of JSON text)
+//! is a binary frame, any other first byte starts a JSON line. Both
+//! encodings can interleave on one pipelined connection.
+//!
+//! [`scan`] is the third piece: a lazy path-scanner for the small JSON
+//! control verbs (`ping`/`stats`/`trace`/...) that extracts only the few
+//! fields dispatch needs instead of building the full tree.
+//!
+//! [`Json`]: crate::config::json::Json
+
+pub mod client;
+pub mod frame;
+pub mod scan;
+
+pub use client::BinaryClient;
+pub use frame::{WireReply, WireRequest, MAGIC_REPLY, MAGIC_REQUEST, PREFIX_LEN};
+pub use scan::scan_control_line;
+
+use crate::config::ServeConfig;
+
+/// Which encodings a listener accepts ( `[serve] wire` / `--wire`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// per-request first-byte detection (the default)
+    Auto,
+    /// newline-JSON only; binary frames get a typed error + close
+    Json,
+    /// binary frames only; JSON lines get a typed error + close
+    Binary,
+}
+
+impl WireMode {
+    pub fn parse(s: &str) -> Option<WireMode> {
+        match s {
+            "auto" => Some(WireMode::Auto),
+            "json" => Some(WireMode::Json),
+            "binary" => Some(WireMode::Binary),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireMode::Auto => "auto",
+            WireMode::Json => "json",
+            WireMode::Binary => "binary",
+        }
+    }
+}
+
+/// Per-connection wire policy, derived from `[serve]` at engine boot.
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    pub mode: WireMode,
+    /// hard cap on one request: binary frame body bytes and JSON line
+    /// bytes alike
+    pub max_frame_bytes: usize,
+    /// close (with a typed error) a connection that sends no complete
+    /// request for this long — covers both silence and half-sent frames
+    pub idle_timeout: std::time::Duration,
+}
+
+impl WireConfig {
+    pub fn from_serve(cfg: &ServeConfig) -> WireConfig {
+        WireConfig {
+            // settings.rs validates the string at config load; an
+            // unknown value here (hand-built Config) falls back to auto
+            mode: WireMode::parse(&cfg.wire).unwrap_or(WireMode::Auto),
+            max_frame_bytes: cfg.max_frame_bytes.max(1),
+            idle_timeout: std::time::Duration::from_secs_f64(cfg.idle_timeout_s.max(0.001)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_mode_parse_roundtrip() {
+        for m in [WireMode::Auto, WireMode::Json, WireMode::Binary] {
+            assert_eq!(WireMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(WireMode::parse("msgpack"), None);
+    }
+
+    #[test]
+    fn wire_config_defaults_from_serve() {
+        let cfg = ServeConfig::default();
+        let w = WireConfig::from_serve(&cfg);
+        assert_eq!(w.mode, WireMode::Auto);
+        assert_eq!(w.max_frame_bytes, 16 * 1024 * 1024);
+        assert_eq!(w.idle_timeout, std::time::Duration::from_secs(900));
+    }
+}

@@ -1,0 +1,290 @@
+//! Lazy path-scanner for the JSON control verbs.
+//!
+//! Control requests (`ping`/`stats`/`health`/`metrics`/`trace`/`series`/
+//! `alerts`/`events`/`drain`) are small objects of which dispatch reads
+//! at most four fields — yet the line protocol used to build a full
+//! [`Json`] tree for every one of them. This scanner walks the line
+//! lexically, materializes *only* the fields dispatch can consume and
+//! skips everything else without allocating, returning a minimal
+//! [`Json::Obj`] that the existing dispatch consumes unchanged (so every
+//! typed-error behavior — "limit must be a number", negative-index
+//! rejection, `request_id` echo — is preserved bit-for-bit).
+//!
+//! The scanner is deliberately conservative: anything it is not sure
+//! about — a non-control `type`, a needed field holding a nested value,
+//! an escape in a key, trailing bytes — returns `None` and the caller
+//! falls back to the full parser, whose error messages existing clients
+//! and tests pin.
+//!
+//! [`Json`]: crate::config::json::Json
+//! [`Json::Obj`]: crate::config::json::Json::Obj
+
+use std::collections::BTreeMap;
+
+use crate::config::json::Json;
+
+/// Verbs the scanner handles; everything else falls back to `Json::parse`.
+const CONTROL_VERBS: [&str; 9] =
+    ["ping", "stats", "health", "metrics", "trace", "series", "alerts", "events", "drain"];
+
+/// The only fields control dispatch ever reads (plus `request_id` for
+/// error-reply correlation). All other fields are skipped lexically.
+const EXTRACT_KEYS: [&str; 8] =
+    ["type", "request_id", "limit", "points", "name", "since", "chip", "undrain"];
+
+/// Keys that only appear on data-plane verbs: seeing one means this line
+/// is not a control request, so bail immediately instead of lexing a
+/// multi-kilobyte q/k/v array for nothing.
+const DATA_KEYS: [&str; 8] = ["q", "k", "v", "x", "tokens", "kernel", "mode", "session"];
+
+/// Scan one request line. `Some(obj)` holds a minimal object with just
+/// the control fields; `None` means "not confidently a control verb —
+/// run the full parser".
+pub fn scan_control_line(line: &str) -> Option<Json> {
+    let mut p = Scan { b: line.as_bytes(), pos: 0 };
+    p.ws();
+    if p.peek() != Some(b'{') {
+        return None;
+    }
+    p.pos += 1;
+    let mut out: BTreeMap<String, Json> = BTreeMap::new();
+    p.ws();
+    if p.peek() == Some(b'}') {
+        return None; // no "type" key: let the full parser shape the error
+    }
+    loop {
+        p.ws();
+        let key = p.plain_key()?;
+        if DATA_KEYS.contains(&key) {
+            return None;
+        }
+        p.ws();
+        if p.peek() != Some(b':') {
+            return None;
+        }
+        p.pos += 1;
+        p.ws();
+        if EXTRACT_KEYS.contains(&key) {
+            let v = p.scalar()?;
+            // duplicate keys: last one wins, matching the full parser
+            out.insert(key.to_string(), v);
+        } else {
+            p.skip_value()?;
+        }
+        p.ws();
+        match p.peek() {
+            Some(b',') => p.pos += 1,
+            Some(b'}') => {
+                p.pos += 1;
+                break;
+            }
+            _ => return None,
+        }
+    }
+    p.ws();
+    if p.pos != p.b.len() {
+        return None; // trailing bytes: the full parser owns that error
+    }
+    match out.get("type") {
+        Some(Json::Str(t)) if CONTROL_VERBS.contains(&t.as_str()) => Some(Json::Obj(out)),
+        _ => None,
+    }
+}
+
+struct Scan<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    /// An object key with no escapes — borrowed straight from the line.
+    /// Escaped keys (which no client of this protocol emits) bail to the
+    /// full parser.
+    fn plain_key(&mut self) -> Option<&'a str> {
+        if self.peek() != Some(b'"') {
+            return None;
+        }
+        let start = self.pos + 1;
+        let mut i = start;
+        while i < self.b.len() {
+            match self.b[i] {
+                b'"' => {
+                    self.pos = i + 1;
+                    return std::str::from_utf8(&self.b[start..i]).ok();
+                }
+                b'\\' => return None,
+                _ => i += 1,
+            }
+        }
+        None
+    }
+
+    /// A scalar JSON value (string/number/bool/null). Arrays and objects
+    /// in a needed field return `None` — dispatch would reject them
+    /// anyway, and the full parser produces the pinned error text.
+    fn scalar(&mut self) -> Option<Json> {
+        match self.peek()? {
+            b'"' => {
+                let s = self.plain_key()?; // same lexing as keys: no escapes
+                Some(Json::Str(s.to_string()))
+            }
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            c if c == b'-' || c.is_ascii_digit() => {
+                let start = self.pos;
+                while let Some(c) = self.peek() {
+                    if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                        self.pos += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let text = std::str::from_utf8(&self.b[start..self.pos]).ok()?;
+                text.parse::<f64>().ok().map(Json::Num)
+            }
+            _ => None,
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Option<Json> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    /// Skip any JSON value without building it: strings escape-aware,
+    /// containers by depth counting, scalars lexically.
+    fn skip_value(&mut self) -> Option<()> {
+        match self.peek()? {
+            b'"' => self.skip_string(),
+            b'{' | b'[' => {
+                let mut depth = 0usize;
+                loop {
+                    match self.peek()? {
+                        b'{' | b'[' => {
+                            depth += 1;
+                            self.pos += 1;
+                        }
+                        b'}' | b']' => {
+                            depth -= 1;
+                            self.pos += 1;
+                            if depth == 0 {
+                                return Some(());
+                            }
+                        }
+                        b'"' => self.skip_string()?,
+                        _ => self.pos += 1,
+                    }
+                }
+            }
+            // skipped scalars are still validated (a bad literal must
+            // fall back so the full parser can shape its error);
+            // containers are the one place skipping stays purely lexical
+            _ => self.scalar().map(|_| ()),
+        }
+    }
+
+    fn skip_string(&mut self) -> Option<()> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        while let Some(c) = self.peek() {
+            self.pos += 1;
+            match c {
+                b'"' => return Some(()),
+                b'\\' => self.pos += 1, // skip the escaped byte
+                _ => {}
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scanned(line: &str) -> Json {
+        scan_control_line(line).unwrap_or_else(|| panic!("scanner refused {line:?}"))
+    }
+
+    #[test]
+    fn control_verbs_scan_to_minimal_objects() {
+        let j = scanned(r#"{"type":"ping"}"#);
+        assert_eq!(j.get("type").and_then(|t| t.as_str()), Some("ping"));
+
+        let j = scanned(r#"{"type":"trace","limit":32,"request_id":7701}"#);
+        assert_eq!(j.get("limit"), Some(&Json::Num(32.0)));
+        assert_eq!(j.get("request_id"), Some(&Json::Num(7701.0)));
+
+        let j = scanned(r#"{"type":"series","name":"imka_canary_rel_err{","points":8}"#);
+        assert_eq!(j.get("name").and_then(|n| n.as_str()), Some("imka_canary_rel_err{"));
+        assert_eq!(j.get("points"), Some(&Json::Num(8.0)));
+
+        let j = scanned(r#"{"type":"drain","chip":0,"undrain":true}"#);
+        assert_eq!(j.get("chip"), Some(&Json::Num(0.0)));
+        assert_eq!(j.get("undrain"), Some(&Json::Bool(true)));
+    }
+
+    /// The scanner must agree with the full parser on every line it
+    /// accepts — including bad-typed fields whose errors dispatch shapes.
+    #[test]
+    fn scanned_fields_match_full_parse() {
+        for line in [
+            r#"{"type":"trace","limit":0}"#,
+            r#"{"type":"trace","limit":2.5}"#,
+            r#"{"type":"trace","limit":-3}"#,
+            r#"{"type":"trace","limit":"many"}"#,
+            r#"{"type":"trace","limit":4294967296}"#,
+            r#"{"type":"events","since":-1,"limit":1}"#,
+            r#"{"type":"series","points":0}"#,
+            r#"{ "type" : "ping" }"#,
+            r#"{"type":"stats","extra":{"nested":[1,2,{"d":3}]},"limit":5}"#,
+        ] {
+            let full = Json::parse(line).unwrap();
+            let mini = scanned(line);
+            for key in super::EXTRACT_KEYS {
+                assert_eq!(mini.get(key), full.get(key), "{line} key {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_control_lines_fall_back() {
+        // data-plane verbs bail early on their payload keys
+        assert!(scan_control_line(r#"{"type":"features","kernel":"rbf","x":[1,2]}"#).is_none());
+        assert!(scan_control_line(r#"{"q":[1],"k":[1],"v":[1],"type":"attn_append"}"#).is_none());
+        assert!(scan_control_line(r#"{"session":3,"type":"attn_close"}"#).is_none());
+        // malformed / untyped lines defer to the full parser's errors
+        assert!(scan_control_line("this is not json").is_none());
+        assert!(scan_control_line("[1, 2, 3]").is_none());
+        assert!(scan_control_line("42").is_none());
+        assert!(scan_control_line(r#"{"no_type_key": true}"#).is_none());
+        assert!(scan_control_line(r#"{"type":17}"#).is_none());
+        assert!(scan_control_line(r#"{"type":"frobnicate"}"#).is_none());
+        assert!(scan_control_line(r#"{"type":"ping"} trailing"#).is_none());
+        assert!(scan_control_line(r#"{"type":"ping","limit":[1]}"#).is_none());
+        assert!(scan_control_line(r#"{"type":"ping","#).is_none());
+        assert!(scan_control_line("{}").is_none());
+    }
+
+    #[test]
+    fn duplicate_keys_last_one_wins_like_the_full_parser() {
+        let line = r#"{"type":"trace","limit":1,"limit":9}"#;
+        assert_eq!(scanned(line).get("limit"), Some(&Json::Num(9.0)));
+        assert_eq!(Json::parse(line).unwrap().get("limit"), Some(&Json::Num(9.0)));
+    }
+}

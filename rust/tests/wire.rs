@@ -1,0 +1,534 @@
+//! Binary wire protocol + mixed-encoding serving (the perf-opt ISSUE's
+//! acceptance suite):
+//!
+//! - property round-trips for both encodings: binary frames
+//!   (encode → decode equals the original, requests and replies) and
+//!   the lazy control-line scanner against the full JSON parser;
+//! - malformed-frame handling over live TCP: oversize declared length,
+//!   half-sent frames (idle-timeout typed error instead of a hung
+//!   reader), non-finite payloads (rejected without killing the
+//!   connection), and a bad magic byte falling back to the JSON path;
+//! - one pipelined connection mixing newline-JSON and binary frames,
+//!   which is the `wire = "auto"` contract existing clients rely on;
+//! - forced `wire = "json"` / `wire = "binary"` listeners rejecting the
+//!   other encoding with a typed error.
+//!
+//! Uses the checked-in `artifacts-mini` bundle, so everything here runs
+//! unconditionally — no `make artifacts`, no PJRT.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use imka::config::json::Json;
+use imka::config::{AttnServeConfig, Config};
+use imka::coordinator::{Engine, PathKind, PerfMode, Server};
+use imka::kernels::Kernel;
+use imka::util::prop::check;
+use imka::wire::{
+    scan_control_line, BinaryClient, WireReply, WireRequest, MAGIC_REPLY, MAGIC_REQUEST,
+    PREFIX_LEN,
+};
+
+fn mini_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts-mini")
+        .to_string_lossy()
+        .to_string();
+    cfg.serve.max_wait_us = 500;
+    cfg.serve.workers = 2;
+    cfg.serve.warm = false;
+    cfg.serve.bind = "127.0.0.1:0".into();
+    cfg.attention.serve = AttnServeConfig {
+        heads: 2,
+        d_head: 8,
+        m: 32,
+        max_sessions: 16,
+        path: "fp32".to_string(),
+        seed: 0xA77E,
+    };
+    cfg
+}
+
+fn start_server(cfg: &Config) -> Server {
+    let engine = Engine::start(cfg).expect("mini bundle must boot the engine");
+    Server::start(engine, &cfg.serve.bind).unwrap()
+}
+
+/// Read one binary reply straight off a raw stream (the test-side
+/// mirror of the server's framing loop).
+fn read_raw_reply(stream: &mut impl Read) -> WireReply {
+    let mut prefix = [0u8; PREFIX_LEN];
+    stream.read_exact(&mut prefix).unwrap();
+    assert_eq!(prefix[0], MAGIC_REPLY, "reply magic");
+    let len = u32::from_le_bytes(prefix[4..8].try_into().unwrap()) as usize;
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).unwrap();
+    WireReply::decode_body(prefix[1], prefix[2], &body).unwrap()
+}
+
+// ---- property round-trips ----------------------------------------------
+
+#[test]
+fn prop_binary_request_roundtrip() {
+    check("wire request encode/decode roundtrip", 200, |g| {
+        let request_id = g.int(0, usize::MAX / 2) as u64;
+        let req = match g.int(0, 5) {
+            0 => WireRequest::Ping { request_id },
+            1 => WireRequest::AttnOpen {
+                request_id,
+                path: *g.choose(&[None, Some(PathKind::Digital), Some(PathKind::Analog)]),
+            },
+            2 => {
+                let d = g.int(1, 24);
+                WireRequest::AttnAppend {
+                    request_id,
+                    session: g.int(0, 999) as u64,
+                    q: g.vec_in(d, -2.0, 2.0),
+                    k: g.vec_in(d, -2.0, 2.0),
+                    v: g.vec_in(d, -2.0, 2.0),
+                }
+            }
+            3 => WireRequest::AttnClose { request_id, session: g.int(0, 999) as u64 },
+            4 => {
+                let n = g.int(0, 48);
+                WireRequest::Features {
+                    request_id,
+                    kernel: *g.choose(&[Kernel::Rbf, Kernel::ArcCos0, Kernel::Softmax]),
+                    path: *g.choose(&[PathKind::Digital, PathKind::Analog]),
+                    x: g.vec_in(n, -3.0, 3.0),
+                }
+            }
+            _ => WireRequest::Performer {
+                request_id,
+                mode: *g.choose(&[PerfMode::Fp32, PerfMode::HwAttn, PerfMode::HwFull]),
+                tokens: (0..g.int(0, 48)).map(|_| g.int(0, 255) as i32).collect(),
+            },
+        };
+        let frame = req.encode();
+        // prefix invariants the server's framing loop depends on
+        assert_eq!(frame[0], MAGIC_REQUEST);
+        assert_eq!(frame[1], req.verb());
+        assert_eq!(&frame[2..4], &[0, 0], "flags must be zero");
+        let len = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - PREFIX_LEN);
+        let decoded = WireRequest::decode_body(frame[1], &frame[PREFIX_LEN..]).unwrap();
+        decoded == req
+    });
+}
+
+#[test]
+fn prop_binary_reply_roundtrip() {
+    check("wire reply encode/decode roundtrip", 200, |g| {
+        let request_id = g.int(0, usize::MAX / 2) as u64;
+        let reply = match g.int(0, 6) {
+            0 => WireReply::Pong { request_id },
+            1 => WireReply::Err {
+                verb: g.int(0, 255) as u8,
+                request_id,
+                message: format!("error #{}", g.int(0, 9999)),
+            },
+            2 => WireReply::AttnOpened {
+                request_id,
+                session: g.int(0, 999) as u64,
+                heads: g.int(1, 8) as u32,
+                d_head: g.int(1, 64) as u32,
+                m: g.int(1, 256) as u32,
+                path: *g.choose(&[PathKind::Digital, PathKind::Analog]),
+            },
+            3 => WireReply::AttnClosed {
+                request_id,
+                session: g.int(0, 999) as u64,
+                tokens: g.int(0, 100_000) as u64,
+            },
+            4 => {
+                let n = g.int(0, 48);
+                WireReply::AttnOut {
+                    request_id,
+                    session: g.int(0, 999) as u64,
+                    index: g.int(0, 10_000) as u32,
+                    latency_us: g.f64_in(0.0, 1e6),
+                    energy_uj: g.f64_in(0.0, 1e3),
+                    batch: g.int(1, 64) as u32,
+                    y: g.vec_in(n, -4.0, 4.0),
+                }
+            }
+            5 => {
+                let n = g.int(0, 48);
+                WireReply::Features {
+                    request_id,
+                    latency_us: g.f64_in(0.0, 1e6),
+                    energy_uj: g.f64_in(0.0, 1e3),
+                    batch: g.int(1, 64) as u32,
+                    z: g.vec_in(n, -4.0, 4.0),
+                }
+            }
+            _ => {
+                let n = g.int(1, 10);
+                WireReply::Class {
+                    request_id,
+                    latency_us: g.f64_in(0.0, 1e6),
+                    energy_uj: g.f64_in(0.0, 1e3),
+                    batch: g.int(1, 64) as u32,
+                    label: g.int(0, 9) as u32,
+                    logits: g.vec_in(n, -8.0, 8.0),
+                }
+            }
+        };
+        let (mut head, mut body) = (Vec::new(), Vec::new());
+        reply.encode_into(&mut head, &mut body);
+        assert_eq!(head.len(), PREFIX_LEN);
+        assert_eq!(head[0], MAGIC_REPLY);
+        assert_eq!(head[1], reply.verb());
+        assert_eq!(head[2], u8::from(reply.is_ok()));
+        let len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+        assert_eq!(len, body.len());
+        let decoded = WireReply::decode_body(head[1], head[2], &body).unwrap();
+        decoded == reply
+    });
+}
+
+/// The lazy scanner must agree with the full parser on every control
+/// line it accepts — same extracted values, and it must decline (return
+/// None) rather than mis-read anything it is unsure about.
+#[test]
+fn prop_scanner_agrees_with_full_parser() {
+    let verbs =
+        ["ping", "stats", "health", "metrics", "trace", "series", "alerts", "events", "drain"];
+    check("control-line scanner vs full parser", 300, |g| {
+        let verb = *g.choose(&verbs);
+        let mut fields = vec![format!("\"type\":\"{verb}\"")];
+        if g.bool() {
+            fields.push(format!("\"request_id\":{}", g.int(0, 1_000_000)));
+        }
+        if g.bool() {
+            fields.push(format!("\"limit\":{}", g.int(1, 64)));
+        }
+        if g.bool() {
+            fields.push(format!("\"chip\":{}", g.int(0, 7)));
+        }
+        if g.bool() {
+            fields.push(format!("\"undrain\":{}", g.bool()));
+        }
+        if g.bool() {
+            fields.push("\"name\":\"imka_lane\"".to_string());
+        }
+        // shuffle-ish: rotate by a random amount so key order varies
+        let rot = g.int(0, fields.len() - 1);
+        fields.rotate_left(rot);
+        let line = format!("{{{}}}\n", fields.join(","));
+        match scan_control_line(&line) {
+            None => false, // these lines are exactly what the scanner is for
+            Some(scanned) => scanned == Json::parse(&line).unwrap(),
+        }
+    });
+}
+
+#[test]
+fn scanner_declines_data_and_malformed_lines() {
+    // data-plane lines must fall through to the full parser
+    assert!(scan_control_line(r#"{"type":"features","kernel":"rbf","x":[1,2]}"#).is_none());
+    assert!(scan_control_line(r#"{"q":[1],"type":"attn_append"}"#).is_none());
+    // malformed control lines must not be "repaired" by the scanner
+    assert!(scan_control_line(r#"{"type":"ping""#).is_none());
+    assert!(scan_control_line(r#"{"type":}"#).is_none());
+    assert!(scan_control_line("not json").is_none());
+}
+
+// ---- live-TCP malformed-frame paths ------------------------------------
+
+#[test]
+fn oversize_declared_length_gets_typed_error_and_close() {
+    let mut cfg = mini_config();
+    cfg.serve.max_frame_bytes = 1024;
+    let server = start_server(&cfg);
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    // prefix declaring a 2 MiB body; the server must reject on the
+    // declared length alone, without waiting for (or reading) a body
+    let mut frame = vec![MAGIC_REQUEST, 0x01, 0, 0];
+    frame.extend_from_slice(&(2u32 * 1024 * 1024).to_le_bytes());
+    stream.write_all(&frame).unwrap();
+    match read_raw_reply(&mut stream) {
+        WireReply::Err { message, .. } => {
+            assert!(message.contains("max_frame_bytes"), "{message}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    // typed error is terminal: the server closes the connection
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn half_sent_frame_times_out_with_typed_error() {
+    let mut cfg = mini_config();
+    cfg.serve.idle_timeout_s = 0.5;
+    let server = start_server(&cfg);
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    // declare a 64-byte body but send only 4 bytes, then stall
+    let mut frame = vec![MAGIC_REQUEST, 0x01, 0, 0];
+    frame.extend_from_slice(&64u32.to_le_bytes());
+    frame.extend_from_slice(&[1, 2, 3, 4]);
+    stream.write_all(&frame).unwrap();
+    match read_raw_reply(&mut stream) {
+        WireReply::Err { message, .. } => {
+            assert!(message.contains("timed out mid-frame"), "{message}");
+        }
+        other => panic!("expected timeout error, got {other:?}"),
+    }
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn half_sent_json_line_times_out_with_typed_error() {
+    let mut cfg = mini_config();
+    cfg.serve.idle_timeout_s = 0.5;
+    let server = start_server(&cfg);
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.write_all(br#"{"type":"ping""#).unwrap(); // no newline, ever
+    let mut reply = String::new();
+    BufReader::new(&mut stream).read_line(&mut reply).unwrap();
+    let parsed = Json::parse(&reply).unwrap();
+    assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        parsed.get("error").unwrap().as_str().unwrap().contains("timed out"),
+        "{parsed:?}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn bad_magic_byte_falls_back_to_json_parse_error() {
+    let cfg = mini_config();
+    let server = start_server(&cfg);
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    // 0x7F is not the frame magic and not '{': auto-detection routes it
+    // to the JSON path, whose parser produces the typed error
+    stream.write_all(b"\x7f garbage bytes\n").unwrap();
+    let mut reply = String::new();
+    BufReader::new(&mut stream).read_line(&mut reply).unwrap();
+    let parsed = Json::parse(&reply).unwrap();
+    assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)));
+    server.shutdown();
+}
+
+#[test]
+fn nan_payload_is_rejected_but_connection_survives() {
+    let cfg = mini_config();
+    let server = start_server(&cfg);
+    let mut client = BinaryClient::connect(&server.addr).unwrap();
+    let req = WireRequest::Features {
+        request_id: 77,
+        kernel: Kernel::ArcCos0,
+        path: PathKind::Analog,
+        x: vec![0.5, f32::NAN, 0.25],
+    };
+    match client.call(&req).unwrap() {
+        WireReply::Err { request_id, message, .. } => {
+            // a decode failure is not a framing failure: the client's
+            // correlation id is echoed and the connection stays up
+            assert_eq!(request_id, 77);
+            assert!(message.contains("finite"), "{message}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    match client.call(&WireRequest::Ping { request_id: 78 }).unwrap() {
+        WireReply::Pong { request_id } => assert_eq!(request_id, 78),
+        other => panic!("expected pong, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn truncated_prefix_then_close_is_quietly_dropped() {
+    // a client that dies mid-prefix must not wedge the server: the
+    // handler sees EOF and exits, and the server still shuts down clean
+    let cfg = mini_config();
+    let server = start_server(&cfg);
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.write_all(&[MAGIC_REQUEST, 0x01, 0]).unwrap();
+    drop(stream);
+    // the listener must still serve new connections afterwards
+    let mut client = BinaryClient::connect(&server.addr).unwrap();
+    match client.call(&WireRequest::Ping { request_id: 1 }).unwrap() {
+        WireReply::Pong { request_id } => assert_eq!(request_id, 1),
+        other => panic!("expected pong, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+// ---- mixed-encoding pipelining -----------------------------------------
+
+/// The `wire = "auto"` contract: one connection, JSON line + binary
+/// frame + JSON line + binary frame written back-to-back before any
+/// reply is read; replies come back in order, each in its request's
+/// encoding.
+#[test]
+fn mixed_json_and_binary_pipelined_on_one_connection() {
+    let cfg = mini_config();
+    let server = start_server(&cfg);
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let mut batch = Vec::new();
+    batch.extend_from_slice(b"{\"type\":\"ping\",\"request_id\":1}\n");
+    batch.extend_from_slice(&WireRequest::Ping { request_id: 2 }.encode());
+    let x: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) / 8.0).collect();
+    batch.extend_from_slice(
+        format!(
+            "{{\"type\":\"features\",\"kernel\":\"arccos0\",\"path\":\"analog\",\"x\":[{}]}}\n",
+            x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+        )
+        .as_bytes(),
+    );
+    batch.extend_from_slice(
+        &WireRequest::Features {
+            request_id: 4,
+            kernel: Kernel::ArcCos0,
+            path: PathKind::Analog,
+            x: x.clone(),
+        }
+        .encode(),
+    );
+    writer.write_all(&batch).unwrap();
+
+    // reply 1: JSON pong (client correlation id echoed)
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let pong = Json::parse(&line).unwrap();
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)), "{pong:?}");
+    // reply 2: binary pong
+    match read_raw_reply(&mut reader) {
+        WireReply::Pong { request_id } => assert_eq!(request_id, 2),
+        other => panic!("expected pong, got {other:?}"),
+    }
+    // reply 3: JSON features
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let feats = Json::parse(&line).unwrap();
+    assert_eq!(feats.get("ok"), Some(&Json::Bool(true)), "{feats:?}");
+    let z_json: Vec<f32> = feats
+        .get("z")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(z_json.len(), 64);
+    // reply 4: binary features — same lane, same input width
+    match read_raw_reply(&mut reader) {
+        WireReply::Features { z, .. } => assert_eq!(z.len(), z_json.len()),
+        other => panic!("expected features, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// Full binary data plane: open → append → close, with the engine id on
+/// data-plane successes (same correlation contract as JSON).
+#[test]
+fn binary_attention_session_end_to_end() {
+    let cfg = mini_config();
+    let acfg = cfg.attention.serve.clone();
+    let server = start_server(&cfg);
+    let mut client = BinaryClient::connect(&server.addr).unwrap();
+
+    let opened = client
+        .call(&WireRequest::AttnOpen { request_id: 1, path: Some(PathKind::Digital) })
+        .unwrap();
+    let session = match opened {
+        WireReply::AttnOpened { session, heads, d_head, m, path, .. } => {
+            assert_eq!(heads as usize, acfg.heads);
+            assert_eq!(d_head as usize, acfg.d_head);
+            assert_eq!(m as usize, acfg.m);
+            assert_eq!(path, PathKind::Digital);
+            session
+        }
+        other => panic!("attn_open: {other:?}"),
+    };
+    let d = acfg.heads * acfg.d_head;
+    for tok in 0..3usize {
+        let qkv: Vec<f32> = (0..d).map(|i| ((i + tok) as f32) / d as f32 - 0.5).collect();
+        let reply = client
+            .call(&WireRequest::AttnAppend {
+                request_id: 10 + tok as u64,
+                session,
+                q: qkv.clone(),
+                k: qkv.clone(),
+                v: qkv,
+            })
+            .unwrap();
+        match reply {
+            WireReply::AttnOut { index, y, request_id, .. } => {
+                assert_eq!(index as usize, tok);
+                assert_eq!(y.len(), d);
+                assert!(y.iter().all(|v| v.is_finite()));
+                assert!(request_id >= 1, "engine-assigned id");
+            }
+            other => panic!("attn_append: {other:?}"),
+        }
+    }
+    match client.call(&WireRequest::AttnClose { request_id: 99, session }).unwrap() {
+        WireReply::AttnClosed { tokens, .. } => assert_eq!(tokens, 3),
+        other => panic!("attn_close: {other:?}"),
+    }
+    // closing twice is a typed error with the client id echoed
+    match client.call(&WireRequest::AttnClose { request_id: 100, session }).unwrap() {
+        WireReply::Err { request_id, .. } => assert_eq!(request_id, 100),
+        other => panic!("expected error, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+// ---- forced wire modes -------------------------------------------------
+
+#[test]
+fn json_mode_rejects_binary_frames() {
+    let mut cfg = mini_config();
+    cfg.serve.wire = "json".to_string();
+    let server = start_server(&cfg);
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.write_all(&WireRequest::Ping { request_id: 1 }.encode()).unwrap();
+    let mut reply = String::new();
+    BufReader::new(&mut stream).read_line(&mut reply).unwrap();
+    let parsed = Json::parse(&reply).unwrap();
+    assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        parsed.get("error").unwrap().as_str().unwrap().contains("json wire mode")
+            || parsed.get("error").unwrap().as_str().unwrap().contains("newline-JSON"),
+        "{parsed:?}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn binary_mode_rejects_json_lines() {
+    let mut cfg = mini_config();
+    cfg.serve.wire = "binary".to_string();
+    let server = start_server(&cfg);
+    // binary requests still work...
+    let mut client = BinaryClient::connect(&server.addr).unwrap();
+    match client.call(&WireRequest::Ping { request_id: 5 }).unwrap() {
+        WireReply::Pong { request_id } => assert_eq!(request_id, 5),
+        other => panic!("expected pong, got {other:?}"),
+    }
+    // ...JSON lines get a binary typed error and a close
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.write_all(b"{\"type\":\"ping\"}\n").unwrap();
+    match read_raw_reply(&mut stream) {
+        WireReply::Err { message, .. } => {
+            assert!(message.contains("binary"), "{message}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.shutdown();
+}

@@ -49,7 +49,34 @@ for gauge in imka_chip_core_utilization imka_fleet_inflight imka_lane_latency_us
         exit 1
     fi
 done
+# reply encoding is a first-class pipeline stage now; its histogram must
+# be registered in the exposition alongside parse/queue/mvm/combine
+if ! grep -q 'stage="serialize"' "$serve_log"; then
+    echo "serve smoke: metrics exposition is missing the serialize stage" >&2
+    exit 1
+fi
 rm -f "$serve_log"
+
+# wire-format gate: the bench streams the same sessions through a live
+# TCP server in both encodings; the binary frames exist to beat
+# newline-JSON on the serving hot path, so a binary row slower than the
+# JSON row is a regression (rows are flat {...} objects; keys serialize
+# alphabetically, so grep for the discriminator anywhere inside)
+wire_tps() { # $1 = path name
+    grep -o '{[^{}]*}' BENCH_serve.json | grep "\"path\":\"$1\"" \
+        | sed -n 's/.*"tokens_per_s":\([^,}]*\).*/\1/p'
+}
+json_tps="$(wire_tps wire_json)"
+bin_tps="$(wire_tps wire_binary)"
+if [ -z "$json_tps" ] || [ -z "$bin_tps" ]; then
+    echo "serve smoke: BENCH_serve.json is missing a wire_json/wire_binary row" >&2
+    exit 1
+fi
+if ! awk -v j="$json_tps" -v b="$bin_tps" 'BEGIN { exit !(b + 0 >= j + 0) }'; then
+    echo "serve smoke: binary wire row ($bin_tps tokens/s) is slower than JSON ($json_tps tokens/s)" >&2
+    exit 1
+fi
+echo "serve smoke: wire formats ok (binary $bin_tps tokens/s >= json $json_tps tokens/s)"
 
 # regression diff against the committed previous run (tolerant of a
 # missing baseline on fresh clones — see scripts/bench_compare)
