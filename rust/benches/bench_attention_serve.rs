@@ -17,6 +17,13 @@
 //! analog MVM / digital combine) comes from an `MvmProfile` threaded
 //! through the fleet fan-out.
 //!
+//! A third in-process row (`auto`) opens analog sessions and routes each
+//! append through the `fleet::dispatch` cost model (ISSUE 10): the row's
+//! `substrate` field is `auto`, and CI gates its throughput against the
+//! better of the two forced rows. Every row carries a `substrate` field
+//! (`digital`/`analog` for the forced rows, `digital` for the fp32 wire
+//! rows).
+//!
 //! Two more rows run the same session workload end-to-end over loopback
 //! TCP against a live engine + server — once per wire encoding
 //! (`wire_json` newline-JSON, `wire_binary` length-prefixed frames, see
@@ -36,13 +43,13 @@
 //! geometry so both paths run in seconds without artifacts.
 
 use imka::config::json::{arr, num, obj, s, Json};
-use imka::config::{AttnServeConfig, ChipConfig, Config, FleetConfig};
+use imka::config::{AttnServeConfig, ChipConfig, Config, DispatchConfig, FleetConfig};
 use imka::coordinator::request::{Lane, SessionLane};
 use imka::coordinator::session::{head_omega, SessionManager};
 use imka::coordinator::{render_metrics, Client, Engine, LiveGauges, PathKind, Server, Telemetry};
 use imka::wire::{BinaryClient, WireReply, WireRequest};
 use imka::features::favor::favor_attention;
-use imka::fleet::{FleetPool, PlacementPolicy, RouterPolicy};
+use imka::fleet::{Dispatcher, FleetPool, PlacementPolicy, RouterPolicy, Substrate};
 use imka::linalg::Mat;
 use imka::obsv::{LogHistogram, MvmProfile};
 use imka::util::stats::rel_fro_error;
@@ -108,13 +115,23 @@ fn run_path(
     mgr: &SessionManager,
     telemetry: &Telemetry,
     path: PathKind,
+    dispatch: Option<&Dispatcher>,
 ) -> Json {
+    let label = if dispatch.is_some() { "auto" } else { path.as_str() };
     let streams: Vec<_> = (0..p.sessions).map(|s| gen_stream(100 + s as u64, p)).collect();
     let infos: Vec<_> = (0..p.sessions)
         .map(|_| mgr.open(pool, Some(path)).unwrap())
         .collect();
     let prof = MvmProfile::default();
     let lane = Lane::Attention(SessionLane(0));
+    // fleet drift signal for the auto row, sampled once up front (the
+    // engine re-samples per batch; the bench fleet doesn't age mid-run)
+    let drift = pool
+        .chip_snapshots()
+        .iter()
+        .filter(|c| c.health != "evicted")
+        .map(|c| c.drift_err_estimate)
+        .fold(0.0, f64::max);
 
     let t = Timer::start();
     let results: Vec<(Vec<f32>, LogHistogram)> = parallel_map(p.sessions, |sidx| {
@@ -123,18 +140,35 @@ fn run_path(
         let hist = LogHistogram::latency_us();
         let mut last = Vec::new();
         for tok in 0..p.tokens {
+            // single-token appends project 2 rows (q + k) per head
+            let rows = 2 * p.heads;
+            let (exec_path, sub) = match dispatch {
+                None => (path, None),
+                Some(d) => {
+                    let sub = d.decide(rows, p.d_head, p.m, drift, pool.total_queue_depth());
+                    let ep = match sub {
+                        Substrate::Analog => PathKind::Analog,
+                        Substrate::Digital => PathKind::Digital,
+                    };
+                    (ep, Some(sub))
+                }
+            };
             let t0 = Timer::start();
             let out = mgr
-                .append_to(
+                .append_to_on(
                     pool,
                     &session,
                     &[(fq[tok].as_slice(), fk[tok].as_slice(), fv[tok].as_slice())],
                     Some(&prof),
+                    exec_path,
                 )
                 .unwrap();
             let us = t0.elapsed_secs() * 1e6;
             hist.record(us);
             telemetry.record(lane, us, 1, 0.0, false);
+            if let (Some(d), Some(sub)) = (dispatch, sub) {
+                d.observe(sub, us, rows);
+            }
             last = out.into_iter().next().unwrap().0;
         }
         (last, hist)
@@ -178,7 +212,7 @@ fn run_path(
         .counter(
             "imka_bench_serve_tokens_total",
             "tokens streamed by bench_attention_serve per path",
-            &[("path", path.as_str())],
+            &[("path", label)],
         )
         .add(total_tokens as f64);
 
@@ -188,7 +222,7 @@ fn run_path(
          stages lock {lock_us:.1} mvm {mvm_us:.1} combine {combine_us:.1} us  \
          ({} sessions x {} tokens, {} heads x d{} x m{})  \
          final-token rel err vs offline favor {rel:.4}",
-        path.as_str(),
+        label,
         tokens_per_s / p.sessions as f64,
         merged.p50(),
         merged.p95(),
@@ -200,7 +234,8 @@ fn run_path(
         p.m
     );
     obj(vec![
-        ("path", s(path.as_str())),
+        ("path", s(label)),
+        ("substrate", s(label)),
         ("wire", s("inproc")),
         ("heads", num(p.heads as f64)),
         ("d_head", num(p.d_head as f64)),
@@ -369,6 +404,8 @@ fn run_wire_path(binary: bool) -> Json {
     );
     obj(vec![
         ("path", s(&format!("wire_{wire}"))),
+        // fp32 sessions: every φ runs natively on the digital substrate
+        ("substrate", s("digital")),
         ("wire", s(wire)),
         ("heads", num(p.heads as f64)),
         ("d_head", num(p.d_head as f64)),
@@ -407,9 +444,14 @@ fn main() {
     let pool = FleetPool::new(ChipConfig::default(), fleet, 9);
     let mgr = SessionManager::new(attn_cfg(&p), 1);
     let telemetry = Telemetry::new();
+    // the auto row opens analog sessions and lets the cost model pick
+    // the φ substrate per append, calibrating its EWMAs from the
+    // measured latencies as it goes — the hybrid-dispatch hot path
+    let dispatcher = Dispatcher::new(DispatchConfig::default(), telemetry.registry());
     let rows = vec![
-        run_path(&p, &pool, &mgr, &telemetry, PathKind::Digital),
-        run_path(&p, &pool, &mgr, &telemetry, PathKind::Analog),
+        run_path(&p, &pool, &mgr, &telemetry, PathKind::Digital, None),
+        run_path(&p, &pool, &mgr, &telemetry, PathKind::Analog, None),
+        run_path(&p, &pool, &mgr, &telemetry, PathKind::Analog, Some(&dispatcher)),
         // end-to-end wire-format rows: same sessions through a live
         // engine + TCP server, newline-JSON vs binary frames
         run_wire_path(false),

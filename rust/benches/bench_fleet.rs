@@ -129,6 +129,7 @@ fn scaling_rows(p: &Params) {
         );
         let row = obj(vec![
             ("bench", s("fleet")),
+            ("substrate", s("analog")),
             ("n_chips", num(n_chips as f64)),
             ("threads", num(p.threads as f64)),
             ("batch", num(p.batch as f64)),
@@ -178,6 +179,7 @@ fn chaos_row(p: &Params) {
     );
     let row = obj(vec![
         ("bench", s("fleet_chaos")),
+        ("substrate", s("analog")),
         ("n_chips", num(n_chips as f64)),
         ("evicted_chip", num(0.0)),
         ("threads", num(p.threads as f64)),
@@ -256,6 +258,7 @@ fn contended_row(p: &Params) {
     );
     let row = obj(vec![
         ("bench", s("fleet_contended")),
+        ("substrate", s("analog")),
         ("lanes", num(n_lanes as f64)),
         ("batch", num(p.batch as f64)),
         ("reps", num(p.reps as f64)),

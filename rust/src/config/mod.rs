@@ -8,7 +8,7 @@ pub mod toml;
 
 pub use json::Json;
 pub use settings::{
-    AttentionConfig, AttnServeConfig, ChipConfig, Config, ControlConfig, FleetConfig, ObsvConfig,
-    ServeConfig,
+    AttentionConfig, AttnServeConfig, ChipConfig, Config, ControlConfig, DispatchConfig,
+    FleetConfig, ObsvConfig, ServeConfig,
 };
 pub use toml::{TomlDoc, TomlValue};

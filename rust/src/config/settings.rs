@@ -523,6 +523,91 @@ impl ObsvConfig {
     }
 }
 
+/// Per-batch substrate routing (`[dispatch]` section): the cost model
+/// that scores each batch against the analog fleet fan-out and the
+/// artifact-free native digital path (`fleet::dispatch`). Latency priors
+/// are only starting points — the dispatcher recalibrates them from
+/// measured per-substrate batch latencies via an EWMA.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DispatchConfig {
+    /// `auto` lets the cost model route analog-eligible batches;
+    /// `analog` / `digital` pin every such batch to one substrate.
+    /// Digital-path requests always stay digital (exact fp32 contract).
+    pub force: String,
+    /// floor on the analog crossover: batches below this row count never
+    /// route analog, regardless of what the cost model says
+    pub analog_min_batch: usize,
+    /// weight of each new per-row latency sample in the EWMA (0..1)
+    pub ewma_alpha: f64,
+    /// µs added to the analog fixed cost per in-flight fleet MVM
+    pub queue_penalty_us: f64,
+    /// analog per-row cost inflation per unit of drift/canary rel-err
+    pub drift_penalty: f64,
+    /// drift/canary rel-err at which analog routing is disabled outright
+    pub drift_err_cutoff: f64,
+    /// µs of effective cost per modelled µJ (prices energy into latency)
+    pub energy_weight: f64,
+    /// per-batch overhead priors (µs): fleet fan-out + replica locking
+    /// vs. native call setup
+    pub analog_fixed_us: f64,
+    pub digital_fixed_us: f64,
+    /// per-row latency priors (µs/row) seeding the EWMA estimates
+    pub analog_us_per_row: f64,
+    pub digital_us_per_row: f64,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig {
+            force: "auto".to_string(),
+            analog_min_batch: 4,
+            ewma_alpha: 0.2,
+            queue_penalty_us: 50.0,
+            drift_penalty: 4.0,
+            drift_err_cutoff: 0.5,
+            energy_weight: 0.02,
+            analog_fixed_us: 80.0,
+            digital_fixed_us: 5.0,
+            analog_us_per_row: 6.0,
+            digital_us_per_row: 11.0,
+        }
+    }
+}
+
+/// The force-mode spellings `fleet::dispatch::ForceMode::parse` accepts
+/// (config sits below the fleet layer, so the token list is mirrored
+/// here and pinned by a test).
+fn valid_dispatch_force(s: &str) -> bool {
+    matches!(s, "auto" | "analog" | "digital")
+}
+
+impl DispatchConfig {
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let d = DispatchConfig::default();
+        let force = doc.str_or("dispatch.force", &d.force).to_string();
+        if !valid_dispatch_force(&force) {
+            return Err(Error::Config(format!(
+                "dispatch.force: unknown mode '{force}' (expected auto | analog | digital)"
+            )));
+        }
+        Ok(DispatchConfig {
+            force,
+            analog_min_batch: doc
+                .usize_or("dispatch.analog_min_batch", d.analog_min_batch)
+                .max(1),
+            ewma_alpha: doc.f64_or("dispatch.ewma_alpha", d.ewma_alpha),
+            queue_penalty_us: doc.f64_or("dispatch.queue_penalty_us", d.queue_penalty_us),
+            drift_penalty: doc.f64_or("dispatch.drift_penalty", d.drift_penalty),
+            drift_err_cutoff: doc.f64_or("dispatch.drift_err_cutoff", d.drift_err_cutoff),
+            energy_weight: doc.f64_or("dispatch.energy_weight", d.energy_weight),
+            analog_fixed_us: doc.f64_or("dispatch.analog_fixed_us", d.analog_fixed_us),
+            digital_fixed_us: doc.f64_or("dispatch.digital_fixed_us", d.digital_fixed_us),
+            analog_us_per_row: doc.f64_or("dispatch.analog_us_per_row", d.analog_us_per_row),
+            digital_us_per_row: doc.f64_or("dispatch.digital_us_per_row", d.digital_us_per_row),
+        })
+    }
+}
+
 /// Top-level configuration bundle.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Config {
@@ -531,6 +616,7 @@ pub struct Config {
     pub serve: ServeConfig,
     pub attention: AttentionConfig,
     pub obsv: ObsvConfig,
+    pub dispatch: DispatchConfig,
     /// artifacts directory (manifest.json, *.hlo.txt, weights)
     pub artifacts_dir: String,
 }
@@ -543,6 +629,7 @@ impl Default for Config {
             serve: ServeConfig::default(),
             attention: AttentionConfig::default(),
             obsv: ObsvConfig::default(),
+            dispatch: DispatchConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -614,6 +701,7 @@ impl Config {
             serve: ServeConfig::from_doc(doc)?,
             attention: AttentionConfig { serve: AttnServeConfig::from_doc(doc)? },
             obsv: ObsvConfig::from_doc(doc),
+            dispatch: DispatchConfig::from_doc(doc)?,
             artifacts_dir: doc.str_or("paths.artifacts", "artifacts").to_string(),
         };
         cfg.apply_env();
@@ -760,6 +848,22 @@ impl Config {
                     ("alert_resolve_scrapes", num(self.obsv.alert_resolve_scrapes as f64)),
                 ]),
             ),
+            (
+                "dispatch",
+                obj(vec![
+                    ("force", s(&self.dispatch.force)),
+                    ("analog_min_batch", num(self.dispatch.analog_min_batch as f64)),
+                    ("ewma_alpha", num(self.dispatch.ewma_alpha)),
+                    ("queue_penalty_us", num(self.dispatch.queue_penalty_us)),
+                    ("drift_penalty", num(self.dispatch.drift_penalty)),
+                    ("drift_err_cutoff", num(self.dispatch.drift_err_cutoff)),
+                    ("energy_weight", num(self.dispatch.energy_weight)),
+                    ("analog_fixed_us", num(self.dispatch.analog_fixed_us)),
+                    ("digital_fixed_us", num(self.dispatch.digital_fixed_us)),
+                    ("analog_us_per_row", num(self.dispatch.analog_us_per_row)),
+                    ("digital_us_per_row", num(self.dispatch.digital_us_per_row)),
+                ]),
+            ),
             ("paths", obj(vec![("artifacts", s(&self.artifacts_dir))])),
         ])
     }
@@ -864,6 +968,18 @@ impl Config {
         if let Ok(v) = std::env::var("IMKA_OBSV_SLO_CANARY_REL_ERR") {
             if let Ok(f) = v.parse() {
                 self.obsv.slo_canary_rel_err = f;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_DISPATCH_FORCE") {
+            // invalid values are ignored (env overrides never fail), so a
+            // typo cannot silently pin every batch to one substrate
+            if valid_dispatch_force(&v) {
+                self.dispatch.force = v;
+            }
+        }
+        if let Ok(v) = std::env::var("IMKA_DISPATCH_ANALOG_MIN_BATCH") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.dispatch.analog_min_batch = n.max(1);
             }
         }
         if let Ok(v) = std::env::var("IMKA_ARTIFACTS_DIR") {
@@ -1109,6 +1225,51 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_defaults_and_toml_parse() {
+        let d = DispatchConfig::default();
+        assert_eq!(d.force, "auto");
+        assert_eq!(d.analog_min_batch, 4);
+        assert!(d.ewma_alpha > 0.0 && d.ewma_alpha < 1.0);
+        // priors must put analog ahead per-row but behind on fixed cost,
+        // or the auto mode would never split small from large batches
+        assert!(d.analog_us_per_row < d.digital_us_per_row);
+        assert!(d.analog_fixed_us > d.digital_fixed_us);
+        assert!(d.drift_penalty >= 0.0 && d.energy_weight >= 0.0);
+
+        let cfg = Config::from_toml_str(
+            "[dispatch]\nforce = \"analog\"\nanalog_min_batch = 0\n\
+             ewma_alpha = 0.5\ndrift_err_cutoff = 0.3\nanalog_fixed_us = 10.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dispatch.force, "analog");
+        // a zero floor would let empty batches route analog; clamp to 1
+        assert_eq!(cfg.dispatch.analog_min_batch, 1);
+        assert!((cfg.dispatch.ewma_alpha - 0.5).abs() < 1e-12);
+        assert!((cfg.dispatch.drift_err_cutoff - 0.3).abs() < 1e-12);
+        assert!((cfg.dispatch.analog_fixed_us - 10.0).abs() < 1e-12);
+
+        let json =
+            Config::from_json_str(r#"{"dispatch":{"force":"digital","analog_min_batch":8}}"#)
+                .unwrap();
+        assert_eq!(json.dispatch.force, "digital");
+        assert_eq!(json.dispatch.analog_min_batch, 8);
+    }
+
+    #[test]
+    fn bad_dispatch_force_is_config_error() {
+        let err = Config::from_toml_str("[dispatch]\nforce = \"ANALOG\"\n").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("dispatch.force"));
+        // the mirrored token list matches fleet::dispatch::ForceMode::parse
+        for f in ["auto", "analog", "digital"] {
+            assert!(crate::fleet::dispatch::ForceMode::parse(f).is_some());
+            assert!(super::valid_dispatch_force(f));
+        }
+        assert!(crate::fleet::dispatch::ForceMode::parse("wat").is_none());
+        assert!(!super::valid_dispatch_force("wat"));
+    }
+
+    #[test]
     fn to_json_emits_the_from_json_schema() {
         let cfg = Config::default();
         let j = cfg.to_json();
@@ -1142,6 +1303,7 @@ mod tests {
             let router = *g.choose(&["round_robin", "least_loaded", "p2c"]);
             let path = *g.choose(&["digital", "fp32", "analog", "hw"]);
             let wire = *g.choose(&["auto", "json", "binary"]);
+            let dforce = *g.choose(&["auto", "analog", "digital"]);
             let toml = format!(
                 "[chip]\ncores = {}\nsigma_prog = {:?}\ndrift_compensation = {}\n\
                  [fleet]\nn_chips = {}\nplacement = \"{placement}\"\nrouter = \"{router}\"\n\
@@ -1162,6 +1324,11 @@ mod tests {
                  canary_batch = {}\ncanary_period_ticks = {}\nslo_p99_latency_us = {:?}\n\
                  slo_error_ratio = {:?}\nslo_canary_rel_err = {:?}\nalert_for_scrapes = {}\n\
                  alert_resolve_scrapes = {}\n\
+                 [dispatch]\nforce = \"{dforce}\"\nanalog_min_batch = {}\n\
+                 ewma_alpha = {:?}\nqueue_penalty_us = {:?}\ndrift_penalty = {:?}\n\
+                 drift_err_cutoff = {:?}\nenergy_weight = {:?}\nanalog_fixed_us = {:?}\n\
+                 digital_fixed_us = {:?}\nanalog_us_per_row = {:?}\n\
+                 digital_us_per_row = {:?}\n\
                  [paths]\nartifacts = \"art-{}\"\n",
                 g.int(1, 128),                // chip.cores
                 g.f64_in(0.001, 0.2),         // sigma_prog
@@ -1212,6 +1379,16 @@ mod tests {
                 g.f64_in(0.01, 1.0),          // slo_canary_rel_err
                 g.int(1, 8),                  // alert_for_scrapes
                 g.int(1, 8),                  // alert_resolve_scrapes
+                g.int(1, 256),                // analog_min_batch
+                g.f64_in(0.01, 1.0),          // ewma_alpha
+                g.f64_in(0.0, 500.0),         // queue_penalty_us
+                g.f64_in(0.0, 16.0),          // drift_penalty
+                g.f64_in(0.05, 1.0),          // drift_err_cutoff
+                g.f64_in(0.0, 1.0),           // energy_weight
+                g.f64_in(0.0, 500.0),         // analog_fixed_us
+                g.f64_in(0.0, 100.0),         // digital_fixed_us
+                g.f64_in(0.1, 50.0),          // analog_us_per_row
+                g.f64_in(0.1, 50.0),          // digital_us_per_row
                 g.int(0, 999),                // artifacts suffix
             );
             let a = Config::from_toml_str(&toml).expect("generated TOML must parse");

@@ -1,10 +1,14 @@
-//! The serving engine: ingress queue → dynamic batcher → dispatcher →
-//! { worker pool (features/performer) | session-sharded attention
-//! executors } → (analog chip | XLA artifacts | session state) →
-//! replies. The leader
-//! (`Engine::start`) programs the chip, compiles artifacts, and spawns
-//! the threads; workers never touch Python — the request path is Rust +
-//! PJRT only.
+//! The serving engine: ingress queue → dynamic batcher → substrate
+//! dispatcher → { worker pool (features/performer) | session-sharded
+//! attention executors } → (analog chip fan-out | native digital matmul
+//! | XLA artifacts | session state) → replies. Every batch of
+//! substrate-flexible work (analog feature requests, analog attention
+//! sessions) is scored by the [`crate::fleet::dispatch`] cost model and
+//! runs on whichever substrate is cheaper; digital requests keep their
+//! exact-fp32 contract and always execute natively. The leader
+//! (`Engine::start`) programs the chip and spawns the threads; workers
+//! never touch Python — the request path is pure Rust (+ PJRT for the
+//! performer lane only).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU64, Ordering};
@@ -23,15 +27,15 @@ use super::telemetry::{
 use super::tilepool::lane_omega;
 use crate::aimc::Emulator;
 use crate::config::Config;
-use crate::energy::{latency_energy, mapping_ops, Device};
+use crate::energy::{latency_energy, mapping_energy_uj, mapping_ops, Device};
 use crate::error::{Error, Result};
-use crate::fleet::{ControlPlane, FleetPool, HealthState, RecalScheduler};
+use crate::fleet::{ControlPlane, Dispatcher, FleetPool, HealthState, RecalScheduler, Substrate};
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::obsv::{
     AlertInstance, Event, MvmProfile, ObservabilityHub, SeriesPoint, TraceRing, TraceSpan,
 };
-use crate::runtime::{Input, ModelBundle, Registry};
+use crate::runtime::{ModelBundle, Registry};
 use crate::util::Rng;
 
 /// Feature-lane geometry, read from the artifact manifest.
@@ -57,6 +61,9 @@ struct Shared {
     /// the fleet)
     sessions: SessionManager,
     telemetry: Telemetry,
+    /// per-batch substrate router: cost model + measured EWMA
+    /// calibration + the `imka_dispatch_*` metrics (`fleet::dispatch`)
+    dispatch: Dispatcher,
     /// canaries + time-series rings + SLO alerts + event journal, built
     /// over the telemetry registry (`series`/`alerts`/`events` verbs)
     obsv: Arc<ObservabilityHub>,
@@ -202,6 +209,7 @@ impl Engine {
         // lane counters
         let telemetry = Telemetry::default();
         let obsv = Arc::new(ObservabilityHub::new(telemetry.registry_arc(), &cfg.obsv));
+        let dispatch = Dispatcher::new(cfg.dispatch.clone(), telemetry.registry());
         let shared = Arc::new(Shared {
             registry,
             bundle,
@@ -212,6 +220,7 @@ impl Engine {
             noisy_params,
             sessions: SessionManager::new(cfg.attention.serve.clone(), cfg.serve.replication),
             telemetry,
+            dispatch,
             obsv,
             trace: TraceRing::new(cfg.obsv.trace_buffer, cfg.obsv.trace_sample_every),
             wire: crate::wire::WireConfig::from_serve(&cfg.serve),
@@ -361,7 +370,9 @@ impl Engine {
 
     /// Eagerly compile the artifacts the request path will hit, so first
     /// requests don't pay XLA compile latency (§Perf: p95/p99 of the e2e
-    /// driver dropped from seconds to the steady-state batch time).
+    /// driver dropped from seconds to the steady-state batch time). The
+    /// feature lanes run natively on both substrates now, so only the
+    /// performer — whose forward exists solely as XLA programs — warms.
     fn warm(&self) {
         let primary_task = self
             .shared
@@ -376,12 +387,9 @@ impl Engine {
             .registry
             .specs
             .values()
-            .filter(|s| match s.kind.as_str() {
-                "feature_map" | "postprocess" => true,
-                "performer" => {
-                    s.meta.get("task").and_then(|t| t.as_str()) == Some(primary_task.as_str())
-                }
-                _ => false,
+            .filter(|s| {
+                s.kind.as_str() == "performer"
+                    && s.meta.get("task").and_then(|t| t.as_str()) == Some(primary_task.as_str())
             })
             .map(|s| s.name.clone())
             .collect();
@@ -641,35 +649,107 @@ impl SessionsHandle {
 // ---------------------------------------------------------------------------
 
 /// Per-batch stage breakdown, measured once and shared by every request
-/// in the batch: the executor's lock-wait and analog-MVM time come from
-/// the [`MvmProfile`] the fleet fan-out fills; everything else the
-/// executor spent (gather/validate, XLA artifacts, postprocessing) is
-/// the digital-combine stage.
+/// in the batch: dispatch is the substrate-routing cost model, the
+/// executor's lock-wait and analog-MVM time come from the
+/// [`MvmProfile`] the fleet fan-out fills, and everything else the
+/// executor spent (gather/validate, native matmul/postprocess, XLA
+/// artifacts) is the digital-combine stage.
 #[derive(Clone, Copy)]
 struct BatchStages {
+    dispatch_us: f64,
     lock_wait_us: f64,
     analog_mvm_us: f64,
     digital_combine_us: f64,
 }
 
+/// Highest drift-error estimate across the live (non-evicted) fleet —
+/// the dispatcher's accuracy signal: a drifted fleet degrades analog
+/// results, so the cost model inflates (or cuts off) the analog side.
+fn fleet_drift_err(shared: &Shared) -> f64 {
+    shared
+        .pool
+        .chip_snapshots()
+        .iter()
+        .filter(|c| c.health != "evicted")
+        .map(|c| c.drift_err_estimate)
+        .fold(0.0, f64::max)
+}
+
+/// Score one batch against the dispatch cost model: the chosen substrate
+/// and the row count scored, or `None` for lanes that never route
+/// (performer: its forward exists only as XLA programs). Requests that
+/// pin the digital path (exact-fp32 contract) bypass the model — force
+/// only constrains substrate-flexible analog work — but still return
+/// `Digital` so their measured latency calibrates the digital EWMA.
+fn route_batch(shared: &Shared, batch: &Batch) -> Option<(Substrate, usize)> {
+    match batch.lane {
+        Lane::Feature(lane, path) => {
+            let geo = shared.geometries.get(&lane)?;
+            let n = batch.requests.len().max(1);
+            match path {
+                PathLane::Digital => Some((Substrate::Digital, n)),
+                PathLane::Analog => {
+                    let drift = fleet_drift_err(shared);
+                    let queue = shared.pool.total_queue_depth();
+                    Some((shared.dispatch.decide(n, geo.d, geo.m, drift, queue), n))
+                }
+            }
+        }
+        Lane::Performer(_) => None,
+        Lane::Attention(session) => {
+            let s = shared.sessions.get(session.0).ok()?;
+            let a = shared.sessions.config();
+            // every token projects its q and k rows through each head
+            let rows = 2 * batch.requests.len().max(1) * a.heads;
+            match s.path {
+                PathKind::Digital => Some((Substrate::Digital, rows)),
+                PathKind::Analog => {
+                    let drift = fleet_drift_err(shared);
+                    let queue = shared.pool.total_queue_depth();
+                    Some((shared.dispatch.decide(rows, a.d_head, a.m, drift, queue), rows))
+                }
+            }
+        }
+    }
+}
+
 fn execute_batch(shared: &Shared, batch: Batch) {
     let n = batch.requests.len();
     let exec_start = Instant::now();
+    // substrate routing, timed as its own stage so the cost model's
+    // overhead stays visible instead of folding into digital_combine
+    let route = route_batch(shared, &batch);
+    let dispatch_us = exec_start.elapsed().as_secs_f64() * 1e6;
+    let substrate = route.map(|(s, _)| s);
     let prof = MvmProfile::default();
     let result = match batch.lane {
-        Lane::Feature(kernel, path) => run_feature_batch(shared, kernel, path, &batch, &prof),
+        Lane::Feature(kernel, path) => {
+            run_feature_batch(shared, kernel, path, substrate, &batch, &prof)
+        }
         Lane::Performer(mode) => run_performer_batch(shared, mode, &batch),
-        Lane::Attention(session) => run_attention_batch(shared, session.0, &batch, &prof),
+        Lane::Attention(session) => {
+            run_attention_batch(shared, session.0, substrate, &batch, &prof)
+        }
     };
     let lane_key = batch.lane.telemetry_key();
     let lane_label = batch.lane.label();
     let exec_us = exec_start.elapsed().as_secs_f64() * 1e6;
+    if result.is_ok() {
+        if let Some((sub, rows)) = route {
+            // measured feedback: per-row EWMA calibration plus the
+            // imka_dispatch_latency_us{substrate} histogram
+            shared.dispatch.observe(sub, exec_us, rows);
+        }
+    }
     let stages = BatchStages {
+        dispatch_us,
         lock_wait_us: prof.lock_wait_us(),
         analog_mvm_us: prof.mvm_us(),
-        digital_combine_us: (exec_us - prof.lock_wait_us() - prof.mvm_us()).max(0.0),
+        digital_combine_us: (exec_us - dispatch_us - prof.lock_wait_us() - prof.mvm_us())
+            .max(0.0),
     };
     shared.telemetry.record_batch_stages(
+        stages.dispatch_us,
         stages.lock_wait_us,
         stages.analog_mvm_us,
         stages.digital_combine_us,
@@ -738,6 +818,7 @@ fn finish_request(
             ok,
             parse_us: req.parse_us,
             queue_us,
+            dispatch_us: stages.dispatch_us,
             lock_wait_us: stages.lock_wait_us,
             analog_mvm_us: stages.analog_mvm_us,
             digital_combine_us: stages.digital_combine_us,
@@ -754,12 +835,15 @@ fn finish_request(
 }
 
 /// Attention lane: stream the batch's tokens into the session in arrival
-/// order. The φ(q)/φ(k) projections run batched per head (analog: one
-/// fleet MVM per head); the running-sum update and normalization are
-/// native Rust against off-chip state.
+/// order. The φ(q)/φ(k) projections run batched per head on the
+/// substrate the dispatcher chose — an analog session's small or
+/// drift-exposed batch may execute digitally against the same Ω twins,
+/// so the running state stays coherent across switches. The running-sum
+/// update and normalization are native Rust against off-chip state.
 fn run_attention_batch(
     shared: &Shared,
     session: u64,
+    substrate: Option<Substrate>,
     batch: &Batch,
     prof: &MvmProfile,
 ) -> Result<(Vec<ResponseBody>, f64)> {
@@ -774,11 +858,19 @@ fn run_attention_batch(
     }
     let n = items.len();
     let session = shared.sessions.get(session)?;
-    let outs = shared.sessions.append_to(&shared.pool, &session, &items, Some(prof))?;
+    // the dispatcher only ever downgrades analog→digital; a session
+    // opened digital never touches the chip
+    let exec_path = if session.path == PathKind::Analog && substrate == Some(Substrate::Analog) {
+        PathKind::Analog
+    } else {
+        PathKind::Digital
+    };
+    let outs =
+        shared.sessions.append_to_on(&shared.pool, &session, &items, Some(prof), exec_path)?;
 
     // modelled AIMC energy: on the analog path every token's q and k
     // project through each head's Ω lane on-chip
-    let energy_uj = if session.path == PathKind::Analog {
+    let energy_uj = if exec_path == PathKind::Analog {
         let a = shared.sessions.config();
         let ops = 2.0 * a.heads as f64 * mapping_ops(n, a.d_head, a.m);
         let (_, e_mj) = latency_energy(ops, &Device::Aimc.spec());
@@ -794,13 +886,17 @@ fn run_attention_batch(
     Ok((bodies, energy_uj))
 }
 
-/// Feature lane: digital = one fused XLA artifact; analog = chip MVM +
-/// digital post-processing (XLA for rbf/softmax, native for arccos0's
-/// trivial heaviside).
+/// Feature lane: both substrates execute artifact-free. Digital = native
+/// φ(x) through `linalg::matmul` against the lane's digital-twin Ω
+/// ([`crate::runtime::native`]); analog = chip MVM + native postprocess
+/// for all three kernels. A digital *request* is an exact-fp32 contract
+/// and always runs digitally; an analog request runs on whichever
+/// substrate the dispatcher routed its batch to.
 fn run_feature_batch(
     shared: &Shared,
     lane: KernelLane,
     path: PathLane,
+    substrate: Option<Substrate>,
     batch: &Batch,
     prof: &MvmProfile,
 ) -> Result<(Vec<ResponseBody>, f64)> {
@@ -830,66 +926,18 @@ fn run_feature_batch(
     }
 
     let mapping = shared.pool.mapping(lane)?;
-    let (z, energy_uj) = match path {
-        PathLane::Digital => {
-            let spec = shared
-                .registry
-                .best_batch("feature_map", n, |s| {
-                    s.meta.get("kernel").and_then(|k| k.as_str()) == Some(kernel.as_str())
-                })
-                .ok_or_else(|| Error::Artifact(format!("no feature artifact for {kernel:?}")))?;
-            let b = spec.batch();
-            let xp = pad_rows(&x, b);
-            let exe = shared.registry.load(&spec.name)?;
-            let z = exe.run_mat(
-                &[Input::from_mat(&xp), Input::from_mat(&mapping.omega)],
-                b,
-                geo.out_dim,
-            )?;
-            (z, 0.0)
-        }
-        PathLane::Analog => {
-            // chip MVM (whole batch at once), then the digital half
+    let (z, energy_uj) = match (path, substrate) {
+        (PathLane::Analog, Some(Substrate::Analog)) => {
+            // chip MVM (whole batch at once), then the native digital
+            // half; modelled AIMC energy of the mapping (Supp. Table
+            // VIII method)
             let u = shared.pool.project_with(lane, &x, Some(prof))?;
-            let z = match kernel {
-                Kernel::ArcCos0 => {
-                    crate::features::postprocess(kernel, &u, None)
-                }
-                Kernel::Rbf => {
-                    let spec = shared
-                        .registry
-                        .best_batch("postprocess", n, |s| {
-                            s.meta.get("kernel").and_then(|k| k.as_str()) == Some("rbf")
-                        })
-                        .ok_or_else(|| Error::Artifact("no rbf postproc artifact".into()))?;
-                    let b = spec.batch();
-                    let up = pad_rows(&u, b);
-                    let sq = Mat::zeros(b, 1); // unused by rbf postproc
-                    let exe = shared.registry.load(&spec.name)?;
-                    exe.run_mat(&[Input::from_mat(&up), Input::from_mat(&sq)], b, geo.out_dim)?
-                }
-                Kernel::Softmax => {
-                    let spec = shared
-                        .registry
-                        .best_batch("postprocess", n, |s| {
-                            s.meta.get("kernel").and_then(|k| k.as_str()) == Some("softmax")
-                        })
-                        .ok_or_else(|| Error::Artifact("no softmax postproc artifact".into()))?;
-                    let b = spec.batch();
-                    let up = pad_rows(&u, b);
-                    let mut sq = Mat::zeros(b, 1);
-                    for i in 0..n {
-                        sq.data[i] =
-                            x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
-                    }
-                    let exe = shared.registry.load(&spec.name)?;
-                    exe.run_mat(&[Input::from_mat(&up), Input::from_mat(&sq)], b, geo.out_dim)?
-                }
-            };
-            // modelled AIMC energy of the mapping (Supp. Table VIII method)
-            let ops = mapping_ops(n, geo.d, geo.m);
-            let (_, e_mj) = latency_energy(ops, &Device::Aimc.spec());
-            (z, e_mj * 1e3)
+            let z = crate::runtime::native::analog_postprocess(kernel, &u, &x);
+            (z, mapping_energy_uj(n, geo.d, geo.m, &Device::Aimc.spec()))
+        }
+        _ => {
+            let z = crate::runtime::native::feature_forward(kernel, &x, &mapping.omega);
+            (z, 0.0)
         }
     };
 
@@ -1001,18 +1049,6 @@ fn run_performer_batch(
     Ok((bodies, energy_uj))
 }
 
-fn pad_rows(x: &Mat, to: usize) -> Mat {
-    if x.rows == to {
-        return x.clone();
-    }
-    assert!(x.rows <= to, "batch larger than artifact capacity");
-    let mut out = Mat::zeros(to, x.cols);
-    for i in 0..x.rows {
-        out.row_mut(i).copy_from_slice(x.row(i));
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1027,6 +1063,25 @@ mod tests {
         cfg.serve.max_wait_us = 500;
         cfg.serve.workers = 2;
         cfg.serve.warm = false; // tests compile lazily to stay fast
+        // these tests assert per-path behavior (analog energy > 0 on
+        // single-request batches); pin the dispatcher out of auto so it
+        // cannot reroute the tiny analog batches digitally
+        cfg.dispatch.force = "analog".to_string();
+        cfg
+    }
+
+    /// Boot against the checked-in `artifacts-mini` bundle: an arccos0
+    /// lane manifest with no compiled XLA programs and no trained model,
+    /// so everything here runs in a bare checkout.
+    fn mini_config() -> Config {
+        let mut cfg = Config::default();
+        cfg.artifacts_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts-mini")
+            .to_string_lossy()
+            .to_string();
+        cfg.serve.max_wait_us = 500;
+        cfg.serve.workers = 2;
+        cfg.serve.warm = false;
         cfg
     }
 
@@ -1131,6 +1186,95 @@ mod tests {
             assert!(correct >= 6, "{mode:?}: {correct}/8");
         }
         engine.shutdown();
+    }
+
+    #[test]
+    fn digital_path_serves_without_xla_artifacts() {
+        let engine = Engine::start(&mini_config()).unwrap();
+        let sub = engine.submitter();
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+        let resp = sub
+            .call(RequestBody::Features { kernel: Kernel::ArcCos0, path: PathKind::Digital, x })
+            .unwrap();
+        assert_eq!(resp.energy_uj, 0.0);
+        match resp.result.unwrap() {
+            ResponseBody::Features(z) => {
+                assert_eq!(z.len(), 64);
+                assert!(z.iter().all(|v| v.is_finite()));
+            }
+            _ => panic!("wrong body"),
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn auto_dispatch_routes_small_analog_batches_digital() {
+        // a lone analog request is far below the crossover the default
+        // priors imply, so under force="auto" (the default) the model
+        // runs it digitally: no chip MVM, so no modelled analog energy
+        let mut cfg = mini_config();
+        cfg.dispatch.force = "auto".to_string();
+        let engine = Engine::start(&cfg).unwrap();
+        let sub = engine.submitter();
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+        let resp = sub
+            .call(RequestBody::Features {
+                kernel: Kernel::ArcCos0,
+                path: PathKind::Analog,
+                x: x.clone(),
+            })
+            .unwrap();
+        assert!(resp.result.is_ok());
+        assert_eq!(resp.energy_uj, 0.0, "small analog batch should route digital");
+        engine.shutdown();
+
+        // forcing analog on the same deployment pays chip energy again,
+        // proving the contrast above came from the dispatcher
+        let mut cfg = mini_config();
+        cfg.dispatch.force = "analog".to_string();
+        let engine = Engine::start(&cfg).unwrap();
+        let sub = engine.submitter();
+        let resp = sub
+            .call(RequestBody::Features { kernel: Kernel::ArcCos0, path: PathKind::Analog, x })
+            .unwrap();
+        assert!(resp.result.is_ok());
+        assert!(resp.energy_uj > 0.0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn forced_analog_and_digital_substrates_agree_statistically() {
+        let mut za = Vec::new();
+        let mut zd = Vec::new();
+        for (force, out) in [("analog", &mut za), ("digital", &mut zd)] {
+            let mut cfg = mini_config();
+            cfg.dispatch.force = force.to_string();
+            let engine = Engine::start(&cfg).unwrap();
+            let sub = engine.submitter();
+            let mut rng = Rng::new(5);
+            for _ in 0..16 {
+                let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+                let resp = sub
+                    .call(RequestBody::Features {
+                        kernel: Kernel::ArcCos0,
+                        path: PathKind::Analog,
+                        x,
+                    })
+                    .unwrap();
+                match resp.result.unwrap() {
+                    ResponseBody::Features(z) => out.extend(z),
+                    _ => panic!("wrong body"),
+                }
+            }
+            engine.shutdown();
+        }
+        // identical input stream and Ω twin across both boots: only
+        // programming noise + drift separates the substrates (the same
+        // envelope the artifact-gated agreement test uses)
+        let rel = crate::util::stats::rel_fro_error(&za, &zd);
+        assert!(rel > 0.0 && rel < 0.5, "analog-vs-digital rel {rel}");
     }
 
     #[test]

@@ -688,6 +688,7 @@ fn dispatch(
                     ("ok", Json::Bool(sp.ok)),
                     ("parse_us", num(sp.parse_us)),
                     ("queue_us", num(sp.queue_us)),
+                    ("dispatch_us", num(sp.dispatch_us)),
                     ("lock_wait_us", num(sp.lock_wait_us)),
                     ("analog_mvm_us", num(sp.analog_mvm_us)),
                     ("digital_combine_us", num(sp.digital_combine_us)),

@@ -257,6 +257,23 @@ impl SessionManager {
         items: &[(&[f32], &[f32], &[f32])],
         profile: Option<&MvmProfile>,
     ) -> Result<Vec<(Vec<f32>, usize)>> {
+        self.append_to_on(pool, session, items, profile, session.path)
+    }
+
+    /// [`SessionManager::append_to`] with the φ substrate chosen by the
+    /// caller instead of the session's opened path. Both substrates
+    /// project against the same Ω twins, so the engine's dispatch layer
+    /// can run an analog session's batch digitally (small batch, drifted
+    /// fleet) without perturbing the running FAVOR+ state: only *where*
+    /// φ executes changes, never its distribution.
+    pub fn append_to_on(
+        &self,
+        pool: &FleetPool,
+        session: &Session,
+        items: &[(&[f32], &[f32], &[f32])],
+        profile: Option<&MvmProfile>,
+        exec_path: PathKind,
+    ) -> Result<Vec<(Vec<f32>, usize)>> {
         let (heads, d_head) = (self.cfg.heads, self.cfg.d_head);
         let dim = heads * d_head;
         for (q, k, v) in items {
@@ -286,7 +303,7 @@ impl SessionManager {
                     *dst = src * scale;
                 }
             }
-            phis.push(self.phi(pool, session.path, h, &xs, profile)?);
+            phis.push(self.phi(pool, exec_path, h, &xs, profile)?);
         }
         // fold tokens into the running state in arrival order, answering
         // each with its post-absorb attention output
@@ -390,6 +407,32 @@ mod tests {
             .append_batch(&pool, info.id, &[(&short, &ok, &ok)])
             .unwrap_err();
         assert!(matches!(err, Error::Shape(_)), "{err:?}");
+    }
+
+    #[test]
+    fn append_to_on_overrides_the_phi_substrate() {
+        let mgr = SessionManager::new(cfg(), 1);
+        let pool = pool();
+        let info = mgr.open(&pool, Some(PathKind::Analog)).unwrap();
+        let session = mgr.get(info.id).unwrap();
+        let dim = info.heads * info.d_head;
+        let q = vec![0.1f32; dim];
+        let k = vec![0.2f32; dim];
+        let v = vec![0.3f32; dim];
+        // an analog session's batch can run digitally: same Ω twins, so
+        // the running state stays coherent across the substrate switch
+        let out = mgr
+            .append_to_on(&pool, &session, &[(&q, &k, &v)], None, PathKind::Digital)
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1, 0);
+        assert!(out[0].0.iter().all(|y| y.is_finite()));
+        // and the next batch can go back to the chip
+        let out = mgr
+            .append_to_on(&pool, &session, &[(&q, &k, &v)], None, PathKind::Analog)
+            .unwrap();
+        assert_eq!(out[0].1, 1);
+        assert!(out[0].0.iter().all(|y| y.is_finite()));
     }
 
     #[test]

@@ -13,8 +13,8 @@
 //!   lane, and the lane set is closed (attention sessions collapse onto
 //!   one row via [`Lane::telemetry_key`]);
 //! - per-stage histograms `imka_stage_us{stage=...}` for the request
-//!   breakdown (parse, queue, lock_wait, analog_mvm, digital_combine,
-//!   serialize).
+//!   breakdown (parse, queue, dispatch, lock_wait, analog_mvm,
+//!   digital_combine, serialize).
 //!
 //! The hot path (`record`) takes a shared read lock only to fetch the
 //! lane's `Arc` of handles (a write lock happens once per lane, on its
@@ -45,6 +45,7 @@ struct LaneCells {
 struct StageCells {
     parse: Arc<LogHistogram>,
     queue: Arc<LogHistogram>,
+    dispatch: Arc<LogHistogram>,
     lock_wait: Arc<LogHistogram>,
     analog_mvm: Arc<LogHistogram>,
     digital_combine: Arc<LogHistogram>,
@@ -140,8 +141,8 @@ impl Telemetry {
         let stage = |name: &str| {
             registry.histogram(
                 "imka_stage_us",
-                "per-stage request latency breakdown (parse, queue, lock_wait, \
-                 analog_mvm, digital_combine, serialize)",
+                "per-stage request latency breakdown (parse, queue, dispatch, \
+                 lock_wait, analog_mvm, digital_combine, serialize)",
                 &[("stage", name)],
                 LogHistogram::latency_us,
             )
@@ -149,6 +150,7 @@ impl Telemetry {
         let stages = StageCells {
             parse: stage("parse"),
             queue: stage("queue"),
+            dispatch: stage("dispatch"),
             lock_wait: stage("lock_wait"),
             analog_mvm: stage("analog_mvm"),
             digital_combine: stage("digital_combine"),
@@ -236,9 +238,20 @@ impl Telemetry {
         }
     }
 
-    /// Record the per-batch stages measured by an executor (digital
-    /// lanes have no lock-wait/MVM stage and skip those samples).
-    pub fn record_batch_stages(&self, lock_wait_us: f64, analog_mvm_us: f64, combine_us: f64) {
+    /// Record the per-batch stages measured by an executor. The dispatch
+    /// stage is the substrate-routing decision and is measured on its
+    /// own so the combine remainder can't silently absorb it; digital
+    /// batches have no lock-wait/MVM stage and skip those samples.
+    pub fn record_batch_stages(
+        &self,
+        dispatch_us: f64,
+        lock_wait_us: f64,
+        analog_mvm_us: f64,
+        combine_us: f64,
+    ) {
+        if dispatch_us > 0.0 {
+            self.stages.dispatch.record(dispatch_us);
+        }
         if lock_wait_us > 0.0 {
             self.stages.lock_wait.record(lock_wait_us);
         }
@@ -475,7 +488,7 @@ mod tests {
         let t = Telemetry::new();
         t.record(Lane::Feature(KernelLane::Rbf, PathLane::Analog), 120.0, 4, 0.5, false);
         t.record_request_stages(3.0, 40.0);
-        t.record_batch_stages(1.5, 60.0, 15.0);
+        t.record_batch_stages(0.8, 1.5, 60.0, 15.0);
         t.record_serialize_stage(7.0);
         let live = LiveGauges {
             chips: vec![ChipSnapshot {
@@ -512,6 +525,7 @@ mod tests {
             "imka_requests_total{lane=\"feature_rbf_analog\"} 1",
             "imka_lane_energy_uj_total{lane=\"feature_rbf_analog\"} 0.5",
             "imka_stage_us_count{stage=\"queue\"} 1",
+            "imka_stage_us_count{stage=\"dispatch\"} 1",
             "imka_stage_us_count{stage=\"analog_mvm\"} 1",
             "imka_stage_us_count{stage=\"serialize\"} 1",
             "# TYPE imka_fleet_inflight gauge",

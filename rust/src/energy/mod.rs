@@ -16,6 +16,14 @@ pub fn latency_energy(ops: f64, dev: &DeviceSpec) -> (f64, f64) {
     (latency_s * 1e3, energy_j * 1e3)
 }
 
+/// Modelled energy (µJ) of mapping an `l`×`d` batch through a `d`×`m` Ω
+/// on `dev` — the per-substrate energy column of the dispatch cost model
+/// and the serving responses' `energy_uj` field (µJ = mJ × 1e3).
+pub fn mapping_energy_uj(l: usize, d: usize, m: usize, dev: &DeviceSpec) -> f64 {
+    let (_, e_mj) = latency_energy(mapping_ops(l, d, m), dev);
+    e_mj * 1e3
+}
+
 /// Effective AIMC throughput when only `cores_used` of `cores_total`
 /// crossbars hold the mapping (the under-utilization discussion of Supp.
 /// Note 4); replication multiplies the utilized cores.
@@ -69,6 +77,18 @@ mod tests {
         let r16 = e_gpu16 / e_aimc;
         assert!(r8 > 6.0 && r8 < 6.6, "int8 ratio {r8}");
         assert!(r16 > 12.0 && r16 < 13.0, "fp16 ratio {r16}");
+    }
+
+    #[test]
+    fn mapping_energy_uj_matches_latency_energy() {
+        // Supp. Table VIII row 1: AIMC 0.1100 mJ -> 110 µJ
+        let uj = mapping_energy_uj(1024, 512, 1024, &Device::Aimc.spec());
+        assert!((uj - 110.0).abs() < 5.0, "aimc µJ {uj}");
+        // the digital substrate pays orders of magnitude more per mapping,
+        // which is what tilts the dispatch cost model analog at scale
+        let cpu = mapping_energy_uj(1024, 512, 1024, &Device::Cpu.spec());
+        assert!(cpu > 100.0 * uj, "cpu µJ {cpu} vs aimc {uj}");
+        assert_eq!(mapping_energy_uj(0, 512, 1024, &Device::Cpu.spec()), 0.0);
     }
 
     #[test]

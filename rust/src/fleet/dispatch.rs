@@ -1,0 +1,442 @@
+//! Per-batch substrate dispatch: route each analog-eligible batch to the
+//! analog fleet fan-out or the artifact-free native digital path,
+//! whichever the cost model scores cheaper.
+//!
+//! The model prices a batch on both substrates in µs-equivalent units:
+//! an EWMA-calibrated per-row latency, a fixed per-batch overhead
+//! (fleet fan-out + replica locking vs. native call setup), the modelled
+//! mapping energy from `energy::mapping_energy_uj` priced in via
+//! `energy_weight`, queue pressure on the analog side, and an accuracy
+//! penalty proportional to the fleet's current drift/canary error.
+//!
+//! The decision is monotone *by construction*: every input except the
+//! batch size folds into a single crossover row count n\* —
+//! [`analog_crossover`] — computed from the calibration state alone, and
+//! a batch routes analog iff its row count reaches n\*. A larger batch
+//! therefore never flips analog→digital at fixed state, and a higher
+//! drift error only raises n\* (or disables analog outright via
+//! `drift_err_cutoff`), never the reverse — the two properties
+//! `util::prop` pins in the tests below.
+//!
+//! Calibration is measured, not assumed: [`Dispatcher::observe`] feeds
+//! each batch's wall-clock execution into the per-substrate
+//! `imka_dispatch_latency_us{substrate}` histograms and the EWMA per-row
+//! estimates, so the config priors only matter until traffic flows.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
+
+use crate::config::DispatchConfig;
+use crate::energy::{mapping_energy_uj, Device};
+use crate::obsv::{Counter, LogHistogram, MetricsRegistry};
+
+/// Execution substrate of one batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Substrate {
+    /// analog fleet fan-out (emulated PCM MVMs + native postprocess)
+    Analog,
+    /// native digital path (`linalg::matmul` φ-projection + combine)
+    Digital,
+}
+
+impl Substrate {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Substrate::Analog => "analog",
+            Substrate::Digital => "digital",
+        }
+    }
+}
+
+/// `[dispatch] force`: pin every analog-eligible batch to one substrate,
+/// or let the cost model choose. Digital-path requests are never forced
+/// analog — their exact fp32 contract always wins.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForceMode {
+    Auto,
+    Analog,
+    Digital,
+}
+
+impl ForceMode {
+    pub fn parse(s: &str) -> Option<ForceMode> {
+        match s {
+            "auto" => Some(ForceMode::Auto),
+            "analog" => Some(ForceMode::Analog),
+            "digital" => Some(ForceMode::Digital),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ForceMode::Auto => "auto",
+            ForceMode::Analog => "analog",
+            ForceMode::Digital => "digital",
+        }
+    }
+}
+
+/// Everything one routing decision reads, captured as a value so the
+/// decision itself ([`decide_with_state`]) is a pure function tests can
+/// pin exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct CostState {
+    /// EWMA-calibrated per-row latencies (µs/row)
+    pub analog_us_per_row: f64,
+    pub digital_us_per_row: f64,
+    /// fixed per-batch overheads (µs)
+    pub analog_fixed_us: f64,
+    pub digital_fixed_us: f64,
+    /// modelled per-row mapping energy (µJ/row) at the batch's geometry
+    pub analog_uj_per_row: f64,
+    pub digital_uj_per_row: f64,
+    /// worst drift/canary relative error across routable chips
+    pub drift_err: f64,
+    /// analog MVMs in flight across the fleet
+    pub queue_depth: usize,
+}
+
+/// Effective per-row cost (µs-equivalent) of each substrate: latency
+/// plus `energy_weight`-priced energy, with the analog side inflated by
+/// `drift_penalty` per unit of drift error (worse accuracy ⇒ effectively
+/// more expensive analog rows).
+fn per_row_costs(cfg: &DispatchConfig, st: &CostState) -> (f64, f64) {
+    let analog = (st.analog_us_per_row + cfg.energy_weight * st.analog_uj_per_row)
+        * (1.0 + cfg.drift_penalty * st.drift_err.max(0.0));
+    let digital = st.digital_us_per_row + cfg.energy_weight * st.digital_uj_per_row;
+    (analog, digital)
+}
+
+/// Smallest batch row count that routes analog under `st`, or `None` if
+/// no batch size does (drift at/above the cutoff, or analog not cheaper
+/// per row). The fixed analog overhead — including queue pressure — is
+/// amortized at `gap / (digital_per_row - analog_per_row)` rows; the
+/// result is floored by `analog_min_batch`.
+pub fn analog_crossover(cfg: &DispatchConfig, st: &CostState) -> Option<usize> {
+    if st.drift_err >= cfg.drift_err_cutoff {
+        return None;
+    }
+    let (analog, digital) = per_row_costs(cfg, st);
+    if !(analog < digital) {
+        return None;
+    }
+    let fixed_gap =
+        st.analog_fixed_us + st.queue_depth as f64 * cfg.queue_penalty_us - st.digital_fixed_us;
+    let n_star = if fixed_gap <= 0.0 { 1.0 } else { (fixed_gap / (digital - analog)).ceil() };
+    Some((n_star.max(1.0) as usize).max(cfg.analog_min_batch).max(1))
+}
+
+/// Route one batch of `rows` rows under the pinned state `st`.
+pub fn decide_with_state(cfg: &DispatchConfig, st: &CostState, rows: usize) -> Substrate {
+    match analog_crossover(cfg, st) {
+        Some(n_star) if rows >= n_star => Substrate::Analog,
+        _ => Substrate::Digital,
+    }
+}
+
+/// The engine-wide router. `decide` is lock-free (EWMA state lives in
+/// atomics as f64 bits) and safe to call per batch from every executor
+/// thread; `observe` closes the calibration loop after each execution.
+pub struct Dispatcher {
+    cfg: DispatchConfig,
+    force: ForceMode,
+    /// EWMA µs/row per substrate, stored as f64 bit patterns
+    analog_us_per_row: AtomicU64,
+    digital_us_per_row: AtomicU64,
+    /// [analog, digital], indexed via `idx`
+    latency: [Arc<LogHistogram>; 2],
+    decisions: [Arc<Counter>; 2],
+}
+
+impl Dispatcher {
+    pub fn new(cfg: DispatchConfig, registry: &MetricsRegistry) -> Dispatcher {
+        let hist = |sub: &str| {
+            registry.histogram(
+                "imka_dispatch_latency_us",
+                "measured per-batch execution latency by substrate \
+                 (feeds the dispatch cost model's EWMA calibration)",
+                &[("substrate", sub)],
+                LogHistogram::latency_us,
+            )
+        };
+        let ctr = |sub: &str| {
+            registry.counter(
+                "imka_dispatch_decisions_total",
+                "batches routed to each substrate (cost model + forced modes)",
+                &[("substrate", sub)],
+            )
+        };
+        // invalid spellings are a Config error upstream; default defensively
+        let force = ForceMode::parse(&cfg.force).unwrap_or(ForceMode::Auto);
+        Dispatcher {
+            force,
+            analog_us_per_row: AtomicU64::new(cfg.analog_us_per_row.to_bits()),
+            digital_us_per_row: AtomicU64::new(cfg.digital_us_per_row.to_bits()),
+            latency: [hist("analog"), hist("digital")],
+            decisions: [ctr("analog"), ctr("digital")],
+            cfg,
+        }
+    }
+
+    fn idx(sub: Substrate) -> usize {
+        match sub {
+            Substrate::Analog => 0,
+            Substrate::Digital => 1,
+        }
+    }
+
+    pub fn force(&self) -> ForceMode {
+        self.force
+    }
+
+    /// Snapshot the cost-model state for a batch of geometry `d`×`m`
+    /// under the given fleet drift estimate and queue depth.
+    pub fn state(&self, d: usize, m: usize, drift_err: f64, queue_depth: usize) -> CostState {
+        CostState {
+            analog_us_per_row: f64::from_bits(self.analog_us_per_row.load(Relaxed)),
+            digital_us_per_row: f64::from_bits(self.digital_us_per_row.load(Relaxed)),
+            analog_fixed_us: self.cfg.analog_fixed_us,
+            digital_fixed_us: self.cfg.digital_fixed_us,
+            analog_uj_per_row: mapping_energy_uj(1, d, m, &Device::Aimc.spec()),
+            digital_uj_per_row: mapping_energy_uj(1, d, m, &Device::Cpu.spec()),
+            drift_err,
+            queue_depth,
+        }
+    }
+
+    /// Route one batch of `rows` rows with mapping geometry `d`×`m`;
+    /// every call counts toward `imka_dispatch_decisions_total`.
+    pub fn decide(
+        &self,
+        rows: usize,
+        d: usize,
+        m: usize,
+        drift_err: f64,
+        queue_depth: usize,
+    ) -> Substrate {
+        let sub = match self.force {
+            ForceMode::Analog => Substrate::Analog,
+            ForceMode::Digital => Substrate::Digital,
+            ForceMode::Auto => {
+                decide_with_state(&self.cfg, &self.state(d, m, drift_err, queue_depth), rows.max(1))
+            }
+        };
+        self.decisions[Self::idx(sub)].inc();
+        sub
+    }
+
+    /// Feed one measured batch execution (`latency_us` wall-clock over
+    /// `rows` rows on `sub`) back into the histogram and the EWMA.
+    pub fn observe(&self, sub: Substrate, latency_us: f64, rows: usize) {
+        if !(latency_us > 0.0) || rows == 0 {
+            return;
+        }
+        self.latency[Self::idx(sub)].record(latency_us);
+        let per_row = latency_us / rows as f64;
+        let alpha = self.cfg.ewma_alpha.clamp(0.0, 1.0);
+        let cell = match sub {
+            Substrate::Analog => &self.analog_us_per_row,
+            Substrate::Digital => &self.digital_us_per_row,
+        };
+        let _ = cell.fetch_update(Relaxed, Relaxed, |bits| {
+            Some(((1.0 - alpha) * f64::from_bits(bits) + alpha * per_row).to_bits())
+        });
+    }
+
+    /// Current EWMA per-row latency estimates `(analog, digital)`.
+    pub fn us_per_row(&self) -> (f64, f64) {
+        (
+            f64::from_bits(self.analog_us_per_row.load(Relaxed)),
+            f64::from_bits(self.digital_us_per_row.load(Relaxed)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn pinned_cfg() -> DispatchConfig {
+        // mirror the defaults explicitly so the pinned decisions below
+        // can never drift with the config file
+        DispatchConfig {
+            force: "auto".to_string(),
+            analog_min_batch: 4,
+            ewma_alpha: 0.2,
+            queue_penalty_us: 50.0,
+            drift_penalty: 4.0,
+            drift_err_cutoff: 0.5,
+            energy_weight: 0.02,
+            analog_fixed_us: 80.0,
+            digital_fixed_us: 5.0,
+            analog_us_per_row: 6.0,
+            digital_us_per_row: 11.0,
+        }
+    }
+
+    fn pinned_state() -> CostState {
+        CostState {
+            analog_us_per_row: 6.0,
+            digital_us_per_row: 11.0,
+            analog_fixed_us: 80.0,
+            digital_fixed_us: 5.0,
+            analog_uj_per_row: 0.05,
+            digital_uj_per_row: 5.0,
+            drift_err: 0.02,
+            queue_depth: 0,
+        }
+    }
+
+    fn gen_state(g: &mut Gen) -> CostState {
+        CostState {
+            analog_us_per_row: g.f64_in(0.1, 50.0),
+            digital_us_per_row: g.f64_in(0.1, 50.0),
+            analog_fixed_us: g.f64_in(0.0, 500.0),
+            digital_fixed_us: g.f64_in(0.0, 100.0),
+            analog_uj_per_row: g.f64_in(0.0, 10.0),
+            digital_uj_per_row: g.f64_in(0.0, 10.0),
+            drift_err: g.f64_in(0.0, 1.0),
+            queue_depth: g.int(0, 64),
+        }
+    }
+
+    /// The acceptance pin: with the cost-model state fixed, `auto` sends
+    /// small batches digital and large batches analog, deterministically.
+    #[test]
+    fn pinned_state_routes_small_digital_large_analog() {
+        let cfg = pinned_cfg();
+        let st = pinned_state();
+        let n_star = analog_crossover(&cfg, &st).expect("analog viable under pinned state");
+        assert!(
+            n_star > cfg.analog_min_batch && n_star < 64,
+            "crossover {n_star} out of the expected band"
+        );
+        for rows in 1..n_star {
+            assert_eq!(decide_with_state(&cfg, &st, rows), Substrate::Digital, "rows {rows}");
+        }
+        for rows in [n_star, n_star + 1, 4 * n_star, 4096] {
+            assert_eq!(decide_with_state(&cfg, &st, rows), Substrate::Analog, "rows {rows}");
+        }
+    }
+
+    #[test]
+    fn larger_batches_never_flip_analog_to_digital() {
+        check("dispatch-batch-monotone", 256, |g| {
+            let cfg = pinned_cfg();
+            let st = gen_state(g);
+            let n1 = g.int(1, 4096);
+            let n2 = n1 + g.int(0, 4096);
+            // analog at n1 ⇒ analog at every n2 ≥ n1
+            decide_with_state(&cfg, &st, n1) != Substrate::Analog
+                || decide_with_state(&cfg, &st, n2) == Substrate::Analog
+        });
+    }
+
+    #[test]
+    fn higher_canary_error_never_flips_digital_to_analog() {
+        check("dispatch-drift-monotone", 256, |g| {
+            let cfg = pinned_cfg();
+            let mut st = gen_state(g);
+            let rows = g.int(1, 4096);
+            let lo = g.f64_in(0.0, 1.0);
+            let hi = lo + g.f64_in(0.0, 1.0);
+            st.drift_err = lo;
+            let at_lo = decide_with_state(&cfg, &st, rows);
+            st.drift_err = hi;
+            let at_hi = decide_with_state(&cfg, &st, rows);
+            // digital at lo ⇒ digital at every drift ≥ lo
+            at_lo != Substrate::Digital || at_hi == Substrate::Digital
+        });
+    }
+
+    #[test]
+    fn queue_pressure_only_raises_the_crossover() {
+        check("dispatch-queue-monotone", 128, |g| {
+            let cfg = pinned_cfg();
+            let mut st = gen_state(g);
+            st.queue_depth = g.int(0, 32);
+            let idle = analog_crossover(&cfg, &st);
+            st.queue_depth += g.int(1, 32);
+            let busy = analog_crossover(&cfg, &st);
+            match (idle, busy) {
+                (None, _) => busy.is_none(),
+                (Some(_), None) => false, // queue depth alone never disables analog
+                (Some(a), Some(b)) => b >= a,
+            }
+        });
+    }
+
+    #[test]
+    fn drift_cutoff_disables_analog_at_any_batch_size() {
+        let cfg = pinned_cfg();
+        let mut st = pinned_state();
+        st.drift_err = cfg.drift_err_cutoff;
+        assert_eq!(analog_crossover(&cfg, &st), None);
+        assert_eq!(decide_with_state(&cfg, &st, 1 << 20), Substrate::Digital);
+    }
+
+    #[test]
+    fn min_batch_floors_the_crossover() {
+        let mut cfg = pinned_cfg();
+        cfg.analog_min_batch = 1000;
+        let st = pinned_state();
+        assert_eq!(analog_crossover(&cfg, &st), Some(1000));
+        assert_eq!(decide_with_state(&cfg, &st, 999), Substrate::Digital);
+        assert_eq!(decide_with_state(&cfg, &st, 1000), Substrate::Analog);
+    }
+
+    #[test]
+    fn forced_modes_short_circuit_the_model() {
+        let registry = MetricsRegistry::new();
+        for (force, want) in [("analog", Substrate::Analog), ("digital", Substrate::Digital)] {
+            let cfg = DispatchConfig { force: force.to_string(), ..pinned_cfg() };
+            let d = Dispatcher::new(cfg, &registry);
+            // extreme states in both directions cannot override a force
+            assert_eq!(d.decide(1, 16, 64, 0.9, 100), want);
+            assert_eq!(d.decide(100_000, 16, 64, 0.0, 0), want);
+        }
+    }
+
+    #[test]
+    fn auto_dispatcher_matches_the_pure_decision() {
+        let registry = MetricsRegistry::new();
+        let d = Dispatcher::new(pinned_cfg(), &registry);
+        // priors: analog 6 µs/row vs digital 11 µs/row, 80 µs fan-out
+        // overhead ⇒ single-row batches digital, hundreds-of-rows analog
+        assert_eq!(d.decide(2, 16, 64, 0.02, 0), Substrate::Digital);
+        assert_eq!(d.decide(256, 16, 64, 0.02, 0), Substrate::Analog);
+    }
+
+    #[test]
+    fn observe_calibrates_the_ewma_and_records_metrics() {
+        let registry = MetricsRegistry::new();
+        let d = Dispatcher::new(pinned_cfg(), &registry);
+        let (analog_prior, digital_prior) = d.us_per_row();
+        assert_eq!((analog_prior, digital_prior), (6.0, 11.0));
+        // 50 batches measured at 100 µs/row converge the analog estimate
+        for _ in 0..50 {
+            d.observe(Substrate::Analog, 1000.0, 10);
+        }
+        let (analog_now, digital_now) = d.us_per_row();
+        assert!((analog_now - 100.0).abs() < 1.0, "ewma {analog_now}");
+        assert_eq!(digital_now, digital_prior, "digital estimate untouched");
+        // a measured-slow analog substrate pushes the crossover up
+        let st = d.state(16, 64, 0.0, 0);
+        assert_eq!(analog_crossover(&pinned_cfg(), &st), None, "{st:?}");
+        // junk samples are dropped, not folded into the estimate
+        d.observe(Substrate::Digital, 0.0, 10);
+        d.observe(Substrate::Digital, -5.0, 10);
+        d.observe(Substrate::Digital, 100.0, 0);
+        assert_eq!(d.us_per_row().1, digital_prior);
+
+        let _ = d.decide(8, 16, 64, 0.0, 0);
+        let text = registry.render();
+        assert!(
+            text.contains("imka_dispatch_latency_us_count{substrate=\"analog\"} 50"),
+            "{text}"
+        );
+        assert!(text.contains("imka_dispatch_decisions_total{substrate="), "{text}");
+    }
+}

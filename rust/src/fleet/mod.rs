@@ -36,6 +36,11 @@
 //!   `coordinator::Engine` (config section `[fleet]`, CLI flags
 //!   `--n-chips/--placement/--router/...`, and the server's `stats`
 //!   response).
+//! - [`dispatch`] — per-batch substrate routing: a measured-calibrated
+//!   cost model (batch size, geometry, modelled µJ, drift error, queue
+//!   depth) that decides whether a batch runs on the analog fleet or on
+//!   the artifact-free native digital path (`runtime::native`), with
+//!   `[dispatch]` config forcing and per-substrate latency histograms.
 //! - [`control`] — the supervisory control plane over the data plane
 //!   above: per-chip health state machine driven by heartbeats and
 //!   error counters, an eviction/re-placement engine for chips that
@@ -44,12 +49,14 @@
 //!   (config section `[fleet.control]`, server `health`/`drain` verbs).
 
 pub mod control;
+pub mod dispatch;
 pub mod placement;
 pub mod pool;
 pub mod recal;
 pub mod router;
 
 pub use control::{Autoscaler, ControlPlane, HealthMonitor, HealthState, ScaleDecision, TickReport};
+pub use dispatch::{analog_crossover, decide_with_state, CostState, Dispatcher, ForceMode, Substrate};
 pub use placement::{ChipCapacity, LanePlan, PlacementPolicy, Planner, ShardPlan};
 pub use pool::{CanarySample, DetachOutcome, FleetPool, LaneMapping, ReplacementJob, RestoreOutcome};
 pub use recal::{age_at_budget, estimated_drift_error, RecalScheduler};

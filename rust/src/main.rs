@@ -102,6 +102,11 @@ SUBCOMMANDS
       --trace-sample-every N   record a trace span for 1 in N requests
                                (0 = off, 1 = every request; default 8)
       --trace-buffer N         sampled spans kept for the trace verb
+      --dispatch-force M       substrate routing for analog-eligible
+                               batches: auto (cost model, default) |
+                               analog | digital (see docs/dispatch.md)
+      --analog-min-batch N     smallest batch the cost model may route
+                               to the analog fleet (default 4)
   experiment <id>              regenerate a paper table/figure:
       fig2a fig2b fig3b table1 supp20 supp21 supp8 supp-table2
       redraw ablate-relu ablate-replication ablate-noise all
@@ -191,6 +196,14 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
     cfg.obsv.trace_sample_every =
         args.usize_or("trace-sample-every", cfg.obsv.trace_sample_every as usize)? as u64;
     cfg.obsv.trace_buffer = args.usize_or("trace-buffer", cfg.obsv.trace_buffer)?.max(1);
+    if let Some(f) = args.get("dispatch-force") {
+        imka::fleet::ForceMode::parse(f).ok_or_else(|| {
+            Error::Parse(format!("--dispatch-force: unknown mode '{f}' (auto | analog | digital)"))
+        })?;
+        cfg.dispatch.force = f.to_string();
+    }
+    cfg.dispatch.analog_min_batch =
+        args.usize_or("analog-min-batch", cfg.dispatch.analog_min_batch)?.max(1);
 
     println!("booting engine (artifacts: {})...", cfg.artifacts_dir);
     let engine = Engine::start(&cfg)?;
@@ -212,6 +225,11 @@ fn serve(args: &Args, cfg: &Config) -> Result<()> {
             a.heads, a.d_head, a.m, a.path, a.max_sessions
         );
     }
+    println!(
+        "hybrid dispatch: force={}, analog floor {} rows (cost-model \
+         routing per batch; imka_dispatch_* metrics)",
+        cfg.dispatch.force, cfg.dispatch.analog_min_batch
+    );
     if cfg.obsv.trace_sample_every > 0 {
         println!(
             "tracing: 1 in {} requests sampled, newest {} spans kept (trace verb)",

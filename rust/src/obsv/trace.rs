@@ -4,7 +4,7 @@
 //! increasing request id at submission. Ids where
 //! `id % sample_every == 0` are *sampled*: the engine records a
 //! [`TraceSpan`] with the per-stage latency breakdown (parse, queue
-//! wait, lock wait, analog MVM, digital combine) into the
+//! wait, substrate dispatch, lock wait, analog MVM, digital combine) into the
 //! [`TraceRing`] when the request completes. The ring holds the last
 //! `cap` spans — memory is bounded; older spans are overwritten and
 //! counted as dropped. The server's `trace` verb drains the newest
@@ -36,6 +36,9 @@ pub struct TraceSpan {
     pub parse_us: f64,
     /// enqueue → batch execution start
     pub queue_us: f64,
+    /// substrate routing: the dispatch cost model scoring the batch
+    /// analog vs. digital (0 for unrouted lanes, e.g. performer)
+    pub dispatch_us: f64,
     /// waiting on chip read locks inside the fleet fan-out
     pub lock_wait_us: f64,
     /// analog matmul time on-chip

@@ -1,9 +1,16 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
-//! executes them from the request path. Python is never invoked here.
+//! Runtime layer: XLA artifacts plus the native digital fallback.
+//!
+//! - [`artifact`] / [`client`] / [`weights`] — loads the HLO-text
+//!   artifacts produced by `python/compile/aot.py`, compiles them once on
+//!   the CPU PJRT client, and executes them from the request path.
+//!   Python is never invoked here.
+//! - [`native`] — artifact-free digital execution of the feature-map
+//!   shapes through `linalg::matmul`, so the digital substrate serves
+//!   even where no PJRT runtime exists (see [`xla_stub`]).
 
 pub mod artifact;
 pub mod client;
+pub mod native;
 pub mod weights;
 pub mod xla_stub;
 

@@ -1,0 +1,82 @@
+//! Native digital execution — the artifact-free twin of the XLA serving
+//! artifacts.
+//!
+//! The offline build's PJRT stub (`xla_stub`) fails every artifact
+//! execution, which used to leave `PathLane::Digital` feature requests
+//! (and the digital postprocess half of rbf/softmax analog requests)
+//! unservable without a real XLA toolchain. This module serves those
+//! shapes directly through `linalg::matmul` (cache-blocked, worker-pool
+//! threaded) and `features::postprocess`, so the digital substrate is
+//! always available — including as the dispatch cost model's fast path
+//! for small batches (`fleet::dispatch`). Artifact geometry (d, m,
+//! out_dim) still comes from the manifest; only execution is native.
+//!
+//! Performer classification remains artifact-only: the transformer
+//! forward exists as compiled XLA programs, not as native kernels, so
+//! `Lane::Performer` requests still require a real PJRT runtime (see
+//! docs/dispatch.md).
+
+use crate::features;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+
+/// Full digital feature map z = postprocess(x·Ω): the batch-sized
+/// replacement for the `feature_map` XLA artifact. `x` is `n`×`d`,
+/// `omega` is `d`×`m`, the result is `n`×`l(kernel)·m` — no padding to
+/// an artifact batch size, no `.hlo.txt` on disk.
+pub fn feature_forward(kernel: Kernel, x: &Mat, omega: &Mat) -> Mat {
+    features::feature_map(kernel, x, omega)
+}
+
+/// Digital combine half of the analog path: postprocess the fleet's
+/// analog projection `u = x·Ω` (with `x` supplying the row norms the
+/// softmax kernel needs). Replaces the per-kernel postprocess artifacts
+/// for all three kernels.
+pub fn analog_postprocess(kernel: Kernel, u: &Mat, x: &Mat) -> Mat {
+    features::postprocess(kernel, u, Some(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::{sample_omega, Sampler};
+    use crate::kernels::Kernel;
+    use crate::util::rng::Rng;
+
+    fn gaussian_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        Mat::randn(rows, cols, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn feature_forward_shapes_and_finiteness_all_kernels() {
+        let (d, m) = (16, 64);
+        let omega = sample_omega(Sampler::Orf, d, m, &mut Rng::new(5));
+        // batch sizes an artifact registry would have had to pad or split
+        for n in [1, 3, 8, 37] {
+            let x = gaussian_mat(n, d, 100 + n as u64);
+            for kernel in [Kernel::Rbf, Kernel::ArcCos0, Kernel::Softmax] {
+                let z = feature_forward(kernel, &x, &omega);
+                assert_eq!((z.rows, z.cols), (n, kernel.l() * m), "{kernel:?} n={n}");
+                assert!(z.data.iter().all(|v| v.is_finite()), "{kernel:?} n={n}");
+            }
+        }
+    }
+
+    /// The analog combine must be the exact digital tail of the full
+    /// forward: projecting digitally and then postprocessing natively
+    /// reproduces `feature_forward` bit-for-bit (maps.rs pins the same
+    /// split/full identity; this pins it through the runtime entry
+    /// points the engine actually calls).
+    #[test]
+    fn analog_postprocess_is_the_tail_of_feature_forward() {
+        let (n, d, m) = (9, 16, 32);
+        let omega = sample_omega(Sampler::Orf, d, m, &mut Rng::new(9));
+        let x = gaussian_mat(n, d, 42);
+        let u = crate::linalg::matmul(&x, &omega);
+        for kernel in [Kernel::Rbf, Kernel::ArcCos0, Kernel::Softmax] {
+            let full = feature_forward(kernel, &x, &omega);
+            let split = analog_postprocess(kernel, &u, &x);
+            assert_eq!(full.data, split.data, "{kernel:?}");
+        }
+    }
+}

@@ -10,14 +10,17 @@
 //! real crate back in is a one-line change there.
 //!
 //! What still works under the stub: the simulated chip (all analog MVMs),
-//! the native feature maps, and the full ArcCos0 analog serving lane
-//! (its postprocess is native Rust). What does not: every XLA-artifact
-//! execution — the digital feature lanes, the performer lanes, and the
-//! rbf/softmax *analog* lanes' digital postprocess step, which the engine
-//! runs from compiled artifacts. Artifact-gated tests skip when no
-//! manifest is present; in an environment that has both artifacts and the
-//! real xla crate, restore the alias in `super::client` to re-enable
-//! those paths end-to-end (tracked in ROADMAP "Real PJRT backend").
+//! the native feature maps, and — since the engine's feature path runs
+//! through [`super::native`] — every feature lane on both substrates:
+//! digital requests execute `linalg::matmul` + native postprocess, and
+//! analog requests postprocess natively for all three kernels. The only
+//! thing that still needs a real PJRT runtime is the performer
+//! (transformer classification) lane, whose forward exists solely as
+//! compiled XLA programs. Performer tests skip when artifacts are
+//! absent; in an environment with artifacts and the real xla crate,
+//! restore the alias in `super::client` to re-enable that lane — and to
+//! give `fleet::dispatch` a second, XLA-backed digital substrate to
+//! score (tracked in ROADMAP "Real PJRT backend").
 
 use std::path::Path;
 

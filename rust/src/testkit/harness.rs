@@ -28,13 +28,14 @@ use std::sync::Arc;
 use super::invariants::InvariantChecker;
 use super::schedule::{ChaosOp, FaultSchedule};
 use super::ChaosConfig;
-use crate::config::{AttnServeConfig, ChipConfig, ControlConfig, FleetConfig, ObsvConfig};
+use crate::config::{AttnServeConfig, ChipConfig, ControlConfig, DispatchConfig, FleetConfig, ObsvConfig};
 use crate::coordinator::request::{KernelLane, LaneId, PathKind};
 use crate::coordinator::SessionManager;
 use crate::features::postprocess;
 use crate::features::sampler::{sample_omega, Sampler};
 use crate::fleet::{
-    estimated_drift_error, ControlPlane, FleetPool, PlacementPolicy, RouterPolicy,
+    estimated_drift_error, ControlPlane, Dispatcher, FleetPool, PlacementPolicy, RouterPolicy,
+    Substrate,
 };
 use crate::kernels::{approx_error, gram, gram_features, Kernel};
 use crate::linalg::{matmul, Mat};
@@ -323,8 +324,15 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
     );
     let jump_err = estimated_drift_error(&chip, cfg.recal_jump_s);
     let canary_slo = ((1.3 * canary_baseline).powi(2) + (jump_err / 2.0).powi(2)).sqrt();
+    let registry = Arc::new(MetricsRegistry::new());
+    // hybrid dispatch (ISSUE 10): feature traffic consults the same
+    // substrate cost model serving uses. Digital-routed requests run
+    // the native matmul against the harness's own Ω twins, so every
+    // invariant below must hold on both substrates while faults and
+    // drift reshape the cost model's analog latency EWMA.
+    let dispatch = Dispatcher::new(DispatchConfig::default(), &registry);
     let hub = Arc::new(ObservabilityHub::new(
-        Arc::new(MetricsRegistry::new()),
+        registry,
         &ObsvConfig {
             canary_batch,
             canary_period_ticks: 1,
@@ -465,6 +473,16 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
         }
 
         // -- concurrent traffic quantum ---------------------------------
+        // substrate-routing inputs sampled once per quantum: the drift
+        // term tracks the scheduled fleet clock (so DriftJump ops push
+        // the cost model toward the digital path), the queue term the
+        // instantaneous analog load
+        let drift_err = pool
+            .chip_snapshots()
+            .iter()
+            .filter(|c| c.health != "evicted")
+            .map(|c| c.drift_err_estimate)
+            .fold(0.0f64, f64::max);
         let quantum = Timer::start();
         let expected_at_entry = attn_expected;
         let ledgers = parallel_map(cfg.threads.max(2), |w| {
@@ -524,14 +542,44 @@ pub fn run_chaos(seed: u64, cfg: &ChaosConfig) -> ChaosReport {
                     }
                 }
             } else {
-                // feature/performer-projection worker
+                // feature-projection worker: every request consults the
+                // hybrid dispatch cost model (ISSUE 10). Digital routes
+                // run the native matmul against the harness's Ω twins
+                // and must satisfy the same shape/finiteness invariants
+                // as analog fleet replies; analog routes feed measured
+                // latencies back so the EWMA stays chaos-calibrated.
                 for r in 0..cfg.feature_reqs_per_thread {
-                    let lane = if (w + r) % 2 == 0 { KernelLane::Rbf } else { KernelLane::ArcCos0 };
+                    let (lane, omega) = if (w + r) % 2 == 0 {
+                        (KernelLane::Rbf, &omega_rbf)
+                    } else {
+                        (KernelLane::ArcCos0, &omega_arc)
+                    };
                     let x = &xs[(w * 31 + r * 7 + i) % xs.len()];
                     let t0 = Timer::start();
+                    let sub =
+                        dispatch.decide(x.rows, cfg.d, cfg.m, drift_err, pool.total_queue_depth());
+                    if sub == Substrate::Digital {
+                        let u = matmul(x, omega);
+                        let secs = t0.elapsed_secs();
+                        led.latencies.push(secs);
+                        dispatch.observe(Substrate::Digital, secs * 1e6, x.rows);
+                        if u.rows != x.rows
+                            || u.cols != cfg.m
+                            || !u.data.iter().all(|v| v.is_finite())
+                        {
+                            led.violations.push(format!(
+                                "malformed digital {lane:?} reply: {}x{}",
+                                u.rows, u.cols
+                            ));
+                        }
+                        led.ok += 1;
+                        continue;
+                    }
                     match pool.project(lane, x) {
                         Ok(u) => {
-                            led.latencies.push(t0.elapsed_secs());
+                            let secs = t0.elapsed_secs();
+                            led.latencies.push(secs);
+                            dispatch.observe(Substrate::Analog, secs * 1e6, x.rows);
                             if u.rows != x.rows
                                 || u.cols != cfg.m
                                 || !u.data.iter().all(|v| v.is_finite())

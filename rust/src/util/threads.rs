@@ -1,8 +1,26 @@
 //! Scoped data-parallel helpers over std::thread (no rayon offline).
 //!
 //! `parallel_chunks` splits a mutable output slice into contiguous chunks
-//! and processes them on up to `num_threads` OS threads. Used by the
+//! and processes them on up to `num_threads` workers. Used by the
 //! blocked matmul, Gram computation and the chip emulator's batch path.
+//!
+//! Since ISSUE 10 the chunks run on a lazily-started **persistent worker
+//! pool** instead of OS threads spawned per call: thread spawn + join
+//! costs tens of µs, which dominated the small batched matmuls on the
+//! serving hot path (a d=16×m=64 projection is a few µs of arithmetic).
+//! The pool is process-wide, its threads are named `imka-pool-N`, and
+//! callers *help drain* the shared queue while they wait — so nested
+//! parallelism (a pool job that itself calls `parallel_chunks`) makes
+//! progress even with every worker busy, and can never deadlock. The
+//! serial fast path for single-chunk work is unchanged: callers below
+//! their own op-count thresholds (e.g. `linalg`'s blocked matmul) never
+//! touch the queue, a mutex, or a condvar.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 /// Number of worker threads to use by default (physical parallelism with a
 /// small cap to avoid oversubscription alongside PJRT's own pool).
@@ -11,6 +29,142 @@ pub fn default_threads() -> usize {
         .map(|n| n.get())
         .unwrap_or(4)
         .min(16)
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Process-wide job queue the `imka-pool-N` threads service.
+struct WorkerPool {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+}
+
+impl WorkerPool {
+    fn submit(&self, job: Job) {
+        self.queue.lock().unwrap().push_back(job);
+        self.available.notify_one();
+    }
+
+    /// Pop one queued job if any — used by waiting callers to help
+    /// drain, which is what makes nested parallelism deadlock-free.
+    fn try_pop(&self) -> Option<Job> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(job) = q.pop_front() {
+                        break job;
+                    }
+                    q = self.available.wait(q).unwrap();
+                }
+            };
+            // jobs are pre-wrapped in catch_unwind by run_scoped, but a
+            // second guard keeps a worker alive no matter what reaches it
+            let _ = catch_unwind(AssertUnwindSafe(job));
+        }
+    }
+}
+
+/// The pool, started on first use and alive for the process lifetime
+/// (leaked: worker threads park on the condvar when idle, which is free).
+fn pool() -> &'static WorkerPool {
+    static POOL: OnceLock<&'static WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let pool: &'static WorkerPool = Box::leak(Box::new(WorkerPool {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        }));
+        for i in 0..default_threads() {
+            std::thread::Builder::new()
+                .name(format!("imka-pool-{i}"))
+                .spawn(move || pool.worker_loop())
+                .expect("spawn imka worker pool thread");
+        }
+        pool
+    })
+}
+
+/// Completion latch one `run_scoped` call waits on.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), done: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every job counted down, executing queued jobs while
+    /// waiting. The short timed wait (instead of an untimed one) covers
+    /// the race where the last worker notifies between our queue check
+    /// and re-acquiring the lock.
+    fn wait(&self, pool: &WorkerPool) {
+        loop {
+            if *self.remaining.lock().unwrap() == 0 {
+                return;
+            }
+            if let Some(job) = pool.try_pop() {
+                job();
+                continue;
+            }
+            let r = self.remaining.lock().unwrap();
+            if *r == 0 {
+                return;
+            }
+            let _ = self.done.wait_timeout(r, Duration::from_millis(1)).unwrap();
+        }
+    }
+}
+
+/// Run every job to completion on the persistent pool; the caller helps
+/// drain the queue while waiting. Panics in jobs are collected and
+/// re-raised here as "worker thread panicked" (matching the old
+/// scoped-spawn behavior), after all jobs have finished.
+fn run_scoped<'a>(jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+    if jobs.is_empty() {
+        return;
+    }
+    let pool = pool();
+    let latch = Arc::new(Latch::new(jobs.len()));
+    for job in jobs {
+        let latch = Arc::clone(&latch);
+        let wrapped: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                latch.panicked.store(true, Ordering::Relaxed);
+            }
+            latch.count_down();
+        });
+        // SAFETY: the job borrows caller-stack data of lifetime 'a, and
+        // the queue demands 'static. Sound because this function does
+        // not return until the latch confirms every job ran to
+        // completion (count_down runs even on panic, via catch_unwind),
+        // so no borrow outlives its referent — the same guarantee
+        // std::thread::scope provides by joining before returning.
+        let wrapped: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(
+                wrapped,
+            )
+        };
+        pool.submit(wrapped);
+    }
+    latch.wait(pool);
+    if latch.panicked.load(Ordering::Relaxed) {
+        panic!("worker thread panicked");
+    }
 }
 
 /// Process disjoint chunks of `out` in parallel. `f(chunk_index, start, chunk)`
@@ -28,28 +182,25 @@ where
         return;
     }
     let chunks = chunks_with_offsets(out, chunk_size);
-    std::thread::scope(|scope| {
-        let f = &f;
-        let mut handles = Vec::new();
-        // Launch at most default_threads() threads; each thread strides
-        // through its share of chunks.
-        let n_threads = default_threads().min(chunks.len());
-        let mut buckets: Vec<Vec<(usize, usize, &mut [T])>> =
-            (0..n_threads).map(|_| Vec::new()).collect();
-        for (i, (start, chunk)) in chunks.into_iter().enumerate() {
-            buckets[i % n_threads].push((i, start, chunk));
-        }
-        for bucket in buckets {
-            handles.push(scope.spawn(move || {
+    let f = &f;
+    // at most default_threads() jobs; each strides through its share of
+    // chunks, so queue traffic stays O(threads) not O(chunks)
+    let n_jobs = default_threads().min(chunks.len());
+    let mut buckets: Vec<Vec<(usize, usize, &mut [T])>> = (0..n_jobs).map(|_| Vec::new()).collect();
+    for (i, (start, chunk)) in chunks.into_iter().enumerate() {
+        buckets[i % n_jobs].push((i, start, chunk));
+    }
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = buckets
+        .into_iter()
+        .map(|bucket| {
+            Box::new(move || {
                 for (i, start, chunk) in bucket {
                     f(i, start, chunk);
                 }
-            }));
-        }
-        for h in handles {
-            h.join().expect("worker thread panicked");
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_scoped(jobs);
 }
 
 fn chunks_with_offsets<T>(out: &mut [T], chunk_size: usize) -> Vec<(usize, &mut [T])> {
@@ -113,5 +264,50 @@ mod tests {
             }
         });
         assert!(v.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn nested_parallelism_does_not_deadlock() {
+        // every outer job fans out again: with a fixed-size pool this
+        // deadlocks unless waiting callers help drain the queue
+        let outer = parallel_map(2 * default_threads(), |i| {
+            let inner = parallel_map(4, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        for (i, got) in outer.iter().enumerate() {
+            assert_eq!(*got, 4 * i * 10 + 6);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_caller() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut v = vec![0u8; 64];
+            parallel_chunks(&mut v, 4, |i, _, _| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        let err = result.expect_err("panic must cross the pool");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "worker thread panicked");
+        // the pool survives a panicked job: later work still runs
+        assert_eq!(parallel_map(8, |i| i + 1).iter().sum::<usize>(), 36);
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let out = parallel_map(32, move |i| t * 1000 + i);
+                    out.iter().enumerate().all(|(i, x)| *x == t * 1000 + i)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap());
+        }
     }
 }

@@ -281,9 +281,13 @@ fn mini_config() -> Config {
         .to_string();
     cfg.serve.max_wait_us = 500;
     cfg.serve.workers = 2;
-    cfg.serve.warm = false; // nothing to warm: the mini bundle is analog-only
+    cfg.serve.warm = false; // nothing to warm: the mini bundle has no performer
     cfg.serve.bind = "127.0.0.1:0".into();
     cfg.attention.serve = attn_cfg(2, 8, 32);
+    // these tests assert analog execution (chip energy, MVM stage time)
+    // on single-request batches; pin the dispatcher out of auto so it
+    // cannot reroute the tiny analog batches to the digital substrate
+    cfg.dispatch.force = "analog".to_string();
     cfg
 }
 
@@ -315,13 +319,16 @@ fn mini_bundle_engine_serves_features_and_attention_over_tcp() {
     assert_eq!(z.len(), 64);
     assert!(resp.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
 
-    // the digital path needs the real PJRT runtime: clean error, not a hang
+    // the digital path serves natively too (ISSUE 10): no XLA artifact,
+    // no PJRT — φ(x) through linalg::matmul, zero modelled chip energy
     let req = format!(
         r#"{{"type":"features","kernel":"arccos0","path":"digital","x":[{}]}}"#,
         x.join(",")
     );
     let resp = client.call(&Json::parse(&req).unwrap()).unwrap();
-    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("z").unwrap().as_arr().unwrap().len(), 64);
+    assert_eq!(resp.get("energy_uj").unwrap().as_f64(), Some(0.0));
 
     // open an fp32 attention session and stream tokens through TCP
     let resp = client
@@ -650,7 +657,9 @@ fn request_ids_propagate_into_trace_spans_and_metrics_expose() {
         assert!(total > 0.0, "{span:?}");
         // parse happens before enqueue, so it is outside total_us
         assert!(f("parse_us") >= 0.0, "{span:?}");
-        for stage in ["queue_us", "lock_wait_us", "analog_mvm_us", "digital_combine_us"] {
+        for stage in
+            ["queue_us", "dispatch_us", "lock_wait_us", "analog_mvm_us", "digital_combine_us"]
+        {
             let v = f(stage);
             assert!(v >= 0.0 && v <= total + 1.0, "{stage} out of range: {span:?}");
         }
@@ -672,6 +681,8 @@ fn request_ids_propagate_into_trace_spans_and_metrics_expose() {
         "imka_chip_core_oversubscription",
         "imka_attn_sessions_active",
         "imka_trace_sampled_total",
+        "imka_dispatch_latency_us",
+        "imka_dispatch_decisions_total",
     ] {
         assert!(text.contains(family), "exposition missing {family}:\n{text}");
     }

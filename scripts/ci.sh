@@ -55,6 +55,19 @@ if ! grep -q 'stage="serialize"' "$serve_log"; then
     echo "serve smoke: metrics exposition is missing the serialize stage" >&2
     exit 1
 fi
+# hybrid dispatch (ISSUE 10): the cost-model router must surface its
+# decision counters, its per-substrate calibration histograms, and the
+# explicit dispatch pipeline stage in the same exposition
+for fam in imka_dispatch_latency_us imka_dispatch_decisions_total; do
+    if ! grep -q "$fam" "$serve_log"; then
+        echo "serve smoke: metrics exposition is missing $fam" >&2
+        exit 1
+    fi
+done
+if ! grep -q 'stage="dispatch"' "$serve_log"; then
+    echo "serve smoke: metrics exposition is missing the dispatch stage" >&2
+    exit 1
+fi
 rm -f "$serve_log"
 
 # wire-format gate: the bench streams the same sessions through a live
@@ -77,6 +90,23 @@ if ! awk -v j="$json_tps" -v b="$bin_tps" 'BEGIN { exit !(b + 0 >= j + 0) }'; th
     exit 1
 fi
 echo "serve smoke: wire formats ok (binary $bin_tps tokens/s >= json $json_tps tokens/s)"
+
+# hybrid-dispatch gate: the auto row routes every append through the
+# fleet::dispatch cost model; routing overhead must not eat the win, so
+# auto throughput may trail the best forced substrate by at most 5%
+auto_tps="$(wire_tps auto)"
+dig_tps="$(wire_tps digital)"
+ana_tps="$(wire_tps analog)"
+if [ -z "$auto_tps" ] || [ -z "$dig_tps" ] || [ -z "$ana_tps" ]; then
+    echo "serve smoke: BENCH_serve.json is missing an auto/digital/analog row" >&2
+    exit 1
+fi
+if ! awk -v a="$auto_tps" -v d="$dig_tps" -v an="$ana_tps" \
+    'BEGIN { best = (d + 0 > an + 0) ? d + 0 : an + 0; exit !(a + 0 >= 0.95 * best) }'; then
+    echo "serve smoke: auto dispatch ($auto_tps tokens/s) trails the best forced substrate (digital $dig_tps, analog $ana_tps) by more than 5%" >&2
+    exit 1
+fi
+echo "serve smoke: hybrid dispatch ok (auto $auto_tps tokens/s vs digital $dig_tps / analog $ana_tps)"
 
 # regression diff against the committed previous run (tolerant of a
 # missing baseline on fresh clones — see scripts/bench_compare)
